@@ -1,0 +1,65 @@
+//! Sec. IV-C reproduction: the migration-strength (alpha) sweep.
+//!
+//! The paper reports that plain smoothing at alpha = 0.5 *increases* the
+//! error over the untransformed baseline on some attention-output and
+//! gate-projection layers, and that raising alpha to ~0.7 (o_proj) /
+//! ~0.65 (gate_proj) keeps it below the baseline.  This example sweeps
+//! alpha per module on the real captured workload (native backend — the
+//! PJRT artifacts bake alpha at AOT time) and prints where smoothing
+//! crosses the baseline.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --offline --example alpha_sweep
+//! ```
+
+use anyhow::Result;
+use smoothrot::pipeline;
+use smoothrot::quant;
+use smoothrot::report;
+use smoothrot::runtime::Runtime;
+
+fn main() -> Result<()> {
+    let artifacts = std::env::args().nth(1).unwrap_or_else(|| "artifacts".to_string());
+    let rt = Runtime::new(&artifacts)?;
+    let cfg = rt.manifest().config.clone();
+    let workload = pipeline::load_workload(&rt)?;
+    let alphas = [0.3, 0.4, 0.5, 0.6, 0.65, 0.7, 0.8, 0.9];
+
+    for module in ["o_proj", "gate_proj"] {
+        let module: &'static str = smoothrot::MODULES.into_iter().find(|m| *m == module).unwrap();
+        // per-layer untransformed baseline
+        let mut base = Vec::with_capacity(cfg.n_layers);
+        for layer in 0..cfg.n_layers {
+            let (x, w) = workload.pair(&rt, module, layer);
+            base.push(quant::quant_error(&x, &w, cfg.bits));
+        }
+        let base_total: f64 = base.iter().sum();
+
+        let sweep = pipeline::alpha_sweep(&rt, &workload, module, &alphas, cfg.bits)?;
+        println!("\n# {module}: smoothing error vs alpha (baseline total {base_total:.3e})");
+        let labels: Vec<String> = sweep.iter().map(|(a, _)| format!("alpha={a:.2}")).collect();
+        let totals: Vec<f64> = sweep.iter().map(|(_, e)| e.iter().sum()).collect();
+        println!("{}", report::ascii_chart("total smooth error", &labels, &totals, 40));
+
+        // per-alpha: how many layers does smoothing beat the baseline on?
+        for ((alpha, errs), total) in sweep.iter().zip(&totals) {
+            let wins = errs.iter().zip(&base).filter(|(s, b)| s < b).count();
+            let marker = if *total < base_total { "below baseline" } else { "ABOVE baseline" };
+            println!(
+                "  alpha {alpha:.2}: total {total:.3e} ({marker}), beats baseline on {wins}/{} layers",
+                cfg.n_layers
+            );
+        }
+        let best = sweep
+            .iter()
+            .zip(&totals)
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|((a, _), _)| *a)
+            .unwrap();
+        println!(
+            "  -> best alpha for {module}: {best:.2} (paper: ~{} for this module kind)",
+            if module == "o_proj" { "0.7" } else { "0.65" }
+        );
+    }
+    Ok(())
+}

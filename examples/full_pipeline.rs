@@ -1,0 +1,141 @@
+//! End-to-end driver — the repo's headline validation run.
+//!
+//! Exercises every layer of the stack on the full workload:
+//! L2 capture artifact (32-layer SynLlama forward, PJRT) → L3 coordinator
+//! (128 analyze jobs through the bounded-queue worker pool) → the fused
+//! L1 qerror kernel inside the analyze artifacts → report layer.
+//!
+//! Prints the paper's Figs 3–4 summaries and checks the qualitative
+//! claims; the output is recorded in EXPERIMENTS.md.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --offline --example full_pipeline
+//! ```
+
+use anyhow::{bail, Result};
+use smoothrot::coordinator::PoolConfig;
+use smoothrot::pipeline::{self, Backend};
+use smoothrot::report;
+use smoothrot::runtime::Runtime;
+use smoothrot::transforms::Mode;
+
+fn main() -> Result<()> {
+    let artifacts = std::env::args().nth(1).unwrap_or_else(|| "artifacts".to_string());
+    let pool = PoolConfig { workers: 2, queue_cap: 64 };
+
+    let t0 = std::time::Instant::now();
+    let run = pipeline::run_full_experiment(&artifacts, pool, Backend::Pjrt)?;
+    let wall = t0.elapsed();
+
+    let rt = Runtime::new(&artifacts)?;
+    let cfg = rt.manifest().config.clone();
+    println!(
+        "full pipeline: {} analyze jobs in {wall:?} ({} workers, {:.1}% coordination overhead)\n",
+        run.metrics.jobs,
+        pool.workers,
+        100.0 * run.metrics.overhead_fraction(pool.workers)
+    );
+
+    // ---- Fig 3: layer-wise statistics ---------------------------------
+    println!("{}", report::fig3_report(&run.grid));
+
+    // ---- §IV-B: the correlation headline -------------------------------
+    let (corr, text) = report::correlation_report(&run.grid, &cfg.massive_layers, cfg.tail_layer);
+    println!("{text}");
+
+    // ---- Fig 4: down_proj under all transforms ------------------------
+    println!("{}", report::fig4_report(&run.grid));
+    println!(
+        "down_proj massive layers:\n{}",
+        report::mode_layer_table(&run.grid, "down_proj", &cfg.massive_layers)
+    );
+
+    // ---- qualitative claims check (the paper's findings) --------------
+    let mut claims: Vec<(String, bool)> = Vec::new();
+    claims.push((format!("corr > 0.97 (got {corr:.4})"), corr > 0.97));
+
+    for &l in &cfg.massive_layers {
+        let o = run.grid.get("down_proj", l).unwrap();
+        claims.push((
+            format!(
+                "down_proj {l}: rotation worse than none ({:.2e} > {:.2e})",
+                o.errors[2], o.errors[0]
+            ),
+            o.errors[2] > o.errors[0],
+        ));
+        claims.push((
+            format!("down_proj {l}: smooth_rotate best ({:.2e})", o.errors[3]),
+            (0..3).all(|i| o.errors[3] < o.errors[i]),
+        ));
+    }
+
+    // rotation generally beats smoothing; smooth_rotate lowest in most cases
+    let mut rot_wins = 0usize;
+    let mut sr_best = 0usize;
+    let mut cells = 0usize;
+    let mut sr_adiff_best = 0usize;
+    for module in smoothrot::MODULES {
+        for l in 0..cfg.n_layers {
+            let o = run.grid.get(module, l).unwrap();
+            cells += 1;
+            if o.errors[Mode::Rotate.index()] < o.errors[Mode::Smooth.index()] {
+                rot_wins += 1;
+            }
+            if (0..3).all(|i| o.errors[3] <= o.errors[i]) {
+                sr_best += 1;
+            }
+            if (0..3).all(|i| o.act_difficulty[3] <= o.act_difficulty[i]) {
+                sr_adiff_best += 1;
+            }
+        }
+    }
+    claims.push((
+        format!("rotation beats smoothing in most cells ({rot_wins}/{cells})"),
+        rot_wins * 2 > cells,
+    ));
+    claims.push((
+        format!("smooth_rotate lowest error in most cells ({sr_best}/{cells})"),
+        sr_best * 2 > cells,
+    ));
+    claims.push((
+        format!("smooth_rotate lowest act difficulty in most cells ({sr_adiff_best}/{cells})"),
+        sr_adiff_best * 2 > cells,
+    ));
+
+    // weight difficulty: smoothing raises it, rotation lowers it (Sec. IV-C/D)
+    let mut smooth_raises = 0usize;
+    let mut rotate_lowers = 0usize;
+    for module in smoothrot::MODULES {
+        for l in 0..cfg.n_layers {
+            let o = run.grid.get(module, l).unwrap();
+            if o.w_difficulty[1] > o.w_difficulty[0] {
+                smooth_raises += 1;
+            }
+            if o.w_difficulty[2] < o.w_difficulty[0] {
+                rotate_lowers += 1;
+            }
+        }
+    }
+    claims.push((
+        format!("smoothing raises weight difficulty ({smooth_raises}/{cells})"),
+        smooth_raises * 2 > cells,
+    ));
+    claims.push((
+        format!("rotation lowers weight difficulty ({rotate_lowers}/{cells})"),
+        rotate_lowers * 2 > cells,
+    ));
+
+    println!("\n# claim check");
+    let mut failed = 0;
+    for (desc, ok) in &claims {
+        println!("  [{}] {desc}", if *ok { "PASS" } else { "FAIL" });
+        if !ok {
+            failed += 1;
+        }
+    }
+    if failed > 0 {
+        bail!("{failed} of {} paper claims failed", claims.len());
+    }
+    println!("\nall {} paper claims reproduced", claims.len());
+    Ok(())
+}

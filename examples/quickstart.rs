@@ -1,0 +1,62 @@
+//! Quickstart: load the AOT artifacts, analyze one module, print the
+//! effect of each transform (paper Eq. 2 error + difficulty metric).
+//!
+//! ```bash
+//! make artifacts && cargo run --release --offline --example quickstart
+//! ```
+
+use anyhow::Result;
+use smoothrot::pipeline;
+use smoothrot::runtime::Runtime;
+use smoothrot::transforms::Mode;
+
+fn main() -> Result<()> {
+    let artifacts = std::env::args().nth(1).unwrap_or_else(|| "artifacts".to_string());
+
+    // 1. open the PJRT runtime over the artifact manifest
+    let rt = Runtime::new(&artifacts)?;
+    let cfg = rt.manifest().config.clone();
+    println!(
+        "SynLlama: {} layers, d_model {}, d_ffn {}, {}-bit symmetric RTN, alpha {}",
+        cfg.n_layers, cfg.d_model, cfg.d_ffn, cfg.bits, cfg.alpha
+    );
+
+    // 2. run the capture artifact (full 32-layer forward) + load weights
+    let workload = pipeline::load_workload(&rt)?;
+
+    // 3. analyze one attention module mid-stack (peak of the k_proj trend)
+    let (x, w) = workload.pair(&rt, "k_proj", 16);
+    let out = rt.analyze(&x, &w)?;
+    println!("\nk_proj layer 16 (systematic outliers):");
+    for mode in Mode::ALL {
+        let (err, adiff, wdiff, amax) = out.for_mode(mode);
+        println!(
+            "  {:>14}: error {err:>12.3e}  act_difficulty {adiff:>10.3e}  w_difficulty {wdiff:>10.3e}  max|X| {amax:>9.2}",
+            mode.name()
+        );
+    }
+
+    // 4. and the massive-outlier showcase: down_proj at the first massive layer
+    let layer = cfg.massive_layers.first().copied().unwrap_or(1);
+    let (x, w) = workload.pair(&rt, "down_proj", layer);
+    let out = rt.analyze(&x, &w)?;
+    println!("\ndown_proj layer {layer} (MASSIVE outliers — the paper's core case):");
+    for mode in Mode::ALL {
+        let (err, adiff, _, amax) = out.for_mode(mode);
+        println!(
+            "  {:>14}: error {err:>12.3e}  act_difficulty {adiff:>10.3e}  max|X| {amax:>9.1}",
+            mode.name()
+        );
+    }
+    let rot = out.errors[Mode::Rotate.index()];
+    let none = out.errors[Mode::None.index()];
+    let sr = out.errors[Mode::SmoothRotate.index()];
+    println!(
+        "\npaper Sec. IV-D/E: rotation {} the untransformed model here (rot/none = {:.2}),\n\
+         while smooth-rotation cuts the error to {:.1}% of rotation alone.",
+        if rot > none { "UNDERPERFORMS" } else { "beats" },
+        rot / none,
+        100.0 * sr / rot
+    );
+    Ok(())
+}

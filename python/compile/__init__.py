@@ -1,0 +1,6 @@
+"""Build-time python package: L1 Pallas kernels + L2 JAX model + AOT.
+
+Nothing in here runs at serving time — ``aot.py`` lowers everything to
+HLO text artifacts once, and the rust coordinator executes those via the
+PJRT C API (see DESIGN.md §3).
+"""

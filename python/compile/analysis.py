@@ -1,0 +1,57 @@
+"""Layer-2 analysis graph: per-module quantization statistics.
+
+``analyze_module`` is the computation behind the paper's whole evaluation
+(Figs. 3 and 4): for one linear module's input X (n, c_in) and weight W
+(c_in, c_out) it produces, for each of the four transform modes,
+
+* the layer-wise quantization error (Eq. 2, via the fused L1 kernel),
+* the activation quantization difficulty (std of channel magnitudes),
+* the weight quantization difficulty,
+* the activation absolute maximum (massive-outlier indicator).
+
+One HLO artifact is lowered per (c_in, c_out) shape; the rust coordinator
+feeds every (layer, module) tensor pair through the right artifact.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import transforms
+from .kernels import qerror, ref
+
+__all__ = ["module_stats", "analyze_module", "N_MODES"]
+
+N_MODES = len(transforms.MODES)
+
+
+def module_stats(x: jax.Array, w: jax.Array, bits: int = 4):
+    """(error, act_difficulty, w_difficulty, act_absmax) for one (X, W)."""
+    err = qerror.quant_error(x, w, bits)
+    act_diff = ref.quant_difficulty(x, axis=0)
+    w_diff = ref.quant_difficulty(w, axis=1)
+    act_max = jnp.max(jnp.abs(x))
+    return err, act_diff, w_diff, act_max
+
+
+def analyze_module(x: jax.Array, w: jax.Array, bits: int = 4, alpha: float = 0.5):
+    """Stack stats over all transform modes.
+
+    Returns a 4-tuple of f32[N_MODES] arrays ordered like
+    ``transforms.MODES`` = (none, smooth, rotate, smooth_rotate).
+    """
+    errs, adiffs, wdiffs, amaxs = [], [], [], []
+    for mode in transforms.MODES:
+        xh, wh = transforms.apply_transform(mode, x, w, alpha)
+        e, ad, wd, am = module_stats(xh, wh, bits)
+        errs.append(e)
+        adiffs.append(ad)
+        wdiffs.append(wd)
+        amaxs.append(am)
+    return (
+        jnp.stack(errs),
+        jnp.stack(adiffs),
+        jnp.stack(wdiffs),
+        jnp.stack(amaxs),
+    )

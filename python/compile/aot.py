@@ -1,0 +1,269 @@
+"""AOT lowering driver: python runs ONCE, rust owns the request path.
+
+``python -m compile.aot --out-dir ../artifacts`` emits:
+
+* ``capture.hlo.txt``            — full SynLlama forward + activation capture
+* ``analyze_{cin}x{cout}.hlo.txt``   — fused per-module stats over all 4
+                                      transform modes (the hot path)
+* ``transform_{mode}_{cin}x{cout}.hlo.txt`` — standalone (X,W)->(Xh,Wh)
+* ``qdq_token_{n}x{c}.hlo.txt``  — standalone RTN quantize-dequantize
+* ``params/*.bin`` + ``tokens.bin``  — raw little-endian tensors the rust
+                                      runtime feeds into ``capture``
+* ``manifest.json``              — the python->rust contract: every
+                                      artifact, input/output shape, file
+* ``golden.json``                — reference numbers for rust integration
+                                      tests (PJRT output must match)
+
+Interchange is HLO **text**: jax >= 0.5 serializes HloModuleProto with
+64-bit instruction ids which xla_extension 0.5.1 rejects; the text parser
+reassigns ids (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import functools
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import analysis, model, transforms
+from .config import MODULES, SynLlamaConfig, default_config
+from .kernels import quant
+
+# Weight array per recorded module kind (input of k_proj is multiplied by
+# wk, etc.).
+MODULE_WEIGHTS = {"k_proj": "wk", "o_proj": "wo", "gate_proj": "wg", "down_proj": "wd"}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the 0.5.1-safe path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True — the default elides big literals as
+    # `constant({...})`, which would silently zero the baked Hadamard
+    # matrices after the text round-trip.
+    text = comp.as_hlo_text(True)
+    assert "({...})" not in text, "HLO text still contains elided constants"
+    return text
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _write(path: str, text: str) -> dict:
+    with open(path, "w") as f:
+        f.write(text)
+    digest = hashlib.sha256(text.encode()).hexdigest()
+    return {"bytes": len(text), "sha256": digest}
+
+
+def _dump_bin(path: str, arr: np.ndarray) -> dict:
+    arr = np.ascontiguousarray(arr)
+    arr.tofile(path)
+    return {
+        "shape": list(arr.shape),
+        "dtype": str(arr.dtype),
+        "bytes": arr.nbytes,
+    }
+
+
+def lower_capture(cfg: SynLlamaConfig, out_dir: str, manifest: dict) -> None:
+    specs = model.param_specs(cfg)
+    tok_spec = _spec((cfg.seq_len,), jnp.int32)
+
+    def capture_fn(*args):
+        params = dict(zip(model.PARAM_ORDER, args[:-1]))
+        return model.forward_capture(params, args[-1], cfg.n_heads)
+
+    lowered = jax.jit(capture_fn).lower(*[specs[k] for k in model.PARAM_ORDER], tok_spec)
+    info = _write(os.path.join(out_dir, "capture.hlo.txt"), to_hlo_text(lowered))
+    L, n, d, f = cfg.n_layers, cfg.seq_len, cfg.d_model, cfg.d_ffn
+    manifest["artifacts"]["capture"] = {
+        "path": "capture.hlo.txt",
+        **info,
+        "inputs": [
+            {"name": k, "shape": list(specs[k].shape), "dtype": "f32", "file": f"params/{k}.bin"}
+            for k in model.PARAM_ORDER
+        ]
+        + [{"name": "tokens", "shape": [n], "dtype": "i32", "file": "tokens.bin"}],
+        "outputs": [
+            {"name": "attn_in", "shape": [L, n, d]},
+            {"name": "o_in", "shape": [L, n, d]},
+            {"name": "ffn_in", "shape": [L, n, d]},
+            {"name": "down_in", "shape": [L, n, f]},
+        ],
+    }
+
+
+def lower_analyze(cfg: SynLlamaConfig, out_dir: str, manifest: dict) -> None:
+    n = cfg.seq_len
+    for c_in, c_out in cfg.analyze_shapes():
+        fn = functools.partial(analysis.analyze_module, bits=cfg.bits, alpha=cfg.alpha)
+        lowered = jax.jit(fn).lower(_spec((n, c_in)), _spec((c_in, c_out)))
+        name = f"analyze_{c_in}x{c_out}"
+        info = _write(os.path.join(out_dir, f"{name}.hlo.txt"), to_hlo_text(lowered))
+        manifest["artifacts"][name] = {
+            "path": f"{name}.hlo.txt",
+            **info,
+            "inputs": [
+                {"name": "x", "shape": [n, c_in], "dtype": "f32"},
+                {"name": "w", "shape": [c_in, c_out], "dtype": "f32"},
+            ],
+            "outputs": [
+                {"name": "errors", "shape": [analysis.N_MODES]},
+                {"name": "act_difficulty", "shape": [analysis.N_MODES]},
+                {"name": "w_difficulty", "shape": [analysis.N_MODES]},
+                {"name": "act_absmax", "shape": [analysis.N_MODES]},
+            ],
+        }
+
+
+def lower_transforms(cfg: SynLlamaConfig, out_dir: str, manifest: dict) -> None:
+    n = cfg.seq_len
+    for c_in, c_out in cfg.analyze_shapes():
+        for mode in transforms.MODES[1:]:  # identity needs no artifact
+            fn = transforms.transform_fn(mode, cfg.alpha)
+            lowered = jax.jit(fn).lower(_spec((n, c_in)), _spec((c_in, c_out)))
+            name = f"transform_{mode}_{c_in}x{c_out}"
+            info = _write(os.path.join(out_dir, f"{name}.hlo.txt"), to_hlo_text(lowered))
+            manifest["artifacts"][name] = {
+                "path": f"{name}.hlo.txt",
+                **info,
+                "inputs": [
+                    {"name": "x", "shape": [n, c_in], "dtype": "f32"},
+                    {"name": "w", "shape": [c_in, c_out], "dtype": "f32"},
+                ],
+                "outputs": [
+                    {"name": "x_hat", "shape": [n, c_in]},
+                    {"name": "w_hat", "shape": [c_in, c_out]},
+                ],
+            }
+
+
+def lower_qdq(cfg: SynLlamaConfig, out_dir: str, manifest: dict) -> None:
+    n = cfg.seq_len
+    for c_in in sorted({s[0] for s in cfg.analyze_shapes()}):
+        fn = functools.partial(quant.qdq_per_token, bits=cfg.bits)
+        lowered = jax.jit(lambda x: (fn(x),)).lower(_spec((n, c_in)))
+        name = f"qdq_token_{n}x{c_in}"
+        info = _write(os.path.join(out_dir, f"{name}.hlo.txt"), to_hlo_text(lowered))
+        manifest["artifacts"][name] = {
+            "path": f"{name}.hlo.txt",
+            **info,
+            "inputs": [{"name": "x", "shape": [n, c_in], "dtype": "f32"}],
+            "outputs": [{"name": "x_qdq", "shape": [n, c_in]}],
+        }
+
+
+def dump_params(cfg: SynLlamaConfig, out_dir: str, manifest: dict) -> dict:
+    params = model.init_params(cfg)
+    tokens = model.make_tokens(cfg)
+    pdir = os.path.join(out_dir, "params")
+    os.makedirs(pdir, exist_ok=True)
+    files = {}
+    for k in model.PARAM_ORDER:
+        files[k] = _dump_bin(os.path.join(pdir, f"{k}.bin"), params[k])
+    files["tokens"] = _dump_bin(os.path.join(out_dir, "tokens.bin"), tokens)
+    manifest["param_files"] = files
+    return params
+
+
+def dump_golden(cfg: SynLlamaConfig, params: dict, out_dir: str, manifest: dict) -> None:
+    """Reference numbers the rust integration tests must reproduce."""
+    pj = {k: jnp.asarray(v) for k, v in params.items()}
+    tokens = jnp.asarray(model.make_tokens(cfg))
+    caps = jax.jit(lambda p, t: model.forward_capture(p, t, cfg.n_heads))(pj, tokens)
+    stacks = dict(zip(MODULES, caps))
+    golden = {"capture_checksums": {}, "analyze": []}
+    for mod, stack in stacks.items():
+        arr = np.asarray(stack)
+        golden["capture_checksums"][mod] = {
+            # net sum is cancellation-dominated, so abs_sum is the robust
+            # mass checksum; sum is kept for informational diffing
+            "sum": float(arr.astype(np.float64).sum()),
+            "abs_sum": float(np.abs(arr).astype(np.float64).sum()),
+            "abs_max": float(np.abs(arr).max()),
+            "shape": list(arr.shape),
+        }
+    analyze_jit = jax.jit(functools.partial(analysis.analyze_module, bits=cfg.bits, alpha=cfg.alpha))
+    golden_layers = sorted({0, cfg.n_layers // 2, cfg.n_layers - 1, *cfg.massive_layers})
+    for mod in MODULES:
+        c_in, c_out = cfg.module_shape(mod)
+        for layer in golden_layers:
+            x = stacks[mod][layer]
+            w = pj[MODULE_WEIGHTS[mod]][layer]
+            errs, adiff, wdiff, amax = analyze_jit(x, w)
+            golden["analyze"].append(
+                {
+                    "module": mod,
+                    "layer": layer,
+                    "c_in": c_in,
+                    "c_out": c_out,
+                    "errors": [float(v) for v in errs],
+                    "act_difficulty": [float(v) for v in adiff],
+                    "w_difficulty": [float(v) for v in wdiff],
+                    "act_absmax": [float(v) for v in amax],
+                }
+            )
+    with open(os.path.join(out_dir, "golden.json"), "w") as f:
+        json.dump(golden, f, indent=1)
+    manifest["golden"] = "golden.json"
+
+
+def build(out_dir: str, cfg: SynLlamaConfig | None = None) -> None:
+    cfg = cfg or default_config()
+    os.makedirs(out_dir, exist_ok=True)
+    manifest: dict = {
+        "config": dataclasses.asdict(cfg),
+        "modes": list(transforms.MODES),
+        "modules": {
+            m: {
+                "c_in": cfg.module_shape(m)[0],
+                "c_out": cfg.module_shape(m)[1],
+                "weight": MODULE_WEIGHTS[m],
+                "capture_output": ["attn_in", "o_in", "ffn_in", "down_in"][MODULES.index(m)],
+            }
+            for m in MODULES
+        },
+        "artifacts": {},
+    }
+    print("[aot] lowering capture ...")
+    lower_capture(cfg, out_dir, manifest)
+    print("[aot] lowering analyze ...")
+    lower_analyze(cfg, out_dir, manifest)
+    print("[aot] lowering transforms ...")
+    lower_transforms(cfg, out_dir, manifest)
+    print("[aot] lowering qdq ...")
+    lower_qdq(cfg, out_dir, manifest)
+    print("[aot] dumping params ...")
+    params = dump_params(cfg, out_dir, manifest)
+    print("[aot] computing golden values ...")
+    dump_golden(cfg, params, out_dir, manifest)
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    n_art = len(manifest["artifacts"])
+    print(f"[aot] done: {n_art} HLO artifacts -> {out_dir}")
+
+
+def main() -> None:
+    from .config import PRESETS
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--preset", default="default", choices=sorted(PRESETS))
+    args = ap.parse_args()
+    build(args.out_dir, PRESETS[args.preset]())
+
+
+if __name__ == "__main__":
+    main()

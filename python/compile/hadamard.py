@@ -1,0 +1,102 @@
+"""Hadamard matrix construction (build-time, numpy).
+
+Mirrors Sec. III-D of the paper:
+
+* Sylvester recursion for d = 2^p (Kronecker inflation of the 2x2 seed).
+* For non-power-of-two dimensions, Kronecker composition with a known base
+  Hadamard matrix, following QuIP#.  The paper uses 11008 = 64 x 172; our
+  scaled SynLlama model uses 704 = 16 x 44, where H_44 comes from the
+  Paley-I construction over GF(43) (43 is a prime congruent 3 mod 4).
+
+The rust side re-implements the identical constructions in
+``rust/src/transforms/hadamard.rs``; the pytest suite and the rust tests
+both assert H @ H.T == d * I so the two sides cannot drift silently.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = [
+    "sylvester",
+    "paley1",
+    "hadamard",
+    "rotation_matrix",
+    "is_hadamard",
+]
+
+
+def sylvester(d: int) -> np.ndarray:
+    """Sylvester Hadamard matrix of size d (d must be a power of two)."""
+    if d < 1 or (d & (d - 1)) != 0:
+        raise ValueError(f"Sylvester construction needs a power of two, got {d}")
+    h = np.array([[1.0]], dtype=np.float64)
+    h2 = np.array([[1.0, 1.0], [1.0, -1.0]], dtype=np.float64)
+    while h.shape[0] < d:
+        h = np.kron(h2, h)
+    return h
+
+
+def _jacobsthal(q: int) -> np.ndarray:
+    """Jacobsthal matrix Q_ij = chi(j - i) over GF(q), chi the quadratic
+    residue character (chi(0) = 0)."""
+    residues = {(x * x) % q for x in range(1, q)}
+    chi = np.zeros(q, dtype=np.float64)
+    for a in range(1, q):
+        chi[a] = 1.0 if a in residues else -1.0
+    idx = (np.arange(q)[None, :] - np.arange(q)[:, None]) % q
+    return chi[idx]
+
+
+def paley1(q: int) -> np.ndarray:
+    """Paley-I Hadamard matrix of size q + 1 for prime q with q % 4 == 3.
+
+    H = I + S with the skew matrix S = [[0, 1^T], [-1, Q]].
+    """
+    if q % 4 != 3:
+        raise ValueError(f"Paley-I needs q % 4 == 3, got {q}")
+    for p in range(2, int(q**0.5) + 1):
+        if q % p == 0:
+            raise ValueError(f"Paley-I implemented for prime q only, got {q}")
+    d = q + 1
+    s = np.zeros((d, d), dtype=np.float64)
+    s[0, 1:] = 1.0
+    s[1:, 0] = -1.0
+    s[1:, 1:] = _jacobsthal(q)
+    return np.eye(d) + s
+
+
+# Base (non-Sylvester) Hadamard orders we know how to build directly.
+_PALEY_ORDERS = {4: 3, 12: 11, 20: 19, 24: 23, 28: 27, 44: 43, 48: 47, 60: 59}
+
+
+def hadamard(d: int) -> np.ndarray:
+    """Unnormalized Hadamard matrix of size d (entries +/-1).
+
+    Supports d = 2^p (Sylvester) and d = 2^p * b for a Paley-I base order b
+    (Kronecker composition, the QuIP# trick the paper adopts for 11008).
+    """
+    if d >= 1 and (d & (d - 1)) == 0:
+        return sylvester(d)
+    for order, q in sorted(_PALEY_ORDERS.items(), reverse=True):
+        if d % order == 0:
+            pow2 = d // order
+            if pow2 >= 1 and (pow2 & (pow2 - 1)) == 0:
+                base = paley1(q)
+                return np.kron(sylvester(pow2), base) if pow2 > 1 else base
+    raise ValueError(f"no Hadamard construction available for d={d}")
+
+
+def rotation_matrix(d: int) -> np.ndarray:
+    """Orthonormal rotation R = H / sqrt(d) (Eq. 5 of the paper)."""
+    return hadamard(d) / np.sqrt(float(d))
+
+
+def is_hadamard(h: np.ndarray, atol: float = 1e-9) -> bool:
+    """Check entries are +/-1 and rows are mutually orthogonal."""
+    d = h.shape[0]
+    if h.shape != (d, d):
+        return False
+    if not np.allclose(np.abs(h), 1.0, atol=atol):
+        return False
+    return np.allclose(h @ h.T, d * np.eye(d), atol=1e-6 * d)

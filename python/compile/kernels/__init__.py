@@ -1,0 +1,17 @@
+"""Layer-1 Pallas kernels (build-time only; lowered into the L2 HLO).
+
+All kernels run with ``interpret=True`` — the CPU PJRT plugin cannot
+execute Mosaic custom-calls, so interpret mode is the correctness path and
+real-TPU performance is estimated analytically (DESIGN.md §8).
+
+Modules
+-------
+quant   : symmetric RTN quantize-dequantize (per-token / per-channel) and
+          the scale (Delta) reduction kernels.
+matmul  : blocked matmul used for Hadamard rotation.
+smooth  : SmoothQuant channel-wise scaling application.
+qerror  : the hot path — fused Q(X)Q(W) vs XW layer-error kernel.
+ref     : pure-jnp oracle for all of the above.
+"""
+
+from . import matmul, qerror, quant, ref, smooth  # noqa: F401

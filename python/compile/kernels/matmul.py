@@ -1,0 +1,47 @@
+"""Blocked Pallas matmul — the Hadamard-rotation workhorse.
+
+Rotation (Sec. III-D) is X_hat = X R and W_hat = R^T W; both are dense
+matmuls against the baked Hadamard constant.  On TPU this is pure MXU
+work: blocks of (bm, bk) x (bk, bn) stream HBM->VMEM with the k axis kept
+whole per block here (c_in <= 704 at SynLlama scale, so a full-k block is
+~0.5 MB — well under VMEM; at LLaMA scale the same kernel k-tiles, see
+DESIGN.md §8).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["matmul"]
+
+
+def _block(n: int, target: int) -> int:
+    b = min(n, target)
+    while n % b != 0:
+        b -= 1
+    return b
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref):
+    o_ref[...] = a_ref[...] @ b_ref[...]
+
+
+def matmul(a: jax.Array, b: jax.Array, block_m: int = 64, block_n: int = 128) -> jax.Array:
+    """C = A @ B with (block_m, K) x (K, block_n) Pallas blocks."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"inner dims mismatch: {a.shape} @ {b.shape}"
+    bm, bn = _block(m, block_m), _block(n, block_n)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=(m // bm, n // bn),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.result_type(a.dtype, b.dtype)),
+        interpret=True,
+    )(a, b)

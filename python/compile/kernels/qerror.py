@@ -1,0 +1,81 @@
+"""Fused layer-wise quantization-error kernel — the L1 hot path.
+
+Computes Eq. 2, ``||X W - Q(X) Q(W)||_F^2``, in a single pass over X and
+W: each (bm, bn) output tile loads its X-row block and W-column block
+once, runs BOTH the fp matmul and the fake-quantized matmul on the same
+VMEM-resident operands, and reduces the squared difference to one partial
+scalar per tile.  Compared to the naive pipeline (qdq X -> qdq W -> two
+matmuls -> subtract -> square -> sum) this removes two full HBM
+round-trips of X/W-sized intermediates and the (n, c_out)-sized Y/Yq
+temporaries.
+
+The per-token / per-channel scales (Delta) are global row/column
+reductions, so they are produced first by the small reduction kernels in
+``quant.py`` and streamed in as (bm, 1) / (1, bn) side inputs.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import quant
+
+__all__ = ["quant_error", "quant_error_partials"]
+
+
+def _block(n: int, target: int) -> int:
+    b = min(n, target)
+    while n % b != 0:
+        b -= 1
+    return b
+
+
+def _qerror_kernel(x_ref, w_ref, dx_ref, dw_ref, o_ref):
+    x = x_ref[...]
+    w = w_ref[...]
+    dx = dx_ref[...]  # (bm, 1) per-token Delta
+    dw = dw_ref[...]  # (1, bn) per-channel Delta
+    xsafe = jnp.where(dx > 0, dx, 1.0)
+    wsafe = jnp.where(dw > 0, dw, 1.0)
+    xq = jnp.where(dx > 0, jnp.round(x / xsafe) * xsafe, 0.0)
+    wq = jnp.where(dw > 0, jnp.round(w / wsafe) * wsafe, 0.0)
+    diff = x @ w - xq @ wq
+    o_ref[...] = jnp.sum(diff * diff, keepdims=True).reshape(1, 1)
+
+
+def quant_error_partials(
+    x: jax.Array,
+    w: jax.Array,
+    bits: int = 4,
+    block_m: int = 32,
+    block_n: int = 128,
+) -> jax.Array:
+    """Per-tile partial sums of Eq. 2, shape (m_blocks, n_blocks)."""
+    n, c_in = x.shape
+    c_in2, c_out = w.shape
+    assert c_in == c_in2, f"shape mismatch: {x.shape} @ {w.shape}"
+    bm, bn = _block(n, block_m), _block(c_out, block_n)
+    dx = quant.token_scales(x, bits)
+    dw = quant.channel_scales(w, bits)
+    return pl.pallas_call(
+        _qerror_kernel,
+        grid=(n // bm, c_out // bn),
+        in_specs=[
+            pl.BlockSpec((bm, c_in), lambda i, j: (i, 0)),
+            pl.BlockSpec((c_in, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((bm, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n // bm, c_out // bn), x.dtype),
+        interpret=True,
+    )(x, w, dx, dw)
+
+
+def quant_error(x: jax.Array, w: jax.Array, bits: int = 4) -> jax.Array:
+    """Layer-wise quantization error (Eq. 2) as a scalar."""
+    return jnp.sum(quant_error_partials(x, w, bits))

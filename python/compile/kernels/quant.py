@@ -1,0 +1,121 @@
+"""Pallas RTN symmetric quantize-dequantize kernels (Eq. 1).
+
+Two granularities, matching the paper's setup (Sec. III-B):
+
+* per-token for activations  — one grid per row of X,
+* per-channel for weights    — one grid per column of W.
+
+TPU mapping: the absmax reduction and the round/scale pass are VPU
+elementwise work; rows (tokens) tile along the sublane axis, the channel
+axis stays whole inside a block so a token's Delta is computed in one
+block. ``interpret=True`` everywhere (see package docstring).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = [
+    "qmax",
+    "qdq_per_token",
+    "qdq_per_channel",
+    "token_scales",
+    "channel_scales",
+]
+
+
+def qmax(bits: int) -> float:
+    """Largest positive level of a symmetric b-bit integer grid."""
+    return float(2 ** (bits - 1) - 1)
+
+
+def _block(n: int, target: int) -> int:
+    """Largest divisor of n that is <= target (keeps grids exact)."""
+    b = min(n, target)
+    while n % b != 0:
+        b -= 1
+    return b
+
+
+def _qdq_rows_kernel(x_ref, o_ref, *, qm: float):
+    x = x_ref[...]
+    absmax = jnp.max(jnp.abs(x), axis=1, keepdims=True)
+    delta = absmax / qm
+    safe = jnp.where(delta > 0, delta, 1.0)
+    o_ref[...] = jnp.where(delta > 0, jnp.round(x / safe) * safe, 0.0)
+
+
+def qdq_per_token(x: jax.Array, bits: int = 4, block_rows: int = 32) -> jax.Array:
+    """Quantize-dequantize each row of ``x`` on its own symmetric grid."""
+    n, c = x.shape
+    bm = _block(n, block_rows)
+    return pl.pallas_call(
+        functools.partial(_qdq_rows_kernel, qm=qmax(bits)),
+        grid=(n // bm,),
+        in_specs=[pl.BlockSpec((bm, c), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((bm, c), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, c), x.dtype),
+        interpret=True,
+    )(x)
+
+
+def _qdq_cols_kernel(w_ref, o_ref, *, qm: float):
+    w = w_ref[...]
+    absmax = jnp.max(jnp.abs(w), axis=0, keepdims=True)
+    delta = absmax / qm
+    safe = jnp.where(delta > 0, delta, 1.0)
+    o_ref[...] = jnp.where(delta > 0, jnp.round(w / safe) * safe, 0.0)
+
+
+def qdq_per_channel(w: jax.Array, bits: int = 4, block_cols: int = 64) -> jax.Array:
+    """Quantize-dequantize each column of ``w`` on its own symmetric grid."""
+    c_in, c_out = w.shape
+    bn = _block(c_out, block_cols)
+    return pl.pallas_call(
+        functools.partial(_qdq_cols_kernel, qm=qmax(bits)),
+        grid=(c_out // bn,),
+        in_specs=[pl.BlockSpec((c_in, bn), lambda j: (0, j))],
+        out_specs=pl.BlockSpec((c_in, bn), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((c_in, c_out), w.dtype),
+        interpret=True,
+    )(w)
+
+
+def _row_scale_kernel(x_ref, o_ref, *, qm: float):
+    o_ref[...] = jnp.max(jnp.abs(x_ref[...]), axis=1, keepdims=True) / qm
+
+
+def token_scales(x: jax.Array, bits: int = 4, block_rows: int = 32) -> jax.Array:
+    """Per-token quantization step Delta, shape (n, 1)."""
+    n, c = x.shape
+    bm = _block(n, block_rows)
+    return pl.pallas_call(
+        functools.partial(_row_scale_kernel, qm=qmax(bits)),
+        grid=(n // bm,),
+        in_specs=[pl.BlockSpec((bm, c), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((bm, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, 1), x.dtype),
+        interpret=True,
+    )(x)
+
+
+def _col_scale_kernel(w_ref, o_ref, *, qm: float):
+    o_ref[...] = jnp.max(jnp.abs(w_ref[...]), axis=0, keepdims=True) / qm
+
+
+def channel_scales(w: jax.Array, bits: int = 4, block_cols: int = 64) -> jax.Array:
+    """Per-output-channel quantization step Delta, shape (1, c_out)."""
+    c_in, c_out = w.shape
+    bn = _block(c_out, block_cols)
+    return pl.pallas_call(
+        functools.partial(_col_scale_kernel, qm=qmax(bits)),
+        grid=(c_out // bn,),
+        in_specs=[pl.BlockSpec((c_in, bn), lambda j: (0, j))],
+        out_specs=pl.BlockSpec((1, bn), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((1, c_out), w.dtype),
+        interpret=True,
+    )(w)

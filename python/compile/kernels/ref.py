@@ -1,0 +1,115 @@
+"""Pure-jnp reference oracle for every Pallas kernel (L1 correctness spec).
+
+Everything here is deliberately written in the most direct jnp form — no
+tiling, no fusion — so the pytest suite can assert the Pallas kernels in
+``quant.py`` / ``matmul.py`` / ``smooth.py`` / ``qerror.py`` against an
+independent implementation.  The rust side mirrors the same math in
+``rust/src/quant`` and ``rust/src/metrics``.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = [
+    "qmax",
+    "qdq_per_token",
+    "qdq_per_channel",
+    "qdq_per_tensor",
+    "token_scales",
+    "channel_scales",
+    "matmul",
+    "smooth_scales",
+    "smooth_apply",
+    "quant_error",
+    "channel_magnitudes",
+    "quant_difficulty",
+    "kurtosis",
+]
+
+_EPS = 1e-12
+
+
+def qmax(bits: int) -> float:
+    """Largest positive level of a symmetric b-bit integer grid (Eq. 1)."""
+    return float(2 ** (bits - 1) - 1)
+
+
+def token_scales(x: jnp.ndarray, bits: int = 4) -> jnp.ndarray:
+    """Per-token (per-row) quantization step Delta, shape (n, 1)."""
+    absmax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    return absmax / qmax(bits)
+
+
+def channel_scales(w: jnp.ndarray, bits: int = 4) -> jnp.ndarray:
+    """Per-output-channel (per-column) quantization step Delta, shape (1, c)."""
+    absmax = jnp.max(jnp.abs(w), axis=0, keepdims=True)
+    return absmax / qmax(bits)
+
+
+def _qdq(x: jnp.ndarray, delta: jnp.ndarray) -> jnp.ndarray:
+    safe = jnp.where(delta > 0, delta, 1.0)
+    return jnp.where(delta > 0, jnp.round(x / safe) * safe, 0.0)
+
+
+def qdq_per_token(x: jnp.ndarray, bits: int = 4) -> jnp.ndarray:
+    """Symmetric RTN quantize-dequantize, one grid per row (activations)."""
+    return _qdq(x, token_scales(x, bits))
+
+
+def qdq_per_channel(w: jnp.ndarray, bits: int = 4) -> jnp.ndarray:
+    """Symmetric RTN quantize-dequantize, one grid per column (weights)."""
+    return _qdq(w, channel_scales(w, bits))
+
+
+def qdq_per_tensor(x: jnp.ndarray, bits: int = 4) -> jnp.ndarray:
+    """Symmetric RTN quantize-dequantize with a single tensor-wide grid."""
+    delta = jnp.max(jnp.abs(x)) / qmax(bits)
+    return _qdq(x, delta)
+
+
+def matmul(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    return jnp.matmul(a, b)
+
+
+def smooth_scales(x: jnp.ndarray, w: jnp.ndarray, alpha: float = 0.5) -> jnp.ndarray:
+    """SmoothQuant migration factor s_j (Eq. 4), zero-safe, shape (c_in,)."""
+    xmax = jnp.maximum(jnp.max(jnp.abs(x), axis=0), _EPS)
+    wmax = jnp.maximum(jnp.max(jnp.abs(w), axis=1), _EPS)
+    return xmax**alpha / wmax ** (1.0 - alpha)
+
+
+def smooth_apply(x: jnp.ndarray, w: jnp.ndarray, s: jnp.ndarray):
+    """X_hat = X diag(s)^-1, W_hat = diag(s) W (Eq. 3 with A^-1 = diag(s))."""
+    return x / s[None, :], w * s[:, None]
+
+
+def quant_error(x: jnp.ndarray, w: jnp.ndarray, bits: int = 4) -> jnp.ndarray:
+    """Layer-wise quantization error (Eq. 2): ||XW - Q(X)Q(W)||_F^2."""
+    y = x @ w
+    yq = qdq_per_token(x, bits) @ qdq_per_channel(w, bits)
+    return jnp.sum((y - yq) ** 2)
+
+
+def channel_magnitudes(t: jnp.ndarray, axis: int = 0) -> jnp.ndarray:
+    """Frobenius norm of each channel (paper Sec. II-B / FlatQuant).
+
+    For activations X (n, c_in) use axis=0 (one magnitude per input
+    channel); for weights W (c_in, c_out) use axis=1 so magnitudes are also
+    indexed by input channel — the axis smoothing and rotation act on.
+    """
+    return jnp.sqrt(jnp.sum(t * t, axis=axis))
+
+
+def quant_difficulty(t: jnp.ndarray, axis: int = 0) -> jnp.ndarray:
+    """The paper's new metric: std of the channel magnitudes."""
+    m = channel_magnitudes(t, axis=axis)
+    return jnp.std(m)
+
+
+def kurtosis(t: jnp.ndarray) -> jnp.ndarray:
+    """Excess kurtosis of the flattened tensor (FlatQuant's flatness proxy)."""
+    v = t.reshape(-1)
+    mu = jnp.mean(v)
+    sig2 = jnp.mean((v - mu) ** 2)
+    return jnp.mean((v - mu) ** 4) / jnp.maximum(sig2 * sig2, _EPS) - 3.0

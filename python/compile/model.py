@@ -1,0 +1,198 @@
+"""SynLlama — the Layer-2 JAX decoder stack with activation capture.
+
+A faithful LLaMA-architecture decoder (RMSNorm -> causal MHA -> RMSNorm ->
+SwiGLU FFN, pre-norm residual stream) at the reduced width of
+``SynLlamaConfig``, plus the calibrated outlier profiles documented in
+``config.py``.  ``forward_capture`` runs the full stack and returns the
+four recorded module-input stacks of the paper (Sec. III-A):
+
+* ``attn_in``  — input of k_proj (shared with q/v projections),
+* ``o_in``    — input of the attention output projection,
+* ``ffn_in``  — input of gate_proj (shared with up_proj),
+* ``down_in`` — input of down_proj.
+
+Parameters are *runtime inputs* of the lowered HLO (the rust side feeds
+them from ``artifacts/params/*.bin``), which keeps the HLO text small; the
+outlier profiles are folded into the parameter arrays so the lowered graph
+is a plain transformer forward.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import SynLlamaConfig
+
+__all__ = ["PARAM_ORDER", "init_params", "make_tokens", "forward_capture", "param_specs"]
+
+_EPS = 1e-6
+
+# Canonical parameter order — the artifact manifest and the rust loader
+# both follow this exact sequence.
+PARAM_ORDER = (
+    "embed",      # [vocab, d]
+    "g1",         # [L, d]   rmsnorm gain (attention)
+    "g2",         # [L, d]   rmsnorm gain (ffn)
+    "wq",         # [L, d, d]
+    "wk",         # [L, d, d]
+    "wv",         # [L, d, d]
+    "wo",         # [L, d, d]
+    "wg",         # [L, d, f]
+    "wu",         # [L, d, f]
+    "wd",         # [L, f, d]
+    "attn_gain",  # [L, d]   systematic profile on attn_in
+    "o_gain",     # [L, d]   systematic profile on o_in
+    "ffn_gain",   # [L, d]   systematic profile on ffn_in
+    "down_gain",  # [L, f]   systematic profile on down_in
+    "spike_tok",  # [L, n]   massive-outlier token indicator
+    "spike_chan", # [L, f]   massive-outlier channel pattern (signed)
+)
+
+
+def _hot_channels(rng: np.random.Generator, n_channels: int, k: int) -> np.ndarray:
+    return rng.choice(n_channels, size=k, replace=False)
+
+
+def init_params(cfg: SynLlamaConfig) -> Dict[str, np.ndarray]:
+    """Deterministic parameter + profile generation (numpy, build time)."""
+    rng = np.random.default_rng(cfg.seed)
+    L, d, f, n = cfg.n_layers, cfg.d_model, cfg.d_ffn, cfg.seq_len
+
+    def w(*shape, std):
+        base = (rng.normal(size=shape) * std).astype(np.float32)
+        # Real LLM weight matrices have per-input-channel norm structure
+        # (rows are not i.i.d.); without it rotation would have nothing to
+        # flatten on the weight side (Sec. IV-D: rotation lowers weight
+        # quantization difficulty below the original).  Lognormal row
+        # scales reproduce that structure.
+        row_scale = np.exp(cfg.w_row_sigma * rng.normal(size=shape[:-1] + (1,))).astype(np.float32)
+        return base * row_scale
+
+    p: Dict[str, np.ndarray] = {
+        "embed": (rng.normal(size=(cfg.vocab, d))).astype(np.float32),
+        "g1": np.abs(1.0 + 0.05 * rng.normal(size=(L, d))).astype(np.float32),
+        "g2": np.abs(1.0 + 0.05 * rng.normal(size=(L, d))).astype(np.float32),
+        "wq": w(L, d, d, std=d**-0.5),
+        "wk": w(L, d, d, std=d**-0.5),
+        "wv": w(L, d, d, std=d**-0.5),
+        "wo": w(L, d, d, std=d**-0.5),
+        "wg": w(L, d, f, std=d**-0.5),
+        "wu": w(L, d, f, std=d**-0.5),
+        "wd": w(L, f, d, std=f**-0.5),
+    }
+
+    # ---- weight outliers: heavy rows in gate_proj of the last layer ----
+    wout_rows = _hot_channels(rng, d, cfg.wout_rows)
+    p["wg"][cfg.wout_layer, wout_rows, :] *= cfg.wout_gain
+
+    # ---- systematic channel-gain profiles ------------------------------
+    li = np.arange(L, dtype=np.float64) / max(L - 1, 1)
+    jit = lambda: 1.0 + cfg.layer_jitter * rng.normal(size=L)  # noqa: E731
+
+    def sys_profile(n_channels, amplitude_per_layer, k_hot):
+        gain = np.ones((L, n_channels), dtype=np.float32)
+        hot = _hot_channels(rng, n_channels, k_hot)
+        per_ch = 1.0 + 0.25 * rng.random(k_hot)  # channel spread
+        for l in range(L):
+            gain[l, hot] = (1.0 + amplitude_per_layer[l] * per_ch).astype(np.float32)
+        return gain
+
+    p["attn_gain"] = sys_profile(d, cfg.attn_peak_gain * np.sin(np.pi * li) * jit(), cfg.attn_sys_channels)
+    p["o_gain"] = sys_profile(d, cfg.oproj_gain * li**1.5 * jit(), cfg.oproj_sys_channels)
+    p["ffn_gain"] = sys_profile(d, cfg.ffn_gain * li * jit(), cfg.ffn_sys_channels)
+    p["down_gain"] = sys_profile(f, cfg.down_gain * li * jit(), cfg.down_sys_channels)
+    if cfg.suppress_sys_at_massive:
+        # massive-outlier layers: the spike, not the systematic channels,
+        # must dominate (paper Sec. IV-B: out-of-trend errors at 1/30)
+        for l in cfg.massive_layers:
+            p["down_gain"][l] = 1.0
+
+    # ---- massive outliers: token-specific spikes at down_proj inputs ---
+    spike_tok = np.zeros((L, n), dtype=np.float32)
+    spike_chan = np.zeros((L, f), dtype=np.float32)
+    for l in cfg.massive_layers:
+        toks = rng.choice(n, size=cfg.massive_tokens, replace=False)
+        spike_tok[l, toks] = 1.0 + 0.2 * rng.random(cfg.massive_tokens)
+        chans = _hot_channels(rng, f, cfg.massive_channels)
+        signs = rng.choice([-1.0, 1.0], size=cfg.massive_channels)
+        spike_chan[l, chans] = (signs * cfg.massive_value * (1.0 + 0.15 * rng.random(cfg.massive_channels))).astype(np.float32)
+    # layer 31: large values across many tokens (broad heavy tail)
+    lt = cfg.tail_layer
+    toks = rng.choice(n, size=cfg.tail_tokens, replace=False)
+    spike_tok[lt, toks] = 1.0 + 0.5 * rng.random(cfg.tail_tokens)
+    chans = _hot_channels(rng, f, cfg.tail_channels)
+    signs = rng.choice([-1.0, 1.0], size=cfg.tail_channels)
+    spike_chan[lt, chans] = (signs * cfg.tail_value * (1.0 + 0.3 * rng.random(cfg.tail_channels))).astype(np.float32)
+    p["spike_tok"] = spike_tok
+    p["spike_chan"] = spike_chan
+
+    assert set(p) == set(PARAM_ORDER)
+    return p
+
+
+def make_tokens(cfg: SynLlamaConfig) -> np.ndarray:
+    """Deterministic token stream (the WikiText-2 sample substitute)."""
+    rng = np.random.default_rng(cfg.seed + 1)
+    return rng.integers(0, cfg.vocab, size=cfg.seq_len).astype(np.int32)
+
+
+def param_specs(cfg: SynLlamaConfig) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Shape/dtype specs for AOT lowering, keyed like PARAM_ORDER."""
+    L, d, f, n = cfg.n_layers, cfg.d_model, cfg.d_ffn, cfg.seq_len
+    shapes = {
+        "embed": (cfg.vocab, d),
+        "g1": (L, d), "g2": (L, d),
+        "wq": (L, d, d), "wk": (L, d, d), "wv": (L, d, d), "wo": (L, d, d),
+        "wg": (L, d, f), "wu": (L, d, f), "wd": (L, f, d),
+        "attn_gain": (L, d), "o_gain": (L, d), "ffn_gain": (L, d),
+        "down_gain": (L, f), "spike_tok": (L, n), "spike_chan": (L, f),
+    }
+    return {k: jax.ShapeDtypeStruct(shapes[k], jnp.float32) for k in PARAM_ORDER}
+
+
+def _rmsnorm(x: jax.Array, g: jax.Array) -> jax.Array:
+    return x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + _EPS) * g
+
+
+def _causal_attention(x: jax.Array, wq, wk, wv, n_heads: int) -> jax.Array:
+    n, d = x.shape
+    dh = d // n_heads
+    q = (x @ wq).reshape(n, n_heads, dh).transpose(1, 0, 2)
+    k = (x @ wk).reshape(n, n_heads, dh).transpose(1, 0, 2)
+    v = (x @ wv).reshape(n, n_heads, dh).transpose(1, 0, 2)
+    scores = jnp.einsum("hqd,hkd->hqk", q, k) / jnp.sqrt(float(dh))
+    mask = jnp.tril(jnp.ones((n, n), dtype=bool))
+    scores = jnp.where(mask[None, :, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("hqk,hkd->hqd", probs, v)
+    return ctx.transpose(1, 0, 2).reshape(n, d)
+
+
+def forward_capture(params: Dict[str, jax.Array], tokens: jax.Array, n_heads: int = 8):
+    """Full decoder forward; returns the 4 captured module-input stacks.
+
+    Output: (attn_in [L,n,d], o_in [L,n,d], ffn_in [L,n,d], down_in [L,n,f]).
+    """
+    h = params["embed"][tokens]
+
+    layer_params = {k: params[k] for k in PARAM_ORDER if k != "embed"}
+
+    def layer(h, lp):
+        # --- attention block ---
+        x1 = _rmsnorm(h, lp["g1"]) * lp["attn_gain"]          # attn_in (k_proj input)
+        ctx = _causal_attention(x1, lp["wq"], lp["wk"], lp["wv"], n_heads)
+        o_in = ctx * lp["o_gain"]                              # o_proj input
+        h = h + o_in @ lp["wo"]
+        # --- FFN block (SwiGLU) ---
+        x2 = _rmsnorm(h, lp["g2"]) * lp["ffn_gain"]            # ffn_in (gate_proj input)
+        act = jax.nn.silu(x2 @ lp["wg"]) * (x2 @ lp["wu"])
+        down_in = act * lp["down_gain"] + lp["spike_tok"][:, None] * lp["spike_chan"][None, :]
+        h = h + down_in @ lp["wd"]
+        return h, (x1, o_in, x2, down_in)
+
+    _, captures = jax.lax.scan(layer, h, layer_params)
+    return captures

@@ -1,0 +1,69 @@
+"""Layer-2 equivalent transformations (Sec. II-C / IV-C..E of the paper).
+
+Each transform maps (X, W) -> (X_hat, W_hat) with X W == X_hat W_hat
+(Eq. 3), built from the L1 Pallas kernels so the whole thing lowers into
+one HLO module:
+
+* ``none``          — identity (the untransformed baseline),
+* ``smooth``        — SmoothQuant channel-wise scaling, Eq. 4, alpha=0.5,
+* ``rotate``        — Hadamard rotation X R, R^T W (Eq. 5),
+* ``smooth_rotate`` — the paper's contribution: scaling first, THEN
+  rotation of both sides, so the migrated outlier mass is spread across
+  the weight's input channels too (Eq. 9).
+
+The Hadamard rotation matrices are baked as compile-time constants of the
+lowered HLO (they only depend on c_in).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import hadamard
+from .kernels import matmul, smooth
+
+__all__ = ["MODES", "rotation", "apply_transform", "transform_fn"]
+
+MODES = ("none", "smooth", "rotate", "smooth_rotate")
+
+
+@functools.lru_cache(maxsize=None)
+def _rotation_np(d: int) -> np.ndarray:
+    return hadamard.rotation_matrix(d).astype(np.float32)
+
+
+def rotation(d: int) -> jax.Array:
+    """Orthonormal Hadamard rotation R for dimension d (cached)."""
+    return jnp.asarray(_rotation_np(d))
+
+
+def apply_transform(mode: str, x: jax.Array, w: jax.Array, alpha: float = 0.5):
+    """Return (X_hat, W_hat) for the requested mode. Pallas inside."""
+    if mode == "none":
+        return x, w
+    if mode == "smooth":
+        s = smooth.smooth_scales(x, w, alpha)
+        return smooth.smooth_apply(x, w, s)
+    if mode == "rotate":
+        r = rotation(x.shape[1])
+        return matmul.matmul(x, r), matmul.matmul(r.T, w)
+    if mode == "smooth_rotate":
+        s = smooth.smooth_scales(x, w, alpha)
+        xs, ws = smooth.smooth_apply(x, w, s)
+        r = rotation(x.shape[1])
+        return matmul.matmul(xs, r), matmul.matmul(r.T, ws)
+    raise ValueError(f"unknown transform mode {mode!r} (want one of {MODES})")
+
+
+def transform_fn(mode: str, alpha: float = 0.5):
+    """A (X, W) -> (X_hat, W_hat) callable for AOT lowering."""
+
+    def fn(x, w):
+        return apply_transform(mode, x, w, alpha)
+
+    fn.__name__ = f"transform_{mode}"
+    return fn

@@ -1,0 +1,102 @@
+"""Analysis graph + AOT lowering tests."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import analysis, aot, transforms
+from compile.config import SynLlamaConfig
+from compile.kernels import ref
+
+
+def _xw(n=32, c_in=64, c_out=16, seed=0):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(n, c_in)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(c_in, c_out)).astype(np.float32))
+    return x, w
+
+
+def test_analyze_module_mode_order():
+    """Mode 0 (none) must equal the raw quant error / difficulties."""
+    x, w = _xw()
+    errs, adiff, wdiff, amax = analysis.analyze_module(x, w)
+    assert errs.shape == (4,)
+    np.testing.assert_allclose(errs[0], ref.quant_error(x, w), rtol=1e-3)
+    np.testing.assert_allclose(adiff[0], ref.quant_difficulty(x, 0), rtol=1e-5)
+    np.testing.assert_allclose(wdiff[0], ref.quant_difficulty(w, 1), rtol=1e-5)
+    np.testing.assert_allclose(amax[0], jnp.max(jnp.abs(x)), rtol=1e-6)
+
+
+def test_analyze_module_matches_manual_transforms():
+    x, w = _xw(seed=3)
+    errs, _, _, _ = analysis.analyze_module(x, w)
+    for i, mode in enumerate(transforms.MODES):
+        xh, wh = transforms.apply_transform(mode, x, w)
+        np.testing.assert_allclose(errs[i], ref.quant_error(xh, wh), rtol=2e-3, atol=1e-2)
+
+
+def test_hlo_text_has_no_elided_constants():
+    fn = transforms.transform_fn("rotate")
+    lowered = jax.jit(fn).lower(
+        jax.ShapeDtypeStruct((8, 64), jnp.float32), jax.ShapeDtypeStruct((64, 16), jnp.float32)
+    )
+    text = aot.to_hlo_text(lowered)
+    assert "({...})" not in text
+    assert "f32[64,64]" in text  # the baked Hadamard constant
+
+
+def test_aot_build_smoke(tmp_path):
+    """Full AOT build on a tiny config: manifest + artifacts + golden."""
+    cfg = SynLlamaConfig(
+        n_layers=2, d_model=32, n_heads=2, d_ffn=44, vocab=32, seq_len=16,
+        massive_layers=(1,), tail_layer=0, wout_layer=1,
+        attn_sys_channels=2, oproj_sys_channels=2, ffn_sys_channels=4, down_sys_channels=4,
+        massive_tokens=1, massive_channels=2, tail_tokens=4, tail_channels=2, wout_rows=1,
+    )
+    out = str(tmp_path / "artifacts")
+    # golden layers are fixed at (0,1,16,30,31) for the default config;
+    # monkeypatch to the tiny layer count
+    orig = aot.dump_golden
+
+    def tiny_golden(cfg_, params, out_dir, manifest):
+        import functools as ft
+
+        pj = {k: jnp.asarray(v) for k, v in params.items()}
+        tokens = jnp.asarray(aot.model.make_tokens(cfg_))
+        caps = jax.jit(lambda p, t: aot.model.forward_capture(p, t, cfg_.n_heads))(pj, tokens)
+        manifest["golden"] = None
+        _ = caps
+
+    aot.dump_golden = tiny_golden
+    try:
+        aot.build(out, cfg)
+    finally:
+        aot.dump_golden = orig
+
+    manifest = json.load(open(os.path.join(out, "manifest.json")))
+    assert "capture" in manifest["artifacts"]
+    assert f"analyze_32x32" in manifest["artifacts"]
+    for art in manifest["artifacts"].values():
+        path = os.path.join(out, art["path"])
+        assert os.path.exists(path)
+        assert os.path.getsize(path) == art["bytes"]
+    # param files exist with declared sizes
+    for name, meta in manifest["param_files"].items():
+        f = "tokens.bin" if name == "tokens" else f"params/{name}.bin"
+        assert os.path.getsize(os.path.join(out, f)) == meta["bytes"]
+
+
+def test_manifest_roundtrip_of_default_exists():
+    """If the real artifacts have been built, sanity-check the manifest."""
+    here = os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    mpath = os.path.join(here, "artifacts", "manifest.json")
+    if not os.path.exists(mpath):
+        pytest.skip("artifacts not built yet (run `make artifacts`)")
+    manifest = json.load(open(mpath))
+    assert manifest["modes"] == ["none", "smooth", "rotate", "smooth_rotate"]
+    assert set(manifest["modules"]) == {"k_proj", "o_proj", "gate_proj", "down_proj"}
+    assert len(manifest["artifacts"]) == 15

@@ -1,0 +1,73 @@
+"""Hadamard construction tests (paper Sec. III-D)."""
+
+import numpy as np
+import pytest
+
+from compile import hadamard as hd
+
+
+@pytest.mark.parametrize("d", [1, 2, 4, 8, 16, 64, 256, 1024])
+def test_sylvester_is_hadamard(d):
+    assert hd.is_hadamard(hd.sylvester(d))
+
+
+def test_sylvester_rejects_non_power_of_two():
+    with pytest.raises(ValueError):
+        hd.sylvester(12)
+    with pytest.raises(ValueError):
+        hd.sylvester(0)
+
+
+@pytest.mark.parametrize("q", [3, 7, 11, 19, 23, 43, 47, 59])
+def test_paley1_is_hadamard(q):
+    assert hd.is_hadamard(hd.paley1(q))
+
+
+def test_paley1_rejects_bad_q():
+    with pytest.raises(ValueError):
+        hd.paley1(5)  # 5 % 4 != 3
+    with pytest.raises(ValueError):
+        hd.paley1(15)  # composite
+
+
+@pytest.mark.parametrize("d", [12, 24, 44, 88, 176, 352, 704, 48, 96])
+def test_kronecker_composition(d):
+    assert hd.is_hadamard(hd.hadamard(d))
+
+
+def test_unsupported_dimension():
+    # 172 = 4 * 43 would need a Williamson table (43 has no Paley-I order)
+    with pytest.raises(ValueError):
+        hd.hadamard(172)
+    with pytest.raises(ValueError):
+        hd.hadamard(6)
+
+
+@pytest.mark.parametrize("d", [256, 704])
+def test_rotation_orthonormal(d):
+    r = hd.rotation_matrix(d)
+    np.testing.assert_allclose(r @ r.T, np.eye(d), atol=1e-9)
+
+
+@pytest.mark.parametrize("d", [256, 704])
+def test_columns_have_mean_zero_except_first(d):
+    """Paper Sec. III-D: columns contain an equal number of +1 and -1
+    'with an infinitesimally small number of exceptions' (the all-ones
+    column of the Sylvester factor)."""
+    h = hd.hadamard(d)
+    col_means = h.mean(axis=0)
+    n_nonzero = int(np.sum(np.abs(col_means) > 1e-12))
+    # Sylvester: exactly 1 (the all-ones column). Kronecker with a Paley-I
+    # base: every base column has sum 2, so the non-zero-mean columns are
+    # those paired with the Sylvester all-ones column -> d/16 for 704.
+    assert n_nonzero <= max(1, d // 16)
+
+
+@pytest.mark.parametrize("d", [64, 256])
+def test_rotation_preserves_norms(d):
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(16, d))
+    r = hd.rotation_matrix(d)
+    np.testing.assert_allclose(
+        np.linalg.norm(x @ r, axis=1), np.linalg.norm(x, axis=1), rtol=1e-9
+    )

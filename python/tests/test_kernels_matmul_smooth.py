@@ -1,0 +1,71 @@
+"""Pallas matmul + smoothing kernels vs the pure-jnp oracle."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import matmul, ref, smooth
+
+DIMS = st.sampled_from([(8, 16, 4), (32, 64, 16), (128, 256, 64), (128, 704, 32), (5, 11, 3)])
+SEEDS = st.integers(min_value=0, max_value=2**31 - 1)
+ALPHAS = st.sampled_from([0.3, 0.5, 0.65, 0.7, 0.9])
+
+
+def _xw(dims, seed):
+    n, c_in, c_out = dims
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(n, c_in)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(c_in, c_out)).astype(np.float32))
+    return x, w
+
+
+@settings(max_examples=20, deadline=None)
+@given(dims=DIMS, seed=SEEDS)
+def test_matmul_matches_ref(dims, seed):
+    x, w = _xw(dims, seed)
+    np.testing.assert_allclose(matmul.matmul(x, w), ref.matmul(x, w), rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(dims=DIMS, seed=SEEDS, alpha=ALPHAS)
+def test_smooth_scales_match_ref(dims, seed, alpha):
+    x, w = _xw(dims, seed)
+    np.testing.assert_allclose(
+        smooth.smooth_scales(x, w, alpha), ref.smooth_scales(x, w, alpha), rtol=1e-5
+    )
+
+
+@settings(max_examples=20, deadline=None)
+@given(dims=DIMS, seed=SEEDS, alpha=ALPHAS)
+def test_smooth_apply_preserves_product(dims, seed, alpha):
+    """Equivalence (Eq. 3): X W == (X diag(s)^-1)(diag(s) W)."""
+    x, w = _xw(dims, seed)
+    s = smooth.smooth_scales(x, w, alpha)
+    xh, wh = smooth.smooth_apply(x, w, s)
+    np.testing.assert_allclose(xh @ wh, x @ w, rtol=1e-3, atol=1e-3)
+
+
+@settings(max_examples=10, deadline=None)
+@given(dims=DIMS, seed=SEEDS)
+def test_smooth_equalizes_maxima_at_half(dims, seed):
+    """At alpha=0.5 the channel maxima of X_hat and W_hat both become
+    sqrt(max|X_j| * max|W_j|) (paper Sec. IV-C)."""
+    x, w = _xw(dims, seed)
+    s = smooth.smooth_scales(x, w, 0.5)
+    xh, wh = smooth.smooth_apply(x, w, s)
+    expected = np.sqrt(
+        np.max(np.abs(np.asarray(x)), axis=0) * np.max(np.abs(np.asarray(w)), axis=1)
+    )
+    np.testing.assert_allclose(np.max(np.abs(np.asarray(xh)), axis=0), expected, rtol=1e-4)
+    np.testing.assert_allclose(np.max(np.abs(np.asarray(wh)), axis=1), expected, rtol=1e-4)
+
+
+def test_smooth_zero_channel_safe():
+    """A channel that is all-zero on either side must not produce NaNs."""
+    x = jnp.asarray(np.array([[0.0, 1.0], [0.0, -2.0]], dtype=np.float32))
+    w = jnp.asarray(np.array([[1.0, 1.0], [0.5, 0.5]], dtype=np.float32))
+    s = smooth.smooth_scales(x, w, 0.5)
+    xh, wh = smooth.smooth_apply(x, w, s)
+    assert np.all(np.isfinite(np.asarray(xh)))
+    assert np.all(np.isfinite(np.asarray(wh)))
+    np.testing.assert_allclose(xh @ wh, x @ w, rtol=1e-4, atol=1e-5)

@@ -1,0 +1,84 @@
+"""Pallas RTN quantization kernels vs the pure-jnp oracle."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import quant, ref
+
+SHAPES = st.sampled_from([(8, 16), (32, 64), (128, 256), (128, 704), (7, 44), (1, 8)])
+BITS = st.sampled_from([2, 3, 4, 8])
+SEEDS = st.integers(min_value=0, max_value=2**31 - 1)
+
+
+def _rand(shape, seed, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray((rng.normal(size=shape) * scale).astype(np.float32))
+
+
+@settings(max_examples=25, deadline=None)
+@given(shape=SHAPES, bits=BITS, seed=SEEDS)
+def test_qdq_per_token_matches_ref(shape, bits, seed):
+    x = _rand(shape, seed)
+    np.testing.assert_allclose(
+        quant.qdq_per_token(x, bits), ref.qdq_per_token(x, bits), rtol=1e-5, atol=1e-6
+    )
+
+
+@settings(max_examples=25, deadline=None)
+@given(shape=SHAPES, bits=BITS, seed=SEEDS)
+def test_qdq_per_channel_matches_ref(shape, bits, seed):
+    w = _rand(shape, seed)
+    np.testing.assert_allclose(
+        quant.qdq_per_channel(w, bits), ref.qdq_per_channel(w, bits), rtol=1e-5, atol=1e-6
+    )
+
+
+@settings(max_examples=15, deadline=None)
+@given(shape=SHAPES, seed=SEEDS)
+def test_scales_match_ref(shape, seed):
+    x = _rand(shape, seed)
+    np.testing.assert_allclose(quant.token_scales(x), ref.token_scales(x), rtol=1e-6)
+    np.testing.assert_allclose(quant.channel_scales(x), ref.channel_scales(x), rtol=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(shape=SHAPES, bits=BITS, seed=SEEDS)
+def test_qdq_idempotent(shape, bits, seed):
+    """Q(Q(X)) == Q(X): dequantized values lie exactly on the grid."""
+    x = _rand(shape, seed)
+    q1 = quant.qdq_per_token(x, bits)
+    q2 = quant.qdq_per_token(q1, bits)
+    np.testing.assert_allclose(q1, q2, rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(shape=SHAPES, bits=BITS, seed=SEEDS)
+def test_qdq_error_bounded_by_half_step(shape, bits, seed):
+    x = _rand(shape, seed)
+    delta = np.asarray(ref.token_scales(x, bits))
+    err = np.abs(np.asarray(quant.qdq_per_token(x, bits)) - np.asarray(x))
+    assert np.all(err <= delta / 2 + 1e-5)
+
+
+def test_qdq_zero_tensor():
+    x = jnp.zeros((16, 32), jnp.float32)
+    np.testing.assert_array_equal(quant.qdq_per_token(x), x)
+    np.testing.assert_array_equal(quant.qdq_per_channel(x), x)
+
+
+def test_qdq_levels_count():
+    """4-bit symmetric grid has at most 15 distinct levels (+/-7 * Delta)."""
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.normal(size=(1, 257)).astype(np.float32))
+    q = np.asarray(quant.qdq_per_token(x, bits=4))
+    assert len(np.unique(q)) <= 15
+
+
+@pytest.mark.parametrize("bits", [2, 4, 8])
+def test_extremes_map_to_extremes(bits):
+    x = jnp.asarray(np.array([[1.0, -1.0, 0.5, 0.0]], dtype=np.float32))
+    q = np.asarray(quant.qdq_per_token(x, bits=bits))
+    assert q[0, 0] == pytest.approx(1.0)
+    assert q[0, 1] == pytest.approx(-1.0)

@@ -1,0 +1,101 @@
+"""SynLlama capture tests: shapes, determinism, outlier calibration."""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import config, model
+
+
+@pytest.fixture(scope="module")
+def small_cfg():
+    return config.SynLlamaConfig(
+        n_layers=4, d_model=64, n_heads=4, d_ffn=176, vocab=64, seq_len=32,
+        massive_layers=(1, 2), tail_layer=3, tail_tokens=8, tail_channels=4,
+        attn_sys_channels=4, oproj_sys_channels=4, ffn_sys_channels=8, down_sys_channels=8,
+        wout_layer=3,
+    )
+
+
+@pytest.fixture(scope="module")
+def small_capture(small_cfg):
+    p = model.init_params(small_cfg)
+    pj = {k: jnp.asarray(v) for k, v in p.items()}
+    toks = jnp.asarray(model.make_tokens(small_cfg))
+    fwd = jax.jit(functools.partial(model.forward_capture, n_heads=small_cfg.n_heads))
+    return p, fwd(pj, toks)
+
+
+def test_capture_shapes(small_cfg, small_capture):
+    _, caps = small_capture
+    L, n, d, f = small_cfg.n_layers, small_cfg.seq_len, small_cfg.d_model, small_cfg.d_ffn
+    assert caps[0].shape == (L, n, d)  # attn_in
+    assert caps[1].shape == (L, n, d)  # o_in
+    assert caps[2].shape == (L, n, d)  # ffn_in
+    assert caps[3].shape == (L, n, f)  # down_in
+
+
+def test_params_deterministic(small_cfg):
+    p1 = model.init_params(small_cfg)
+    p2 = model.init_params(small_cfg)
+    for k in model.PARAM_ORDER:
+        np.testing.assert_array_equal(p1[k], p2[k])
+
+
+def test_params_shapes_match_specs(small_cfg):
+    p = model.init_params(small_cfg)
+    specs = model.param_specs(small_cfg)
+    for k in model.PARAM_ORDER:
+        assert tuple(p[k].shape) == tuple(specs[k].shape), k
+
+
+def test_massive_outliers_present(small_cfg, small_capture):
+    _, caps = small_capture
+    down_in = np.asarray(caps[3])
+    for l in small_cfg.massive_layers:
+        assert np.abs(down_in[l]).max() > 0.8 * small_cfg.massive_value
+    # massive outliers are token-specific: only few rows carry them
+    l = small_cfg.massive_layers[0]
+    hot_rows = np.sum(np.abs(down_in[l]).max(axis=1) > 0.5 * small_cfg.massive_value)
+    assert hot_rows <= small_cfg.massive_tokens
+
+
+def test_systematic_outliers_present(small_cfg, small_capture):
+    """Hot channels are hot across (almost) ALL tokens at late layers."""
+    _, caps = small_capture
+    attn_in = np.asarray(caps[0])
+    l = small_cfg.n_layers // 2  # peak of the sine profile
+    mags = np.abs(attn_in[l])
+    ch_medians = np.median(mags, axis=0)
+    hot = ch_medians > 5 * np.median(ch_medians)
+    assert hot.sum() >= small_cfg.attn_sys_channels // 2
+
+
+def test_tokens_deterministic_and_in_range(small_cfg):
+    t1, t2 = model.make_tokens(small_cfg), model.make_tokens(small_cfg)
+    np.testing.assert_array_equal(t1, t2)
+    assert t1.dtype == np.int32
+    assert t1.min() >= 0 and t1.max() < small_cfg.vocab
+
+
+def test_forward_is_finite(small_capture):
+    _, caps = small_capture
+    for c in caps:
+        assert np.all(np.isfinite(np.asarray(c)))
+
+
+def test_gate_weight_outliers(small_cfg):
+    p = model.init_params(small_cfg)
+    wg = p["wg"]
+    row_norms = np.linalg.norm(wg[small_cfg.wout_layer], axis=1)
+    base_norms = np.linalg.norm(wg[0], axis=1)
+    assert row_norms.max() > 4 * base_norms.max()
+
+
+def test_default_config_analyze_shapes():
+    cfg = config.default_config()
+    assert cfg.analyze_shapes() == [(256, 256), (256, 704), (704, 256)]
+    assert cfg.d_head * cfg.n_heads == cfg.d_model

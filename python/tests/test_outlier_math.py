@@ -1,0 +1,116 @@
+"""Empirical validation of the paper's outlier formulas (Eq. 6-9).
+
+These tests build the massive-outlier token model of Eq. 6 and check the
+claims of Sec. IV-D / IV-E:
+
+* Eq. 7: the rotated token clusters around 2^(|O|-1) centroid magnitudes,
+* Eq. 8: max|t_hat| = sum_i |o_i| / sqrt(d) + O(eps),
+* Eq. 9: after smoothing (alpha=0.5) + rotation the max drops to about
+  sum_i sqrt(|o_i| * max|W_i| / d).
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import hadamard as hd
+
+
+def _token(d, outlier_dims, outlier_vals, sigma, seed):
+    rng = np.random.default_rng(seed)
+    t = rng.normal(scale=sigma, size=d)
+    t[outlier_dims] = outlier_vals
+    return t
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    dpow=st.integers(min_value=6, max_value=10),
+    n_out=st.integers(min_value=1, max_value=5),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_eq8_rotated_max(dpow, n_out, seed):
+    d = 2**dpow
+    rng = np.random.default_rng(seed + 1)
+    dims = rng.choice(d, size=n_out, replace=False)
+    vals = rng.choice([-1.0, 1.0], size=n_out) * (1000.0 + 500.0 * rng.random(n_out))
+    sigma = 0.5
+    t = _token(d, dims, vals, sigma, seed)
+    r = hd.rotation_matrix(d)
+    t_hat = t @ r
+    predicted = np.sum(np.abs(vals)) / np.sqrt(d)
+    # max|t_hat| = predicted + |eps|; eps ~ N(0, sigma) -> allow 6 sigma
+    assert abs(np.max(np.abs(t_hat)) - predicted) < 6 * sigma
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n_out=st.integers(min_value=1, max_value=4),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_eq7_cluster_count(n_out, seed):
+    """Rotated values concentrate near at most 2^(|O|-1) magnitude levels."""
+    d = 512
+    rng = np.random.default_rng(seed + 2)
+    dims = rng.choice(d, size=n_out, replace=False)
+    vals = rng.choice([-1.0, 1.0], size=n_out) * (2000.0 + 1000.0 * rng.random(n_out))
+    t = _token(d, dims, vals, 0.01, seed)
+    t_hat = t @ hd.rotation_matrix(d)
+    # centroid magnitudes: |sum_i h_i o_i| / sqrt(d) over all sign choices
+    from itertools import product
+
+    centroids = {
+        round(abs(sum(s * abs(v) for s, v in zip(signs, vals))) / np.sqrt(d), 3)
+        for signs in product([-1, 1], repeat=n_out)
+    }
+    assert len(centroids) <= 2 ** (n_out - 1) + 1  # +1 for degenerate collisions
+    # every rotated value sits near one centroid
+    mags = np.abs(t_hat)
+    dist = np.min(np.abs(mags[:, None] - np.array(sorted(centroids))[None, :]), axis=1)
+    assert np.max(dist) < 0.5  # sigma=0.01 -> tight clusters
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+def test_eq9_smooth_rotate_max(seed):
+    """Smoothing then rotating spreads outliers across 2d dims (Eq. 9)."""
+    d, n_out = 512, 3
+    rng = np.random.default_rng(seed + 3)
+    dims = rng.choice(d, size=n_out, replace=False)
+    vals = rng.choice([-1.0, 1.0], size=n_out) * (3000.0 + 1000.0 * rng.random(n_out))
+    sigma = 0.5
+    t = _token(d, dims, vals, sigma, seed)
+    x = np.vstack([t, rng.normal(scale=sigma, size=(7, d))])  # t plus benign tokens
+    w = rng.normal(scale=0.05, size=(d, 128))
+
+    # smooth with alpha = 0.5 (paper's fixed sweet spot)
+    xmax = np.maximum(np.abs(x).max(axis=0), 1e-12)
+    wmax = np.maximum(np.abs(w).max(axis=1), 1e-12)
+    s = np.sqrt(xmax / wmax)
+    t_tilde = (t / s) @ hd.rotation_matrix(d)
+
+    predicted = np.sum(np.sqrt(np.abs(vals) * wmax[dims] / d))
+    got = np.max(np.abs(t_tilde))
+    # Eq. 9 is approximate ("~"): accept within a factor of 2 + noise floor
+    assert got < 2.0 * predicted + 6 * sigma
+    assert got > 0.3 * predicted - 6 * sigma
+
+
+def test_smooth_rotate_beats_rotate_on_massive_outliers():
+    """The paper's core claim: with massive outliers present, rotation
+    alone leaves a much larger max than smooth+rotate."""
+    d = 704
+    rng = np.random.default_rng(9)
+    t = rng.normal(scale=0.5, size=d)
+    dims = rng.choice(d, size=8, replace=False)
+    t[dims] = rng.choice([-1.0, 1.0], size=8) * 6000.0
+    x = np.vstack([t, rng.normal(scale=0.5, size=(127, d))])
+    w = rng.normal(scale=0.05, size=(d, 256))
+    r = hd.rotation_matrix(d)
+
+    max_rot = np.abs(x @ r).max()
+    xmax = np.maximum(np.abs(x).max(axis=0), 1e-12)
+    wmax = np.maximum(np.abs(w).max(axis=1), 1e-12)
+    s = np.sqrt(xmax / wmax)
+    max_sr = np.abs((x / s) @ r).max()
+    assert max_sr < 0.25 * max_rot

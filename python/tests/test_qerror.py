@@ -1,0 +1,62 @@
+"""Fused quantization-error kernel (the L1 hot path) vs the oracle."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import qerror, ref
+
+DIMS = st.sampled_from([(8, 16, 4), (32, 64, 16), (128, 256, 256), (128, 704, 256), (128, 256, 704)])
+SEEDS = st.integers(min_value=0, max_value=2**31 - 1)
+BITS = st.sampled_from([2, 4, 8])
+
+
+def _xw(dims, seed, outlier=False):
+    n, c_in, c_out = dims
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(n, c_in)).astype(np.float32)
+    if outlier:
+        x[rng.integers(n), rng.integers(c_in)] = 1000.0
+    w = rng.normal(size=(c_in, c_out)).astype(np.float32)
+    return jnp.asarray(x), jnp.asarray(w)
+
+
+@settings(max_examples=20, deadline=None)
+@given(dims=DIMS, seed=SEEDS, bits=BITS)
+def test_quant_error_matches_ref(dims, seed, bits):
+    x, w = _xw(dims, seed)
+    got = qerror.quant_error(x, w, bits)
+    want = ref.quant_error(x, w, bits)
+    np.testing.assert_allclose(got, want, rtol=2e-3, atol=1e-2)
+
+
+@settings(max_examples=10, deadline=None)
+@given(dims=DIMS, seed=SEEDS)
+def test_quant_error_with_massive_outlier(dims, seed):
+    x, w = _xw(dims, seed, outlier=True)
+    np.testing.assert_allclose(
+        qerror.quant_error(x, w), ref.quant_error(x, w), rtol=2e-3, atol=1e-2
+    )
+
+
+@settings(max_examples=10, deadline=None)
+@given(dims=DIMS, seed=SEEDS)
+def test_partials_sum_to_total(dims, seed):
+    x, w = _xw(dims, seed)
+    partials = qerror.quant_error_partials(x, w)
+    np.testing.assert_allclose(jnp.sum(partials), qerror.quant_error(x, w), rtol=1e-6)
+
+
+def test_error_zero_when_exactly_representable():
+    """X and W already on a 4-bit grid and small enough -> zero error."""
+    x = jnp.asarray(np.array([[7.0, -7.0, 1.0, 0.0]], dtype=np.float32))
+    w = jnp.asarray(np.array([[7.0], [1.0], [0.0], [-7.0]], dtype=np.float32))
+    assert float(qerror.quant_error(x, w, bits=4)) < 1e-6
+
+
+def test_error_decreases_with_bits():
+    rng = np.random.default_rng(11)
+    x = jnp.asarray(rng.normal(size=(64, 128)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(128, 32)).astype(np.float32))
+    errs = [float(qerror.quant_error(x, w, bits=b)) for b in (2, 4, 8)]
+    assert errs[0] > errs[1] > errs[2]

@@ -1,0 +1,94 @@
+"""Equivalent-transformation tests (paper Eq. 3, Sec. II-C)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import transforms
+from compile.kernels import ref
+
+DIMS = st.sampled_from([(16, 16, 8), (32, 64, 16), (128, 256, 256), (128, 704, 256)])
+SEEDS = st.integers(min_value=0, max_value=2**31 - 1)
+
+
+def _xw(dims, seed):
+    n, c_in, c_out = dims
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(n, c_in)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(c_in, c_out)).astype(np.float32))
+    return x, w
+
+
+@settings(max_examples=12, deadline=None)
+@given(dims=DIMS, seed=SEEDS, mode=st.sampled_from(transforms.MODES))
+def test_transform_preserves_product(dims, seed, mode):
+    """Numerical equivalence X W == X_hat W_hat for every mode."""
+    x, w = _xw(dims, seed)
+    xh, wh = transforms.apply_transform(mode, x, w)
+    y, yh = np.asarray(x @ w), np.asarray(xh @ wh)
+    scale = max(1.0, float(np.abs(y).max()))
+    np.testing.assert_allclose(yh / scale, y / scale, atol=2e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(dims=DIMS, seed=SEEDS)
+def test_rotation_preserves_frobenius_norm(dims, seed):
+    x, w = _xw(dims, seed)
+    xh, wh = transforms.apply_transform("rotate", x, w)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(xh)), np.linalg.norm(np.asarray(x)), rtol=1e-5
+    )
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(wh)), np.linalg.norm(np.asarray(w)), rtol=1e-5
+    )
+
+
+def test_unknown_mode_raises():
+    x, w = _xw((8, 16, 4), 0)
+    with pytest.raises(ValueError):
+        transforms.apply_transform("spin", x, w)
+
+
+def test_rotation_flattens_systematic_outliers():
+    """A hot channel is redistributed: the rotated channel-magnitude std
+    (the paper's quantization difficulty) must drop a lot."""
+    rng = np.random.default_rng(5)
+    x = rng.normal(size=(64, 256)).astype(np.float32)
+    x[:, 17] *= 50.0  # systematic outlier channel
+    w = rng.normal(size=(256, 64)).astype(np.float32)
+    x, w = jnp.asarray(x), jnp.asarray(w)
+    xh, _ = transforms.apply_transform("rotate", x, w)
+    assert float(ref.quant_difficulty(xh)) < 0.1 * float(ref.quant_difficulty(x))
+
+
+def test_smoothing_migrates_difficulty_to_weights():
+    """Smoothing flattens X but RAISES weight difficulty (Sec. IV-C)."""
+    rng = np.random.default_rng(6)
+    x = rng.normal(size=(64, 256)).astype(np.float32)
+    x[:, 17] *= 50.0
+    w = rng.normal(size=(256, 64)).astype(np.float32)
+    x, w = jnp.asarray(x), jnp.asarray(w)
+    xh, wh = transforms.apply_transform("smooth", x, w)
+    assert float(ref.quant_difficulty(xh)) < float(ref.quant_difficulty(x))
+    assert float(ref.quant_difficulty(wh, axis=1)) > float(ref.quant_difficulty(w, axis=1))
+
+
+def test_rotation_lowers_weight_difficulty():
+    """Rotation also redistributes weights (Sec. IV-D)."""
+    rng = np.random.default_rng(7)
+    w = rng.normal(size=(256, 64)).astype(np.float32)
+    w[17, :] *= 20.0  # heavy input-channel row
+    x = jnp.asarray(rng.normal(size=(64, 256)).astype(np.float32))
+    _, wh = transforms.apply_transform("rotate", x, jnp.asarray(w))
+    assert float(ref.quant_difficulty(wh, axis=1)) < float(ref.quant_difficulty(jnp.asarray(w), axis=1))
+
+
+def test_alpha_extremes():
+    """alpha=1 pushes all difficulty to W; alpha=0 all to X."""
+    rng = np.random.default_rng(8)
+    x = jnp.asarray((rng.normal(size=(32, 64)) * 10).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(64, 16)).astype(np.float32))
+    xh1, _ = transforms.apply_transform("smooth", x, w, alpha=1.0)
+    # alpha=1: s_j = max|X_j| -> X_hat channel maxima all 1
+    np.testing.assert_allclose(np.max(np.abs(np.asarray(xh1)), axis=0), 1.0, rtol=1e-4)

@@ -1,0 +1,202 @@
+//! One bench per paper table/figure — each regenerates the figure's data
+//! on the captured workload (PJRT artifacts when built, with the
+//! native-mirror path timed alongside) and prints the series the paper
+//! reports.  Run: `cargo bench --offline` (optionally `-- --filter fig4`).
+
+use smoothrot::bench_harness::{black_box, Bench};
+use smoothrot::coordinator::{NativeExecutor, PoolConfig};
+use smoothrot::pipeline::{self, Backend};
+use smoothrot::report;
+use smoothrot::runtime::Runtime;
+use smoothrot::transforms::Mode;
+
+fn artifacts_dir() -> Option<String> {
+    let dir = std::env::var("SMOOTHROT_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string());
+    if std::path::Path::new(&dir).join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("artifacts not built — run `make artifacts` for the full paper benches");
+        None
+    }
+}
+
+fn main() {
+    let mut b = Bench::from_args();
+    let Some(dir) = artifacts_dir() else {
+        b.finish();
+        return;
+    };
+    let rt = Runtime::new(&dir).expect("runtime");
+    let cfg = rt.manifest().config.clone();
+    let workload = pipeline::load_workload(&rt).expect("workload");
+
+    // ---- Fig 1: k_proj layer-1 magnitudes under transforms -------------
+    {
+        let (x, w) = workload.pair(&rt, "k_proj", 1);
+        let mut profiles = Vec::new();
+        b.bench("fig1_kproj1_transform_magnitudes", || {
+            profiles.clear();
+            for mode in Mode::ALL {
+                let (xh, _) = rt.transform(mode, &x, &w).expect("transform");
+                profiles.push((mode, report::sorted_channel_magnitudes(&xh)));
+            }
+            black_box(&profiles);
+        });
+        for (mode, p) in &profiles {
+            println!("    fig1 {:>14}: top|ch| {:.1}  median|ch| {:.2}", mode.name(), p[0], p[p.len() / 2]);
+        }
+    }
+
+    // ---- Fig 2: down_proj layer-30 magnitudes under transforms ---------
+    {
+        let layer = cfg.massive_layers.last().copied().unwrap_or(30);
+        let (x, w) = workload.pair(&rt, "down_proj", layer);
+        let mut profiles = Vec::new();
+        b.bench("fig2_downproj30_transform_magnitudes", || {
+            profiles.clear();
+            for mode in Mode::ALL {
+                let (xh, _) = rt.transform(mode, &x, &w).expect("transform");
+                profiles.push((mode, report::sorted_channel_magnitudes(&xh)));
+            }
+            black_box(&profiles);
+        });
+        for (mode, p) in &profiles {
+            println!("    fig2 {:>14}: top|ch| {:.1}  median|ch| {:.2}", mode.name(), p[0], p[p.len() / 2]);
+        }
+    }
+
+    // ---- Fig 3 + Fig 4 + §IV-B: the full grid ---------------------------
+    {
+        let mut corr = 0.0;
+        let mut grid = None;
+        b.bench_heavy("fig3_fig4_full_grid_pjrt", 2, || {
+            let run = pipeline::run_full_experiment(
+                &dir,
+                PoolConfig { workers: 2, queue_cap: 64 },
+                Backend::Pjrt,
+            )
+            .expect("experiment");
+            let (c, _) = report::correlation_report(&run.grid, &cfg.massive_layers, cfg.tail_layer);
+            corr = c;
+            grid = Some(run.grid);
+        });
+        let grid = grid.unwrap();
+        println!("    §IV-B corr(error, difficulty²) = {corr:.4} (paper: > 0.97)");
+        for &l in &cfg.massive_layers {
+            let o = grid.get("down_proj", l).unwrap();
+            println!(
+                "    fig4 down_proj {l}: none {:.2e} smooth {:.2e} rotate {:.2e} smooth_rotate {:.2e}",
+                o.errors[0], o.errors[1], o.errors[2], o.errors[3]
+            );
+        }
+        // native-mirror timing for the same grid
+        b.bench_heavy("fig3_fig4_full_grid_native_mirror", 2, || {
+            let run = pipeline::run_full_experiment(
+                &dir,
+                PoolConfig { workers: 2, queue_cap: 64 },
+                Backend::Native,
+            )
+            .expect("experiment");
+            black_box(run.metrics.jobs);
+        });
+    }
+
+    // ---- Fig 5: outlier-token quantization bins -------------------------
+    {
+        let layer = cfg.massive_layers.last().copied().unwrap_or(30);
+        let (x, w) = workload.pair(&rt, "down_proj", layer);
+        let mut curves = Vec::new();
+        b.bench("fig5_outlier_token_bins", || {
+            curves.clear();
+            for mode in [Mode::Rotate, Mode::SmoothRotate] {
+                let (xh, _) = rt.transform(mode, &x, &w).expect("transform");
+                curves.push((mode, report::fig5_data(&xh, cfg.bits)));
+            }
+            black_box(&curves);
+        });
+        for (mode, d) in &curves {
+            println!(
+                "    fig5 {:>14}: Delta {:.3e}, effective bins {}",
+                mode.name(),
+                d.delta,
+                d.n_effective_bins
+            );
+        }
+    }
+
+    // ---- §IV-C: alpha sweep table ---------------------------------------
+    {
+        let alphas = [0.5, 0.65, 0.7];
+        let mut table = Vec::new();
+        b.bench_heavy("sec4c_alpha_sweep_oproj_gateproj", 2, || {
+            table.clear();
+            for module in ["o_proj", "gate_proj"] {
+                let module: &'static str =
+                    smoothrot::MODULES.into_iter().find(|m| *m == module).unwrap();
+                let sweep =
+                    pipeline::alpha_sweep(&rt, &workload, module, &alphas, cfg.bits).expect("sweep");
+                let totals: Vec<f64> = sweep.iter().map(|(_, e)| e.iter().sum()).collect();
+                table.push((module, totals));
+            }
+            black_box(&table);
+        });
+        for (module, totals) in &table {
+            println!(
+                "    §IV-C {module}: alpha 0.5 -> {:.3e}, 0.65 -> {:.3e}, 0.7 -> {:.3e}",
+                totals[0], totals[1], totals[2]
+            );
+        }
+    }
+
+    // ---- Eq. 7/8/9: outlier-model predictions ---------------------------
+    {
+        use smoothrot::outlier::OutlierToken;
+        use smoothrot::rng::Rng;
+        let mut rng = Rng::new(5);
+        let tok = OutlierToken::sample(704, 8, 6000.0, 0.5, &mut rng);
+        let x = tok.materialize_batch(128, &mut rng);
+        let w = workload.pair(&rt, "down_proj", 30).1;
+        let mut lines = Vec::new();
+        b.bench("eq8_eq9_outlier_model_predictions", || {
+            lines.clear();
+            let (xr, _) = smoothrot::transforms::apply(Mode::Rotate, &x, &w, 0.5).unwrap();
+            lines.push(format!(
+                "Eq.8: predicted max {:.1} vs rotated max {:.1}",
+                tok.predicted_rotated_max(),
+                xr.abs_max()
+            ));
+            let (xsr, _) = smoothrot::transforms::apply(Mode::SmoothRotate, &x, &w, 0.5).unwrap();
+            let mut wmax = vec![0.0f32; 704];
+            for i in 0..704 {
+                wmax[i] = w.row(i).iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+            }
+            lines.push(format!(
+                "Eq.9: predicted max {:.2} vs smooth-rotated max {:.2}",
+                tok.predicted_smooth_rotated_max(&wmax),
+                xsr.abs_max()
+            ));
+        });
+        for l in &lines {
+            println!("    {l}");
+        }
+    }
+
+    // ---- extension: bit-width ablation ----------------------------------
+    {
+        let mut rows = Vec::new();
+        b.bench_heavy("ablation_bitwidth_native", 2, || {
+            rows = pipeline::bits_sweep(&rt, &workload, &[2, 4, 8]).expect("bits sweep");
+        });
+        for (bits, totals) in &rows {
+            println!(
+                "    W{bits}A{bits}: none {:.2e}  smooth_rotate {:.2e}  (ratio {:.1}x)",
+                totals[0],
+                totals[3],
+                totals[0] / totals[3]
+            );
+        }
+        let _ = NativeExecutor;
+    }
+
+    b.finish();
+}

@@ -1,0 +1,126 @@
+//! Performance benches over the hot paths of each layer:
+//!
+//! * L3 native math: blocked matmul, quantizer, fused qerror kernel,
+//!   Hadamard construction + application,
+//! * L3 coordinator: scheduling overhead at varying worker counts,
+//! * runtime: PJRT execute latency for the analyze/transform artifacts
+//!   (the end-to-end request-path unit).
+//!
+//! The §Perf section of EXPERIMENTS.md quotes these numbers.
+
+use smoothrot::bench_harness::{black_box, Bench};
+use smoothrot::coordinator::{run_jobs, Executor, Job, NativeExecutor, PoolConfig};
+use smoothrot::quant::{self, Granularity};
+use smoothrot::rng::Rng;
+use smoothrot::runtime::{AnalyzeOut, Runtime};
+use smoothrot::tensor::Matrix;
+use smoothrot::transforms::{self, Mode};
+
+fn rand_matrix(rows: usize, cols: usize, seed: u64) -> Matrix {
+    let mut rng = Rng::new(seed);
+    Matrix::from_vec(rows, cols, rng.normals_f32(rows * cols))
+}
+
+fn main() {
+    let mut b = Bench::from_args();
+
+    // ---- L3 native math hot paths --------------------------------------
+    let x = rand_matrix(128, 704, 1);
+    let w = rand_matrix(704, 256, 2);
+    let flops = 2.0 * 128.0 * 704.0 * 256.0;
+
+    b.bench_items("native_matmul_128x704x256", flops, || {
+        black_box(x.matmul(&w));
+    });
+
+    b.bench_items("native_qdq_per_token_128x704", (128 * 704) as f64, || {
+        black_box(quant::qdq(&x, 4, Granularity::PerToken));
+    });
+
+    b.bench_items("native_qerror_two_matmuls", 2.0 * flops, || {
+        black_box(quant::quant_error(&x, &w, 4));
+    });
+
+    b.bench_items("native_qerror_fused_single_pass", 2.0 * flops, || {
+        black_box(quant::quant_error_fused(&x, &w, 4));
+    });
+
+    b.bench("hadamard_construct_704_kronecker_paley", || {
+        black_box(transforms::hadamard(704).unwrap());
+    });
+
+    b.bench("hadamard_construct_256_sylvester", || {
+        black_box(transforms::hadamard(256).unwrap());
+    });
+
+    let r704 = transforms::rotation(704).unwrap();
+    b.bench_items("rotate_apply_128x704", 2.0 * 128.0 * 704.0 * 704.0, || {
+        black_box(x.matmul(&r704));
+    });
+
+    b.bench("smooth_scales_and_apply_128x704", || {
+        let s = transforms::smooth_scales(&x, &w, 0.5);
+        black_box(transforms::smooth_apply(&x, &w, &s));
+    });
+
+    b.bench("native_analyze_all_modes_704x256", || {
+        black_box(NativeExecutor::analyze(&x, &w, 4, 0.5).unwrap());
+    });
+
+    // ---- L3 coordinator overhead ----------------------------------------
+    struct NoopExec;
+    impl Executor for NoopExec {
+        fn run(&mut self, _job: &Job) -> Result<AnalyzeOut, String> {
+            Ok(AnalyzeOut::default())
+        }
+    }
+    for workers in [1usize, 2, 4] {
+        let name = format!("coordinator_noop_512_jobs_w{workers}");
+        b.bench_items(&name, 512.0, || {
+            let jobs: Vec<Job> = (0..512)
+                .map(|i| Job {
+                    id: i,
+                    layer: 0,
+                    module: "k_proj",
+                    x: Matrix::zeros(1, 1),
+                    w: Matrix::zeros(1, 1),
+                    alpha: 0.5,
+                    bits: 4,
+                })
+                .collect();
+            let (r, _) =
+                run_jobs(jobs, PoolConfig { workers, queue_cap: 64 }, |_| Ok(NoopExec)).unwrap();
+            black_box(r.len());
+        });
+    }
+
+    // ---- PJRT request-path latency --------------------------------------
+    let dir = std::env::var("SMOOTHROT_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string());
+    if std::path::Path::new(&dir).join("manifest.json").exists() {
+        let rt = Runtime::new(&dir).expect("runtime");
+        // warm the executable cache outside the timing loop
+        let xs = rand_matrix(128, 256, 3);
+        let ws = rand_matrix(256, 256, 4);
+        let _ = rt.analyze(&xs, &ws).unwrap();
+        b.bench("pjrt_analyze_256x256_all_modes", || {
+            black_box(rt.analyze(&xs, &ws).unwrap());
+        });
+        let xl = rand_matrix(128, 704, 5);
+        let wl = rand_matrix(704, 256, 6);
+        let _ = rt.analyze(&xl, &wl).unwrap();
+        b.bench("pjrt_analyze_704x256_all_modes", || {
+            black_box(rt.analyze(&xl, &wl).unwrap());
+        });
+        let _ = rt.transform(Mode::SmoothRotate, &xl, &wl).unwrap();
+        b.bench("pjrt_transform_smooth_rotate_704x256", || {
+            black_box(rt.transform(Mode::SmoothRotate, &xl, &wl).unwrap());
+        });
+        b.bench_heavy("pjrt_capture_full_32_layer_forward", 3, || {
+            black_box(rt.capture().unwrap());
+        });
+    } else {
+        eprintln!("artifacts not built — skipping PJRT benches (run `make artifacts`)");
+    }
+
+    b.finish();
+}

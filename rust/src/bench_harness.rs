@@ -1,0 +1,226 @@
+//! criterion-lite: a small measurement harness for `cargo bench`
+//! (the offline registry has no criterion).
+//!
+//! Provides warmup + N timed samples, median / mean / p95 statistics,
+//! optional throughput reporting, and a `--filter` argument matching the
+//! substring semantics of criterion.  Results are printed in a stable
+//! one-line-per-bench format that `EXPERIMENTS.md` quotes directly.
+
+use std::time::{Duration, Instant};
+
+/// One benchmark measurement.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    pub samples: Vec<Duration>,
+    /// Items processed per iteration (for throughput), if meaningful.
+    pub items_per_iter: Option<f64>,
+}
+
+impl Measurement {
+    fn sorted_nanos(&self) -> Vec<u128> {
+        let mut v: Vec<u128> = self.samples.iter().map(Duration::as_nanos).collect();
+        v.sort_unstable();
+        v
+    }
+
+    pub fn median(&self) -> Duration {
+        let v = self.sorted_nanos();
+        Duration::from_nanos(v[v.len() / 2] as u64)
+    }
+
+    pub fn mean(&self) -> Duration {
+        let total: u128 = self.samples.iter().map(Duration::as_nanos).sum();
+        Duration::from_nanos((total / self.samples.len() as u128) as u64)
+    }
+
+    pub fn p95(&self) -> Duration {
+        let v = self.sorted_nanos();
+        let idx = ((v.len() as f64) * 0.95) as usize;
+        Duration::from_nanos(v[idx.min(v.len() - 1)] as u64)
+    }
+
+    pub fn report_line(&self) -> String {
+        let med = self.median();
+        let thr = self
+            .items_per_iter
+            .map(|items| {
+                let per_sec = items / self.median().as_secs_f64();
+                if per_sec > 1e6 {
+                    format!("  {:.2} Melem/s", per_sec / 1e6)
+                } else {
+                    format!("  {:.1} elem/s", per_sec)
+                }
+            })
+            .unwrap_or_default();
+        format!(
+            "{:<44} median {:>12?}  mean {:>12?}  p95 {:>12?}{}",
+            self.name,
+            med,
+            self.mean(),
+            self.p95(),
+            thr
+        )
+    }
+}
+
+/// Bench runner configuration.
+#[derive(Clone, Debug)]
+pub struct Bench {
+    pub warmup_iters: usize,
+    pub sample_count: usize,
+    filter: Option<String>,
+    results: Vec<Measurement>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self::from_args()
+    }
+}
+
+impl Bench {
+    /// Parse `--filter <substr>` / `--fast` from the bench binary's args
+    /// (cargo passes `--bench`; ignore it).
+    pub fn from_args() -> Self {
+        let args: Vec<String> = std::env::args().collect();
+        let mut filter = None;
+        let mut fast = false;
+        let mut i = 1;
+        while i < args.len() {
+            match args[i].as_str() {
+                "--filter" => {
+                    filter = args.get(i + 1).cloned();
+                    i += 1;
+                }
+                "--fast" => fast = true,
+                _ => {
+                    // bare positional (criterion style) acts as a filter
+                    if !args[i].starts_with('-') {
+                        filter = Some(args[i].clone());
+                    }
+                }
+            }
+            i += 1;
+        }
+        Self {
+            warmup_iters: if fast { 1 } else { 3 },
+            sample_count: if fast { 5 } else { 15 },
+            filter,
+            results: Vec::new(),
+        }
+    }
+
+    fn enabled(&self, name: &str) -> bool {
+        self.filter.as_deref().map(|f| name.contains(f)).unwrap_or(true)
+    }
+
+    /// Time `f` (whole-call granularity); returns the measurement if run.
+    pub fn bench(&mut self, name: &str, mut f: impl FnMut()) -> Option<&Measurement> {
+        self.bench_with_items(name, None, None, move || f())
+    }
+
+    /// Time `f` and report throughput as `items / median`.
+    pub fn bench_items(&mut self, name: &str, items: f64, mut f: impl FnMut()) -> Option<&Measurement> {
+        self.bench_with_items(name, None, Some(items), move || f())
+    }
+
+    /// Heavy benchmark: override warmup/sample counts (e.g. whole-grid
+    /// experiments where one iteration takes tens of seconds).
+    pub fn bench_heavy(&mut self, name: &str, samples: usize, mut f: impl FnMut()) -> Option<&Measurement> {
+        self.bench_with_items(name, Some((1, samples)), None, move || f())
+    }
+
+    fn bench_with_items(
+        &mut self,
+        name: &str,
+        counts: Option<(usize, usize)>,
+        items: Option<f64>,
+        mut f: impl FnMut(),
+    ) -> Option<&Measurement> {
+        if !self.enabled(name) {
+            return None;
+        }
+        let (warmup, count) = counts.unwrap_or((self.warmup_iters, self.sample_count));
+        for _ in 0..warmup {
+            f();
+        }
+        let mut samples = Vec::with_capacity(count);
+        for _ in 0..count {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed());
+        }
+        let m = Measurement { name: name.to_string(), samples, items_per_iter: items };
+        println!("{}", m.report_line());
+        self.results.push(m);
+        self.results.last()
+    }
+
+    /// All measurements taken so far.
+    pub fn results(&self) -> &[Measurement] {
+        &self.results
+    }
+
+    /// Print a closing summary (count only; lines were live-printed).
+    pub fn finish(&self) {
+        println!("\n{} benchmark(s) completed", self.results.len());
+    }
+}
+
+/// Prevent the optimizer from discarding a value (ptr::read volatile
+/// blackbox — std::hint::black_box is stable since 1.66 but keep a
+/// wrapper for call-site clarity).
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quiet_bench() -> Bench {
+        Bench { warmup_iters: 1, sample_count: 5, filter: None, results: Vec::new() }
+    }
+
+    #[test]
+    fn measurement_stats_ordering() {
+        let m = Measurement {
+            name: "t".into(),
+            samples: (1..=10).map(Duration::from_micros).collect(),
+            items_per_iter: None,
+        };
+        assert!(m.median() <= m.p95());
+        assert!(m.mean() >= Duration::from_micros(1));
+    }
+
+    #[test]
+    fn bench_runs_and_records() {
+        let mut b = quiet_bench();
+        let mut count = 0u64;
+        b.bench("counter", || {
+            count += 1;
+        });
+        assert_eq!(b.results().len(), 1);
+        // warmup + samples
+        assert_eq!(count, 6);
+    }
+
+    #[test]
+    fn filter_skips_non_matching() {
+        let mut b = quiet_bench();
+        b.filter = Some("xyz".into());
+        assert!(b.bench("abc", || {}).is_none());
+        assert_eq!(b.results().len(), 0);
+    }
+
+    #[test]
+    fn throughput_line_mentions_rate() {
+        let m = Measurement {
+            name: "thr".into(),
+            samples: vec![Duration::from_millis(1); 3],
+            items_per_iter: Some(1_000_000.0),
+        };
+        assert!(m.report_line().contains("elem/s"));
+    }
+}

@@ -1,0 +1,128 @@
+//! proptest-lite: a tiny property-testing harness (no proptest offline).
+//!
+//! A property is a closure over a [`Gen`] (a seeded RNG wrapper with
+//! convenience samplers).  `check(name, cases, prop)` runs it `cases`
+//! times with distinct deterministic seeds and reports the failing seed
+//! so any counterexample is reproducible with `CHECK_SEED=<n>`.
+
+use crate::rng::Rng;
+
+/// Generator context handed to properties.
+pub struct Gen {
+    pub rng: Rng,
+    /// The case seed (for error messages).
+    pub seed: u64,
+}
+
+impl Gen {
+    /// Uniform usize in [lo, hi] inclusive.
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo <= hi);
+        lo + self.rng.below(hi - lo + 1)
+    }
+
+    /// Uniform f32 in [lo, hi).
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (hi - lo) * self.rng.f32()
+    }
+
+    /// Standard normal f32 vector.
+    pub fn normals(&mut self, n: usize) -> Vec<f32> {
+        self.rng.normals_f32(n)
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.below(xs.len())]
+    }
+
+    /// Random matrix of standard normals.
+    pub fn matrix(&mut self, rows: usize, cols: usize) -> crate::tensor::Matrix {
+        crate::tensor::Matrix::from_vec(rows, cols, self.normals(rows * cols))
+    }
+}
+
+/// Outcome of a property over one case.
+pub type PropResult = Result<(), String>;
+
+/// Run `prop` for `cases` deterministic seeds; panic with the seed on the
+/// first failure.  Set `CHECK_SEED` to re-run a single failing case.
+pub fn check(name: &str, cases: u64, mut prop: impl FnMut(&mut Gen) -> PropResult) {
+    if let Ok(s) = std::env::var("CHECK_SEED") {
+        let seed: u64 = s.parse().expect("CHECK_SEED must be an integer");
+        let mut g = Gen { rng: Rng::new(seed), seed };
+        if let Err(msg) = prop(&mut g) {
+            panic!("property '{name}' failed at CHECK_SEED={seed}: {msg}");
+        }
+        return;
+    }
+    for case in 0..cases {
+        // decorrelate case seeds
+        let seed = 0x5EED_0000u64.wrapping_add(case.wrapping_mul(0x9E3779B97F4A7C15));
+        let mut g = Gen { rng: Rng::new(seed), seed };
+        if let Err(msg) = prop(&mut g) {
+            panic!("property '{name}' failed on case {case} (CHECK_SEED={seed}): {msg}");
+        }
+    }
+}
+
+/// Assert-like helpers for property bodies.
+pub fn ensure(cond: bool, msg: impl Into<String>) -> PropResult {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+/// Relative closeness check with context.
+pub fn close(a: f64, b: f64, rtol: f64, what: &str) -> PropResult {
+    let denom = a.abs().max(b.abs()).max(1e-12);
+    if (a - b).abs() / denom <= rtol {
+        Ok(())
+    } else {
+        Err(format!("{what}: {a} vs {b} (rtol {rtol})"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check("trivial", 10, |_g| {
+            count += 1;
+            Ok(())
+        });
+        assert_eq!(count, 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "CHECK_SEED=")]
+    fn failing_property_reports_seed() {
+        check("fails", 5, |g| {
+            let v = g.usize_in(0, 10);
+            ensure(v > 100, format!("v={v} not > 100"))
+        });
+    }
+
+    #[test]
+    fn generators_in_bounds() {
+        check("bounds", 50, |g| {
+            let n = g.usize_in(3, 9);
+            ensure(n >= 3 && n <= 9, format!("n={n}"))?;
+            let f = g.f32_in(-1.0, 1.0);
+            ensure((-1.0..1.0).contains(&f), format!("f={f}"))?;
+            let m = g.matrix(4, 5);
+            ensure(m.shape() == (4, 5), "matrix shape")
+        });
+    }
+
+    #[test]
+    fn close_helper() {
+        assert!(close(1.0, 1.0 + 1e-9, 1e-6, "x").is_ok());
+        assert!(close(1.0, 2.0, 1e-6, "x").is_err());
+    }
+}

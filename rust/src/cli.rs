@@ -1,0 +1,207 @@
+//! Dependency-free CLI argument parser (no clap offline).
+//!
+//! Supports subcommands, `--flag`, `--key value` / `--key=value`, and
+//! positional arguments, with generated help text.  Deliberately small:
+//! exactly what the `smoothrot` binary and the examples need.
+
+use std::collections::BTreeMap;
+
+/// One option specification.
+#[derive(Clone, Debug)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub is_flag: bool,
+}
+
+/// A parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Parsed {
+    pub values: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+    pub positionals: Vec<String>,
+}
+
+impl Parsed {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<Option<usize>, String> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(v) => v.parse().map(Some).map_err(|_| format!("--{name}: expected integer, got {v:?}")),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<Option<f64>, String> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(v) => v.parse().map(Some).map_err(|_| format!("--{name}: expected number, got {v:?}")),
+        }
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+/// Command definition: name, summary, options.
+pub struct Command {
+    pub name: &'static str,
+    pub summary: &'static str,
+    pub opts: Vec<OptSpec>,
+}
+
+impl Command {
+    pub fn new(name: &'static str, summary: &'static str) -> Self {
+        Self { name, summary, opts: Vec::new() }
+    }
+
+    pub fn opt(mut self, name: &'static str, help: &'static str, default: Option<&'static str>) -> Self {
+        self.opts.push(OptSpec { name, help, default, is_flag: false });
+        self
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, help, default: None, is_flag: true });
+        self
+    }
+
+    /// Parse arguments following the subcommand name.
+    pub fn parse(&self, args: &[String]) -> Result<Parsed, String> {
+        let mut out = Parsed::default();
+        // seed defaults
+        for o in &self.opts {
+            if let Some(d) = o.default {
+                out.values.insert(o.name.to_string(), d.to_string());
+            }
+        }
+        let mut i = 0;
+        while i < args.len() {
+            let a = &args[i];
+            if let Some(stripped) = a.strip_prefix("--") {
+                let (key, inline_val) = match stripped.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let spec = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == key)
+                    .ok_or_else(|| format!("unknown option --{key} (see --help)"))?;
+                if spec.is_flag {
+                    if inline_val.is_some() {
+                        return Err(format!("--{key} is a flag and takes no value"));
+                    }
+                    out.flags.push(key);
+                } else {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            args.get(i).cloned().ok_or_else(|| format!("--{key} needs a value"))?
+                        }
+                    };
+                    out.values.insert(key, val);
+                }
+            } else {
+                out.positionals.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(out)
+    }
+
+    /// Help text for this command.
+    pub fn help(&self) -> String {
+        let mut s = format!("{} — {}\n\noptions:\n", self.name, self.summary);
+        for o in &self.opts {
+            let kind = if o.is_flag { "" } else { " <value>" };
+            let def = o.default.map(|d| format!(" [default: {d}]")).unwrap_or_default();
+            s.push_str(&format!("  --{}{}\n      {}{}\n", o.name, kind, o.help, def));
+        }
+        s
+    }
+}
+
+/// Top-level application: dispatches subcommands.
+pub struct App {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub commands: Vec<Command>,
+}
+
+impl App {
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\nusage: {} <command> [options]\n\ncommands:\n", self.name, self.about, self.name);
+        for c in &self.commands {
+            s.push_str(&format!("  {:<12} {}\n", c.name, c.summary));
+        }
+        s.push_str("\nrun `<command> --help` for per-command options\n");
+        s
+    }
+
+    pub fn find(&self, name: &str) -> Option<&Command> {
+        self.commands.iter().find(|c| c.name == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cmd() -> Command {
+        Command::new("analyze", "run the analysis")
+            .opt("layers", "layer count", Some("32"))
+            .opt("alpha", "migration strength", Some("0.5"))
+            .flag("verbose", "print more")
+    }
+
+    fn args(v: &[&str]) -> Vec<String> {
+        v.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_applied() {
+        let p = cmd().parse(&args(&[])).unwrap();
+        assert_eq!(p.get("layers"), Some("32"));
+        assert_eq!(p.get_f64("alpha").unwrap(), Some(0.5));
+        assert!(!p.has_flag("verbose"));
+    }
+
+    #[test]
+    fn key_value_styles() {
+        let p = cmd().parse(&args(&["--layers", "16", "--alpha=0.7", "--verbose"])).unwrap();
+        assert_eq!(p.get_usize("layers").unwrap(), Some(16));
+        assert_eq!(p.get_f64("alpha").unwrap(), Some(0.7));
+        assert!(p.has_flag("verbose"));
+    }
+
+    #[test]
+    fn positionals_collected() {
+        let p = cmd().parse(&args(&["input.bin", "--layers", "8", "out.csv"])).unwrap();
+        assert_eq!(p.positionals, vec!["input.bin", "out.csv"]);
+    }
+
+    #[test]
+    fn errors_are_useful() {
+        assert!(cmd().parse(&args(&["--nope"])).is_err());
+        assert!(cmd().parse(&args(&["--layers"])).is_err());
+        assert!(cmd().parse(&args(&["--verbose=1"])).is_err());
+        let p = cmd().parse(&args(&["--layers", "abc"])).unwrap();
+        assert!(p.get_usize("layers").is_err());
+    }
+
+    #[test]
+    fn help_mentions_options() {
+        let h = cmd().help();
+        assert!(h.contains("--layers"));
+        assert!(h.contains("default: 32"));
+    }
+}

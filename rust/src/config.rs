@@ -1,0 +1,248 @@
+//! Typed experiment configuration + key=value config-file parser.
+//!
+//! Mirrors `python/compile/config.py` (the manifest embeds the python
+//! dataclass verbatim; [`ExperimentConfig::from_manifest`] reads it back
+//! so the rust side always analyzes with the exact parameters the
+//! artifacts were built with).  A small `key = value` file format (with
+//! `#` comments) allows overriding runtime knobs — worker counts, sweep
+//! ranges — without recompiling.
+
+use crate::jsonio::Json;
+use std::collections::BTreeMap;
+
+/// The four recorded module kinds in paper order.
+pub const MODULES: [&str; 4] = ["k_proj", "o_proj", "gate_proj", "down_proj"];
+
+/// Architecture + quantization parameters (the python side's source of
+/// truth, read back from the manifest).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelConfig {
+    pub n_layers: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub d_ffn: usize,
+    pub vocab: usize,
+    pub seq_len: usize,
+    pub seed: u64,
+    pub bits: u32,
+    pub alpha: f64,
+    pub massive_layers: Vec<usize>,
+    pub tail_layer: usize,
+}
+
+impl Default for ModelConfig {
+    fn default() -> Self {
+        Self {
+            n_layers: 32,
+            d_model: 256,
+            n_heads: 8,
+            d_ffn: 704,
+            vocab: 512,
+            seq_len: 128,
+            seed: 1234,
+            bits: 4,
+            alpha: 0.5,
+            massive_layers: vec![1, 30],
+            tail_layer: 31,
+        }
+    }
+}
+
+impl ModelConfig {
+    /// (c_in, c_out) of the weight fed by the recorded module input.
+    pub fn module_shape(&self, module: &str) -> Option<(usize, usize)> {
+        let (d, f) = (self.d_model, self.d_ffn);
+        match module {
+            "k_proj" | "o_proj" => Some((d, d)),
+            "gate_proj" => Some((d, f)),
+            "down_proj" => Some((f, d)),
+            _ => None,
+        }
+    }
+
+    /// Parse the `config` object embedded in `manifest.json`.
+    pub fn from_manifest(manifest: &Json) -> Result<Self, String> {
+        let c = manifest.get("config").ok_or("manifest missing 'config'")?;
+        let u = |k: &str| -> Result<usize, String> {
+            c.get(k).and_then(Json::as_usize).ok_or(format!("config missing {k}"))
+        };
+        let f = |k: &str| -> Result<f64, String> {
+            c.get(k).and_then(Json::as_f64).ok_or(format!("config missing {k}"))
+        };
+        Ok(Self {
+            n_layers: u("n_layers")?,
+            d_model: u("d_model")?,
+            n_heads: u("n_heads")?,
+            d_ffn: u("d_ffn")?,
+            vocab: u("vocab")?,
+            seq_len: u("seq_len")?,
+            seed: u("seed")? as u64,
+            bits: u("bits")? as u32,
+            alpha: f("alpha")?,
+            massive_layers: c
+                .get("massive_layers")
+                .and_then(Json::as_arr)
+                .map(|a| a.iter().filter_map(Json::as_usize).collect())
+                .unwrap_or_default(),
+            tail_layer: u("tail_layer")?,
+        })
+    }
+}
+
+/// Runtime knobs for the coordinator and sweeps.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RunConfig {
+    /// Worker threads in the coordinator pool.
+    pub workers: usize,
+    /// Bounded job-queue capacity (backpressure threshold).
+    pub queue_cap: usize,
+    /// Directory holding the AOT artifacts.
+    pub artifacts_dir: String,
+    /// Output directory for reports.
+    pub report_dir: String,
+    /// Alpha sweep grid for the Sec. IV-C experiment.
+    pub alpha_grid: Vec<f64>,
+    /// Bit-width sweep for the extension experiment.
+    pub bits_grid: Vec<u32>,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        Self {
+            workers: 2,
+            queue_cap: 64,
+            artifacts_dir: "artifacts".into(),
+            report_dir: "reports".into(),
+            alpha_grid: vec![0.3, 0.4, 0.5, 0.6, 0.65, 0.7, 0.8, 0.9],
+            bits_grid: vec![2, 3, 4, 6, 8],
+        }
+    }
+}
+
+impl RunConfig {
+    /// Parse `key = value` lines (# comments, blank lines ok).
+    pub fn parse(text: &str) -> Result<Self, String> {
+        let mut cfg = Self::default();
+        let map = parse_kv(text)?;
+        for (k, v) in &map {
+            match k.as_str() {
+                "workers" => cfg.workers = parse_num(k, v)?,
+                "queue_cap" => cfg.queue_cap = parse_num(k, v)?,
+                "artifacts_dir" => cfg.artifacts_dir = v.clone(),
+                "report_dir" => cfg.report_dir = v.clone(),
+                "alpha_grid" => {
+                    cfg.alpha_grid = v
+                        .split(',')
+                        .map(|s| s.trim().parse::<f64>().map_err(|_| format!("bad alpha {s:?}")))
+                        .collect::<Result<_, _>>()?
+                }
+                "bits_grid" => {
+                    cfg.bits_grid = v
+                        .split(',')
+                        .map(|s| s.trim().parse::<u32>().map_err(|_| format!("bad bits {s:?}")))
+                        .collect::<Result<_, _>>()?
+                }
+                _ => return Err(format!("unknown config key {k:?}")),
+            }
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.workers == 0 {
+            return Err("workers must be >= 1".into());
+        }
+        if self.queue_cap == 0 {
+            return Err("queue_cap must be >= 1".into());
+        }
+        if self.alpha_grid.iter().any(|&a| !(0.0..=1.0).contains(&a)) {
+            return Err("alpha_grid entries must be in [0, 1]".into());
+        }
+        if self.bits_grid.iter().any(|&b| !(2..=16).contains(&b)) {
+            return Err("bits_grid entries must be in [2, 16]".into());
+        }
+        Ok(())
+    }
+
+    /// Load from a file path.
+    pub fn load(path: &str) -> Result<Self, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("read {path}: {e}"))?;
+        Self::parse(&text)
+    }
+}
+
+fn parse_kv(text: &str) -> Result<BTreeMap<String, String>, String> {
+    let mut map = BTreeMap::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let (k, v) = line
+            .split_once('=')
+            .ok_or(format!("line {}: expected key = value, got {raw:?}", lineno + 1))?;
+        map.insert(k.trim().to_string(), v.trim().to_string());
+    }
+    Ok(map)
+}
+
+fn parse_num<T: std::str::FromStr>(k: &str, v: &str) -> Result<T, String> {
+    v.parse().map_err(|_| format!("{k}: expected number, got {v:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::jsonio;
+
+    #[test]
+    fn model_config_module_shapes() {
+        let c = ModelConfig::default();
+        assert_eq!(c.module_shape("k_proj"), Some((256, 256)));
+        assert_eq!(c.module_shape("gate_proj"), Some((256, 704)));
+        assert_eq!(c.module_shape("down_proj"), Some((704, 256)));
+        assert_eq!(c.module_shape("nope"), None);
+    }
+
+    #[test]
+    fn model_config_from_manifest_json() {
+        let manifest = jsonio::parse(
+            r#"{"config": {"n_layers": 4, "d_model": 64, "n_heads": 4, "d_ffn": 176,
+                "vocab": 64, "seq_len": 32, "seed": 7, "bits": 4, "alpha": 0.5,
+                "massive_layers": [1, 2], "tail_layer": 3}}"#,
+        )
+        .unwrap();
+        let c = ModelConfig::from_manifest(&manifest).unwrap();
+        assert_eq!(c.n_layers, 4);
+        assert_eq!(c.massive_layers, vec![1, 2]);
+        assert_eq!(c.alpha, 0.5);
+    }
+
+    #[test]
+    fn from_manifest_missing_field() {
+        let manifest = jsonio::parse(r#"{"config": {"n_layers": 4}}"#).unwrap();
+        assert!(ModelConfig::from_manifest(&manifest).is_err());
+    }
+
+    #[test]
+    fn run_config_parse_and_defaults() {
+        let cfg = RunConfig::parse(
+            "# comment\nworkers = 4\nalpha_grid = 0.3, 0.5, 0.7\nartifacts_dir = /tmp/a\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.workers, 4);
+        assert_eq!(cfg.alpha_grid, vec![0.3, 0.5, 0.7]);
+        assert_eq!(cfg.artifacts_dir, "/tmp/a");
+        assert_eq!(cfg.queue_cap, RunConfig::default().queue_cap);
+    }
+
+    #[test]
+    fn run_config_rejects_bad_values() {
+        assert!(RunConfig::parse("workers = 0").is_err());
+        assert!(RunConfig::parse("alpha_grid = 1.5").is_err());
+        assert!(RunConfig::parse("bits_grid = 1").is_err());
+        assert!(RunConfig::parse("nonsense = 1").is_err());
+        assert!(RunConfig::parse("no equals sign").is_err());
+    }
+}

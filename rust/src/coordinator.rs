@@ -1,0 +1,444 @@
+//! Experiment coordinator — the L3 orchestration layer.
+//!
+//! The paper's evaluation is a sweep over (layer × module × transform).
+//! This module turns that into a streaming pipeline:
+//!
+//! ```text
+//!   producer (slices X from the capture stacks, W from the weight
+//!   stacks)  --bounded queue (backpressure)-->  worker pool  -->
+//!   result channel --> aggregator (ExperimentGrid)
+//! ```
+//!
+//! Workers are generic over an [`Executor`].  Two implementations exist:
+//!
+//! * [`NativeExecutor`] — the pure-rust mirror (Send; any worker count),
+//! * `PjrtExecutor` (constructed inside a worker thread via the factory,
+//!   see [`run_jobs`]) — the AOT/PJRT hot path.  PJRT handles are not
+//!   `Send`, so the factory pattern builds one runtime per worker thread
+//!   and the executables are compiled once per worker.
+//!
+//! Invariants (enforced by the property tests in `tests/`):
+//! every submitted job completes exactly once; results are keyed
+//! correctly regardless of worker count or queue capacity; the bounded
+//! queue never holds more than `queue_cap` jobs.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::metrics::{self, Channels};
+use crate::quant;
+use crate::runtime::AnalyzeOut;
+use crate::tensor::{Matrix, Stack};
+use crate::transforms::{self, Mode};
+
+/// One unit of work: analyze a (layer, module) tensor pair.
+#[derive(Clone, Debug)]
+pub struct Job {
+    pub id: u64,
+    pub layer: usize,
+    pub module: &'static str,
+    pub x: Matrix,
+    pub w: Matrix,
+    /// Migration strength for smoothing modes.
+    pub alpha: f32,
+    /// Quantization bit width.
+    pub bits: u32,
+}
+
+/// Completed job with provenance + timing.
+#[derive(Clone, Debug)]
+pub struct JobResult {
+    pub id: u64,
+    pub layer: usize,
+    pub module: &'static str,
+    pub out: AnalyzeOut,
+    pub worker: usize,
+    pub micros: u64,
+}
+
+/// Anything that can process a job into per-mode stats.
+pub trait Executor {
+    fn run(&mut self, job: &Job) -> Result<AnalyzeOut, String>;
+}
+
+/// Pure-rust analysis executor (mirror of the `analyze_*` artifacts).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NativeExecutor;
+
+impl NativeExecutor {
+    /// Analyze one (X, W) pair across all four transform modes.
+    pub fn analyze(x: &Matrix, w: &Matrix, bits: u32, alpha: f32) -> Result<AnalyzeOut, String> {
+        let mut out = AnalyzeOut::default();
+        for mode in Mode::ALL {
+            let (xh, wh) = transforms::apply(mode, x, w, alpha)?;
+            let i = mode.index();
+            out.errors[i] = quant::quant_error_fused(&xh, &wh, bits);
+            out.act_difficulty[i] = metrics::quant_difficulty(&xh, Channels::Columns);
+            out.w_difficulty[i] = metrics::quant_difficulty(&wh, Channels::Rows);
+            out.act_absmax[i] = xh.abs_max() as f64;
+        }
+        Ok(out)
+    }
+}
+
+impl Executor for NativeExecutor {
+    fn run(&mut self, job: &Job) -> Result<AnalyzeOut, String> {
+        Self::analyze(&job.x, &job.w, job.bits, job.alpha)
+    }
+}
+
+/// Coordinator runtime metrics.
+#[derive(Clone, Debug, Default)]
+pub struct RunMetrics {
+    pub jobs: usize,
+    pub errors: usize,
+    pub wall_micros: u64,
+    pub exec_micros_total: u64,
+    pub per_worker_jobs: Vec<usize>,
+    /// Highest number of jobs simultaneously queued (backpressure probe).
+    pub max_queue_depth: usize,
+}
+
+impl RunMetrics {
+    /// Fraction of wall time NOT spent inside executors — the
+    /// coordination overhead the perf pass drives toward zero.
+    pub fn overhead_fraction(&self, workers: usize) -> f64 {
+        if self.wall_micros == 0 {
+            return 0.0;
+        }
+        let busy = self.exec_micros_total as f64 / workers.max(1) as f64;
+        (1.0 - busy / self.wall_micros as f64).max(0.0)
+    }
+}
+
+/// Pool configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct PoolConfig {
+    pub workers: usize,
+    pub queue_cap: usize,
+}
+
+impl Default for PoolConfig {
+    fn default() -> Self {
+        Self { workers: 2, queue_cap: 64 }
+    }
+}
+
+/// Run `jobs` through a worker pool; `make_executor(worker_idx)` is
+/// invoked *inside* each worker thread, so non-Send executors (PJRT)
+/// work with `workers == 1..n`, each owning its own runtime.
+pub fn run_jobs<E, F>(
+    jobs: Vec<Job>,
+    cfg: PoolConfig,
+    make_executor: F,
+) -> Result<(Vec<JobResult>, RunMetrics), String>
+where
+    E: Executor,
+    F: Fn(usize) -> Result<E, String> + Send + Sync + 'static,
+{
+    assert!(cfg.workers >= 1, "need at least one worker");
+    let n_jobs = jobs.len();
+    let start = Instant::now();
+
+    let (job_tx, job_rx) = mpsc::sync_channel::<Job>(cfg.queue_cap);
+    let job_rx = Arc::new(Mutex::new(job_rx));
+    let (res_tx, res_rx) = mpsc::channel::<Result<JobResult, String>>();
+    let make_executor = Arc::new(make_executor);
+
+    let depth = Arc::new(AtomicUsize::new(0));
+    let max_depth = Arc::new(AtomicUsize::new(0));
+
+    let mut handles = Vec::with_capacity(cfg.workers);
+    for widx in 0..cfg.workers {
+        let rx = Arc::clone(&job_rx);
+        let tx = res_tx.clone();
+        let mk = Arc::clone(&make_executor);
+        let depth = Arc::clone(&depth);
+        handles.push(std::thread::spawn(move || {
+            // On init failure the worker must keep DRAINING the queue
+            // (reporting an error per job) — exiting immediately would
+            // leave the producer blocked on the bounded queue forever.
+            let mut exec = match mk(widx) {
+                Ok(e) => Some(e),
+                Err(msg) => {
+                    let _ = tx.send(Err(format!("worker {widx}: executor init failed: {msg}")));
+                    None
+                }
+            };
+            loop {
+                let job = {
+                    let guard = rx.lock().expect("job queue poisoned");
+                    guard.recv()
+                };
+                let job = match job {
+                    Ok(j) => j,
+                    Err(_) => break, // producer closed, queue drained
+                };
+                depth.fetch_sub(1, Ordering::SeqCst);
+                let t0 = Instant::now();
+                let outcome = match exec.as_mut() {
+                    Some(e) => e.run(&job).map(|out| JobResult {
+                        id: job.id,
+                        layer: job.layer,
+                        module: job.module,
+                        out,
+                        worker: widx,
+                        micros: t0.elapsed().as_micros() as u64,
+                    }),
+                    None => Err(format!("worker {widx}: job {} dropped (executor init failed)", job.id)),
+                };
+                if tx.send(outcome).is_err() {
+                    break;
+                }
+            }
+        }));
+    }
+    drop(res_tx);
+
+    // Producer: feed jobs with backpressure (sync_channel blocks at cap).
+    let producer_depth = Arc::clone(&depth);
+    let producer_max = Arc::clone(&max_depth);
+    let producer = std::thread::spawn(move || {
+        for job in jobs {
+            let d = producer_depth.fetch_add(1, Ordering::SeqCst) + 1;
+            producer_max.fetch_max(d, Ordering::SeqCst);
+            if job_tx.send(job).is_err() {
+                break;
+            }
+        }
+        // dropping job_tx closes the queue
+    });
+
+    let mut results = Vec::with_capacity(n_jobs);
+    let mut metrics = RunMetrics { per_worker_jobs: vec![0; cfg.workers], ..Default::default() };
+    let mut first_error: Option<String> = None;
+    for outcome in res_rx.iter() {
+        match outcome {
+            Ok(r) => {
+                metrics.jobs += 1;
+                metrics.exec_micros_total += r.micros;
+                metrics.per_worker_jobs[r.worker] += 1;
+                results.push(r);
+            }
+            Err(msg) => {
+                metrics.errors += 1;
+                if first_error.is_none() {
+                    first_error = Some(msg);
+                }
+            }
+        }
+    }
+    producer.join().map_err(|_| "producer thread panicked".to_string())?;
+    for h in handles {
+        h.join().map_err(|_| "worker thread panicked".to_string())?;
+    }
+    metrics.wall_micros = start.elapsed().as_micros() as u64;
+    metrics.max_queue_depth = max_depth.load(Ordering::SeqCst);
+
+    if let Some(msg) = first_error {
+        return Err(format!("{} job(s) failed; first error: {msg}", metrics.errors));
+    }
+    if results.len() != n_jobs {
+        return Err(format!("lost results: {} of {n_jobs} completed", results.len()));
+    }
+    results.sort_by_key(|r| r.id);
+    Ok((results, metrics))
+}
+
+/// Aggregated experiment output: `[module][layer] -> AnalyzeOut`.
+#[derive(Clone, Debug, Default)]
+pub struct ExperimentGrid {
+    pub cells: BTreeMap<&'static str, Vec<Option<AnalyzeOut>>>,
+    pub n_layers: usize,
+}
+
+impl ExperimentGrid {
+    pub fn new(n_layers: usize) -> Self {
+        let mut cells = BTreeMap::new();
+        for m in crate::MODULES {
+            cells.insert(m, vec![None; n_layers]);
+        }
+        Self { cells, n_layers }
+    }
+
+    pub fn insert(&mut self, r: &JobResult) {
+        if let Some(row) = self.cells.get_mut(r.module) {
+            row[r.layer] = Some(r.out);
+        }
+    }
+
+    pub fn from_results(n_layers: usize, results: &[JobResult]) -> Self {
+        let mut g = Self::new(n_layers);
+        for r in results {
+            g.insert(r);
+        }
+        g
+    }
+
+    pub fn get(&self, module: &str, layer: usize) -> Option<&AnalyzeOut> {
+        self.cells.get(module)?.get(layer)?.as_ref()
+    }
+
+    /// Series of one statistic across layers for a module.
+    pub fn series(&self, module: &str, f: impl Fn(&AnalyzeOut) -> f64) -> Vec<f64> {
+        self.cells
+            .get(module)
+            .map(|row| row.iter().map(|c| c.as_ref().map(&f).unwrap_or(f64::NAN)).collect())
+            .unwrap_or_default()
+    }
+
+    /// The paper's §IV-B correlation: Pearson(error, act_difficulty²) for
+    /// mode `none`, excluding the massive/tail outlier cells.
+    pub fn headline_correlation(&self, exclude: &[(&str, usize)]) -> f64 {
+        let mut errs = Vec::new();
+        let mut diffs_sq = Vec::new();
+        for (&module, row) in &self.cells {
+            for (layer, cell) in row.iter().enumerate() {
+                if exclude.iter().any(|&(m, l)| m == module && l == layer) {
+                    continue;
+                }
+                if let Some(out) = cell {
+                    errs.push(out.errors[0]);
+                    diffs_sq.push(out.act_difficulty[0] * out.act_difficulty[0]);
+                }
+            }
+        }
+        metrics::pearson(&errs, &diffs_sq)
+    }
+}
+
+/// Build the standard (layer × module) job list from capture stacks and
+/// weight stacks.
+pub fn build_jobs(
+    stacks: &BTreeMap<&'static str, &Stack>,
+    weights: &BTreeMap<&'static str, &Stack>,
+    alpha: f32,
+    bits: u32,
+) -> Vec<Job> {
+    let mut jobs = Vec::new();
+    let mut id = 0u64;
+    for module in crate::MODULES {
+        let xs = stacks[module];
+        let ws = weights[module];
+        assert_eq!(xs.layers(), ws.layers(), "{module}: stack layer mismatch");
+        for layer in 0..xs.layers() {
+            jobs.push(Job { id, layer, module, x: xs.layer(layer), w: ws.layer(layer), alpha, bits });
+            id += 1;
+        }
+    }
+    jobs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn small_jobs(n: usize, seed: u64) -> Vec<Job> {
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|i| Job {
+                id: i as u64,
+                layer: i % 4,
+                module: crate::MODULES[i % 4],
+                x: Matrix::from_vec(8, 16, rng.normals_f32(8 * 16)),
+                w: Matrix::from_vec(16, 8, rng.normals_f32(16 * 8)),
+                alpha: 0.5,
+                bits: 4,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn all_jobs_complete_exactly_once() {
+        let jobs = small_jobs(20, 1);
+        let (results, m) =
+            run_jobs(jobs, PoolConfig { workers: 3, queue_cap: 4 }, |_| Ok(NativeExecutor)).unwrap();
+        assert_eq!(results.len(), 20);
+        assert_eq!(m.jobs, 20);
+        let mut ids: Vec<u64> = results.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), 20);
+    }
+
+    #[test]
+    fn queue_depth_bounded() {
+        struct SlowExec;
+        impl Executor for SlowExec {
+            fn run(&mut self, _job: &Job) -> Result<AnalyzeOut, String> {
+                std::thread::sleep(std::time::Duration::from_millis(1));
+                Ok(AnalyzeOut::default())
+            }
+        }
+        let jobs = small_jobs(40, 2);
+        let cap = 4;
+        let (_, m) = run_jobs(jobs, PoolConfig { workers: 2, queue_cap: cap }, |_| Ok(SlowExec)).unwrap();
+        // queue cap + jobs momentarily held by the two workers
+        assert!(m.max_queue_depth <= cap + 2 + 1, "depth {} exceeds bound", m.max_queue_depth);
+    }
+
+    #[test]
+    fn executor_errors_surface() {
+        struct FailExec;
+        impl Executor for FailExec {
+            fn run(&mut self, job: &Job) -> Result<AnalyzeOut, String> {
+                if job.id == 3 {
+                    Err("boom".into())
+                } else {
+                    Ok(AnalyzeOut::default())
+                }
+            }
+        }
+        let err = run_jobs(small_jobs(8, 3), PoolConfig::default(), |_| Ok(FailExec)).unwrap_err();
+        assert!(err.contains("boom"), "{err}");
+    }
+
+    #[test]
+    fn executor_init_failure_surfaces() {
+        let err = run_jobs(small_jobs(4, 4), PoolConfig { workers: 1, queue_cap: 2 }, |_| {
+            Err::<NativeExecutor, _>("no artifacts".to_string())
+        })
+        .unwrap_err();
+        assert!(err.contains("no artifacts"), "{err}");
+    }
+
+    #[test]
+    fn native_executor_produces_ordered_modes() {
+        // rotation must beat none on a systematic-outlier matrix
+        let mut rng = Rng::new(5);
+        let mut x = Matrix::from_vec(32, 64, rng.normals_f32(32 * 64));
+        for i in 0..32 {
+            x.row_mut(i)[7] *= 40.0;
+        }
+        let w = Matrix::from_vec(64, 16, rng.normals_f32(64 * 16));
+        let out = NativeExecutor::analyze(&x, &w, 4, 0.5).unwrap();
+        assert!(out.errors[2] < out.errors[0], "rotate {} vs none {}", out.errors[2], out.errors[0]);
+        assert!(out.act_difficulty[1] < out.act_difficulty[0]);
+    }
+
+    #[test]
+    fn grid_series_and_correlation() {
+        let jobs = small_jobs(16, 6);
+        let (results, _) = run_jobs(jobs, PoolConfig::default(), |_| Ok(NativeExecutor)).unwrap();
+        let grid = ExperimentGrid::from_results(4, &results);
+        let s = grid.series("k_proj", |o| o.errors[0]);
+        assert_eq!(s.len(), 4);
+        let corr = grid.headline_correlation(&[]);
+        assert!(corr.is_finite());
+    }
+
+    #[test]
+    fn single_worker_deterministic_order() {
+        let jobs = small_jobs(10, 7);
+        let (r1, _) = run_jobs(jobs.clone(), PoolConfig { workers: 1, queue_cap: 2 }, |_| Ok(NativeExecutor)).unwrap();
+        let (r2, _) = run_jobs(jobs, PoolConfig { workers: 1, queue_cap: 2 }, |_| Ok(NativeExecutor)).unwrap();
+        for (a, b) in r1.iter().zip(&r2) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.out.errors, b.out.errors);
+        }
+    }
+}

@@ -1,0 +1,60 @@
+//! # smoothrot
+//!
+//! Reproduction of *"Turning LLM Activations Quantization-Friendly"*
+//! (Czakó, Kertész, Szénási — 2025) as a three-layer Rust + JAX + Pallas
+//! stack: Pallas kernels (L1) and the SynLlama capture model (L2) are
+//! AOT-lowered to HLO text by `python/compile/aot.py`; this crate (L3)
+//! loads the artifacts through the PJRT C API and owns everything on the
+//! request path — scheduling, batching, metrics, reporting.
+//!
+//! The crate doubles as a *native mirror* of the math: [`quant`],
+//! [`transforms`] and [`metrics`] re-implement Eq. 1–9 of the paper in
+//! pure Rust, and the integration tests pin the PJRT path against the
+//! native path so neither can drift.
+//!
+//! ## Module map
+//!
+//! | module | role |
+//! |---|---|
+//! | [`tensor`] | dense f32 matrix substrate (matmul, reductions, slicing) |
+//! | [`rng`] | SplitMix64 / Xoshiro256++ deterministic PRNG |
+//! | [`quant`] | RTN symmetric quantizer, layer-wise error (Eq. 1–2) |
+//! | [`transforms`] | Hadamard construction + smoothing / rotation / smooth-rotation (Eq. 3–5) |
+//! | [`outlier`] | massive-outlier token model and Eq. 6–9 predictions |
+//! | [`metrics`] | channel magnitudes, quantization difficulty, kurtosis, Pearson |
+//! | [`synth`] | native activation generator mirroring SynLlama's profiles |
+//! | [`jsonio`] | minimal JSON value model + parser + writer |
+//! | [`config`] | typed experiment configuration + file parser |
+//! | [`cli`] | dependency-free argument parser |
+//! | [`check`] | proptest-lite property-testing harness |
+//! | [`runtime`] | PJRT client wrapper, artifact manifest, executable cache |
+//! | [`coordinator`] | job scheduler: worker pool, batching, backpressure |
+//! | [`report`] | figure/table emitters (CSV, ASCII charts, markdown) |
+//! | [`bench_harness`] | criterion-lite timing harness used by `cargo bench` |
+
+pub mod bench_harness;
+pub mod check;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod jsonio;
+pub mod metrics;
+pub mod outlier;
+pub mod quant;
+pub mod report;
+pub mod rng;
+pub mod runtime;
+pub mod synth;
+pub mod tensor;
+pub mod transforms;
+
+/// Crate version string (mirrors Cargo.toml).
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");
+
+/// The four transform modes, in the canonical artifact order.
+pub const MODES: [&str; 4] = ["none", "smooth", "rotate", "smooth_rotate"];
+
+/// The four recorded module kinds, in paper order.
+pub const MODULES: [&str; 4] = ["k_proj", "o_proj", "gate_proj", "down_proj"];
+pub mod pipeline;
+pub mod policy;

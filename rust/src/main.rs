@@ -1,0 +1,415 @@
+//! `smoothrot` — leader binary: CLI over the L3 coordinator.
+//!
+//! ```text
+//! smoothrot capture     run the SynLlama capture artifact, print stats
+//! smoothrot analyze     full (layer × module) sweep -> figure reports
+//! smoothrot figures     regenerate a specific paper figure (1..5)
+//! smoothrot sweep-alpha Sec. IV-C migration-strength sweep (native)
+//! smoothrot sweep-bits  bit-width ablation (native)
+//! smoothrot selfcheck   PJRT output vs golden.json + native mirror
+//! smoothrot serve       batching service demo over the coordinator
+//! ```
+
+use std::io::Write as _;
+
+use anyhow::{anyhow, bail, Context, Result};
+use smoothrot::cli::{App, Command};
+use smoothrot::coordinator::PoolConfig;
+use smoothrot::pipeline::{self, Backend};
+use smoothrot::report;
+use smoothrot::runtime::Runtime;
+use smoothrot::transforms::Mode;
+
+fn app() -> App {
+    App {
+        name: "smoothrot",
+        about: "quantization-difficulty analysis & smooth-rotation transforms (paper reproduction)",
+        commands: vec![
+            Command::new("capture", "run the SynLlama capture artifact and print per-layer stats")
+                .opt("artifacts", "artifacts directory", Some("artifacts")),
+            Command::new("analyze", "full layer x module sweep; writes figure reports")
+                .opt("artifacts", "artifacts directory", Some("artifacts"))
+                .opt("backend", "pjrt | native", Some("pjrt"))
+                .opt("workers", "worker threads", Some("2"))
+                .opt("queue-cap", "bounded queue capacity", Some("64"))
+                .opt("out", "report output directory", Some("reports")),
+            Command::new("figures", "regenerate one paper figure (1, 2, 3, 4 or 5)")
+                .opt("artifacts", "artifacts directory", Some("artifacts"))
+                .opt("fig", "figure number", Some("3"))
+                .opt("layer", "layer override for figs 1/2/5", None)
+                .opt("out", "report output directory", Some("reports")),
+            Command::new("sweep-alpha", "Sec. IV-C migration-strength sweep (native backend)")
+                .opt("artifacts", "artifacts directory", Some("artifacts"))
+                .opt("module", "module kind", Some("o_proj"))
+                .opt("grid", "comma-separated alphas", Some("0.3,0.4,0.5,0.6,0.65,0.7,0.8,0.9")),
+            Command::new("sweep-bits", "bit-width ablation 2..8 (native backend)")
+                .opt("artifacts", "artifacts directory", Some("artifacts"))
+                .opt("grid", "comma-separated bit widths", Some("2,3,4,6,8")),
+            Command::new("selfcheck", "verify PJRT outputs against golden.json and the native mirror")
+                .opt("artifacts", "artifacts directory", Some("artifacts"))
+                .opt("rtol", "relative tolerance (golden was built by a newer XLA)", Some("5e-2")),
+            Command::new("recommend", "emit a per-layer transform deployment policy (paper Sec. V)")
+                .opt("artifacts", "artifacts directory", Some("artifacts"))
+                .opt("backend", "pjrt | native", Some("pjrt"))
+                .opt("sr-margin", "min error ratio before adopting smooth-rotation", Some("1.25"))
+                .opt("out", "policy JSON output path", Some("reports/policy.json")),
+            Command::new("serve", "batching service demo: stream requests through the coordinator")
+                .opt("artifacts", "artifacts directory", Some("artifacts"))
+                .opt("requests", "number of synthetic requests", Some("64"))
+                .opt("workers", "worker threads", Some("2"))
+                .opt("queue-cap", "bounded queue capacity", Some("16")),
+        ],
+    }
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let app = app();
+    if args.is_empty() || args[0] == "--help" || args[0] == "-h" {
+        print!("{}", app.usage());
+        return;
+    }
+    let cmd_name = args[0].clone();
+    let Some(cmd) = app.find(&cmd_name) else {
+        eprintln!("unknown command {cmd_name:?}\n\n{}", app.usage());
+        std::process::exit(2);
+    };
+    if args.iter().any(|a| a == "--help") {
+        print!("{}", cmd.help());
+        return;
+    }
+    let parsed = match cmd.parse(&args[1..]) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("error: {e}\n\n{}", cmd.help());
+            std::process::exit(2);
+        }
+    };
+    let result = match cmd_name.as_str() {
+        "capture" => cmd_capture(&parsed),
+        "analyze" => cmd_analyze(&parsed),
+        "figures" => cmd_figures(&parsed),
+        "sweep-alpha" => cmd_sweep_alpha(&parsed),
+        "sweep-bits" => cmd_sweep_bits(&parsed),
+        "selfcheck" => cmd_selfcheck(&parsed),
+        "recommend" => cmd_recommend(&parsed),
+        "serve" => cmd_serve(&parsed),
+        _ => unreachable!(),
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn cmd_capture(p: &smoothrot::cli::Parsed) -> Result<()> {
+    let rt = Runtime::new(p.get_or("artifacts", "artifacts"))?;
+    let t0 = std::time::Instant::now();
+    let cap = rt.capture()?;
+    println!("capture executed in {:?}", t0.elapsed());
+    for (name, stack) in [
+        ("attn_in", &cap.attn_in),
+        ("o_in", &cap.o_in),
+        ("ffn_in", &cap.ffn_in),
+        ("down_in", &cap.down_in),
+    ] {
+        let mut maxima = Vec::new();
+        for l in 0..stack.layers() {
+            maxima.push(stack.layer(l).abs_max() as f64);
+        }
+        let s = smoothrot::metrics::Summary::of(&maxima);
+        println!(
+            "{name:>8}: [L={} n={} c={}]  absmax per layer: min {:.1} mean {:.1} max {:.1}",
+            stack.layers(),
+            stack.rows(),
+            stack.cols(),
+            s.min,
+            s.mean,
+            s.max
+        );
+    }
+    Ok(())
+}
+
+fn write_report(dir: &str, file: &str, content: &str) -> Result<()> {
+    std::fs::create_dir_all(dir).with_context(|| format!("mkdir {dir}"))?;
+    let path = format!("{dir}/{file}");
+    std::fs::write(&path, content).with_context(|| format!("write {path}"))?;
+    println!("wrote {path}");
+    Ok(())
+}
+
+fn cmd_analyze(p: &smoothrot::cli::Parsed) -> Result<()> {
+    let artifacts = p.get_or("artifacts", "artifacts");
+    let backend = Backend::from_name(&p.get_or("backend", "pjrt"))?;
+    let pool = PoolConfig {
+        workers: p.get_usize("workers").map_err(|e| anyhow!(e))?.unwrap_or(2),
+        queue_cap: p.get_usize("queue-cap").map_err(|e| anyhow!(e))?.unwrap_or(64),
+    };
+    let out_dir = p.get_or("out", "reports");
+
+    let t0 = std::time::Instant::now();
+    let run = pipeline::run_full_experiment(&artifacts, pool, backend)?;
+    println!(
+        "analyze: {} jobs in {:?} ({} workers, backend {:?}, coordination overhead {:.1}%)",
+        run.metrics.jobs,
+        t0.elapsed(),
+        pool.workers,
+        backend,
+        100.0 * run.metrics.overhead_fraction(pool.workers)
+    );
+
+    let rt = Runtime::new(&artifacts)?;
+    let cfg = &rt.manifest().config;
+    write_report(&out_dir, "fig3_layerwise.csv", &report::layerwise_csv(&run.grid, |o, _| o.errors[0]))?;
+    write_report(&out_dir, "fig3.md", &report::fig3_report(&run.grid))?;
+    write_report(&out_dir, "fig4.md", &report::fig4_report(&run.grid))?;
+    write_report(
+        &out_dir,
+        "fig4_errors.csv",
+        &report::layerwise_csv(&run.grid, |o, i| o.errors[i]),
+    )?;
+    let (corr, text) = report::correlation_report(&run.grid, &cfg.massive_layers, cfg.tail_layer);
+    write_report(&out_dir, "correlation.md", &text)?;
+    println!("{text}");
+    println!(
+        "down_proj massive-layer errors:\n{}",
+        report::mode_layer_table(&run.grid, "down_proj", &cfg.massive_layers)
+    );
+    if corr < 0.9 {
+        bail!("headline correlation {corr:.3} is suspiciously low — check artifacts");
+    }
+    Ok(())
+}
+
+fn cmd_figures(p: &smoothrot::cli::Parsed) -> Result<()> {
+    let artifacts = p.get_or("artifacts", "artifacts");
+    let fig = p.get_usize("fig").map_err(|e| anyhow!(e))?.unwrap_or(3);
+    let out_dir = p.get_or("out", "reports");
+    let rt = Runtime::new(&artifacts)?;
+    let cfg = rt.manifest().config.clone();
+
+    match fig {
+        1 | 2 => {
+            // Fig 1: k_proj layer 1; Fig 2: down_proj layer 30.
+            let (module, default_layer): (&'static str, usize) =
+                if fig == 1 { ("k_proj", 1) } else { ("down_proj", 30) };
+            let layer = p.get_usize("layer").map_err(|e| anyhow!(e))?.unwrap_or(default_layer);
+            let workload = pipeline::load_workload(&rt)?;
+            let (x, w) = workload.pair(&rt, module, layer);
+            let mut profiles = Vec::new();
+            for mode in Mode::ALL {
+                let (xh, _) = rt.transform(mode, &x, &w)?;
+                profiles.push((mode, report::sorted_channel_magnitudes(&xh)));
+            }
+            let csv = report::magnitude_profile_csv(&profiles);
+            write_report(&out_dir, &format!("fig{fig}_{module}_{layer}.csv"), &csv)?;
+            for (mode, prof) in &profiles {
+                println!(
+                    "{:>14}: top channel magnitudes {:?}",
+                    mode.name(),
+                    prof.iter().take(5).map(|v| format!("{v:.1}")).collect::<Vec<_>>()
+                );
+            }
+        }
+        3 | 4 => {
+            let run = pipeline::run_full_experiment(&artifacts, PoolConfig::default(), Backend::Pjrt)?;
+            let text = if fig == 3 { report::fig3_report(&run.grid) } else { report::fig4_report(&run.grid) };
+            write_report(&out_dir, &format!("fig{fig}.md"), &text)?;
+            println!("{text}");
+        }
+        5 => {
+            let layer = p.get_usize("layer").map_err(|e| anyhow!(e))?.unwrap_or(30);
+            let workload = pipeline::load_workload(&rt)?;
+            let (x, w) = workload.pair(&rt, "down_proj", layer);
+            let mut curves = Vec::new();
+            for mode in [Mode::Rotate, Mode::SmoothRotate] {
+                let (xh, _) = rt.transform(mode, &x, &w)?;
+                curves.push((mode, report::fig5_data(&xh, cfg.bits)));
+            }
+            write_report(&out_dir, &format!("fig5_down_proj_{layer}.csv"), &report::fig5_csv(&curves))?;
+            println!("{}", report::fig5_report(&curves));
+        }
+        n => bail!("unknown figure {n} (want 1..5)"),
+    }
+    Ok(())
+}
+
+fn cmd_sweep_alpha(p: &smoothrot::cli::Parsed) -> Result<()> {
+    let rt = Runtime::new(p.get_or("artifacts", "artifacts"))?;
+    let module: &'static str = smoothrot::MODULES
+        .into_iter()
+        .find(|m| *m == p.get_or("module", "o_proj"))
+        .context("unknown module")?;
+    let grid: Vec<f64> = p
+        .get_or("grid", "0.5")
+        .split(',')
+        .map(|s| s.trim().parse::<f64>().map_err(|_| anyhow!("bad alpha {s:?}")))
+        .collect::<Result<_>>()?;
+    let workload = pipeline::load_workload(&rt)?;
+    let cfg = rt.manifest().config.clone();
+    let sweep = pipeline::alpha_sweep(&rt, &workload, module, &grid, cfg.bits)?;
+
+    // baseline: untransformed total error
+    let mut base_total = 0.0;
+    for layer in 0..cfg.n_layers {
+        let (x, w) = workload.pair(&rt, module, layer);
+        base_total += smoothrot::quant::quant_error(&x, &w, cfg.bits);
+    }
+    println!("# alpha sweep on {module} (Sec. IV-C)\nuntransformed total error: {base_total:.3e}");
+    let labels: Vec<String> = sweep.iter().map(|(a, _)| format!("alpha={a}")).collect();
+    let totals: Vec<f64> = sweep.iter().map(|(_, errs)| errs.iter().sum()).collect();
+    println!("{}", report::ascii_chart("smooth total error vs alpha", &labels, &totals, 40));
+    let best = sweep
+        .iter()
+        .zip(&totals)
+        .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|((a, _), t)| (*a, *t))
+        .unwrap();
+    println!("best alpha: {} (total {:.3e}; {} baseline)", best.0, best.1, if best.1 < base_total { "beats" } else { "does NOT beat" });
+    Ok(())
+}
+
+fn cmd_sweep_bits(p: &smoothrot::cli::Parsed) -> Result<()> {
+    let rt = Runtime::new(p.get_or("artifacts", "artifacts"))?;
+    let grid: Vec<u32> = p
+        .get_or("grid", "4")
+        .split(',')
+        .map(|s| s.trim().parse::<u32>().map_err(|_| anyhow!("bad bits {s:?}")))
+        .collect::<Result<_>>()?;
+    let workload = pipeline::load_workload(&rt)?;
+    let sweep = pipeline::bits_sweep(&rt, &workload, &grid)?;
+    println!("# bit-width ablation (total error over all modules/layers)\n");
+    println!("| bits | none | smooth | rotate | smooth_rotate |");
+    println!("|---|---|---|---|---|");
+    for (bits, totals) in &sweep {
+        println!(
+            "| {bits} | {:.3e} | {:.3e} | {:.3e} | {:.3e} |",
+            totals[0], totals[1], totals[2], totals[3]
+        );
+    }
+    Ok(())
+}
+
+fn cmd_selfcheck(p: &smoothrot::cli::Parsed) -> Result<()> {
+    let artifacts = p.get_or("artifacts", "artifacts");
+    let rtol = p.get_f64("rtol").map_err(|e| anyhow!(e))?.unwrap_or(5e-2);
+    let rt = Runtime::new(&artifacts)?;
+    let golden_path = format!("{artifacts}/golden.json");
+    let golden = smoothrot::jsonio::parse(
+        &std::fs::read_to_string(&golden_path).with_context(|| format!("reading {golden_path}"))?,
+    )
+    .map_err(|e| anyhow!("parsing golden.json: {e}"))?;
+
+    let workload = pipeline::load_workload(&rt)?;
+    let mut checked = 0;
+    let mut failures = Vec::new();
+    for case in golden.get("analyze").and_then(|j| j.as_arr()).context("golden analyze")? {
+        let module = case.get("module").and_then(|j| j.as_str()).context("module")?;
+        let module: &'static str =
+            smoothrot::MODULES.into_iter().find(|m| *m == module).context("module name")?;
+        let layer = case.get("layer").and_then(|j| j.as_usize()).context("layer")?;
+        let want_errors = case.get("errors").and_then(|j| j.as_f64_vec()).context("errors")?;
+        let (x, w) = workload.pair(&rt, module, layer);
+        let got = rt.analyze(&x, &w)?;
+        for (i, (&want, got)) in want_errors.iter().zip(got.errors).enumerate() {
+            let rel = (want - got).abs() / want.abs().max(1e-9);
+            if rel > rtol {
+                failures.push(format!("{module} layer {layer} mode {i}: golden {want:.6e} vs pjrt {got:.6e} (rel {rel:.2e})"));
+            }
+        }
+        // cross-check against the native mirror (looser: different matmul order)
+        let native = smoothrot::coordinator::NativeExecutor::analyze(
+            &x,
+            &w,
+            rt.manifest().config.bits,
+            rt.manifest().config.alpha as f32,
+        )
+        .map_err(|e| anyhow!(e))?;
+        for i in 0..4 {
+            let rel = (native.errors[i] - got.errors[i]).abs() / got.errors[i].abs().max(1e-9);
+            if rel > 20.0 * rtol {
+                failures.push(format!(
+                    "{module} layer {layer} mode {i}: native {:.6e} vs pjrt {:.6e} (rel {rel:.2e})",
+                    native.errors[i], got.errors[i]
+                ));
+            }
+        }
+        checked += 1;
+    }
+    if failures.is_empty() {
+        println!("selfcheck OK: {checked} golden cases match PJRT and the native mirror (rtol {rtol:.0e})");
+        Ok(())
+    } else {
+        for f in &failures {
+            eprintln!("MISMATCH: {f}");
+        }
+        bail!("{} mismatches in {checked} cases", failures.len());
+    }
+}
+
+fn cmd_recommend(p: &smoothrot::cli::Parsed) -> Result<()> {
+    use smoothrot::policy::{recommend, PolicyConfig};
+    let artifacts = p.get_or("artifacts", "artifacts");
+    let backend = Backend::from_name(&p.get_or("backend", "pjrt"))?;
+    let sr_margin = p.get_f64("sr-margin").map_err(|e| anyhow!(e))?.unwrap_or(1.25);
+    let out_path = p.get_or("out", "reports/policy.json");
+
+    let run = pipeline::run_full_experiment(&artifacts, PoolConfig::default(), backend)?;
+    let policy = recommend(&run.grid, PolicyConfig { sr_margin });
+    println!("{}", policy.summary());
+
+    if let Some(dir) = std::path::Path::new(&out_path).parent() {
+        std::fs::create_dir_all(dir).ok();
+    }
+    std::fs::write(&out_path, policy.to_json().to_string_pretty())
+        .with_context(|| format!("write {out_path}"))?;
+    println!("wrote {out_path}");
+    Ok(())
+}
+
+fn cmd_serve(p: &smoothrot::cli::Parsed) -> Result<()> {
+    use smoothrot::coordinator::{run_jobs, Job};
+    let artifacts = p.get_or("artifacts", "artifacts");
+    let n_requests = p.get_usize("requests").map_err(|e| anyhow!(e))?.unwrap_or(64);
+    let pool = PoolConfig {
+        workers: p.get_usize("workers").map_err(|e| anyhow!(e))?.unwrap_or(2),
+        queue_cap: p.get_usize("queue-cap").map_err(|e| anyhow!(e))?.unwrap_or(16),
+    };
+    let rt = Runtime::new(&artifacts)?;
+    let cfg = rt.manifest().config.clone();
+    let workload = pipeline::load_workload(&rt)?;
+
+    // synthesize a request stream: random (module, layer) analysis asks
+    let mut rng = smoothrot::rng::Rng::new(99);
+    let jobs: Vec<Job> = (0..n_requests)
+        .map(|i| {
+            let module = smoothrot::MODULES[rng.below(4)];
+            let layer = rng.below(cfg.n_layers);
+            let (x, w) = workload.pair(&rt, module, layer);
+            Job { id: i as u64, layer, module, x, w, alpha: cfg.alpha as f32, bits: cfg.bits }
+        })
+        .collect();
+
+    println!("serving {n_requests} analysis requests through the coordinator ({} workers, queue cap {})", pool.workers, pool.queue_cap);
+    let dir = artifacts.clone();
+    let t0 = std::time::Instant::now();
+    let (results, metrics) =
+        run_jobs(jobs, pool, move |_| pipeline::PjrtExecutor::new(dir.clone())).map_err(|e| anyhow!(e))?;
+    let wall = t0.elapsed();
+
+    let mut lat: Vec<f64> = results.iter().map(|r| r.micros as f64 / 1000.0).collect();
+    lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pct = |p: f64| lat[((lat.len() as f64 * p) as usize).min(lat.len() - 1)];
+    println!(
+        "throughput: {:.1} req/s | latency p50 {:.2} ms p95 {:.2} ms p99 {:.2} ms | max queue depth {} | coordination overhead {:.1}%",
+        n_requests as f64 / wall.as_secs_f64(),
+        pct(0.50),
+        pct(0.95),
+        pct(0.99),
+        metrics.max_queue_depth,
+        100.0 * metrics.overhead_fraction(pool.workers),
+    );
+    std::io::stdout().flush().ok();
+    Ok(())
+}

@@ -1,0 +1,200 @@
+//! Quantization-difficulty metric and statistics (paper Sec. II-B/IV-B).
+//!
+//! * channel magnitudes — Frobenius norm per channel (FlatQuant's view),
+//! * quantization difficulty — the paper's new metric: the standard
+//!   deviation of the channel magnitudes,
+//! * excess kurtosis (FlatQuant's flatness proxy),
+//! * Pearson correlation (used for the >0.97 headline claim),
+//! * small summary/histogram helpers for the report layer.
+
+use crate::tensor::Matrix;
+
+/// Channel axis selector for magnitude computations.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Channels {
+    /// Channels are columns (activations X: one channel per input dim).
+    Columns,
+    /// Channels are rows (weights W: indexed by input channel).
+    Rows,
+}
+
+/// Frobenius norm of each channel.
+pub fn channel_magnitudes(t: &Matrix, ch: Channels) -> Vec<f64> {
+    match ch {
+        Channels::Columns => t.col_norms(),
+        Channels::Rows => t.row_norms(),
+    }
+}
+
+/// Population standard deviation.
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+    (xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+/// The paper's quantization difficulty: std of channel magnitudes.
+pub fn quant_difficulty(t: &Matrix, ch: Channels) -> f64 {
+    std_dev(&channel_magnitudes(t, ch))
+}
+
+/// Excess kurtosis of the flattened tensor.
+pub fn kurtosis(t: &Matrix) -> f64 {
+    let n = t.as_slice().len() as f64;
+    if n == 0.0 {
+        return 0.0;
+    }
+    let mean = t.as_slice().iter().map(|&v| v as f64).sum::<f64>() / n;
+    let m2 = t.as_slice().iter().map(|&v| (v as f64 - mean).powi(2)).sum::<f64>() / n;
+    let m4 = t.as_slice().iter().map(|&v| (v as f64 - mean).powi(4)).sum::<f64>() / n;
+    if m2 <= 0.0 {
+        return 0.0;
+    }
+    m4 / (m2 * m2) - 3.0
+}
+
+/// Pearson correlation coefficient of two equal-length series.
+pub fn pearson(xs: &[f64], ys: &[f64]) -> f64 {
+    assert_eq!(xs.len(), ys.len(), "pearson needs equal lengths");
+    let n = xs.len() as f64;
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mx = xs.iter().sum::<f64>() / n;
+    let my = ys.iter().sum::<f64>() / n;
+    let mut sxy = 0.0;
+    let mut sxx = 0.0;
+    let mut syy = 0.0;
+    for (x, y) in xs.iter().zip(ys) {
+        let dx = x - mx;
+        let dy = y - my;
+        sxy += dx * dy;
+        sxx += dx * dx;
+        syy += dy * dy;
+    }
+    if sxx <= 0.0 || syy <= 0.0 {
+        return 0.0;
+    }
+    sxy / (sxx * syy).sqrt()
+}
+
+/// Simple summary statistics of a series.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Summary {
+    pub min: f64,
+    pub max: f64,
+    pub mean: f64,
+    pub std: f64,
+    pub n: usize,
+}
+
+impl Summary {
+    pub fn of(xs: &[f64]) -> Summary {
+        if xs.is_empty() {
+            return Summary::default();
+        }
+        let n = xs.len();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        Summary {
+            min: xs.iter().cloned().fold(f64::INFINITY, f64::min),
+            max: xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max),
+            mean,
+            std: std_dev(xs),
+            n,
+        }
+    }
+}
+
+/// Fixed-width histogram over [lo, hi].
+pub fn histogram(xs: &[f64], lo: f64, hi: f64, bins: usize) -> Vec<usize> {
+    assert!(bins > 0 && hi > lo);
+    let mut counts = vec![0usize; bins];
+    let width = (hi - lo) / bins as f64;
+    for &x in xs {
+        if x < lo || x > hi {
+            continue;
+        }
+        let mut b = ((x - lo) / width) as usize;
+        if b >= bins {
+            b = bins - 1;
+        }
+        counts[b] += 1;
+    }
+    counts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn difficulty_zero_for_flat_tensor() {
+        let t = Matrix::from_fn(4, 8, |_, _| 1.5);
+        assert!(quant_difficulty(&t, Channels::Columns) < 1e-12);
+    }
+
+    #[test]
+    fn difficulty_detects_hot_channel() {
+        let mut t = Matrix::from_fn(4, 8, |_, _| 1.0);
+        for i in 0..4 {
+            t.set(i, 3, 100.0);
+        }
+        let d = quant_difficulty(&t, Channels::Columns);
+        assert!(d > 10.0, "difficulty {d}");
+    }
+
+    #[test]
+    fn channel_axis_selection() {
+        let t = Matrix::from_vec(2, 3, vec![3.0, 0.0, 0.0, 4.0, 0.0, 0.0]);
+        let cols = channel_magnitudes(&t, Channels::Columns);
+        assert!((cols[0] - 5.0).abs() < 1e-12);
+        let rows = channel_magnitudes(&t, Channels::Rows);
+        assert!((rows[0] - 3.0).abs() < 1e-12);
+        assert!((rows[1] - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pearson_perfect_and_inverse() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        let ys = [2.0, 4.0, 6.0, 8.0];
+        assert!((pearson(&xs, &ys) - 1.0).abs() < 1e-12);
+        let yneg = [8.0, 6.0, 4.0, 2.0];
+        assert!((pearson(&xs, &yneg) + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pearson_degenerate_is_zero() {
+        let xs = [1.0, 1.0, 1.0];
+        let ys = [1.0, 2.0, 3.0];
+        assert_eq!(pearson(&xs, &ys), 0.0);
+    }
+
+    #[test]
+    fn kurtosis_normal_vs_outlier() {
+        use crate::rng::Rng;
+        let mut rng = Rng::new(1);
+        let t = Matrix::from_vec(64, 64, rng.normals_f32(64 * 64));
+        let k_normal = kurtosis(&t);
+        assert!(k_normal.abs() < 0.5, "normal kurtosis {k_normal}");
+        let mut t2 = t.clone();
+        t2.set(0, 0, 500.0);
+        assert!(kurtosis(&t2) > 10.0);
+    }
+
+    #[test]
+    fn summary_basics() {
+        let s = Summary::of(&[1.0, 2.0, 3.0]);
+        assert_eq!(s.n, 3);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 3.0);
+        assert!((s.mean - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_counts() {
+        let h = histogram(&[0.1, 0.2, 0.5, 0.9, 2.0], 0.0, 1.0, 2);
+        assert_eq!(h, vec![2, 2]); // 0.5 lands in the second bin; 2.0 is out of range
+    }
+}

@@ -1,0 +1,190 @@
+//! The massive-outlier token model of paper Sec. IV-D/E (Eq. 6–9).
+//!
+//! Builds the synthetic token of Eq. 6 (a few massive outliers on a
+//! Gaussian floor), and provides the paper's closed-form predictions:
+//!
+//! * Eq. 7 — the rotated token's values cluster at the 2^(|O|-1) sign-
+//!   combination centroids,
+//! * Eq. 8 — `max|t_hat| = sum_i |o_i| / sqrt(d) + |eps|`,
+//! * Eq. 9 — after smoothing (alpha = 0.5) and rotation,
+//!   `max|t_tilde| ~ sum_i sqrt(|o_i| * max|W_i| / d)`.
+//!
+//! The property tests in `check`-based suites validate the predictions
+//! against the actual transforms.
+
+use crate::rng::Rng;
+use crate::tensor::Matrix;
+
+/// Specification of a massive-outlier token (Eq. 6).
+#[derive(Clone, Debug)]
+pub struct OutlierToken {
+    /// Dimensionality d.
+    pub dim: usize,
+    /// Outlier dimensions O.
+    pub dims: Vec<usize>,
+    /// Outlier values o_j (signed).
+    pub values: Vec<f32>,
+    /// Gaussian floor sigma.
+    pub sigma: f32,
+}
+
+impl OutlierToken {
+    /// Sample a token spec with `n_out` outliers of magnitude around `scale`.
+    pub fn sample(dim: usize, n_out: usize, scale: f32, sigma: f32, rng: &mut Rng) -> Self {
+        let dims = rng.choose_distinct(dim, n_out);
+        let values =
+            (0..n_out).map(|_| rng.sign() * scale * (1.0 + 0.5 * rng.f32())).collect();
+        Self { dim, dims, values, sigma }
+    }
+
+    /// Materialize the token vector (Eq. 6).
+    pub fn materialize(&self, rng: &mut Rng) -> Vec<f32> {
+        let mut t: Vec<f32> = (0..self.dim).map(|_| self.sigma * rng.normal() as f32).collect();
+        for (&j, &v) in self.dims.iter().zip(&self.values) {
+            t[j] = v;
+        }
+        t
+    }
+
+    /// Materialize a matrix of `n` tokens where row 0 is the outlier token
+    /// and the rest are benign Gaussian rows.
+    pub fn materialize_batch(&self, n: usize, rng: &mut Rng) -> Matrix {
+        let mut m = Matrix::zeros(n, self.dim);
+        let t = self.materialize(rng);
+        m.row_mut(0).copy_from_slice(&t);
+        for i in 1..n {
+            for v in m.row_mut(i) {
+                *v = self.sigma * rng.normal() as f32;
+            }
+        }
+        m
+    }
+
+    /// Eq. 8 prediction: max|t_hat| after Hadamard rotation (without the
+    /// |eps| noise term).
+    pub fn predicted_rotated_max(&self) -> f64 {
+        self.values.iter().map(|v| v.abs() as f64).sum::<f64>() / (self.dim as f64).sqrt()
+    }
+
+    /// Eq. 7 centroid magnitudes: |sum_i h_i |o_i|| / sqrt(d) over all
+    /// sign combinations (deduplicated, sorted ascending).
+    pub fn centroid_magnitudes(&self) -> Vec<f64> {
+        let k = self.values.len();
+        assert!(k <= 20, "too many outliers to enumerate sign combos");
+        let mut mags: Vec<f64> = (0..(1usize << k))
+            .map(|mask| {
+                let mut acc = 0.0f64;
+                for (i, v) in self.values.iter().enumerate() {
+                    let sign = if mask >> i & 1 == 1 { 1.0 } else { -1.0 };
+                    acc += sign * v.abs() as f64;
+                }
+                acc.abs() / (self.dim as f64).sqrt()
+            })
+            .collect();
+        mags.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        mags.dedup_by(|a, b| (*a - *b).abs() < 1e-9);
+        mags
+    }
+
+    /// Eq. 9 prediction: max|t_tilde| after smooth (alpha=0.5) + rotate,
+    /// given the per-input-channel weight maxima of W.
+    pub fn predicted_smooth_rotated_max(&self, w_col_max: &[f32]) -> f64 {
+        assert_eq!(w_col_max.len(), self.dim);
+        self.dims
+            .iter()
+            .zip(&self.values)
+            .map(|(&j, &o)| ((o.abs() as f64) * (w_col_max[j] as f64) / self.dim as f64).sqrt())
+            .sum()
+    }
+}
+
+/// Number of distinct centroids predicted by Eq. 7: 2^(|O|-1).
+pub fn predicted_cluster_count(n_outliers: usize) -> usize {
+    if n_outliers == 0 {
+        1
+    } else {
+        1usize << (n_outliers - 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transforms;
+
+    #[test]
+    fn eq8_prediction_matches_rotation() {
+        let mut rng = Rng::new(42);
+        for _ in 0..5 {
+            let tok = OutlierToken::sample(256, 3, 2000.0, 0.5, &mut rng);
+            let t = tok.materialize(&mut rng);
+            let x = Matrix::from_vec(1, 256, t);
+            let r = transforms::rotation(256).unwrap();
+            let rotated = x.matmul(&r);
+            let got = rotated.abs_max() as f64;
+            let want = tok.predicted_rotated_max();
+            assert!((got - want).abs() < 6.0 * 0.5, "got {got}, want {want}");
+        }
+    }
+
+    #[test]
+    fn eq7_values_near_centroids() {
+        let mut rng = Rng::new(7);
+        let tok = OutlierToken::sample(512, 3, 3000.0, 0.01, &mut rng);
+        let t = tok.materialize(&mut rng);
+        let x = Matrix::from_vec(1, 512, t);
+        let r = transforms::rotation(512).unwrap();
+        let rotated = x.matmul(&r);
+        let centroids = tok.centroid_magnitudes();
+        assert!(centroids.len() <= predicted_cluster_count(3) + 1);
+        for &v in rotated.as_slice() {
+            let mag = v.abs() as f64;
+            let nearest =
+                centroids.iter().map(|c| (c - mag).abs()).fold(f64::INFINITY, f64::min);
+            assert!(nearest < 0.5, "value {mag} far from all centroids");
+        }
+    }
+
+    #[test]
+    fn cluster_count_formula() {
+        assert_eq!(predicted_cluster_count(0), 1);
+        assert_eq!(predicted_cluster_count(1), 1);
+        assert_eq!(predicted_cluster_count(4), 8);
+    }
+
+    #[test]
+    fn eq9_smooth_rotate_shrinks_max() {
+        let mut rng = Rng::new(11);
+        let tok = OutlierToken::sample(704, 8, 6000.0, 0.5, &mut rng);
+        let x = tok.materialize_batch(32, &mut rng);
+        let mut w = Matrix::zeros(704, 128);
+        for v in w.as_mut_slice() {
+            *v = 0.05 * rng.normal() as f32;
+        }
+        let (xr, _) = transforms::apply(transforms::Mode::Rotate, &x, &w, 0.5).unwrap();
+        let (xsr, _) = transforms::apply(transforms::Mode::SmoothRotate, &x, &w, 0.5).unwrap();
+        let max_rot = xr.abs_max() as f64;
+        let max_sr = xsr.abs_max() as f64;
+        assert!(max_sr < 0.25 * max_rot, "rot {max_rot} sr {max_sr}");
+        // Eq. 9 prediction within a factor of ~2
+        let mut wmax = vec![0.0f32; 704];
+        for i in 0..704 {
+            wmax[i] = w.row(i).iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+        }
+        let pred = tok.predicted_smooth_rotated_max(&wmax);
+        assert!(max_sr < 2.0 * pred + 3.0, "sr {max_sr} pred {pred}");
+        assert!(max_sr > 0.3 * pred - 3.0, "sr {max_sr} pred {pred}");
+    }
+
+    #[test]
+    fn materialize_batch_only_first_row_is_massive() {
+        let mut rng = Rng::new(3);
+        let tok = OutlierToken::sample(128, 2, 1000.0, 0.1, &mut rng);
+        let x = tok.materialize_batch(8, &mut rng);
+        let row_max = x.row_abs_max();
+        assert!(row_max[0] > 500.0);
+        for &m in &row_max[1..] {
+            assert!(m < 10.0);
+        }
+    }
+}

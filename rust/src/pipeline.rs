@@ -1,0 +1,194 @@
+//! High-level experiment drivers tying runtime + coordinator + report.
+//!
+//! Used by the `smoothrot` binary, the examples and the benches, so each
+//! of those stays a thin shell.  Two backends:
+//!
+//! * **pjrt** — the production path: capture + analyze artifacts executed
+//!   through PJRT (alpha/bits fixed at AOT time by the manifest),
+//! * **native** — the rust mirror: same jobs, pure-rust math; supports
+//!   arbitrary alpha/bits, used for sweeps and as the cross-check.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::coordinator::{
+    build_jobs, run_jobs, ExperimentGrid, Executor, Job, NativeExecutor, PoolConfig, RunMetrics,
+};
+use crate::runtime::{AnalyzeOut, Capture, Runtime};
+use crate::tensor::{Matrix, Stack};
+
+/// Which executor processes the jobs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    Pjrt,
+    Native,
+}
+
+impl Backend {
+    pub fn from_name(s: &str) -> Result<Backend> {
+        match s {
+            "pjrt" => Ok(Backend::Pjrt),
+            "native" => Ok(Backend::Native),
+            _ => Err(anyhow!("unknown backend {s:?} (want pjrt|native)")),
+        }
+    }
+}
+
+/// PJRT-backed executor: owns a runtime built inside its worker thread.
+pub struct PjrtExecutor {
+    runtime: Runtime,
+}
+
+impl PjrtExecutor {
+    pub fn new(artifacts_dir: impl Into<PathBuf>) -> Result<Self, String> {
+        let runtime = Runtime::new(artifacts_dir.into()).map_err(|e| e.to_string())?;
+        // Pre-warm: compile every analyze artifact NOW so no request pays
+        // the multi-second first-compile cost (perf pass: this moved the
+        // serve demo's p95 from ~3.6 s to the steady-state latency).
+        let names: Vec<String> = runtime
+            .manifest()
+            .artifacts
+            .keys()
+            .filter(|n| n.starts_with("analyze_"))
+            .cloned()
+            .collect();
+        for name in names {
+            runtime.executable(&name).map_err(|e| e.to_string())?;
+        }
+        Ok(Self { runtime })
+    }
+}
+
+impl Executor for PjrtExecutor {
+    fn run(&mut self, job: &Job) -> Result<AnalyzeOut, String> {
+        // alpha/bits are baked into the analyze artifact at AOT time; the
+        // coordinator only schedules jobs matching the manifest config.
+        self.runtime.analyze(&job.x, &job.w).map_err(|e| e.to_string())
+    }
+}
+
+/// The captured activations plus per-module weight stacks.
+pub struct Workload {
+    pub capture: Capture,
+    pub weights: BTreeMap<&'static str, Stack>,
+}
+
+/// Run the capture artifact and load the weight stacks for all modules.
+pub fn load_workload(rt: &Runtime) -> Result<Workload> {
+    let capture = rt.capture()?;
+    let mut weights = BTreeMap::new();
+    for module in crate::MODULES {
+        let spec = rt
+            .manifest()
+            .modules
+            .get(module)
+            .with_context(|| format!("manifest missing module {module}"))?;
+        let w = rt.load_weight_stack(&spec.weight, spec.c_in, spec.c_out)?;
+        weights.insert(module, w);
+    }
+    Ok(Workload { capture, weights })
+}
+
+impl Workload {
+    /// Borrow the capture stack for each module kind.
+    pub fn stacks(&self, rt: &Runtime) -> BTreeMap<&'static str, &Stack> {
+        let mut map = BTreeMap::new();
+        for module in crate::MODULES {
+            let out_name = &rt.manifest().modules[module].capture_output;
+            map.insert(module, self.capture.by_output(out_name).expect("capture output"));
+        }
+        map
+    }
+
+    /// One (X, W) pair.
+    pub fn pair(&self, rt: &Runtime, module: &'static str, layer: usize) -> (Matrix, Matrix) {
+        let out_name = &rt.manifest().modules[module].capture_output;
+        let x = self.capture.by_output(out_name).expect("capture output").layer(layer);
+        let w = self.weights[module].layer(layer);
+        (x, w)
+    }
+}
+
+/// Result of a full-grid experiment run.
+pub struct ExperimentRun {
+    pub grid: ExperimentGrid,
+    pub metrics: RunMetrics,
+}
+
+/// Run the full (layer × module) analysis sweep.
+///
+/// The runtime is created on the caller's thread for capture/weights; the
+/// PJRT backend then builds one additional runtime per worker thread.
+pub fn run_full_experiment(
+    artifacts_dir: &str,
+    pool: PoolConfig,
+    backend: Backend,
+) -> Result<ExperimentRun> {
+    let rt = Runtime::new(artifacts_dir)?;
+    let cfg = rt.manifest().config.clone();
+    let workload = load_workload(&rt)?;
+    let stacks = workload.stacks(&rt);
+    let weights_ref: BTreeMap<&'static str, &Stack> =
+        workload.weights.iter().map(|(k, v)| (*k, v)).collect();
+    let jobs = build_jobs(&stacks, &weights_ref, cfg.alpha as f32, cfg.bits);
+
+    let (results, metrics) = match backend {
+        Backend::Native => run_jobs(jobs, pool, |_| Ok(NativeExecutor)).map_err(|e| anyhow!(e))?,
+        Backend::Pjrt => {
+            let dir = artifacts_dir.to_string();
+            run_jobs(jobs, pool, move |_| PjrtExecutor::new(dir.clone())).map_err(|e| anyhow!(e))?
+        }
+    };
+    Ok(ExperimentRun { grid: ExperimentGrid::from_results(cfg.n_layers, &results), metrics })
+}
+
+/// Native-only sweep over migration strength alpha for one module.
+/// Returns (alpha, per-layer smooth-mode errors).
+pub fn alpha_sweep(
+    rt: &Runtime,
+    workload: &Workload,
+    module: &'static str,
+    alphas: &[f64],
+    bits: u32,
+) -> Result<Vec<(f64, Vec<f64>)>> {
+    let n_layers = rt.manifest().config.n_layers;
+    let mut out = Vec::with_capacity(alphas.len());
+    for &alpha in alphas {
+        let mut errs = Vec::with_capacity(n_layers);
+        for layer in 0..n_layers {
+            let (x, w) = workload.pair(rt, module, layer);
+            let a = NativeExecutor::analyze(&x, &w, bits, alpha as f32).map_err(|e| anyhow!(e))?;
+            errs.push(a.errors[crate::transforms::Mode::Smooth.index()]);
+        }
+        out.push((alpha, errs));
+    }
+    Ok(out)
+}
+
+/// Native-only sweep over quantization bit width (extension experiment).
+/// Returns (bits, mode) -> total error across all modules/layers.
+pub fn bits_sweep(
+    rt: &Runtime,
+    workload: &Workload,
+    bits_grid: &[u32],
+) -> Result<Vec<(u32, [f64; 4])>> {
+    let cfg = rt.manifest().config.clone();
+    let mut out = Vec::new();
+    for &bits in bits_grid {
+        let mut totals = [0.0f64; 4];
+        for module in crate::MODULES {
+            for layer in 0..cfg.n_layers {
+                let (x, w) = workload.pair(rt, module, layer);
+                let a =
+                    NativeExecutor::analyze(&x, &w, bits, cfg.alpha as f32).map_err(|e| anyhow!(e))?;
+                for i in 0..4 {
+                    totals[i] += a.errors[i];
+                }
+            }
+        }
+        out.push((bits, totals));
+    }
+    Ok(out)
+}

@@ -1,0 +1,216 @@
+//! Transform deployment policy — the paper's Sec. V recommendation as a
+//! first-class feature.
+//!
+//! The paper concludes: *"we currently recommend Smooth Rotation only for
+//! down projection layers, where it effectively mitigates massive
+//! outliers"* — i.e. the transform to deploy is a per-module decision
+//! informed by the measured errors, balanced against smooth-rotation's
+//! costs (weight-difficulty increase + calibration dependence).
+//!
+//! [`recommend`] turns an [`ExperimentGrid`] into a [`Policy`]: per
+//! (module, layer) the error-minimizing transform, except that
+//! smooth-rotation is only chosen where its advantage over the best
+//! calibration-free transform exceeds `sr_margin` (the paper's
+//! conservatism), plus per-module-kind defaults for deployments that
+//! cannot specialize per layer.
+
+use crate::coordinator::ExperimentGrid;
+use crate::jsonio::{obj, Json};
+use crate::transforms::Mode;
+
+/// Policy construction parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct PolicyConfig {
+    /// Minimum relative advantage (error ratio) smooth-rotation must show
+    /// over the best calibration-free transform to be selected.
+    pub sr_margin: f64,
+}
+
+impl Default for PolicyConfig {
+    fn default() -> Self {
+        // require 25% improvement before taking on calibration dependence
+        Self { sr_margin: 1.25 }
+    }
+}
+
+/// Chosen transform per (module, layer) plus per-module defaults.
+#[derive(Clone, Debug)]
+pub struct Policy {
+    /// cells[module] = one mode per layer.
+    pub cells: Vec<(&'static str, Vec<Mode>)>,
+    /// Majority mode per module kind.
+    pub module_defaults: Vec<(&'static str, Mode)>,
+}
+
+/// Pick per-cell transforms from measured errors.
+pub fn recommend(grid: &ExperimentGrid, cfg: PolicyConfig) -> Policy {
+    let mut cells = Vec::new();
+    let mut module_defaults = Vec::new();
+    for module in crate::MODULES {
+        let mut modes = Vec::with_capacity(grid.n_layers);
+        for layer in 0..grid.n_layers {
+            let mode = match grid.get(module, layer) {
+                None => Mode::None,
+                Some(out) => {
+                    // best calibration-free option (none / rotate; smoothing
+                    // is also calibration-dependent in the online-scale
+                    // sense, but the paper groups it with the free ones
+                    // when no rotation hardware is available — we follow
+                    // the stricter reading: calibration-free = none|rotate)
+                    let free = [Mode::None, Mode::Rotate]
+                        .into_iter()
+                        .min_by(|a, b| {
+                            out.errors[a.index()].partial_cmp(&out.errors[b.index()]).unwrap()
+                        })
+                        .unwrap();
+                    let free_err = out.errors[free.index()];
+                    let sr_err = out.errors[Mode::SmoothRotate.index()];
+                    if sr_err > 0.0 && free_err / sr_err >= cfg.sr_margin {
+                        Mode::SmoothRotate
+                    } else {
+                        free
+                    }
+                }
+            };
+            modes.push(mode);
+        }
+        // majority default
+        let default = Mode::ALL
+            .into_iter()
+            .max_by_key(|m| modes.iter().filter(|&&x| x == *m).count())
+            .unwrap();
+        module_defaults.push((module, default));
+        cells.push((module, modes));
+    }
+    Policy { cells, module_defaults }
+}
+
+impl Policy {
+    /// How many layers of a module chose `mode`.
+    pub fn count(&self, module: &str, mode: Mode) -> usize {
+        self.cells
+            .iter()
+            .find(|(m, _)| *m == module)
+            .map(|(_, modes)| modes.iter().filter(|&&x| x == mode).count())
+            .unwrap_or(0)
+    }
+
+    /// Serialize to JSON for deployment tooling.
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            (
+                "module_defaults",
+                Json::Obj(
+                    self.module_defaults
+                        .iter()
+                        .map(|(m, mode)| (m.to_string(), Json::Str(mode.name().into())))
+                        .collect(),
+                ),
+            ),
+            (
+                "layers",
+                Json::Obj(
+                    self.cells
+                        .iter()
+                        .map(|(m, modes)| {
+                            (
+                                m.to_string(),
+                                Json::Arr(
+                                    modes.iter().map(|x| Json::Str(x.name().into())).collect(),
+                                ),
+                            )
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Human-readable summary.
+    pub fn summary(&self) -> String {
+        let mut s = String::from("# transform deployment policy (paper Sec. V)\n");
+        for (module, default) in &self.module_defaults {
+            let sr = self.count(module, Mode::SmoothRotate);
+            let rot = self.count(module, Mode::Rotate);
+            let none = self.count(module, Mode::None);
+            s.push_str(&format!(
+                "{module:>10}: default {:<14} (per-layer: rotate {rot}, smooth_rotate {sr}, none {none})\n",
+                default.name()
+            ));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::AnalyzeOut;
+
+    fn grid_with(down_massive: &[usize]) -> ExperimentGrid {
+        let mut g = ExperimentGrid::new(4);
+        for module in crate::MODULES {
+            for layer in 0..4 {
+                let massive = module == "down_proj" && down_massive.contains(&layer);
+                let mut out = AnalyzeOut::default();
+                // ordinary cell: rotate slightly best, sr marginally better
+                // massive cell: rotate worse than none, sr hugely better
+                out.errors = if massive {
+                    [100.0, 40.0, 150.0, 2.0]
+                } else {
+                    [10.0, 6.0, 4.0, 3.5]
+                };
+                g.cells.get_mut(module).unwrap()[layer] = Some(out);
+            }
+        }
+        g
+    }
+
+    #[test]
+    fn massive_layers_get_smooth_rotation() {
+        let g = grid_with(&[1, 3]);
+        let p = recommend(&g, PolicyConfig::default());
+        let down = &p.cells.iter().find(|(m, _)| *m == "down_proj").unwrap().1;
+        assert_eq!(down[1], Mode::SmoothRotate);
+        assert_eq!(down[3], Mode::SmoothRotate);
+        // ordinary layers stay calibration-free: 4.0 / 3.5 < 1.25 margin
+        assert_eq!(down[0], Mode::Rotate);
+    }
+
+    #[test]
+    fn margin_controls_sr_adoption() {
+        let g = grid_with(&[]);
+        let eager = recommend(&g, PolicyConfig { sr_margin: 1.0 });
+        let conservative = recommend(&g, PolicyConfig { sr_margin: 2.0 });
+        assert!(eager.count("k_proj", Mode::SmoothRotate) > 0);
+        assert_eq!(conservative.count("k_proj", Mode::SmoothRotate), 0);
+    }
+
+    #[test]
+    fn defaults_are_majorities() {
+        let g = grid_with(&[1]);
+        let p = recommend(&g, PolicyConfig::default());
+        let (_, d) = p.module_defaults.iter().find(|(m, _)| *m == "k_proj").unwrap();
+        assert_eq!(*d, Mode::Rotate);
+    }
+
+    #[test]
+    fn json_roundtrips() {
+        let g = grid_with(&[1]);
+        let p = recommend(&g, PolicyConfig::default());
+        let j = p.to_json();
+        let parsed = crate::jsonio::parse(&j.to_string_pretty()).unwrap();
+        assert_eq!(
+            parsed.path(&["layers", "down_proj"]).unwrap().as_arr().unwrap()[1].as_str(),
+            Some("smooth_rotate")
+        );
+        assert!(p.summary().contains("down_proj"));
+    }
+
+    #[test]
+    fn empty_cells_default_to_none() {
+        let g = ExperimentGrid::new(2);
+        let p = recommend(&g, PolicyConfig::default());
+        assert_eq!(p.count("k_proj", Mode::None), 2);
+    }
+}

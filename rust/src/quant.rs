@@ -1,0 +1,221 @@
+//! RTN symmetric quantization — the rust-native mirror of Eq. 1–2.
+//!
+//! Identical semantics to `python/compile/kernels/quant.py` /
+//! `qerror.py`: symmetric integer grid, RTN rounding, per-token
+//! (activations) and per-channel (weights) granularity, no clipping.
+//! Integration tests pin this module against the PJRT-executed Pallas
+//! kernels.
+
+use crate::tensor::Matrix;
+
+/// Quantization granularity.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Granularity {
+    /// One grid per row (token) — the paper's activation setting.
+    PerToken,
+    /// One grid per column (output channel) — the paper's weight setting.
+    PerChannel,
+    /// A single grid for the whole tensor.
+    PerTensor,
+}
+
+/// Largest positive level of a symmetric b-bit integer grid (Eq. 1).
+pub fn qmax(bits: u32) -> f32 {
+    assert!((2..=16).contains(&bits), "bits out of supported range: {bits}");
+    ((1u32 << (bits - 1)) - 1) as f32
+}
+
+#[inline]
+fn qdq_val(v: f32, delta: f32) -> f32 {
+    if delta > 0.0 {
+        (v / delta).round() * delta
+    } else {
+        0.0
+    }
+}
+
+/// Per-token quantization steps Delta (one per row).
+pub fn token_scales(x: &Matrix, bits: u32) -> Vec<f32> {
+    let qm = qmax(bits);
+    x.row_abs_max().iter().map(|&m| m / qm).collect()
+}
+
+/// Per-output-channel quantization steps Delta (one per column).
+pub fn channel_scales(w: &Matrix, bits: u32) -> Vec<f32> {
+    let qm = qmax(bits);
+    w.col_abs_max().iter().map(|&m| m / qm).collect()
+}
+
+/// Quantize-dequantize a copy of `x` at the given granularity.
+pub fn qdq(x: &Matrix, bits: u32, gran: Granularity) -> Matrix {
+    let (rows, cols) = x.shape();
+    let mut out = x.clone();
+    match gran {
+        Granularity::PerToken => {
+            let deltas = token_scales(x, bits);
+            for i in 0..rows {
+                let d = deltas[i];
+                for v in out.row_mut(i) {
+                    *v = qdq_val(*v, d);
+                }
+            }
+        }
+        Granularity::PerChannel => {
+            let deltas = channel_scales(x, bits);
+            for i in 0..rows {
+                let row = out.row_mut(i);
+                for j in 0..cols {
+                    row[j] = qdq_val(row[j], deltas[j]);
+                }
+            }
+        }
+        Granularity::PerTensor => {
+            let delta = x.abs_max() / qmax(bits);
+            for v in out.as_mut_slice() {
+                *v = qdq_val(*v, delta);
+            }
+        }
+    }
+    out
+}
+
+/// Layer-wise quantization error (Eq. 2): `||XW - Q(X)Q(W)||_F^2`,
+/// with per-token X and per-channel W grids.
+pub fn quant_error(x: &Matrix, w: &Matrix, bits: u32) -> f64 {
+    let y = x.matmul(w);
+    let yq = qdq(x, bits, Granularity::PerToken).matmul(&qdq(w, bits, Granularity::PerChannel));
+    y.sub(&yq).frob_sq()
+}
+
+/// Fused version of [`quant_error`] — mirrors the L1 Pallas hot-path
+/// kernel's one-accumulator structure via the delta identity
+///
+/// ```text
+/// Y - Yq = (X - Q(X)) W  +  Q(X) (W - Q(W))
+/// ```
+///
+/// so only ONE (n, c_out) accumulator is materialized (vs Y and Yq plus
+/// a subtraction pass in the naive pipeline), and both products use the
+/// cache-blocked kernel.  The delta factors are also much sparser-ish
+/// (zero where values sit exactly on the grid), which the kernel's
+/// zero-skip exploits.
+pub fn quant_error_fused(x: &Matrix, w: &Matrix, bits: u32) -> f64 {
+    let (n, c_in) = x.shape();
+    let (c_in2, c_out) = w.shape();
+    assert_eq!(c_in, c_in2);
+    let xq = qdq(x, bits, Granularity::PerToken);
+    let wq = qdq(w, bits, Granularity::PerChannel);
+    let dx = x.sub(&xq); // X - Q(X)
+    let dw = w.sub(&wq); // W - Q(W)
+    let mut acc = Matrix::zeros(n, c_out);
+    acc.matmul_acc(&dx, w);
+    acc.matmul_acc(&xq, &dw);
+    acc.frob_sq()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn rand_matrix(rows: usize, cols: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        Matrix::from_vec(rows, cols, rng.normals_f32(rows * cols))
+    }
+
+    #[test]
+    fn qmax_values() {
+        assert_eq!(qmax(4), 7.0);
+        assert_eq!(qmax(8), 127.0);
+        assert_eq!(qmax(2), 1.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn qmax_rejects_1bit() {
+        qmax(1);
+    }
+
+    #[test]
+    fn qdq_zero_tensor_stays_zero() {
+        let x = Matrix::zeros(4, 4);
+        for gran in [Granularity::PerToken, Granularity::PerChannel, Granularity::PerTensor] {
+            assert_eq!(qdq(&x, 4, gran).as_slice(), x.as_slice());
+        }
+    }
+
+    #[test]
+    fn qdq_extremes_exact() {
+        // the row max must quantize to itself (it defines the grid)
+        let x = Matrix::from_vec(1, 4, vec![1.0, -1.0, 0.5, 0.0]);
+        let q = qdq(&x, 4, Granularity::PerToken);
+        assert!((q.get(0, 0) - 1.0).abs() < 1e-7);
+        assert!((q.get(0, 1) + 1.0).abs() < 1e-7);
+    }
+
+    #[test]
+    fn qdq_idempotent() {
+        let x = rand_matrix(16, 32, 1);
+        let q1 = qdq(&x, 4, Granularity::PerToken);
+        let q2 = qdq(&q1, 4, Granularity::PerToken);
+        for (a, b) in q1.as_slice().iter().zip(q2.as_slice()) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn qdq_error_bounded_by_half_step() {
+        let x = rand_matrix(8, 16, 2);
+        let deltas = token_scales(&x, 4);
+        let q = qdq(&x, 4, Granularity::PerToken);
+        for i in 0..8 {
+            for j in 0..16 {
+                assert!((q.get(i, j) - x.get(i, j)).abs() <= deltas[i] / 2.0 + 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn more_bits_less_error() {
+        let x = rand_matrix(32, 64, 3);
+        let w = rand_matrix(64, 16, 4);
+        let e2 = quant_error(&x, &w, 2);
+        let e4 = quant_error(&x, &w, 4);
+        let e8 = quant_error(&x, &w, 8);
+        assert!(e2 > e4 && e4 > e8, "{e2} {e4} {e8}");
+    }
+
+    #[test]
+    fn fused_matches_unfused() {
+        let x = rand_matrix(24, 48, 5);
+        let w = rand_matrix(48, 20, 6);
+        let a = quant_error(&x, &w, 4);
+        let b = quant_error_fused(&x, &w, 4);
+        let rel = (a - b).abs() / a.max(1e-12);
+        assert!(rel < 1e-4, "unfused {a} vs fused {b}");
+    }
+
+    #[test]
+    fn error_zero_when_grid_exact() {
+        let x = Matrix::from_vec(1, 2, vec![7.0, -7.0]);
+        let w = Matrix::from_vec(2, 1, vec![7.0, 1.0]);
+        assert!(quant_error(&x, &w, 4) < 1e-9);
+    }
+
+    #[test]
+    fn per_tensor_coarser_than_per_token() {
+        // with a huge outlier in one row, per-tensor hurts the other rows
+        let mut x = rand_matrix(8, 16, 7);
+        x.set(0, 0, 1000.0);
+        let w = rand_matrix(16, 8, 8);
+        let per_tok = {
+            let yq = qdq(&x, 4, Granularity::PerToken).matmul(&qdq(&w, 4, Granularity::PerChannel));
+            x.matmul(&w).sub(&yq).frob_sq()
+        };
+        let per_tensor = {
+            let yq = qdq(&x, 4, Granularity::PerTensor).matmul(&qdq(&w, 4, Granularity::PerChannel));
+            x.matmul(&w).sub(&yq).frob_sq()
+        };
+        assert!(per_tensor > per_tok);
+    }
+}

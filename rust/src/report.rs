@@ -1,0 +1,360 @@
+//! Figure/table emitters — regenerates every figure of the paper as
+//! CSV (for plotting) plus an ASCII rendering for the terminal.
+//!
+//! | paper figure | emitter |
+//! |---|---|
+//! | Fig 1/2 — activation magnitude maps under transforms | [`magnitude_profile_csv`], [`ascii_chart`] |
+//! | Fig 3 — layer-wise error / act difficulty / weight difficulty | [`layerwise_csv`], [`fig3_report`] |
+//! | Fig 4 — down_proj stats under all transforms | [`fig4_report`] |
+//! | Fig 5 — outlier-token sorted magnitudes + quantization bins | [`fig5_csv`], [`fig5_report`] |
+//! | §IV-B correlation headline | [`correlation_report`] |
+
+use std::fmt::Write as _;
+
+use crate::coordinator::ExperimentGrid;
+use crate::metrics;
+use crate::runtime::AnalyzeOut;
+use crate::tensor::Matrix;
+use crate::transforms::Mode;
+
+/// Write rows of (label, series...) as CSV.
+pub fn csv(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let mut s = String::new();
+    s.push_str(&headers.join(","));
+    s.push('\n');
+    for row in rows {
+        s.push_str(&row.join(","));
+        s.push('\n');
+    }
+    s
+}
+
+/// Sorted per-channel magnitudes of a tensor (FlatQuant-style view used
+/// by Figs 1/2/5): descending Frobenius norm per channel.
+pub fn sorted_channel_magnitudes(x: &Matrix) -> Vec<f64> {
+    let mut mags = x.col_norms();
+    mags.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    mags
+}
+
+/// CSV for a magnitude profile under each transform mode (Fig 1/2).
+pub fn magnitude_profile_csv(profiles: &[(Mode, Vec<f64>)]) -> String {
+    let n = profiles.iter().map(|(_, v)| v.len()).max().unwrap_or(0);
+    let headers: Vec<&str> = std::iter::once("channel_rank")
+        .chain(profiles.iter().map(|(m, _)| m.name()))
+        .collect();
+    let rows: Vec<Vec<String>> = (0..n)
+        .map(|i| {
+            std::iter::once(i.to_string())
+                .chain(profiles.iter().map(|(_, v)| {
+                    v.get(i).map(|x| format!("{x:.6}")).unwrap_or_default()
+                }))
+                .collect()
+        })
+        .collect();
+    csv(&headers, &rows)
+}
+
+/// ASCII log-scale bar chart of a series (terminal rendering of figures).
+pub fn ascii_chart(title: &str, labels: &[String], values: &[f64], width: usize) -> String {
+    assert_eq!(labels.len(), values.len());
+    let mut s = format!("## {title}\n");
+    let max = values.iter().cloned().fold(f64::MIN_POSITIVE, f64::max);
+    let min = values.iter().cloned().filter(|v| *v > 0.0).fold(max, f64::min);
+    let log_span = (max.ln() - min.ln()).max(1e-9);
+    for (label, &v) in labels.iter().zip(values) {
+        let frac = if v > 0.0 { ((v.ln() - min.ln()) / log_span).clamp(0.0, 1.0) } else { 0.0 };
+        let bars = 1 + (frac * (width.saturating_sub(1)) as f64).round() as usize;
+        let _ = writeln!(s, "{label:>14} | {} {v:.3e}", "#".repeat(bars));
+    }
+    s
+}
+
+/// CSV of one statistic across layers for all modules × modes (Fig 3/4).
+pub fn layerwise_csv(grid: &ExperimentGrid, stat: impl Fn(&AnalyzeOut, usize) -> f64) -> String {
+    let mut headers: Vec<String> = vec!["layer".into()];
+    for module in crate::MODULES {
+        for mode in Mode::ALL {
+            headers.push(format!("{module}.{}", mode.name()));
+        }
+    }
+    let header_refs: Vec<&str> = headers.iter().map(String::as_str).collect();
+    let rows: Vec<Vec<String>> = (0..grid.n_layers)
+        .map(|l| {
+            let mut row = vec![l.to_string()];
+            for module in crate::MODULES {
+                for mode in Mode::ALL {
+                    let v = grid
+                        .get(module, l)
+                        .map(|o| stat(o, mode.index()))
+                        .unwrap_or(f64::NAN);
+                    row.push(format!("{v:.6e}"));
+                }
+            }
+            row
+        })
+        .collect();
+    csv(&header_refs, &rows)
+}
+
+/// Fig 3 report: per-module layer trends for mode `none`.
+pub fn fig3_report(grid: &ExperimentGrid) -> String {
+    let mut s = String::from("# Fig 3 — layer-wise statistics (untransformed)\n\n");
+    for (title, f) in [
+        ("(a) quantization error", 0usize),
+        ("(b) activation difficulty", 1),
+        ("(c) weight difficulty", 2),
+    ] {
+        let _ = writeln!(s, "## Fig 3{title}");
+        for module in crate::MODULES {
+            let series = grid.series(module, |o| match f {
+                0 => o.errors[0],
+                1 => o.act_difficulty[0],
+                _ => o.w_difficulty[0],
+            });
+            let line: Vec<String> = series.iter().map(|v| format!("{v:.3e}")).collect();
+            let _ = writeln!(s, "{module:>10}: [{}]", line.join(", "));
+        }
+        s.push('\n');
+    }
+    s
+}
+
+/// Fig 4 report: down_proj error + difficulties under all four modes.
+pub fn fig4_report(grid: &ExperimentGrid) -> String {
+    let mut s = String::from("# Fig 4 — down_proj layer-wise statistics by transform\n\n");
+    for (title, pick) in [
+        ("(a) quantization error", 0usize),
+        ("(b) activation difficulty", 1),
+        ("(c) weight difficulty", 2),
+    ] {
+        let _ = writeln!(s, "## Fig 4{title}");
+        for mode in Mode::ALL {
+            let series = grid.series("down_proj", |o| match pick {
+                0 => o.errors[mode.index()],
+                1 => o.act_difficulty[mode.index()],
+                _ => o.w_difficulty[mode.index()],
+            });
+            let line: Vec<String> = series.iter().map(|v| format!("{v:.3e}")).collect();
+            let _ = writeln!(s, "{:>14}: [{}]", mode.name(), line.join(", "));
+        }
+        s.push('\n');
+    }
+    s
+}
+
+/// §IV-B headline: the correlation between error and difficulty².
+pub fn correlation_report(grid: &ExperimentGrid, massive_layers: &[usize], tail_layer: usize) -> (f64, String) {
+    let mut exclude: Vec<(&str, usize)> = massive_layers.iter().map(|&l| ("down_proj", l)).collect();
+    exclude.push(("down_proj", tail_layer));
+    exclude.push(("gate_proj", tail_layer));
+    let corr = grid.headline_correlation(&exclude);
+    let all = grid.headline_correlation(&[]);
+    let text = format!(
+        "# §IV-B correlation headline\n\
+         Pearson(error, act_difficulty^2), excluding down_proj {massive_layers:?}/{tail_layer} and gate_proj {tail_layer}:\n\
+         corr = {corr:.4}   (paper: > 0.97)\n\
+         without exclusions: corr = {all:.4} (paper: 'not entirely linear' for massive-outlier layers)\n"
+    );
+    (corr, text)
+}
+
+/// Fig 5 data: sorted |values| of the max-magnitude token plus the
+/// effective quantization bin edges (multiples of Delta up to max).
+pub struct Fig5Data {
+    pub sorted_abs: Vec<f64>,
+    pub delta: f64,
+    pub n_effective_bins: usize,
+}
+
+/// Extract Fig 5 data from a (possibly transformed) activation matrix:
+/// takes the token (row) with the largest absolute value.
+pub fn fig5_data(x: &Matrix, bits: u32) -> Fig5Data {
+    let row_max = x.row_abs_max();
+    let (token, _) = row_max
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .expect("empty matrix");
+    let mut sorted_abs: Vec<f64> = x.row(token).iter().map(|v| v.abs() as f64).collect();
+    sorted_abs.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    let delta = sorted_abs[0] / crate::quant::qmax(bits) as f64;
+    // effective bins: how many grid levels the token actually occupies
+    let occupied: std::collections::BTreeSet<i64> = x
+        .row(token)
+        .iter()
+        .map(|&v| if delta > 0.0 { (v as f64 / delta).round() as i64 } else { 0 })
+        .collect();
+    Fig5Data { sorted_abs, delta, n_effective_bins: occupied.len() }
+}
+
+/// CSV for Fig 5 curves across modes.
+pub fn fig5_csv(curves: &[(Mode, Fig5Data)]) -> String {
+    let n = curves.iter().map(|(_, d)| d.sorted_abs.len()).max().unwrap_or(0);
+    let headers: Vec<String> = std::iter::once("rank".to_string())
+        .chain(curves.iter().flat_map(|(m, _)| {
+            [format!("{}_abs", m.name()), format!("{}_delta", m.name())]
+        }))
+        .collect();
+    let header_refs: Vec<&str> = headers.iter().map(String::as_str).collect();
+    let rows: Vec<Vec<String>> = (0..n)
+        .map(|i| {
+            let mut row = vec![i.to_string()];
+            for (_, d) in curves {
+                row.push(d.sorted_abs.get(i).map(|v| format!("{v:.6e}")).unwrap_or_default());
+                row.push(if i == 0 { format!("{:.6e}", d.delta) } else { String::new() });
+            }
+            row
+        })
+        .collect();
+    csv(&header_refs, &rows)
+}
+
+/// Human-readable Fig 5 summary.
+pub fn fig5_report(curves: &[(Mode, Fig5Data)]) -> String {
+    let mut s = String::from("# Fig 5 — massive-outlier token: magnitudes and effective bins\n");
+    for (mode, d) in curves {
+        let _ = writeln!(
+            s,
+            "{:>14}: max={:.3e}  Delta={:.3e}  effective_bins={}  p50|v|={:.3e}",
+            mode.name(),
+            d.sorted_abs.first().unwrap_or(&0.0),
+            d.delta,
+            d.n_effective_bins,
+            d.sorted_abs.get(d.sorted_abs.len() / 2).unwrap_or(&0.0),
+        );
+    }
+    s
+}
+
+/// Markdown table: error by (mode × selected layers) for one module.
+pub fn mode_layer_table(grid: &ExperimentGrid, module: &str, layers: &[usize]) -> String {
+    let mut s = format!("| {module} layer |");
+    for mode in Mode::ALL {
+        let _ = write!(s, " {} |", mode.name());
+    }
+    s.push_str("\n|---|---|---|---|---|\n");
+    for &l in layers {
+        let _ = write!(s, "| {l} |");
+        for mode in Mode::ALL {
+            let v = grid.get(module, l).map(|o| o.errors[mode.index()]).unwrap_or(f64::NAN);
+            let _ = write!(s, " {v:.3e} |");
+        }
+        s.push('\n');
+    }
+    s
+}
+
+/// Summary statistics table over a set of series (used by ablations).
+pub fn summary_table(rows: &[(&str, &[f64])]) -> String {
+    let mut s = String::from("| series | n | min | mean | max | std |\n|---|---|---|---|---|---|\n");
+    for (name, xs) in rows {
+        let sum = metrics::Summary::of(xs);
+        let _ = writeln!(
+            s,
+            "| {name} | {} | {:.3e} | {:.3e} | {:.3e} | {:.3e} |",
+            sum.n, sum.min, sum.mean, sum.max, sum.std
+        );
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{run_jobs, Job, NativeExecutor, PoolConfig};
+    use crate::rng::Rng;
+
+    fn tiny_grid() -> ExperimentGrid {
+        let mut rng = Rng::new(1);
+        let mut jobs = Vec::new();
+        let mut id = 0;
+        for module in crate::MODULES {
+            for layer in 0..3 {
+                jobs.push(Job {
+                    id,
+                    layer,
+                    module,
+                    x: Matrix::from_vec(8, 16, rng.normals_f32(128)),
+                    w: Matrix::from_vec(16, 8, rng.normals_f32(128)),
+                    alpha: 0.5,
+                    bits: 4,
+                });
+                id += 1;
+            }
+        }
+        let (results, _) = run_jobs(jobs, PoolConfig::default(), |_| Ok(NativeExecutor)).unwrap();
+        ExperimentGrid::from_results(3, &results)
+    }
+
+    #[test]
+    fn csv_shape() {
+        let out = csv(&["a", "b"], &[vec!["1".into(), "2".into()]]);
+        assert_eq!(out, "a,b\n1,2\n");
+    }
+
+    #[test]
+    fn magnitude_profile_csv_has_all_modes() {
+        let profiles: Vec<(Mode, Vec<f64>)> =
+            Mode::ALL.iter().map(|&m| (m, vec![3.0, 2.0, 1.0])).collect();
+        let out = magnitude_profile_csv(&profiles);
+        assert!(out.starts_with("channel_rank,none,smooth,rotate,smooth_rotate"));
+        assert_eq!(out.lines().count(), 4);
+    }
+
+    #[test]
+    fn sorted_magnitudes_descending() {
+        let x = Matrix::from_vec(2, 3, vec![1.0, 5.0, 2.0, 1.0, 5.0, 2.0]);
+        let mags = sorted_channel_magnitudes(&x);
+        assert!(mags[0] >= mags[1] && mags[1] >= mags[2]);
+    }
+
+    #[test]
+    fn layerwise_csv_dimensions() {
+        let grid = tiny_grid();
+        let out = layerwise_csv(&grid, |o, i| o.errors[i]);
+        // header + 3 layers
+        assert_eq!(out.lines().count(), 4);
+        // layer + 4 modules * 4 modes columns
+        assert_eq!(out.lines().next().unwrap().split(',').count(), 17);
+    }
+
+    #[test]
+    fn reports_mention_modules_and_modes() {
+        let grid = tiny_grid();
+        assert!(fig3_report(&grid).contains("down_proj"));
+        assert!(fig4_report(&grid).contains("smooth_rotate"));
+        let (corr, text) = correlation_report(&grid, &[1], 2);
+        assert!(corr.is_finite());
+        assert!(text.contains("Pearson"));
+    }
+
+    #[test]
+    fn fig5_bins_shrink_with_flatter_token() {
+        // flat token occupies many bins; spiky token collapses to few
+        let mut rng = Rng::new(2);
+        let flat = Matrix::from_vec(4, 64, rng.normals_f32(256));
+        let mut spiky = Matrix::from_vec(4, 64, rng.normals_f32(256));
+        spiky.set(0, 0, 10_000.0);
+        let f = fig5_data(&flat, 4);
+        let s = fig5_data(&spiky, 4);
+        assert!(s.n_effective_bins <= 3, "spiky bins {}", s.n_effective_bins);
+        assert!(f.n_effective_bins > s.n_effective_bins);
+    }
+
+    #[test]
+    fn ascii_chart_renders_all_rows() {
+        let out = ascii_chart("t", &["a".into(), "b".into()], &[1.0, 100.0], 20);
+        assert_eq!(out.lines().count(), 3);
+        assert!(out.contains('#'));
+    }
+
+    #[test]
+    fn tables_render() {
+        let grid = tiny_grid();
+        let t = mode_layer_table(&grid, "down_proj", &[0, 2]);
+        assert!(t.contains("| 0 |") && t.contains("| 2 |"));
+        let s = summary_table(&[("x", &[1.0, 2.0, 3.0])]);
+        assert!(s.contains("| x | 3 |"));
+    }
+}

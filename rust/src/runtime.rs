@@ -1,0 +1,466 @@
+//! PJRT runtime: loads the AOT artifacts and executes them.
+//!
+//! This is the only module that touches the `xla` crate.  It owns:
+//!
+//! * the artifact **manifest** (`manifest.json`, the python→rust
+//!   contract: every artifact's inputs/outputs/shapes/files + the model
+//!   config the artifacts were built with),
+//! * raw **tensor file** loading (`params/*.bin`, little-endian f32/i32),
+//! * the **executable cache**: HLO text is parsed and compiled once per
+//!   artifact and reused for every subsequent call (compilation is
+//!   milliseconds-to-seconds; execution is the hot path),
+//! * typed entry points: [`Runtime::capture`], [`Runtime::analyze`],
+//!   [`Runtime::transform`], [`Runtime::qdq_token`].
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::config::ModelConfig;
+use crate::jsonio::{self, Json};
+use crate::tensor::{Matrix, Stack};
+use crate::transforms::Mode;
+
+/// One input/output slot of an artifact.
+#[derive(Clone, Debug)]
+pub struct SlotSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+    /// For capture inputs: the .bin file feeding this slot.
+    pub file: Option<String>,
+}
+
+impl SlotSpec {
+    fn from_json(j: &Json) -> Result<Self> {
+        Ok(Self {
+            name: j.get("name").and_then(Json::as_str).context("slot missing name")?.to_string(),
+            shape: j
+                .get("shape")
+                .and_then(Json::as_arr)
+                .context("slot missing shape")?
+                .iter()
+                .filter_map(Json::as_usize)
+                .collect(),
+            dtype: j.get("dtype").and_then(Json::as_str).unwrap_or("f32").to_string(),
+            file: j.get("file").and_then(Json::as_str).map(str::to_string),
+        })
+    }
+
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Manifest entry for one HLO artifact.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub path: String,
+    pub bytes: usize,
+    pub inputs: Vec<SlotSpec>,
+    pub outputs: Vec<SlotSpec>,
+}
+
+/// Parsed `manifest.json`.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub config: ModelConfig,
+    pub modes: Vec<String>,
+    /// module kind -> (c_in, c_out, weight param name, capture output name)
+    pub modules: BTreeMap<String, ModuleSpec>,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+    pub dir: PathBuf,
+}
+
+#[derive(Clone, Debug)]
+pub struct ModuleSpec {
+    pub c_in: usize,
+    pub c_out: usize,
+    pub weight: String,
+    pub capture_output: String,
+}
+
+impl Manifest {
+    /// Load and validate `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts` first)", path.display()))?;
+        let j = jsonio::parse(&text).map_err(|e| anyhow!("parsing manifest: {e}"))?;
+
+        let config = ModelConfig::from_manifest(&j).map_err(|e| anyhow!(e))?;
+        let modes = j
+            .get("modes")
+            .and_then(Json::as_arr)
+            .context("manifest missing modes")?
+            .iter()
+            .filter_map(Json::as_str)
+            .map(str::to_string)
+            .collect();
+
+        let mut modules = BTreeMap::new();
+        if let Some(Json::Obj(fields)) = j.get("modules") {
+            for (name, m) in fields {
+                modules.insert(
+                    name.clone(),
+                    ModuleSpec {
+                        c_in: m.get("c_in").and_then(Json::as_usize).context("module c_in")?,
+                        c_out: m.get("c_out").and_then(Json::as_usize).context("module c_out")?,
+                        weight: m
+                            .get("weight")
+                            .and_then(Json::as_str)
+                            .context("module weight")?
+                            .to_string(),
+                        capture_output: m
+                            .get("capture_output")
+                            .and_then(Json::as_str)
+                            .context("module capture_output")?
+                            .to_string(),
+                    },
+                );
+            }
+        }
+
+        let mut artifacts = BTreeMap::new();
+        if let Some(Json::Obj(fields)) = j.get("artifacts") {
+            for (name, a) in fields {
+                let inputs = a
+                    .get("inputs")
+                    .and_then(Json::as_arr)
+                    .context("artifact inputs")?
+                    .iter()
+                    .map(SlotSpec::from_json)
+                    .collect::<Result<Vec<_>>>()?;
+                let outputs = a
+                    .get("outputs")
+                    .and_then(Json::as_arr)
+                    .context("artifact outputs")?
+                    .iter()
+                    .map(SlotSpec::from_json)
+                    .collect::<Result<Vec<_>>>()?;
+                artifacts.insert(
+                    name.clone(),
+                    ArtifactSpec {
+                        name: name.clone(),
+                        path: a.get("path").and_then(Json::as_str).context("artifact path")?.to_string(),
+                        bytes: a.get("bytes").and_then(Json::as_usize).unwrap_or(0),
+                        inputs,
+                        outputs,
+                    },
+                );
+            }
+        }
+
+        let m = Self { config, modes, modules, artifacts, dir };
+        m.validate()?;
+        Ok(m)
+    }
+
+    fn validate(&self) -> Result<()> {
+        if self.modes != crate::MODES {
+            bail!("manifest modes {:?} != expected {:?}", self.modes, crate::MODES);
+        }
+        for name in crate::MODULES {
+            if !self.modules.contains_key(name) {
+                bail!("manifest missing module {name}");
+            }
+        }
+        for art in self.artifacts.values() {
+            let p = self.dir.join(&art.path);
+            let meta = std::fs::metadata(&p)
+                .with_context(|| format!("artifact file missing: {}", p.display()))?;
+            if art.bytes > 0 && meta.len() as usize != art.bytes {
+                bail!("artifact {} size mismatch: manifest {} vs file {}", art.name, art.bytes, meta.len());
+            }
+        }
+        Ok(())
+    }
+
+    /// Name of the analyze artifact for a module shape.
+    pub fn analyze_artifact(&self, module: &str) -> Result<String> {
+        let m = self.modules.get(module).with_context(|| format!("unknown module {module}"))?;
+        Ok(format!("analyze_{}x{}", m.c_in, m.c_out))
+    }
+}
+
+/// Read a little-endian f32 .bin file.
+pub fn read_f32_bin(path: impl AsRef<Path>) -> Result<Vec<f32>> {
+    let bytes = std::fs::read(path.as_ref())
+        .with_context(|| format!("reading {}", path.as_ref().display()))?;
+    if bytes.len() % 4 != 0 {
+        bail!("{}: length {} not a multiple of 4", path.as_ref().display(), bytes.len());
+    }
+    Ok(bytes.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
+}
+
+/// Read a little-endian i32 .bin file.
+pub fn read_i32_bin(path: impl AsRef<Path>) -> Result<Vec<i32>> {
+    let bytes = std::fs::read(path.as_ref())
+        .with_context(|| format!("reading {}", path.as_ref().display()))?;
+    if bytes.len() % 4 != 0 {
+        bail!("{}: length {} not a multiple of 4", path.as_ref().display(), bytes.len());
+    }
+    Ok(bytes.chunks_exact(4).map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
+}
+
+/// The captured module-input stacks (paper Sec. III-A).
+#[derive(Clone, Debug)]
+pub struct Capture {
+    pub attn_in: Stack,
+    pub o_in: Stack,
+    pub ffn_in: Stack,
+    pub down_in: Stack,
+}
+
+impl Capture {
+    /// Stack for a module kind by its capture-output name.
+    pub fn by_output(&self, name: &str) -> Option<&Stack> {
+        match name {
+            "attn_in" => Some(&self.attn_in),
+            "o_in" => Some(&self.o_in),
+            "ffn_in" => Some(&self.ffn_in),
+            "down_in" => Some(&self.down_in),
+            _ => None,
+        }
+    }
+}
+
+/// Output of one analyze call: one value per transform mode.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct AnalyzeOut {
+    pub errors: [f64; 4],
+    pub act_difficulty: [f64; 4],
+    pub w_difficulty: [f64; 4],
+    pub act_absmax: [f64; 4],
+}
+
+impl AnalyzeOut {
+    pub fn for_mode(&self, mode: Mode) -> (f64, f64, f64, f64) {
+        let i = mode.index();
+        (self.errors[i], self.act_difficulty[i], self.w_difficulty[i], self.act_absmax[i])
+    }
+}
+
+/// PJRT runtime with a compiled-executable cache.
+pub struct Runtime {
+    manifest: Manifest,
+    client: xla::PjRtClient,
+    cache: RefCell<BTreeMap<String, std::rc::Rc<xla::PjRtLoadedExecutable>>>,
+    /// Execution counters (for the coordinator's metrics).
+    pub stats: RefCell<RuntimeStats>,
+}
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RuntimeStats {
+    pub compiles: u64,
+    pub executions: u64,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client and load the manifest.
+    pub fn new(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Self { manifest, client, cache: RefCell::new(BTreeMap::new()), stats: RefCell::new(RuntimeStats::default()) })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Compile (or fetch from cache) an artifact's executable.
+    pub fn executable(&self, name: &str) -> Result<std::rc::Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.borrow().get(name) {
+            return Ok(exe.clone());
+        }
+        let art = self
+            .manifest
+            .artifacts
+            .get(name)
+            .with_context(|| format!("unknown artifact {name}"))?;
+        let path = self.manifest.dir.join(&art.path);
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().context("non-utf8 path")?)
+            .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+        self.stats.borrow_mut().compiles += 1;
+        let rc = std::rc::Rc::new(exe);
+        self.cache.borrow_mut().insert(name.to_string(), rc.clone());
+        Ok(rc)
+    }
+
+    /// Execute an artifact on literal inputs; returns the output tuple.
+    pub fn execute(&self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let art = self.manifest.artifacts.get(name).with_context(|| format!("unknown artifact {name}"))?;
+        if inputs.len() != art.inputs.len() {
+            bail!("artifact {name} wants {} inputs, got {}", art.inputs.len(), inputs.len());
+        }
+        let exe = self.executable(name)?;
+        let result = exe.execute::<xla::Literal>(inputs).map_err(|e| anyhow!("executing {name}: {e:?}"))?;
+        self.stats.borrow_mut().executions += 1;
+        let lit = result[0][0].to_literal_sync().map_err(|e| anyhow!("fetch result of {name}: {e:?}"))?;
+        lit.to_tuple().map_err(|e| anyhow!("untuple result of {name}: {e:?}"))
+    }
+
+    fn matrix_literal(m: &Matrix) -> Result<xla::Literal> {
+        xla::Literal::vec1(m.as_slice())
+            .reshape(&[m.rows() as i64, m.cols() as i64])
+            .map_err(|e| anyhow!("reshape literal: {e:?}"))
+    }
+
+    fn literal_f64s(lit: &xla::Literal) -> Result<Vec<f64>> {
+        Ok(lit.to_vec::<f32>().map_err(|e| anyhow!("literal to_vec: {e:?}"))?.into_iter().map(|v| v as f64).collect())
+    }
+
+    /// Run the full SynLlama forward; feeds `params/*.bin` + `tokens.bin`.
+    pub fn capture(&self) -> Result<Capture> {
+        let art = self.manifest.artifacts.get("capture").context("manifest missing capture")?;
+        let mut inputs = Vec::with_capacity(art.inputs.len());
+        for slot in &art.inputs {
+            let file = slot.file.as_ref().with_context(|| format!("capture input {} has no file", slot.name))?;
+            let path = self.manifest.dir.join(file);
+            let lit = if slot.dtype == "i32" {
+                let data = read_i32_bin(&path)?;
+                if data.len() != slot.elements() {
+                    bail!("{}: {} elements, want {}", path.display(), data.len(), slot.elements());
+                }
+                xla::Literal::vec1(&data)
+            } else {
+                let data = read_f32_bin(&path)?;
+                if data.len() != slot.elements() {
+                    bail!("{}: {} elements, want {}", path.display(), data.len(), slot.elements());
+                }
+                let dims: Vec<i64> = slot.shape.iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(&data).reshape(&dims).map_err(|e| anyhow!("reshape {}: {e:?}", slot.name))?
+            };
+            inputs.push(lit);
+        }
+        let out = self.execute("capture", &inputs)?;
+        if out.len() != 4 {
+            bail!("capture returned {} outputs, want 4", out.len());
+        }
+        let c = &self.manifest.config;
+        let (l, n, d, f) = (c.n_layers, c.seq_len, c.d_model, c.d_ffn);
+        let stack = |lit: &xla::Literal, cols: usize| -> Result<Stack> {
+            let data = lit.to_vec::<f32>().map_err(|e| anyhow!("capture output: {e:?}"))?;
+            Ok(Stack::from_vec(l, n, cols, data))
+        };
+        Ok(Capture {
+            attn_in: stack(&out[0], d)?,
+            o_in: stack(&out[1], d)?,
+            ffn_in: stack(&out[2], d)?,
+            down_in: stack(&out[3], f)?,
+        })
+    }
+
+    /// Load a stacked weight parameter `[L, c_in, c_out]` from its .bin.
+    pub fn load_weight_stack(&self, param: &str, c_in: usize, c_out: usize) -> Result<Stack> {
+        let path = self.manifest.dir.join("params").join(format!("{param}.bin"));
+        let data = read_f32_bin(&path)?;
+        let l = self.manifest.config.n_layers;
+        if data.len() != l * c_in * c_out {
+            bail!("{param}.bin has {} elements, want {}", data.len(), l * c_in * c_out);
+        }
+        Ok(Stack::from_vec(l, c_in, c_out, data))
+    }
+
+    /// Run the fused analyze artifact on one (X, W) pair.
+    pub fn analyze(&self, x: &Matrix, w: &Matrix) -> Result<AnalyzeOut> {
+        let name = format!("analyze_{}x{}", x.cols(), w.cols());
+        let out = self.execute(&name, &[Self::matrix_literal(x)?, Self::matrix_literal(w)?])?;
+        if out.len() != 4 {
+            bail!("{name} returned {} outputs, want 4", out.len());
+        }
+        let take = |lit: &xla::Literal| -> Result<[f64; 4]> {
+            let v = Self::literal_f64s(lit)?;
+            if v.len() != 4 {
+                bail!("{name}: output length {} != 4", v.len());
+            }
+            Ok([v[0], v[1], v[2], v[3]])
+        };
+        Ok(AnalyzeOut {
+            errors: take(&out[0])?,
+            act_difficulty: take(&out[1])?,
+            w_difficulty: take(&out[2])?,
+            act_absmax: take(&out[3])?,
+        })
+    }
+
+    /// Run a standalone transform artifact.
+    pub fn transform(&self, mode: Mode, x: &Matrix, w: &Matrix) -> Result<(Matrix, Matrix)> {
+        if mode == Mode::None {
+            return Ok((x.clone(), w.clone()));
+        }
+        let name = format!("transform_{}_{}x{}", mode.name(), x.cols(), w.cols());
+        let out = self.execute(&name, &[Self::matrix_literal(x)?, Self::matrix_literal(w)?])?;
+        if out.len() != 2 {
+            bail!("{name} returned {} outputs, want 2", out.len());
+        }
+        let xh = Matrix::from_vec(
+            x.rows(),
+            x.cols(),
+            out[0].to_vec::<f32>().map_err(|e| anyhow!("{name} xh: {e:?}"))?,
+        );
+        let wh = Matrix::from_vec(
+            w.rows(),
+            w.cols(),
+            out[1].to_vec::<f32>().map_err(|e| anyhow!("{name} wh: {e:?}"))?,
+        );
+        Ok((xh, wh))
+    }
+
+    /// Run the standalone per-token quantize-dequantize artifact.
+    pub fn qdq_token(&self, x: &Matrix) -> Result<Matrix> {
+        let name = format!("qdq_token_{}x{}", x.rows(), x.cols());
+        let out = self.execute(&name, &[Self::matrix_literal(x)?])?;
+        Ok(Matrix::from_vec(
+            x.rows(),
+            x.cols(),
+            out[0].to_vec::<f32>().map_err(|e| anyhow!("{name}: {e:?}"))?,
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bin_readers_roundtrip() {
+        let dir = std::env::temp_dir().join("smoothrot_bin_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("x.bin");
+        let vals = [1.0f32, -2.5, 3.25];
+        let bytes: Vec<u8> = vals.iter().flat_map(|v| v.to_le_bytes()).collect();
+        std::fs::write(&p, &bytes).unwrap();
+        assert_eq!(read_f32_bin(&p).unwrap(), vals);
+        let ints = [1i32, -7, 100];
+        let bytes: Vec<u8> = ints.iter().flat_map(|v| v.to_le_bytes()).collect();
+        std::fs::write(&p, &bytes).unwrap();
+        assert_eq!(read_i32_bin(&p).unwrap(), ints);
+        std::fs::write(&p, [0u8; 5]).unwrap();
+        assert!(read_f32_bin(&p).is_err());
+    }
+
+    #[test]
+    fn manifest_missing_dir_errors() {
+        assert!(Manifest::load("/nonexistent/dir").is_err());
+    }
+
+    #[test]
+    fn analyze_out_mode_accessor() {
+        let a = AnalyzeOut {
+            errors: [1.0, 2.0, 3.0, 4.0],
+            act_difficulty: [0.1, 0.2, 0.3, 0.4],
+            w_difficulty: [0.0; 4],
+            act_absmax: [9.0; 4],
+        };
+        let (e, ad, _, _) = a.for_mode(Mode::SmoothRotate);
+        assert_eq!(e, 4.0);
+        assert!((ad - 0.4).abs() < 1e-12);
+    }
+}

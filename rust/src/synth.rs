@@ -1,0 +1,204 @@
+//! Native synthetic activation generator.
+//!
+//! A rust-side mirror of SynLlama's *outlier profiles* (not the full
+//! transformer — that lives in the L2 HLO): generates per-layer
+//! activation matrices with the same statistical structure (systematic
+//! hot channels with layer-indexed amplitude, massive token spikes,
+//! broad heavy tails) so the property tests, ablations and benches can
+//! run without a PJRT client, and the figure benches have a cheap
+//! workload generator.
+
+use crate::rng::Rng;
+use crate::tensor::Matrix;
+
+/// Per-layer systematic-outlier profile shape.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Profile {
+    /// Rises to mid-stack then falls (k_proj in the paper).
+    Peaked,
+    /// Monotonic growth ~ (l/L)^1.5 (o_proj).
+    Power,
+    /// Linear growth (gate/down_proj).
+    Linear,
+    /// No systematic outliers.
+    Flat,
+}
+
+impl Profile {
+    /// Amplitude multiplier at layer `l` of `n_layers`.
+    pub fn amplitude(self, l: usize, n_layers: usize) -> f64 {
+        let t = l as f64 / (n_layers.max(2) - 1) as f64;
+        match self {
+            Profile::Peaked => (std::f64::consts::PI * t).sin(),
+            Profile::Power => t.powf(1.5),
+            Profile::Linear => t,
+            Profile::Flat => 0.0,
+        }
+    }
+}
+
+/// Generator spec for one module kind's activation stream.
+#[derive(Clone, Debug)]
+pub struct SynthSpec {
+    pub n_tokens: usize,
+    pub channels: usize,
+    pub n_layers: usize,
+    pub profile: Profile,
+    pub peak_gain: f64,
+    pub hot_channels: usize,
+    /// Layers carrying a massive token spike.
+    pub massive_layers: Vec<usize>,
+    pub massive_tokens: usize,
+    pub massive_channels: usize,
+    pub massive_value: f32,
+    pub seed: u64,
+}
+
+impl SynthSpec {
+    /// k_proj-like stream at SynLlama scale.
+    pub fn attention(seed: u64) -> Self {
+        Self {
+            n_tokens: 128,
+            channels: 256,
+            n_layers: 32,
+            profile: Profile::Peaked,
+            peak_gain: 24.0,
+            hot_channels: 8,
+            massive_layers: vec![],
+            massive_tokens: 0,
+            massive_channels: 0,
+            massive_value: 0.0,
+            seed,
+        }
+    }
+
+    /// down_proj-like stream: linear systematic + massive spikes at 1/30.
+    pub fn down_proj(seed: u64) -> Self {
+        Self {
+            n_tokens: 128,
+            channels: 704,
+            n_layers: 32,
+            profile: Profile::Linear,
+            peak_gain: 4.0,
+            hot_channels: 22,
+            massive_layers: vec![1, 30],
+            massive_tokens: 2,
+            massive_channels: 8,
+            massive_value: 6000.0,
+            seed,
+        }
+    }
+
+    /// Generate the activation matrix of layer `l`.
+    pub fn layer(&self, l: usize) -> Matrix {
+        assert!(l < self.n_layers, "layer {l} out of range");
+        // per-layer deterministic stream so layers can be generated in any order
+        let mut rng = Rng::new(self.seed ^ (l as u64).wrapping_mul(0x9E3779B97F4A7C15));
+        let mut x = Matrix::from_vec(
+            self.n_tokens,
+            self.channels,
+            rng.normals_f32(self.n_tokens * self.channels),
+        );
+        // systematic hot channels (deterministic set per spec, not per layer)
+        let mut chan_rng = Rng::new(self.seed ^ 0xC0FFEE);
+        let hot = chan_rng.choose_distinct(self.channels, self.hot_channels);
+        let amp = self.peak_gain * self.profile.amplitude(l, self.n_layers);
+        if amp > 0.0 && !self.massive_layers.contains(&l) {
+            for i in 0..self.n_tokens {
+                let row = x.row_mut(i);
+                for (hi, &j) in hot.iter().enumerate() {
+                    // per-channel spread mirrors SynLlama's 1 + 0.25*U
+                    let per_ch = 1.0 + 0.25 * ((hi as f32 * 0.37) % 1.0);
+                    row[j] *= 1.0 + (amp as f32) * per_ch;
+                }
+            }
+        }
+        // massive token spikes
+        if self.massive_layers.contains(&l) && self.massive_tokens > 0 {
+            let toks = rng.choose_distinct(self.n_tokens, self.massive_tokens);
+            let chans = rng.choose_distinct(self.channels, self.massive_channels);
+            for &t in &toks {
+                let row = x.row_mut(t);
+                for &c in &chans {
+                    row[c] = rng.sign() * self.massive_value * (1.0 + 0.15 * rng.f32());
+                }
+            }
+        }
+        x
+    }
+
+    /// Generate a weight matrix paired with this stream.
+    pub fn weight(&self, c_out: usize, l: usize) -> Matrix {
+        let mut rng = Rng::new(self.seed ^ 0xBEEF ^ (l as u64).wrapping_mul(0x2545F4914F6CDD1D));
+        let std = (self.channels as f32).powf(-0.5);
+        let mut w = Matrix::from_vec(self.channels, c_out, rng.normals_f32(self.channels * c_out));
+        for v in w.as_mut_slice() {
+            *v *= std;
+        }
+        w
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::{self, Channels};
+
+    #[test]
+    fn profiles_have_expected_shape() {
+        let n = 32;
+        // peaked: mid > ends
+        let p = Profile::Peaked;
+        assert!(p.amplitude(16, n) > p.amplitude(1, n));
+        assert!(p.amplitude(16, n) > p.amplitude(31, n));
+        // linear: monotonic
+        let l = Profile::Linear;
+        assert!(l.amplitude(31, n) > l.amplitude(15, n));
+        assert_eq!(Profile::Flat.amplitude(20, n), 0.0);
+    }
+
+    #[test]
+    fn attention_stream_difficulty_tracks_profile() {
+        let spec = SynthSpec::attention(1);
+        let d_mid = metrics::quant_difficulty(&spec.layer(16), Channels::Columns);
+        let d_early = metrics::quant_difficulty(&spec.layer(1), Channels::Columns);
+        let d_late = metrics::quant_difficulty(&spec.layer(31), Channels::Columns);
+        assert!(d_mid > 3.0 * d_early, "mid {d_mid} early {d_early}");
+        assert!(d_mid > 3.0 * d_late, "mid {d_mid} late {d_late}");
+    }
+
+    #[test]
+    fn down_stream_has_massive_spikes() {
+        let spec = SynthSpec::down_proj(2);
+        for &l in &[1usize, 30] {
+            let x = spec.layer(l);
+            assert!(x.abs_max() > 0.8 * spec.massive_value);
+            let hot_rows = x
+                .row_abs_max()
+                .iter()
+                .filter(|&&m| m > 0.5 * spec.massive_value)
+                .count();
+            assert!(hot_rows <= spec.massive_tokens);
+        }
+        // non-massive layer is bounded
+        assert!(spec.layer(10).abs_max() < 100.0);
+    }
+
+    #[test]
+    fn generation_is_deterministic_and_order_free() {
+        let spec = SynthSpec::down_proj(3);
+        let a = spec.layer(30);
+        let _ = spec.layer(5); // interleave
+        let b = spec.layer(30);
+        assert_eq!(a.as_slice(), b.as_slice());
+    }
+
+    #[test]
+    fn weight_scale_is_unit_column_norm() {
+        let spec = SynthSpec::attention(4);
+        let w = spec.weight(128, 0);
+        let norms = w.col_norms();
+        let mean: f64 = norms.iter().sum::<f64>() / norms.len() as f64;
+        assert!((mean - 1.0).abs() < 0.1, "mean col norm {mean}");
+    }
+}

@@ -1,0 +1,392 @@
+//! Dense row-major f32 matrix substrate.
+//!
+//! The offline registry has no ndarray/nalgebra, so the whole stack sits
+//! on this small, allocation-conscious matrix type.  Everything the
+//! paper's math needs is here: matmul (with a cache-blocked kernel for
+//! the hot path), transpose, row/column reductions, Frobenius norms, and
+//! slicing of stacked `[L, n, c]` captures.
+
+use std::fmt;
+
+/// Row-major dense f32 matrix.
+#[derive(Clone, PartialEq)]
+pub struct Matrix {
+    rows: usize,
+    cols: usize,
+    data: Vec<f32>,
+}
+
+impl fmt::Debug for Matrix {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Matrix({}x{})", self.rows, self.cols)
+    }
+}
+
+impl Matrix {
+    /// Zero-filled matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Build from a flat row-major vector (length must be rows*cols).
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "flat data length mismatch");
+        Self { rows, cols, data }
+    }
+
+    /// Build from a closure over (row, col).
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        Self { rows, cols, data }
+    }
+
+    /// Identity matrix.
+    pub fn eye(n: usize) -> Self {
+        Self::from_fn(n, n, |i, j| if i == j { 1.0 } else { 0.0 })
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f32 {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f32) {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j] = v;
+    }
+
+    /// Immutable view of row `i`.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Mutable view of row `i`.
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Flat row-major slice.
+    pub fn as_slice(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn as_mut_slice(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    /// Consume into the flat vector.
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Transposed copy.
+    pub fn transpose(&self) -> Matrix {
+        let mut out = Matrix::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                out.data[j * self.rows + i] = self.data[i * self.cols + j];
+            }
+        }
+        out
+    }
+
+    /// Matrix product `self @ rhs` using a cache-blocked i-k-j kernel.
+    pub fn matmul(&self, rhs: &Matrix) -> Matrix {
+        assert_eq!(self.cols, rhs.rows, "matmul inner dims: {:?} @ {:?}", self, rhs);
+        let (m, k, n) = (self.rows, self.cols, rhs.cols);
+        let mut out = Matrix::zeros(m, n);
+        // i-k-j loop order: the inner j loop is a contiguous AXPY over the
+        // rhs row and the output row — auto-vectorizes well.
+        const KB: usize = 64;
+        for kb in (0..k).step_by(KB) {
+            let kend = (kb + KB).min(k);
+            for i in 0..m {
+                let arow = &self.data[i * k..(i + 1) * k];
+                let orow = &mut out.data[i * n..(i + 1) * n];
+                for kk in kb..kend {
+                    let a = arow[kk];
+                    if a == 0.0 {
+                        continue;
+                    }
+                    let brow = &rhs.data[kk * n..(kk + 1) * n];
+                    for j in 0..n {
+                        orow[j] += a * brow[j];
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// `self += a @ b` with the same cache-blocked kernel as [`matmul`].
+    pub fn matmul_acc(&mut self, a: &Matrix, b: &Matrix) {
+        assert_eq!(a.cols, b.rows, "matmul_acc inner dims: {a:?} @ {b:?}");
+        assert_eq!(self.shape(), (a.rows, b.cols), "matmul_acc output shape");
+        let (m, k, n) = (a.rows, a.cols, b.cols);
+        const KB: usize = 64;
+        for kb in (0..k).step_by(KB) {
+            let kend = (kb + KB).min(k);
+            for i in 0..m {
+                let arow = &a.data[i * k..(i + 1) * k];
+                let orow = &mut self.data[i * n..(i + 1) * n];
+                for kk in kb..kend {
+                    let av = arow[kk];
+                    if av == 0.0 {
+                        continue;
+                    }
+                    let brow = &b.data[kk * n..(kk + 1) * n];
+                    for j in 0..n {
+                        orow[j] += av * brow[j];
+                    }
+                }
+            }
+        }
+    }
+
+    /// Squared Frobenius norm.
+    pub fn frob_sq(&self) -> f64 {
+        self.data.iter().map(|&v| (v as f64) * (v as f64)).sum()
+    }
+
+    /// Frobenius norm.
+    pub fn frob(&self) -> f64 {
+        self.frob_sq().sqrt()
+    }
+
+    /// Largest absolute entry.
+    pub fn abs_max(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, &v| m.max(v.abs()))
+    }
+
+    /// Per-row maximum absolute value.
+    pub fn row_abs_max(&self) -> Vec<f32> {
+        (0..self.rows)
+            .map(|i| self.row(i).iter().fold(0.0f32, |m, &v| m.max(v.abs())))
+            .collect()
+    }
+
+    /// Per-column maximum absolute value.
+    pub fn col_abs_max(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.cols];
+        for i in 0..self.rows {
+            for (j, &v) in self.row(i).iter().enumerate() {
+                if v.abs() > out[j] {
+                    out[j] = v.abs();
+                }
+            }
+        }
+        out
+    }
+
+    /// Per-column Euclidean norm (the paper's activation channel magnitude).
+    pub fn col_norms(&self) -> Vec<f64> {
+        let mut out = vec![0.0f64; self.cols];
+        for i in 0..self.rows {
+            for (j, &v) in self.row(i).iter().enumerate() {
+                out[j] += (v as f64) * (v as f64);
+            }
+        }
+        out.iter_mut().for_each(|v| *v = v.sqrt());
+        out
+    }
+
+    /// Per-row Euclidean norm (the weight channel magnitude along c_in).
+    pub fn row_norms(&self) -> Vec<f64> {
+        (0..self.rows)
+            .map(|i| self.row(i).iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>().sqrt())
+            .collect()
+    }
+
+    /// Elementwise difference `self - rhs`.
+    pub fn sub(&self, rhs: &Matrix) -> Matrix {
+        assert_eq!(self.shape(), rhs.shape());
+        Matrix {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().zip(&rhs.data).map(|(a, b)| a - b).collect(),
+        }
+    }
+
+    /// Scale column `j` of every row by `s[j]` (in place).
+    pub fn scale_cols_mut(&mut self, s: &[f32]) {
+        assert_eq!(s.len(), self.cols);
+        for i in 0..self.rows {
+            let row = &mut self.data[i * self.cols..(i + 1) * self.cols];
+            for (v, &sc) in row.iter_mut().zip(s) {
+                *v *= sc;
+            }
+        }
+    }
+
+    /// Scale row `i` by `s[i]` (in place).
+    pub fn scale_rows_mut(&mut self, s: &[f32]) {
+        assert_eq!(s.len(), self.rows);
+        for i in 0..self.rows {
+            let sc = s[i];
+            for v in self.row_mut(i) {
+                *v *= sc;
+            }
+        }
+    }
+}
+
+/// A stack of `layers` matrices of identical shape, e.g. the captured
+/// `[L, n, c]` activation tensors, stored contiguously.
+#[derive(Clone)]
+pub struct Stack {
+    layers: usize,
+    rows: usize,
+    cols: usize,
+    data: Vec<f32>,
+}
+
+impl fmt::Debug for Stack {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Stack({}x{}x{})", self.layers, self.rows, self.cols)
+    }
+}
+
+impl Stack {
+    pub fn from_vec(layers: usize, rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), layers * rows * cols, "stack flat length mismatch");
+        Self { layers, rows, cols, data }
+    }
+
+    pub fn layers(&self) -> usize {
+        self.layers
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Copy layer `l` out as a Matrix.
+    pub fn layer(&self, l: usize) -> Matrix {
+        assert!(l < self.layers, "layer {l} out of range ({})", self.layers);
+        let sz = self.rows * self.cols;
+        Matrix::from_vec(self.rows, self.cols, self.data[l * sz..(l + 1) * sz].to_vec())
+    }
+
+    /// Borrow layer `l` as a flat slice.
+    pub fn layer_slice(&self, l: usize) -> &[f32] {
+        let sz = self.rows * self.cols;
+        &self.data[l * sz..(l + 1) * sz]
+    }
+
+    pub fn as_slice(&self) -> &[f32] {
+        &self.data
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_small() {
+        let a = Matrix::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Matrix::from_vec(2, 2, vec![1.0, 1.0, 1.0, 1.0]);
+        let c = a.matmul(&b);
+        assert_eq!(c.as_slice(), &[3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let a = Matrix::from_fn(5, 7, |i, j| (i * 7 + j) as f32);
+        let id = Matrix::eye(7);
+        assert_eq!(a.matmul(&id), a);
+    }
+
+    #[test]
+    fn matmul_rectangular_matches_manual() {
+        let a = Matrix::from_fn(3, 4, |i, j| (i + j) as f32);
+        let b = Matrix::from_fn(4, 2, |i, j| (i as f32) - (j as f32));
+        let c = a.matmul(&b);
+        for i in 0..3 {
+            for j in 0..2 {
+                let want: f32 = (0..4).map(|k| a.get(i, k) * b.get(k, j)).sum();
+                assert!((c.get(i, j) - want).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn matmul_acc_accumulates() {
+        let a = Matrix::from_fn(3, 4, |i, j| (i + j) as f32);
+        let b = Matrix::from_fn(4, 2, |i, j| (i as f32) - (j as f32));
+        let mut acc = a.matmul(&b);
+        acc.matmul_acc(&a, &b);
+        let twice = a.matmul(&b);
+        for (got, want) in acc.as_slice().iter().zip(twice.as_slice()) {
+            assert!((got - 2.0 * want).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let a = Matrix::from_fn(4, 6, |i, j| (i * 31 + j * 7) as f32);
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn norms_and_maxima() {
+        let a = Matrix::from_vec(2, 2, vec![3.0, -4.0, 0.0, 0.0]);
+        assert!((a.frob() - 5.0).abs() < 1e-12);
+        assert_eq!(a.abs_max(), 4.0);
+        assert_eq!(a.row_abs_max(), vec![4.0, 0.0]);
+        assert_eq!(a.col_abs_max(), vec![3.0, 4.0]);
+        assert!((a.col_norms()[0] - 3.0).abs() < 1e-12);
+        assert!((a.row_norms()[0] - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn scaling_in_place() {
+        let mut a = Matrix::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        a.scale_cols_mut(&[2.0, 0.5]);
+        assert_eq!(a.as_slice(), &[2.0, 1.0, 6.0, 2.0]);
+        a.scale_rows_mut(&[1.0, 10.0]);
+        assert_eq!(a.as_slice(), &[2.0, 1.0, 60.0, 20.0]);
+    }
+
+    #[test]
+    fn stack_layer_extraction() {
+        let data: Vec<f32> = (0..24).map(|v| v as f32).collect();
+        let s = Stack::from_vec(2, 3, 4, data);
+        let l1 = s.layer(1);
+        assert_eq!(l1.get(0, 0), 12.0);
+        assert_eq!(l1.get(2, 3), 23.0);
+        assert_eq!(s.layer_slice(0).len(), 12);
+    }
+
+    #[test]
+    #[should_panic]
+    fn stack_layer_out_of_range_panics() {
+        let s = Stack::from_vec(1, 2, 2, vec![0.0; 4]);
+        let _ = s.layer(1);
+    }
+}

@@ -1,0 +1,368 @@
+//! Equivalent transformations — rust-native mirror of Eq. 3–5.
+//!
+//! Hadamard construction (Sylvester + Paley-I + Kronecker, identical to
+//! `python/compile/hadamard.py`), SmoothQuant channel scaling, Hadamard
+//! rotation, and the paper's smooth-rotation hybrid.  The PJRT artifacts
+//! bake the same matrices as constants; the integration tests assert the
+//! two paths agree.
+
+use crate::tensor::Matrix;
+
+/// Transform mode, in canonical artifact order.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Mode {
+    None,
+    Smooth,
+    Rotate,
+    SmoothRotate,
+}
+
+impl Mode {
+    pub const ALL: [Mode; 4] = [Mode::None, Mode::Smooth, Mode::Rotate, Mode::SmoothRotate];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Mode::None => "none",
+            Mode::Smooth => "smooth",
+            Mode::Rotate => "rotate",
+            Mode::SmoothRotate => "smooth_rotate",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Mode> {
+        Mode::ALL.into_iter().find(|m| m.name() == s)
+    }
+
+    pub fn index(self) -> usize {
+        Mode::ALL.iter().position(|&m| m == self).unwrap()
+    }
+}
+
+// ---------------------------------------------------------------------
+// Hadamard construction
+// ---------------------------------------------------------------------
+
+/// Sylvester Hadamard matrix of size d = 2^p (entries ±1).
+pub fn sylvester(d: usize) -> Result<Matrix, String> {
+    if d == 0 || (d & (d - 1)) != 0 {
+        return Err(format!("Sylvester construction needs a power of two, got {d}"));
+    }
+    let mut h = Matrix::from_vec(1, 1, vec![1.0]);
+    while h.rows() < d {
+        let n = h.rows();
+        let mut next = Matrix::zeros(2 * n, 2 * n);
+        for i in 0..n {
+            for j in 0..n {
+                let v = h.get(i, j);
+                next.set(i, j, v);
+                next.set(i, j + n, v);
+                next.set(i + n, j, v);
+                next.set(i + n, j + n, -v);
+            }
+        }
+        h = next;
+    }
+    Ok(h)
+}
+
+fn is_prime(q: usize) -> bool {
+    if q < 2 {
+        return false;
+    }
+    let mut p = 2;
+    while p * p <= q {
+        if q % p == 0 {
+            return false;
+        }
+        p += 1;
+    }
+    true
+}
+
+/// Paley-I Hadamard matrix of size q+1 for prime q with q % 4 == 3.
+pub fn paley1(q: usize) -> Result<Matrix, String> {
+    if q % 4 != 3 {
+        return Err(format!("Paley-I needs q % 4 == 3, got {q}"));
+    }
+    if !is_prime(q) {
+        return Err(format!("Paley-I implemented for prime q only, got {q}"));
+    }
+    // quadratic residue character chi
+    let mut chi = vec![0.0f32; q];
+    let mut residues = vec![false; q];
+    for x in 1..q {
+        residues[(x * x) % q] = true;
+    }
+    for (a, c) in chi.iter_mut().enumerate().skip(1) {
+        *c = if residues[a] { 1.0 } else { -1.0 };
+    }
+    let d = q + 1;
+    let mut h = Matrix::zeros(d, d);
+    // H = I + S, S = [[0, 1^T], [-1, Q]]
+    for j in 1..d {
+        h.set(0, j, 1.0);
+        h.set(j, 0, -1.0);
+    }
+    for i in 0..q {
+        for j in 0..q {
+            h.set(i + 1, j + 1, chi[(j + q - i) % q]);
+        }
+    }
+    for i in 0..d {
+        h.set(i, i, h.get(i, i) + 1.0);
+    }
+    Ok(h)
+}
+
+/// Kronecker product (used to compose Sylvester with a Paley base).
+pub fn kron(a: &Matrix, b: &Matrix) -> Matrix {
+    let (ar, ac) = a.shape();
+    let (br, bc) = b.shape();
+    let mut out = Matrix::zeros(ar * br, ac * bc);
+    for i in 0..ar {
+        for j in 0..ac {
+            let av = a.get(i, j);
+            if av == 0.0 {
+                continue;
+            }
+            for bi in 0..br {
+                for bj in 0..bc {
+                    out.set(i * br + bi, j * bc + bj, av * b.get(bi, bj));
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Paley-I base orders we can build directly (order -> q).
+const PALEY_ORDERS: [(usize, usize); 8] =
+    [(4, 3), (12, 11), (20, 19), (24, 23), (28, 27), (44, 43), (48, 47), (60, 59)];
+
+/// Unnormalized Hadamard matrix of size d (Sylvester or Kronecker/Paley).
+pub fn hadamard(d: usize) -> Result<Matrix, String> {
+    if d >= 1 && (d & (d - 1)) == 0 {
+        return sylvester(d);
+    }
+    let mut orders = PALEY_ORDERS;
+    orders.sort_by(|a, b| b.0.cmp(&a.0));
+    for (order, q) in orders {
+        if d % order == 0 {
+            let pow2 = d / order;
+            if pow2 >= 1 && (pow2 & (pow2 - 1)) == 0 {
+                let base = paley1(q)?;
+                return if pow2 > 1 { Ok(kron(&sylvester(pow2)?, &base)) } else { Ok(base) };
+            }
+        }
+    }
+    Err(format!("no Hadamard construction available for d={d}"))
+}
+
+/// Orthonormal rotation R = H / sqrt(d) (Eq. 5).
+pub fn rotation(d: usize) -> Result<Matrix, String> {
+    let mut h = hadamard(d)?;
+    let scale = 1.0 / (d as f32).sqrt();
+    for v in h.as_mut_slice() {
+        *v *= scale;
+    }
+    Ok(h)
+}
+
+/// Check entries are ±1 and H H^T = d I.
+pub fn is_hadamard(h: &Matrix) -> bool {
+    let (r, c) = h.shape();
+    if r != c {
+        return false;
+    }
+    if h.as_slice().iter().any(|&v| (v.abs() - 1.0).abs() > 1e-6) {
+        return false;
+    }
+    let prod = h.matmul(&h.transpose());
+    for i in 0..r {
+        for j in 0..c {
+            let want = if i == j { r as f32 } else { 0.0 };
+            if (prod.get(i, j) - want).abs() > 1e-3 {
+                return false;
+            }
+        }
+    }
+    true
+}
+
+// ---------------------------------------------------------------------
+// Smoothing / rotation application
+// ---------------------------------------------------------------------
+
+const EPS: f32 = 1e-12;
+
+/// SmoothQuant migration factor s_j (Eq. 4), zero-safe.
+pub fn smooth_scales(x: &Matrix, w: &Matrix, alpha: f32) -> Vec<f32> {
+    let xmax = x.col_abs_max();
+    let mut wmax = vec![0.0f32; w.rows()];
+    for i in 0..w.rows() {
+        wmax[i] = w.row(i).iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+    }
+    xmax.iter()
+        .zip(&wmax)
+        .map(|(&xm, &wm)| xm.max(EPS).powf(alpha) / wm.max(EPS).powf(1.0 - alpha))
+        .collect()
+}
+
+/// Apply a precomputed migration vector: X/s per column, s*W per row.
+pub fn smooth_apply(x: &Matrix, w: &Matrix, s: &[f32]) -> (Matrix, Matrix) {
+    let mut xh = x.clone();
+    let inv: Vec<f32> = s.iter().map(|&v| 1.0 / v).collect();
+    xh.scale_cols_mut(&inv);
+    let mut wh = w.clone();
+    wh.scale_rows_mut(s);
+    (xh, wh)
+}
+
+/// Apply `mode` to (X, W) and return (X_hat, W_hat) (Eq. 3).
+pub fn apply(mode: Mode, x: &Matrix, w: &Matrix, alpha: f32) -> Result<(Matrix, Matrix), String> {
+    match mode {
+        Mode::None => Ok((x.clone(), w.clone())),
+        Mode::Smooth => {
+            let s = smooth_scales(x, w, alpha);
+            Ok(smooth_apply(x, w, &s))
+        }
+        Mode::Rotate => {
+            let r = rotation(x.cols())?;
+            Ok((x.matmul(&r), r.transpose().matmul(w)))
+        }
+        Mode::SmoothRotate => {
+            let s = smooth_scales(x, w, alpha);
+            let (xs, ws) = smooth_apply(x, w, &s);
+            let r = rotation(x.cols())?;
+            Ok((xs.matmul(&r), r.transpose().matmul(&ws)))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn rand_matrix(rows: usize, cols: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        Matrix::from_vec(rows, cols, rng.normals_f32(rows * cols))
+    }
+
+    #[test]
+    fn sylvester_small_sizes() {
+        for d in [1usize, 2, 4, 8, 16, 64, 256] {
+            assert!(is_hadamard(&sylvester(d).unwrap()), "d={d}");
+        }
+    }
+
+    #[test]
+    fn sylvester_rejects_non_pow2() {
+        assert!(sylvester(12).is_err());
+        assert!(sylvester(0).is_err());
+    }
+
+    #[test]
+    fn paley_known_orders() {
+        for q in [3usize, 7, 11, 19, 23, 43, 47, 59] {
+            assert!(is_hadamard(&paley1(q).unwrap()), "q={q}");
+        }
+    }
+
+    #[test]
+    fn paley_rejects_bad_q() {
+        assert!(paley1(5).is_err());
+        assert!(paley1(15).is_err());
+    }
+
+    #[test]
+    fn hadamard_kronecker_704() {
+        assert!(is_hadamard(&hadamard(704).unwrap()));
+        assert!(is_hadamard(&hadamard(44).unwrap()));
+        assert!(is_hadamard(&hadamard(88).unwrap()));
+    }
+
+    #[test]
+    fn hadamard_unsupported() {
+        assert!(hadamard(172).is_err());
+        assert!(hadamard(6).is_err());
+    }
+
+    #[test]
+    fn rotation_orthonormal() {
+        for d in [64usize, 44] {
+            let r = rotation(d).unwrap();
+            let prod = r.matmul(&r.transpose());
+            for i in 0..d {
+                for j in 0..d {
+                    let want = if i == j { 1.0 } else { 0.0 };
+                    assert!((prod.get(i, j) - want).abs() < 1e-5);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn all_modes_preserve_product() {
+        let x = rand_matrix(16, 64, 1);
+        let w = rand_matrix(64, 8, 2);
+        let y = x.matmul(&w);
+        for mode in Mode::ALL {
+            let (xh, wh) = apply(mode, &x, &w, 0.5).unwrap();
+            let yh = xh.matmul(&wh);
+            let scale = y.abs_max().max(1.0);
+            for (a, b) in y.as_slice().iter().zip(yh.as_slice()) {
+                assert!((a - b).abs() / scale < 1e-4, "{mode:?}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn smooth_equalizes_maxima_at_half() {
+        let x = rand_matrix(16, 32, 3);
+        let w = rand_matrix(32, 8, 4);
+        let s = smooth_scales(&x, &w, 0.5);
+        let (xh, wh) = smooth_apply(&x, &w, &s);
+        let xmax = x.col_abs_max();
+        let mut wmax = vec![0.0f32; 32];
+        for i in 0..32 {
+            wmax[i] = w.row(i).iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+        }
+        let xhmax = xh.col_abs_max();
+        for j in 0..32 {
+            let want = (xmax[j] * wmax[j]).sqrt();
+            assert!((xhmax[j] - want).abs() / want < 1e-4);
+            let whmax = wh.row(j).iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+            assert!((whmax - want).abs() / want < 1e-4);
+        }
+    }
+
+    #[test]
+    fn rotation_preserves_frobenius() {
+        let x = rand_matrix(8, 64, 5);
+        let w = rand_matrix(64, 8, 6);
+        let (xh, wh) = apply(Mode::Rotate, &x, &w, 0.5).unwrap();
+        assert!((xh.frob() - x.frob()).abs() / x.frob() < 1e-5);
+        assert!((wh.frob() - w.frob()).abs() / w.frob() < 1e-5);
+    }
+
+    #[test]
+    fn mode_names_roundtrip() {
+        for m in Mode::ALL {
+            assert_eq!(Mode::from_name(m.name()), Some(m));
+        }
+        assert_eq!(Mode::from_name("bogus"), None);
+        assert_eq!(Mode::SmoothRotate.index(), 3);
+    }
+
+    #[test]
+    fn kron_dims_and_values() {
+        let a = Matrix::from_vec(2, 2, vec![1.0, -1.0, 0.0, 2.0]);
+        let b = Matrix::eye(3);
+        let k = kron(&a, &b);
+        assert_eq!(k.shape(), (6, 6));
+        assert_eq!(k.get(0, 0), 1.0);
+        assert_eq!(k.get(0, 3), -1.0);
+        assert_eq!(k.get(3, 3), 2.0);
+    }
+}

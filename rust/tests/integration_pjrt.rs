@@ -1,0 +1,190 @@
+//! Integration tests over the PJRT runtime + AOT artifacts.
+//!
+//! These need `make artifacts` to have run; they are skipped (with a
+//! loud message) when the artifacts directory is absent so plain
+//! `cargo test` stays green in a fresh checkout.
+
+use smoothrot::coordinator::NativeExecutor;
+use smoothrot::pipeline::{self};
+use smoothrot::runtime::Runtime;
+use smoothrot::tensor::Matrix;
+use smoothrot::transforms::{self, Mode};
+
+fn artifacts_dir() -> Option<String> {
+    let dir = std::env::var("SMOOTHROT_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string());
+    if std::path::Path::new(&dir).join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        None
+    }
+}
+
+fn rand_xw(c_in: usize, c_out: usize, seed: u64) -> (Matrix, Matrix) {
+    let mut rng = smoothrot::rng::Rng::new(seed);
+    (
+        Matrix::from_vec(128, c_in, rng.normals_f32(128 * c_in)),
+        Matrix::from_vec(c_in, c_out, rng.normals_f32(c_in * c_out)),
+    )
+}
+
+#[test]
+fn manifest_loads_and_validates() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::new(&dir).expect("runtime");
+    let m = rt.manifest();
+    assert_eq!(m.config.n_layers, 32);
+    assert_eq!(m.modes, smoothrot::MODES);
+    assert_eq!(m.artifacts.len(), 15);
+    assert!(m.artifacts.contains_key("capture"));
+    assert!(m.artifacts.contains_key("analyze_704x256"));
+}
+
+#[test]
+fn qdq_artifact_matches_native() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::new(&dir).expect("runtime");
+    let (x, _) = rand_xw(256, 256, 1);
+    let got = rt.qdq_token(&x).expect("qdq artifact");
+    let want = smoothrot::quant::qdq(&x, 4, smoothrot::quant::Granularity::PerToken);
+    for (a, b) in got.as_slice().iter().zip(want.as_slice()) {
+        assert!((a - b).abs() < 1e-4, "pjrt {a} vs native {b}");
+    }
+}
+
+#[test]
+fn transform_artifacts_match_native() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::new(&dir).expect("runtime");
+    for (c_in, c_out) in [(256usize, 256usize), (256, 704), (704, 256)] {
+        let (x, w) = rand_xw(c_in, c_out, 42 + c_in as u64);
+        for mode in [Mode::Smooth, Mode::Rotate, Mode::SmoothRotate] {
+            let (xh_p, wh_p) = rt.transform(mode, &x, &w).expect("pjrt transform");
+            let (xh_n, wh_n) = transforms::apply(mode, &x, &w, 0.5).expect("native transform");
+            let xs = xh_n.abs_max().max(1e-6);
+            for (a, b) in xh_p.as_slice().iter().zip(xh_n.as_slice()) {
+                assert!((a - b).abs() / xs < 1e-3, "{mode:?} {c_in}x{c_out} X: {a} vs {b}");
+            }
+            let ws = wh_n.abs_max().max(1e-6);
+            for (a, b) in wh_p.as_slice().iter().zip(wh_n.as_slice()) {
+                assert!((a - b).abs() / ws < 1e-3, "{mode:?} {c_in}x{c_out} W: {a} vs {b}");
+            }
+        }
+    }
+}
+
+#[test]
+fn analyze_artifact_matches_native_mirror() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::new(&dir).expect("runtime");
+    let (x, w) = rand_xw(256, 256, 7);
+    let pjrt = rt.analyze(&x, &w).expect("pjrt analyze");
+    let native = NativeExecutor::analyze(&x, &w, 4, 0.5).expect("native analyze");
+    for i in 0..4 {
+        let rel = (pjrt.errors[i] - native.errors[i]).abs() / native.errors[i].max(1e-9);
+        assert!(rel < 5e-2, "mode {i} error: pjrt {} vs native {}", pjrt.errors[i], native.errors[i]);
+        let rel = (pjrt.act_difficulty[i] - native.act_difficulty[i]).abs()
+            / native.act_difficulty[i].max(1e-9);
+        assert!(rel < 1e-2, "mode {i} act_difficulty mismatch");
+    }
+}
+
+#[test]
+fn capture_matches_golden_checksums() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::new(&dir).expect("runtime");
+    let cap = rt.capture().expect("capture");
+    let golden = smoothrot::jsonio::parse(
+        &std::fs::read_to_string(format!("{dir}/golden.json")).expect("golden.json"),
+    )
+    .expect("parse golden");
+    let sums = golden.get("capture_checksums").expect("capture_checksums");
+    for (module, stack) in [
+        ("k_proj", &cap.attn_in),
+        ("o_proj", &cap.o_in),
+        ("gate_proj", &cap.ffn_in),
+        ("down_proj", &cap.down_in),
+    ] {
+        let g = sums.get(module).unwrap_or_else(|| panic!("golden missing {module}"));
+        let want_sum = g.get("sum").and_then(|j| j.as_f64()).unwrap();
+        let want_abs_sum = g.get("abs_sum").and_then(|j| j.as_f64()).unwrap();
+        let want_max = g.get("abs_max").and_then(|j| j.as_f64()).unwrap();
+        let got_sum: f64 = stack.as_slice().iter().map(|&v| v as f64).sum();
+        let got_abs_sum: f64 = stack.as_slice().iter().map(|&v| (v as f64).abs()).sum();
+        let got_max = stack
+            .as_slice()
+            .iter()
+            .fold(0.0f64, |m, &v| m.max((v as f64).abs()));
+        // the net sum is cancellation-dominated (it is ~1e-2 of the
+        // absolute mass), so its drift is judged relative to abs_sum;
+        // abs_sum and abs_max drift with the cross-XLA-version noise
+        assert!(
+            (got_sum - want_sum).abs() / want_abs_sum < 1e-3,
+            "{module} sum: got {got_sum} want {want_sum} (abs mass {want_abs_sum})"
+        );
+        assert!(
+            (got_abs_sum - want_abs_sum).abs() / want_abs_sum < 5e-3,
+            "{module} abs_sum: got {got_abs_sum} want {want_abs_sum}"
+        );
+        assert!(
+            (got_max - want_max).abs() / want_max.max(1.0) < 1e-2,
+            "{module} abs_max: got {got_max} want {want_max}"
+        );
+    }
+}
+
+#[test]
+fn analyze_matches_golden_cases() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::new(&dir).expect("runtime");
+    let workload = pipeline::load_workload(&rt).expect("workload");
+    let golden = smoothrot::jsonio::parse(
+        &std::fs::read_to_string(format!("{dir}/golden.json")).expect("golden.json"),
+    )
+    .expect("parse golden");
+    let cases = golden.get("analyze").and_then(|j| j.as_arr()).expect("analyze cases");
+    assert!(!cases.is_empty());
+    for case in cases {
+        let module: &'static str = smoothrot::MODULES
+            .into_iter()
+            .find(|m| Some(*m) == case.get("module").and_then(|j| j.as_str()))
+            .expect("module");
+        let layer = case.get("layer").and_then(|j| j.as_usize()).unwrap();
+        let want = case.get("errors").and_then(|j| j.as_f64_vec()).unwrap();
+        let (x, w) = workload.pair(&rt, module, layer);
+        let got = rt.analyze(&x, &w).expect("analyze");
+        for (i, (&w_e, g_e)) in want.iter().zip(got.errors).enumerate() {
+            // golden was produced by jaxlib's XLA, the runtime is
+            // xla_extension 0.5.1 — fusion differences flip a few RTN
+            // roundings, so Eq. 2 errors agree to ~1e-2, not 1e-6
+            let rel = (w_e - g_e).abs() / w_e.abs().max(1e-9);
+            assert!(rel < 5e-2, "{module} L{layer} mode {i}: golden {w_e} vs pjrt {g_e} ({rel:.2e})");
+        }
+    }
+}
+
+#[test]
+fn paper_claims_on_massive_layers() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::new(&dir).expect("runtime");
+    let cfg = rt.manifest().config.clone();
+    let workload = pipeline::load_workload(&rt).expect("workload");
+    for &l in &cfg.massive_layers {
+        let (x, w) = workload.pair(&rt, "down_proj", l);
+        let out = rt.analyze(&x, &w).expect("analyze");
+        // Sec. IV-D: rotation underperforms even the untransformed model
+        assert!(
+            out.errors[Mode::Rotate.index()] > out.errors[Mode::None.index()],
+            "layer {l}: rotate {} <= none {}",
+            out.errors[Mode::Rotate.index()],
+            out.errors[Mode::None.index()]
+        );
+        // Sec. IV-E: smooth-rotation is the best of all four
+        for m in [Mode::None, Mode::Smooth, Mode::Rotate] {
+            assert!(
+                out.errors[Mode::SmoothRotate.index()] < out.errors[m.index()],
+                "layer {l}: smooth_rotate not best vs {m:?}"
+            );
+        }
+    }
+}

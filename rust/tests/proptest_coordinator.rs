@@ -1,0 +1,129 @@
+//! Property tests over the coordinator invariants (check = proptest-lite).
+
+use smoothrot::check::{check, ensure, Gen};
+use smoothrot::coordinator::{run_jobs, Executor, Job, JobResult, PoolConfig};
+use smoothrot::runtime::AnalyzeOut;
+use smoothrot::tensor::Matrix;
+
+/// Executor that records what it sees and optionally sleeps.
+struct ProbeExec {
+    sleep_us: u64,
+}
+
+impl Executor for ProbeExec {
+    fn run(&mut self, job: &Job) -> Result<AnalyzeOut, String> {
+        if self.sleep_us > 0 {
+            std::thread::sleep(std::time::Duration::from_micros(self.sleep_us));
+        }
+        // encode job identity into the output so results can be verified
+        let mut out = AnalyzeOut::default();
+        out.errors[0] = job.id as f64;
+        out.errors[1] = job.layer as f64;
+        Ok(out)
+    }
+}
+
+fn make_jobs(g: &mut Gen, n: usize) -> Vec<Job> {
+    (0..n)
+        .map(|i| Job {
+            id: i as u64,
+            layer: g.usize_in(0, 7),
+            module: *g.choose(&smoothrot::MODULES),
+            x: Matrix::zeros(2, 2),
+            w: Matrix::zeros(2, 2),
+            alpha: 0.5,
+            bits: 4,
+        })
+        .collect()
+}
+
+fn verify(results: &[JobResult], jobs_snapshot: &[(u64, usize)]) -> Result<(), String> {
+    ensure(results.len() == jobs_snapshot.len(), "result count mismatch")?;
+    // exactly once, correctly keyed
+    let mut seen = vec![false; jobs_snapshot.len()];
+    for r in results {
+        let idx = r.id as usize;
+        ensure(!seen[idx], format!("job {idx} completed twice"))?;
+        seen[idx] = true;
+        ensure(r.out.errors[0] as u64 == r.id, "result not keyed to its job")?;
+        ensure(r.out.errors[1] as usize == jobs_snapshot[idx].1, "layer mismatch in result")?;
+    }
+    ensure(seen.iter().all(|&s| s), "some job never completed")
+}
+
+#[test]
+fn prop_every_job_completes_exactly_once() {
+    check("exactly-once completion over worker/queue configs", 25, |g| {
+        let n = g.usize_in(1, 60);
+        let jobs = make_jobs(g, n);
+        let snapshot: Vec<(u64, usize)> = jobs.iter().map(|j| (j.id, j.layer)).collect();
+        let cfg = PoolConfig { workers: g.usize_in(1, 6), queue_cap: g.usize_in(1, 8) };
+        let (results, metrics) = run_jobs(jobs, cfg, |_| Ok(ProbeExec { sleep_us: 0 }))?;
+        verify(&results, &snapshot)?;
+        ensure(metrics.jobs == n, "metrics.jobs mismatch")?;
+        ensure(
+            metrics.per_worker_jobs.iter().sum::<usize>() == n,
+            "per-worker counts don't sum to total",
+        )
+    });
+}
+
+#[test]
+fn prop_queue_depth_never_exceeds_cap() {
+    check("bounded queue respects its capacity", 10, |g| {
+        let n = g.usize_in(10, 40);
+        let jobs = make_jobs(g, n);
+        let workers = g.usize_in(1, 4);
+        let cap = g.usize_in(1, 6);
+        let cfg = PoolConfig { workers, queue_cap: cap };
+        let (_, metrics) = run_jobs(jobs, cfg, move |_| Ok(ProbeExec { sleep_us: 200 }))?;
+        // the depth counter includes jobs a worker has popped but not yet
+        // decremented, so allow cap + workers + 1 slack
+        ensure(
+            metrics.max_queue_depth <= cap + workers + 1,
+            format!("depth {} > cap {cap} + workers {workers}", metrics.max_queue_depth),
+        )
+    });
+}
+
+#[test]
+fn prop_results_sorted_by_id() {
+    check("results are returned in id order", 15, |g| {
+        let n = g.usize_in(2, 50);
+        let jobs = make_jobs(g, n);
+        let cfg = PoolConfig { workers: g.usize_in(2, 5), queue_cap: 4 };
+        let (results, _) = run_jobs(jobs, cfg, |_| Ok(ProbeExec { sleep_us: 50 }))?;
+        for pair in results.windows(2) {
+            ensure(pair[0].id < pair[1].id, "ids out of order")?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_failures_always_reported() {
+    struct SometimesFail {
+        fail_id: u64,
+    }
+    impl Executor for SometimesFail {
+        fn run(&mut self, job: &Job) -> Result<AnalyzeOut, String> {
+            if job.id == self.fail_id {
+                Err(format!("injected failure on {}", job.id))
+            } else {
+                Ok(AnalyzeOut::default())
+            }
+        }
+    }
+    check("a failing job fails the run", 15, |g| {
+        let n = g.usize_in(3, 30);
+        let fail_id = g.usize_in(0, n - 1) as u64;
+        let jobs = make_jobs(g, n);
+        let cfg = PoolConfig { workers: g.usize_in(1, 4), queue_cap: 4 };
+        let res = run_jobs(jobs, cfg, move |_| Ok(SometimesFail { fail_id }));
+        ensure(res.is_err(), "run must fail when a job fails")?;
+        ensure(
+            res.unwrap_err().contains("injected failure"),
+            "error message must carry the executor's failure",
+        )
+    });
+}

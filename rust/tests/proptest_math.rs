@@ -1,0 +1,200 @@
+//! Property tests over the native math substrates (check = proptest-lite).
+
+use smoothrot::check::{check, close, ensure, Gen};
+use smoothrot::metrics::{self, Channels};
+use smoothrot::outlier::OutlierToken;
+use smoothrot::quant::{self, Granularity};
+use smoothrot::tensor::Matrix;
+use smoothrot::transforms::{self, Mode};
+
+fn random_dims(g: &mut Gen) -> (usize, usize, usize) {
+    let n = g.usize_in(2, 48);
+    let c_in = *g.choose(&[8usize, 16, 32, 44, 64, 88]);
+    let c_out = g.usize_in(2, 32);
+    (n, c_in, c_out)
+}
+
+#[test]
+fn prop_transforms_preserve_product() {
+    check("XW == Xh Wh for every mode", 40, |g| {
+        let (n, c_in, c_out) = random_dims(g);
+        let x = g.matrix(n, c_in);
+        let w = g.matrix(c_in, c_out);
+        let y = x.matmul(&w);
+        let mode = *g.choose(&Mode::ALL);
+        let (xh, wh) = transforms::apply(mode, &x, &w, g.f32_in(0.1, 0.9)).map_err(|e| e)?;
+        let yh = xh.matmul(&wh);
+        let scale = (y.abs_max() as f64).max(1.0);
+        for (a, b) in y.as_slice().iter().zip(yh.as_slice()) {
+            ensure(
+                ((a - b).abs() as f64) / scale < 5e-4,
+                format!("{mode:?}: {a} vs {b}"),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_rotation_preserves_norms() {
+    check("rotation is an isometry", 40, |g| {
+        let n = g.usize_in(1, 32);
+        let d = *g.choose(&[16usize, 44, 64, 88, 128]);
+        let x = g.matrix(n, d);
+        let r = transforms::rotation(d)?;
+        let xr = x.matmul(&r);
+        close(xr.frob(), x.frob(), 1e-5, "frobenius")?;
+        // per-row norms preserved too
+        for i in 0..n {
+            let a: f64 = x.row(i).iter().map(|&v| (v as f64).powi(2)).sum::<f64>().sqrt();
+            let b: f64 = xr.row(i).iter().map(|&v| (v as f64).powi(2)).sum::<f64>().sqrt();
+            close(a, b, 1e-4, "row norm")?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_qdq_idempotent_and_bounded() {
+    check("Q(Q(X)) == Q(X), |X - Q(X)| <= Delta/2", 60, |g| {
+        let n = g.usize_in(1, 32);
+        let c = g.usize_in(1, 64);
+        let bits = *g.choose(&[2u32, 3, 4, 8]);
+        let mut x = g.matrix(n, c);
+        // occasionally inject a massive outlier
+        if g.usize_in(0, 3) == 0 {
+            let i = g.usize_in(0, n - 1);
+            let j = g.usize_in(0, c - 1);
+            x.set(i, j, 5000.0);
+        }
+        let q1 = quant::qdq(&x, bits, Granularity::PerToken);
+        let q2 = quant::qdq(&q1, bits, Granularity::PerToken);
+        for (a, b) in q1.as_slice().iter().zip(q2.as_slice()) {
+            ensure((a - b).abs() < 1e-4 * a.abs().max(1.0), format!("idempotence {a} vs {b}"))?;
+        }
+        let deltas = quant::token_scales(&x, bits);
+        for i in 0..n {
+            for j in 0..c {
+                let err = (x.get(i, j) - q1.get(i, j)).abs();
+                ensure(err <= deltas[i] / 2.0 + 1e-5, format!("rounding error {err} > Delta/2"))?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_fused_error_matches_reference() {
+    check("fused qerror == two-matmul qerror", 30, |g| {
+        let (n, c_in, c_out) = random_dims(g);
+        let x = g.matrix(n, c_in);
+        let w = g.matrix(c_in, c_out);
+        let a = quant::quant_error(&x, &w, 4);
+        let b = quant::quant_error_fused(&x, &w, 4);
+        close(a, b, 1e-4, "fused vs reference")
+    });
+}
+
+#[test]
+fn prop_smoothing_migration_identity() {
+    check("alpha=0.5 equalizes channel maxima", 30, |g| {
+        let (n, c_in, c_out) = random_dims(g);
+        let x = g.matrix(n, c_in);
+        let w = g.matrix(c_in, c_out);
+        let s = transforms::smooth_scales(&x, &w, 0.5);
+        let (xh, wh) = transforms::smooth_apply(&x, &w, &s);
+        let xmax = x.col_abs_max();
+        let xhmax = xh.col_abs_max();
+        for j in 0..c_in {
+            let wmax = w.row(j).iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+            let want = (xmax[j] * wmax).sqrt();
+            close(xhmax[j] as f64, want as f64, 1e-3, "X_hat channel max")?;
+            let whmax = wh.row(j).iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+            close(whmax as f64, want as f64, 1e-3, "W_hat channel max")?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_eq8_rotated_outlier_max() {
+    // Eq. 8 gives max|t_hat| = sum|o|/sqrt(d) + |eps| — attained exactly
+    // when a Hadamard column sign-aligns with ALL outlier dims.  That
+    // column is essentially guaranteed for Sylvester when d >> 2^|O|
+    // (columns realize every sign pattern), but for the Paley-Kronecker
+    // H704, or when 2^|O| ~ d, only the upper bound is sound plus the
+    // best-available-centroid lower bound.
+    check("Eq. 8: max|t_hat| bounded by sum|o|/sqrt(d)", 30, |g| {
+        let d = *g.choose(&[64usize, 128, 256, 704]);
+        let n_out = g.usize_in(1, 6);
+        let sigma = g.f32_in(0.05, 1.0);
+        let tok = OutlierToken::sample(d, n_out, g.f32_in(800.0, 4000.0), sigma, &mut g.rng);
+        let t = tok.materialize(&mut g.rng);
+        let x = Matrix::from_vec(1, d, t);
+        let r = transforms::rotation(d)?;
+        let got = x.matmul(&r).abs_max() as f64;
+        let want = tok.predicted_rotated_max();
+        let noise = 6.0 * sigma as f64;
+        ensure(got <= want + noise, format!("got {got} exceeds Eq.8 bound {want}"))?;
+        // the achieved max is at least the second-best centroid
+        let centroids = tok.centroid_magnitudes();
+        let floor = if centroids.len() >= 2 { centroids[centroids.len() - 2] } else { want };
+        ensure(
+            got >= floor - noise,
+            format!("got {got} below the second centroid {floor} (Eq.7 violated)"),
+        )?;
+        // exact Eq. 8 for the well-covered Sylvester regime
+        if d.is_power_of_two() && (1usize << n_out) * 8 <= d {
+            ensure(
+                (got - want).abs() < noise,
+                format!("Sylvester d={d}, |O|={n_out}: got {got}, Eq.8 predicts {want}"),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_difficulty_scale_invariance_structure() {
+    check("difficulty scales linearly; rotation flattens hot channels", 30, |g| {
+        let n = g.usize_in(4, 32);
+        let d = *g.choose(&[32usize, 64, 128]);
+        let mut x = g.matrix(n, d);
+        let k = g.f32_in(1.5, 10.0);
+        // difficulty is homogeneous of degree 1 in the data
+        let mut x2 = x.clone();
+        for v in x2.as_mut_slice() {
+            *v *= k;
+        }
+        let d1 = metrics::quant_difficulty(&x, Channels::Columns);
+        let d2 = metrics::quant_difficulty(&x2, Channels::Columns);
+        close(d2, (k as f64) * d1, 1e-4, "homogeneity")?;
+        // hot channel -> rotation drops difficulty substantially (the
+        // residual spread scales with 1/sqrt(n); small token counts keep
+        // more variance, so assert a conservative 2x)
+        let hot = g.usize_in(0, d - 1);
+        for i in 0..n {
+            x.row_mut(i)[hot] *= 60.0;
+        }
+        let r = transforms::rotation(d)?;
+        let xr = x.matmul(&r);
+        ensure(
+            metrics::quant_difficulty(&xr, Channels::Columns)
+                < 0.5 * metrics::quant_difficulty(&x, Channels::Columns),
+            "rotation must flatten a hot channel",
+        )
+    });
+}
+
+#[test]
+fn prop_pearson_bounds_and_symmetry() {
+    check("|pearson| <= 1 and corr(x,x) == 1", 40, |g| {
+        let n = g.usize_in(3, 64);
+        let xs: Vec<f64> = (0..n).map(|_| g.rng.normal()).collect();
+        let ys: Vec<f64> = (0..n).map(|_| g.rng.normal()).collect();
+        let c = metrics::pearson(&xs, &ys);
+        ensure(c.abs() <= 1.0 + 1e-12, format!("corr {c} out of bounds"))?;
+        close(metrics::pearson(&xs, &xs), 1.0, 1e-9, "self correlation")?;
+        close(metrics::pearson(&xs, &ys), metrics::pearson(&ys, &xs), 1e-12, "symmetry")
+    });
+}
