@@ -1,85 +1,93 @@
-//! Serving demo: the coordinator as an analysis service.
+//! Serving demo: the batched multi-tenant serving core, artifact-free.
 //!
-//! Streams a synthetic request mix (random module × layer analysis asks,
-//! mimicking a quantization-advisor service that decides per-layer which
-//! transform to deploy) through the bounded-queue worker pool with PJRT
-//! executors, then prints throughput, latency percentiles and the
-//! per-layer transform recommendation the service would return.
+//! Three tenants stream analysis requests (random module × layer asks
+//! over paper-shaped synthetic activations) at skewed rates into the
+//! serving core; compatible requests are coalesced into batches, every
+//! tenant gets a fair share of dispatch slots, and results stream back
+//! with per-request latency.  A second pass with batching disabled
+//! (`max_batch = 1`) quantifies what coalescing buys.
 //!
 //! ```bash
-//! make artifacts && cargo run --release --offline --example serve -- 128 2
+//! cargo run --release --example serve -- [requests] [workers] [max_batch]
 //! ```
+//!
+//! Uses the native executor, so it runs without AOT artifacts; point the
+//! `smoothrot serve` subcommand at `--backend pjrt` for the AOT path.
 
 use anyhow::{anyhow, Result};
-use smoothrot::coordinator::{run_jobs, Job, PoolConfig};
-use smoothrot::pipeline::{self, PjrtExecutor};
-use smoothrot::rng::Rng;
-use smoothrot::runtime::Runtime;
+use smoothrot::coordinator::Job;
+use smoothrot::serve::{
+    serve_all, synthetic_requests, NativeBatchExecutor, Response, ServeConfig, ServeMetrics,
+    TenantId,
+};
 use smoothrot::transforms::Mode;
+
+fn run(cfg: ServeConfig, requests: Vec<(TenantId, Job)>) -> Result<(Vec<Response>, ServeMetrics)> {
+    serve_all(cfg, requests, |_| Ok(NativeBatchExecutor::new())).map_err(|e| anyhow!(e.to_string()))
+}
 
 fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().collect();
-    let n_requests: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(64);
+    let n_requests: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(48);
     let workers: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(2);
-    let artifacts = args.get(3).cloned().unwrap_or_else(|| "artifacts".to_string());
+    let max_batch: usize = args.get(3).and_then(|s| s.parse().ok()).unwrap_or(8);
+    let rows = 24;
 
-    let rt = Runtime::new(&artifacts)?;
-    let cfg = rt.manifest().config.clone();
-    let workload = pipeline::load_workload(&rt)?;
-
-    let mut rng = Rng::new(2024);
-    let jobs: Vec<Job> = (0..n_requests)
-        .map(|i| {
-            let module = smoothrot::MODULES[rng.below(4)];
-            let layer = rng.below(cfg.n_layers);
-            let (x, w) = workload.pair(&rt, module, layer);
-            Job { id: i as u64, layer, module, x, w, alpha: cfg.alpha as f32, bits: cfg.bits }
-        })
-        .collect();
-
-    println!("serving {n_requests} requests ({workers} workers, PJRT executors)...");
-    let pool = PoolConfig { workers, queue_cap: 16 };
-    let dir = artifacts.clone();
-    let t0 = std::time::Instant::now();
-    let (results, metrics) =
-        run_jobs(jobs, pool, move |_| PjrtExecutor::new(dir.clone())).map_err(|e| anyhow!(e))?;
-    let wall = t0.elapsed();
-
-    let mut lat: Vec<f64> = results.iter().map(|r| r.micros as f64 / 1000.0).collect();
-    lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let pct = |p: f64| lat[((lat.len() as f64 * p) as usize).min(lat.len() - 1)];
-    let exec_time: f64 = results.iter().map(|r| r.micros as f64 / 1e6).sum::<f64>() / workers as f64;
+    let cfg = ServeConfig { workers, max_batch, queue_depth: 32, ..ServeConfig::default() };
     println!(
-        "\nthroughput {:.1} req/s wall ({:.1} req/s steady-state, excluding the one-time\n\
-         per-worker executable compile of {:.1}s) | latency ms p50 {:.2} p95 {:.2} p99 {:.2}\n\
-         | max queue depth {}",
-        n_requests as f64 / wall.as_secs_f64(),
-        n_requests as f64 / exec_time,
-        wall.as_secs_f64() - exec_time,
-        pct(0.50),
-        pct(0.95),
-        pct(0.99),
-        metrics.max_queue_depth,
+        "serving {n_requests} requests from 3 tenants ({workers} workers, max-batch {max_batch}, \
+         queue-depth {}, native executors)...\n",
+        cfg.queue_depth
     );
 
-    // The "advisor" response: recommended transform per request = argmin error.
-    let mut recommend = std::collections::BTreeMap::<&str, usize>::new();
-    for r in &results {
-        let best = Mode::ALL
-            .into_iter()
-            .min_by(|a, b| {
-                r.out.errors[a.index()].partial_cmp(&r.out.errors[b.index()]).unwrap()
-            })
-            .unwrap();
-        *recommend.entry(best.name()).or_default() += 1;
+    let (responses, metrics) = run(cfg, synthetic_requests(n_requests, 3, rows, 1))?;
+
+    println!("first responses off the stream:");
+    for r in responses.iter().take(5) {
+        println!(
+            "  <- req {:>3} tenant {} {:>9} layer {:<2} batch {:>2} (size {}) {:>7.2} ms",
+            r.id,
+            r.tenant,
+            r.module,
+            r.layer,
+            r.batch_id,
+            r.batch_size,
+            r.total_micros as f64 / 1e3
+        );
     }
-    println!("\nper-request recommended transform (argmin error):");
-    for (mode, count) in recommend {
+    println!("\n{}", metrics.summary());
+
+    // Every tenant must have been served — the fairness claim in one line.
+    assert!(metrics.per_tenant.len() >= 2, "expected at least 2 concurrent tenants");
+    for (tenant, t) in &metrics.per_tenant {
+        assert_eq!(t.submitted, t.completed, "tenant {tenant} lost requests");
+    }
+
+    // What did the advisor decide?
+    let mut recommend = std::collections::BTreeMap::<&str, usize>::new();
+    for r in &responses {
+        if let Ok(out) = &r.out {
+            let best = Mode::ALL
+                .into_iter()
+                .min_by(|a, b| out.errors[a.index()].partial_cmp(&out.errors[b.index()]).unwrap())
+                .unwrap();
+            *recommend.entry(best.name()).or_default() += 1;
+        }
+    }
+    println!("per-request recommended transform (argmin error):");
+    for (mode, count) in &recommend {
         println!("  {mode:>14}: {count} requests");
     }
+
+    // Same stream with batching disabled: what does coalescing buy?
+    let unbatched_cfg = ServeConfig { max_batch: 1, ..cfg };
+    let (_, unbatched) = run(unbatched_cfg, synthetic_requests(n_requests, 3, rows, 1))?;
     println!(
-        "\n(the paper's recommendation — smooth-rotation for down_proj massive-outlier layers,\n\
-     rotation elsewhere — emerges from the request-level decisions above)"
+        "\nbatched (max-batch {max_batch}): {:.1} req/s, mean batch {:.2} | \
+         unbatched (max-batch 1): {:.1} req/s",
+        metrics.throughput(),
+        metrics.mean_batch(),
+        unbatched.throughput(),
     );
     Ok(())
 }

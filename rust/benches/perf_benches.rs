@@ -3,6 +3,8 @@
 //! * L3 native math: blocked matmul, quantizer, fused qerror kernel,
 //!   Hadamard construction + application,
 //! * L3 coordinator: scheduling overhead at varying worker counts,
+//! * L3 serving core: batched vs unbatched dispatch throughput over the
+//!   multi-tenant scheduler (native executors),
 //! * runtime: PJRT execute latency for the analyze/transform artifacts
 //!   (the end-to-end request-path unit).
 //!
@@ -92,6 +94,60 @@ fn main() {
                 run_jobs(jobs, PoolConfig { workers, queue_cap: 64 }, |_| Ok(NoopExec)).unwrap();
             black_box(r.len());
         });
+    }
+
+    // ---- serving core: batched vs unbatched dispatch --------------------
+    // Four tenants submit 256 same-key analysis requests; the paused
+    // config queues everything up front so batch formation is
+    // deterministic, and the two runs differ only in max_batch.  Small
+    // matrices keep the jobs dispatch-dominated — the regime batching
+    // is for.
+    {
+        use smoothrot::serve::{serve_all, NativeBatchExecutor, ServeConfig};
+        let n = 256usize;
+        let base: Vec<(usize, Job)> = (0..n)
+            .map(|i| {
+                let job = Job {
+                    id: i as u64,
+                    layer: i % 8,
+                    module: "k_proj",
+                    x: rand_matrix(16, 64, 100 + i as u64),
+                    w: rand_matrix(64, 16, 200 + i as u64),
+                    alpha: 0.5,
+                    bits: 4,
+                };
+                (i % 4, job)
+            })
+            .collect();
+        let mut medians = Vec::new();
+        for max_batch in [1usize, 16] {
+            let cfg = ServeConfig {
+                workers: 2,
+                max_batch,
+                queue_depth: n,
+                paused: true,
+                ..ServeConfig::default()
+            };
+            let name = format!("serve_native_256req_4tenants_batch{max_batch}");
+            let reqs = base.clone();
+            let med = b
+                .bench_items(&name, n as f64, move || {
+                    let (_, metrics) =
+                        serve_all(cfg, reqs.clone(), |_| Ok(NativeBatchExecutor::new())).unwrap();
+                    assert_eq!(metrics.completed as usize, n);
+                    black_box(metrics.batches);
+                })
+                .map(|m| m.median());
+            medians.push(med);
+        }
+        if let (Some(Some(unbatched)), Some(Some(batched))) =
+            (medians.first().copied(), medians.get(1).copied())
+        {
+            println!(
+                "    -> batching speedup (max-batch 16 vs 1): {:.2}x",
+                unbatched.as_secs_f64() / batched.as_secs_f64()
+            );
+        }
     }
 
     // ---- PJRT request-path latency --------------------------------------

@@ -21,6 +21,11 @@
 //! every submitted job completes exactly once; results are keyed
 //! correctly regardless of worker count or queue capacity; the bounded
 //! queue never holds more than `queue_cap` jobs.
+//!
+//! This module runs *one fixed sweep*.  For the continuous,
+//! multi-tenant request path (admission control, batch coalescing,
+//! fair-share scheduling, latency percentiles) see [`crate::serve`],
+//! which builds on the same [`Job`] / [`Executor`] vocabulary.
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -71,9 +76,23 @@ pub struct NativeExecutor;
 impl NativeExecutor {
     /// Analyze one (X, W) pair across all four transform modes.
     pub fn analyze(x: &Matrix, w: &Matrix, bits: u32, alpha: f32) -> Result<AnalyzeOut, String> {
+        let mut cache = transforms::RotationCache::new();
+        Self::analyze_cached(x, w, bits, alpha, &mut cache)
+    }
+
+    /// [`Self::analyze`] with rotation reuse — the serving hot path
+    /// ([`crate::serve::NativeBatchExecutor`]) shares one cache across
+    /// every job, so each Hadamard rotation is built once per width.
+    pub fn analyze_cached(
+        x: &Matrix,
+        w: &Matrix,
+        bits: u32,
+        alpha: f32,
+        cache: &mut transforms::RotationCache,
+    ) -> Result<AnalyzeOut, String> {
         let mut out = AnalyzeOut::default();
         for mode in Mode::ALL {
-            let (xh, wh) = transforms::apply(mode, x, w, alpha)?;
+            let (xh, wh) = transforms::apply_cached(mode, x, w, alpha, cache)?;
             let i = mode.index();
             out.errors[i] = quant::quant_error_fused(&xh, &wh, bits);
             out.act_difficulty[i] = metrics::quant_difficulty(&xh, Channels::Columns);
@@ -130,6 +149,25 @@ impl Default for PoolConfig {
 /// Run `jobs` through a worker pool; `make_executor(worker_idx)` is
 /// invoked *inside* each worker thread, so non-Send executors (PJRT)
 /// work with `workers == 1..n`, each owning its own runtime.
+///
+/// ```
+/// use smoothrot::coordinator::{run_jobs, Job, NativeExecutor, PoolConfig};
+/// use smoothrot::tensor::Matrix;
+///
+/// let jobs = vec![Job {
+///     id: 0,
+///     layer: 0,
+///     module: "k_proj",
+///     x: Matrix::zeros(4, 8),
+///     w: Matrix::zeros(8, 4),
+///     alpha: 0.5,
+///     bits: 4,
+/// }];
+/// let (results, metrics) =
+///     run_jobs(jobs, PoolConfig::default(), |_| Ok(NativeExecutor)).unwrap();
+/// assert_eq!(results.len(), 1);
+/// assert_eq!(metrics.jobs, 1);
+/// ```
 pub fn run_jobs<E, F>(
     jobs: Vec<Job>,
     cfg: PoolConfig,

@@ -12,6 +12,19 @@
 //! pure Rust, and the integration tests pin the PJRT path against the
 //! native path so neither can drift.
 //!
+//! Two request paths sit on the shared math:
+//!
+//! * [`coordinator`] + [`pipeline`] — the *experiment* path: run the
+//!   paper's fixed (layer × module) sweep once through a worker pool,
+//! * [`serve`] — the *serving* path: a batched, multi-tenant core with
+//!   per-tenant admission control, fair-share scheduling, a
+//!   work-stealing worker pool and streaming p50/p95/p99-tracked
+//!   responses (`smoothrot serve`, `examples/serve.rs`).
+//!
+//! PJRT execution (the `xla` bindings) is optional: build with the
+//! `pjrt` cargo feature for the AOT hot path, or without it for the
+//! fully self-contained native mirror (see README.md).
+//!
 //! ## Module map
 //!
 //! | module | role |
@@ -21,14 +34,17 @@
 //! | [`quant`] | RTN symmetric quantizer, layer-wise error (Eq. 1–2) |
 //! | [`transforms`] | Hadamard construction + smoothing / rotation / smooth-rotation (Eq. 3–5) |
 //! | [`outlier`] | massive-outlier token model and Eq. 6–9 predictions |
-//! | [`metrics`] | channel magnitudes, quantization difficulty, kurtosis, Pearson |
+//! | [`metrics`] | channel magnitudes, quantization difficulty, kurtosis, Pearson, percentiles |
 //! | [`synth`] | native activation generator mirroring SynLlama's profiles |
 //! | [`jsonio`] | minimal JSON value model + parser + writer |
 //! | [`config`] | typed experiment configuration + file parser |
 //! | [`cli`] | dependency-free argument parser |
 //! | [`check`] | proptest-lite property-testing harness |
 //! | [`runtime`] | PJRT client wrapper, artifact manifest, executable cache |
-//! | [`coordinator`] | job scheduler: worker pool, batching, backpressure |
+//! | [`coordinator`] | experiment scheduler: worker pool, bounded queue, backpressure |
+//! | [`serve`] | batched multi-tenant serving core (admission, fair share, work stealing) |
+//! | [`pipeline`] | high-level experiment drivers tying runtime + coordinator |
+//! | [`policy`] | per-layer transform deployment recommendations (paper Sec. V) |
 //! | [`report`] | figure/table emitters (CSV, ASCII charts, markdown) |
 //! | [`bench_harness`] | criterion-lite timing harness used by `cargo bench` |
 
@@ -40,10 +56,13 @@ pub mod coordinator;
 pub mod jsonio;
 pub mod metrics;
 pub mod outlier;
+pub mod pipeline;
+pub mod policy;
 pub mod quant;
 pub mod report;
 pub mod rng;
 pub mod runtime;
+pub mod serve;
 pub mod synth;
 pub mod tensor;
 pub mod transforms;
@@ -56,5 +75,3 @@ pub const MODES: [&str; 4] = ["none", "smooth", "rotate", "smooth_rotate"];
 
 /// The four recorded module kinds, in paper order.
 pub const MODULES: [&str; 4] = ["k_proj", "o_proj", "gate_proj", "down_proj"];
-pub mod pipeline;
-pub mod policy;

@@ -7,7 +7,7 @@
 //! smoothrot sweep-alpha Sec. IV-C migration-strength sweep (native)
 //! smoothrot sweep-bits  bit-width ablation (native)
 //! smoothrot selfcheck   PJRT output vs golden.json + native mirror
-//! smoothrot serve       batching service demo over the coordinator
+//! smoothrot serve       batched multi-tenant serving core demo
 //! ```
 
 use std::io::Write as _;
@@ -53,11 +53,16 @@ fn app() -> App {
                 .opt("backend", "pjrt | native", Some("pjrt"))
                 .opt("sr-margin", "min error ratio before adopting smooth-rotation", Some("1.25"))
                 .opt("out", "policy JSON output path", Some("reports/policy.json")),
-            Command::new("serve", "batching service demo: stream requests through the coordinator")
-                .opt("artifacts", "artifacts directory", Some("artifacts"))
+            Command::new("serve", "batched multi-tenant serving demo over the serving core")
+                .opt("backend", "native | pjrt", Some("native"))
+                .opt("artifacts", "artifacts directory (pjrt backend)", Some("artifacts"))
                 .opt("requests", "number of synthetic requests", Some("64"))
+                .opt("tenants", "synthetic tenants (tenant 0 is the noisy neighbor)", Some("4"))
                 .opt("workers", "worker threads", Some("2"))
-                .opt("queue-cap", "bounded queue capacity", Some("16")),
+                .opt("max-batch", "max jobs coalesced into one executor dispatch", Some("8"))
+                .opt("queue-depth", "per-tenant admission queue capacity", Some("32"))
+                .opt("rows", "token rows per synthetic request (native backend)", Some("32"))
+                .flag("reject", "reject instead of block when a tenant queue is full"),
         ],
     }
 }
@@ -369,47 +374,136 @@ fn cmd_recommend(p: &smoothrot::cli::Parsed) -> Result<()> {
 }
 
 fn cmd_serve(p: &smoothrot::cli::Parsed) -> Result<()> {
-    use smoothrot::coordinator::{run_jobs, Job};
+    use smoothrot::coordinator::Job;
+    use smoothrot::serve::{
+        skewed_tenant, synthetic_requests, Admission, BatchExecutor, NativeBatchExecutor,
+        Response, ServeConfig, ServeMetrics, Server, SubmitError, TenantId,
+    };
+
+    /// Start a server, submit the stream (printing the first few
+    /// responses as they arrive), drain and summarize.
+    fn run_serve<E, F>(
+        cfg: ServeConfig,
+        requests: Vec<(TenantId, Job)>,
+        make_executor: F,
+    ) -> Result<(Vec<Response>, ServeMetrics)>
+    where
+        E: BatchExecutor,
+        F: Fn(usize) -> Result<E, String> + Send + Sync + 'static,
+    {
+        let total = requests.len();
+        let (server, rx) = Server::start(cfg, make_executor);
+        let mut rejected = 0usize;
+        for (tenant, job) in requests {
+            match server.submit(tenant, job) {
+                Ok(()) => {}
+                Err(SubmitError::Full { .. }) => rejected += 1,
+                Err(e) => return Err(anyhow!(e.to_string())),
+            }
+        }
+        let admitted = total - rejected;
+        let mut responses = Vec::with_capacity(admitted);
+        for r in rx.iter().take(admitted) {
+            if responses.len() < 5 {
+                println!(
+                    "  <- req {:>3} tenant {} {:>9} layer {:<2} batch {:>3} (size {}) {:>8.2} ms",
+                    r.id,
+                    r.tenant,
+                    r.module,
+                    r.layer,
+                    r.batch_id,
+                    r.batch_size,
+                    r.total_micros as f64 / 1e3
+                );
+            } else if responses.len() == 5 {
+                println!("  <- ... ({} more responses streaming)", admitted - 5);
+            }
+            responses.push(r);
+        }
+        let metrics = server.finish();
+        Ok((responses, metrics))
+    }
+
+    let backend = Backend::from_name(&p.get_or("backend", "native"))?;
     let artifacts = p.get_or("artifacts", "artifacts");
     let n_requests = p.get_usize("requests").map_err(|e| anyhow!(e))?.unwrap_or(64);
-    let pool = PoolConfig {
+    let n_tenants = p.get_usize("tenants").map_err(|e| anyhow!(e))?.unwrap_or(4).max(1);
+    let rows = p.get_usize("rows").map_err(|e| anyhow!(e))?.unwrap_or(32).max(1);
+    let cfg = ServeConfig {
         workers: p.get_usize("workers").map_err(|e| anyhow!(e))?.unwrap_or(2),
-        queue_cap: p.get_usize("queue-cap").map_err(|e| anyhow!(e))?.unwrap_or(16),
+        max_batch: p.get_usize("max-batch").map_err(|e| anyhow!(e))?.unwrap_or(8),
+        queue_depth: p.get_usize("queue-depth").map_err(|e| anyhow!(e))?.unwrap_or(32),
+        admission: if p.has_flag("reject") { Admission::Reject } else { Admission::Block },
+        ..ServeConfig::default()
     };
-    let rt = Runtime::new(&artifacts)?;
-    let cfg = rt.manifest().config.clone();
-    let workload = pipeline::load_workload(&rt)?;
 
-    // synthesize a request stream: random (module, layer) analysis asks
-    let mut rng = smoothrot::rng::Rng::new(99);
-    let jobs: Vec<Job> = (0..n_requests)
-        .map(|i| {
-            let module = smoothrot::MODULES[rng.below(4)];
-            let layer = rng.below(cfg.n_layers);
-            let (x, w) = workload.pair(&rt, module, layer);
-            Job { id: i as u64, layer, module, x, w, alpha: cfg.alpha as f32, bits: cfg.bits }
-        })
-        .collect();
-
-    println!("serving {n_requests} analysis requests through the coordinator ({} workers, queue cap {})", pool.workers, pool.queue_cap);
-    let dir = artifacts.clone();
-    let t0 = std::time::Instant::now();
-    let (results, metrics) =
-        run_jobs(jobs, pool, move |_| pipeline::PjrtExecutor::new(dir.clone())).map_err(|e| anyhow!(e))?;
-    let wall = t0.elapsed();
-
-    let mut lat: Vec<f64> = results.iter().map(|r| r.micros as f64 / 1000.0).collect();
-    lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let pct = |p: f64| lat[((lat.len() as f64 * p) as usize).min(lat.len() - 1)];
     println!(
-        "throughput: {:.1} req/s | latency p50 {:.2} ms p95 {:.2} ms p99 {:.2} ms | max queue depth {} | coordination overhead {:.1}%",
-        n_requests as f64 / wall.as_secs_f64(),
-        pct(0.50),
-        pct(0.95),
-        pct(0.99),
-        metrics.max_queue_depth,
-        100.0 * metrics.overhead_fraction(pool.workers),
+        "serve: {n_requests} requests, {n_tenants} tenants, {} workers, max-batch {}, \
+         queue-depth {}, {:?} admission, backend {backend:?}",
+        cfg.workers,
+        cfg.max_batch,
+        cfg.queue_depth,
+        cfg.admission,
     );
+
+    let (responses, metrics) = match backend {
+        Backend::Native => {
+            let requests = synthetic_requests(n_requests, n_tenants, rows, 2025);
+            run_serve(cfg, requests, |_| Ok(NativeBatchExecutor::new()))?
+        }
+        Backend::Pjrt => {
+            let rt = Runtime::new(&artifacts)?;
+            let model = rt.manifest().config.clone();
+            let workload = pipeline::load_workload(&rt)?;
+            let mut rng = smoothrot::rng::Rng::new(2025);
+            let requests: Vec<(TenantId, Job)> = (0..n_requests)
+                .map(|i| {
+                    let tenant = skewed_tenant(&mut rng, n_tenants);
+                    let module = smoothrot::MODULES[rng.below(4)];
+                    let layer = rng.below(model.n_layers);
+                    let (x, w) = workload.pair(&rt, module, layer);
+                    let job = Job {
+                        id: i as u64,
+                        layer,
+                        module,
+                        x,
+                        w,
+                        alpha: model.alpha as f32,
+                        bits: model.bits,
+                    };
+                    (tenant, job)
+                })
+                .collect();
+            let dir = artifacts.clone();
+            run_serve(cfg, requests, move |_| pipeline::PjrtExecutor::new(dir.clone()))?
+        }
+    };
+
+    println!("\n{}", metrics.summary());
+    if metrics.completed > 0 && metrics.errors == metrics.completed {
+        let first = responses
+            .iter()
+            .find_map(|r| r.out.as_ref().err())
+            .cloned()
+            .unwrap_or_default();
+        bail!("all {} requests errored; first error: {first}", metrics.completed);
+    }
+
+    // The advisor response: per-request error-minimizing transform.
+    let mut recommend = std::collections::BTreeMap::<&str, usize>::new();
+    for r in &responses {
+        if let Ok(out) = &r.out {
+            let best = Mode::ALL
+                .into_iter()
+                .min_by(|a, b| out.errors[a.index()].partial_cmp(&out.errors[b.index()]).unwrap())
+                .unwrap();
+            *recommend.entry(best.name()).or_default() += 1;
+        }
+    }
+    println!("per-request recommended transform (argmin error):");
+    for (mode, count) in recommend {
+        println!("  {mode:>14}: {count} requests");
+    }
     std::io::stdout().flush().ok();
     Ok(())
 }

@@ -5,7 +5,9 @@
 //!   deviation of the channel magnitudes,
 //! * excess kurtosis (FlatQuant's flatness proxy),
 //! * Pearson correlation (used for the >0.97 headline claim),
-//! * small summary/histogram helpers for the report layer.
+//! * small summary/histogram helpers for the report layer,
+//! * latency percentile summaries ([`Percentiles`]) for the serving
+//!   core's p50/p95/p99 tracking.
 
 use crate::tensor::Matrix;
 
@@ -107,6 +109,52 @@ impl Summary {
     }
 }
 
+/// p50/p95/p99 summary of a latency (or any) sample set, computed by
+/// nearest-rank on a sorted copy.
+///
+/// ```
+/// use smoothrot::metrics::Percentiles;
+/// let samples: Vec<f64> = (1..=100).map(|v| v as f64).collect();
+/// let p = Percentiles::of(&samples);
+/// assert_eq!(p.p50, 50.0);
+/// assert_eq!(p.p95, 95.0);
+/// assert_eq!(p.p99, 99.0);
+/// assert!(p.p50 <= p.p95 && p.p95 <= p.p99);
+/// ```
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Percentiles {
+    /// Median.
+    pub p50: f64,
+    /// 95th percentile.
+    pub p95: f64,
+    /// 99th percentile.
+    pub p99: f64,
+}
+
+impl Percentiles {
+    /// Summarize `samples` (empty or all-non-finite input yields zeros).
+    pub fn of(samples: &[f64]) -> Percentiles {
+        let mut v: Vec<f64> = samples.iter().copied().filter(|x| x.is_finite()).collect();
+        if v.is_empty() {
+            return Percentiles::default();
+        }
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        // nearest-rank: 1-based rank ceil(n * p), clamped into range
+        let pick = |p: f64| {
+            let rank = ((v.len() as f64) * p).ceil() as usize;
+            v[rank.saturating_sub(1).min(v.len() - 1)]
+        };
+        Percentiles { p50: pick(0.50), p95: pick(0.95), p99: pick(0.99) }
+    }
+
+    /// Summarize integer microsecond samples (the serving core's native
+    /// latency unit).
+    pub fn of_micros(samples: &[u64]) -> Percentiles {
+        let v: Vec<f64> = samples.iter().map(|&x| x as f64).collect();
+        Percentiles::of(&v)
+    }
+}
+
 /// Fixed-width histogram over [lo, hi].
 pub fn histogram(xs: &[f64], lo: f64, hi: f64, bins: usize) -> Vec<usize> {
     assert!(bins > 0 && hi > lo);
@@ -190,6 +238,27 @@ mod tests {
         assert_eq!(s.min, 1.0);
         assert_eq!(s.max, 3.0);
         assert!((s.mean - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentiles_empty_and_singleton() {
+        assert_eq!(Percentiles::of(&[]), Percentiles::default());
+        let p = Percentiles::of(&[7.0]);
+        assert_eq!((p.p50, p.p95, p.p99), (7.0, 7.0, 7.0));
+    }
+
+    #[test]
+    fn percentiles_ignore_non_finite() {
+        let p = Percentiles::of(&[1.0, f64::NAN, 2.0, f64::INFINITY, 3.0]);
+        assert!(p.p50.is_finite() && p.p99.is_finite());
+        assert!(p.p99 <= 3.0);
+    }
+
+    #[test]
+    fn percentiles_of_micros_matches_f64() {
+        let micros: Vec<u64> = (0..50).map(|v| v * 10).collect();
+        let floats: Vec<f64> = micros.iter().map(|&v| v as f64).collect();
+        assert_eq!(Percentiles::of_micros(&micros), Percentiles::of(&floats));
     }
 
     #[test]

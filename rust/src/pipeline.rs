@@ -4,9 +4,15 @@
 //! of those stays a thin shell.  Two backends:
 //!
 //! * **pjrt** — the production path: capture + analyze artifacts executed
-//!   through PJRT (alpha/bits fixed at AOT time by the manifest),
+//!   through PJRT (alpha/bits fixed at AOT time by the manifest; needs
+//!   the `pjrt` cargo feature),
 //! * **native** — the rust mirror: same jobs, pure-rust math; supports
 //!   arbitrary alpha/bits, used for sweeps and as the cross-check.
+//!
+//! Both executors also plug into the serving path: [`PjrtExecutor`] and
+//! [`crate::serve::NativeBatchExecutor`] implement the coordinator's
+//! [`Executor`], which the serving core adapts into batch dispatches
+//! (see [`crate::serve`]).
 
 use std::collections::BTreeMap;
 use std::path::PathBuf;
@@ -71,7 +77,9 @@ impl Executor for PjrtExecutor {
 
 /// The captured activations plus per-module weight stacks.
 pub struct Workload {
+    /// Output of the capture artifact (per-module activation stacks).
     pub capture: Capture,
+    /// Weight stack per module kind, loaded from `params/*.bin`.
     pub weights: BTreeMap<&'static str, Stack>,
 }
 
@@ -113,7 +121,9 @@ impl Workload {
 
 /// Result of a full-grid experiment run.
 pub struct ExperimentRun {
+    /// Per-(module, layer) analysis outputs.
     pub grid: ExperimentGrid,
+    /// Coordinator timing/backpressure counters for the run.
     pub metrics: RunMetrics,
 }
 

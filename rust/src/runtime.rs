@@ -11,6 +11,14 @@
 //!   milliseconds-to-seconds; execution is the hot path),
 //! * typed entry points: [`Runtime::capture`], [`Runtime::analyze`],
 //!   [`Runtime::transform`], [`Runtime::qdq_token`].
+//!
+//! The `xla` bindings (and their libxla_extension build) are not
+//! available in every environment, so everything that executes HLO is
+//! gated behind the `pjrt` cargo feature.  Without it, the manifest /
+//! weight-loading half of [`Runtime`] still works (it is pure Rust) and
+//! the execution entry points return a descriptive error, so the native
+//! mirror, the serving core and all default tests build and run
+//! everywhere.
 
 use std::cell::RefCell;
 use std::collections::BTreeMap;
@@ -248,30 +256,64 @@ impl AnalyzeOut {
 /// PJRT runtime with a compiled-executable cache.
 pub struct Runtime {
     manifest: Manifest,
+    #[cfg(feature = "pjrt")]
     client: xla::PjRtClient,
+    #[cfg(feature = "pjrt")]
     cache: RefCell<BTreeMap<String, std::rc::Rc<xla::PjRtLoadedExecutable>>>,
     /// Execution counters (for the coordinator's metrics).
     pub stats: RefCell<RuntimeStats>,
 }
 
+/// Compile/execute counters kept by [`Runtime`].
 #[derive(Clone, Copy, Debug, Default)]
 pub struct RuntimeStats {
+    /// Artifacts compiled so far (cache misses).
     pub compiles: u64,
+    /// Artifact executions so far.
     pub executions: u64,
 }
 
 impl Runtime {
-    /// Create a CPU PJRT client and load the manifest.
+    /// Create a CPU PJRT client (when built with the `pjrt` feature) and
+    /// load the manifest.
+    // `return` keeps the cfg-split branches as plain statements (an
+    // attribute on a tail expression would not parse on stable).
+    #[allow(clippy::needless_return)]
     pub fn new(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
         let manifest = Manifest::load(artifacts_dir)?;
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
-        Ok(Self { manifest, client, cache: RefCell::new(BTreeMap::new()), stats: RefCell::new(RuntimeStats::default()) })
+        #[cfg(feature = "pjrt")]
+        {
+            let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+            return Ok(Self {
+                manifest,
+                client,
+                cache: RefCell::new(BTreeMap::new()),
+                stats: RefCell::new(RuntimeStats::default()),
+            });
+        }
+        #[cfg(not(feature = "pjrt"))]
+        return Ok(Self { manifest, stats: RefCell::new(RuntimeStats::default()) });
     }
 
+    /// The parsed `manifest.json` the runtime was opened on.
     pub fn manifest(&self) -> &Manifest {
         &self.manifest
     }
 
+    /// Load a stacked weight parameter `[L, c_in, c_out]` from its .bin.
+    pub fn load_weight_stack(&self, param: &str, c_in: usize, c_out: usize) -> Result<Stack> {
+        let path = self.manifest.dir.join("params").join(format!("{param}.bin"));
+        let data = read_f32_bin(&path)?;
+        let l = self.manifest.config.n_layers;
+        if data.len() != l * c_in * c_out {
+            bail!("{param}.bin has {} elements, want {}", data.len(), l * c_in * c_out);
+        }
+        Ok(Stack::from_vec(l, c_in, c_out, data))
+    }
+}
+
+#[cfg(feature = "pjrt")]
+impl Runtime {
     /// Compile (or fetch from cache) an artifact's executable.
     pub fn executable(&self, name: &str) -> Result<std::rc::Rc<xla::PjRtLoadedExecutable>> {
         if let Some(exe) = self.cache.borrow().get(name) {
@@ -357,17 +399,6 @@ impl Runtime {
         })
     }
 
-    /// Load a stacked weight parameter `[L, c_in, c_out]` from its .bin.
-    pub fn load_weight_stack(&self, param: &str, c_in: usize, c_out: usize) -> Result<Stack> {
-        let path = self.manifest.dir.join("params").join(format!("{param}.bin"));
-        let data = read_f32_bin(&path)?;
-        let l = self.manifest.config.n_layers;
-        if data.len() != l * c_in * c_out {
-            bail!("{param}.bin has {} elements, want {}", data.len(), l * c_in * c_out);
-        }
-        Ok(Stack::from_vec(l, c_in, c_out, data))
-    }
-
     /// Run the fused analyze artifact on one (X, W) pair.
     pub fn analyze(&self, x: &Matrix, w: &Matrix) -> Result<AnalyzeOut> {
         let name = format!("analyze_{}x{}", x.cols(), w.cols());
@@ -422,6 +453,46 @@ impl Runtime {
             x.cols(),
             out[0].to_vec::<f32>().map_err(|e| anyhow!("{name}: {e:?}"))?,
         ))
+    }
+}
+
+/// Stubs for builds without the `pjrt` feature: the manifest / weight
+/// half of [`Runtime`] works everywhere, while every entry point that
+/// would execute HLO reports how to enable the real backend.  Keeping
+/// the signatures identical lets the pipeline, CLI and examples compile
+/// unchanged.
+#[cfg(not(feature = "pjrt"))]
+impl Runtime {
+    fn no_pjrt<T>(what: &str) -> Result<T> {
+        Err(anyhow!(
+            "{what} requires the PJRT backend, but this build has the `pjrt` cargo feature \
+             disabled; use the native backend, or see README.md for enabling PJRT"
+        ))
+    }
+
+    /// Compile an artifact's executable (PJRT builds only).
+    pub fn executable(&self, name: &str) -> Result<()> {
+        Self::no_pjrt(&format!("compiling artifact {name:?}"))
+    }
+
+    /// Run the full SynLlama forward (PJRT builds only).
+    pub fn capture(&self) -> Result<Capture> {
+        Self::no_pjrt("the capture artifact")
+    }
+
+    /// Run the fused analyze artifact (PJRT builds only).
+    pub fn analyze(&self, _x: &Matrix, _w: &Matrix) -> Result<AnalyzeOut> {
+        Self::no_pjrt("the analyze artifact")
+    }
+
+    /// Run a standalone transform artifact (PJRT builds only).
+    pub fn transform(&self, _mode: Mode, _x: &Matrix, _w: &Matrix) -> Result<(Matrix, Matrix)> {
+        Self::no_pjrt("the transform artifacts")
+    }
+
+    /// Run the per-token quantize-dequantize artifact (PJRT builds only).
+    pub fn qdq_token(&self, _x: &Matrix) -> Result<Matrix> {
+        Self::no_pjrt("the qdq artifact")
     }
 }
 

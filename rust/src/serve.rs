@@ -1,0 +1,1215 @@
+//! Batched, multi-tenant serving core — the request path of the L3
+//! host.
+//!
+//! The experiment coordinator ([`crate::coordinator`]) answers "run this
+//! fixed sweep once"; this module answers the production question the
+//! paper motivates (quantization "reduces the serving costs of LLMs"):
+//! many tenants stream analysis requests concurrently, and the host must
+//! batch compatible work, keep every tenant responsive, and bound its
+//! own memory.
+//!
+//! ```text
+//!   tenants --submit()--> per-tenant bounded queues   (admission control)
+//!                               |
+//!                       scheduler thread              (fair-share RR +
+//!                               |                      key-coalescing batcher)
+//!                     per-worker batch deques         (work-stealing pool)
+//!                        |       |       |
+//!                      worker  worker  worker         (one executor each)
+//!                        \       |       /
+//!                     streaming Response channel + latency tracking
+//! ```
+//!
+//! Design points:
+//!
+//! * **Admission control** — each tenant owns a bounded queue of
+//!   [`ServeConfig::queue_depth`] requests.  A full queue either blocks
+//!   the submitter or rejects the request ([`Admission`]), and the
+//!   scheduler keeps at most ~2 batches per worker in flight, so one
+//!   noisy tenant can neither exhaust host memory nor push out other
+//!   tenants — total buffered work is bounded by
+//!   `tenants x queue_depth + 2 x workers x max_batch`.
+//! * **Batching** — the scheduler coalesces requests whose [`BatchKey`]
+//!   (module, bits, alpha, shape) matches into one dispatch of at most
+//!   [`ServeConfig::max_batch`] jobs, lingering briefly for stragglers.
+//!   Within a batch the executor amortizes per-dispatch scheduling cost
+//!   and shared preparation (e.g. [`NativeBatchExecutor`] builds each
+//!   Hadamard rotation once per width).  Requests of the same tenant and
+//!   key stay FIFO relative to each other.
+//! * **Fair share** — the batch *seed* rotates round-robin over tenants,
+//!   and batch *filling* takes at most one request per tenant per pass,
+//!   so a tenant submitting 10x the load gets batches, not the machine.
+//! * **Work stealing** — batches land on the least-loaded worker's
+//!   deque; an idle worker steals from the back of the longest peer
+//!   deque, keeping the pool busy under skewed batch costs.
+//! * **Streaming delivery** — every completed request is sent on an
+//!   unbounded channel as its batch finishes, with per-request queue /
+//!   execution / total latency; [`ServeMetrics`] summarizes p50/p95/p99
+//!   via [`crate::metrics::Percentiles`].
+//!
+//! The pool is generic over [`BatchExecutor`]; any per-job
+//! [`Executor`] (e.g. the PJRT-backed one) gets a batch adapter for
+//! free, and executors are built *inside* their worker thread via a
+//! factory, so non-`Send` executors (PJRT handles) work unchanged.
+//!
+//! ```
+//! use smoothrot::coordinator::Job;
+//! use smoothrot::serve::{serve_all, NativeBatchExecutor, ServeConfig};
+//! use smoothrot::tensor::Matrix;
+//!
+//! // two tenants, six analysis requests
+//! let requests: Vec<(usize, Job)> = (0..6)
+//!     .map(|i| {
+//!         let job = Job {
+//!             id: i as u64,
+//!             layer: 0,
+//!             module: "k_proj",
+//!             x: Matrix::zeros(4, 8),
+//!             w: Matrix::zeros(8, 4),
+//!             alpha: 0.5,
+//!             bits: 4,
+//!         };
+//!         (i % 2, job)
+//!     })
+//!     .collect();
+//! let (responses, metrics) =
+//!     serve_all(ServeConfig::default(), requests, |_| Ok(NativeBatchExecutor::new())).unwrap();
+//! assert_eq!(responses.len(), 6);
+//! assert_eq!(metrics.completed, 6);
+//! assert_eq!(metrics.per_tenant.len(), 2);
+//! ```
+
+use std::collections::{BTreeMap, VecDeque};
+use std::fmt;
+use std::sync::mpsc::{self, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::{Executor, Job, NativeExecutor};
+use crate::metrics::Percentiles;
+use crate::runtime::AnalyzeOut;
+use crate::transforms::RotationCache;
+
+/// Identifier of one tenant (caller) of the serving core.
+pub type TenantId = usize;
+
+/// What to do when a tenant's admission queue is full.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Admission {
+    /// Block the submitting thread until the scheduler frees space.
+    Block,
+    /// Fail fast with [`SubmitError::Full`] (HTTP-429 semantics).
+    Reject,
+}
+
+/// Serving-core configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct ServeConfig {
+    /// Worker threads (each owns one executor).
+    pub workers: usize,
+    /// Most jobs coalesced into a single executor dispatch.
+    pub max_batch: usize,
+    /// Per-tenant admission queue capacity.
+    pub queue_depth: usize,
+    /// Behavior when a tenant queue is full.
+    pub admission: Admission,
+    /// How long the scheduler lingers for more same-key work before
+    /// dispatching a partial batch.  Zero dispatches immediately.
+    pub linger_micros: u64,
+    /// Hold scheduling until shutdown/drain — or, under
+    /// [`Admission::Block`], until some tenant queue saturates, so a
+    /// blocked submitter can never deadlock against a paused
+    /// scheduler.  With every request queued up front (below capacity)
+    /// this makes batch formation deterministic, which the scheduler
+    /// tests and the batching benchmarks rely on.
+    pub paused: bool,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self {
+            workers: 2,
+            max_batch: 8,
+            queue_depth: 32,
+            admission: Admission::Block,
+            linger_micros: 200,
+            paused: false,
+        }
+    }
+}
+
+/// Why a submission was not admitted.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum SubmitError {
+    /// The tenant's queue is at capacity (only under [`Admission::Reject`]).
+    Full {
+        /// The tenant whose queue was full.
+        tenant: TenantId,
+    },
+    /// The server has been shut down.
+    Closed,
+}
+
+impl fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SubmitError::Full { tenant } => write!(f, "tenant {tenant}: admission queue full"),
+            SubmitError::Closed => write!(f, "server is shut down"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
+/// Coalescing key: jobs may share an executor dispatch only when every
+/// field matches.  Shape is part of the key because the PJRT analyze
+/// artifacts are specialized per (c_in, c_out); token-row counts may
+/// differ within a batch.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct BatchKey {
+    /// Module kind (one of [`crate::MODULES`]).
+    pub module: &'static str,
+    /// Quantization bit width.
+    pub bits: u32,
+    /// Migration strength, stored as raw bits so the key is `Eq`/`Hash`.
+    alpha_bits: u32,
+    /// Activation width / weight input channels.
+    pub c_in: usize,
+    /// Weight output channels.
+    pub c_out: usize,
+}
+
+impl BatchKey {
+    /// The key of one job.
+    pub fn of(job: &Job) -> BatchKey {
+        BatchKey {
+            module: job.module,
+            bits: job.bits,
+            alpha_bits: job.alpha.to_bits(),
+            c_in: job.x.cols(),
+            c_out: job.w.cols(),
+        }
+    }
+
+    /// Migration strength alpha.
+    pub fn alpha(&self) -> f32 {
+        f32::from_bits(self.alpha_bits)
+    }
+}
+
+/// Anything that can process a coalesced batch of jobs.
+///
+/// The returned vector must hold exactly one result per job, in job
+/// order (the pool pads/truncates defensively if an implementation
+/// miscounts).  Every per-job [`Executor`] is a `BatchExecutor` via a
+/// blanket adapter that runs the jobs sequentially.
+pub trait BatchExecutor {
+    /// Process every job of one batch.
+    fn run_batch(&mut self, jobs: &[Job]) -> Vec<Result<AnalyzeOut, String>>;
+}
+
+impl<E: Executor> BatchExecutor for E {
+    fn run_batch(&mut self, jobs: &[Job]) -> Vec<Result<AnalyzeOut, String>> {
+        jobs.iter().map(|j| self.run(j)).collect()
+    }
+}
+
+/// Native analysis executor with per-width rotation reuse: the
+/// Hadamard rotation (O(d^2) to build) is constructed once per distinct
+/// activation width and shared by every job the executor ever sees —
+/// the serving-path mirror of [`crate::coordinator::NativeExecutor`].
+/// It implements [`Executor`], so the blanket adapter makes it a
+/// [`BatchExecutor`] whose shared prep is amortized across each batch.
+#[derive(Debug, Default)]
+pub struct NativeBatchExecutor {
+    cache: RotationCache,
+}
+
+impl NativeBatchExecutor {
+    /// Executor with an empty rotation cache.
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl Executor for NativeBatchExecutor {
+    fn run(&mut self, job: &Job) -> Result<AnalyzeOut, String> {
+        NativeExecutor::analyze_cached(&job.x, &job.w, job.bits, job.alpha, &mut self.cache)
+    }
+}
+
+/// One completed request, streamed to the response channel as its batch
+/// finishes.
+#[derive(Clone, Debug)]
+pub struct Response {
+    /// The submitted job id.
+    pub id: u64,
+    /// Submitting tenant.
+    pub tenant: TenantId,
+    /// Module kind of the job.
+    pub module: &'static str,
+    /// Layer index of the job.
+    pub layer: usize,
+    /// Worker that executed the batch.
+    pub worker: usize,
+    /// Batch this request was coalesced into.
+    pub batch_id: u64,
+    /// Number of jobs in that batch.
+    pub batch_size: usize,
+    /// Analysis output, or the executor's error.
+    pub out: Result<AnalyzeOut, String>,
+    /// Microseconds from admission to batch execution start.
+    pub queue_micros: u64,
+    /// Microseconds the whole batch spent in the executor.
+    pub exec_micros: u64,
+    /// Microseconds from admission to completion.
+    pub total_micros: u64,
+}
+
+/// Per-tenant request counters.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TenantStats {
+    /// Requests admitted.
+    pub submitted: u64,
+    /// Requests completed (including errored ones).
+    pub completed: u64,
+    /// Requests rejected at admission.
+    pub rejected: u64,
+}
+
+/// End-of-run summary returned by [`Server::finish`].
+#[derive(Clone, Debug, Default)]
+pub struct ServeMetrics {
+    /// Requests admitted across all tenants.
+    pub submitted: u64,
+    /// Requests completed (including errored ones).
+    pub completed: u64,
+    /// Requests rejected at admission.
+    pub rejected: u64,
+    /// Completed requests whose executor returned an error.
+    pub errors: u64,
+    /// Batches dispatched.
+    pub batches: u64,
+    /// Batches a worker stole from a peer's deque.
+    pub steals: u64,
+    /// Largest batch observed.
+    pub max_batch_observed: usize,
+    /// Wall time from server start to the end of [`Server::finish`].
+    pub wall_micros: u64,
+    /// Total executor time across all batches.
+    pub exec_micros_total: u64,
+    /// p50/p95/p99 of per-request end-to-end latency (microseconds),
+    /// over a bounded reservoir of the most recent ~65k samples.
+    pub latency: Percentiles,
+    /// Per-tenant counters.
+    pub per_tenant: BTreeMap<TenantId, TenantStats>,
+    /// Batches executed by each worker.
+    pub per_worker_batches: Vec<u64>,
+}
+
+impl ServeMetrics {
+    /// Completed requests per wall-clock second.
+    pub fn throughput(&self) -> f64 {
+        if self.wall_micros == 0 {
+            return 0.0;
+        }
+        self.completed as f64 / (self.wall_micros as f64 / 1e6)
+    }
+
+    /// Mean jobs per dispatched batch.
+    pub fn mean_batch(&self) -> f64 {
+        if self.batches == 0 {
+            return 0.0;
+        }
+        self.completed as f64 / self.batches as f64
+    }
+
+    /// Human-readable multi-line summary (used by the CLI and examples).
+    pub fn summary(&self) -> String {
+        let mut s = format!(
+            "throughput {:.1} req/s | latency ms p50 {:.2} p95 {:.2} p99 {:.2}\n\
+             batches {} (mean size {:.2}, max {}) | steals {} | rejected {} | errors {}\n",
+            self.throughput(),
+            self.latency.p50 / 1e3,
+            self.latency.p95 / 1e3,
+            self.latency.p99 / 1e3,
+            self.batches,
+            self.mean_batch(),
+            self.max_batch_observed,
+            self.steals,
+            self.rejected,
+            self.errors,
+        );
+        for (tenant, t) in &self.per_tenant {
+            s.push_str(&format!(
+                "  tenant {tenant}: submitted {} completed {} rejected {}\n",
+                t.submitted, t.completed, t.rejected
+            ));
+        }
+        s
+    }
+}
+
+/// A request waiting in a tenant queue.
+struct Pending {
+    job: Job,
+    tenant: TenantId,
+    admitted: Instant,
+}
+
+/// Response-side metadata of one batched request (everything small the
+/// worker needs after execution, so the jobs — whose matrices dominate
+/// request memory — go to the executor without being cloned).
+struct BatchMeta {
+    id: u64,
+    tenant: TenantId,
+    module: &'static str,
+    layer: usize,
+    admitted: Instant,
+}
+
+/// A coalesced dispatch unit; `jobs[i]` corresponds to `meta[i]`.
+struct Batch {
+    id: u64,
+    jobs: Vec<Job>,
+    meta: Vec<BatchMeta>,
+}
+
+/// Counters accumulated under the center lock.
+#[derive(Default)]
+struct CenterStats {
+    submitted: u64,
+    completed: u64,
+    rejected: u64,
+    errors: u64,
+    batches: u64,
+    max_batch_observed: usize,
+    exec_micros_total: u64,
+    latencies: Vec<u64>,
+    per_tenant: BTreeMap<TenantId, TenantStats>,
+    per_worker_batches: Vec<u64>,
+}
+
+/// Admission + scheduling state (one lock).
+struct Center {
+    queues: BTreeMap<TenantId, VecDeque<Pending>>,
+    /// Tenant ids in first-seen order; the scheduler's round-robin ring.
+    ring: Vec<TenantId>,
+    /// Next ring position to seed a batch from.
+    cursor: usize,
+    /// Total requests across all tenant queues.
+    queued: usize,
+    /// Requests popped into batches but not yet completed.
+    in_flight: usize,
+    closed: bool,
+    next_batch_id: u64,
+    stats: CenterStats,
+}
+
+/// Worker-pool state: per-worker batch deques (one lock).
+struct Pool {
+    queues: Vec<VecDeque<Batch>>,
+    done: bool,
+    steals: u64,
+}
+
+struct Shared {
+    cfg: ServeConfig,
+    center: Mutex<Center>,
+    /// Wakes the scheduler on new work / shutdown.
+    sched_cv: Condvar,
+    /// Wakes blocked submitters when queue space frees up.
+    admit_cv: Condvar,
+    pool: Mutex<Pool>,
+    /// Wakes idle workers on new batches / shutdown.
+    pool_cv: Condvar,
+}
+
+/// Cap on retained latency samples: percentile quality degrades
+/// gracefully under overwrite, memory does not grow with uptime.
+const LATENCY_RESERVOIR: usize = 1 << 16;
+
+fn lock<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    match m.lock() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
+
+/// Form one batch from the tenant queues.  Caller guarantees
+/// `center.queued > 0` and holds the center lock.
+fn form_batch(c: &mut Center, max_batch: usize) -> Batch {
+    let n = c.ring.len();
+    debug_assert!(n > 0 && c.queued > 0);
+    // Seed: the oldest request of the next non-empty tenant in ring
+    // order.  Seeding from queue fronts means no request waits forever.
+    let mut seed_pos = c.cursor % n;
+    for k in 0..n {
+        let pos = (c.cursor + k) % n;
+        if !c.queues[&c.ring[pos]].is_empty() {
+            seed_pos = pos;
+            break;
+        }
+    }
+    c.cursor = (seed_pos + 1) % n;
+    let seed_tenant = c.ring[seed_pos];
+    let first = c.queues.get_mut(&seed_tenant).unwrap().pop_front().unwrap();
+    let key = BatchKey::of(&first.job);
+    let mut items = vec![first];
+    // Fill: round-robin passes over the ring starting after the seed,
+    // taking at most one matching request per tenant per pass (fair
+    // share).  Matching requests may sit behind other keys, so each
+    // tenant queue is scanned in order — same-key requests of a tenant
+    // therefore stay FIFO relative to each other.
+    'fill: loop {
+        let mut progressed = false;
+        for k in 0..n {
+            if items.len() >= max_batch {
+                break 'fill;
+            }
+            let t = c.ring[(seed_pos + 1 + k) % n];
+            let q = c.queues.get_mut(&t).unwrap();
+            if let Some(i) = q.iter().position(|p| BatchKey::of(&p.job) == key) {
+                items.push(q.remove(i).unwrap());
+                progressed = true;
+            }
+        }
+        if !progressed {
+            break;
+        }
+    }
+    c.queued -= items.len();
+    c.in_flight += items.len();
+    c.stats.batches += 1;
+    c.stats.max_batch_observed = c.stats.max_batch_observed.max(items.len());
+    let id = c.next_batch_id;
+    c.next_batch_id += 1;
+    let mut jobs = Vec::with_capacity(items.len());
+    let mut meta = Vec::with_capacity(items.len());
+    for p in items {
+        meta.push(BatchMeta {
+            id: p.job.id,
+            tenant: p.tenant,
+            module: p.job.module,
+            layer: p.job.layer,
+            admitted: p.admitted,
+        });
+        jobs.push(p.job);
+    }
+    Batch { id, jobs, meta }
+}
+
+/// Handle to a running serving core.
+///
+/// Built by [`Server::start`]; submissions go through [`Server::submit`]
+/// and results stream on the [`Receiver`] returned at start.  Dropping
+/// the server (or calling [`Server::finish`]) drains every admitted
+/// request, then joins the scheduler and worker threads.
+pub struct Server {
+    shared: Arc<Shared>,
+    scheduler: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
+    started: Instant,
+}
+
+impl Server {
+    /// Spawn the scheduler and `cfg.workers` worker threads.
+    ///
+    /// `make_executor(worker_idx)` runs *inside* each worker thread, so
+    /// non-`Send` executors (PJRT) work; a failing factory does not kill
+    /// the pool — that worker reports every job it receives as errored,
+    /// mirroring [`crate::coordinator::run_jobs`].
+    pub fn start<E, F>(cfg: ServeConfig, make_executor: F) -> (Server, Receiver<Response>)
+    where
+        E: BatchExecutor,
+        F: Fn(usize) -> Result<E, String> + Send + Sync + 'static,
+    {
+        assert!(cfg.workers >= 1, "need at least one worker");
+        assert!(cfg.max_batch >= 1, "max_batch must be >= 1");
+        assert!(cfg.queue_depth >= 1, "queue_depth must be >= 1");
+
+        let shared = Arc::new(Shared {
+            cfg,
+            center: Mutex::new(Center {
+                queues: BTreeMap::new(),
+                ring: Vec::new(),
+                cursor: 0,
+                queued: 0,
+                in_flight: 0,
+                closed: false,
+                next_batch_id: 0,
+                stats: CenterStats {
+                    per_worker_batches: vec![0; cfg.workers],
+                    ..CenterStats::default()
+                },
+            }),
+            sched_cv: Condvar::new(),
+            admit_cv: Condvar::new(),
+            pool: Mutex::new(Pool {
+                queues: (0..cfg.workers).map(|_| VecDeque::new()).collect(),
+                done: false,
+                steals: 0,
+            }),
+            pool_cv: Condvar::new(),
+        });
+        let (res_tx, res_rx) = mpsc::channel::<Response>();
+        let make_executor = Arc::new(make_executor);
+
+        let mut workers = Vec::with_capacity(cfg.workers);
+        for idx in 0..cfg.workers {
+            let shared = Arc::clone(&shared);
+            let tx = res_tx.clone();
+            let mk = Arc::clone(&make_executor);
+            workers.push(std::thread::spawn(move || worker_loop(idx, shared, tx, mk)));
+        }
+        drop(res_tx);
+
+        let sched_shared = Arc::clone(&shared);
+        let scheduler = std::thread::spawn(move || scheduler_loop(sched_shared));
+
+        (
+            Server { shared, scheduler: Some(scheduler), workers, started: Instant::now() },
+            res_rx,
+        )
+    }
+
+    /// Admit one request for `tenant`.
+    ///
+    /// With [`Admission::Block`] a full tenant queue blocks the caller
+    /// until the scheduler frees space; with [`Admission::Reject`] it
+    /// returns [`SubmitError::Full`] immediately.
+    pub fn submit(&self, tenant: TenantId, job: Job) -> Result<(), SubmitError> {
+        let mut center = lock(&self.shared.center);
+        loop {
+            if center.closed {
+                return Err(SubmitError::Closed);
+            }
+            if !center.queues.contains_key(&tenant) {
+                center.queues.insert(tenant, VecDeque::new());
+                center.ring.push(tenant);
+            }
+            if center.queues[&tenant].len() < self.shared.cfg.queue_depth {
+                let pending = Pending { job, tenant, admitted: Instant::now() };
+                center.queues.get_mut(&tenant).unwrap().push_back(pending);
+                center.queued += 1;
+                center.stats.submitted += 1;
+                center.stats.per_tenant.entry(tenant).or_default().submitted += 1;
+                self.shared.sched_cv.notify_one();
+                return Ok(());
+            }
+            match self.shared.cfg.admission {
+                Admission::Reject => {
+                    center.stats.rejected += 1;
+                    center.stats.per_tenant.entry(tenant).or_default().rejected += 1;
+                    return Err(SubmitError::Full { tenant });
+                }
+                Admission::Block => {
+                    // Wake the scheduler even when paused: a saturated
+                    // queue overrides the pause (see scheduler_loop),
+                    // so a blocked submitter always makes progress.
+                    self.shared.sched_cv.notify_all();
+                    center = match self.shared.admit_cv.wait(center) {
+                        Ok(g) => g,
+                        Err(poisoned) => poisoned.into_inner(),
+                    };
+                }
+            }
+        }
+    }
+
+    /// Close admissions, drain every queued request, join all threads
+    /// and return the run summary.  Responses not yet read remain
+    /// buffered on the receiver.
+    pub fn finish(mut self) -> ServeMetrics {
+        self.shutdown();
+        let wall = self.started.elapsed().as_micros() as u64;
+        let center = lock(&self.shared.center);
+        let pool = lock(&self.shared.pool);
+        debug_assert_eq!(center.queued, 0, "drain left requests queued");
+        debug_assert_eq!(center.in_flight, 0, "drain left requests in flight");
+        let s = &center.stats;
+        ServeMetrics {
+            submitted: s.submitted,
+            completed: s.completed,
+            rejected: s.rejected,
+            errors: s.errors,
+            batches: s.batches,
+            steals: pool.steals,
+            max_batch_observed: s.max_batch_observed,
+            wall_micros: wall,
+            exec_micros_total: s.exec_micros_total,
+            latency: Percentiles::of_micros(&s.latencies),
+            per_tenant: s.per_tenant.clone(),
+            per_worker_batches: s.per_worker_batches.clone(),
+        }
+    }
+
+    fn shutdown(&mut self) {
+        {
+            let mut center = lock(&self.shared.center);
+            center.closed = true;
+        }
+        self.shared.sched_cv.notify_all();
+        self.shared.admit_cv.notify_all();
+        if let Some(h) = self.scheduler.take() {
+            let _ = h.join();
+        }
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Whether any tenant queue is at capacity (pause override: a blocked
+/// submitter needs the scheduler to free space).
+fn saturated(c: &Center, depth: usize) -> bool {
+    c.queues.values().any(|q| q.len() >= depth)
+}
+
+fn scheduler_loop(shared: Arc<Shared>) {
+    let cfg = shared.cfg;
+    // Under Reject admission nobody ever blocks on a full queue, so the
+    // pause may hold through saturation (tests rely on that); under
+    // Block it must yield or a submitter would deadlock.
+    let unblock_on_full = cfg.admission == Admission::Block;
+    let mut center = lock(&shared.center);
+    loop {
+        if cfg.paused
+            && !center.closed
+            && !(unblock_on_full && saturated(&center, cfg.queue_depth))
+        {
+            center = match shared.sched_cv.wait(center) {
+                Ok(g) => g,
+                Err(p) => p.into_inner(),
+            };
+            continue;
+        }
+        if center.queued == 0 {
+            if center.closed {
+                break;
+            }
+            center = match shared.sched_cv.wait(center) {
+                Ok(g) => g,
+                Err(p) => p.into_inner(),
+            };
+            continue;
+        }
+        // Dispatch throttle: keep at most ~2 batches of work per worker
+        // in flight.  Without this the scheduler would drain tenant
+        // queues into the (unbounded) worker deques as fast as batches
+        // form, and admission control would bound nothing — memory
+        // would grow with total submissions, not tenants x queue_depth.
+        // Workers notify sched_cv as batches complete.
+        let inflight_cap = cfg.workers * cfg.max_batch * 2;
+        if center.in_flight >= inflight_cap {
+            center = match shared.sched_cv.wait(center) {
+                Ok(g) => g,
+                Err(p) => p.into_inner(),
+            };
+            continue;
+        }
+        // Linger for stragglers when the backlog cannot fill a batch
+        // yet (skipped when paused: the backlog is already final).
+        // Submits notify sched_cv, so each wait must be re-armed
+        // against a fixed deadline — otherwise the first arrival would
+        // cancel the window and cap live batches at ~2 jobs.
+        if !cfg.paused && !center.closed && cfg.linger_micros > 0 && center.queued < cfg.max_batch
+        {
+            let deadline = Instant::now() + Duration::from_micros(cfg.linger_micros);
+            while center.queued > 0 && center.queued < cfg.max_batch && !center.closed {
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                center = match shared.sched_cv.wait_timeout(center, deadline - now) {
+                    Ok((g, _)) => g,
+                    Err(p) => p.into_inner().0,
+                };
+            }
+            if center.queued == 0 {
+                continue;
+            }
+        }
+        let batch = form_batch(&mut center, cfg.max_batch);
+        shared.admit_cv.notify_all();
+        drop(center);
+        {
+            let mut pool = lock(&shared.pool);
+            let idx = (0..pool.queues.len()).min_by_key(|&i| pool.queues[i].len()).unwrap();
+            pool.queues[idx].push_back(batch);
+            shared.pool_cv.notify_one();
+        }
+        center = lock(&shared.center);
+    }
+    drop(center);
+    let mut pool = lock(&shared.pool);
+    pool.done = true;
+    shared.pool_cv.notify_all();
+}
+
+fn worker_loop<E, F>(idx: usize, shared: Arc<Shared>, tx: Sender<Response>, mk: Arc<F>)
+where
+    E: BatchExecutor,
+    F: Fn(usize) -> Result<E, String> + Send + Sync + 'static,
+{
+    let mut init_error = String::new();
+    let mut exec = match mk(idx) {
+        Ok(e) => Some(e),
+        Err(msg) => {
+            init_error = msg;
+            None
+        }
+    };
+    loop {
+        // Pop from the own deque front; steal from the back of the
+        // longest peer deque when empty.
+        let batch = {
+            let mut pool = lock(&shared.pool);
+            loop {
+                if let Some(b) = pool.queues[idx].pop_front() {
+                    break Some(b);
+                }
+                let victim = (0..pool.queues.len())
+                    .filter(|&i| i != idx && !pool.queues[i].is_empty())
+                    .max_by_key(|&i| pool.queues[i].len());
+                if let Some(v) = victim {
+                    let b = pool.queues[v].pop_back().unwrap();
+                    pool.steals += 1;
+                    break Some(b);
+                }
+                if pool.done {
+                    break None;
+                }
+                pool = match shared.pool_cv.wait(pool) {
+                    Ok(g) => g,
+                    Err(p) => p.into_inner(),
+                };
+            }
+        };
+        let Some(batch) = batch else { break };
+
+        let t0 = Instant::now();
+        let mut results: Vec<Result<AnalyzeOut, String>> = match exec.as_mut() {
+            Some(e) => e.run_batch(&batch.jobs),
+            None => batch
+                .jobs
+                .iter()
+                .map(|j| {
+                    Err(format!(
+                        "worker {idx}: job {} dropped (executor init failed: {init_error})",
+                        j.id
+                    ))
+                })
+                .collect(),
+        };
+        let exec_micros = t0.elapsed().as_micros() as u64;
+        let batch_size = batch.jobs.len();
+        if results.len() != batch_size {
+            results.truncate(batch_size);
+            results.resize_with(batch_size, || {
+                Err(format!("worker {idx}: batch executor returned a wrong result count"))
+            });
+        }
+
+        let mut responses = Vec::with_capacity(batch_size);
+        {
+            let mut center = lock(&shared.center);
+            for (m, out) in batch.meta.into_iter().zip(results) {
+                let queue_micros = t0.saturating_duration_since(m.admitted).as_micros() as u64;
+                let total_micros = m.admitted.elapsed().as_micros() as u64;
+                let sample_idx = center.stats.completed;
+                center.stats.completed += 1;
+                if out.is_err() {
+                    center.stats.errors += 1;
+                }
+                // Bounded latency reservoir: the server may live
+                // indefinitely, so samples beyond the cap overwrite a
+                // deterministic pseudo-random slot (Fibonacci hash of
+                // the sample index) instead of growing the Vec.
+                if center.stats.latencies.len() < LATENCY_RESERVOIR {
+                    center.stats.latencies.push(total_micros);
+                } else {
+                    let slot = (sample_idx.wrapping_mul(0x9E37_79B9_7F4A_7C15) >> 16) as usize
+                        % LATENCY_RESERVOIR;
+                    center.stats.latencies[slot] = total_micros;
+                }
+                center.stats.per_tenant.entry(m.tenant).or_default().completed += 1;
+                responses.push(Response {
+                    id: m.id,
+                    tenant: m.tenant,
+                    module: m.module,
+                    layer: m.layer,
+                    worker: idx,
+                    batch_id: batch.id,
+                    batch_size,
+                    out,
+                    queue_micros,
+                    exec_micros,
+                    total_micros,
+                });
+            }
+            center.in_flight -= batch_size;
+            center.stats.exec_micros_total += exec_micros;
+            center.stats.per_worker_batches[idx] += 1;
+        }
+        // Wake the scheduler: completed work frees in-flight budget.
+        shared.sched_cv.notify_one();
+        for r in responses {
+            // The receiver may have been dropped; completion is still
+            // recorded in the metrics above.
+            let _ = tx.send(r);
+        }
+    }
+}
+
+/// Draw a tenant id with the demo skew: tenant 0 is the noisy neighbor
+/// (~40% of the load) and the rest share the remainder uniformly.
+pub fn skewed_tenant(rng: &mut crate::rng::Rng, tenants: usize) -> TenantId {
+    if tenants <= 1 || rng.below(10) < 4 {
+        0
+    } else {
+        1 + rng.below(tenants - 1)
+    }
+}
+
+/// Synthetic multi-tenant request stream over paper-shaped activations
+/// (via [`crate::synth::module_stream`], so no AOT artifacts are
+/// needed): modules and layers drawn uniformly at SynLlama scale,
+/// tenants drawn by [`skewed_tenant`], `rows` token rows per request.
+/// Shared by the `smoothrot serve` native backend and the serving
+/// example.
+pub fn synthetic_requests(
+    n: usize,
+    tenants: usize,
+    rows: usize,
+    seed: u64,
+) -> Vec<(TenantId, Job)> {
+    let model = crate::config::ModelConfig::default();
+    let mut rng = crate::rng::Rng::new(seed);
+    (0..n)
+        .map(|i| {
+            let tenant = skewed_tenant(&mut rng, tenants);
+            let module = crate::MODULES[rng.below(4)];
+            let layer = rng.below(model.n_layers);
+            let (mut spec, c_out) =
+                crate::synth::module_stream(module, seed.wrapping_add(7 + i as u64))
+                    .expect("known module");
+            spec.n_tokens = rows.max(1);
+            let job = Job {
+                id: i as u64,
+                layer,
+                module,
+                x: spec.layer(layer),
+                w: spec.weight(c_out, layer),
+                alpha: model.alpha as f32,
+                bits: model.bits,
+            };
+            (tenant, job)
+        })
+        .collect()
+}
+
+/// Convenience driver: start a server, submit every request, drain and
+/// return all responses (in completion order) plus the run metrics.
+///
+/// Requests rejected at admission (only possible under
+/// [`Admission::Reject`]) are skipped and counted in
+/// [`ServeMetrics::rejected`].
+pub fn serve_all<E, F>(
+    cfg: ServeConfig,
+    requests: Vec<(TenantId, Job)>,
+    make_executor: F,
+) -> Result<(Vec<Response>, ServeMetrics), SubmitError>
+where
+    E: BatchExecutor,
+    F: Fn(usize) -> Result<E, String> + Send + Sync + 'static,
+{
+    let (server, responses) = Server::start(cfg, make_executor);
+    for (tenant, job) in requests {
+        match server.submit(tenant, job) {
+            Ok(()) | Err(SubmitError::Full { .. }) => {}
+            Err(e) => return Err(e),
+        }
+    }
+    let metrics = server.finish();
+    Ok((responses.into_iter().collect(), metrics))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::NativeExecutor;
+    use crate::rng::Rng;
+    use crate::tensor::Matrix;
+
+    fn job(id: u64, module: &'static str, c_in: usize, c_out: usize) -> Job {
+        Job {
+            id,
+            layer: (id as usize) % 4,
+            module,
+            x: Matrix::zeros(4, c_in),
+            w: Matrix::zeros(c_in, c_out),
+            alpha: 0.5,
+            bits: 4,
+        }
+    }
+
+    /// Cheap executor that keys its output to the job id.
+    struct SleepExec {
+        micros: u64,
+    }
+
+    impl Executor for SleepExec {
+        fn run(&mut self, job: &Job) -> Result<AnalyzeOut, String> {
+            if self.micros > 0 {
+                std::thread::sleep(Duration::from_micros(self.micros));
+            }
+            let mut out = AnalyzeOut::default();
+            out.errors[0] = job.id as f64;
+            Ok(out)
+        }
+    }
+
+    #[test]
+    fn all_requests_complete_exactly_once() {
+        let cfg = ServeConfig { workers: 3, max_batch: 4, queue_depth: 64, ..Default::default() };
+        let reqs: Vec<(TenantId, Job)> = (0..50)
+            .map(|i| ((i % 3) as TenantId, job(i, crate::MODULES[(i % 4) as usize], 8, 8)))
+            .collect();
+        let (responses, m) = serve_all(cfg, reqs, |_| Ok(SleepExec { micros: 50 })).unwrap();
+        assert_eq!(responses.len(), 50);
+        assert_eq!(m.completed, 50);
+        assert_eq!(m.errors, 0);
+        let mut ids: Vec<u64> = responses.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), 50, "every job exactly once");
+        for r in &responses {
+            assert_eq!(r.out.as_ref().unwrap().errors[0] as u64, r.id, "result keyed to job");
+            assert!(r.total_micros >= r.queue_micros);
+        }
+        assert_eq!(m.per_worker_batches.len(), 3);
+        assert_eq!(m.per_worker_batches.iter().sum::<u64>(), m.batches);
+        assert!(m.latency.p50 > 0.0 && m.latency.p50 <= m.latency.p99);
+        assert!(m.throughput() > 0.0);
+        assert!(m.mean_batch() >= 1.0);
+    }
+
+    #[test]
+    fn batches_coalesce_same_key_up_to_max_batch() {
+        // paused server: all ten same-key jobs are queued before any
+        // scheduling, so batches form deterministically as 4 + 4 + 2
+        let cfg = ServeConfig {
+            workers: 1,
+            max_batch: 4,
+            queue_depth: 64,
+            paused: true,
+            ..Default::default()
+        };
+        let reqs = (0..10).map(|i| (0, job(i, "k_proj", 8, 8))).collect();
+        let (responses, m) = serve_all(cfg, reqs, |_| Ok(SleepExec { micros: 0 })).unwrap();
+        assert_eq!(m.batches, 3);
+        assert_eq!(m.max_batch_observed, 4);
+        let mut by_batch: BTreeMap<u64, usize> = BTreeMap::new();
+        for r in &responses {
+            *by_batch.entry(r.batch_id).or_default() += 1;
+        }
+        let mut sizes: Vec<usize> = by_batch.values().copied().collect();
+        sizes.sort_unstable();
+        assert_eq!(sizes, vec![2, 4, 4]);
+        for r in &responses {
+            assert_eq!(r.batch_size, by_batch[&r.batch_id], "batch_size field consistent");
+        }
+    }
+
+    #[test]
+    fn incompatible_keys_never_share_a_batch() {
+        // alternate two modules from one tenant; coalescing must regroup
+        // them into two single-module batches without starving either
+        let cfg = ServeConfig {
+            workers: 1,
+            max_batch: 8,
+            queue_depth: 64,
+            paused: true,
+            ..Default::default()
+        };
+        let reqs = (0..12)
+            .map(|i| (0, job(i, if i % 2 == 0 { "k_proj" } else { "o_proj" }, 8, 8)))
+            .collect();
+        let (responses, m) = serve_all(cfg, reqs, |_| Ok(SleepExec { micros: 0 })).unwrap();
+        assert_eq!(m.completed, 12);
+        assert_eq!(m.batches, 2, "one batch per key");
+        let mut modules_by_batch: BTreeMap<u64, Vec<&str>> = BTreeMap::new();
+        for r in &responses {
+            modules_by_batch.entry(r.batch_id).or_default().push(r.module);
+        }
+        for (batch, modules) in &modules_by_batch {
+            assert!(
+                modules.windows(2).all(|w| w[0] == w[1]),
+                "batch {batch} mixes modules: {modules:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn reject_admission_rejects_when_tenant_queue_full() {
+        let cfg = ServeConfig {
+            workers: 1,
+            max_batch: 4,
+            queue_depth: 2,
+            admission: Admission::Reject,
+            paused: true,
+            ..Default::default()
+        };
+        let (server, rx) = Server::start(cfg, |_| Ok(SleepExec { micros: 0 }));
+        let (mut ok, mut full) = (0, 0);
+        for i in 0..5 {
+            match server.submit(7, job(i, "k_proj", 8, 8)) {
+                Ok(()) => ok += 1,
+                Err(SubmitError::Full { tenant }) => {
+                    assert_eq!(tenant, 7);
+                    full += 1;
+                }
+                Err(e) => panic!("unexpected error: {e}"),
+            }
+        }
+        assert_eq!((ok, full), (2, 3), "queue depth 2 admits 2 of 5");
+        let m = server.finish();
+        assert_eq!(m.completed, 2);
+        assert_eq!(m.rejected, 3);
+        assert_eq!(m.per_tenant[&7], TenantStats { submitted: 2, completed: 2, rejected: 3 });
+        assert_eq!(rx.iter().count(), 2);
+    }
+
+    #[test]
+    fn block_admission_completes_everything_through_a_tiny_queue() {
+        let cfg = ServeConfig {
+            workers: 2,
+            max_batch: 2,
+            queue_depth: 2,
+            admission: Admission::Block,
+            linger_micros: 0,
+            ..Default::default()
+        };
+        let reqs = (0..30).map(|i| (0, job(i, "k_proj", 8, 8))).collect();
+        let (responses, m) = serve_all(cfg, reqs, |_| Ok(SleepExec { micros: 300 })).unwrap();
+        assert_eq!(m.completed, 30);
+        assert_eq!(m.rejected, 0);
+        assert_eq!(responses.len(), 30);
+    }
+
+    #[test]
+    fn paused_block_admission_cannot_deadlock_on_saturation() {
+        // a paused scheduler must still drain when a Block-mode
+        // submitter saturates a tenant queue, or submit() would hang
+        let cfg = ServeConfig {
+            workers: 1,
+            max_batch: 2,
+            queue_depth: 2,
+            admission: Admission::Block,
+            paused: true,
+            ..Default::default()
+        };
+        let reqs = (0..9).map(|i| (0, job(i, "k_proj", 8, 8))).collect();
+        let (responses, m) = serve_all(cfg, reqs, |_| Ok(SleepExec { micros: 0 })).unwrap();
+        assert_eq!(m.completed, 9);
+        assert_eq!(responses.len(), 9);
+    }
+
+    #[test]
+    fn skewed_load_does_not_starve_the_small_tenant() {
+        // tenant 0 floods 40 requests, tenant 1 submits 8 afterwards;
+        // fair-share filling must interleave them (~2+2 per batch), so
+        // the small tenant finishes in the first third of the stream
+        // instead of after the flood (position 47 under plain FIFO)
+        let cfg = ServeConfig {
+            workers: 1,
+            max_batch: 4,
+            queue_depth: 64,
+            paused: true,
+            ..Default::default()
+        };
+        let mut reqs = Vec::new();
+        for i in 0..40 {
+            reqs.push((0, job(i, "k_proj", 8, 8)));
+        }
+        for i in 0..8 {
+            reqs.push((1, job(100 + i, "k_proj", 8, 8)));
+        }
+        let (responses, m) = serve_all(cfg, reqs, |_| Ok(SleepExec { micros: 0 })).unwrap();
+        assert_eq!(m.completed, 48);
+        assert_eq!(m.per_tenant[&1].completed, 8);
+        let last_small = responses.iter().rposition(|r| r.tenant == 1).unwrap();
+        assert!(last_small < 24, "small tenant starved: last completion at {last_small}");
+    }
+
+    #[test]
+    fn executor_init_failure_surfaces_as_errored_responses() {
+        let cfg = ServeConfig { workers: 1, max_batch: 4, queue_depth: 16, ..Default::default() };
+        let reqs = (0..6).map(|i| (0, job(i, "k_proj", 8, 8))).collect();
+        let (responses, m) =
+            serve_all(cfg, reqs, |_| Err::<NativeBatchExecutor, _>("no artifacts".to_string()))
+                .unwrap();
+        assert_eq!(m.completed, 6);
+        assert_eq!(m.errors, 6);
+        assert_eq!(responses.len(), 6);
+        for r in &responses {
+            assert!(r.out.as_ref().unwrap_err().contains("no artifacts"));
+        }
+    }
+
+    #[test]
+    fn native_batch_executor_matches_native_executor() {
+        let mut rng = Rng::new(9);
+        let x = Matrix::from_vec(8, 16, rng.normals_f32(8 * 16));
+        let w = Matrix::from_vec(16, 8, rng.normals_f32(16 * 8));
+        let j = Job { id: 0, layer: 0, module: "k_proj", x: x.clone(), w: w.clone(), alpha: 0.5, bits: 4 };
+        let mut be = NativeBatchExecutor::new();
+        let got = be.run_batch(std::slice::from_ref(&j));
+        let want = NativeExecutor::analyze(&x, &w, 4, 0.5).unwrap();
+        assert_eq!(got.len(), 1);
+        let got = got[0].as_ref().unwrap();
+        assert_eq!(got.errors, want.errors);
+        assert_eq!(got.act_difficulty, want.act_difficulty);
+        // rotation cache warmed once for the single width
+        assert_eq!(be.cache.len(), 1);
+    }
+
+    #[test]
+    fn batch_key_separates_and_groups() {
+        let a = BatchKey::of(&job(0, "k_proj", 8, 8));
+        let b = BatchKey::of(&job(1, "k_proj", 8, 8));
+        assert_eq!(a, b, "same config, different ids share a key");
+        assert_ne!(a, BatchKey::of(&job(2, "o_proj", 8, 8)), "module splits");
+        let mut wide = job(3, "k_proj", 16, 8);
+        wide.bits = 4;
+        assert_ne!(a, BatchKey::of(&wide), "shape splits");
+        let mut coarse = job(4, "k_proj", 8, 8);
+        coarse.bits = 8;
+        assert_ne!(a, BatchKey::of(&coarse), "bits split");
+        assert_eq!(a.alpha(), 0.5);
+    }
+
+    #[test]
+    fn submit_after_finish_is_closed() {
+        let cfg = ServeConfig { workers: 1, ..Default::default() };
+        let (server, _rx) = Server::start(cfg, |_| Ok(SleepExec { micros: 0 }));
+        server.submit(0, job(0, "k_proj", 8, 8)).unwrap();
+        // finish consumes the server; a second one proves Closed
+        let m = server.finish();
+        assert_eq!(m.completed, 1);
+        let (server2, _rx2) = Server::start(cfg, |_| Ok(SleepExec { micros: 0 }));
+        {
+            let mut center = lock(&server2.shared.center);
+            center.closed = true;
+        }
+        assert_eq!(server2.submit(0, job(1, "k_proj", 8, 8)), Err(SubmitError::Closed));
+    }
+}

@@ -113,10 +113,12 @@ impl SynthSpec {
                 }
             }
         }
-        // massive token spikes
+        // massive token spikes (capped to the matrix size so tiny
+        // synthetic requests, e.g. the serve demo's --rows 1, stay valid)
         if self.massive_layers.contains(&l) && self.massive_tokens > 0 {
-            let toks = rng.choose_distinct(self.n_tokens, self.massive_tokens);
-            let chans = rng.choose_distinct(self.channels, self.massive_channels);
+            let toks = rng.choose_distinct(self.n_tokens, self.massive_tokens.min(self.n_tokens));
+            let chans =
+                rng.choose_distinct(self.channels, self.massive_channels.min(self.channels));
             for &t in &toks {
                 let row = x.row_mut(t);
                 for &c in &chans {
@@ -125,6 +127,16 @@ impl SynthSpec {
             }
         }
         x
+    }
+
+    /// gate_proj-like stream: linear systematic outliers at d_model width.
+    pub fn gate_proj(seed: u64) -> Self {
+        Self {
+            profile: Profile::Linear,
+            peak_gain: 6.0,
+            hot_channels: 10,
+            ..Self::attention(seed)
+        }
     }
 
     /// Generate a weight matrix paired with this stream.
@@ -136,6 +148,26 @@ impl SynthSpec {
             *v *= std;
         }
         w
+    }
+}
+
+/// Synthetic activation stream + weight width for a recorded module
+/// kind, at SynLlama scale (d_model 256, d_ffn 704).  Lets the serving
+/// demos and benches generate per-module (X, W) request payloads with
+/// paper-shaped outlier structure but **no AOT artifacts** — the
+/// artifact-free twin of `pipeline::Workload::pair`.
+///
+/// Returns `(activation spec, c_out)`, or `None` for an unknown module.
+pub fn module_stream(module: &str, seed: u64) -> Option<(SynthSpec, usize)> {
+    match module {
+        "k_proj" => Some((SynthSpec::attention(seed), 256)),
+        "o_proj" => Some((
+            SynthSpec { profile: Profile::Power, peak_gain: 12.0, ..SynthSpec::attention(seed ^ 0xA5) },
+            256,
+        )),
+        "gate_proj" => Some((SynthSpec::gate_proj(seed ^ 0x5A), 704)),
+        "down_proj" => Some((SynthSpec::down_proj(seed ^ 0xD0), 256)),
+        _ => None,
     }
 }
 
@@ -191,6 +223,22 @@ mod tests {
         let _ = spec.layer(5); // interleave
         let b = spec.layer(30);
         assert_eq!(a.as_slice(), b.as_slice());
+    }
+
+    #[test]
+    fn module_streams_match_manifest_shapes() {
+        let cfg = crate::config::ModelConfig::default();
+        for module in crate::MODULES {
+            let (spec, c_out) = module_stream(module, 1).unwrap();
+            let (want_in, want_out) = cfg.module_shape(module).unwrap();
+            assert_eq!(spec.channels, want_in, "{module} c_in");
+            assert_eq!(c_out, want_out, "{module} c_out");
+            // generated pair must be matmul-compatible
+            let x = spec.layer(0);
+            let w = spec.weight(c_out, 0);
+            assert_eq!(x.cols(), w.rows(), "{module} X/W inner dims");
+        }
+        assert!(module_stream("nope", 1).is_none());
     }
 
     #[test]

@@ -168,6 +168,51 @@ pub fn rotation(d: usize) -> Result<Matrix, String> {
     Ok(h)
 }
 
+/// Cache of orthonormal rotation matrices keyed by dimension.
+///
+/// Hadamard construction is O(d^2) and identical for every request of
+/// the same width, so the serving core's batch executors build each
+/// rotation once and reuse it across jobs (see
+/// [`crate::serve::NativeBatchExecutor`]).
+///
+/// ```
+/// use smoothrot::transforms::RotationCache;
+/// let mut cache = RotationCache::new();
+/// let first = cache.get(8).unwrap().clone();
+/// assert_eq!(first.shape(), (8, 8));
+/// // second lookup is served from the cache
+/// assert_eq!(cache.get(8).unwrap(), &first);
+/// ```
+#[derive(Debug, Default)]
+pub struct RotationCache {
+    map: std::collections::BTreeMap<usize, Matrix>,
+}
+
+impl RotationCache {
+    /// Empty cache.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The rotation for dimension `d`, constructing it on first use.
+    pub fn get(&mut self, d: usize) -> Result<&Matrix, String> {
+        if !self.map.contains_key(&d) {
+            self.map.insert(d, rotation(d)?);
+        }
+        Ok(&self.map[&d])
+    }
+
+    /// Number of distinct dimensions cached so far.
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    /// Whether nothing has been cached yet.
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+}
+
 /// Check entries are ±1 and H H^T = d I.
 pub fn is_hadamard(h: &Matrix) -> bool {
     let (r, c) = h.shape();
@@ -220,6 +265,21 @@ pub fn smooth_apply(x: &Matrix, w: &Matrix, s: &[f32]) -> (Matrix, Matrix) {
 
 /// Apply `mode` to (X, W) and return (X_hat, W_hat) (Eq. 3).
 pub fn apply(mode: Mode, x: &Matrix, w: &Matrix, alpha: f32) -> Result<(Matrix, Matrix), String> {
+    let mut cache = RotationCache::new();
+    apply_cached(mode, x, w, alpha, &mut cache)
+}
+
+/// [`apply`] with rotation reuse: rotating modes take R from `cache`
+/// instead of rebuilding the Hadamard matrix per call.  This is the hot
+/// path for batched serving, where every job in a coalesced batch shares
+/// the same activation width.
+pub fn apply_cached(
+    mode: Mode,
+    x: &Matrix,
+    w: &Matrix,
+    alpha: f32,
+    cache: &mut RotationCache,
+) -> Result<(Matrix, Matrix), String> {
     match mode {
         Mode::None => Ok((x.clone(), w.clone())),
         Mode::Smooth => {
@@ -227,14 +287,14 @@ pub fn apply(mode: Mode, x: &Matrix, w: &Matrix, alpha: f32) -> Result<(Matrix, 
             Ok(smooth_apply(x, w, &s))
         }
         Mode::Rotate => {
-            let r = rotation(x.cols())?;
-            Ok((x.matmul(&r), r.transpose().matmul(w)))
+            let r = cache.get(x.cols())?;
+            Ok((x.matmul(r), r.transpose().matmul(w)))
         }
         Mode::SmoothRotate => {
             let s = smooth_scales(x, w, alpha);
             let (xs, ws) = smooth_apply(x, w, &s);
-            let r = rotation(x.cols())?;
-            Ok((xs.matmul(&r), r.transpose().matmul(&ws)))
+            let r = cache.get(x.cols())?;
+            Ok((xs.matmul(r), r.transpose().matmul(&ws)))
         }
     }
 }
@@ -353,6 +413,21 @@ mod tests {
         }
         assert_eq!(Mode::from_name("bogus"), None);
         assert_eq!(Mode::SmoothRotate.index(), 3);
+    }
+
+    #[test]
+    fn apply_cached_matches_apply() {
+        let x = rand_matrix(8, 64, 7);
+        let w = rand_matrix(64, 8, 8);
+        let mut cache = RotationCache::new();
+        for mode in Mode::ALL {
+            let (xa, wa) = apply(mode, &x, &w, 0.5).unwrap();
+            let (xb, wb) = apply_cached(mode, &x, &w, 0.5, &mut cache).unwrap();
+            assert_eq!(xa.as_slice(), xb.as_slice(), "{mode:?} X");
+            assert_eq!(wa.as_slice(), wb.as_slice(), "{mode:?} W");
+        }
+        // one width -> one cached rotation, reused across both rotating modes
+        assert_eq!(cache.len(), 1);
     }
 
     #[test]

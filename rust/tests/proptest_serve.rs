@@ -1,0 +1,108 @@
+//! Property tests over the serving-core invariants (check = proptest-lite).
+//!
+//! Over random tenant mixes, worker counts, batch limits and pause
+//! modes: every admitted request completes exactly once; no batch
+//! exceeds `max_batch` or mixes incompatible keys; per-tenant counters
+//! reconcile with the stream.
+
+use smoothrot::check::{check, ensure, Gen};
+use smoothrot::coordinator::{Executor, Job};
+use smoothrot::runtime::AnalyzeOut;
+use smoothrot::serve::{serve_all, BatchKey, ServeConfig};
+use smoothrot::tensor::Matrix;
+
+/// Executor that encodes job identity into its output.
+struct EchoExec;
+
+impl Executor for EchoExec {
+    fn run(&mut self, job: &Job) -> Result<AnalyzeOut, String> {
+        let mut out = AnalyzeOut::default();
+        out.errors[0] = job.id as f64;
+        Ok(out)
+    }
+}
+
+fn make_requests(g: &mut Gen, n: usize, tenants: usize) -> Vec<(usize, Job)> {
+    (0..n)
+        .map(|i| {
+            let module = *g.choose(&smoothrot::MODULES);
+            let bits = *g.choose(&[4u32, 8]);
+            let job = Job {
+                id: i as u64,
+                layer: g.usize_in(0, 7),
+                module,
+                x: Matrix::zeros(2, 4),
+                w: Matrix::zeros(4, 2),
+                alpha: 0.5,
+                bits,
+            };
+            (g.usize_in(0, tenants - 1), job)
+        })
+        .collect()
+}
+
+#[test]
+fn prop_serving_core_invariants() {
+    check("serving core: exactly-once, key-pure bounded batches", 20, |g| {
+        let n = g.usize_in(1, 60);
+        let tenants = g.usize_in(1, 4);
+        let cfg = ServeConfig {
+            workers: g.usize_in(1, 4),
+            max_batch: g.usize_in(1, 6),
+            queue_depth: 64, // >= n: Block admission never stalls a paused run
+            paused: g.usize_in(0, 1) == 1,
+            ..ServeConfig::default()
+        };
+        let requests = make_requests(g, n, tenants);
+        let keys: Vec<BatchKey> = requests.iter().map(|(_, j)| BatchKey::of(j)).collect();
+        let submitted_per_tenant: Vec<usize> =
+            (0..tenants).map(|t| requests.iter().filter(|(rt, _)| *rt == t).count()).collect();
+
+        let (responses, metrics) =
+            serve_all(cfg, requests, |_| Ok(EchoExec)).map_err(|e| e.to_string())?;
+
+        ensure(responses.len() == n, "response count mismatch")?;
+        ensure(metrics.completed as usize == n, "metrics.completed mismatch")?;
+        ensure(metrics.rejected == 0, "nothing may be rejected at this depth")?;
+
+        // exactly once, correctly keyed
+        let mut seen = vec![false; n];
+        for r in &responses {
+            let idx = r.id as usize;
+            ensure(idx < n && !seen[idx], format!("request {idx} duplicated or unknown"))?;
+            seen[idx] = true;
+            let out = r.out.as_ref().map_err(|e| format!("request {idx} errored: {e}"))?;
+            ensure(out.errors[0] as u64 == r.id, "result not keyed to its request")?;
+        }
+
+        // batches: bounded, key-homogeneous, sizes consistent
+        let mut by_batch: std::collections::BTreeMap<u64, Vec<&smoothrot::serve::Response>> =
+            std::collections::BTreeMap::new();
+        for r in &responses {
+            by_batch.entry(r.batch_id).or_default().push(r);
+        }
+        ensure(by_batch.len() as u64 == metrics.batches, "batch count mismatch")?;
+        for (id, members) in &by_batch {
+            ensure(members.len() <= cfg.max_batch, format!("batch {id} exceeds max_batch"))?;
+            let first = &keys[members[0].id as usize];
+            for m in members {
+                ensure(keys[m.id as usize] == *first, format!("batch {id} mixes keys"))?;
+                ensure(m.batch_size == members.len(), "batch_size field inconsistent")?;
+            }
+        }
+        ensure(
+            metrics.max_batch_observed == by_batch.values().map(Vec::len).max().unwrap_or(0),
+            "max_batch_observed mismatch",
+        )?;
+
+        // per-tenant accounting reconciles with the submitted stream
+        for (t, &want) in submitted_per_tenant.iter().enumerate() {
+            let got = metrics.per_tenant.get(&t).map(|s| s.completed).unwrap_or(0);
+            ensure(got as usize == want, format!("tenant {t}: completed {got}, want {want}"))?;
+        }
+        ensure(
+            metrics.per_worker_batches.iter().sum::<u64>() == metrics.batches,
+            "per-worker batch counts don't sum to total",
+        )
+    });
+}
