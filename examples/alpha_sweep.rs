@@ -35,7 +35,7 @@ fn main() -> Result<()> {
         }
         let base_total: f64 = base.iter().sum();
 
-        let sweep = pipeline::alpha_sweep(&rt, &workload, module, &alphas, cfg.bits)?;
+        let sweep = pipeline::alpha_sweep(&rt, &workload, module, &alphas, cfg.bits, 0)?;
         println!("\n# {module}: smoothing error vs alpha (baseline total {base_total:.3e})");
         let labels: Vec<String> = sweep.iter().map(|(a, _)| format!("alpha={a:.2}")).collect();
         let totals: Vec<f64> = sweep.iter().map(|(_, e)| e.iter().sum()).collect();

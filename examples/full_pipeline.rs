@@ -21,7 +21,7 @@ use smoothrot::transforms::Mode;
 
 fn main() -> Result<()> {
     let artifacts = std::env::args().nth(1).unwrap_or_else(|| "artifacts".to_string());
-    let pool = PoolConfig { workers: 2, queue_cap: 64 };
+    let pool = PoolConfig { workers: 2, queue_cap: 64, threads: 1 };
 
     let t0 = std::time::Instant::now();
     let run = pipeline::run_full_experiment(&artifacts, pool, Backend::Pjrt)?;

@@ -72,7 +72,7 @@ fn main() {
         b.bench_heavy("fig3_fig4_full_grid_pjrt", 2, || {
             let run = pipeline::run_full_experiment(
                 &dir,
-                PoolConfig { workers: 2, queue_cap: 64 },
+                PoolConfig { workers: 2, queue_cap: 64, threads: 1 },
                 Backend::Pjrt,
             )
             .expect("experiment");
@@ -93,7 +93,7 @@ fn main() {
         b.bench_heavy("fig3_fig4_full_grid_native_mirror", 2, || {
             let run = pipeline::run_full_experiment(
                 &dir,
-                PoolConfig { workers: 2, queue_cap: 64 },
+                PoolConfig { workers: 2, queue_cap: 64, threads: 1 },
                 Backend::Native,
             )
             .expect("experiment");
@@ -134,7 +134,7 @@ fn main() {
                 let module: &'static str =
                     smoothrot::MODULES.into_iter().find(|m| *m == module).unwrap();
                 let sweep =
-                    pipeline::alpha_sweep(&rt, &workload, module, &alphas, cfg.bits).expect("sweep");
+                    pipeline::alpha_sweep(&rt, &workload, module, &alphas, cfg.bits, 0).expect("sweep");
                 let totals: Vec<f64> = sweep.iter().map(|(_, e)| e.iter().sum()).collect();
                 table.push((module, totals));
             }
@@ -185,7 +185,7 @@ fn main() {
     {
         let mut rows = Vec::new();
         b.bench_heavy("ablation_bitwidth_native", 2, || {
-            rows = pipeline::bits_sweep(&rt, &workload, &[2, 4, 8]).expect("bits sweep");
+            rows = pipeline::bits_sweep(&rt, &workload, &[2, 4, 8], 0).expect("bits sweep");
         });
         for (bits, totals) in &rows {
             println!(

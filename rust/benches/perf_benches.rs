@@ -2,21 +2,28 @@
 //!
 //! * L3 native math: blocked matmul, quantizer, fused qerror kernel,
 //!   Hadamard construction + application,
+//! * L3 kernel engine: fused vs naive all-modes analyze, FWHT vs dense
+//!   rotation, 1-vs-N-thread parallel matmul,
 //! * L3 coordinator: scheduling overhead at varying worker counts,
 //! * L3 serving core: batched vs unbatched dispatch throughput over the
 //!   multi-tenant scheduler (native executors),
 //! * runtime: PJRT execute latency for the analyze/transform artifacts
 //!   (the end-to-end request-path unit).
 //!
-//! The §Perf section of EXPERIMENTS.md quotes these numbers.
+//! CI runs this binary with `--smoke` (minimal iterations) so kernel
+//! regressions fail loudly without timing flakiness.  The §Perf section
+//! of EXPERIMENTS.md quotes the full-run numbers.
 
 use smoothrot::bench_harness::{black_box, Bench};
 use smoothrot::coordinator::{run_jobs, Executor, Job, NativeExecutor, PoolConfig};
+use smoothrot::kernels::fused::analyze_all_modes;
+use smoothrot::kernels::par::resolve_threads;
+use smoothrot::kernels::workspace::Workspace;
 use smoothrot::quant::{self, Granularity};
 use smoothrot::rng::Rng;
 use smoothrot::runtime::{AnalyzeOut, Runtime};
 use smoothrot::tensor::Matrix;
-use smoothrot::transforms::{self, Mode};
+use smoothrot::transforms::{self, Mode, Rotation, RotationCache};
 
 fn rand_matrix(rows: usize, cols: usize, seed: u64) -> Matrix {
     let mut rng = Rng::new(seed);
@@ -56,13 +63,56 @@ fn main() {
     });
 
     let r704 = transforms::rotation(704).unwrap();
-    b.bench_items("rotate_apply_128x704", 2.0 * 128.0 * 704.0 * 704.0, || {
+    b.bench_items("rotate_apply_dense_128x704", 2.0 * 128.0 * 704.0 * 704.0, || {
         black_box(x.matmul(&r704));
+    });
+
+    // FWHT path: same rotation, O(d log d) per row instead of O(d^2)
+    let rot704 = Rotation::build(704).unwrap();
+    assert!(rot704.is_fwht());
+    b.bench_items("rotate_apply_fwht_128x704", 2.0 * 128.0 * 704.0 * 704.0, || {
+        black_box(rot704.apply_right(&x, 1));
     });
 
     b.bench("smooth_scales_and_apply_128x704", || {
         let s = transforms::smooth_scales(&x, &w, 0.5);
         black_box(transforms::smooth_apply(&x, &w, &s));
+    });
+
+    // ---- kernel engine: fused vs naive analyze, 1 vs N threads ----------
+    let auto_threads = resolve_threads(0);
+    let naive_med = b
+        .bench("analyze_naive_per_mode_704x256", || {
+            black_box(NativeExecutor::analyze_naive(&x, &w, 4, 0.5).unwrap());
+        })
+        .map(|m| m.median());
+    let mut cache = RotationCache::new();
+    let mut scratch = Workspace::new();
+    b.bench("analyze_fused_704x256_t1", || {
+        black_box(analyze_all_modes(&x, &w, 4, 0.5, &mut cache, &mut scratch, 1).unwrap());
+    });
+    let mut cache_n = RotationCache::new();
+    let mut scratch_n = Workspace::new();
+    let fused_med = b
+        .bench(&format!("analyze_fused_704x256_t{auto_threads}"), || {
+            black_box(
+                analyze_all_modes(&x, &w, 4, 0.5, &mut cache_n, &mut scratch_n, auto_threads)
+                    .unwrap(),
+            );
+        })
+        .map(|m| m.median());
+    if let (Some(naive), Some(fused)) = (naive_med, fused_med) {
+        println!(
+            "    -> fused multi-threaded analyze vs naive single-threaded: {:.2}x",
+            naive.as_secs_f64() / fused.as_secs_f64()
+        );
+    }
+
+    b.bench_items("par_matmul_128x704x256_t1", flops, || {
+        black_box(x.matmul_threaded(&w, 1));
+    });
+    b.bench_items(&format!("par_matmul_128x704x256_t{auto_threads}"), flops, || {
+        black_box(x.matmul_threaded(&w, auto_threads));
     });
 
     b.bench("native_analyze_all_modes_704x256", || {
@@ -91,7 +141,8 @@ fn main() {
                 })
                 .collect();
             let (r, _) =
-                run_jobs(jobs, PoolConfig { workers, queue_cap: 64 }, |_| Ok(NoopExec)).unwrap();
+                run_jobs(jobs, PoolConfig { workers, queue_cap: 64, threads: 1 }, |_| Ok(NoopExec))
+                    .unwrap();
             black_box(r.len());
         });
     }

@@ -80,12 +80,15 @@ impl Default for Bench {
 }
 
 impl Bench {
-    /// Parse `--filter <substr>` / `--fast` from the bench binary's args
-    /// (cargo passes `--bench`; ignore it).
+    /// Parse `--filter <substr>` / `--fast` / `--smoke` from the bench
+    /// binary's args (cargo passes `--bench`; ignore it).  `--smoke`
+    /// runs the minimum iterations that still exercise every kernel —
+    /// CI uses it so regressions fail loudly without timing flakiness.
     pub fn from_args() -> Self {
         let args: Vec<String> = std::env::args().collect();
         let mut filter = None;
         let mut fast = false;
+        let mut smoke = false;
         let mut i = 1;
         while i < args.len() {
             match args[i].as_str() {
@@ -94,6 +97,7 @@ impl Bench {
                     i += 1;
                 }
                 "--fast" => fast = true,
+                "--smoke" => smoke = true,
                 _ => {
                     // bare positional (criterion style) acts as a filter
                     if !args[i].starts_with('-') {
@@ -103,12 +107,14 @@ impl Bench {
             }
             i += 1;
         }
-        Self {
-            warmup_iters: if fast { 1 } else { 3 },
-            sample_count: if fast { 5 } else { 15 },
-            filter,
-            results: Vec::new(),
-        }
+        let (warmup_iters, sample_count) = if smoke {
+            (1, 2)
+        } else if fast {
+            (1, 5)
+        } else {
+            (3, 15)
+        };
+        Self { warmup_iters, sample_count, filter, results: Vec::new() }
     }
 
     fn enabled(&self, name: &str) -> bool {

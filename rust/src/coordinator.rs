@@ -33,7 +33,8 @@ use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
-use crate::metrics::{self, Channels};
+use crate::kernels::workspace::Workspace;
+use crate::metrics::{self, CacheStats, Channels};
 use crate::quant;
 use crate::runtime::AnalyzeOut;
 use crate::tensor::{Matrix, Stack};
@@ -67,6 +68,13 @@ pub struct JobResult {
 /// Anything that can process a job into per-mode stats.
 pub trait Executor {
     fn run(&mut self, job: &Job) -> Result<AnalyzeOut, String>;
+
+    /// Rotation-cache hit/miss counters, when the executor keeps a
+    /// persistent per-width cache (the serving summary aggregates
+    /// these across workers).  `None` for cache-less executors.
+    fn rotation_stats(&self) -> Option<CacheStats> {
+        None
+    }
 }
 
 /// Pure-rust analysis executor (mirror of the `analyze_*` artifacts).
@@ -74,7 +82,10 @@ pub trait Executor {
 pub struct NativeExecutor;
 
 impl NativeExecutor {
-    /// Analyze one (X, W) pair across all four transform modes.
+    /// Analyze one (X, W) pair across all four transform modes — a
+    /// thin wrapper over the fused kernel engine
+    /// ([`crate::kernels::fused::analyze_all_modes`]) with a one-shot
+    /// rotation cache and workspace.
     pub fn analyze(x: &Matrix, w: &Matrix, bits: u32, alpha: f32) -> Result<AnalyzeOut, String> {
         let mut cache = transforms::RotationCache::new();
         Self::analyze_cached(x, w, bits, alpha, &mut cache)
@@ -82,7 +93,7 @@ impl NativeExecutor {
 
     /// [`Self::analyze`] with rotation reuse — the serving hot path
     /// ([`crate::serve::NativeBatchExecutor`]) shares one cache across
-    /// every job, so each Hadamard rotation is built once per width.
+    /// every job, so each rotation is built once per width.
     pub fn analyze_cached(
         x: &Matrix,
         w: &Matrix,
@@ -90,9 +101,33 @@ impl NativeExecutor {
         alpha: f32,
         cache: &mut transforms::RotationCache,
     ) -> Result<AnalyzeOut, String> {
+        let mut ws = Workspace::new();
+        crate::kernels::fused::analyze_all_modes(x, w, bits, alpha, cache, &mut ws, 1)
+    }
+
+    /// The pre-refactor reference path: evaluate every mode
+    /// independently with fully re-materialized intermediates and a
+    /// dense `X @ H` rotation matmul (built once per call, as the old
+    /// per-call rotation cache did).  Kept as the baseline the
+    /// property tests pin [`crate::kernels::fused::analyze_all_modes`]
+    /// against (1e-4 relative) and as the perf-bench comparison point.
+    pub fn analyze_naive(x: &Matrix, w: &Matrix, bits: u32, alpha: f32) -> Result<AnalyzeOut, String> {
+        let r = transforms::rotation(x.cols())?;
         let mut out = AnalyzeOut::default();
         for mode in Mode::ALL {
-            let (xh, wh) = transforms::apply_cached(mode, x, w, alpha, cache)?;
+            let (xh, wh) = match mode {
+                Mode::None => (x.clone(), w.clone()),
+                Mode::Smooth => {
+                    let s = transforms::smooth_scales(x, w, alpha);
+                    transforms::smooth_apply(x, w, &s)
+                }
+                Mode::Rotate => (x.matmul(&r), r.transpose().matmul(w)),
+                Mode::SmoothRotate => {
+                    let s = transforms::smooth_scales(x, w, alpha);
+                    let (xs, ws) = transforms::smooth_apply(x, w, &s);
+                    (xs.matmul(&r), r.transpose().matmul(&ws))
+                }
+            };
             let i = mode.index();
             out.errors[i] = quant::quant_error_fused(&xh, &wh, bits);
             out.act_difficulty[i] = metrics::quant_difficulty(&xh, Channels::Columns);
@@ -138,11 +173,20 @@ impl RunMetrics {
 pub struct PoolConfig {
     pub workers: usize,
     pub queue_cap: usize,
+    /// Math threads inside each executor's kernels (`0` = all cores);
+    /// consumed by the native backend's fused analyze engine.  This
+    /// multiplies with `workers` — keep `workers * threads` at or
+    /// below the core count to avoid oversubscription (the default
+    /// splits `std::thread::available_parallelism()` across the
+    /// workers for exactly that reason; the CLI defaults to 1).
+    pub threads: usize,
 }
 
 impl Default for PoolConfig {
     fn default() -> Self {
-        Self { workers: 2, queue_cap: 64 }
+        let workers = 2;
+        let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        Self { workers, queue_cap: 64, threads: (cores / workers).max(1) }
     }
 }
 
@@ -394,7 +438,7 @@ mod tests {
     fn all_jobs_complete_exactly_once() {
         let jobs = small_jobs(20, 1);
         let (results, m) =
-            run_jobs(jobs, PoolConfig { workers: 3, queue_cap: 4 }, |_| Ok(NativeExecutor)).unwrap();
+            run_jobs(jobs, PoolConfig { workers: 3, queue_cap: 4, threads: 1 }, |_| Ok(NativeExecutor)).unwrap();
         assert_eq!(results.len(), 20);
         assert_eq!(m.jobs, 20);
         let mut ids: Vec<u64> = results.iter().map(|r| r.id).collect();
@@ -414,7 +458,7 @@ mod tests {
         }
         let jobs = small_jobs(40, 2);
         let cap = 4;
-        let (_, m) = run_jobs(jobs, PoolConfig { workers: 2, queue_cap: cap }, |_| Ok(SlowExec)).unwrap();
+        let (_, m) = run_jobs(jobs, PoolConfig { workers: 2, queue_cap: cap, threads: 1 }, |_| Ok(SlowExec)).unwrap();
         // queue cap + jobs momentarily held by the two workers
         assert!(m.max_queue_depth <= cap + 2 + 1, "depth {} exceeds bound", m.max_queue_depth);
     }
@@ -437,7 +481,7 @@ mod tests {
 
     #[test]
     fn executor_init_failure_surfaces() {
-        let err = run_jobs(small_jobs(4, 4), PoolConfig { workers: 1, queue_cap: 2 }, |_| {
+        let err = run_jobs(small_jobs(4, 4), PoolConfig { workers: 1, queue_cap: 2, threads: 1 }, |_| {
             Err::<NativeExecutor, _>("no artifacts".to_string())
         })
         .unwrap_err();
@@ -472,8 +516,8 @@ mod tests {
     #[test]
     fn single_worker_deterministic_order() {
         let jobs = small_jobs(10, 7);
-        let (r1, _) = run_jobs(jobs.clone(), PoolConfig { workers: 1, queue_cap: 2 }, |_| Ok(NativeExecutor)).unwrap();
-        let (r2, _) = run_jobs(jobs, PoolConfig { workers: 1, queue_cap: 2 }, |_| Ok(NativeExecutor)).unwrap();
+        let (r1, _) = run_jobs(jobs.clone(), PoolConfig { workers: 1, queue_cap: 2, threads: 1 }, |_| Ok(NativeExecutor)).unwrap();
+        let (r2, _) = run_jobs(jobs, PoolConfig { workers: 1, queue_cap: 2, threads: 1 }, |_| Ok(NativeExecutor)).unwrap();
         for (a, b) in r1.iter().zip(&r2) {
             assert_eq!(a.id, b.id);
             assert_eq!(a.out.errors, b.out.errors);

@@ -1,0 +1,304 @@
+//! Single-pass fused analyze: all four transform modes, shared
+//! intermediates, zero steady-state allocation.
+//!
+//! The pre-refactor path (`NativeExecutor::analyze_naive`) evaluated
+//! each [`Mode`] independently: four full (X̂, Ŵ) materializations, a
+//! dense `X @ H` rotation matmul per rotating mode, and a fresh set of
+//! quantization intermediates per mode.  [`analyze_all_modes`] computes
+//! the identical [`AnalyzeOut`] with one pass per shared intermediate:
+//!
+//! * the Eq. 4 migration vector and the smoothed pair (X·s⁻¹, s·W) are
+//!   built **once** and shared by `smooth` and `smooth_rotate` (the
+//!   latter rotates the smoothed pair in place),
+//! * rotation runs through the cached [`Rotation`] — the O(d log d)
+//!   FWHT butterfly for every width with a Sylvester ⊗ Paley
+//!   factorization, never a dense `X @ H` matmul on that path,
+//! * per mode, `Q(X)` and the residuals `X − Q(X)`, `W − Q(W)` are
+//!   produced by one-pass slice kernels ([`crate::quant::qdq_split_slice`])
+//!   and feed a single Eq. 2 accumulator via the delta identity
+//!   `Y − Y_q = (X − Q(X)) W + Q(X) (W − Q(W))`,
+//! * every matrix-sized buffer comes from the caller's [`Workspace`],
+//!   so a warm worker's per-request allocations shrink to the small
+//!   O(rows + cols) scale vectors (Eq. 1/4 deltas and migration
+//!   factors) — the O(rows x cols) traffic is pooled,
+//! * all row-loops fan out over `threads` scoped threads
+//!   ([`crate::kernels::par`]) without changing per-row accumulation
+//!   order, so results are deterministic at every thread count.
+//!
+//! `tests/proptest_kernels.rs` pins `analyze_all_modes` against the
+//! naive per-mode path within 1e-4 relative error across random
+//! shapes, bit widths and migration strengths.
+
+use crate::kernels::par;
+use crate::kernels::workspace::Workspace;
+use crate::metrics::{self, Channels};
+use crate::quant;
+use crate::runtime::AnalyzeOut;
+use crate::tensor::Matrix;
+use crate::transforms::{self, Mode, Rotation, RotationCache};
+
+/// One-pass `Q(X)` + residual split over every row (per-token grids),
+/// rows fanned out across `threads`.
+fn split_token(src: &Matrix, deltas: &[f32], q: &mut [f32], d: &mut [f32], threads: usize) {
+    let (n, c) = src.shape();
+    if n == 0 || c == 0 {
+        return;
+    }
+    let t = par::resolve_threads(threads).min(n);
+    if t <= 1 {
+        for i in 0..n {
+            quant::qdq_split_slice(
+                src.row(i),
+                deltas[i],
+                &mut q[i * c..(i + 1) * c],
+                &mut d[i * c..(i + 1) * c],
+            );
+        }
+        return;
+    }
+    let per = (n + t - 1) / t;
+    std::thread::scope(|s| {
+        for (ci, (qc, dc)) in q.chunks_mut(per * c).zip(d.chunks_mut(per * c)).enumerate() {
+            s.spawn(move || {
+                let row0 = ci * per;
+                let rows = qc.len() / c;
+                for i in 0..rows {
+                    quant::qdq_split_slice(
+                        src.row(row0 + i),
+                        deltas[row0 + i],
+                        &mut qc[i * c..(i + 1) * c],
+                        &mut dc[i * c..(i + 1) * c],
+                    );
+                }
+            });
+        }
+    });
+}
+
+/// Residual `W − Q(W)` under per-column grids, rows fanned out across
+/// `threads`.
+fn resid_channel(src: &Matrix, deltas: &[f32], out: &mut [f32], threads: usize) {
+    let (n, c) = src.shape();
+    if n == 0 || c == 0 {
+        return;
+    }
+    par::for_each_row_chunk(out, c, threads, |row0, chunk| {
+        let rows = chunk.len() / c;
+        for i in 0..rows {
+            quant::qdq_resid_cols(src.row(row0 + i), deltas, &mut chunk[i * c..(i + 1) * c]);
+        }
+    });
+}
+
+/// Eq. 2 error + the paper's difficulty metrics for one transformed
+/// (X̂, Ŵ) pair, all scratch drawn from `ws`.
+fn eval_pair(
+    xh: &Matrix,
+    wh: &Matrix,
+    bits: u32,
+    ws: &mut Workspace,
+    threads: usize,
+) -> (f64, f64, f64, f64) {
+    let (n, c_in) = xh.shape();
+    let c_out = wh.cols();
+    let tok = quant::token_scales(xh, bits);
+    let ch = quant::channel_scales(wh, bits);
+
+    let mut qx = ws.take(n * c_in);
+    let mut dx = ws.take(n * c_in);
+    split_token(xh, &tok, &mut qx, &mut dx, threads);
+    let mut dw = ws.take(c_in * c_out);
+    resid_channel(wh, &ch, &mut dw, threads);
+
+    let qx = Matrix::from_vec(n, c_in, qx);
+    let dx = Matrix::from_vec(n, c_in, dx);
+    let dw = Matrix::from_vec(c_in, c_out, dw);
+    let mut acc = ws.take(n * c_out);
+    // delta identity: Y - Yq = (X - Q(X)) W + Q(X) (W - Q(W)); the
+    // residual factor is sparse-ish, so it takes the zero-skip kernel
+    par::matmul_acc_sparse_into(&mut acc, &dx, wh, threads);
+    par::matmul_acc_into(&mut acc, &qx, &dw, threads);
+    let err: f64 = acc.iter().map(|&v| (v as f64) * (v as f64)).sum();
+
+    let act_diff = metrics::quant_difficulty(xh, Channels::Columns);
+    let w_diff = metrics::quant_difficulty(wh, Channels::Rows);
+    let absmax = xh.abs_max() as f64;
+
+    ws.give(acc);
+    ws.give(qx.into_vec());
+    ws.give(dx.into_vec());
+    ws.give(dw.into_vec());
+    (err, act_diff, w_diff, absmax)
+}
+
+/// `R^T W` (the weight side of Eq. 3) without a dense `R`:
+/// `R^T W = (W^T R)^T`, so transpose, row-rotate, transpose back.
+fn rotate_weights(rot: &Rotation, w: &Matrix, ws: &mut Workspace, threads: usize) -> Matrix {
+    let (r, c) = w.shape();
+    let mut wt = ws.take_matrix(c, r);
+    par::transpose_into(w, &mut wt, threads);
+    rot.apply_rows(&mut wt, threads);
+    let mut out = ws.take_matrix(r, c);
+    par::transpose_into(&wt, &mut out, threads);
+    ws.give_matrix(wt);
+    out
+}
+
+/// Analyze one (X, W) pair across all four transform modes in a single
+/// fused pass — the kernel-engine replacement for the per-mode loop.
+///
+/// Rotations come from `cache` (built once per width, FWHT whenever
+/// the width factors as 2^p · paley), matrix-sized scratch comes from
+/// `ws` (pooled in steady state; only small scale vectors still
+/// allocate), and row-parallel kernels use up to `threads` threads
+/// (`0` = all cores, `1` = fully inline).
+pub fn analyze_all_modes(
+    x: &Matrix,
+    w: &Matrix,
+    bits: u32,
+    alpha: f32,
+    cache: &mut RotationCache,
+    ws: &mut Workspace,
+    threads: usize,
+) -> Result<AnalyzeOut, String> {
+    let c_in = x.cols();
+    if w.rows() != c_in {
+        return Err(format!("analyze shape mismatch: {x:?} @ {w:?}"));
+    }
+    fn put(out: &mut AnalyzeOut, mode: Mode, v: (f64, f64, f64, f64)) {
+        let i = mode.index();
+        out.errors[i] = v.0;
+        out.act_difficulty[i] = v.1;
+        out.w_difficulty[i] = v.2;
+        out.act_absmax[i] = v.3;
+    }
+    let mut out = AnalyzeOut::default();
+
+    // mode `none`: straight off the inputs
+    let v = eval_pair(x, w, bits, ws, threads);
+    put(&mut out, Mode::None, v);
+
+    // one Eq. 4 migration vector + one smoothed pair, shared by both
+    // smoothing modes
+    let s = transforms::smooth_scales(x, w, alpha);
+    let inv: Vec<f32> = s.iter().map(|&v| 1.0 / v).collect();
+    let mut xs = ws.take_matrix_copy(x);
+    xs.scale_cols_mut(&inv);
+    let mut wsm = ws.take_matrix_copy(w);
+    wsm.scale_rows_mut(&s);
+    let v = eval_pair(&xs, &wsm, bits, ws, threads);
+    put(&mut out, Mode::Smooth, v);
+
+    // one rotation per width, shared by both rotating modes
+    let rot = cache.get(c_in)?;
+
+    let mut xr = ws.take_matrix_copy(x);
+    rot.apply_rows(&mut xr, threads);
+    let wr = rotate_weights(rot, w, ws, threads);
+    let v = eval_pair(&xr, &wr, bits, ws, threads);
+    put(&mut out, Mode::Rotate, v);
+    ws.give_matrix(xr);
+    ws.give_matrix(wr);
+
+    // smooth-rotate reuses the smoothed pair: rotate X̂ in place
+    rot.apply_rows(&mut xs, threads);
+    let wsr = rotate_weights(rot, &wsm, ws, threads);
+    let v = eval_pair(&xs, &wsr, bits, ws, threads);
+    put(&mut out, Mode::SmoothRotate, v);
+    ws.give_matrix(xs);
+    ws.give_matrix(wsm);
+    ws.give_matrix(wsr);
+
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::NativeExecutor;
+    use crate::rng::Rng;
+
+    fn rand_matrix(rows: usize, cols: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        Matrix::from_vec(rows, cols, rng.normals_f32(rows * cols))
+    }
+
+    fn close(a: f64, b: f64, what: &str) {
+        let denom = a.abs().max(b.abs()).max(1e-12);
+        assert!((a - b).abs() / denom < 1e-4, "{what}: {a} vs {b}");
+    }
+
+    #[test]
+    fn fused_matches_naive_per_mode_path() {
+        for (n, c_in, c_out, bits, seed) in
+            [(16usize, 64usize, 8usize, 4u32, 1u64), (9, 44, 5, 8, 2), (32, 128, 16, 3, 3)]
+        {
+            let x = rand_matrix(n, c_in, seed);
+            let w = rand_matrix(c_in, c_out, seed + 100);
+            let naive = NativeExecutor::analyze_naive(&x, &w, bits, 0.5).unwrap();
+            let mut cache = RotationCache::new();
+            let mut ws = Workspace::new();
+            let fused = analyze_all_modes(&x, &w, bits, 0.5, &mut cache, &mut ws, 2).unwrap();
+            for i in 0..4 {
+                close(fused.errors[i], naive.errors[i], "errors");
+                close(fused.act_difficulty[i], naive.act_difficulty[i], "act_difficulty");
+                close(fused.w_difficulty[i], naive.w_difficulty[i], "w_difficulty");
+                close(fused.act_absmax[i], naive.act_absmax[i], "act_absmax");
+            }
+        }
+    }
+
+    #[test]
+    fn thread_count_does_not_change_results() {
+        let x = rand_matrix(24, 64, 7);
+        let w = rand_matrix(64, 12, 8);
+        let mut c1 = RotationCache::new();
+        let mut w1 = Workspace::new();
+        let a = analyze_all_modes(&x, &w, 4, 0.5, &mut c1, &mut w1, 1).unwrap();
+        let mut c2 = RotationCache::new();
+        let mut w2 = Workspace::new();
+        let b = analyze_all_modes(&x, &w, 4, 0.5, &mut c2, &mut w2, 4).unwrap();
+        assert_eq!(a.errors, b.errors);
+        assert_eq!(a.act_difficulty, b.act_difficulty);
+        assert_eq!(a.w_difficulty, b.w_difficulty);
+        assert_eq!(a.act_absmax, b.act_absmax);
+    }
+
+    #[test]
+    fn shape_mismatch_is_an_error() {
+        let x = Matrix::zeros(4, 8);
+        let w = Matrix::zeros(16, 4);
+        let mut cache = RotationCache::new();
+        let mut ws = Workspace::new();
+        assert!(analyze_all_modes(&x, &w, 4, 0.5, &mut cache, &mut ws, 1).is_err());
+    }
+
+    #[test]
+    fn unconstructible_width_surfaces_the_rotation_error() {
+        let x = rand_matrix(4, 6, 9);
+        let w = rand_matrix(6, 4, 10);
+        let mut cache = RotationCache::new();
+        let mut ws = Workspace::new();
+        let err = analyze_all_modes(&x, &w, 4, 0.5, &mut cache, &mut ws, 1).unwrap_err();
+        assert!(err.contains("Hadamard"), "{err}");
+    }
+
+    #[test]
+    fn workspace_reaches_steady_state() {
+        let x = rand_matrix(16, 64, 11);
+        let w = rand_matrix(64, 8, 12);
+        let mut cache = RotationCache::new();
+        let mut ws = Workspace::new();
+        // the pool converges to peak concurrent demand within a few calls
+        for _ in 0..3 {
+            analyze_all_modes(&x, &w, 4, 0.5, &mut cache, &mut ws, 1).unwrap();
+        }
+        let (_, warm_allocs) = ws.stats();
+        for _ in 0..4 {
+            analyze_all_modes(&x, &w, 4, 0.5, &mut cache, &mut ws, 1).unwrap();
+        }
+        let (reuses, allocs) = ws.stats();
+        assert_eq!(allocs, warm_allocs, "steady-state analyze must not allocate");
+        assert!(reuses > 0);
+    }
+}

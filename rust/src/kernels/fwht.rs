@@ -1,0 +1,223 @@
+//! In-place fast Walsh–Hadamard transform (FWHT).
+//!
+//! QuaRot-style rotation (Eq. 5) multiplies each activation row by
+//! `R = H / sqrt(d)`.  Materializing `H` and running a dense `X @ H`
+//! matmul costs O(d²) per row; the Sylvester butterfly computes the
+//! identical product in O(d log d) with no matrix at all.  For the
+//! paper's non-power-of-two widths (e.g. d = 704 = 16 · 44) the crate's
+//! Hadamard is `sylvester(2^p) ⊗ paley1(q)` — the same factorization
+//! ([`crate::transforms::hadamard_factor`]) turns into a strided
+//! butterfly over the 2^p dimension plus one small dense Paley block
+//! (≤ 60×60, stack-allocated scratch) per row.  Widths with no Hadamard
+//! construction keep the dense fallback in
+//! [`crate::transforms::Rotation`].
+
+use crate::tensor::Matrix;
+use crate::transforms;
+
+/// Largest Paley-I base order the crate constructs (see
+/// `transforms::PALEY_ORDERS`); bounds the per-row stack scratch.
+const MAX_PALEY_ORDER: usize = 60;
+
+/// In-place unnormalized Walsh–Hadamard transform of a power-of-two
+/// length slice: `x <- x @ H_sylvester` (the Sylvester matrix is
+/// symmetric, so row- and column-transform coincide).
+///
+/// ```
+/// use smoothrot::kernels::fwht::fwht;
+/// use smoothrot::transforms::sylvester;
+///
+/// let mut v = vec![1.0f32, 2.0, 3.0, 4.0];
+/// fwht(&mut v);
+/// // matches the dense product against H_4
+/// let h = sylvester(4).unwrap();
+/// let want: Vec<f32> =
+///     (0..4).map(|j| (0..4).map(|i| [1.0, 2.0, 3.0, 4.0][i] * h.get(i, j)).sum()).collect();
+/// assert_eq!(v, want);
+/// ```
+pub fn fwht(xs: &mut [f32]) {
+    let n = xs.len();
+    // hard assert: a release-mode caller with a bad length would
+    // otherwise scramble the slice and then index out of bounds
+    assert!(n <= 1 || n.is_power_of_two(), "fwht needs a power-of-two length, got {n}");
+    let mut h = 1;
+    while h < n {
+        let mut i = 0;
+        while i < n {
+            for j in i..i + h {
+                let a = xs[j];
+                let b = xs[j + h];
+                xs[j] = a + b;
+                xs[j + h] = a - b;
+            }
+            i += 2 * h;
+        }
+        h *= 2;
+    }
+}
+
+/// [`fwht`] over the strided sub-sequence `xs[offset + k*stride]` for
+/// `k in 0..n` — the 2^p axis of a Kronecker-factored width.
+fn fwht_strided(xs: &mut [f32], offset: usize, stride: usize, n: usize) {
+    let mut h = 1;
+    while h < n {
+        let mut i = 0;
+        while i < n {
+            for j in i..i + h {
+                let pa = offset + j * stride;
+                let pb = offset + (j + h) * stride;
+                let a = xs[pa];
+                let b = xs[pb];
+                xs[pa] = a + b;
+                xs[pb] = a - b;
+            }
+            i += 2 * h;
+        }
+        h *= 2;
+    }
+}
+
+/// Precomputed fast-rotation plan for one width: how `d` factors as
+/// `2^p · paley_order`, the dense Paley base block (if any), and the
+/// `1/sqrt(d)` normalization of Eq. 5.
+///
+/// [`FwhtPlan::apply_row`] maps `row <- row @ (H_d / sqrt(d))` with the
+/// exact same `H_d` as [`crate::transforms::hadamard`]:
+/// `x (A ⊗ B) = vec(Aᵀ (X B))` for the row reshaped to `(2^p, order)`,
+/// and the Sylvester factor `A` is symmetric, so the strided butterfly
+/// over the 2^p axis after the per-block `X B` multiply is exact.
+#[derive(Clone, Debug)]
+pub struct FwhtPlan {
+    d: usize,
+    pow2: usize,
+    /// Dense Paley-I base block; `None` for pure power-of-two widths.
+    base: Option<Matrix>,
+    scale: f32,
+}
+
+impl FwhtPlan {
+    /// Build the plan for width `d`, or `None` when `d` has no
+    /// Sylvester ⊗ Paley factorization (no Hadamard exists either).
+    pub fn new(d: usize) -> Option<FwhtPlan> {
+        let (pow2, q) = transforms::hadamard_factor(d)?;
+        let base = if q == 0 { None } else { Some(transforms::paley1(q).ok()?) };
+        Some(FwhtPlan { d, pow2, base, scale: 1.0 / (d as f32).sqrt() })
+    }
+
+    /// The width this plan rotates.
+    pub fn dim(&self) -> usize {
+        self.d
+    }
+
+    /// Apply the orthonormal rotation in place: `row <- row @ R`,
+    /// `R = H_d / sqrt(d)`.
+    pub fn apply_row(&self, row: &mut [f32]) {
+        debug_assert_eq!(row.len(), self.d, "plan is for width {}", self.d);
+        match &self.base {
+            None => fwht(row),
+            Some(b) => {
+                let bdim = b.rows();
+                let mut tmp = [0.0f32; MAX_PALEY_ORDER];
+                // per-block dense multiply by the Paley base: X <- X B
+                for blk in row.chunks_mut(bdim) {
+                    let t = &mut tmp[..bdim];
+                    t.fill(0.0);
+                    for (j1, &v) in blk.iter().enumerate() {
+                        let brow = b.row(j1);
+                        for (tv, &bv) in t.iter_mut().zip(brow) {
+                            *tv += v * bv;
+                        }
+                    }
+                    blk.copy_from_slice(t);
+                }
+                // butterfly over the 2^p axis at each base offset
+                for j in 0..bdim {
+                    fwht_strided(row, j, bdim, self.pow2);
+                }
+            }
+        }
+        for v in row.iter_mut() {
+            *v *= self.scale;
+        }
+    }
+
+    /// Rotate every row of `x` in place, rows split across `threads`.
+    pub fn apply_matrix(&self, x: &mut Matrix, threads: usize) {
+        let d = x.cols();
+        debug_assert_eq!(d, self.d, "plan is for width {}", self.d);
+        let plan = self;
+        super::par::for_each_row_chunk(x.as_mut_slice(), d, threads, |_, chunk| {
+            for row in chunk.chunks_mut(d) {
+                plan.apply_row(row);
+            }
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+    use crate::transforms::rotation;
+
+    fn rand_row(d: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        rng.normals_f32(d)
+    }
+
+    #[test]
+    fn fwht_matches_dense_sylvester() {
+        for d in [1usize, 2, 4, 8, 32, 128] {
+            let x = rand_row(d, d as u64);
+            let mut got = x.clone();
+            fwht(&mut got);
+            let h = transforms::sylvester(d).unwrap();
+            for j in 0..d {
+                let want: f32 = (0..d).map(|i| x[i] * h.get(i, j)).sum();
+                assert!((got[j] - want).abs() < 1e-3, "d={d} col {j}: {} vs {want}", got[j]);
+            }
+        }
+    }
+
+    #[test]
+    fn plan_matches_dense_rotation_pow2_and_paley() {
+        for d in [2usize, 16, 64, 44, 88, 176] {
+            let plan = FwhtPlan::new(d).expect("factorable width");
+            assert_eq!(plan.dim(), d);
+            let x = rand_row(d, 100 + d as u64);
+            let mut got = x.clone();
+            plan.apply_row(&mut got);
+            let r = rotation(d).unwrap();
+            for j in 0..d {
+                let want: f32 = (0..d).map(|i| x[i] * r.get(i, j)).sum();
+                assert!((got[j] - want).abs() < 1e-4, "d={d} col {j}: {} vs {want}", got[j]);
+            }
+        }
+    }
+
+    #[test]
+    fn plan_absent_for_unconstructible_widths() {
+        assert!(FwhtPlan::new(6).is_none());
+        assert!(FwhtPlan::new(172).is_none());
+        assert!(FwhtPlan::new(0).is_none());
+    }
+
+    #[test]
+    fn apply_matrix_rotates_every_row() {
+        let d = 64;
+        let plan = FwhtPlan::new(d).unwrap();
+        let mut rng = Rng::new(9);
+        let x = Matrix::from_vec(7, d, rng.normals_f32(7 * d));
+        let mut a = x.clone();
+        plan.apply_matrix(&mut a, 1);
+        let mut b = x.clone();
+        plan.apply_matrix(&mut b, 4);
+        assert_eq!(a.as_slice(), b.as_slice(), "thread count must not change results");
+        // isometry per row
+        for i in 0..7 {
+            let n0: f64 = x.row(i).iter().map(|&v| (v as f64).powi(2)).sum();
+            let n1: f64 = a.row(i).iter().map(|&v| (v as f64).powi(2)).sum();
+            assert!((n0.sqrt() - n1.sqrt()).abs() / n0.sqrt().max(1e-9) < 1e-5);
+        }
+    }
+}

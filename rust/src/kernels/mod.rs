@@ -1,0 +1,30 @@
+//! Fused multi-threaded kernel engine — the compute core under both
+//! request paths.
+//!
+//! The paper's hot loop (transform X/W per Eq. 3–5, quantize per Eq. 1,
+//! accumulate the layer-wise error of Eq. 2) used to run per mode on a
+//! single-threaded scalar [`crate::tensor::Matrix`], re-materializing
+//! full intermediates for each of the four [`crate::transforms::Mode`]s
+//! and rotating via a dense `X @ H` matmul.  This subsystem replaces
+//! that architecture:
+//!
+//! | module | role |
+//! |---|---|
+//! | [`par`] | scoped-thread row-parallel matmul / transpose / apply primitives |
+//! | [`fwht`] | in-place fast Walsh–Hadamard rotation, O(d log d) per row |
+//! | [`fused`] | single-pass analyze computing all four mode errors with shared intermediates |
+//! | [`workspace`] | reusable per-worker scratch buffers (matrix-sized scratch fully pooled in steady state) |
+//!
+//! Layering: `par` and `workspace` sit directly on `tensor`; `fwht`
+//! reuses the Sylvester ⊗ Paley factorization of
+//! [`crate::transforms::hadamard`]; `fused` ties them together and is
+//! what [`crate::coordinator::NativeExecutor::analyze`] and
+//! [`crate::serve::NativeBatchExecutor`] delegate to.  Every kernel is
+//! deterministic for a fixed input regardless of the `threads` knob
+//! (rows are partitioned, per-row accumulation order never changes), so
+//! the property tests can pin fused-vs-naive agreement exactly.
+
+pub mod fused;
+pub mod fwht;
+pub mod par;
+pub mod workspace;

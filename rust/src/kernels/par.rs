@@ -1,0 +1,233 @@
+//! Row-parallel primitives on scoped threads.
+//!
+//! All heavy kernels in this crate are embarrassingly parallel over
+//! output rows, so one helper carries the whole subsystem:
+//! [`for_each_row_chunk`] splits a row-major buffer into at most
+//! `threads` contiguous row chunks and runs a closure per chunk on
+//! `std::thread::scope` threads.  Per-row work is identical to the
+//! serial kernels (same cache-blocked i-k-j loop, same accumulation
+//! order), so results are bit-identical at every thread count — the
+//! property tests rely on that.
+//!
+//! The `threads` knob is uniform across the crate: `0` resolves to
+//! `std::thread::available_parallelism()`, `1` stays on the calling
+//! thread (no spawn at all), `n > 1` uses up to `n` scoped threads.
+//!
+//! Scoped threads are spawned per call, not pooled: spawn cost (tens
+//! of microseconds) only pays off on large rows-×-cols work, which is
+//! why the serving default is `threads = 1` — worker-level parallelism
+//! with zero per-kernel spawns — and `--threads N` opts bigger jobs
+//! into intra-kernel fan-out.  A persistent per-executor pool is the
+//! natural next step if profiles show spawn overhead on wide requests.
+
+use crate::tensor::Matrix;
+
+/// Resolve a thread-count knob: `0` means "all cores".
+pub fn resolve_threads(threads: usize) -> usize {
+    if threads > 0 {
+        threads
+    } else {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    }
+}
+
+/// Split the row-major buffer `data` (rows of `cols` elements) into at
+/// most `threads` contiguous row chunks and run `f(first_row, chunk)`
+/// for each, in parallel on scoped threads.  With one effective thread
+/// (or one row) `f` runs inline on the caller's thread.
+pub fn for_each_row_chunk(
+    data: &mut [f32],
+    cols: usize,
+    threads: usize,
+    f: impl Fn(usize, &mut [f32]) + Sync,
+) {
+    let rows = if cols == 0 { 0 } else { data.len() / cols };
+    let t = resolve_threads(threads).min(rows.max(1));
+    if t <= 1 {
+        f(0, data);
+        return;
+    }
+    let per = (rows + t - 1) / t;
+    std::thread::scope(|s| {
+        for (ci, chunk) in data.chunks_mut(per * cols).enumerate() {
+            let f = &f;
+            s.spawn(move || f(ci * per, chunk));
+        }
+    });
+}
+
+/// `out += a @ b` over a row-major `out` buffer of shape
+/// `(a.rows, b.cols)`, output rows split across `threads`.
+///
+/// Same cache-blocked i-k-j kernel as [`Matrix::matmul`] — dense inner
+/// loop, no per-element branch, so it auto-vectorizes.
+pub fn matmul_acc_into(out: &mut [f32], a: &Matrix, b: &Matrix, threads: usize) {
+    let (m, k, n) = (a.rows(), a.cols(), b.cols());
+    assert_eq!(b.rows(), k, "matmul inner dims: {a:?} @ {b:?}");
+    assert_eq!(out.len(), m * n, "matmul output buffer shape");
+    const KB: usize = 64;
+    for_each_row_chunk(out, n, threads, |row0, chunk| {
+        let rows = if n == 0 { 0 } else { chunk.len() / n };
+        for kb in (0..k).step_by(KB) {
+            let kend = (kb + KB).min(k);
+            for i in 0..rows {
+                let arow = a.row(row0 + i);
+                let orow = &mut chunk[i * n..(i + 1) * n];
+                for kk in kb..kend {
+                    let av = arow[kk];
+                    let brow = b.row(kk);
+                    for j in 0..n {
+                        orow[j] += av * brow[j];
+                    }
+                }
+            }
+        }
+    });
+}
+
+/// [`matmul_acc_into`] with the zero-skip branch kept: skips the whole
+/// AXPY when the left-hand element is exactly zero.  A misprediction
+/// tax on dense data, a win on sparse-ish *delta* factors like
+/// `X - Q(X)` (zero wherever a value sits exactly on the grid) — the
+/// dedicated entry point for [`crate::quant::quant_error_fused`] and
+/// the fused analyze pass.
+pub fn matmul_acc_sparse_into(out: &mut [f32], a: &Matrix, b: &Matrix, threads: usize) {
+    let (m, k, n) = (a.rows(), a.cols(), b.cols());
+    assert_eq!(b.rows(), k, "matmul inner dims: {a:?} @ {b:?}");
+    assert_eq!(out.len(), m * n, "matmul output buffer shape");
+    const KB: usize = 64;
+    for_each_row_chunk(out, n, threads, |row0, chunk| {
+        let rows = if n == 0 { 0 } else { chunk.len() / n };
+        for kb in (0..k).step_by(KB) {
+            let kend = (kb + KB).min(k);
+            for i in 0..rows {
+                let arow = a.row(row0 + i);
+                let orow = &mut chunk[i * n..(i + 1) * n];
+                for kk in kb..kend {
+                    let av = arow[kk];
+                    if av == 0.0 {
+                        continue;
+                    }
+                    let brow = b.row(kk);
+                    for j in 0..n {
+                        orow[j] += av * brow[j];
+                    }
+                }
+            }
+        }
+    });
+}
+
+/// `a @ b` with output rows split across `threads` scoped threads.
+pub fn matmul(a: &Matrix, b: &Matrix, threads: usize) -> Matrix {
+    let mut out = Matrix::zeros(a.rows(), b.cols());
+    matmul_acc_into(out.as_mut_slice(), a, b, threads);
+    out
+}
+
+/// Transpose of `src` written into `dst` (shape `(src.cols, src.rows)`),
+/// output rows split across `threads`.
+pub fn transpose_into(src: &Matrix, dst: &mut Matrix, threads: usize) {
+    let (r, c) = src.shape();
+    assert_eq!(dst.shape(), (c, r), "transpose output shape");
+    let flat = src.as_slice();
+    for_each_row_chunk(dst.as_mut_slice(), r, threads, |row0, chunk| {
+        let rows = if r == 0 { 0 } else { chunk.len() / r };
+        for i in 0..rows {
+            let col = row0 + i;
+            for (j, ov) in chunk[i * r..(i + 1) * r].iter_mut().enumerate() {
+                *ov = flat[j * c + col];
+            }
+        }
+    });
+}
+
+/// Transposed copy with output rows split across `threads`.
+pub fn transpose(src: &Matrix, threads: usize) -> Matrix {
+    let mut out = Matrix::zeros(src.cols(), src.rows());
+    transpose_into(src, &mut out, threads);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn rand_matrix(rows: usize, cols: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        Matrix::from_vec(rows, cols, rng.normals_f32(rows * cols))
+    }
+
+    #[test]
+    fn resolve_threads_zero_is_auto() {
+        assert!(resolve_threads(0) >= 1);
+        assert_eq!(resolve_threads(3), 3);
+    }
+
+    #[test]
+    fn row_chunks_cover_every_row_once() {
+        let cols = 5;
+        let mut data = vec![0.0f32; 17 * cols];
+        for threads in [1usize, 2, 3, 8, 64] {
+            data.iter_mut().for_each(|v| *v = 0.0);
+            for_each_row_chunk(&mut data, cols, threads, |row0, chunk| {
+                let rows = chunk.len() / cols;
+                for i in 0..rows {
+                    for v in &mut chunk[i * cols..(i + 1) * cols] {
+                        *v += (row0 + i) as f32 + 1.0;
+                    }
+                }
+            });
+            for (idx, &v) in data.iter().enumerate() {
+                assert_eq!(v, (idx / cols) as f32 + 1.0, "threads={threads} idx={idx}");
+            }
+        }
+    }
+
+    #[test]
+    fn empty_buffer_is_a_noop() {
+        let mut data: Vec<f32> = Vec::new();
+        for_each_row_chunk(&mut data, 0, 4, |_, chunk| assert!(chunk.is_empty()));
+        for_each_row_chunk(&mut data, 3, 4, |_, chunk| assert!(chunk.is_empty()));
+    }
+
+    #[test]
+    fn parallel_matmul_bit_identical_to_serial() {
+        let a = rand_matrix(13, 37, 1);
+        let b = rand_matrix(37, 11, 2);
+        let serial = a.matmul(&b);
+        for threads in [1usize, 2, 5] {
+            let par = matmul(&a, &b, threads);
+            assert_eq!(par.as_slice(), serial.as_slice(), "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn sparse_matches_dense_on_delta_like_input() {
+        let mut a = rand_matrix(8, 16, 3);
+        // zero out about half the entries, like a quantization residual
+        for (i, v) in a.as_mut_slice().iter_mut().enumerate() {
+            if i % 2 == 0 {
+                *v = 0.0;
+            }
+        }
+        let b = rand_matrix(16, 6, 4);
+        let mut dense = vec![0.0f32; 8 * 6];
+        let mut sparse = vec![0.0f32; 8 * 6];
+        matmul_acc_into(&mut dense, &a, &b, 2);
+        matmul_acc_sparse_into(&mut sparse, &a, &b, 2);
+        for (d, s) in dense.iter().zip(&sparse) {
+            assert!((d - s).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn parallel_transpose_matches_serial() {
+        let a = rand_matrix(9, 23, 5);
+        let serial = a.transpose();
+        for threads in [1usize, 3, 16] {
+            assert_eq!(transpose(&a, threads).as_slice(), serial.as_slice());
+        }
+    }
+}

@@ -1,0 +1,218 @@
+//! Reusable per-worker scratch buffers.
+//!
+//! The fused analyze pass needs roughly ten intermediate buffers per
+//! request (smoothed/rotated copies of X and W, quantization residuals,
+//! the error accumulator).  Allocating them per request puts the
+//! allocator on the serving hot path; a [`Workspace`] is a small
+//! checkout/checkin pool of `Vec<f32>` owned by each worker, so
+//! steady-state serving reuses the same capacity for every
+//! matrix-sized intermediate, request after request (the remaining
+//! per-request allocations are the O(rows + cols) scale vectors).
+//!
+//! Checkout is best-fit by capacity; checkin caps the pool size so a
+//! one-off giant request cannot pin unbounded memory.  The counters
+//! ([`Workspace::stats`]) let tests pin the "no allocation in steady
+//! state" claim.
+
+use crate::tensor::Matrix;
+
+/// Most buffers retained for reuse; extra checkins are simply dropped.
+const MAX_POOLED: usize = 32;
+
+/// Byte ceiling on retained capacity: a one-off giant request must not
+/// pin hundreds of MB in a long-lived worker once traffic shrinks.
+const MAX_POOLED_BYTES: usize = 64 << 20;
+
+/// Checkout/checkin pool of reusable `f32` buffers.
+///
+/// ```
+/// use smoothrot::kernels::workspace::Workspace;
+/// let mut ws = Workspace::new();
+/// let buf = ws.take(128);          // first take allocates
+/// ws.give(buf);
+/// let buf = ws.take(64);           // second take reuses the capacity
+/// assert_eq!(buf.len(), 64);
+/// let (reuses, allocs) = ws.stats();
+/// assert_eq!((reuses, allocs), (1, 1));
+/// ```
+#[derive(Debug, Default)]
+pub struct Workspace {
+    pool: Vec<Vec<f32>>,
+    /// Total capacity currently parked in `pool`, in bytes.
+    pooled_bytes: usize,
+    reuses: u64,
+    allocs: u64,
+}
+
+impl Workspace {
+    /// Empty pool.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// A zero-filled buffer of exactly `len` elements.  Pops the
+    /// best-fitting pooled buffer when one has enough capacity,
+    /// allocating only otherwise.
+    pub fn take(&mut self, len: usize) -> Vec<f32> {
+        let mut best: Option<(usize, usize)> = None; // (index, capacity)
+        for (i, b) in self.pool.iter().enumerate() {
+            let cap = b.capacity();
+            let better = match best {
+                None => true,
+                Some((_, bc)) => cap < bc,
+            };
+            if cap >= len && better {
+                best = Some((i, cap));
+            }
+        }
+        match best {
+            Some((i, cap)) => {
+                self.reuses += 1;
+                self.pooled_bytes -= cap * std::mem::size_of::<f32>();
+                let mut b = self.pool.swap_remove(i);
+                b.clear();
+                b.resize(len, 0.0);
+                b
+            }
+            None => {
+                self.allocs += 1;
+                vec![0.0; len]
+            }
+        }
+    }
+
+    /// A buffer pre-filled with a copy of `src`.
+    pub fn take_copy(&mut self, src: &[f32]) -> Vec<f32> {
+        let mut b = self.take(src.len());
+        b.copy_from_slice(src);
+        b
+    }
+
+    /// Matrix-shaped checkout (zero-filled).
+    pub fn take_matrix(&mut self, rows: usize, cols: usize) -> Matrix {
+        Matrix::from_vec(rows, cols, self.take(rows * cols))
+    }
+
+    /// Matrix-shaped checkout holding a copy of `src`.
+    pub fn take_matrix_copy(&mut self, src: &Matrix) -> Matrix {
+        let (r, c) = src.shape();
+        Matrix::from_vec(r, c, self.take_copy(src.as_slice()))
+    }
+
+    /// Return a buffer's capacity to the pool for reuse.  Checkins
+    /// beyond the count or byte ceilings are dropped on the floor, so
+    /// retained memory is bounded regardless of peak request size.
+    pub fn give(&mut self, buf: Vec<f32>) {
+        let bytes = buf.capacity() * std::mem::size_of::<f32>();
+        if bytes > 0
+            && self.pool.len() < MAX_POOLED
+            && self.pooled_bytes + bytes <= MAX_POOLED_BYTES
+        {
+            self.pooled_bytes += bytes;
+            self.pool.push(buf);
+        }
+    }
+
+    /// [`Workspace::give`] for a matrix checkout.
+    pub fn give_matrix(&mut self, m: Matrix) {
+        self.give(m.into_vec());
+    }
+
+    /// `(reused, freshly allocated)` checkout counters since creation.
+    pub fn stats(&self) -> (u64, u64) {
+        (self.reuses, self.allocs)
+    }
+
+    /// Buffers currently parked in the pool.
+    pub fn pooled(&self) -> usize {
+        self.pool.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_is_zero_filled_and_sized() {
+        let mut ws = Workspace::new();
+        let mut b = ws.take(10);
+        assert_eq!(b.len(), 10);
+        assert!(b.iter().all(|&v| v == 0.0));
+        b[3] = 7.0;
+        ws.give(b);
+        // the dirtied buffer comes back zeroed
+        let b2 = ws.take(10);
+        assert!(b2.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn best_fit_prefers_smallest_sufficient_capacity() {
+        let mut ws = Workspace::new();
+        let small = ws.take(8);
+        let big = ws.take(1024);
+        ws.give(big);
+        ws.give(small);
+        // a request for 8 must not burn the 1024 buffer
+        let got = ws.take(8);
+        assert!(got.capacity() < 1024);
+        assert_eq!(ws.pooled(), 1);
+    }
+
+    #[test]
+    fn steady_state_allocates_nothing() {
+        let mut ws = Workspace::new();
+        let sizes = [64usize, 32, 128, 64];
+        for &s in &sizes {
+            let b = ws.take(s);
+            ws.give(b);
+        }
+        let (_, allocs_warm) = ws.stats();
+        for _ in 0..5 {
+            for &s in &sizes {
+                let b = ws.take(s);
+                ws.give(b);
+            }
+        }
+        let (reuses, allocs) = ws.stats();
+        assert_eq!(allocs, allocs_warm, "steady state must not allocate");
+        assert!(reuses >= 20);
+    }
+
+    #[test]
+    fn matrix_roundtrip() {
+        let mut ws = Workspace::new();
+        let m = ws.take_matrix(3, 4);
+        assert_eq!(m.shape(), (3, 4));
+        ws.give_matrix(m);
+        let src = Matrix::from_fn(2, 2, |i, j| (i * 2 + j) as f32);
+        let copy = ws.take_matrix_copy(&src);
+        assert_eq!(copy.as_slice(), src.as_slice());
+    }
+
+    #[test]
+    fn pool_is_bounded() {
+        let mut ws = Workspace::new();
+        for _ in 0..2 * MAX_POOLED {
+            let b = vec![0.0f32; 4];
+            ws.give(b);
+        }
+        assert!(ws.pooled() <= MAX_POOLED);
+    }
+
+    #[test]
+    fn pool_byte_ceiling_drops_giant_checkins() {
+        let mut ws = Workspace::new();
+        let quarter = MAX_POOLED_BYTES / std::mem::size_of::<f32>() / 4;
+        for _ in 0..8 {
+            ws.give(vec![0.0f32; quarter]);
+        }
+        // at most 4 quarter-cap buffers fit under the byte ceiling
+        assert!(ws.pooled() <= 4, "pooled {} buffers", ws.pooled());
+        // taking one frees byte budget for the next checkin
+        let b = ws.take(quarter);
+        let before = ws.pooled();
+        ws.give(b);
+        assert_eq!(ws.pooled(), before + 1);
+    }
+}

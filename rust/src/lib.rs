@@ -36,6 +36,7 @@
 //! | [`outlier`] | massive-outlier token model and Eq. 6–9 predictions |
 //! | [`metrics`] | channel magnitudes, quantization difficulty, kurtosis, Pearson, percentiles |
 //! | [`synth`] | native activation generator mirroring SynLlama's profiles |
+//! | [`kernels`] | fused multi-threaded kernel engine: row-parallel matmul, FWHT rotation, single-pass analyze, workspace reuse |
 //! | [`jsonio`] | minimal JSON value model + parser + writer |
 //! | [`config`] | typed experiment configuration + file parser |
 //! | [`cli`] | dependency-free argument parser |
@@ -54,6 +55,7 @@ pub mod cli;
 pub mod config;
 pub mod coordinator;
 pub mod jsonio;
+pub mod kernels;
 pub mod metrics;
 pub mod outlier;
 pub mod pipeline;

@@ -31,6 +31,12 @@ fn app() -> App {
                 .opt("artifacts", "artifacts directory", Some("artifacts"))
                 .opt("backend", "pjrt | native", Some("pjrt"))
                 .opt("workers", "worker threads", Some("2"))
+                .opt(
+                    "threads",
+                    "math threads per worker, 0 = all cores; keep workers x threads <= cores \
+                     (native backend)",
+                    Some("1"),
+                )
                 .opt("queue-cap", "bounded queue capacity", Some("64"))
                 .opt("out", "report output directory", Some("reports")),
             Command::new("figures", "regenerate one paper figure (1, 2, 3, 4 or 5)")
@@ -41,9 +47,11 @@ fn app() -> App {
             Command::new("sweep-alpha", "Sec. IV-C migration-strength sweep (native backend)")
                 .opt("artifacts", "artifacts directory", Some("artifacts"))
                 .opt("module", "module kind", Some("o_proj"))
+                .opt("threads", "math threads, 0 = all cores", Some("0"))
                 .opt("grid", "comma-separated alphas", Some("0.3,0.4,0.5,0.6,0.65,0.7,0.8,0.9")),
             Command::new("sweep-bits", "bit-width ablation 2..8 (native backend)")
                 .opt("artifacts", "artifacts directory", Some("artifacts"))
+                .opt("threads", "math threads, 0 = all cores", Some("0"))
                 .opt("grid", "comma-separated bit widths", Some("2,3,4,6,8")),
             Command::new("selfcheck", "verify PJRT outputs against golden.json and the native mirror")
                 .opt("artifacts", "artifacts directory", Some("artifacts"))
@@ -59,6 +67,7 @@ fn app() -> App {
                 .opt("requests", "number of synthetic requests", Some("64"))
                 .opt("tenants", "synthetic tenants (tenant 0 is the noisy neighbor)", Some("4"))
                 .opt("workers", "worker threads", Some("2"))
+                .opt("threads", "math threads per worker, 0 = all cores (native backend)", Some("1"))
                 .opt("max-batch", "max jobs coalesced into one executor dispatch", Some("8"))
                 .opt("queue-depth", "per-tenant admission queue capacity", Some("32"))
                 .opt("rows", "token rows per synthetic request (native backend)", Some("32"))
@@ -150,6 +159,7 @@ fn cmd_analyze(p: &smoothrot::cli::Parsed) -> Result<()> {
     let pool = PoolConfig {
         workers: p.get_usize("workers").map_err(|e| anyhow!(e))?.unwrap_or(2),
         queue_cap: p.get_usize("queue-cap").map_err(|e| anyhow!(e))?.unwrap_or(64),
+        threads: p.get_usize("threads").map_err(|e| anyhow!(e))?.unwrap_or(1),
     };
     let out_dir = p.get_or("out", "reports");
 
@@ -251,9 +261,10 @@ fn cmd_sweep_alpha(p: &smoothrot::cli::Parsed) -> Result<()> {
         .split(',')
         .map(|s| s.trim().parse::<f64>().map_err(|_| anyhow!("bad alpha {s:?}")))
         .collect::<Result<_>>()?;
+    let threads = p.get_usize("threads").map_err(|e| anyhow!(e))?.unwrap_or(0);
     let workload = pipeline::load_workload(&rt)?;
     let cfg = rt.manifest().config.clone();
-    let sweep = pipeline::alpha_sweep(&rt, &workload, module, &grid, cfg.bits)?;
+    let sweep = pipeline::alpha_sweep(&rt, &workload, module, &grid, cfg.bits, threads)?;
 
     // baseline: untransformed total error
     let mut base_total = 0.0;
@@ -282,8 +293,9 @@ fn cmd_sweep_bits(p: &smoothrot::cli::Parsed) -> Result<()> {
         .split(',')
         .map(|s| s.trim().parse::<u32>().map_err(|_| anyhow!("bad bits {s:?}")))
         .collect::<Result<_>>()?;
+    let threads = p.get_usize("threads").map_err(|e| anyhow!(e))?.unwrap_or(0);
     let workload = pipeline::load_workload(&rt)?;
-    let sweep = pipeline::bits_sweep(&rt, &workload, &grid)?;
+    let sweep = pipeline::bits_sweep(&rt, &workload, &grid, threads)?;
     println!("# bit-width ablation (total error over all modules/layers)\n");
     println!("| bits | none | smooth | rotate | smooth_rotate |");
     println!("|---|---|---|---|---|");
@@ -429,6 +441,7 @@ fn cmd_serve(p: &smoothrot::cli::Parsed) -> Result<()> {
     let n_requests = p.get_usize("requests").map_err(|e| anyhow!(e))?.unwrap_or(64);
     let n_tenants = p.get_usize("tenants").map_err(|e| anyhow!(e))?.unwrap_or(4).max(1);
     let rows = p.get_usize("rows").map_err(|e| anyhow!(e))?.unwrap_or(32).max(1);
+    let threads = p.get_usize("threads").map_err(|e| anyhow!(e))?.unwrap_or(1);
     let cfg = ServeConfig {
         workers: p.get_usize("workers").map_err(|e| anyhow!(e))?.unwrap_or(2),
         max_batch: p.get_usize("max-batch").map_err(|e| anyhow!(e))?.unwrap_or(8),
@@ -438,8 +451,8 @@ fn cmd_serve(p: &smoothrot::cli::Parsed) -> Result<()> {
     };
 
     println!(
-        "serve: {n_requests} requests, {n_tenants} tenants, {} workers, max-batch {}, \
-         queue-depth {}, {:?} admission, backend {backend:?}",
+        "serve: {n_requests} requests, {n_tenants} tenants, {} workers x {threads} math \
+         threads, max-batch {}, queue-depth {}, {:?} admission, backend {backend:?}",
         cfg.workers,
         cfg.max_batch,
         cfg.queue_depth,
@@ -449,7 +462,7 @@ fn cmd_serve(p: &smoothrot::cli::Parsed) -> Result<()> {
     let (responses, metrics) = match backend {
         Backend::Native => {
             let requests = synthetic_requests(n_requests, n_tenants, rows, 2025);
-            run_serve(cfg, requests, |_| Ok(NativeBatchExecutor::new()))?
+            run_serve(cfg, requests, move |_| Ok(NativeBatchExecutor::with_threads(threads)))?
         }
         Backend::Pjrt => {
             let rt = Runtime::new(&artifacts)?;

@@ -7,7 +7,9 @@
 //! * Pearson correlation (used for the >0.97 headline claim),
 //! * small summary/histogram helpers for the report layer,
 //! * latency percentile summaries ([`Percentiles`]) for the serving
-//!   core's p50/p95/p99 tracking.
+//!   core's p50/p95/p99 tracking,
+//! * cache hit/miss counters ([`CacheStats`]) surfacing rotation-cache
+//!   effectiveness in the serve summary.
 
 use crate::tensor::Matrix;
 
@@ -155,6 +157,48 @@ impl Percentiles {
     }
 }
 
+/// Hit/miss counters of a keyed cache, e.g. the per-width
+/// [`crate::transforms::RotationCache`] each serving worker owns.
+/// Surfaced in the serve summary line via
+/// [`crate::serve::ServeMetrics`].
+///
+/// ```
+/// use smoothrot::metrics::CacheStats;
+/// let mut s = CacheStats { hits: 3, misses: 1 };
+/// s.merge(CacheStats { hits: 1, misses: 1 });
+/// assert_eq!(s.lookups(), 6);
+/// assert!((s.hit_rate() - 4.0 / 6.0).abs() < 1e-12);
+/// ```
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    /// Lookups answered from the cache.
+    pub hits: u64,
+    /// Lookups that had to build the entry.
+    pub misses: u64,
+}
+
+impl CacheStats {
+    /// Total lookups.
+    pub fn lookups(&self) -> u64 {
+        self.hits + self.misses
+    }
+
+    /// Fraction of lookups served from the cache (0 when never used).
+    pub fn hit_rate(&self) -> f64 {
+        if self.lookups() == 0 {
+            0.0
+        } else {
+            self.hits as f64 / self.lookups() as f64
+        }
+    }
+
+    /// Fold another counter pair in (per-worker caches -> run total).
+    pub fn merge(&mut self, other: CacheStats) {
+        self.hits += other.hits;
+        self.misses += other.misses;
+    }
+}
+
 /// Fixed-width histogram over [lo, hi].
 pub fn histogram(xs: &[f64], lo: f64, hi: f64, bins: usize) -> Vec<usize> {
     assert!(bins > 0 && hi > lo);
@@ -259,6 +303,13 @@ mod tests {
         let micros: Vec<u64> = (0..50).map(|v| v * 10).collect();
         let floats: Vec<f64> = micros.iter().map(|&v| v as f64).collect();
         assert_eq!(Percentiles::of_micros(&micros), Percentiles::of(&floats));
+    }
+
+    #[test]
+    fn cache_stats_empty_rate_is_zero() {
+        let s = CacheStats::default();
+        assert_eq!(s.lookups(), 0);
+        assert_eq!(s.hit_rate(), 0.0);
     }
 
     #[test]

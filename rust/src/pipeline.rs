@@ -20,10 +20,13 @@ use std::path::PathBuf;
 use anyhow::{anyhow, Context, Result};
 
 use crate::coordinator::{
-    build_jobs, run_jobs, ExperimentGrid, Executor, Job, NativeExecutor, PoolConfig, RunMetrics,
+    build_jobs, run_jobs, ExperimentGrid, Executor, Job, PoolConfig, RunMetrics,
 };
+use crate::kernels::fused::analyze_all_modes;
+use crate::kernels::workspace::Workspace;
 use crate::runtime::{AnalyzeOut, Capture, Runtime};
 use crate::tensor::{Matrix, Stack};
+use crate::transforms::RotationCache;
 
 /// Which executor processes the jobs.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -145,7 +148,13 @@ pub fn run_full_experiment(
     let jobs = build_jobs(&stacks, &weights_ref, cfg.alpha as f32, cfg.bits);
 
     let (results, metrics) = match backend {
-        Backend::Native => run_jobs(jobs, pool, |_| Ok(NativeExecutor)).map_err(|e| anyhow!(e))?,
+        // each worker owns a fused-engine executor: persistent rotation
+        // cache + workspace, kernels fanned out over pool.threads
+        Backend::Native => {
+            let threads = pool.threads;
+            run_jobs(jobs, pool, move |_| Ok(crate::serve::NativeBatchExecutor::with_threads(threads)))
+                .map_err(|e| anyhow!(e))?
+        }
         Backend::Pjrt => {
             let dir = artifacts_dir.to_string();
             run_jobs(jobs, pool, move |_| PjrtExecutor::new(dir.clone())).map_err(|e| anyhow!(e))?
@@ -155,21 +164,27 @@ pub fn run_full_experiment(
 }
 
 /// Native-only sweep over migration strength alpha for one module.
-/// Returns (alpha, per-layer smooth-mode errors).
+/// Returns (alpha, per-layer smooth-mode errors).  One rotation cache
+/// and workspace are shared across every (alpha, layer) cell, and the
+/// fused kernels fan out over `threads` (`0` = all cores).
 pub fn alpha_sweep(
     rt: &Runtime,
     workload: &Workload,
     module: &'static str,
     alphas: &[f64],
     bits: u32,
+    threads: usize,
 ) -> Result<Vec<(f64, Vec<f64>)>> {
     let n_layers = rt.manifest().config.n_layers;
+    let mut cache = RotationCache::new();
+    let mut scratch = Workspace::new();
     let mut out = Vec::with_capacity(alphas.len());
     for &alpha in alphas {
         let mut errs = Vec::with_capacity(n_layers);
         for layer in 0..n_layers {
             let (x, w) = workload.pair(rt, module, layer);
-            let a = NativeExecutor::analyze(&x, &w, bits, alpha as f32).map_err(|e| anyhow!(e))?;
+            let a = analyze_all_modes(&x, &w, bits, alpha as f32, &mut cache, &mut scratch, threads)
+                .map_err(|e| anyhow!(e))?;
             errs.push(a.errors[crate::transforms::Mode::Smooth.index()]);
         }
         out.push((alpha, errs));
@@ -178,21 +193,33 @@ pub fn alpha_sweep(
 }
 
 /// Native-only sweep over quantization bit width (extension experiment).
-/// Returns (bits, mode) -> total error across all modules/layers.
+/// Returns (bits, mode) -> total error across all modules/layers, with
+/// the same shared cache/workspace reuse as [`alpha_sweep`].
 pub fn bits_sweep(
     rt: &Runtime,
     workload: &Workload,
     bits_grid: &[u32],
+    threads: usize,
 ) -> Result<Vec<(u32, [f64; 4])>> {
     let cfg = rt.manifest().config.clone();
+    let mut cache = RotationCache::new();
+    let mut scratch = Workspace::new();
     let mut out = Vec::new();
     for &bits in bits_grid {
         let mut totals = [0.0f64; 4];
         for module in crate::MODULES {
             for layer in 0..cfg.n_layers {
                 let (x, w) = workload.pair(rt, module, layer);
-                let a =
-                    NativeExecutor::analyze(&x, &w, bits, cfg.alpha as f32).map_err(|e| anyhow!(e))?;
+                let a = analyze_all_modes(
+                    &x,
+                    &w,
+                    bits,
+                    cfg.alpha as f32,
+                    &mut cache,
+                    &mut scratch,
+                    threads,
+                )
+                .map_err(|e| anyhow!(e))?;
                 for i in 0..4 {
                     totals[i] += a.errors[i];
                 }

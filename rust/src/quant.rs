@@ -34,6 +34,47 @@ fn qdq_val(v: f32, delta: f32) -> f32 {
     }
 }
 
+// ---------------------------------------------------------------------
+// Slice-level kernels — the building blocks the fused analyze engine
+// (`kernels::fused`) consumes directly, so it never re-materializes a
+// whole-matrix intermediate it only needs one row of.
+// ---------------------------------------------------------------------
+
+/// In-place quantize-dequantize of a slice sharing one grid step.
+pub fn qdq_slice(xs: &mut [f32], delta: f32) {
+    for v in xs {
+        *v = qdq_val(*v, delta);
+    }
+}
+
+/// In-place quantize-dequantize of one row under per-column grid steps.
+pub fn qdq_slice_cols(xs: &mut [f32], deltas: &[f32]) {
+    debug_assert_eq!(xs.len(), deltas.len());
+    for (v, &d) in xs.iter_mut().zip(deltas) {
+        *v = qdq_val(*v, d);
+    }
+}
+
+/// One-pass `Q(x)` **and** residual `x - Q(x)` for a token row (one
+/// shared grid step) — the two factors of the Eq. 2 delta identity in
+/// a single read of the source.
+pub fn qdq_split_slice(src: &[f32], delta: f32, q: &mut [f32], resid: &mut [f32]) {
+    debug_assert!(src.len() == q.len() && src.len() == resid.len());
+    for ((&s, qv), rv) in src.iter().zip(q.iter_mut()).zip(resid.iter_mut()) {
+        let val = qdq_val(s, delta);
+        *qv = val;
+        *rv = s - val;
+    }
+}
+
+/// Residual `x - Q(x)` for one row under per-column grid steps.
+pub fn qdq_resid_cols(src: &[f32], deltas: &[f32], resid: &mut [f32]) {
+    debug_assert!(src.len() == deltas.len() && src.len() == resid.len());
+    for ((&s, &d), rv) in src.iter().zip(deltas).zip(resid.iter_mut()) {
+        *rv = s - qdq_val(s, d);
+    }
+}
+
 /// Per-token quantization steps Delta (one per row).
 pub fn token_scales(x: &Matrix, bits: u32) -> Vec<f32> {
     let qm = qmax(bits);
@@ -48,25 +89,19 @@ pub fn channel_scales(w: &Matrix, bits: u32) -> Vec<f32> {
 
 /// Quantize-dequantize a copy of `x` at the given granularity.
 pub fn qdq(x: &Matrix, bits: u32, gran: Granularity) -> Matrix {
-    let (rows, cols) = x.shape();
+    let rows = x.rows();
     let mut out = x.clone();
     match gran {
         Granularity::PerToken => {
             let deltas = token_scales(x, bits);
             for i in 0..rows {
-                let d = deltas[i];
-                for v in out.row_mut(i) {
-                    *v = qdq_val(*v, d);
-                }
+                qdq_slice(out.row_mut(i), deltas[i]);
             }
         }
         Granularity::PerChannel => {
             let deltas = channel_scales(x, bits);
             for i in 0..rows {
-                let row = out.row_mut(i);
-                for j in 0..cols {
-                    row[j] = qdq_val(row[j], deltas[j]);
-                }
+                qdq_slice_cols(out.row_mut(i), &deltas);
             }
         }
         Granularity::PerTensor => {
@@ -95,10 +130,11 @@ pub fn quant_error(x: &Matrix, w: &Matrix, bits: u32) -> f64 {
 /// ```
 ///
 /// so only ONE (n, c_out) accumulator is materialized (vs Y and Yq plus
-/// a subtraction pass in the naive pipeline), and both products use the
-/// cache-blocked kernel.  The delta factors are also much sparser-ish
-/// (zero where values sit exactly on the grid), which the kernel's
-/// zero-skip exploits.
+/// a subtraction pass in the naive pipeline).  The residual factor
+/// `X - Q(X)` is sparse-ish (zero where values sit exactly on the
+/// grid), so its product goes through the dedicated zero-skip kernel
+/// [`Matrix::matmul_acc_sparse`]; the dense `Q(X)` product uses the
+/// branch-free cache-blocked kernel.
 pub fn quant_error_fused(x: &Matrix, w: &Matrix, bits: u32) -> f64 {
     let (n, c_in) = x.shape();
     let (c_in2, c_out) = w.shape();
@@ -108,7 +144,7 @@ pub fn quant_error_fused(x: &Matrix, w: &Matrix, bits: u32) -> f64 {
     let dx = x.sub(&xq); // X - Q(X)
     let dw = w.sub(&wq); // W - Q(W)
     let mut acc = Matrix::zeros(n, c_out);
-    acc.matmul_acc(&dx, w);
+    acc.matmul_acc_sparse(&dx, w);
     acc.matmul_acc(&xq, &dw);
     acc.frob_sq()
 }
@@ -172,6 +208,33 @@ mod tests {
             for j in 0..16 {
                 assert!((q.get(i, j) - x.get(i, j)).abs() <= deltas[i] / 2.0 + 1e-6);
             }
+        }
+    }
+
+    #[test]
+    fn slice_kernels_match_whole_matrix_qdq() {
+        let x = rand_matrix(6, 10, 9);
+        let tok = token_scales(&x, 4);
+        let q_ref = qdq(&x, 4, Granularity::PerToken);
+        let cols = 10;
+        let mut q = vec![0.0f32; 6 * cols];
+        let mut resid = vec![0.0f32; 6 * cols];
+        for i in 0..6 {
+            qdq_split_slice(x.row(i), tok[i], &mut q[i * cols..(i + 1) * cols], &mut resid[i * cols..(i + 1) * cols]);
+        }
+        for i in 0..6 {
+            for j in 0..cols {
+                assert_eq!(q[i * cols + j], q_ref.get(i, j), "split Q mismatch");
+                assert_eq!(resid[i * cols + j], x.get(i, j) - q_ref.get(i, j), "residual mismatch");
+            }
+        }
+        // channel residuals against the per-channel whole-matrix path
+        let ch = channel_scales(&x, 4);
+        let qc_ref = qdq(&x, 4, Granularity::PerChannel);
+        let mut rc = vec![0.0f32; cols];
+        qdq_resid_cols(x.row(2), &ch, &mut rc);
+        for j in 0..cols {
+            assert_eq!(rc[j], x.get(2, j) - qc_ref.get(2, j));
         }
     }
 

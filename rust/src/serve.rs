@@ -86,8 +86,9 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use crate::coordinator::{Executor, Job, NativeExecutor};
-use crate::metrics::Percentiles;
+use crate::coordinator::{Executor, Job};
+use crate::kernels::workspace::Workspace;
+use crate::metrics::{CacheStats, Percentiles};
 use crate::runtime::AnalyzeOut;
 use crate::transforms::RotationCache;
 
@@ -207,35 +208,75 @@ impl BatchKey {
 pub trait BatchExecutor {
     /// Process every job of one batch.
     fn run_batch(&mut self, jobs: &[Job]) -> Vec<Result<AnalyzeOut, String>>;
+
+    /// Rotation-cache counters for the serve summary; see
+    /// [`Executor::rotation_stats`].
+    fn rotation_stats(&self) -> Option<CacheStats> {
+        None
+    }
 }
 
 impl<E: Executor> BatchExecutor for E {
     fn run_batch(&mut self, jobs: &[Job]) -> Vec<Result<AnalyzeOut, String>> {
         jobs.iter().map(|j| self.run(j)).collect()
     }
+
+    fn rotation_stats(&self) -> Option<CacheStats> {
+        Executor::rotation_stats(self)
+    }
 }
 
-/// Native analysis executor with per-width rotation reuse: the
-/// Hadamard rotation (O(d^2) to build) is constructed once per distinct
-/// activation width and shared by every job the executor ever sees —
-/// the serving-path mirror of [`crate::coordinator::NativeExecutor`].
-/// It implements [`Executor`], so the blanket adapter makes it a
+/// Native analysis executor on the fused kernel engine
+/// ([`crate::kernels::fused::analyze_all_modes`]): one rotation per
+/// distinct activation width (FWHT-planned, hit/miss counted) and one
+/// reusable [`Workspace`], both shared by every job the executor ever
+/// sees — so a warm worker's matrix-sized scratch is fully pooled.  It
+/// implements [`Executor`], so the blanket adapter makes it a
 /// [`BatchExecutor`] whose shared prep is amortized across each batch.
-#[derive(Debug, Default)]
+#[derive(Debug)]
 pub struct NativeBatchExecutor {
     cache: RotationCache,
+    scratch: Workspace,
+    /// Math threads inside the kernels (`0` = all cores).
+    threads: usize,
+}
+
+impl Default for NativeBatchExecutor {
+    fn default() -> Self {
+        Self::new()
+    }
 }
 
 impl NativeBatchExecutor {
-    /// Executor with an empty rotation cache.
+    /// Single-threaded kernels (parallelism comes from the worker
+    /// pool); empty rotation cache and workspace.
     pub fn new() -> Self {
-        Self::default()
+        Self::with_threads(1)
+    }
+
+    /// Executor whose kernels fan out over `threads` math threads
+    /// (`0` = all cores) — for deployments with more cores than
+    /// workers.
+    pub fn with_threads(threads: usize) -> Self {
+        Self { cache: RotationCache::new(), scratch: Workspace::new(), threads }
     }
 }
 
 impl Executor for NativeBatchExecutor {
     fn run(&mut self, job: &Job) -> Result<AnalyzeOut, String> {
-        NativeExecutor::analyze_cached(&job.x, &job.w, job.bits, job.alpha, &mut self.cache)
+        crate::kernels::fused::analyze_all_modes(
+            &job.x,
+            &job.w,
+            job.bits,
+            job.alpha,
+            &mut self.cache,
+            &mut self.scratch,
+            self.threads,
+        )
+    }
+
+    fn rotation_stats(&self) -> Option<CacheStats> {
+        Some(self.cache.stats())
     }
 }
 
@@ -302,6 +343,9 @@ pub struct ServeMetrics {
     /// p50/p95/p99 of per-request end-to-end latency (microseconds),
     /// over a bounded reservoir of the most recent ~65k samples.
     pub latency: Percentiles,
+    /// Rotation-cache hit/miss counters summed over all workers'
+    /// executors (zero when the executor keeps no cache).
+    pub rotation: CacheStats,
     /// Per-tenant counters.
     pub per_tenant: BTreeMap<TenantId, TenantStats>,
     /// Batches executed by each worker.
@@ -329,7 +373,8 @@ impl ServeMetrics {
     pub fn summary(&self) -> String {
         let mut s = format!(
             "throughput {:.1} req/s | latency ms p50 {:.2} p95 {:.2} p99 {:.2}\n\
-             batches {} (mean size {:.2}, max {}) | steals {} | rejected {} | errors {}\n",
+             batches {} (mean size {:.2}, max {}) | steals {} | rejected {} | errors {} | \
+             rot-cache {} hit / {} miss ({:.0}%)\n",
             self.throughput(),
             self.latency.p50 / 1e3,
             self.latency.p95 / 1e3,
@@ -340,6 +385,9 @@ impl ServeMetrics {
             self.steals,
             self.rejected,
             self.errors,
+            self.rotation.hits,
+            self.rotation.misses,
+            100.0 * self.rotation.hit_rate(),
         );
         for (tenant, t) in &self.per_tenant {
             s.push_str(&format!(
@@ -387,6 +435,7 @@ struct CenterStats {
     max_batch_observed: usize,
     exec_micros_total: u64,
     latencies: Vec<u64>,
+    rotation: CacheStats,
     per_tenant: BTreeMap<TenantId, TenantStats>,
     per_worker_batches: Vec<u64>,
 }
@@ -640,6 +689,7 @@ impl Server {
             wall_micros: wall,
             exec_micros_total: s.exec_micros_total,
             latency: Percentiles::of_micros(&s.latencies),
+            rotation: s.rotation,
             per_tenant: s.per_tenant.clone(),
             per_worker_batches: s.per_worker_batches.clone(),
         }
@@ -866,6 +916,12 @@ where
             // recorded in the metrics above.
             let _ = tx.send(r);
         }
+    }
+    // On exit, fold this worker's rotation-cache counters into the run
+    // summary (the executor lives and dies with the worker thread).
+    if let Some(stats) = exec.as_ref().and_then(|e| e.rotation_stats()) {
+        let mut center = lock(&shared.center);
+        center.stats.rotation.merge(stats);
     }
 }
 
@@ -1180,6 +1236,19 @@ mod tests {
         assert_eq!(got.act_difficulty, want.act_difficulty);
         // rotation cache warmed once for the single width
         assert_eq!(be.cache.len(), 1);
+    }
+
+    #[test]
+    fn rotation_cache_stats_surface_in_metrics() {
+        let cfg = ServeConfig { workers: 1, max_batch: 4, queue_depth: 64, ..Default::default() };
+        let reqs = (0..10).map(|i| (0, job(i, "k_proj", 8, 8))).collect();
+        let (_, m) = serve_all(cfg, reqs, |_| Ok(NativeBatchExecutor::new())).unwrap();
+        // one rotation lookup per request; the single worker builds the
+        // width-8 rotation exactly once and hits thereafter
+        assert_eq!(m.rotation.lookups(), 10);
+        assert_eq!(m.rotation.misses, 1);
+        assert_eq!(m.rotation.hits, 9);
+        assert!(m.summary().contains("rot-cache 9 hit / 1 miss"), "{}", m.summary());
     }
 
     #[test]

@@ -111,57 +111,48 @@ impl Matrix {
         out
     }
 
-    /// Matrix product `self @ rhs` using a cache-blocked i-k-j kernel.
+    /// [`Matrix::transpose`] with output rows split across `threads`
+    /// scoped threads (`0` = all cores).
+    pub fn transpose_threaded(&self, threads: usize) -> Matrix {
+        crate::kernels::par::transpose(self, threads)
+    }
+
+    /// Matrix product `self @ rhs` using the cache-blocked i-k-j
+    /// kernel of [`crate::kernels::par`] on the calling thread.
+    ///
+    /// The inner j loop is a contiguous branch-free AXPY over the rhs
+    /// row and the output row — it auto-vectorizes.  For sparse-ish
+    /// left factors (quantization residuals) see
+    /// [`Matrix::matmul_acc_sparse`], which keeps a zero-skip branch.
     pub fn matmul(&self, rhs: &Matrix) -> Matrix {
-        assert_eq!(self.cols, rhs.rows, "matmul inner dims: {:?} @ {:?}", self, rhs);
-        let (m, k, n) = (self.rows, self.cols, rhs.cols);
-        let mut out = Matrix::zeros(m, n);
-        // i-k-j loop order: the inner j loop is a contiguous AXPY over the
-        // rhs row and the output row — auto-vectorizes well.
-        const KB: usize = 64;
-        for kb in (0..k).step_by(KB) {
-            let kend = (kb + KB).min(k);
-            for i in 0..m {
-                let arow = &self.data[i * k..(i + 1) * k];
-                let orow = &mut out.data[i * n..(i + 1) * n];
-                for kk in kb..kend {
-                    let a = arow[kk];
-                    if a == 0.0 {
-                        continue;
-                    }
-                    let brow = &rhs.data[kk * n..(kk + 1) * n];
-                    for j in 0..n {
-                        orow[j] += a * brow[j];
-                    }
-                }
-            }
-        }
-        out
+        self.matmul_threaded(rhs, 1)
+    }
+
+    /// [`Matrix::matmul`] with output rows split across `threads`
+    /// scoped threads (`0` = all cores).  Bit-identical to the serial
+    /// kernel at any thread count.
+    pub fn matmul_threaded(&self, rhs: &Matrix, threads: usize) -> Matrix {
+        crate::kernels::par::matmul(self, rhs, threads)
     }
 
     /// `self += a @ b` with the same cache-blocked kernel as [`matmul`].
     pub fn matmul_acc(&mut self, a: &Matrix, b: &Matrix) {
         assert_eq!(a.cols, b.rows, "matmul_acc inner dims: {a:?} @ {b:?}");
         assert_eq!(self.shape(), (a.rows, b.cols), "matmul_acc output shape");
-        let (m, k, n) = (a.rows, a.cols, b.cols);
-        const KB: usize = 64;
-        for kb in (0..k).step_by(KB) {
-            let kend = (kb + KB).min(k);
-            for i in 0..m {
-                let arow = &a.data[i * k..(i + 1) * k];
-                let orow = &mut self.data[i * n..(i + 1) * n];
-                for kk in kb..kend {
-                    let av = arow[kk];
-                    if av == 0.0 {
-                        continue;
-                    }
-                    let brow = &b.data[kk * n..(kk + 1) * n];
-                    for j in 0..n {
-                        orow[j] += av * brow[j];
-                    }
-                }
-            }
-        }
+        crate::kernels::par::matmul_acc_into(&mut self.data, a, b, 1);
+    }
+
+    /// [`Matrix::matmul_acc`] with a zero-skip on the left factor: the
+    /// whole AXPY is skipped when `a[i, k] == 0`.  On dense data the
+    /// branch mispredicts and blocks vectorization (use `matmul_acc`);
+    /// on sparse-delta factors like `X - Q(X)` — zero wherever a value
+    /// sits exactly on the quantization grid — it skips real work.
+    /// Used by [`crate::quant::quant_error_fused`] and the fused
+    /// analyze kernel.
+    pub fn matmul_acc_sparse(&mut self, a: &Matrix, b: &Matrix) {
+        assert_eq!(a.cols, b.rows, "matmul_acc inner dims: {a:?} @ {b:?}");
+        assert_eq!(self.shape(), (a.rows, b.cols), "matmul_acc output shape");
+        crate::kernels::par::matmul_acc_sparse_into(&mut self.data, a, b, 1);
     }
 
     /// Squared Frobenius norm.
@@ -345,6 +336,29 @@ mod tests {
         for (got, want) in acc.as_slice().iter().zip(twice.as_slice()) {
             assert!((got - 2.0 * want).abs() < 1e-5);
         }
+    }
+
+    #[test]
+    fn matmul_acc_sparse_matches_dense_kernel() {
+        let mut a = Matrix::from_fn(5, 7, |i, j| ((i + j) % 3) as f32 - 1.0);
+        a.set(0, 0, 0.0);
+        a.set(4, 6, 0.0);
+        let b = Matrix::from_fn(7, 3, |i, j| (i as f32) * 0.5 - (j as f32));
+        let mut dense = Matrix::zeros(5, 3);
+        dense.matmul_acc(&a, &b);
+        let mut sparse = Matrix::zeros(5, 3);
+        sparse.matmul_acc_sparse(&a, &b);
+        for (x, y) in dense.as_slice().iter().zip(sparse.as_slice()) {
+            assert!((x - y).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn threaded_entry_points_match_serial() {
+        let a = Matrix::from_fn(6, 9, |i, j| (i * 9 + j) as f32 * 0.25);
+        let b = Matrix::from_fn(9, 4, |i, j| (i as f32) - 2.0 * (j as f32));
+        assert_eq!(a.matmul_threaded(&b, 3).as_slice(), a.matmul(&b).as_slice());
+        assert_eq!(a.transpose_threaded(2).as_slice(), a.transpose().as_slice());
     }
 
     #[test]

@@ -5,7 +5,16 @@
 //! rotation, and the paper's smooth-rotation hybrid.  The PJRT artifacts
 //! bake the same matrices as constants; the integration tests assert the
 //! two paths agree.
+//!
+//! Rotation application is routed through [`Rotation`]: whenever the
+//! width factors as `2^p · paley` (every constructible width does), the
+//! O(d log d) fast Walsh–Hadamard plan of [`crate::kernels::fwht`]
+//! replaces the dense `X @ H` matmul, and [`RotationCache`] reuses one
+//! rotation per width across requests with hit/miss counters for the
+//! serving metrics.
 
+use crate::kernels::fwht::FwhtPlan;
+use crate::metrics::CacheStats;
 use crate::tensor::Matrix;
 
 /// Transform mode, in canonical artifact order.
@@ -139,23 +148,37 @@ pub fn kron(a: &Matrix, b: &Matrix) -> Matrix {
 const PALEY_ORDERS: [(usize, usize); 8] =
     [(4, 3), (12, 11), (20, 19), (24, 23), (28, 27), (44, 43), (48, 47), (60, 59)];
 
-/// Unnormalized Hadamard matrix of size d (Sylvester or Kronecker/Paley).
-pub fn hadamard(d: usize) -> Result<Matrix, String> {
-    if d >= 1 && (d & (d - 1)) == 0 {
-        return sylvester(d);
+/// How width `d` factors for the crate's Hadamard construction:
+/// `Some((pow2, q))` means `H_d = sylvester(pow2) ⊗ paley1(q)` (with
+/// `q == 0` encoding a pure Sylvester width, `H_d = sylvester(d)`);
+/// `None` means no construction is available.  Shared by the dense
+/// [`hadamard`] builder and the [`crate::kernels::fwht`] fast path, so
+/// the two can never disagree about which `H_d` they implement.
+pub fn hadamard_factor(d: usize) -> Option<(usize, usize)> {
+    if d >= 1 && d.is_power_of_two() {
+        return Some((d, 0));
     }
     let mut orders = PALEY_ORDERS;
     orders.sort_by(|a, b| b.0.cmp(&a.0));
     for (order, q) in orders {
         if d % order == 0 {
             let pow2 = d / order;
-            if pow2 >= 1 && (pow2 & (pow2 - 1)) == 0 {
-                let base = paley1(q)?;
-                return if pow2 > 1 { Ok(kron(&sylvester(pow2)?, &base)) } else { Ok(base) };
+            if pow2 >= 1 && pow2.is_power_of_two() {
+                return Some((pow2, q));
             }
         }
     }
-    Err(format!("no Hadamard construction available for d={d}"))
+    None
+}
+
+/// Unnormalized Hadamard matrix of size d (Sylvester or Kronecker/Paley).
+pub fn hadamard(d: usize) -> Result<Matrix, String> {
+    match hadamard_factor(d) {
+        Some((pow2, 0)) => sylvester(pow2),
+        Some((1, q)) => paley1(q),
+        Some((pow2, q)) => Ok(kron(&sylvester(pow2)?, &paley1(q)?)),
+        None => Err(format!("no Hadamard construction available for d={d}")),
+    }
 }
 
 /// Orthonormal rotation R = H / sqrt(d) (Eq. 5).
@@ -168,24 +191,101 @@ pub fn rotation(d: usize) -> Result<Matrix, String> {
     Ok(h)
 }
 
-/// Cache of orthonormal rotation matrices keyed by dimension.
+/// One applicable rotation `R = H_d / sqrt(d)` for a fixed width.
 ///
-/// Hadamard construction is O(d^2) and identical for every request of
-/// the same width, so the serving core's batch executors build each
-/// rotation once and reuse it across jobs (see
-/// [`crate::serve::NativeBatchExecutor`]).
+/// Every width the crate can construct a Hadamard for factors as
+/// Sylvester ⊗ Paley, so [`Rotation::build`] always yields the
+/// O(d log d) in-place [`FwhtPlan`] — no dense `H` is ever
+/// materialized on that path, and [`Rotation::Dense`] is today only
+/// reachable by constructing the variant directly (e.g. a future
+/// non-Paley construction, or a caller that already holds a dense
+/// `R`).  Both variants implement the same apply surface, so such a
+/// width would drop in without touching the engine.
+#[derive(Clone, Debug)]
+pub enum Rotation {
+    /// Fast Walsh–Hadamard plan: O(d log d) per row, in place.
+    Fwht(FwhtPlan),
+    /// Dense orthonormal matrix: O(d^2) per row.
+    Dense(Matrix),
+}
+
+impl Rotation {
+    /// Build the rotation for width `d` — FWHT whenever the width
+    /// factors as `2^p · paley`, else the dense construction (which
+    /// errors for exactly the same widths the factorization rejects).
+    pub fn build(d: usize) -> Result<Rotation, String> {
+        match FwhtPlan::new(d) {
+            Some(plan) => Ok(Rotation::Fwht(plan)),
+            None => Ok(Rotation::Dense(rotation(d)?)),
+        }
+    }
+
+    /// The width this rotation applies to.
+    pub fn dim(&self) -> usize {
+        match self {
+            Rotation::Fwht(p) => p.dim(),
+            Rotation::Dense(m) => m.rows(),
+        }
+    }
+
+    /// Whether this rotation runs through the fast O(d log d) path.
+    pub fn is_fwht(&self) -> bool {
+        matches!(self, Rotation::Fwht(_))
+    }
+
+    /// `X <- X @ R`, in place over X's rows, fanned out over `threads`.
+    pub fn apply_rows(&self, x: &mut Matrix, threads: usize) {
+        match self {
+            Rotation::Fwht(p) => p.apply_matrix(x, threads),
+            Rotation::Dense(r) => *x = crate::kernels::par::matmul(x, r, threads),
+        }
+    }
+
+    /// `X @ R` into a fresh matrix (Eq. 3's activation side).
+    pub fn apply_right(&self, x: &Matrix, threads: usize) -> Matrix {
+        let mut out = x.clone();
+        self.apply_rows(&mut out, threads);
+        out
+    }
+
+    /// `R^T @ W` (Eq. 3's weight side) — computed as `(W^T R)^T`, so
+    /// the FWHT path needs two transposes and zero dense matmuls.
+    pub fn apply_left_t(&self, w: &Matrix, threads: usize) -> Matrix {
+        match self {
+            Rotation::Fwht(_) => {
+                let mut wt = crate::kernels::par::transpose(w, threads);
+                self.apply_rows(&mut wt, threads);
+                crate::kernels::par::transpose(&wt, threads)
+            }
+            Rotation::Dense(r) => {
+                crate::kernels::par::matmul(&crate::kernels::par::transpose(r, threads), w, threads)
+            }
+        }
+    }
+}
+
+/// Cache of rotations keyed by dimension, with hit/miss counters.
+///
+/// Building a rotation (Hadamard factorization, Paley base, or the
+/// dense fallback) is identical for every request of the same width,
+/// so the serving core's batch executors build each rotation once and
+/// reuse it across jobs (see [`crate::serve::NativeBatchExecutor`]);
+/// the counters surface in the serve summary line.
 ///
 /// ```
 /// use smoothrot::transforms::RotationCache;
 /// let mut cache = RotationCache::new();
-/// let first = cache.get(8).unwrap().clone();
-/// assert_eq!(first.shape(), (8, 8));
-/// // second lookup is served from the cache
-/// assert_eq!(cache.get(8).unwrap(), &first);
+/// assert_eq!(cache.get(8).unwrap().dim(), 8);
+/// assert!(cache.get(8).unwrap().is_fwht());
+/// // the second lookup was served from the cache
+/// let stats = cache.stats();
+/// assert_eq!((stats.hits, stats.misses), (1, 1));
 /// ```
 #[derive(Debug, Default)]
 pub struct RotationCache {
-    map: std::collections::BTreeMap<usize, Matrix>,
+    map: std::collections::BTreeMap<usize, Rotation>,
+    hits: u64,
+    misses: u64,
 }
 
 impl RotationCache {
@@ -195,9 +295,13 @@ impl RotationCache {
     }
 
     /// The rotation for dimension `d`, constructing it on first use.
-    pub fn get(&mut self, d: usize) -> Result<&Matrix, String> {
-        if !self.map.contains_key(&d) {
-            self.map.insert(d, rotation(d)?);
+    pub fn get(&mut self, d: usize) -> Result<&Rotation, String> {
+        if self.map.contains_key(&d) {
+            self.hits += 1;
+        } else {
+            self.misses += 1;
+            let r = Rotation::build(d)?;
+            self.map.insert(d, r);
         }
         Ok(&self.map[&d])
     }
@@ -210,6 +314,12 @@ impl RotationCache {
     /// Whether nothing has been cached yet.
     pub fn is_empty(&self) -> bool {
         self.map.is_empty()
+    }
+
+    /// Hit/miss counters since creation.  A failed build counts as a
+    /// miss (each retry re-attempts the construction).
+    pub fn stats(&self) -> CacheStats {
+        CacheStats { hits: self.hits, misses: self.misses }
     }
 }
 
@@ -288,13 +398,14 @@ pub fn apply_cached(
         }
         Mode::Rotate => {
             let r = cache.get(x.cols())?;
-            Ok((x.matmul(r), r.transpose().matmul(w)))
+            Ok((r.apply_right(x, 1), r.apply_left_t(w, 1)))
         }
         Mode::SmoothRotate => {
             let s = smooth_scales(x, w, alpha);
-            let (xs, ws) = smooth_apply(x, w, &s);
+            let (mut xs, ws) = smooth_apply(x, w, &s);
             let r = cache.get(x.cols())?;
-            Ok((xs.matmul(r), r.transpose().matmul(&ws)))
+            r.apply_rows(&mut xs, 1);
+            Ok((xs, r.apply_left_t(&ws, 1)))
         }
     }
 }
@@ -428,6 +539,57 @@ mod tests {
         }
         // one width -> one cached rotation, reused across both rotating modes
         assert_eq!(cache.len(), 1);
+    }
+
+    #[test]
+    fn hadamard_factor_agrees_with_construction() {
+        assert_eq!(hadamard_factor(64), Some((64, 0)));
+        assert_eq!(hadamard_factor(44), Some((1, 43)));
+        assert_eq!(hadamard_factor(704), Some((16, 43)));
+        assert_eq!(hadamard_factor(6), None);
+        assert_eq!(hadamard_factor(0), None);
+        for d in [1usize, 2, 44, 64, 88, 704] {
+            assert_eq!(hadamard(d).unwrap().shape(), (d, d), "d={d}");
+        }
+    }
+
+    #[test]
+    fn rotation_enum_matches_dense_rotation() {
+        for d in [16usize, 44, 64] {
+            let rot = Rotation::build(d).unwrap();
+            assert!(rot.is_fwht(), "constructible width must take the FWHT path");
+            assert_eq!(rot.dim(), d);
+            let x = rand_matrix(5, d, d as u64);
+            let w = rand_matrix(d, 7, 1000 + d as u64);
+            let r = rotation(d).unwrap();
+            let xr_dense = x.matmul(&r);
+            let xr_fast = rot.apply_right(&x, 2);
+            let scale = xr_dense.abs_max().max(1.0);
+            for (a, b) in xr_dense.as_slice().iter().zip(xr_fast.as_slice()) {
+                assert!((a - b).abs() / scale < 1e-4, "X side d={d}: {a} vs {b}");
+            }
+            let wr_dense = r.transpose().matmul(&w);
+            let wr_fast = rot.apply_left_t(&w, 2);
+            let scale = wr_dense.abs_max().max(1.0);
+            for (a, b) in wr_dense.as_slice().iter().zip(wr_fast.as_slice()) {
+                assert!((a - b).abs() / scale < 1e-4, "W side d={d}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn rotation_cache_counts_hits_and_misses() {
+        let mut cache = RotationCache::new();
+        cache.get(16).unwrap();
+        cache.get(16).unwrap();
+        cache.get(64).unwrap();
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses), (1, 2));
+        assert_eq!(cache.len(), 2);
+        // a failed build counts as a miss and caches nothing
+        assert!(cache.get(6).is_err());
+        assert_eq!(cache.stats().misses, 3);
+        assert_eq!(cache.len(), 2);
     }
 
     #[test]

@@ -57,7 +57,7 @@ fn prop_every_job_completes_exactly_once() {
         let n = g.usize_in(1, 60);
         let jobs = make_jobs(g, n);
         let snapshot: Vec<(u64, usize)> = jobs.iter().map(|j| (j.id, j.layer)).collect();
-        let cfg = PoolConfig { workers: g.usize_in(1, 6), queue_cap: g.usize_in(1, 8) };
+        let cfg = PoolConfig { workers: g.usize_in(1, 6), queue_cap: g.usize_in(1, 8), threads: 1 };
         let (results, metrics) = run_jobs(jobs, cfg, |_| Ok(ProbeExec { sleep_us: 0 }))?;
         verify(&results, &snapshot)?;
         ensure(metrics.jobs == n, "metrics.jobs mismatch")?;
@@ -75,7 +75,7 @@ fn prop_queue_depth_never_exceeds_cap() {
         let jobs = make_jobs(g, n);
         let workers = g.usize_in(1, 4);
         let cap = g.usize_in(1, 6);
-        let cfg = PoolConfig { workers, queue_cap: cap };
+        let cfg = PoolConfig { workers, queue_cap: cap, threads: 1 };
         let (_, metrics) = run_jobs(jobs, cfg, move |_| Ok(ProbeExec { sleep_us: 200 }))?;
         // the depth counter includes jobs a worker has popped but not yet
         // decremented, so allow cap + workers + 1 slack
@@ -91,7 +91,7 @@ fn prop_results_sorted_by_id() {
     check("results are returned in id order", 15, |g| {
         let n = g.usize_in(2, 50);
         let jobs = make_jobs(g, n);
-        let cfg = PoolConfig { workers: g.usize_in(2, 5), queue_cap: 4 };
+        let cfg = PoolConfig { workers: g.usize_in(2, 5), queue_cap: 4, threads: 1 };
         let (results, _) = run_jobs(jobs, cfg, |_| Ok(ProbeExec { sleep_us: 50 }))?;
         for pair in results.windows(2) {
             ensure(pair[0].id < pair[1].id, "ids out of order")?;
@@ -118,7 +118,7 @@ fn prop_failures_always_reported() {
         let n = g.usize_in(3, 30);
         let fail_id = g.usize_in(0, n - 1) as u64;
         let jobs = make_jobs(g, n);
-        let cfg = PoolConfig { workers: g.usize_in(1, 4), queue_cap: 4 };
+        let cfg = PoolConfig { workers: g.usize_in(1, 4), queue_cap: 4, threads: 1 };
         let res = run_jobs(jobs, cfg, move |_| Ok(SometimesFail { fail_id }));
         ensure(res.is_err(), "run must fail when a job fails")?;
         ensure(

@@ -1,0 +1,149 @@
+//! Property tests over the fused kernel engine (check = proptest-lite):
+//! FWHT-vs-dense rotation agreement, fused-vs-naive analyze agreement,
+//! thread-count invariance, and workspace steady-state reuse.
+
+use smoothrot::check::{check, close, ensure};
+use smoothrot::coordinator::NativeExecutor;
+use smoothrot::kernels::fused::analyze_all_modes;
+use smoothrot::kernels::fwht::{fwht, FwhtPlan};
+use smoothrot::kernels::workspace::Workspace;
+use smoothrot::transforms::{self, RotationCache};
+
+#[test]
+fn prop_fwht_matches_dense_sylvester_2_to_256() {
+    check("fwht == x @ H_sylvester / sqrt(d) for d in {2..256}", 30, |g| {
+        let d = *g.choose(&[2usize, 4, 8, 16, 32, 64, 128, 256]);
+        let x: Vec<f32> = g.normals(d);
+        // tolerance scaled by the row magnitude: individual output
+        // components can legitimately cancel to near zero
+        let norm: f64 = x.iter().map(|&v| (v as f64).powi(2)).sum::<f64>().sqrt().max(1.0);
+        // unnormalized butterfly vs dense H
+        let mut got = x.clone();
+        fwht(&mut got);
+        let h = transforms::sylvester(d)?;
+        for j in 0..d {
+            let want: f64 = (0..d).map(|i| x[i] as f64 * h.get(i, j) as f64).sum();
+            ensure(
+                (got[j] as f64 - want).abs() <= 1e-4 * norm * (d as f64).sqrt(),
+                format!("fwht d={d} col {j}: {} vs {want}", got[j]),
+            )?;
+        }
+        // normalized plan vs dense R = H / sqrt(d)
+        let plan = FwhtPlan::new(d).ok_or("plan must exist for powers of two")?;
+        let mut rotated = x.clone();
+        plan.apply_row(&mut rotated);
+        let scale = 1.0 / (d as f64).sqrt();
+        for j in 0..d {
+            let want: f64 =
+                (0..d).map(|i| x[i] as f64 * h.get(i, j) as f64).sum::<f64>() * scale;
+            ensure(
+                (rotated[j] as f64 - want).abs() <= 1e-4 * norm,
+                format!("plan d={d} col {j}: {} vs {want}", rotated[j]),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_fwht_plan_matches_dense_rotation_mixed_widths() {
+    check("kronecker FWHT == dense rotation for paley widths", 20, |g| {
+        let d = *g.choose(&[44usize, 88, 176, 352]);
+        let plan = FwhtPlan::new(d).ok_or("plan must exist")?;
+        let x: Vec<f32> = g.normals(d);
+        let norm: f64 = x.iter().map(|&v| (v as f64).powi(2)).sum::<f64>().sqrt().max(1.0);
+        let mut got = x.clone();
+        plan.apply_row(&mut got);
+        let r = transforms::rotation(d)?;
+        for j in 0..d {
+            let want: f64 = (0..d).map(|i| x[i] as f64 * r.get(i, j) as f64).sum();
+            ensure(
+                (got[j] as f64 - want).abs() <= 1e-4 * norm,
+                format!("d={d} col {j}: {} vs {want}", got[j]),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_fused_analyze_matches_naive_per_mode() {
+    check("analyze_all_modes == naive per-mode analyze (1e-4 rel)", 20, |g| {
+        let n = g.usize_in(2, 32);
+        let c_in = *g.choose(&[8usize, 16, 32, 44, 64, 88]);
+        let c_out = g.usize_in(2, 24);
+        let bits = *g.choose(&[2u32, 3, 4, 8]);
+        let alpha = g.f32_in(0.1, 0.9);
+        let x = g.matrix(n, c_in);
+        let w = g.matrix(c_in, c_out);
+        let naive = NativeExecutor::analyze_naive(&x, &w, bits, alpha)?;
+        let mut cache = RotationCache::new();
+        let mut ws = Workspace::new();
+        let threads = g.usize_in(1, 4);
+        let fused = analyze_all_modes(&x, &w, bits, alpha, &mut cache, &mut ws, threads)?;
+        for i in 0..4 {
+            close(fused.errors[i], naive.errors[i], 1e-4, &format!("errors[{i}]"))?;
+            close(
+                fused.act_difficulty[i],
+                naive.act_difficulty[i],
+                1e-4,
+                &format!("act_difficulty[{i}]"),
+            )?;
+            close(fused.w_difficulty[i], naive.w_difficulty[i], 1e-4, &format!("w_difficulty[{i}]"))?;
+            close(fused.act_absmax[i], naive.act_absmax[i], 1e-4, &format!("act_absmax[{i}]"))?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_threaded_matmul_bit_identical_to_serial() {
+    check("matmul_threaded == matmul at every thread count", 25, |g| {
+        let m = g.usize_in(1, 24);
+        let k = g.usize_in(1, 96);
+        let n = g.usize_in(1, 24);
+        let a = g.matrix(m, k);
+        let b = g.matrix(k, n);
+        let serial = a.matmul(&b);
+        let threads = g.usize_in(0, 6); // 0 exercises the auto path
+        let par = a.matmul_threaded(&b, threads);
+        ensure(par.as_slice() == serial.as_slice(), format!("threads={threads} diverged"))?;
+        let ts = a.transpose_threaded(threads);
+        ensure(ts.as_slice() == a.transpose().as_slice(), "transpose diverged")
+    });
+}
+
+#[test]
+fn prop_workspace_steady_state_never_allocates() {
+    check("warm workspace serves analyze without allocating", 8, |g| {
+        let n = g.usize_in(4, 24);
+        let c_in = *g.choose(&[16usize, 32, 64]);
+        let c_out = g.usize_in(2, 16);
+        let x = g.matrix(n, c_in);
+        let w = g.matrix(c_in, c_out);
+        let mut cache = RotationCache::new();
+        let mut ws = Workspace::new();
+        for _ in 0..3 {
+            analyze_all_modes(&x, &w, 4, 0.5, &mut cache, &mut ws, 1)?;
+        }
+        let (_, warm_allocs) = ws.stats();
+        for _ in 0..3 {
+            analyze_all_modes(&x, &w, 4, 0.5, &mut cache, &mut ws, 1)?;
+        }
+        let (reuses, allocs) = ws.stats();
+        ensure(allocs == warm_allocs, format!("allocated {} buffers warm", allocs - warm_allocs))?;
+        ensure(reuses > 0, "workspace never reused a buffer")?;
+        // the rotation was built exactly once across all six calls
+        let s = cache.stats();
+        ensure(s.misses == 1 && s.hits == 5, format!("cache stats {s:?}"))
+    });
+}
+
+#[test]
+fn rotation_cache_serves_pow2_widths_via_fwht() {
+    let mut cache = RotationCache::new();
+    for d in [8usize, 64, 256, 704] {
+        assert!(cache.get(d).unwrap().is_fwht(), "d={d} must take the FWHT path");
+    }
+    assert_eq!(cache.len(), 4);
+}
