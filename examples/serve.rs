@@ -40,7 +40,7 @@ fn main() -> Result<()> {
         cfg.queue_depth
     );
 
-    let (responses, metrics) = run(cfg, synthetic_requests(n_requests, 3, rows, 1))?;
+    let (responses, metrics) = run(cfg, synthetic_requests(n_requests, 3, rows, 32, 1))?;
 
     println!("first responses off the stream:");
     for r in responses.iter().take(5) {
@@ -81,7 +81,7 @@ fn main() -> Result<()> {
 
     // Same stream with batching disabled: what does coalescing buy?
     let unbatched_cfg = ServeConfig { max_batch: 1, ..cfg };
-    let (_, unbatched) = run(unbatched_cfg, synthetic_requests(n_requests, 3, rows, 1))?;
+    let (_, unbatched) = run(unbatched_cfg, synthetic_requests(n_requests, 3, rows, 32, 1))?;
     println!(
         "\nbatched (max-batch {max_batch}): {:.1} req/s, mean batch {:.2} | \
          unbatched (max-batch 1): {:.1} req/s",
@@ -89,5 +89,31 @@ fn main() -> Result<()> {
         metrics.mean_batch(),
         unbatched.throughput(),
     );
+
+    // Calibrate once, serve many: the same stream again, but each
+    // request now runs only its pre-planned transform (zero per-request
+    // transform search) instead of the four-mode analyze.
+    use smoothrot::calib::registry::PlanRegistry;
+    use smoothrot::pipeline::{calibrate_synthetic, CalibrateConfig};
+    use std::sync::Arc;
+    let calib = calibrate_synthetic(&CalibrateConfig {
+        layers: 32,
+        rows_per_batch: rows,
+        ..CalibrateConfig::default()
+    })?;
+    let registry = Arc::new(PlanRegistry::from_plan(&calib.plan).map_err(anyhow::Error::msg)?);
+    let reg = Arc::clone(&registry);
+    let (_, planned) = serve_all(cfg, synthetic_requests(n_requests, 3, rows, 32, 1), move |_| {
+        Ok(NativeBatchExecutor::with_plan(Arc::clone(&reg), 1))
+    })
+    .map_err(|e| anyhow!(e.to_string()))?;
+    let (hits, misses) = registry.stats();
+    println!(
+        "plan-driven: {:.1} req/s vs analyze-per-request {:.1} req/s ({hits} planned / \
+         {misses} fallback)",
+        planned.throughput(),
+        metrics.throughput(),
+    );
+    assert_eq!(misses, 0, "every request must be covered by the calibrated plan");
     Ok(())
 }

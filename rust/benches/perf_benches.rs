@@ -6,7 +6,9 @@
 //!   rotation, 1-vs-N-thread parallel matmul,
 //! * L3 coordinator: scheduling overhead at varying worker counts,
 //! * L3 serving core: batched vs unbatched dispatch throughput over the
-//!   multi-tenant scheduler (native executors),
+//!   multi-tenant scheduler (native executors), and plan-driven serve
+//!   (calibrated transform per request) vs per-request four-mode
+//!   analyze,
 //! * runtime: PJRT execute latency for the analyze/transform artifacts
 //!   (the end-to-end request-path unit).
 //!
@@ -197,6 +199,111 @@ fn main() {
             println!(
                 "    -> batching speedup (max-batch 16 vs 1): {:.2}x",
                 unbatched.as_secs_f64() / batched.as_secs_f64()
+            );
+        }
+    }
+
+    // ---- plan-driven serve vs per-request analyze ------------------------
+    // Calibrate k_proj once (streaming stats -> plan search -> registry),
+    // then serve the same request stream twice: the baseline executor
+    // runs the four-mode analyze per request; the plan-driven executor
+    // runs only the calibrated transform.  Same scheduler, same batches
+    // — the delta is exactly the per-request transform search the plan
+    // eliminates (ISSUE acceptance: plan-driven must be strictly
+    // faster).
+    {
+        use smoothrot::calib::plan::{Provenance, QuantPlan};
+        use smoothrot::calib::registry::PlanRegistry;
+        use smoothrot::calib::search::{search_layer, SearchConfig};
+        use smoothrot::calib::stats::LayerCollector;
+        use smoothrot::serve::{serve_all, NativeBatchExecutor, ServeConfig};
+        use std::sync::Arc;
+
+        let n_layers = 8usize;
+        let mut entries = Vec::new();
+        let mut cal_cache = RotationCache::new();
+        let mut cal_ws = Workspace::new();
+        for layer in 0..n_layers {
+            let (mut spec, c_out) = smoothrot::synth::module_stream("k_proj", 400).unwrap();
+            spec.n_tokens = 64;
+            let xl = spec.layer(layer);
+            let wl = spec.weight(c_out, layer);
+            let mut c = LayerCollector::new(xl.cols(), 0);
+            c.observe(&xl).unwrap();
+            let found = search_layer(
+                "k_proj",
+                layer,
+                &c,
+                &wl,
+                &SearchConfig::default(),
+                &mut cal_cache,
+                &mut cal_ws,
+            )
+            .unwrap();
+            entries.extend(found.entries);
+        }
+        let plan = QuantPlan { provenance: Provenance::default(), entries };
+        let registry = Arc::new(PlanRegistry::from_plan(&plan).unwrap());
+
+        let n = 96usize;
+        let base: Vec<(usize, Job)> = (0..n)
+            .map(|i| {
+                let layer = i % n_layers;
+                let (mut spec, c_out) =
+                    smoothrot::synth::module_stream("k_proj", 500 + i as u64).unwrap();
+                spec.n_tokens = 32;
+                let job = Job {
+                    id: i as u64,
+                    layer,
+                    module: "k_proj",
+                    x: spec.layer(layer),
+                    w: spec.weight(c_out, layer),
+                    alpha: 0.5,
+                    bits: 4,
+                };
+                (i % 4, job)
+            })
+            .collect();
+        let cfg = ServeConfig {
+            workers: 2,
+            max_batch: 8,
+            queue_depth: n,
+            paused: true,
+            ..ServeConfig::default()
+        };
+
+        let analyze_med = {
+            let reqs = base.clone();
+            b.bench_items("serve_analyze_per_request_96req", n as f64, move || {
+                let (_, m) =
+                    serve_all(cfg, reqs.clone(), |_| Ok(NativeBatchExecutor::new())).unwrap();
+                assert_eq!(m.completed as usize, n);
+                black_box(m.batches);
+            })
+            .map(|m| m.median())
+        };
+        let plan_med = {
+            let reqs = base.clone();
+            let reg_outer = Arc::clone(&registry);
+            b.bench_items("serve_plan_driven_96req", n as f64, move || {
+                let reg = Arc::clone(&reg_outer);
+                let (_, m) = serve_all(cfg, reqs.clone(), move |_| {
+                    Ok(NativeBatchExecutor::with_plan(Arc::clone(&reg), 1))
+                })
+                .unwrap();
+                assert_eq!(m.completed as usize, n);
+                black_box(m.batches);
+            })
+            .map(|m| m.median())
+        };
+        if plan_med.is_some() {
+            let (planned, fallback) = registry.stats();
+            assert!(planned > 0 && fallback == 0, "plan must cover every benched request");
+        }
+        if let (Some(a), Some(p)) = (analyze_med, plan_med) {
+            println!(
+                "    -> plan-driven serve vs per-request analyze: {:.2}x",
+                a.as_secs_f64() / p.as_secs_f64()
             );
         }
     }

@@ -1,0 +1,57 @@
+//! Calibration & quantization-plan subsystem — "calibrate once, serve
+//! many".
+//!
+//! The paper's channel-magnitude difficulty metric and the hybrid
+//! smooth-then-rotate transform are calibration products: SmoothQuant's
+//! Eq. 4 migration vector and the per-layer transform choice both come
+//! from *observed* activation statistics.  Before this module those
+//! products lived only inside one-shot offline sweeps
+//! ([`crate::pipeline::run_full_experiment`]) — nothing persisted what
+//! was learned, and the serving path re-derived everything per request.
+//!
+//! This subsystem closes the loop in four stages:
+//!
+//! ```text
+//!   activation batches ──> [stats]    streaming, mergeable per-channel
+//!                             │       accumulators (Welford shards)
+//!                             v
+//!                          [search]   per-(module, layer): mode × alpha
+//!                             │       × bits grid through the fused
+//!                             │       kernel engine (Eq. 2 / Eq. 4)
+//!                             v
+//!                          [plan]     versioned, content-hashed JSON
+//!                             │       artifact with provenance
+//!                             v
+//!                          [registry] load-time resolution into
+//!                                     rotations + smoothing vectors;
+//!                                     consulted by the serving path
+//! ```
+//!
+//! * [`stats`] — [`stats::ChannelStats`] accumulates per-channel
+//!   absolute-max / mean / magnitude over batches and merges
+//!   deterministically across worker shards; [`stats::LayerCollector`]
+//!   pairs it with a bounded deterministic sample reservoir.
+//! * [`search`] — [`search::search_layer`] grids mode × alpha × bits on
+//!   the collected stats + sample through
+//!   [`crate::kernels::fused::analyze_all_modes`], choosing per cell via
+//!   [`search::choose_mode`] (the same chooser
+//!   [`crate::policy::recommend`] is now expressed on).
+//! * [`plan`] — [`plan::QuantPlan`]: schema-versioned, content-hashed,
+//!   provenance-carrying artifact with strict round-trip and
+//!   newer-version rejection.
+//! * [`registry`] — [`registry::PlanRegistry`]: resolves a plan into
+//!   ready-to-apply transforms (pre-built [`crate::transforms::Rotation`]
+//!   entries, pre-scaled smoothing vectors) that
+//!   [`crate::serve::NativeBatchExecutor`] consults per request, with a
+//!   SIGHUP-free mtime-poll hot reload.
+//!
+//! The CLI entry points are `smoothrot calibrate` (stream → stats →
+//! search → plan file) and `smoothrot serve --plan <path>`; the
+//! calibrate-vs-analyze equivalence is pinned by
+//! `rust/tests/calib_equivalence.rs` and the `calibrate --selfcheck`
+//! flag.
+
+pub mod plan;
+pub mod registry;
+pub mod search;
+pub mod stats;

@@ -1,0 +1,454 @@
+//! Versioned quantization-plan artifacts.
+//!
+//! A [`QuantPlan`] is what calibration persists: per (module, layer,
+//! bits) the chosen transform, its migration strength, the Eq. 4
+//! smoothing vector (when the transform smooths), the predicted Eq. 2
+//! error, and the difficulty metric before/after.  The artifact is a
+//! JSON document with three integrity layers:
+//!
+//! * **schema version** — [`PLAN_SCHEMA_VERSION`]; loading a plan
+//!   written by a *newer* schema fails loudly instead of misreading it,
+//!   while unknown extra fields from same-version writers are ignored
+//!   (forward-compatible readers, strict version ceiling),
+//! * **content hash** — an FNV-1a 64 digest of the canonical compact
+//!   serialization of the body, recomputed on load; a plan whose values
+//!   were edited by hand no longer matches its declared hash,
+//! * **provenance** — the seed, search grids, margin and thread count
+//!   that produced the plan, so any artifact can be regenerated.
+//!
+//! Round-trip strictness (serialize → parse → identical plan, newer
+//! versions rejected) is pinned by `rust/tests/proptest_plan.rs`.
+
+use crate::jsonio::{self, obj, Json};
+use crate::transforms::Mode;
+
+/// Schema version written by this crate; readers reject anything newer.
+pub const PLAN_SCHEMA_VERSION: u32 = 1;
+
+/// FNV-1a 64-bit digest (the artifact content hash).
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// How a plan came to be: enough to regenerate it.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Provenance {
+    /// Calibration stream seed.
+    pub seed: u64,
+    /// Migration-strength grid searched.
+    pub alphas: Vec<f64>,
+    /// Bit-width grid searched.
+    pub bits_grid: Vec<u32>,
+    /// Smooth-rotation adoption margin (paper Sec. V conservatism).
+    pub sr_margin: f64,
+    /// Math threads the search ran with.
+    pub threads: usize,
+    /// Producing tool + version.
+    pub tool: String,
+}
+
+impl Default for Provenance {
+    fn default() -> Self {
+        Self {
+            seed: 0,
+            alphas: vec![0.5],
+            bits_grid: vec![4],
+            sr_margin: 1.25,
+            threads: 1,
+            tool: format!("smoothrot {}", crate::VERSION),
+        }
+    }
+}
+
+/// One calibrated cell: the transform to deploy for (module, layer,
+/// bits) requests.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PlanEntry {
+    /// Module kind (one of [`crate::MODULES`]).
+    pub module: String,
+    /// Layer index.
+    pub layer: usize,
+    /// Quantization bit width this entry was searched at.
+    pub bits: u32,
+    /// Activation width (validates request shapes at apply time).
+    pub c_in: usize,
+    /// Chosen transform.
+    pub mode: Mode,
+    /// Chosen migration strength (meaningful for smoothing modes).
+    pub alpha: f32,
+    /// Predicted Eq. 2 error under the chosen transform.
+    pub predicted_error: f64,
+    /// Quantization difficulty of the untransformed activations.
+    pub difficulty_before: f64,
+    /// Quantization difficulty after the chosen transform.
+    pub difficulty_after: f64,
+    /// Eq. 4 migration vector `s` (length `c_in`), present iff the
+    /// chosen mode smooths — computed from the *streaming* channel
+    /// maxima at calibration time and applied verbatim online.
+    pub smooth: Option<Vec<f32>>,
+}
+
+/// A complete, versioned calibration product.
+///
+/// ```
+/// use smoothrot::calib::plan::{PlanEntry, Provenance, QuantPlan};
+/// use smoothrot::transforms::Mode;
+///
+/// let plan = QuantPlan {
+///     provenance: Provenance { seed: 7, ..Provenance::default() },
+///     entries: vec![PlanEntry {
+///         module: "down_proj".into(),
+///         layer: 30,
+///         bits: 4,
+///         c_in: 704,
+///         mode: Mode::SmoothRotate,
+///         alpha: 0.5,
+///         predicted_error: 12.5,
+///         difficulty_before: 40.0,
+///         difficulty_after: 1.5,
+///         smooth: None,
+///     }],
+/// };
+/// let text = plan.to_json_string();
+/// let back = QuantPlan::parse(&text).unwrap();
+/// assert_eq!(back, plan);
+/// assert_eq!(back.get("down_proj", 30, 4).unwrap().mode, Mode::SmoothRotate);
+/// ```
+#[derive(Clone, Debug, PartialEq)]
+pub struct QuantPlan {
+    pub provenance: Provenance,
+    pub entries: Vec<PlanEntry>,
+}
+
+impl QuantPlan {
+    /// Entry for (module, layer, bits), if calibrated.
+    pub fn get(&self, module: &str, layer: usize, bits: u32) -> Option<&PlanEntry> {
+        self.entries
+            .iter()
+            .find(|e| e.module == module && e.layer == layer && e.bits == bits)
+    }
+
+    /// The canonical body (everything except the content hash).
+    fn body_json(&self) -> Json {
+        let p = &self.provenance;
+        let provenance = obj(vec![
+            // seed is u64: stored as a decimal string so values above
+            // 2^53 survive the f64 number model losslessly
+            ("seed", Json::Str(p.seed.to_string())),
+            ("alphas", jsonio::num_arr(&p.alphas)),
+            (
+                "bits_grid",
+                Json::Arr(p.bits_grid.iter().map(|&b| Json::Num(b as f64)).collect()),
+            ),
+            ("sr_margin", Json::Num(p.sr_margin)),
+            ("threads", Json::Num(p.threads as f64)),
+            ("tool", Json::Str(p.tool.clone())),
+        ]);
+        let entries = Json::Arr(
+            self.entries
+                .iter()
+                .map(|e| {
+                    let mut fields = vec![
+                        ("module", Json::Str(e.module.clone())),
+                        ("layer", Json::Num(e.layer as f64)),
+                        ("bits", Json::Num(e.bits as f64)),
+                        ("c_in", Json::Num(e.c_in as f64)),
+                        ("mode", Json::Str(e.mode.name().into())),
+                        ("alpha", Json::Num(e.alpha as f64)),
+                        ("predicted_error", Json::Num(e.predicted_error)),
+                        ("difficulty_before", Json::Num(e.difficulty_before)),
+                        ("difficulty_after", Json::Num(e.difficulty_after)),
+                    ];
+                    if let Some(s) = &e.smooth {
+                        fields.push((
+                            "smooth",
+                            Json::Arr(s.iter().map(|&v| Json::Num(v as f64)).collect()),
+                        ));
+                    }
+                    obj(fields)
+                })
+                .collect(),
+        );
+        obj(vec![
+            ("version", Json::Num(PLAN_SCHEMA_VERSION as f64)),
+            ("provenance", provenance),
+            ("entries", entries),
+        ])
+    }
+
+    /// Content hash of the canonical body, as `fnv1a64:<hex>`.
+    pub fn content_hash(&self) -> String {
+        format!("fnv1a64:{:016x}", fnv1a64(self.body_json().to_string_compact().as_bytes()))
+    }
+
+    /// Full artifact JSON (body + content hash).
+    pub fn to_json(&self) -> Json {
+        match self.body_json() {
+            Json::Obj(mut fields) => {
+                fields.push(("content_hash".to_string(), Json::Str(self.content_hash())));
+                Json::Obj(fields)
+            }
+            _ => unreachable!("body is always an object"),
+        }
+    }
+
+    /// Pretty-printed artifact text (what `smoothrot calibrate` writes).
+    pub fn to_json_string(&self) -> String {
+        self.to_json().to_string_pretty()
+    }
+
+    /// Strict parse: schema-version ceiling, required fields, content
+    /// hash re-verified against the canonical re-serialization (so
+    /// value edits are caught while unknown extra fields and formatting
+    /// differences are tolerated).
+    pub fn parse(text: &str) -> Result<QuantPlan, String> {
+        let j = jsonio::parse(text).map_err(|e| format!("quant plan: {e}"))?;
+        let version = j
+            .get("version")
+            .and_then(Json::as_u64)
+            .ok_or("quant plan: missing 'version'")?;
+        if version > PLAN_SCHEMA_VERSION as u64 {
+            return Err(format!(
+                "quant plan: schema version {version} is newer than supported {PLAN_SCHEMA_VERSION} — upgrade smoothrot or regenerate the plan"
+            ));
+        }
+        if version == 0 {
+            return Err("quant plan: schema version 0 is invalid".into());
+        }
+        let p = j.get("provenance").ok_or("quant plan: missing 'provenance'")?;
+        let provenance = Provenance {
+            seed: p
+                .get("seed")
+                .and_then(Json::as_str)
+                .and_then(|s| s.parse::<u64>().ok())
+                .ok_or("quant plan: provenance.seed must be a decimal string")?,
+            alphas: p
+                .get("alphas")
+                .and_then(Json::as_f64_vec)
+                .ok_or("quant plan: provenance.alphas")?,
+            bits_grid: p
+                .get("bits_grid")
+                .and_then(Json::as_arr)
+                .ok_or("quant plan: provenance.bits_grid")?
+                .iter()
+                .map(|v| v.as_u64().map(|b| b as u32).ok_or("quant plan: bad bits_grid entry"))
+                .collect::<Result<_, _>>()?,
+            sr_margin: p
+                .get("sr_margin")
+                .and_then(Json::as_f64)
+                .ok_or("quant plan: provenance.sr_margin")?,
+            threads: p
+                .get("threads")
+                .and_then(Json::as_usize)
+                .ok_or("quant plan: provenance.threads")?,
+            tool: p
+                .get("tool")
+                .and_then(Json::as_str)
+                .ok_or("quant plan: provenance.tool")?
+                .to_string(),
+        };
+        let mut entries = Vec::new();
+        for (i, e) in j
+            .get("entries")
+            .and_then(Json::as_arr)
+            .ok_or("quant plan: missing 'entries'")?
+            .iter()
+            .enumerate()
+        {
+            let field = |k: &str| {
+                e.get(k).ok_or_else(|| format!("quant plan: entry {i} missing '{k}'"))
+            };
+            let bad = |k: &str| format!("quant plan: entry {i}: bad '{k}'");
+            let mode_name = field("mode")?.as_str().ok_or_else(|| bad("mode"))?;
+            let mode = Mode::from_name(mode_name)
+                .ok_or_else(|| format!("quant plan: entry {i}: unknown mode {mode_name:?}"))?;
+            let smooth = match e.get("smooth") {
+                None => None,
+                Some(s) => Some(s.as_f32_vec().ok_or_else(|| bad("smooth"))?),
+            };
+            entries.push(PlanEntry {
+                module: field("module")?
+                    .as_str()
+                    .ok_or_else(|| bad("module"))?
+                    .to_string(),
+                layer: field("layer")?.as_usize().ok_or_else(|| bad("layer"))?,
+                bits: field("bits")?.as_u64().ok_or_else(|| bad("bits"))? as u32,
+                c_in: field("c_in")?.as_usize().ok_or_else(|| bad("c_in"))?,
+                mode,
+                alpha: field("alpha")?.as_f64().ok_or_else(|| bad("alpha"))? as f32,
+                predicted_error: field("predicted_error")?
+                    .as_f64()
+                    .ok_or_else(|| bad("predicted_error"))?,
+                difficulty_before: field("difficulty_before")?
+                    .as_f64()
+                    .ok_or_else(|| bad("difficulty_before"))?,
+                difficulty_after: field("difficulty_after")?
+                    .as_f64()
+                    .ok_or_else(|| bad("difficulty_after"))?,
+                smooth,
+            });
+        }
+        let plan = QuantPlan { provenance, entries };
+        let declared = j
+            .get("content_hash")
+            .and_then(Json::as_str)
+            .ok_or("quant plan: missing 'content_hash'")?;
+        let recomputed = plan.content_hash();
+        if declared != recomputed {
+            return Err(format!(
+                "quant plan: content hash mismatch (declared {declared}, recomputed {recomputed}) — the artifact was edited or corrupted"
+            ));
+        }
+        Ok(plan)
+    }
+
+    /// Load and parse a plan file.
+    pub fn load(path: &std::path::Path) -> Result<QuantPlan, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("reading plan {}: {e}", path.display()))?;
+        Self::parse(&text).map_err(|e| format!("{}: {e}", path.display()))
+    }
+
+    /// Write the artifact to `path` (creating parent directories).
+    pub fn save(&self, path: &std::path::Path) -> Result<(), String> {
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)
+                    .map_err(|e| format!("mkdir {}: {e}", dir.display()))?;
+            }
+        }
+        std::fs::write(path, self.to_json_string())
+            .map_err(|e| format!("writing plan {}: {e}", path.display()))
+    }
+
+    /// Layer count covered per module (max layer index + 1), for
+    /// summaries.
+    pub fn n_layers(&self) -> usize {
+        self.entries.iter().map(|e| e.layer + 1).max().unwrap_or(0)
+    }
+
+    /// Human-readable summary table (per module: chosen-mode counts).
+    pub fn summary(&self) -> String {
+        let mut s = format!(
+            "# quantization plan (schema v{PLAN_SCHEMA_VERSION}, {} entries, hash {})\n",
+            self.entries.len(),
+            self.content_hash()
+        );
+        for module in crate::MODULES {
+            let picks: Vec<&PlanEntry> =
+                self.entries.iter().filter(|e| e.module == module).collect();
+            if picks.is_empty() {
+                continue;
+            }
+            let count = |m: Mode| picks.iter().filter(|e| e.mode == m).count();
+            s.push_str(&format!(
+                "{module:>10}: none {} smooth {} rotate {} smooth_rotate {}\n",
+                count(Mode::None),
+                count(Mode::Smooth),
+                count(Mode::Rotate),
+                count(Mode::SmoothRotate),
+            ));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_plan() -> QuantPlan {
+        QuantPlan {
+            provenance: Provenance { seed: u64::MAX - 3, ..Provenance::default() },
+            entries: vec![
+                PlanEntry {
+                    module: "k_proj".into(),
+                    layer: 0,
+                    bits: 4,
+                    c_in: 8,
+                    mode: Mode::Rotate,
+                    alpha: 0.5,
+                    predicted_error: 1.25,
+                    difficulty_before: 3.0,
+                    difficulty_after: 0.5,
+                    smooth: None,
+                },
+                PlanEntry {
+                    module: "down_proj".into(),
+                    layer: 1,
+                    bits: 4,
+                    c_in: 4,
+                    mode: Mode::SmoothRotate,
+                    alpha: 0.65,
+                    predicted_error: 0.75,
+                    difficulty_before: 9.0,
+                    difficulty_after: 0.25,
+                    smooth: Some(vec![0.5, 2.0, 1.0, 0.125]),
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn roundtrip_is_identical_including_u64_seed() {
+        let plan = tiny_plan();
+        let back = QuantPlan::parse(&plan.to_json_string()).unwrap();
+        assert_eq!(back, plan);
+        assert_eq!(back.provenance.seed, u64::MAX - 3);
+        assert_eq!(back.content_hash(), plan.content_hash());
+    }
+
+    #[test]
+    fn newer_schema_version_is_rejected() {
+        let text = tiny_plan()
+            .to_json_string()
+            .replace(&format!("\"version\": {PLAN_SCHEMA_VERSION}"), "\"version\": 99");
+        let err = QuantPlan::parse(&text).unwrap_err();
+        assert!(err.contains("newer than supported"), "{err}");
+    }
+
+    #[test]
+    fn value_tampering_breaks_the_content_hash() {
+        let text = tiny_plan().to_json_string();
+        assert!(text.contains("\"predicted_error\": 1.25"));
+        let tampered = text.replace("\"predicted_error\": 1.25", "\"predicted_error\": 99");
+        let err = QuantPlan::parse(&tampered).unwrap_err();
+        assert!(err.contains("content hash mismatch"), "{err}");
+    }
+
+    #[test]
+    fn unknown_extra_fields_are_tolerated() {
+        let text = tiny_plan()
+            .to_json_string()
+            .replacen("\"provenance\"", "\"future_field\": [1, 2],\n \"provenance\"", 1);
+        let back = QuantPlan::parse(&text).unwrap();
+        assert_eq!(back, tiny_plan());
+    }
+
+    #[test]
+    fn lookup_and_summary() {
+        let plan = tiny_plan();
+        assert_eq!(plan.get("down_proj", 1, 4).unwrap().mode, Mode::SmoothRotate);
+        assert!(plan.get("down_proj", 1, 8).is_none());
+        assert!(plan.get("o_proj", 0, 4).is_none());
+        assert_eq!(plan.n_layers(), 2);
+        let s = plan.summary();
+        assert!(s.contains("down_proj") && s.contains("fnv1a64:"), "{s}");
+    }
+
+    #[test]
+    fn save_and_load_through_a_file() {
+        let dir = std::env::temp_dir().join("smoothrot_plan_test");
+        let path = dir.join("plan.json");
+        let plan = tiny_plan();
+        plan.save(&path).unwrap();
+        let back = QuantPlan::load(&path).unwrap();
+        assert_eq!(back, plan);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

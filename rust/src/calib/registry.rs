@@ -1,0 +1,370 @@
+//! Plan registry — the serving-side face of calibration.
+//!
+//! A [`PlanRegistry`] turns a parsed [`QuantPlan`] into ready-to-apply
+//! state at *load time*: one shared [`Rotation`] per distinct
+//! activation width (FWHT-planned, built once), and the plan's Eq. 4
+//! smoothing vectors held behind `Arc` so per-request lookups clone
+//! pointers, not data.  [`crate::serve::NativeBatchExecutor`] consults
+//! the registry per job and, on a hit, runs the single planned
+//! transform ([`crate::kernels::fused::analyze_planned`]) instead of
+//! the four-mode analyze — zero per-request transform search.
+//!
+//! Hot reload is SIGHUP-free: [`PlanRegistry::reload_if_changed`] polls
+//! the plan file's (mtime, length) stamp and atomically swaps the
+//! resolved state when the content hash actually changed, so a running
+//! server picks up a re-calibrated plan without restarting.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+use std::time::SystemTime;
+
+use crate::calib::plan::QuantPlan;
+use crate::transforms::{Mode, Rotation};
+
+/// One plan entry resolved for the hot path.
+#[derive(Clone, Debug)]
+pub struct ResolvedEntry {
+    /// Planned transform.
+    pub mode: Mode,
+    /// Planned migration strength.
+    pub alpha: f32,
+    /// Expected activation width (requests with another width fall
+    /// back to the full analyze).
+    pub c_in: usize,
+    /// Calibration-predicted Eq. 2 error.
+    pub predicted_error: f64,
+    /// Eq. 4 vector from the plan (smoothing modes only).
+    pub smooth: Option<Arc<Vec<f32>>>,
+    /// Reciprocals `1/s` for the activation side, computed once at
+    /// resolve time so the hot path never rebuilds them per request.
+    pub smooth_inv: Option<Arc<Vec<f32>>>,
+    /// Pre-built rotation, shared across every entry of this width.
+    pub rotation: Option<Arc<Rotation>>,
+}
+
+/// Resolved lookup state (swapped wholesale on reload).  The outer map
+/// is keyed by module *name* so the per-request lookup can borrow the
+/// job's `&str` (`String: Borrow<str>`) — no key allocation on the hot
+/// path.
+#[derive(Debug)]
+struct Resolved {
+    map: BTreeMap<String, BTreeMap<(usize, u32), ResolvedEntry>>,
+    content_hash: String,
+    /// (mtime, byte length) of the backing file at load time.
+    file_stamp: Option<(SystemTime, u64)>,
+}
+
+/// Shared, reloadable registry of resolved plan entries.
+#[derive(Debug)]
+pub struct PlanRegistry {
+    path: Option<PathBuf>,
+    state: RwLock<Resolved>,
+    /// Lookups answered by a plan entry.
+    planned: AtomicU64,
+    /// Lookups that fell back to the full analyze.
+    fallback: AtomicU64,
+}
+
+fn resolve(plan: &QuantPlan) -> Result<Resolved, String> {
+    // one rotation per distinct width that any rotating entry needs
+    let mut rotations: BTreeMap<usize, Arc<Rotation>> = BTreeMap::new();
+    for e in &plan.entries {
+        if matches!(e.mode, Mode::Rotate | Mode::SmoothRotate)
+            && !rotations.contains_key(&e.c_in)
+        {
+            let rot = Rotation::build(e.c_in).map_err(|err| {
+                format!("plan registry: {} layer {}: {err}", e.module, e.layer)
+            })?;
+            rotations.insert(e.c_in, Arc::new(rot));
+        }
+    }
+    let mut map = BTreeMap::new();
+    for e in &plan.entries {
+        let smooths = matches!(e.mode, Mode::Smooth | Mode::SmoothRotate);
+        let (smooth, smooth_inv) = match (&e.smooth, smooths) {
+            (Some(s), true) => {
+                if s.len() != e.c_in {
+                    return Err(format!(
+                        "plan registry: {} layer {}: smoothing vector has {} channels, entry says c_in {}",
+                        e.module,
+                        e.layer,
+                        s.len(),
+                        e.c_in
+                    ));
+                }
+                let inv: Vec<f32> = s.iter().map(|&v| 1.0 / v).collect();
+                (Some(Arc::new(s.clone())), Some(Arc::new(inv)))
+            }
+            (None, true) => {
+                return Err(format!(
+                    "plan registry: {} layer {}: mode {} without a smoothing vector",
+                    e.module,
+                    e.layer,
+                    e.mode.name()
+                ));
+            }
+            (_, false) => (None, None),
+        };
+        let rotation = matches!(e.mode, Mode::Rotate | Mode::SmoothRotate)
+            .then(|| Arc::clone(&rotations[&e.c_in]));
+        let prev = map.entry(e.module.clone()).or_default().insert(
+            (e.layer, e.bits),
+            ResolvedEntry {
+                mode: e.mode,
+                alpha: e.alpha,
+                c_in: e.c_in,
+                predicted_error: e.predicted_error,
+                smooth,
+                smooth_inv,
+                rotation,
+            },
+        );
+        if prev.is_some() {
+            return Err(format!(
+                "plan registry: duplicate entry for {} layer {} bits {}",
+                e.module, e.layer, e.bits
+            ));
+        }
+    }
+    Ok(Resolved { map, content_hash: plan.content_hash(), file_stamp: None })
+}
+
+fn stamp(path: &Path) -> Result<(SystemTime, u64), String> {
+    let meta = std::fs::metadata(path)
+        .map_err(|e| format!("plan registry: stat {}: {e}", path.display()))?;
+    let mtime = meta.modified().unwrap_or(SystemTime::UNIX_EPOCH);
+    Ok((mtime, meta.len()))
+}
+
+impl PlanRegistry {
+    /// Resolve an in-memory plan (no backing file; reload is a no-op).
+    pub fn from_plan(plan: &QuantPlan) -> Result<Self, String> {
+        Ok(Self {
+            path: None,
+            state: RwLock::new(resolve(plan)?),
+            planned: AtomicU64::new(0),
+            fallback: AtomicU64::new(0),
+        })
+    }
+
+    /// Load, parse and resolve a plan file, remembering its stamp for
+    /// [`PlanRegistry::reload_if_changed`].
+    pub fn load(path: impl Into<PathBuf>) -> Result<Self, String> {
+        let path = path.into();
+        let plan = QuantPlan::load(&path)?;
+        let mut resolved = resolve(&plan)?;
+        resolved.file_stamp = Some(stamp(&path)?);
+        Ok(Self {
+            path: Some(path),
+            state: RwLock::new(resolved),
+            planned: AtomicU64::new(0),
+            fallback: AtomicU64::new(0),
+        })
+    }
+
+    /// The backing plan file, if any.
+    pub fn path(&self) -> Option<&Path> {
+        self.path.as_deref()
+    }
+
+    /// Resolved entries currently loaded.
+    pub fn len(&self) -> usize {
+        self.read().map.values().map(BTreeMap::len).sum()
+    }
+
+    /// Whether no entries are loaded.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Content hash of the currently loaded plan.
+    pub fn content_hash(&self) -> String {
+        self.read().content_hash.clone()
+    }
+
+    fn read(&self) -> std::sync::RwLockReadGuard<'_, Resolved> {
+        match self.state.read() {
+            Ok(g) => g,
+            Err(p) => p.into_inner(),
+        }
+    }
+
+    /// The resolved entry for a (module, layer, bits) request of
+    /// activation width `c_in`, counting the outcome: a usable hit
+    /// bumps the planned counter; a miss — including an entry whose
+    /// calibrated width disagrees with the request's — bumps the
+    /// fallback counter (the caller is expected to run the full
+    /// analyze on a miss), so the coverage stats always reflect what
+    /// actually executed.
+    pub fn lookup(
+        &self,
+        module: &str,
+        layer: usize,
+        bits: u32,
+        c_in: usize,
+    ) -> Option<ResolvedEntry> {
+        // module is looked up by borrowed &str and the inner key is
+        // Copy, so the hot path allocates nothing; a hit clones Arcs
+        // plus a few scalars.  The request's `alpha` is deliberately
+        // NOT part of the key: the calibrated transform (including its
+        // grid-searched alpha and smoothing vector) *overrides* the
+        // per-request migration strength — that is the "calibrate
+        // once" contract, and keying on request alpha would evict
+        // every grid-searched entry.
+        let got = self
+            .read()
+            .map
+            .get(module)
+            .and_then(|m| m.get(&(layer, bits)))
+            .cloned()
+            .filter(|e| e.c_in == c_in);
+        if got.is_some() {
+            self.planned.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.fallback.fetch_add(1, Ordering::Relaxed);
+        }
+        got
+    }
+
+    /// `(planned, fallback)` lookup counters since creation.
+    pub fn stats(&self) -> (u64, u64) {
+        (self.planned.load(Ordering::Relaxed), self.fallback.load(Ordering::Relaxed))
+    }
+
+    /// Poll the backing file's (mtime, length) stamp and atomically
+    /// swap in the re-resolved plan when its content hash changed.
+    /// Returns `Ok(true)` iff a new plan is now live.  Registries
+    /// without a backing file always return `Ok(false)`.
+    pub fn reload_if_changed(&self) -> Result<bool, String> {
+        let Some(path) = &self.path else { return Ok(false) };
+        let now = stamp(path)?;
+        {
+            let state = self.read();
+            if state.file_stamp == Some(now) {
+                return Ok(false);
+            }
+        }
+        let plan = QuantPlan::load(path)?;
+        let mut resolved = resolve(&plan)?;
+        resolved.file_stamp = Some(now);
+        let changed = {
+            let mut state = match self.state.write() {
+                Ok(g) => g,
+                Err(p) => p.into_inner(),
+            };
+            let changed = state.content_hash != resolved.content_hash;
+            *state = resolved;
+            changed
+        };
+        Ok(changed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::calib::plan::{PlanEntry, Provenance};
+
+    fn entry(module: &str, layer: usize, mode: Mode, c_in: usize) -> PlanEntry {
+        PlanEntry {
+            module: module.into(),
+            layer,
+            bits: 4,
+            c_in,
+            mode,
+            alpha: 0.5,
+            predicted_error: 1.0,
+            difficulty_before: 2.0,
+            difficulty_after: 1.0,
+            smooth: matches!(mode, Mode::Smooth | Mode::SmoothRotate)
+                .then(|| vec![1.0f32; c_in]),
+        }
+    }
+
+    fn plan(entries: Vec<PlanEntry>) -> QuantPlan {
+        QuantPlan { provenance: Provenance::default(), entries }
+    }
+
+    #[test]
+    fn resolves_rotations_once_per_width_and_counts_lookups() {
+        let reg = PlanRegistry::from_plan(&plan(vec![
+            entry("k_proj", 0, Mode::Rotate, 16),
+            entry("k_proj", 1, Mode::SmoothRotate, 16),
+            entry("down_proj", 0, Mode::None, 8),
+        ]))
+        .unwrap();
+        assert_eq!(reg.len(), 3);
+        let a = reg.lookup("k_proj", 0, 4, 16).unwrap();
+        let b = reg.lookup("k_proj", 1, 4, 16).unwrap();
+        // both 16-wide rotating entries share one pre-built rotation
+        assert!(Arc::ptr_eq(a.rotation.as_ref().unwrap(), b.rotation.as_ref().unwrap()));
+        assert!(b.smooth.is_some() && a.smooth.is_none());
+        // reciprocals are resolved once, alongside the vector itself
+        let inv = b.smooth_inv.as_ref().unwrap();
+        for (s, i) in b.smooth.as_ref().unwrap().iter().zip(inv.iter()) {
+            assert_eq!(*i, 1.0 / s);
+        }
+        assert!(reg.lookup("down_proj", 0, 4, 8).unwrap().rotation.is_none());
+        assert!(reg.lookup("o_proj", 0, 4, 16).is_none(), "uncalibrated cell misses");
+        assert!(reg.lookup("k_proj", 0, 8, 16).is_none(), "bits is part of the key");
+        // a width mismatch is a FALLBACK, not a planned hit — coverage
+        // stats must reflect what actually executed
+        assert!(reg.lookup("k_proj", 0, 4, 32).is_none(), "width mismatch falls back");
+        assert_eq!(reg.stats(), (3, 3));
+    }
+
+    #[test]
+    fn invalid_plans_are_rejected_at_resolve_time() {
+        // smoothing mode without its vector
+        let mut e = entry("k_proj", 0, Mode::SmoothRotate, 16);
+        e.smooth = None;
+        assert!(PlanRegistry::from_plan(&plan(vec![e])).is_err());
+        // wrong-length smoothing vector
+        let mut e = entry("k_proj", 0, Mode::Smooth, 16);
+        e.smooth = Some(vec![1.0; 4]);
+        assert!(PlanRegistry::from_plan(&plan(vec![e])).is_err());
+        // unconstructible rotation width
+        let e = entry("k_proj", 0, Mode::Rotate, 6);
+        assert!(PlanRegistry::from_plan(&plan(vec![e])).is_err());
+        // duplicate key
+        let err = PlanRegistry::from_plan(&plan(vec![
+            entry("k_proj", 0, Mode::None, 8),
+            entry("k_proj", 0, Mode::None, 8),
+        ]))
+        .unwrap_err();
+        assert!(err.contains("duplicate"), "{err}");
+    }
+
+    #[test]
+    fn reload_swaps_on_content_change_only() {
+        let dir = std::env::temp_dir().join("smoothrot_registry_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("plan.json");
+        plan(vec![entry("k_proj", 0, Mode::None, 8)]).save(&path).unwrap();
+        let reg = PlanRegistry::load(&path).unwrap();
+        assert_eq!(reg.len(), 1);
+        // untouched file: no reload
+        assert!(!reg.reload_if_changed().unwrap());
+        // rewrite with a different plan (different length => stamp change)
+        plan(vec![
+            entry("k_proj", 0, Mode::Rotate, 16),
+            entry("o_proj", 3, Mode::SmoothRotate, 16),
+        ])
+        .save(&path)
+        .unwrap();
+        assert!(reg.reload_if_changed().unwrap(), "new content must swap in");
+        assert_eq!(reg.len(), 2);
+        assert_eq!(reg.lookup("k_proj", 0, 4, 16).unwrap().mode, Mode::Rotate);
+        assert!(!reg.reload_if_changed().unwrap(), "second poll sees no change");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn in_memory_registry_never_reloads() {
+        let reg = PlanRegistry::from_plan(&plan(vec![entry("k_proj", 0, Mode::None, 8)])).unwrap();
+        assert!(reg.path().is_none());
+        assert!(!reg.reload_if_changed().unwrap());
+    }
+}

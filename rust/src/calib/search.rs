@@ -1,0 +1,315 @@
+//! Per-layer quantization-plan search — mode × alpha × bits on the
+//! collected calibration stats.
+//!
+//! For each (module, layer) the searcher runs the Eq. 2 / Eq. 4
+//! machinery through the fused kernel engine
+//! ([`crate::kernels::fused::analyze_all_modes`]) over a migration-
+//! strength grid and a bit-width grid, then picks the transform with
+//! [`choose_mode`] — the paper's Sec. V rule: the error-minimizing
+//! calibration-free transform (`none` | `rotate`), upgraded to
+//! `smooth_rotate` only where its advantage exceeds the `sr_margin`
+//! conservatism.  [`crate::policy::recommend`] is re-expressed on the
+//! same chooser, which is what the calibrate-vs-analyze equivalence pin
+//! (`rust/tests/calib_equivalence.rs`) relies on.
+//!
+//! The Eq. 4 smoothing vector recorded in the plan is computed from the
+//! *streaming* channel maxima ([`super::stats::ChannelStats::abs_max`]),
+//! not from the retained sample — with full retention the two coincide
+//! bit-for-bit; with subsampling the stream-exact maxima are the more
+//! faithful deployment vector.
+
+use crate::calib::plan::PlanEntry;
+use crate::calib::stats::LayerCollector;
+use crate::kernels::fused::analyze_all_modes;
+use crate::kernels::workspace::Workspace;
+use crate::runtime::AnalyzeOut;
+use crate::tensor::Matrix;
+use crate::transforms::{self, Mode, RotationCache};
+
+/// Search-space configuration.
+#[derive(Clone, Debug)]
+pub struct SearchConfig {
+    /// Migration-strength grid for the smoothing modes.
+    pub alphas: Vec<f64>,
+    /// Bit widths to emit plan entries for.
+    pub bits_grid: Vec<u32>,
+    /// Minimum error ratio before adopting smooth-rotation (Sec. V).
+    pub sr_margin: f64,
+    /// Math threads inside the fused kernels (`0` = all cores).
+    pub threads: usize,
+}
+
+impl Default for SearchConfig {
+    fn default() -> Self {
+        Self { alphas: vec![0.5], bits_grid: vec![4], sr_margin: 1.25, threads: 1 }
+    }
+}
+
+impl SearchConfig {
+    /// Reject empty or out-of-range grids before a search starts.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.alphas.is_empty() {
+            return Err("plan search: alpha grid is empty".into());
+        }
+        if self.alphas.iter().any(|&a| !(0.0..=1.0).contains(&a)) {
+            return Err("plan search: alphas must be in [0, 1]".into());
+        }
+        if self.bits_grid.is_empty() {
+            return Err("plan search: bits grid is empty".into());
+        }
+        if self.bits_grid.iter().any(|&b| !(2..=16).contains(&b)) {
+            return Err("plan search: bits must be in [2, 16]".into());
+        }
+        if self.sr_margin <= 0.0 {
+            return Err("plan search: sr_margin must be positive".into());
+        }
+        Ok(())
+    }
+}
+
+/// The Sec. V transform chooser over one cell's per-mode errors
+/// (indexed in [`Mode::ALL`] order): best calibration-free transform
+/// (`none` | `rotate`), upgraded to `smooth_rotate` only when
+/// `free_error / sr_error >= sr_margin`.
+///
+/// Shared by the plan search and [`crate::policy::recommend`], so the
+/// offline policy and the calibration plan can never disagree on the
+/// same errors.
+pub fn choose_mode(errors: &[f64; 4], sr_margin: f64) -> Mode {
+    let free = [Mode::None, Mode::Rotate]
+        .into_iter()
+        .min_by(|a, b| errors[a.index()].partial_cmp(&errors[b.index()]).unwrap())
+        .unwrap();
+    let free_err = errors[free.index()];
+    let sr_err = errors[Mode::SmoothRotate.index()];
+    if sr_err > 0.0 && free_err / sr_err >= sr_margin {
+        Mode::SmoothRotate
+    } else {
+        free
+    }
+}
+
+/// Search result for one (module, layer): plan entries (one per bit
+/// width) plus the analyze output at the first grid point — the anchor
+/// the policy-equivalence pin compares against.
+#[derive(Clone, Debug)]
+pub struct LayerSearch {
+    /// One entry per `bits_grid` value.
+    pub entries: Vec<PlanEntry>,
+    /// `analyze_all_modes` output at `(alphas[0], bits_grid[0])`.
+    pub base: AnalyzeOut,
+}
+
+/// Grid-search one (module, layer) cell on its collected stats +
+/// retained sample, reusing the caller's rotation cache and workspace
+/// across every grid point.
+pub fn search_layer(
+    module: &str,
+    layer: usize,
+    collector: &LayerCollector,
+    w: &Matrix,
+    cfg: &SearchConfig,
+    cache: &mut RotationCache,
+    ws: &mut Workspace,
+) -> Result<LayerSearch, String> {
+    cfg.validate()?;
+    let x = collector.reservoir.sample();
+    if x.rows() == 0 {
+        return Err(format!("plan search: {module} layer {layer}: no calibration sample retained"));
+    }
+    if w.rows() != x.cols() {
+        return Err(format!(
+            "plan search: {module} layer {layer}: sample width {} vs weight rows {}",
+            x.cols(),
+            w.rows()
+        ));
+    }
+    let difficulty_before = collector.stats.difficulty();
+    let wmax = transforms::weight_row_abs_max(w);
+
+    let mut entries = Vec::with_capacity(cfg.bits_grid.len());
+    let mut base: Option<AnalyzeOut> = None;
+    for &bits in &cfg.bits_grid {
+        // one fused all-modes analyze at the first grid point (the
+        // policy-equivalence anchor); `none` and `rotate` are
+        // alpha-independent, so every further alpha needs only a
+        // single-mode smooth-rotate evaluation through the planned
+        // kernel with the stream-exact Eq. 4 vector for that alpha —
+        // exactly the vector a plan choosing it would deploy
+        let first = analyze_all_modes(&x, w, bits, cfg.alphas[0] as f32, cache, ws, cfg.threads)?;
+        if base.is_none() {
+            base = Some(first);
+        }
+        let sr_i = Mode::SmoothRotate.index();
+        let (mut sr_alpha, mut sr_out) = (cfg.alphas[0] as f32, first);
+        for &alpha in &cfg.alphas[1..] {
+            let alpha = alpha as f32;
+            let s = transforms::smooth_scales_from_max(collector.stats.abs_max(), &wmax, alpha);
+            let inv: Vec<f32> = s.iter().map(|&v| 1.0 / v).collect();
+            let rot = cache.get(x.cols())?;
+            let out = crate::kernels::fused::analyze_planned(
+                &x,
+                w,
+                bits,
+                Mode::SmoothRotate,
+                Some((&s[..], &inv[..])),
+                Some(rot),
+                ws,
+                cfg.threads,
+            )?;
+            if out.errors[sr_i] < sr_out.errors[sr_i] {
+                sr_alpha = alpha;
+                sr_out = out;
+            }
+        }
+        // errors[Smooth] is informational only: choose_mode implements
+        // the paper's Sec. V rule, which never deploys standalone
+        // smoothing (it upgrades free transforms to smooth_rotate or
+        // nothing), so a searched plan never emits a `smooth` entry —
+        // the artifact/registry still accept one for hand-written plans
+        let errors = [
+            first.errors[Mode::None.index()],
+            first.errors[Mode::Smooth.index()],
+            first.errors[Mode::Rotate.index()],
+            sr_out.errors[sr_i],
+        ];
+        let mode = choose_mode(&errors, cfg.sr_margin);
+        let (alpha, chosen_out) = match mode {
+            Mode::SmoothRotate => (sr_alpha, sr_out),
+            _ => (cfg.alphas[0] as f32, first),
+        };
+        let smooth = matches!(mode, Mode::Smooth | Mode::SmoothRotate).then(|| {
+            transforms::smooth_scales_from_max(collector.stats.abs_max(), &wmax, alpha)
+        });
+        entries.push(PlanEntry {
+            module: module.to_string(),
+            layer,
+            bits,
+            c_in: x.cols(),
+            mode,
+            alpha,
+            predicted_error: errors[mode.index()],
+            difficulty_before,
+            difficulty_after: chosen_out.act_difficulty[mode.index()],
+            smooth,
+        });
+    }
+    Ok(LayerSearch { entries, base: base.expect("bits grid validated non-empty") })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn choose_mode_mirrors_sec_v_rule() {
+        // ordinary cell: rotate best among free, sr within margin
+        assert_eq!(choose_mode(&[10.0, 6.0, 4.0, 3.5], 1.25), Mode::Rotate);
+        // same cell, eager margin adopts smooth-rotation
+        assert_eq!(choose_mode(&[10.0, 6.0, 4.0, 3.5], 1.0), Mode::SmoothRotate);
+        // massive cell: rotation hurts, sr pays for itself
+        assert_eq!(choose_mode(&[100.0, 40.0, 150.0, 2.0], 1.25), Mode::SmoothRotate);
+        // degenerate sr error never divides by zero
+        assert_eq!(choose_mode(&[5.0, 5.0, 6.0, 0.0], 1.25), Mode::None);
+    }
+
+    fn collector_for(x: &Matrix) -> LayerCollector {
+        let mut c = LayerCollector::new(x.cols(), 0);
+        c.observe(x).unwrap();
+        c
+    }
+
+    #[test]
+    fn massive_outlier_layer_chooses_smooth_rotation() {
+        let (spec, c_out) = crate::synth::module_stream("down_proj", 11).unwrap();
+        let mut spec = spec;
+        spec.n_tokens = 48;
+        let layer = 30; // massive-spike layer in the down_proj profile
+        let x = spec.layer(layer);
+        let w = spec.weight(c_out, layer);
+        let collector = collector_for(&x);
+        let mut cache = RotationCache::new();
+        let mut ws = Workspace::new();
+        let cfg = SearchConfig::default();
+        let got =
+            search_layer("down_proj", layer, &collector, &w, &cfg, &mut cache, &mut ws).unwrap();
+        assert_eq!(got.entries.len(), 1);
+        let e = &got.entries[0];
+        assert_eq!(e.mode, Mode::SmoothRotate, "massive layer must smooth-rotate");
+        assert_eq!(e.c_in, x.cols());
+        assert!(e.difficulty_after < e.difficulty_before, "transform must flatten");
+        assert_eq!(e.smooth.as_ref().map(Vec::len), Some(x.cols()));
+        // stream-exact Eq. 4 vector: with full retention it equals the
+        // matrix-pass scales exactly
+        let want = transforms::smooth_scales(&x, &w, e.alpha);
+        assert_eq!(e.smooth.as_ref().unwrap(), &want);
+    }
+
+    #[test]
+    fn wider_alpha_grid_never_predicts_worse() {
+        let mut rng = Rng::new(21);
+        let mut x = Matrix::from_vec(32, 64, rng.normals_f32(32 * 64));
+        for i in 0..32 {
+            x.row_mut(i)[5] *= 30.0;
+        }
+        let w = Matrix::from_vec(64, 16, rng.normals_f32(64 * 16));
+        let collector = collector_for(&x);
+        let mut cache = RotationCache::new();
+        let mut ws = Workspace::new();
+        let narrow = SearchConfig { sr_margin: 1.0, ..SearchConfig::default() };
+        let wide = SearchConfig {
+            alphas: vec![0.3, 0.5, 0.7],
+            sr_margin: 1.0,
+            ..SearchConfig::default()
+        };
+        let a = search_layer("k_proj", 0, &collector, &w, &narrow, &mut cache, &mut ws).unwrap();
+        let b = search_layer("k_proj", 0, &collector, &w, &wide, &mut cache, &mut ws).unwrap();
+        assert!(
+            b.entries[0].predicted_error <= a.entries[0].predicted_error,
+            "wide {} vs narrow {}",
+            b.entries[0].predicted_error,
+            a.entries[0].predicted_error
+        );
+    }
+
+    #[test]
+    fn one_entry_per_bits_grid_point() {
+        let mut rng = Rng::new(22);
+        let x = Matrix::from_vec(16, 32, rng.normals_f32(16 * 32));
+        let w = Matrix::from_vec(32, 8, rng.normals_f32(32 * 8));
+        let collector = collector_for(&x);
+        let mut cache = RotationCache::new();
+        let mut ws = Workspace::new();
+        let cfg = SearchConfig { bits_grid: vec![4, 8], ..SearchConfig::default() };
+        let got = search_layer("k_proj", 2, &collector, &w, &cfg, &mut cache, &mut ws).unwrap();
+        assert_eq!(got.entries.len(), 2);
+        assert_eq!((got.entries[0].bits, got.entries[1].bits), (4, 8));
+        // 8-bit quantization of the same tensors errs strictly less
+        assert!(got.entries[1].predicted_error < got.entries[0].predicted_error);
+    }
+
+    #[test]
+    fn invalid_configs_and_empty_samples_error() {
+        assert!(SearchConfig { alphas: vec![], ..SearchConfig::default() }.validate().is_err());
+        assert!(SearchConfig { bits_grid: vec![1], ..SearchConfig::default() }
+            .validate()
+            .is_err());
+        assert!(SearchConfig { sr_margin: 0.0, ..SearchConfig::default() }.validate().is_err());
+        let empty = LayerCollector::new(8, 0);
+        let w = Matrix::zeros(8, 4);
+        let mut cache = RotationCache::new();
+        let mut ws = Workspace::new();
+        let err = search_layer(
+            "k_proj",
+            0,
+            &empty,
+            &w,
+            &SearchConfig::default(),
+            &mut cache,
+            &mut ws,
+        )
+        .unwrap_err();
+        assert!(err.contains("no calibration sample"), "{err}");
+    }
+}

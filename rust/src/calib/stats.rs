@@ -1,0 +1,377 @@
+//! Streaming per-channel statistics — the collection stage of
+//! calibration.
+//!
+//! The experiment path computes channel magnitudes and difficulty with
+//! all-at-once matrix passes ([`crate::metrics::channel_magnitudes`]);
+//! calibration instead *streams* activation batches through a
+//! [`ChannelStats`] accumulator that keeps, per channel, the Welford
+//! running mean and M2 plus the absolute maximum.  Shards built on
+//! different workers merge deterministically (the parallel-variance
+//! combine applied in a fixed shard order), so a sharded collection
+//! reproduces bit-identical statistics run after run.
+//!
+//! The Eq. 4 migration vector only needs the per-channel absolute
+//! maxima, so it can be computed *exactly* over the full stream from
+//! the stats alone ([`crate::transforms::smooth_scales_from_max`]); the
+//! plan search additionally needs a representative activation matrix,
+//! which a bounded deterministic [`SampleReservoir`] retains.
+//! [`LayerCollector`] pairs the two for one (module, layer) stream.
+
+use crate::tensor::Matrix;
+
+/// Mergeable per-channel accumulator: absolute max, Welford mean / M2,
+/// and token count.
+///
+/// Channel `j`'s **magnitude** (the Frobenius norm the paper's
+/// difficulty metric is built on) is recovered from the Welford state
+/// as `sqrt(M2_j + n · mean_j²)`, so a streamed collection yields the
+/// same magnitudes as a one-shot pass over the concatenated batches,
+/// without ever holding them.
+#[derive(Clone, Debug)]
+pub struct ChannelStats {
+    /// Tokens (rows) observed.
+    n: u64,
+    /// Welford running mean per channel.
+    mean: Vec<f64>,
+    /// Welford running sum of squared deviations per channel.
+    m2: Vec<f64>,
+    /// Absolute maximum per channel.
+    abs_max: Vec<f32>,
+}
+
+impl ChannelStats {
+    /// Empty accumulator over `channels` channels.
+    pub fn new(channels: usize) -> Self {
+        Self { n: 0, mean: vec![0.0; channels], m2: vec![0.0; channels], abs_max: vec![0.0; channels] }
+    }
+
+    /// Number of channels tracked.
+    pub fn channels(&self) -> usize {
+        self.mean.len()
+    }
+
+    /// Tokens (rows) observed so far.
+    pub fn tokens(&self) -> u64 {
+        self.n
+    }
+
+    /// Fold one activation batch in (rows are tokens, columns are
+    /// channels).
+    pub fn update(&mut self, batch: &Matrix) -> Result<(), String> {
+        if batch.cols() != self.channels() {
+            return Err(format!(
+                "ChannelStats::update: batch has {} channels, accumulator tracks {}",
+                batch.cols(),
+                self.channels()
+            ));
+        }
+        for i in 0..batch.rows() {
+            self.n += 1;
+            let n = self.n as f64;
+            for (j, &v) in batch.row(i).iter().enumerate() {
+                let v64 = v as f64;
+                let d = v64 - self.mean[j];
+                self.mean[j] += d / n;
+                self.m2[j] += d * (v64 - self.mean[j]);
+                let a = v.abs();
+                if a > self.abs_max[j] {
+                    self.abs_max[j] = a;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Fold another shard in (parallel Welford combine).  Merging the
+    /// same shards in the same order is deterministic; `self` absorbs
+    /// `other` as if `other`'s tokens had streamed in after `self`'s.
+    pub fn merge(&mut self, other: &ChannelStats) -> Result<(), String> {
+        if other.channels() != self.channels() {
+            return Err(format!(
+                "ChannelStats::merge: shard has {} channels, accumulator tracks {}",
+                other.channels(),
+                self.channels()
+            ));
+        }
+        if other.n == 0 {
+            return Ok(());
+        }
+        if self.n == 0 {
+            *self = other.clone();
+            return Ok(());
+        }
+        let (na, nb) = (self.n as f64, other.n as f64);
+        let n = na + nb;
+        for j in 0..self.channels() {
+            let d = other.mean[j] - self.mean[j];
+            self.mean[j] += d * (nb / n);
+            self.m2[j] += other.m2[j] + d * d * (na * nb / n);
+            if other.abs_max[j] > self.abs_max[j] {
+                self.abs_max[j] = other.abs_max[j];
+            }
+        }
+        self.n += other.n;
+        Ok(())
+    }
+
+    /// Per-channel absolute maxima over the stream (Eq. 4's `max|X_j|`).
+    pub fn abs_max(&self) -> &[f32] {
+        &self.abs_max
+    }
+
+    /// Per-channel mean over the stream.
+    pub fn mean(&self) -> &[f64] {
+        &self.mean
+    }
+
+    /// Per-channel Frobenius magnitude over the stream
+    /// (`sqrt(sum_i x_ij²)` — the paper's channel magnitude).
+    pub fn channel_magnitudes(&self) -> Vec<f64> {
+        let n = self.n as f64;
+        self.m2
+            .iter()
+            .zip(&self.mean)
+            .map(|(&m2, &mean)| (m2 + n * mean * mean).max(0.0).sqrt())
+            .collect()
+    }
+
+    /// The paper's quantization difficulty of the streamed activations:
+    /// standard deviation of the channel magnitudes.
+    pub fn difficulty(&self) -> f64 {
+        crate::metrics::std_dev(&self.channel_magnitudes())
+    }
+}
+
+/// Bounded deterministic retention of sample token rows for the plan
+/// search.  The first `max_rows` rows are kept verbatim; rows beyond
+/// the cap overwrite a deterministic pseudo-random slot (Fibonacci hash
+/// of the row index), so memory is bounded and the retained sample is
+/// reproducible without an RNG.
+#[derive(Clone, Debug)]
+pub struct SampleReservoir {
+    max_rows: usize,
+    cols: usize,
+    data: Vec<f32>,
+    /// Rows currently retained.
+    rows: usize,
+    /// Rows ever offered.
+    seen: u64,
+}
+
+impl SampleReservoir {
+    /// Reservoir holding at most `max_rows` rows of width `cols`
+    /// (`max_rows == 0` means unbounded: retain everything).
+    pub fn new(max_rows: usize, cols: usize) -> Self {
+        Self { max_rows, cols, data: Vec::new(), rows: 0, seen: 0 }
+    }
+
+    /// Rows ever offered to the reservoir.
+    pub fn seen(&self) -> u64 {
+        self.seen
+    }
+
+    /// Rows currently retained.
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Offer every row of one batch.
+    pub fn observe(&mut self, batch: &Matrix) -> Result<(), String> {
+        if batch.cols() != self.cols {
+            return Err(format!(
+                "SampleReservoir::observe: batch has {} channels, reservoir holds {}",
+                batch.cols(),
+                self.cols
+            ));
+        }
+        for i in 0..batch.rows() {
+            let row = batch.row(i);
+            if self.max_rows == 0 || self.rows < self.max_rows {
+                self.data.extend_from_slice(row);
+                self.rows += 1;
+            } else {
+                let slot = (self.seen.wrapping_mul(0x9E37_79B9_7F4A_7C15) >> 16) as usize
+                    % self.max_rows;
+                self.data[slot * self.cols..(slot + 1) * self.cols].copy_from_slice(row);
+            }
+            self.seen += 1;
+        }
+        Ok(())
+    }
+
+    /// The retained sample as one activation matrix (row order =
+    /// retention order).
+    pub fn sample(&self) -> Matrix {
+        Matrix::from_vec(self.rows, self.cols, self.data.clone())
+    }
+}
+
+/// Streaming collector for one (module, layer) activation stream:
+/// exact per-channel statistics plus a bounded representative sample.
+#[derive(Clone, Debug)]
+pub struct LayerCollector {
+    pub stats: ChannelStats,
+    pub reservoir: SampleReservoir,
+}
+
+impl LayerCollector {
+    /// Collector over `channels` channels retaining at most
+    /// `max_sample_rows` rows (`0` = retain everything).
+    pub fn new(channels: usize, max_sample_rows: usize) -> Self {
+        Self {
+            stats: ChannelStats::new(channels),
+            reservoir: SampleReservoir::new(max_sample_rows, channels),
+        }
+    }
+
+    /// Fold one activation batch into both the stats and the sample.
+    pub fn observe(&mut self, batch: &Matrix) -> Result<(), String> {
+        self.stats.update(batch)?;
+        self.reservoir.observe(batch)
+    }
+
+    /// Fold another shard in (stats merge + sample concatenation up to
+    /// the cap, in call order — deterministic for a fixed shard order).
+    pub fn merge(&mut self, other: &LayerCollector) -> Result<(), String> {
+        self.stats.merge(&other.stats)?;
+        if other.reservoir.rows > 0 {
+            self.reservoir.observe(&other.reservoir.sample())?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::{self, Channels};
+    use crate::rng::Rng;
+
+    fn rand_matrix(rows: usize, cols: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        Matrix::from_vec(rows, cols, rng.normals_f32(rows * cols))
+    }
+
+    #[test]
+    fn streamed_stats_match_one_shot_pass() {
+        let full = rand_matrix(64, 16, 1);
+        let mut stats = ChannelStats::new(16);
+        // stream in three uneven row batches
+        for (lo, hi) in [(0usize, 10usize), (10, 37), (37, 64)] {
+            let rows = hi - lo;
+            let mut batch = Matrix::zeros(rows, 16);
+            for i in 0..rows {
+                batch.row_mut(i).copy_from_slice(full.row(lo + i));
+            }
+            stats.update(&batch).unwrap();
+        }
+        assert_eq!(stats.tokens(), 64);
+        let want_mags = metrics::channel_magnitudes(&full, Channels::Columns);
+        let got_mags = stats.channel_magnitudes();
+        for (a, b) in want_mags.iter().zip(&got_mags) {
+            assert!((a - b).abs() / a.abs().max(1e-9) < 1e-10, "{a} vs {b}");
+        }
+        let want_diff = metrics::quant_difficulty(&full, Channels::Columns);
+        assert!((stats.difficulty() - want_diff).abs() < 1e-9);
+        let want_max = full.col_abs_max();
+        assert_eq!(stats.abs_max(), &want_max[..], "abs max is exact, not approximate");
+    }
+
+    #[test]
+    fn merge_matches_single_stream_and_is_deterministic() {
+        let a = rand_matrix(31, 8, 2);
+        let b = rand_matrix(17, 8, 3);
+        let c = rand_matrix(5, 8, 4);
+        let mut single = ChannelStats::new(8);
+        for m in [&a, &b, &c] {
+            single.update(m).unwrap();
+        }
+        let shard = |m: &Matrix| {
+            let mut s = ChannelStats::new(8);
+            s.update(m).unwrap();
+            s
+        };
+        let mut merged = shard(&a);
+        merged.merge(&shard(&b)).unwrap();
+        merged.merge(&shard(&c)).unwrap();
+        assert_eq!(merged.tokens(), single.tokens());
+        for (x, y) in merged.channel_magnitudes().iter().zip(single.channel_magnitudes()) {
+            assert!((x - y).abs() / y.abs().max(1e-9) < 1e-9);
+        }
+        assert_eq!(merged.abs_max(), single.abs_max());
+        // fixed shard order is bit-deterministic
+        let mut again = shard(&a);
+        again.merge(&shard(&b)).unwrap();
+        again.merge(&shard(&c)).unwrap();
+        assert_eq!(again.mean(), merged.mean());
+        assert_eq!(again.channel_magnitudes(), merged.channel_magnitudes());
+    }
+
+    #[test]
+    fn merge_into_empty_adopts_the_shard() {
+        let m = rand_matrix(9, 4, 5);
+        let mut shard = ChannelStats::new(4);
+        shard.update(&m).unwrap();
+        let mut empty = ChannelStats::new(4);
+        empty.merge(&shard).unwrap();
+        assert_eq!(empty.tokens(), 9);
+        assert_eq!(empty.abs_max(), shard.abs_max());
+        // and merging an empty shard is a no-op
+        let before = shard.channel_magnitudes();
+        shard.merge(&ChannelStats::new(4)).unwrap();
+        assert_eq!(shard.channel_magnitudes(), before);
+    }
+
+    #[test]
+    fn shape_mismatches_error() {
+        let mut s = ChannelStats::new(4);
+        assert!(s.update(&Matrix::zeros(2, 5)).is_err());
+        assert!(s.merge(&ChannelStats::new(5)).is_err());
+        let mut r = SampleReservoir::new(4, 4);
+        assert!(r.observe(&Matrix::zeros(2, 5)).is_err());
+    }
+
+    #[test]
+    fn reservoir_retains_everything_under_cap() {
+        let m = rand_matrix(12, 6, 6);
+        let mut r = SampleReservoir::new(0, 6);
+        r.observe(&m).unwrap();
+        assert_eq!(r.rows(), 12);
+        assert_eq!(r.sample().as_slice(), m.as_slice());
+        let mut capped = SampleReservoir::new(32, 6);
+        capped.observe(&m).unwrap();
+        assert_eq!(capped.sample().as_slice(), m.as_slice());
+    }
+
+    #[test]
+    fn reservoir_is_bounded_and_deterministic_beyond_cap() {
+        let m = rand_matrix(40, 3, 7);
+        let mut a = SampleReservoir::new(8, 3);
+        let mut b = SampleReservoir::new(8, 3);
+        a.observe(&m).unwrap();
+        b.observe(&m).unwrap();
+        assert_eq!(a.rows(), 8);
+        assert_eq!(a.seen(), 40);
+        assert_eq!(a.sample().as_slice(), b.sample().as_slice());
+    }
+
+    #[test]
+    fn layer_collector_merge_matches_stream() {
+        let a = rand_matrix(10, 8, 8);
+        let b = rand_matrix(14, 8, 9);
+        let mut whole = LayerCollector::new(8, 0);
+        whole.observe(&a).unwrap();
+        whole.observe(&b).unwrap();
+        let mut sa = LayerCollector::new(8, 0);
+        sa.observe(&a).unwrap();
+        let mut sb = LayerCollector::new(8, 0);
+        sb.observe(&b).unwrap();
+        sa.merge(&sb).unwrap();
+        assert_eq!(sa.reservoir.sample().as_slice(), whole.reservoir.sample().as_slice());
+        for (x, y) in
+            sa.stats.channel_magnitudes().iter().zip(whole.stats.channel_magnitudes())
+        {
+            assert!((x - y).abs() / y.abs().max(1e-9) < 1e-9);
+        }
+    }
+}

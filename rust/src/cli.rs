@@ -18,12 +18,26 @@ pub struct OptSpec {
 /// A parsed command line.
 #[derive(Clone, Debug, Default)]
 pub struct Parsed {
+    /// Subcommand this line was parsed for — prefixes value-parse
+    /// errors, so `--workers abc` reports *which* command's flag was
+    /// malformed when several subcommands share the flag name.
+    pub command: &'static str,
     pub values: BTreeMap<String, String>,
     pub flags: Vec<String>,
     pub positionals: Vec<String>,
 }
 
 impl Parsed {
+    /// `"<command>: "` prefix for error messages (empty when the
+    /// command is unknown, e.g. a hand-built `Parsed`).
+    fn ctx(&self) -> String {
+        if self.command.is_empty() {
+            String::new()
+        } else {
+            format!("{}: ", self.command)
+        }
+    }
+
     pub fn get(&self, name: &str) -> Option<&str> {
         self.values.get(name).map(|s| s.as_str())
     }
@@ -35,14 +49,20 @@ impl Parsed {
     pub fn get_usize(&self, name: &str) -> Result<Option<usize>, String> {
         match self.get(name) {
             None => Ok(None),
-            Some(v) => v.parse().map(Some).map_err(|_| format!("--{name}: expected integer, got {v:?}")),
+            Some(v) => v
+                .parse()
+                .map(Some)
+                .map_err(|_| format!("{}--{name}: expected integer, got {v:?}", self.ctx())),
         }
     }
 
     pub fn get_f64(&self, name: &str) -> Result<Option<f64>, String> {
         match self.get(name) {
             None => Ok(None),
-            Some(v) => v.parse().map(Some).map_err(|_| format!("--{name}: expected number, got {v:?}")),
+            Some(v) => v
+                .parse()
+                .map(Some)
+                .map_err(|_| format!("{}--{name}: expected number, got {v:?}", self.ctx())),
         }
     }
 
@@ -75,7 +95,7 @@ impl Command {
 
     /// Parse arguments following the subcommand name.
     pub fn parse(&self, args: &[String]) -> Result<Parsed, String> {
-        let mut out = Parsed::default();
+        let mut out = Parsed { command: self.name, ..Parsed::default() };
         // seed defaults
         for o in &self.opts {
             if let Some(d) = o.default {
@@ -196,6 +216,30 @@ mod tests {
         assert!(cmd().parse(&args(&["--verbose=1"])).is_err());
         let p = cmd().parse(&args(&["--layers", "abc"])).unwrap();
         assert!(p.get_usize("layers").is_err());
+    }
+
+    #[test]
+    fn parse_errors_name_the_subcommand() {
+        // the same flag on two subcommands must yield distinguishable
+        // error messages
+        let analyze = cmd().parse(&args(&["--layers", "abc"])).unwrap();
+        let err = analyze.get_usize("layers").unwrap_err();
+        assert!(err.starts_with("analyze: "), "{err}");
+        assert!(err.contains("--layers") && err.contains("abc"), "{err}");
+        let serve = Command::new("serve", "serve things")
+            .opt("layers", "layer count", None)
+            .parse(&args(&["--layers", "abc"]))
+            .unwrap();
+        assert!(serve.get_usize("layers").unwrap_err().starts_with("serve: "));
+        let ferr = analyze.get_f64("alpha");
+        assert!(ferr.is_ok(), "default alpha still parses");
+        let bad = cmd().parse(&args(&["--alpha", "xyz"])).unwrap();
+        let err = bad.get_f64("alpha").unwrap_err();
+        assert!(err.starts_with("analyze: ") && err.contains("expected number"), "{err}");
+        // a hand-built Parsed (no command) keeps the bare message
+        let mut anon = Parsed::default();
+        anon.values.insert("n".into(), "x".into());
+        assert!(anon.get_usize("n").unwrap_err().starts_with("--n:"));
     }
 
     #[test]

@@ -364,6 +364,13 @@ impl ExperimentGrid {
         self.cells.get(module)?.get(layer)?.as_ref()
     }
 
+    /// Per-mode Eq. 2 errors of one cell, when analyzed — the input
+    /// shape [`crate::calib::search::choose_mode`] and
+    /// [`crate::policy::recommend`] decide on.
+    pub fn cell_errors(&self, module: &str, layer: usize) -> Option<[f64; 4]> {
+        self.get(module, layer).map(|o| o.errors)
+    }
+
     /// Series of one statistic across layers for a module.
     pub fn series(&self, module: &str, f: impl Fn(&AnalyzeOut) -> f64) -> Vec<f64> {
         self.cells

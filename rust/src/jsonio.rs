@@ -31,6 +31,17 @@ impl Json {
         self.as_f64().map(|v| v as usize)
     }
 
+    /// Non-negative integral number as u64 (`None` for negatives,
+    /// fractions, or non-numbers).
+    pub fn as_u64(&self) -> Option<u64> {
+        match self.as_f64() {
+            Some(v) if v >= 0.0 && v.fract() == 0.0 && v < 1.8446744073709552e19 => {
+                Some(v as u64)
+            }
+            _ => None,
+        }
+    }
+
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -72,6 +83,11 @@ impl Json {
     /// Array of f64 helper.
     pub fn as_f64_vec(&self) -> Option<Vec<f64>> {
         self.as_arr().map(|a| a.iter().filter_map(Json::as_f64).collect())
+    }
+
+    /// Array of f32 helper (used by the quant-plan smoothing vectors).
+    pub fn as_f32_vec(&self) -> Option<Vec<f32>> {
+        self.as_arr().map(|a| a.iter().filter_map(|v| v.as_f64().map(|x| x as f32)).collect())
     }
 
     /// Serialize (compact).
@@ -442,5 +458,21 @@ mod tests {
     fn integer_formatting_is_stable() {
         assert_eq!(Json::Num(42.0).to_string_compact(), "42");
         assert_eq!(Json::Num(0.5).to_string_compact(), "0.5");
+    }
+
+    #[test]
+    fn as_u64_accepts_integers_only() {
+        assert_eq!(Json::Num(3.0).as_u64(), Some(3));
+        assert_eq!(Json::Num(0.0).as_u64(), Some(0));
+        assert_eq!(Json::Num(-1.0).as_u64(), None);
+        assert_eq!(Json::Num(1.5).as_u64(), None);
+        assert_eq!(Json::Str("3".into()).as_u64(), None);
+    }
+
+    #[test]
+    fn as_f32_vec_reads_number_arrays() {
+        let v = parse("[0.5, 2, -1.25]").unwrap();
+        assert_eq!(v.as_f32_vec(), Some(vec![0.5f32, 2.0, -1.25]));
+        assert_eq!(Json::Null.as_f32_vec(), None);
     }
 }

@@ -212,6 +212,116 @@ pub fn analyze_all_modes(
     Ok(out)
 }
 
+/// Analyze one (X, W) pair under a *single, pre-decided* transform —
+/// the plan-driven serving path ("calibrate once, serve many").
+///
+/// Where [`analyze_all_modes`] evaluates all four modes and implicitly
+/// searches, this evaluates exactly the planned `mode`: the Eq. 4
+/// smoothing vector and its reciprocals come from the calibration plan
+/// (`smooth = (s, 1/s)`, both resolved once at plan-load time and
+/// applied verbatim — never recomputed from the request), and the
+/// rotation comes pre-resolved from the plan registry (`rot`).  One
+/// shared `eval_pair` pass instead of four, zero per-request transform
+/// search, and no weight copy on the pure-rotate path.
+///
+/// The returned [`AnalyzeOut`] carries the evaluated mode's error,
+/// difficulty and absmax in that mode's slot; every *other* mode's
+/// error is set to `f64::INFINITY` (so an argmin over the errors
+/// recovers the planned mode) and its remaining slots stay zero.
+// One knob per plan ingredient: the argument list IS the plan entry.
+#[allow(clippy::too_many_arguments)]
+pub fn analyze_planned(
+    x: &Matrix,
+    w: &Matrix,
+    bits: u32,
+    mode: Mode,
+    smooth: Option<(&[f32], &[f32])>,
+    rot: Option<&Rotation>,
+    ws: &mut Workspace,
+    threads: usize,
+) -> Result<AnalyzeOut, String> {
+    let c_in = x.cols();
+    if w.rows() != c_in {
+        return Err(format!("analyze_planned shape mismatch: {x:?} @ {w:?}"));
+    }
+    let smooths = matches!(mode, Mode::Smooth | Mode::SmoothRotate);
+    let rotates = matches!(mode, Mode::Rotate | Mode::SmoothRotate);
+    let s = if smooths {
+        let (s, inv) = smooth.ok_or_else(|| {
+            format!("analyze_planned: mode {} needs the plan's smoothing vector", mode.name())
+        })?;
+        if s.len() != c_in || inv.len() != c_in {
+            return Err(format!(
+                "analyze_planned: smoothing vectors have {}/{} channels, activations have {c_in}",
+                s.len(),
+                inv.len()
+            ));
+        }
+        Some((s, inv))
+    } else {
+        None
+    };
+    let rot = if rotates {
+        let r = rot.ok_or_else(|| {
+            format!("analyze_planned: mode {} needs a pre-resolved rotation", mode.name())
+        })?;
+        if r.dim() != c_in {
+            return Err(format!(
+                "analyze_planned: rotation is {}-wide, activations are {c_in}-wide",
+                r.dim()
+            ));
+        }
+        Some(r)
+    } else {
+        None
+    };
+
+    let mut out = AnalyzeOut::default();
+    for i in 0..4 {
+        out.errors[i] = f64::INFINITY;
+    }
+    let i = mode.index();
+    let v = match (s, rot) {
+        // mode `none`: straight off the inputs, nothing copied
+        (None, None) => eval_pair(x, w, bits, ws, threads),
+        // pure rotate: X is copied (rotated in place), W is only read
+        (None, Some(rot)) => {
+            let mut xr = ws.take_matrix_copy(x);
+            rot.apply_rows(&mut xr, threads);
+            let wr = rotate_weights(rot, w, ws, threads);
+            let v = eval_pair(&xr, &wr, bits, ws, threads);
+            ws.give_matrix(xr);
+            ws.give_matrix(wr);
+            v
+        }
+        // smoothing modes: scaled copies of both sides, then rotate
+        // the smoothed pair for smooth-rotate
+        (Some((s, inv)), rot) => {
+            let mut xh = ws.take_matrix_copy(x);
+            xh.scale_cols_mut(inv);
+            let mut wh = ws.take_matrix_copy(w);
+            wh.scale_rows_mut(s);
+            let v = if let Some(rot) = rot {
+                rot.apply_rows(&mut xh, threads);
+                let wr = rotate_weights(rot, &wh, ws, threads);
+                let v = eval_pair(&xh, &wr, bits, ws, threads);
+                ws.give_matrix(wr);
+                v
+            } else {
+                eval_pair(&xh, &wh, bits, ws, threads)
+            };
+            ws.give_matrix(xh);
+            ws.give_matrix(wh);
+            v
+        }
+    };
+    out.errors[i] = v.0;
+    out.act_difficulty[i] = v.1;
+    out.w_difficulty[i] = v.2;
+    out.act_absmax[i] = v.3;
+    Ok(out)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -281,6 +391,73 @@ mod tests {
         let mut ws = Workspace::new();
         let err = analyze_all_modes(&x, &w, 4, 0.5, &mut cache, &mut ws, 1).unwrap_err();
         assert!(err.contains("Hadamard"), "{err}");
+    }
+
+    #[test]
+    fn planned_single_mode_matches_the_full_analyze_slot() {
+        let x = rand_matrix(12, 64, 21);
+        let w = rand_matrix(64, 8, 22);
+        let alpha = 0.5f32;
+        let mut cache = RotationCache::new();
+        let mut ws = Workspace::new();
+        let full = analyze_all_modes(&x, &w, 4, alpha, &mut cache, &mut ws, 1).unwrap();
+        let s = transforms::smooth_scales(&x, &w, alpha);
+        let inv: Vec<f32> = s.iter().map(|&v| 1.0 / v).collect();
+        for mode in Mode::ALL {
+            let smooth =
+                matches!(mode, Mode::Smooth | Mode::SmoothRotate).then_some((&s[..], &inv[..]));
+            let rot = if matches!(mode, Mode::Rotate | Mode::SmoothRotate) {
+                Some(cache.get(64).unwrap().clone())
+            } else {
+                None
+            };
+            let got =
+                analyze_planned(&x, &w, 4, mode, smooth, rot.as_ref(), &mut ws, 1).unwrap();
+            let i = mode.index();
+            assert_eq!(got.errors[i], full.errors[i], "{mode:?} error");
+            assert_eq!(got.act_difficulty[i], full.act_difficulty[i], "{mode:?} difficulty");
+            assert_eq!(got.act_absmax[i], full.act_absmax[i], "{mode:?} absmax");
+            // every other mode's error is infinite, so argmin = planned
+            for j in 0..4 {
+                if j != i {
+                    assert!(got.errors[j].is_infinite(), "{mode:?} slot {j}");
+                }
+            }
+            let best = Mode::ALL
+                .into_iter()
+                .min_by(|a, b| got.errors[a.index()].partial_cmp(&got.errors[b.index()]).unwrap())
+                .unwrap();
+            assert_eq!(best, mode);
+        }
+    }
+
+    #[test]
+    fn planned_validates_its_inputs() {
+        let x = rand_matrix(4, 16, 23);
+        let w = rand_matrix(16, 4, 24);
+        let mut ws = Workspace::new();
+        // smoothing mode without the plan vector
+        assert!(analyze_planned(&x, &w, 4, Mode::Smooth, None, None, &mut ws, 1).is_err());
+        // rotating mode without a rotation
+        assert!(analyze_planned(&x, &w, 4, Mode::Rotate, None, None, &mut ws, 1).is_err());
+        // wrong-width smoothing vector
+        let bad = vec![1.0f32; 8];
+        assert!(analyze_planned(
+            &x,
+            &w,
+            4,
+            Mode::Smooth,
+            Some((&bad, &bad)),
+            None,
+            &mut ws,
+            1
+        )
+        .is_err());
+        // wrong-width rotation
+        let rot = crate::transforms::Rotation::build(8).unwrap();
+        assert!(
+            analyze_planned(&x, &w, 4, Mode::Rotate, None, Some(&rot), &mut ws, 1).is_err()
+        );
     }
 
     #[test]

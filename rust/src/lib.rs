@@ -21,6 +21,12 @@
 //!   work-stealing worker pool and streaming p50/p95/p99-tracked
 //!   responses (`smoothrot serve`, `examples/serve.rs`).
 //!
+//! The [`calib`] subsystem bridges the two: `smoothrot calibrate`
+//! streams activations into mergeable channel statistics, searches a
+//! per-layer transform plan, and persists it as a versioned artifact
+//! that `smoothrot serve --plan` applies with zero per-request
+//! transform search ("calibrate once, serve many").
+//!
 //! PJRT execution (the `xla` bindings) is optional: build with the
 //! `pjrt` cargo feature for the AOT hot path, or without it for the
 //! fully self-contained native mirror (see README.md).
@@ -37,6 +43,7 @@
 //! | [`metrics`] | channel magnitudes, quantization difficulty, kurtosis, Pearson, percentiles |
 //! | [`synth`] | native activation generator mirroring SynLlama's profiles |
 //! | [`kernels`] | fused multi-threaded kernel engine: row-parallel matmul, FWHT rotation, single-pass analyze, workspace reuse |
+//! | [`calib`] | calibration subsystem: streaming channel stats, plan search, versioned plan artifacts, serving-side plan registry |
 //! | [`jsonio`] | minimal JSON value model + parser + writer |
 //! | [`config`] | typed experiment configuration + file parser |
 //! | [`cli`] | dependency-free argument parser |
@@ -50,6 +57,7 @@
 //! | [`bench_harness`] | criterion-lite timing harness used by `cargo bench` |
 
 pub mod bench_harness;
+pub mod calib;
 pub mod check;
 pub mod cli;
 pub mod config;

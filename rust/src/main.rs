@@ -7,7 +7,11 @@
 //! smoothrot sweep-alpha Sec. IV-C migration-strength sweep (native)
 //! smoothrot sweep-bits  bit-width ablation (native)
 //! smoothrot selfcheck   PJRT output vs golden.json + native mirror
+//! smoothrot calibrate   stream -> channel stats -> plan search -> plan file
 //! smoothrot serve       batched multi-tenant serving core demo
+//!                       (--plan <file> serves a calibration plan with
+//!                       zero per-request transform search + mtime-poll
+//!                       hot reload)
 //! ```
 
 use std::io::Write as _;
@@ -61,11 +65,26 @@ fn app() -> App {
                 .opt("backend", "pjrt | native", Some("pjrt"))
                 .opt("sr-margin", "min error ratio before adopting smooth-rotation", Some("1.25"))
                 .opt("out", "policy JSON output path", Some("reports/policy.json")),
+            Command::new("calibrate", "stream synth activations -> channel stats -> plan search -> versioned plan file")
+                .opt("out", "plan artifact output path", Some("reports/plan.json"))
+                .opt("layers", "layers to calibrate per module", Some("8"))
+                .opt("rows", "token rows per streamed batch", Some("32"))
+                .opt("batches", "batches streamed per (module, layer)", Some("2"))
+                .opt("shards", "parallel collector shards (merged deterministically)", Some("2"))
+                .opt("sample-rows", "sample reservoir cap per cell, 0 = retain the full stream", Some("0"))
+                .opt("seed", "synthetic stream seed", Some("2025"))
+                .opt("alpha-grid", "comma-separated migration strengths to search", Some("0.5"))
+                .opt("bits-grid", "comma-separated bit widths to emit entries for", Some("4"))
+                .opt("sr-margin", "min error ratio before adopting smooth-rotation", Some("1.25"))
+                .opt("threads", "math threads, 0 = all cores", Some("1"))
+                .flag("selfcheck", "pin the plan against policy::recommend on the same workload"),
             Command::new("serve", "batched multi-tenant serving demo over the serving core")
                 .opt("backend", "native | pjrt", Some("native"))
                 .opt("artifacts", "artifacts directory (pjrt backend)", Some("artifacts"))
+                .opt("plan", "calibration plan file: serve plan-driven (the calibrated transform and alpha override the request's) with mtime-poll hot reload (native backend)", None)
                 .opt("requests", "number of synthetic requests", Some("64"))
                 .opt("tenants", "synthetic tenants (tenant 0 is the noisy neighbor)", Some("4"))
+                .opt("layers", "layer range of synthetic requests (match the calibrated depth)", Some("32"))
                 .opt("workers", "worker threads", Some("2"))
                 .opt("threads", "math threads per worker, 0 = all cores (native backend)", Some("1"))
                 .opt("max-batch", "max jobs coalesced into one executor dispatch", Some("8"))
@@ -107,6 +126,7 @@ fn main() {
         "sweep-bits" => cmd_sweep_bits(&parsed),
         "selfcheck" => cmd_selfcheck(&parsed),
         "recommend" => cmd_recommend(&parsed),
+        "calibrate" => cmd_calibrate(&parsed),
         "serve" => cmd_serve(&parsed),
         _ => unreachable!(),
     };
@@ -385,6 +405,62 @@ fn cmd_recommend(p: &smoothrot::cli::Parsed) -> Result<()> {
     Ok(())
 }
 
+fn cmd_calibrate(p: &smoothrot::cli::Parsed) -> Result<()> {
+    use smoothrot::calib::search::SearchConfig;
+    use smoothrot::pipeline::{calibrate_synthetic, check_plan_matches_policy, CalibrateConfig};
+
+    let alphas: Vec<f64> = p
+        .get_or("alpha-grid", "0.5")
+        .split(',')
+        .map(|s| s.trim().parse::<f64>().map_err(|_| anyhow!("calibrate: bad alpha {s:?}")))
+        .collect::<Result<_>>()?;
+    let bits_grid: Vec<u32> = p
+        .get_or("bits-grid", "4")
+        .split(',')
+        .map(|s| s.trim().parse::<u32>().map_err(|_| anyhow!("calibrate: bad bits {s:?}")))
+        .collect::<Result<_>>()?;
+    let cfg = CalibrateConfig {
+        layers: p.get_usize("layers").map_err(|e| anyhow!(e))?.unwrap_or(8),
+        rows_per_batch: p.get_usize("rows").map_err(|e| anyhow!(e))?.unwrap_or(32),
+        batches: p.get_usize("batches").map_err(|e| anyhow!(e))?.unwrap_or(2),
+        shards: p.get_usize("shards").map_err(|e| anyhow!(e))?.unwrap_or(2),
+        max_sample_rows: p.get_usize("sample-rows").map_err(|e| anyhow!(e))?.unwrap_or(0),
+        seed: p.get_usize("seed").map_err(|e| anyhow!(e))?.unwrap_or(2025) as u64,
+        search: SearchConfig {
+            alphas,
+            bits_grid,
+            sr_margin: p.get_f64("sr-margin").map_err(|e| anyhow!(e))?.unwrap_or(1.25),
+            threads: p.get_usize("threads").map_err(|e| anyhow!(e))?.unwrap_or(1),
+        },
+    };
+    let out_path = p.get_or("out", "reports/plan.json");
+
+    let t0 = std::time::Instant::now();
+    let run = calibrate_synthetic(&cfg)?;
+    println!(
+        "calibrate: {} entries ({} layers x {} modules x {} bit widths) from {} batches x {} \
+         rows per cell over {} shard(s) in {:?}",
+        run.plan.entries.len(),
+        cfg.layers,
+        smoothrot::MODULES.len(),
+        cfg.search.bits_grid.len(),
+        cfg.batches,
+        cfg.rows_per_batch,
+        cfg.shards,
+        t0.elapsed()
+    );
+    println!("{}", run.plan.summary());
+
+    if p.has_flag("selfcheck") {
+        check_plan_matches_policy(&run).map_err(|e| anyhow!(e))?;
+        println!("selfcheck OK: plan matches policy::recommend on the same workload");
+    }
+
+    run.plan.save(std::path::Path::new(&out_path)).map_err(|e| anyhow!(e))?;
+    println!("wrote {out_path} ({})", run.plan.content_hash());
+    Ok(())
+}
+
 fn cmd_serve(p: &smoothrot::cli::Parsed) -> Result<()> {
     use smoothrot::coordinator::Job;
     use smoothrot::serve::{
@@ -441,7 +517,9 @@ fn cmd_serve(p: &smoothrot::cli::Parsed) -> Result<()> {
     let n_requests = p.get_usize("requests").map_err(|e| anyhow!(e))?.unwrap_or(64);
     let n_tenants = p.get_usize("tenants").map_err(|e| anyhow!(e))?.unwrap_or(4).max(1);
     let rows = p.get_usize("rows").map_err(|e| anyhow!(e))?.unwrap_or(32).max(1);
+    let layers = p.get_usize("layers").map_err(|e| anyhow!(e))?.unwrap_or(32).max(1);
     let threads = p.get_usize("threads").map_err(|e| anyhow!(e))?.unwrap_or(1);
+    let plan_path = p.get("plan").map(str::to_string);
     let cfg = ServeConfig {
         workers: p.get_usize("workers").map_err(|e| anyhow!(e))?.unwrap_or(2),
         max_batch: p.get_usize("max-batch").map_err(|e| anyhow!(e))?.unwrap_or(8),
@@ -449,6 +527,9 @@ fn cmd_serve(p: &smoothrot::cli::Parsed) -> Result<()> {
         admission: if p.has_flag("reject") { Admission::Reject } else { Admission::Block },
         ..ServeConfig::default()
     };
+    if plan_path.is_some() && backend != Backend::Native {
+        bail!("serve: --plan is native-only (the plan pre-resolves native transforms)");
+    }
 
     println!(
         "serve: {n_requests} requests, {n_tenants} tenants, {} workers x {threads} math \
@@ -461,8 +542,69 @@ fn cmd_serve(p: &smoothrot::cli::Parsed) -> Result<()> {
 
     let (responses, metrics) = match backend {
         Backend::Native => {
-            let requests = synthetic_requests(n_requests, n_tenants, rows, 2025);
-            run_serve(cfg, requests, move |_| Ok(NativeBatchExecutor::with_threads(threads)))?
+            use smoothrot::calib::registry::PlanRegistry;
+            use std::sync::atomic::{AtomicBool, Ordering};
+            use std::sync::Arc;
+
+            let requests = synthetic_requests(n_requests, n_tenants, rows, layers, 2025);
+            match plan_path {
+                None => run_serve(cfg, requests, move |_| {
+                    Ok(NativeBatchExecutor::with_threads(threads))
+                })?,
+                Some(path) => {
+                    let registry =
+                        Arc::new(PlanRegistry::load(path.clone()).map_err(|e| anyhow!(e))?);
+                    println!(
+                        "plan: {path} ({} entries, {})",
+                        registry.len(),
+                        registry.content_hash()
+                    );
+                    // SIGHUP-free hot reload: poll the plan file's
+                    // mtime while the server runs and swap in changed
+                    // content atomically.
+                    let stop = Arc::new(AtomicBool::new(false));
+                    let poller = {
+                        let registry = Arc::clone(&registry);
+                        let stop = Arc::clone(&stop);
+                        std::thread::spawn(move || {
+                            while !stop.load(Ordering::Relaxed) {
+                                match registry.reload_if_changed() {
+                                    Ok(true) => eprintln!(
+                                        "plan reloaded ({})",
+                                        registry.content_hash()
+                                    ),
+                                    Ok(false) => {}
+                                    Err(e) => eprintln!("plan reload failed: {e}"),
+                                }
+                                std::thread::sleep(std::time::Duration::from_millis(200));
+                            }
+                        })
+                    };
+                    let exec_registry = Arc::clone(&registry);
+                    let out = run_serve(cfg, requests, move |_| {
+                        Ok(NativeBatchExecutor::with_plan(Arc::clone(&exec_registry), threads))
+                    });
+                    stop.store(true, Ordering::Relaxed);
+                    let _ = poller.join();
+                    let out = out?;
+                    let (planned, fallback) = registry.stats();
+                    println!(
+                        "plan lookups: {planned} planned / {fallback} fallback ({:.0}% coverage)",
+                        if planned + fallback == 0 {
+                            0.0
+                        } else {
+                            100.0 * planned as f64 / (planned + fallback) as f64
+                        }
+                    );
+                    if planned == 0 {
+                        bail!(
+                            "serve: the plan covered zero requests — keep serve's --layers \
+                             within the calibrated depth and the bit widths aligned"
+                        );
+                    }
+                    out
+                }
+            }
         }
         Backend::Pjrt => {
             let rt = Runtime::new(&artifacts)?;

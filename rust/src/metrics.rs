@@ -134,6 +134,17 @@ pub struct Percentiles {
 }
 
 impl Percentiles {
+    /// Nearest-rank pick over an ascending-sorted, finite, non-empty
+    /// sample vector.
+    fn of_sorted(v: &[f64]) -> Percentiles {
+        let pick = |p: f64| {
+            // nearest-rank: 1-based rank ceil(n * p), clamped into range
+            let rank = ((v.len() as f64) * p).ceil() as usize;
+            v[rank.saturating_sub(1).min(v.len() - 1)]
+        };
+        Percentiles { p50: pick(0.50), p95: pick(0.95), p99: pick(0.99) }
+    }
+
     /// Summarize `samples` (empty or all-non-finite input yields zeros).
     pub fn of(samples: &[f64]) -> Percentiles {
         let mut v: Vec<f64> = samples.iter().copied().filter(|x| x.is_finite()).collect();
@@ -141,12 +152,7 @@ impl Percentiles {
             return Percentiles::default();
         }
         v.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        // nearest-rank: 1-based rank ceil(n * p), clamped into range
-        let pick = |p: f64| {
-            let rank = ((v.len() as f64) * p).ceil() as usize;
-            v[rank.saturating_sub(1).min(v.len() - 1)]
-        };
-        Percentiles { p50: pick(0.50), p95: pick(0.95), p99: pick(0.99) }
+        Percentiles::of_sorted(&v)
     }
 
     /// Summarize integer microsecond samples (the serving core's native
@@ -154,6 +160,58 @@ impl Percentiles {
     pub fn of_micros(samples: &[u64]) -> Percentiles {
         let v: Vec<f64> = samples.iter().map(|&x| x as f64).collect();
         Percentiles::of(&v)
+    }
+
+    /// Combine several *pre-sorted* per-shard sample vectors (e.g. one
+    /// per serving worker) with one O(total) multi-way merge — no
+    /// global concatenation is ever re-sorted.  Equals
+    /// [`Percentiles::of`] on the concatenation of the shards; pinned
+    /// by the unit test below.  Non-finite values are skipped, like
+    /// [`Percentiles::of`].
+    ///
+    /// ```
+    /// use smoothrot::metrics::Percentiles;
+    /// let a = [1.0, 3.0, 5.0];
+    /// let b = [2.0, 4.0];
+    /// let merged = Percentiles::merge(&[&a, &b]);
+    /// assert_eq!(merged, Percentiles::of(&[1.0, 2.0, 3.0, 4.0, 5.0]));
+    /// ```
+    pub fn merge(shards: &[&[f64]]) -> Percentiles {
+        let total: usize = shards.iter().map(|s| s.len()).sum();
+        let mut v = Vec::with_capacity(total);
+        let mut idx = vec![0usize; shards.len()];
+        loop {
+            let mut best: Option<(usize, f64)> = None;
+            for (k, s) in shards.iter().enumerate() {
+                if idx[k] < s.len() {
+                    let val = s[idx[k]];
+                    // NaN never wins a `<` comparison, so a non-finite
+                    // head only gets consumed (and dropped) once no
+                    // finite head precedes it — shard order of the
+                    // finite values is preserved.
+                    let better = match best {
+                        None => true,
+                        Some((_, b)) => val < b,
+                    };
+                    if better {
+                        best = Some((k, val));
+                    }
+                }
+            }
+            match best {
+                Some((k, val)) => {
+                    idx[k] += 1;
+                    if val.is_finite() {
+                        v.push(val);
+                    }
+                }
+                None => break,
+            }
+        }
+        if v.is_empty() {
+            return Percentiles::default();
+        }
+        Percentiles::of_sorted(&v)
     }
 }
 
@@ -303,6 +361,41 @@ mod tests {
         let micros: Vec<u64> = (0..50).map(|v| v * 10).collect();
         let floats: Vec<f64> = micros.iter().map(|&v| v as f64).collect();
         assert_eq!(Percentiles::of_micros(&micros), Percentiles::of(&floats));
+    }
+
+    #[test]
+    fn merge_matches_naive_concatenation() {
+        use crate::rng::Rng;
+        let mut rng = Rng::new(42);
+        for shards_n in [1usize, 2, 3, 5] {
+            let mut shards: Vec<Vec<f64>> = Vec::new();
+            let mut concat = Vec::new();
+            for s in 0..shards_n {
+                let n = 1 + rng.below(40 + s);
+                let mut v: Vec<f64> =
+                    (0..n).map(|_| (rng.below(10_000) as f64) / 7.0).collect();
+                concat.extend_from_slice(&v);
+                v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                shards.push(v);
+            }
+            let refs: Vec<&[f64]> = shards.iter().map(|v| v.as_slice()).collect();
+            assert_eq!(
+                Percentiles::merge(&refs),
+                Percentiles::of(&concat),
+                "{shards_n} shards: merge must equal the naive concatenation path"
+            );
+        }
+    }
+
+    #[test]
+    fn merge_handles_empty_and_uneven_shards() {
+        assert_eq!(Percentiles::merge(&[]), Percentiles::default());
+        assert_eq!(Percentiles::merge(&[&[], &[]]), Percentiles::default());
+        let a = [7.0];
+        assert_eq!(Percentiles::merge(&[&[], &a]), Percentiles::of(&a));
+        let b = [1.0, 2.0, f64::NAN];
+        let merged = Percentiles::merge(&[&b, &a]);
+        assert_eq!(merged, Percentiles::of(&[1.0, 2.0, 7.0]), "non-finite values skipped");
     }
 
     #[test]

@@ -68,9 +68,18 @@ impl OutlierToken {
 
     /// Eq. 7 centroid magnitudes: |sum_i h_i |o_i|| / sqrt(d) over all
     /// sign combinations (deduplicated, sorted ascending).
-    pub fn centroid_magnitudes(&self) -> Vec<f64> {
+    ///
+    /// The enumeration is exponential in the outlier count, so tokens
+    /// with more than 20 outliers return an error instead of a
+    /// 2^k-sized allocation (a panic here would take down a serving
+    /// worker on attacker-shaped input).
+    pub fn centroid_magnitudes(&self) -> Result<Vec<f64>, String> {
         let k = self.values.len();
-        assert!(k <= 20, "too many outliers to enumerate sign combos");
+        if k > 20 {
+            return Err(format!(
+                "centroid enumeration needs 2^{k} sign combinations — refusing above 20 outliers"
+            ));
+        }
         let mut mags: Vec<f64> = (0..(1usize << k))
             .map(|mask| {
                 let mut acc = 0.0f64;
@@ -83,7 +92,7 @@ impl OutlierToken {
             .collect();
         mags.sort_by(|a, b| a.partial_cmp(b).unwrap());
         mags.dedup_by(|a, b| (*a - *b).abs() < 1e-9);
-        mags
+        Ok(mags)
     }
 
     /// Eq. 9 prediction: max|t_tilde| after smooth (alpha=0.5) + rotate,
@@ -135,7 +144,7 @@ mod tests {
         let x = Matrix::from_vec(1, 512, t);
         let r = transforms::rotation(512).unwrap();
         let rotated = x.matmul(&r);
-        let centroids = tok.centroid_magnitudes();
+        let centroids = tok.centroid_magnitudes().unwrap();
         assert!(centroids.len() <= predicted_cluster_count(3) + 1);
         for &v in rotated.as_slice() {
             let mag = v.abs() as f64;
@@ -150,6 +159,21 @@ mod tests {
         assert_eq!(predicted_cluster_count(0), 1);
         assert_eq!(predicted_cluster_count(1), 1);
         assert_eq!(predicted_cluster_count(4), 8);
+    }
+
+    #[test]
+    fn too_many_outliers_is_an_error_not_a_panic() {
+        let tok = OutlierToken {
+            dim: 64,
+            dims: (0..21).collect(),
+            values: vec![100.0; 21],
+            sigma: 0.1,
+        };
+        let err = tok.centroid_magnitudes().unwrap_err();
+        assert!(err.contains("20"), "{err}");
+        // at the boundary the enumeration still works
+        let ok = OutlierToken { dim: 64, dims: (0..2).collect(), values: vec![10.0; 2], sigma: 0.1 };
+        assert!(ok.centroid_magnitudes().is_ok());
     }
 
     #[test]

@@ -13,12 +13,22 @@
 //! [`crate::serve::NativeBatchExecutor`] implement the coordinator's
 //! [`Executor`], which the serving core adapts into batch dispatches
 //! (see [`crate::serve`]).
+//!
+//! The third driver is [`calibrate_synthetic`] (`smoothrot calibrate`):
+//! it streams the synthetic workload through sharded
+//! [`crate::calib::stats`] collectors, grid-searches a per-layer
+//! transform plan, and returns a versioned [`QuantPlan`] artifact plus
+//! the analyze-derived grid [`check_plan_matches_policy`] pins the plan
+//! against.
 
 use std::collections::BTreeMap;
 use std::path::PathBuf;
 
 use anyhow::{anyhow, Context, Result};
 
+use crate::calib::plan::{Provenance, QuantPlan};
+use crate::calib::search::{self, SearchConfig};
+use crate::calib::stats::LayerCollector;
 use crate::coordinator::{
     build_jobs, run_jobs, ExperimentGrid, Executor, Job, PoolConfig, RunMetrics,
 };
@@ -190,6 +200,192 @@ pub fn alpha_sweep(
         out.push((alpha, errs));
     }
     Ok(out)
+}
+
+/// Configuration of a synthetic-stream calibration run
+/// (`smoothrot calibrate`).
+#[derive(Clone, Debug)]
+pub struct CalibrateConfig {
+    /// Layers to calibrate per module (clamped to the synth depth).
+    pub layers: usize,
+    /// Token rows per streamed batch.
+    pub rows_per_batch: usize,
+    /// Batches streamed per (module, layer).
+    pub batches: usize,
+    /// Parallel collector shards the stream is split over (merged
+    /// deterministically in shard order).
+    pub shards: usize,
+    /// Sample-reservoir cap per cell (`0` = retain the full stream —
+    /// required for the exact policy-equivalence pin).
+    pub max_sample_rows: usize,
+    /// Synthetic stream seed.
+    pub seed: u64,
+    /// Plan-search grids and margin.
+    pub search: SearchConfig,
+}
+
+impl Default for CalibrateConfig {
+    fn default() -> Self {
+        Self {
+            layers: 8,
+            rows_per_batch: 32,
+            batches: 2,
+            shards: 2,
+            max_sample_rows: 0,
+            seed: 2025,
+            search: SearchConfig::default(),
+        }
+    }
+}
+
+/// Output of [`calibrate_synthetic`]: the persisted artifact plus the
+/// analyze-derived grid at the first grid point, which the
+/// calibrate-vs-analyze equivalence pin compares policies on.
+pub struct CalibrationRun {
+    /// The versioned plan (save with [`QuantPlan::save`]).
+    pub plan: QuantPlan,
+    /// `analyze_all_modes` output per cell at `(alphas[0],
+    /// bits_grid[0])`.
+    pub grid: ExperimentGrid,
+}
+
+/// Calibrate over the native synthetic workload: per (module, layer)
+/// the activation stream is generated batch by batch, split over
+/// [`CalibrateConfig::shards`] collector shards (each accumulating a
+/// mergeable [`LayerCollector`] in its own scoped thread), merged in
+/// shard order, and handed to the plan search — the streaming
+/// replacement for the experiment path's all-at-once matrix passes.
+pub fn calibrate_synthetic(cfg: &CalibrateConfig) -> Result<CalibrationRun> {
+    cfg.search.validate().map_err(|e| anyhow!(e))?;
+    if cfg.layers == 0 || cfg.batches == 0 || cfg.rows_per_batch == 0 {
+        return Err(anyhow!("calibrate: layers, batches and rows must all be >= 1"));
+    }
+    let shards = cfg.shards.max(1).min(cfg.batches);
+    let mut cache = RotationCache::new();
+    let mut scratch = Workspace::new();
+    let mut entries = Vec::new();
+    let mut grid: Option<ExperimentGrid> = None;
+
+    for module in crate::MODULES {
+        let (base_spec, c_out) =
+            crate::synth::module_stream(module, cfg.seed).expect("known module");
+        let layers = cfg.layers.min(base_spec.n_layers);
+        let channels = base_spec.channels;
+        if grid.is_none() {
+            grid = Some(ExperimentGrid::new(layers));
+        }
+        for layer in 0..layers {
+            // weights come from the base seed so every batch of the
+            // stream pairs with the same W
+            let w = base_spec.weight(c_out, layer);
+            // shard k streams the contiguous batch range [k*per,
+            // (k+1)*per) — merging in k order reproduces the
+            // single-stream concatenation exactly
+            let per = (cfg.batches + shards - 1) / shards;
+            let shard_collectors: Vec<LayerCollector> = std::thread::scope(|s| {
+                let handles: Vec<_> = (0..shards)
+                    .map(|k| {
+                        let lo = k * per;
+                        let hi = ((k + 1) * per).min(cfg.batches);
+                        s.spawn(move || {
+                            // the user's reservoir cap applies per
+                            // shard too, so collection memory is
+                            // bounded while the stream is in flight,
+                            // not only after the merge
+                            let mut c = LayerCollector::new(channels, cfg.max_sample_rows);
+                            for b in lo..hi {
+                                let (mut spec, _) = crate::synth::module_stream(
+                                    module,
+                                    cfg.seed.wrapping_add((b as u64 + 1) * 0x9E37_79B9),
+                                )
+                                .expect("known module");
+                                spec.n_tokens = cfg.rows_per_batch;
+                                c.observe(&spec.layer(layer)).expect("consistent widths");
+                            }
+                            c
+                        })
+                    })
+                    .collect();
+                handles.into_iter().map(|h| h.join().expect("collector shard panicked")).collect()
+            });
+            let mut collector = LayerCollector::new(channels, cfg.max_sample_rows);
+            for shard in &shard_collectors {
+                collector.merge(shard).map_err(|e| anyhow!(e))?;
+            }
+            let found = search::search_layer(
+                module,
+                layer,
+                &collector,
+                &w,
+                &cfg.search,
+                &mut cache,
+                &mut scratch,
+            )
+            .map_err(|e| anyhow!(e))?;
+            if let Some(g) = grid.as_mut() {
+                if let Some(row) = g.cells.get_mut(module) {
+                    if layer < row.len() {
+                        row[layer] = Some(found.base);
+                    }
+                }
+            }
+            entries.extend(found.entries);
+        }
+    }
+    let plan = QuantPlan {
+        provenance: Provenance {
+            seed: cfg.seed,
+            alphas: cfg.search.alphas.clone(),
+            bits_grid: cfg.search.bits_grid.clone(),
+            sr_margin: cfg.search.sr_margin,
+            threads: cfg.search.threads,
+            ..Provenance::default()
+        },
+        entries,
+    };
+    Ok(CalibrationRun { plan, grid: grid.unwrap_or_else(|| ExperimentGrid::new(0)) })
+}
+
+/// The calibrate-vs-analyze equivalence pin: on a single-alpha grid the
+/// plan's chosen transform per (module, layer) must equal
+/// [`crate::policy::recommend`] on the analyze-derived grid of the same
+/// workload (they share [`search::choose_mode`], so a divergence means
+/// the bridge broke).  On wider alpha grids the plan may only *improve*
+/// on the single-alpha choice, which is what is checked instead.
+pub fn check_plan_matches_policy(run: &CalibrationRun) -> Result<(), String> {
+    let sr_margin = run.plan.provenance.sr_margin;
+    let bits = *run.plan.provenance.bits_grid.first().ok_or("plan has an empty bits grid")?;
+    let single_alpha = run.plan.provenance.alphas.len() == 1;
+    let policy = crate::policy::recommend(
+        &run.grid,
+        crate::policy::PolicyConfig { sr_margin },
+    );
+    for (module, modes) in &policy.cells {
+        for (layer, &want) in modes.iter().enumerate() {
+            let Some(errors) = run.grid.cell_errors(module, layer) else { continue };
+            let Some(entry) = run.plan.get(module, layer, bits) else {
+                return Err(format!("plan is missing calibrated cell {module} layer {layer}"));
+            };
+            if single_alpha {
+                if entry.mode != want {
+                    return Err(format!(
+                        "equivalence violation: {module} layer {layer}: plan chose {} but policy::recommend chose {}",
+                        entry.mode.name(),
+                        want.name()
+                    ));
+                }
+            } else {
+                let single_err = errors[want.index()];
+                if entry.predicted_error > single_err * (1.0 + 1e-9) {
+                    return Err(format!(
+                        "equivalence violation: {module} layer {layer}: plan error {} exceeds the single-alpha policy error {}",
+                        entry.predicted_error, single_err
+                    ));
+                }
+            }
+        }
+    }
+    Ok(())
 }
 
 /// Native-only sweep over quantization bit width (extension experiment).

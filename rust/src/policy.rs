@@ -43,34 +43,26 @@ pub struct Policy {
 }
 
 /// Pick per-cell transforms from measured errors.
+///
+/// Re-expressed on top of the calibration plan search: each cell goes
+/// through [`crate::calib::search::choose_mode`] — the same Sec. V
+/// chooser `smoothrot calibrate` uses — so an offline `recommend` run
+/// and a calibration plan built from the same workload can never
+/// disagree (pinned by `rust/tests/calib_equivalence.rs`).
 pub fn recommend(grid: &ExperimentGrid, cfg: PolicyConfig) -> Policy {
     let mut cells = Vec::new();
     let mut module_defaults = Vec::new();
     for module in crate::MODULES {
         let mut modes = Vec::with_capacity(grid.n_layers);
         for layer in 0..grid.n_layers {
-            let mode = match grid.get(module, layer) {
+            // calibration-free = none|rotate (smoothing is grouped with
+            // the calibration-dependent transforms under the paper's
+            // stricter reading); smooth-rotation must beat the best
+            // free option by sr_margin to pay for its calibration
+            // dependence — all encoded in the shared chooser.
+            let mode = match grid.cell_errors(module, layer) {
                 None => Mode::None,
-                Some(out) => {
-                    // best calibration-free option (none / rotate; smoothing
-                    // is also calibration-dependent in the online-scale
-                    // sense, but the paper groups it with the free ones
-                    // when no rotation hardware is available — we follow
-                    // the stricter reading: calibration-free = none|rotate)
-                    let free = [Mode::None, Mode::Rotate]
-                        .into_iter()
-                        .min_by(|a, b| {
-                            out.errors[a.index()].partial_cmp(&out.errors[b.index()]).unwrap()
-                        })
-                        .unwrap();
-                    let free_err = out.errors[free.index()];
-                    let sr_err = out.errors[Mode::SmoothRotate.index()];
-                    if sr_err > 0.0 && free_err / sr_err >= cfg.sr_margin {
-                        Mode::SmoothRotate
-                    } else {
-                        free
-                    }
-                }
+                Some(errors) => crate::calib::search::choose_mode(&errors, cfg.sr_margin),
             };
             modes.push(mode);
         }

@@ -44,8 +44,15 @@
 //!   deque, keeping the pool busy under skewed batch costs.
 //! * **Streaming delivery** — every completed request is sent on an
 //!   unbounded channel as its batch finishes, with per-request queue /
-//!   execution / total latency; [`ServeMetrics`] summarizes p50/p95/p99
-//!   via [`crate::metrics::Percentiles`].
+//!   execution / total latency; each worker keeps its own sorted
+//!   latency shard and [`ServeMetrics`] summarizes p50/p95/p99 by
+//!   merging the shards ([`crate::metrics::Percentiles::merge`])
+//!   without re-sorting a global sample vector.
+//! * **Plan-driven execution** — [`NativeBatchExecutor::with_plan`]
+//!   consults a calibration [`crate::calib::registry::PlanRegistry`]
+//!   per job and runs only the calibrated transform
+//!   (`smoothrot serve --plan`), falling back to the full four-mode
+//!   analyze for uncovered cells.
 //!
 //! The pool is generic over [`BatchExecutor`]; any per-job
 //! [`Executor`] (e.g. the PJRT-backed one) gets a batch adapter for
@@ -86,6 +93,7 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
+use crate::calib::registry::PlanRegistry;
 use crate::coordinator::{Executor, Job};
 use crate::kernels::workspace::Workspace;
 use crate::metrics::{CacheStats, Percentiles};
@@ -239,6 +247,9 @@ pub struct NativeBatchExecutor {
     scratch: Workspace,
     /// Math threads inside the kernels (`0` = all cores).
     threads: usize,
+    /// Calibration plan to consult per job (None = always run the full
+    /// four-mode analyze).
+    plan: Option<Arc<PlanRegistry>>,
 }
 
 impl Default for NativeBatchExecutor {
@@ -258,12 +269,52 @@ impl NativeBatchExecutor {
     /// (`0` = all cores) — for deployments with more cores than
     /// workers.
     pub fn with_threads(threads: usize) -> Self {
-        Self { cache: RotationCache::new(), scratch: Workspace::new(), threads }
+        Self { cache: RotationCache::new(), scratch: Workspace::new(), threads, plan: None }
+    }
+
+    /// Plan-driven executor (`smoothrot serve --plan`): each job is
+    /// looked up in the calibration [`PlanRegistry`]; on a hit only the
+    /// planned transform runs
+    /// ([`crate::kernels::fused::analyze_planned`] — its smoothing
+    /// vector and rotation come pre-resolved from the plan, so there is
+    /// zero per-request transform search).  The calibrated transform
+    /// — including its grid-searched alpha and smoothing vector —
+    /// *overrides* the request's `alpha` on covered cells; that is the
+    /// "calibrate once" contract.  Jobs the plan does not cover (or
+    /// whose activation width disagrees with the calibrated `c_in`)
+    /// fall back to the full four-mode analyze, which does honor the
+    /// request's alpha; the registry counts both outcomes
+    /// ([`PlanRegistry::stats`]).
+    pub fn with_plan(plan: Arc<PlanRegistry>, threads: usize) -> Self {
+        Self {
+            cache: RotationCache::new(),
+            scratch: Workspace::new(),
+            threads,
+            plan: Some(plan),
+        }
     }
 }
 
 impl Executor for NativeBatchExecutor {
     fn run(&mut self, job: &Job) -> Result<AnalyzeOut, String> {
+        if let Some(reg) = &self.plan {
+            if let Some(e) = reg.lookup(job.module, job.layer, job.bits, job.x.cols()) {
+                let smooth = match (&e.smooth, &e.smooth_inv) {
+                    (Some(s), Some(inv)) => Some((s.as_slice(), inv.as_slice())),
+                    _ => None,
+                };
+                return crate::kernels::fused::analyze_planned(
+                    &job.x,
+                    &job.w,
+                    job.bits,
+                    e.mode,
+                    smooth,
+                    e.rotation.as_deref(),
+                    &mut self.scratch,
+                    self.threads,
+                );
+            }
+        }
         crate::kernels::fused::analyze_all_modes(
             &job.x,
             &job.w,
@@ -434,7 +485,10 @@ struct CenterStats {
     batches: u64,
     max_batch_observed: usize,
     exec_micros_total: u64,
-    latencies: Vec<u64>,
+    /// One ascending-sorted latency shard per exited worker; combined
+    /// at [`Server::finish`] via [`Percentiles::merge`] (no global
+    /// concatenation is ever re-sorted).
+    worker_latencies: Vec<Vec<f64>>,
     rotation: CacheStats,
     per_tenant: BTreeMap<TenantId, TenantStats>,
     per_worker_batches: Vec<u64>,
@@ -475,8 +529,11 @@ struct Shared {
     pool_cv: Condvar,
 }
 
-/// Cap on retained latency samples: percentile quality degrades
-/// gracefully under overwrite, memory does not grow with uptime.
+/// Cap on retained latency samples across all workers: percentile
+/// quality degrades gracefully under overwrite, memory does not grow
+/// with uptime.  Each worker keeps its own `LATENCY_RESERVOIR /
+/// workers` shard, sorted once at worker exit and merged at
+/// [`Server::finish`].
 const LATENCY_RESERVOIR: usize = 1 << 16;
 
 fn lock<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
@@ -678,6 +735,7 @@ impl Server {
         debug_assert_eq!(center.queued, 0, "drain left requests queued");
         debug_assert_eq!(center.in_flight, 0, "drain left requests in flight");
         let s = &center.stats;
+        let shards: Vec<&[f64]> = s.worker_latencies.iter().map(|v| v.as_slice()).collect();
         ServeMetrics {
             submitted: s.submitted,
             completed: s.completed,
@@ -688,7 +746,7 @@ impl Server {
             max_batch_observed: s.max_batch_observed,
             wall_micros: wall,
             exec_micros_total: s.exec_micros_total,
-            latency: Percentiles::of_micros(&s.latencies),
+            latency: Percentiles::merge(&shards),
             rotation: s.rotation,
             per_tenant: s.per_tenant.clone(),
             per_worker_batches: s.per_worker_batches.clone(),
@@ -817,6 +875,13 @@ where
             None
         }
     };
+    // Worker-local latency shard: samples accumulate off the center
+    // lock and are sorted exactly once at worker exit, so the run
+    // summary combines per-worker shards with one O(total) merge
+    // (`Percentiles::merge`) instead of re-sorting a global vector.
+    let lat_cap = (LATENCY_RESERVOIR / shared.cfg.workers).max(1);
+    let mut latencies: Vec<u64> = Vec::new();
+    let mut lat_seen: u64 = 0;
     loop {
         // Pop from the own deque front; steal from the back of the
         // longest peer deque when empty.
@@ -874,22 +939,23 @@ where
             for (m, out) in batch.meta.into_iter().zip(results) {
                 let queue_micros = t0.saturating_duration_since(m.admitted).as_micros() as u64;
                 let total_micros = m.admitted.elapsed().as_micros() as u64;
-                let sample_idx = center.stats.completed;
                 center.stats.completed += 1;
                 if out.is_err() {
                     center.stats.errors += 1;
                 }
-                // Bounded latency reservoir: the server may live
-                // indefinitely, so samples beyond the cap overwrite a
-                // deterministic pseudo-random slot (Fibonacci hash of
-                // the sample index) instead of growing the Vec.
-                if center.stats.latencies.len() < LATENCY_RESERVOIR {
-                    center.stats.latencies.push(total_micros);
+                // Bounded per-worker latency reservoir: the server may
+                // live indefinitely, so samples beyond the cap
+                // overwrite a deterministic pseudo-random slot
+                // (Fibonacci hash of the sample index) instead of
+                // growing the Vec.
+                if latencies.len() < lat_cap {
+                    latencies.push(total_micros);
                 } else {
-                    let slot = (sample_idx.wrapping_mul(0x9E37_79B9_7F4A_7C15) >> 16) as usize
-                        % LATENCY_RESERVOIR;
-                    center.stats.latencies[slot] = total_micros;
+                    let slot =
+                        (lat_seen.wrapping_mul(0x9E37_79B9_7F4A_7C15) >> 16) as usize % lat_cap;
+                    latencies[slot] = total_micros;
                 }
+                lat_seen += 1;
                 center.stats.per_tenant.entry(m.tenant).or_default().completed += 1;
                 responses.push(Response {
                     id: m.id,
@@ -917,11 +983,20 @@ where
             let _ = tx.send(r);
         }
     }
-    // On exit, fold this worker's rotation-cache counters into the run
-    // summary (the executor lives and dies with the worker thread).
-    if let Some(stats) = exec.as_ref().and_then(|e| e.rotation_stats()) {
+    // On exit, fold this worker's rotation-cache counters and its
+    // sorted latency shard into the run summary (the executor lives
+    // and dies with the worker thread).
+    let mut shard: Vec<f64> = latencies.into_iter().map(|v| v as f64).collect();
+    shard.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rotation = exec.as_ref().and_then(|e| e.rotation_stats());
+    {
         let mut center = lock(&shared.center);
-        center.stats.rotation.merge(stats);
+        if !shard.is_empty() {
+            center.stats.worker_latencies.push(shard);
+        }
+        if let Some(stats) = rotation {
+            center.stats.rotation.merge(stats);
+        }
     }
 }
 
@@ -937,23 +1012,26 @@ pub fn skewed_tenant(rng: &mut crate::rng::Rng, tenants: usize) -> TenantId {
 
 /// Synthetic multi-tenant request stream over paper-shaped activations
 /// (via [`crate::synth::module_stream`], so no AOT artifacts are
-/// needed): modules and layers drawn uniformly at SynLlama scale,
-/// tenants drawn by [`skewed_tenant`], `rows` token rows per request.
-/// Shared by the `smoothrot serve` native backend and the serving
-/// example.
+/// needed): modules drawn uniformly at SynLlama scale, layers drawn
+/// from `0..layers` (clamped to the model depth — pass the calibrated
+/// layer count so every request hits a `--plan` entry), tenants drawn
+/// by [`skewed_tenant`], `rows` token rows per request.  Shared by the
+/// `smoothrot serve` native backend and the serving example.
 pub fn synthetic_requests(
     n: usize,
     tenants: usize,
     rows: usize,
+    layers: usize,
     seed: u64,
 ) -> Vec<(TenantId, Job)> {
     let model = crate::config::ModelConfig::default();
+    let layers = layers.clamp(1, model.n_layers);
     let mut rng = crate::rng::Rng::new(seed);
     (0..n)
         .map(|i| {
             let tenant = skewed_tenant(&mut rng, tenants);
             let module = crate::MODULES[rng.below(4)];
-            let layer = rng.below(model.n_layers);
+            let layer = rng.below(layers);
             let (mut spec, c_out) =
                 crate::synth::module_stream(module, seed.wrapping_add(7 + i as u64))
                     .expect("known module");
@@ -1236,6 +1314,89 @@ mod tests {
         assert_eq!(got.act_difficulty, want.act_difficulty);
         // rotation cache warmed once for the single width
         assert_eq!(be.cache.len(), 1);
+    }
+
+    #[test]
+    fn plan_driven_executor_applies_the_calibrated_transform() {
+        use crate::calib::plan::{PlanEntry, Provenance, QuantPlan};
+        use crate::calib::registry::PlanRegistry;
+        use crate::transforms::Mode;
+
+        // plan covering k_proj layers 0..4 at the test jobs' shape
+        let plan = QuantPlan {
+            provenance: Provenance::default(),
+            entries: (0..4)
+                .map(|layer| PlanEntry {
+                    module: "k_proj".into(),
+                    layer,
+                    bits: 4,
+                    c_in: 8,
+                    mode: Mode::Rotate,
+                    alpha: 0.5,
+                    predicted_error: 1.0,
+                    difficulty_before: 2.0,
+                    difficulty_after: 1.0,
+                    smooth: None,
+                })
+                .collect(),
+        };
+        let reg = Arc::new(PlanRegistry::from_plan(&plan).unwrap());
+        let cfg = ServeConfig { workers: 2, max_batch: 4, queue_depth: 64, ..Default::default() };
+        let reqs: Vec<(TenantId, Job)> =
+            (0..12).map(|i| (0, job(i, "k_proj", 8, 8))).collect();
+        let reg2 = Arc::clone(&reg);
+        let (responses, m) =
+            serve_all(cfg, reqs, move |_| Ok(NativeBatchExecutor::with_plan(Arc::clone(&reg2), 1)))
+                .unwrap();
+        assert_eq!(m.completed, 12);
+        assert_eq!(m.errors, 0);
+        let (planned, fallback) = reg.stats();
+        assert_eq!((planned, fallback), (12, 0), "every request must hit the plan");
+        for r in &responses {
+            let out = r.out.as_ref().unwrap();
+            // only the planned mode was evaluated; argmin recovers it
+            let best = Mode::ALL
+                .into_iter()
+                .min_by(|a, b| {
+                    out.errors[a.index()].partial_cmp(&out.errors[b.index()]).unwrap()
+                })
+                .unwrap();
+            assert_eq!(best, Mode::Rotate);
+            assert!(out.errors[Mode::None.index()].is_infinite());
+        }
+    }
+
+    #[test]
+    fn uncovered_jobs_fall_back_to_the_full_analyze() {
+        use crate::calib::plan::{PlanEntry, Provenance, QuantPlan};
+        use crate::calib::registry::PlanRegistry;
+
+        let plan = QuantPlan {
+            provenance: Provenance::default(),
+            entries: vec![PlanEntry {
+                module: "k_proj".into(),
+                layer: 0,
+                bits: 4,
+                c_in: 16,
+                mode: crate::transforms::Mode::None,
+                alpha: 0.5,
+                predicted_error: 1.0,
+                difficulty_before: 1.0,
+                difficulty_after: 1.0,
+                smooth: None,
+            }],
+        };
+        let reg = Arc::new(PlanRegistry::from_plan(&plan).unwrap());
+        let mut exec = NativeBatchExecutor::with_plan(Arc::clone(&reg), 1);
+        // o_proj is not in the plan: full analyze, all four modes finite
+        let mut rng = Rng::new(31);
+        let x = Matrix::from_vec(8, 16, rng.normals_f32(8 * 16));
+        let w = Matrix::from_vec(16, 8, rng.normals_f32(16 * 8));
+        let j = Job { id: 0, layer: 0, module: "o_proj", x, w, alpha: 0.5, bits: 4 };
+        let out = exec.run(&j).unwrap();
+        assert!(out.errors.iter().all(|e| e.is_finite()));
+        let (planned, fallback) = reg.stats();
+        assert_eq!((planned, fallback), (0, 1));
     }
 
     #[test]

@@ -350,17 +350,32 @@ pub fn is_hadamard(h: &Matrix) -> bool {
 
 const EPS: f32 = 1e-12;
 
-/// SmoothQuant migration factor s_j (Eq. 4), zero-safe.
-pub fn smooth_scales(x: &Matrix, w: &Matrix, alpha: f32) -> Vec<f32> {
-    let xmax = x.col_abs_max();
+/// SmoothQuant migration factor s_j (Eq. 4) from precomputed
+/// per-channel absolute maxima, zero-safe.  The maxima may come from a
+/// one-shot matrix pass ([`smooth_scales`]) or from a streaming
+/// calibration accumulator ([`crate::calib::stats::ChannelStats`]) —
+/// identical maxima yield bit-identical scales either way.
+pub fn smooth_scales_from_max(xmax: &[f32], wmax: &[f32], alpha: f32) -> Vec<f32> {
+    assert_eq!(xmax.len(), wmax.len(), "smooth scales need matching channel counts");
+    xmax.iter()
+        .zip(wmax)
+        .map(|(&xm, &wm)| xm.max(EPS).powf(alpha) / wm.max(EPS).powf(1.0 - alpha))
+        .collect()
+}
+
+/// Per-input-channel absolute maxima of a weight matrix (Eq. 4's
+/// `max|W_j|`, channels indexed by row).
+pub fn weight_row_abs_max(w: &Matrix) -> Vec<f32> {
     let mut wmax = vec![0.0f32; w.rows()];
     for i in 0..w.rows() {
         wmax[i] = w.row(i).iter().fold(0.0f32, |m, &v| m.max(v.abs()));
     }
-    xmax.iter()
-        .zip(&wmax)
-        .map(|(&xm, &wm)| xm.max(EPS).powf(alpha) / wm.max(EPS).powf(1.0 - alpha))
-        .collect()
+    wmax
+}
+
+/// SmoothQuant migration factor s_j (Eq. 4), zero-safe.
+pub fn smooth_scales(x: &Matrix, w: &Matrix, alpha: f32) -> Vec<f32> {
+    smooth_scales_from_max(&x.col_abs_max(), &weight_row_abs_max(w), alpha)
 }
 
 /// Apply a precomputed migration vector: X/s per column, s*W per row.
@@ -486,6 +501,15 @@ mod tests {
                 assert!((a - b).abs() / scale < 1e-4, "{mode:?}: {a} vs {b}");
             }
         }
+    }
+
+    #[test]
+    fn smooth_scales_from_max_matches_matrix_path() {
+        let x = rand_matrix(16, 32, 30);
+        let w = rand_matrix(32, 8, 31);
+        let via_matrix = smooth_scales(&x, &w, 0.65);
+        let via_max = smooth_scales_from_max(&x.col_abs_max(), &weight_row_abs_max(&w), 0.65);
+        assert_eq!(via_matrix, via_max, "identical maxima must give bit-identical scales");
     }
 
     #[test]

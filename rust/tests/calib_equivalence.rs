@@ -1,0 +1,154 @@
+//! The calibrate-vs-analyze equivalence pin.
+//!
+//! `smoothrot calibrate` must choose, per (module, layer), exactly the
+//! transform `policy::recommend` derives from an `analyze` sweep of the
+//! same workload (both sit on `calib::search::choose_mode`), and the
+//! plan-driven serving path must reproduce the full analyze's numbers
+//! for the planned mode bit-for-bit — zero per-request transform
+//! search, zero drift.
+
+use std::sync::Arc;
+
+use smoothrot::calib::registry::PlanRegistry;
+use smoothrot::calib::search::{search_layer, SearchConfig};
+use smoothrot::calib::stats::LayerCollector;
+use smoothrot::coordinator::{Executor, Job};
+use smoothrot::kernels::fused::analyze_all_modes;
+use smoothrot::kernels::workspace::Workspace;
+use smoothrot::pipeline::{calibrate_synthetic, check_plan_matches_policy, CalibrateConfig};
+use smoothrot::policy::{recommend, PolicyConfig};
+use smoothrot::serve::NativeBatchExecutor;
+use smoothrot::transforms::{Mode, RotationCache};
+
+#[test]
+fn calibrated_plan_matches_policy_recommend_on_the_same_workload() {
+    let cfg = CalibrateConfig {
+        layers: 4,
+        rows_per_batch: 24,
+        batches: 2,
+        shards: 2,
+        max_sample_rows: 0, // full retention: the pin is exact
+        seed: 77,
+        search: SearchConfig::default(),
+    };
+    let run = calibrate_synthetic(&cfg).unwrap();
+    assert_eq!(run.plan.entries.len(), 4 * smoothrot::MODULES.len());
+    check_plan_matches_policy(&run).unwrap();
+
+    // the explicit cell-by-cell form of the same pin
+    let policy = recommend(&run.grid, PolicyConfig { sr_margin: cfg.search.sr_margin });
+    for (module, modes) in &policy.cells {
+        for (layer, want) in modes.iter().enumerate() {
+            let entry = run.plan.get(module, layer, 4).unwrap();
+            assert_eq!(
+                entry.mode, *want,
+                "{module} layer {layer}: calibrate chose {}, analyze-derived policy chose {}",
+                entry.mode.name(),
+                want.name()
+            );
+        }
+    }
+    // the synth down_proj stream plants massive spikes at layer 1 —
+    // the paper's Sec. V conclusion must emerge from calibration too
+    assert_eq!(run.plan.get("down_proj", 1, 4).unwrap().mode, Mode::SmoothRotate);
+}
+
+#[test]
+fn sharded_collection_changes_no_decision() {
+    let base = CalibrateConfig {
+        layers: 2,
+        rows_per_batch: 16,
+        batches: 4,
+        shards: 1,
+        max_sample_rows: 0,
+        seed: 5,
+        search: SearchConfig::default(),
+    };
+    let single = calibrate_synthetic(&base).unwrap();
+    let sharded = calibrate_synthetic(&CalibrateConfig { shards: 4, ..base.clone() }).unwrap();
+    // contiguous shard ranges merged in order reproduce the
+    // single-stream sample and abs-max exactly, so every decision
+    // (mode, alpha, error, smoothing vector) is bit-identical; only
+    // the Welford-derived difficulty may differ by merge-order ulps
+    assert_eq!(single.plan.entries.len(), sharded.plan.entries.len());
+    for (a, b) in single.plan.entries.iter().zip(&sharded.plan.entries) {
+        assert_eq!((a.module.as_str(), a.layer, a.bits), (b.module.as_str(), b.layer, b.bits));
+        assert_eq!(a.mode, b.mode, "{} layer {}", a.module, a.layer);
+        assert_eq!(a.alpha, b.alpha);
+        assert_eq!(a.predicted_error, b.predicted_error, "{} layer {}", a.module, a.layer);
+        assert_eq!(a.smooth, b.smooth, "{} layer {}", a.module, a.layer);
+        assert_eq!(a.difficulty_after, b.difficulty_after);
+        let rel = (a.difficulty_before - b.difficulty_before).abs()
+            / a.difficulty_before.abs().max(1e-12);
+        assert!(rel < 1e-9, "{} layer {}: difficulty drifted {rel}", a.module, a.layer);
+    }
+    // and re-running with the same shard count is fully deterministic
+    let again = calibrate_synthetic(&CalibrateConfig { shards: 4, ..base }).unwrap();
+    assert_eq!(again.plan.entries, sharded.plan.entries);
+    assert_eq!(again.plan.content_hash(), sharded.plan.content_hash());
+}
+
+#[test]
+fn plan_driven_serving_reproduces_the_full_analyze_numbers() {
+    // calibrate one massive-outlier cell end-to-end through a plan
+    // *file* and the registry, then serve a request over the same
+    // activations: the planned path must equal the full analyze's
+    // numbers for the chosen mode exactly.
+    let (mut spec, c_out) = smoothrot::synth::module_stream("down_proj", 9).unwrap();
+    spec.n_tokens = 32;
+    let layer = 1; // massive-spike layer
+    let x = spec.layer(layer);
+    let w = spec.weight(c_out, layer);
+
+    let mut collector = LayerCollector::new(x.cols(), 0);
+    collector.observe(&x).unwrap();
+    let mut cache = RotationCache::new();
+    let mut ws = Workspace::new();
+    let found = search_layer(
+        "down_proj",
+        layer,
+        &collector,
+        &w,
+        &SearchConfig::default(),
+        &mut cache,
+        &mut ws,
+    )
+    .unwrap();
+    let plan = smoothrot::calib::plan::QuantPlan {
+        provenance: smoothrot::calib::plan::Provenance::default(),
+        entries: found.entries,
+    };
+    let mode = plan.get("down_proj", layer, 4).unwrap().mode;
+
+    let dir = std::env::temp_dir().join("smoothrot_equivalence_test");
+    let path = dir.join("plan.json");
+    plan.save(&path).unwrap();
+    let registry = Arc::new(PlanRegistry::load(&path).unwrap());
+
+    let mut exec = NativeBatchExecutor::with_plan(Arc::clone(&registry), 1);
+    let job = Job {
+        id: 0,
+        layer,
+        module: "down_proj",
+        x: x.clone(),
+        w: w.clone(),
+        alpha: 0.5,
+        bits: 4,
+    };
+    let served = exec.run(&job).unwrap();
+    let mut cache2 = RotationCache::new();
+    let mut ws2 = Workspace::new();
+    let full = analyze_all_modes(&x, &w, 4, 0.5, &mut cache2, &mut ws2, 1).unwrap();
+
+    let i = mode.index();
+    assert_eq!(served.errors[i], full.errors[i], "planned error must be exact, not close");
+    assert_eq!(served.act_difficulty[i], full.act_difficulty[i]);
+    assert_eq!(served.act_absmax[i], full.act_absmax[i]);
+    for j in 0..4 {
+        if j != i {
+            assert!(served.errors[j].is_infinite(), "only the planned mode may be evaluated");
+        }
+    }
+    assert_eq!(registry.stats(), (1, 0), "the request must be answered by the plan");
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -137,7 +137,7 @@ fn prop_eq8_rotated_outlier_max() {
         let noise = 6.0 * sigma as f64;
         ensure(got <= want + noise, format!("got {got} exceeds Eq.8 bound {want}"))?;
         // the achieved max is at least the second-best centroid
-        let centroids = tok.centroid_magnitudes();
+        let centroids = tok.centroid_magnitudes()?;
         let floor = if centroids.len() >= 2 { centroids[centroids.len() - 2] } else { want };
         ensure(
             got >= floor - noise,

@@ -1,0 +1,110 @@
+//! Property tests over the quant-plan artifact (check = proptest-lite).
+//!
+//! Over random plans: serialize → parse is the identity (pretty and
+//! compact forms), the canonical serialization is a fixed point, a
+//! bumped schema version is rejected, and value tampering breaks the
+//! content hash.
+
+use smoothrot::calib::plan::{PlanEntry, Provenance, QuantPlan, PLAN_SCHEMA_VERSION};
+use smoothrot::check::{check, ensure, Gen};
+use smoothrot::transforms::Mode;
+
+fn random_plan(g: &mut Gen) -> QuantPlan {
+    let n = g.usize_in(0, 10);
+    let entries = (0..n)
+        .map(|layer| {
+            let module = (*g.choose(&smoothrot::MODULES)).to_string();
+            let mode = *g.choose(&Mode::ALL);
+            let c_in = g.usize_in(1, 48);
+            let smooth = matches!(mode, Mode::Smooth | Mode::SmoothRotate)
+                .then(|| (0..c_in).map(|_| g.f32_in(1e-3, 100.0)).collect());
+            PlanEntry {
+                module,
+                layer,
+                bits: *g.choose(&[2u32, 3, 4, 8, 16]),
+                c_in,
+                mode,
+                alpha: g.f32_in(0.0, 1.0),
+                predicted_error: g.f32_in(0.0, 1e6) as f64,
+                difficulty_before: g.f32_in(0.0, 1e3) as f64,
+                difficulty_after: g.f32_in(0.0, 1e3) as f64,
+                smooth,
+            }
+        })
+        .collect();
+    QuantPlan {
+        provenance: Provenance {
+            // exercise the full u64 range (the artifact stores the
+            // seed as a decimal string to survive the f64 model)
+            seed: (g.rng.next_u64() << 1) | (g.usize_in(0, 1) as u64),
+            alphas: (0..g.usize_in(1, 3)).map(|_| g.f32_in(0.0, 1.0) as f64).collect(),
+            bits_grid: vec![4],
+            sr_margin: g.f32_in(1.0, 2.0) as f64,
+            threads: g.usize_in(0, 8),
+            ..Provenance::default()
+        },
+        entries,
+    }
+}
+
+#[test]
+fn prop_plan_roundtrip_is_identity() {
+    check("quant plan: serialize -> parse is the identity", 40, |g| {
+        let plan = random_plan(g);
+        let pretty = plan.to_json_string();
+        let back = QuantPlan::parse(&pretty).map_err(|e| format!("pretty parse: {e}"))?;
+        ensure(back == plan, "pretty round-trip changed the plan")?;
+        let compact = plan.to_json().to_string_compact();
+        let back = QuantPlan::parse(&compact).map_err(|e| format!("compact parse: {e}"))?;
+        ensure(back == plan, "compact round-trip changed the plan")?;
+        // canonical serialization is a fixed point (and so is the hash)
+        ensure(back.to_json_string() == pretty, "re-serialization drifted")?;
+        ensure(back.content_hash() == plan.content_hash(), "content hash drifted")
+    });
+}
+
+#[test]
+fn prop_bumped_schema_version_is_rejected() {
+    check("quant plan: a newer schema version is refused", 20, |g| {
+        let plan = random_plan(g);
+        let needle = format!("\"version\": {PLAN_SCHEMA_VERSION}");
+        let bumped = g.usize_in(PLAN_SCHEMA_VERSION as usize + 1, 2_000_000);
+        let text = plan.to_json_string().replacen(&needle, &format!("\"version\": {bumped}"), 1);
+        match QuantPlan::parse(&text) {
+            Ok(_) => Err(format!("version {bumped} must be rejected")),
+            Err(e) => ensure(
+                e.contains("newer than supported"),
+                format!("wrong rejection message: {e}"),
+            ),
+        }
+    });
+}
+
+#[test]
+fn prop_value_tampering_breaks_the_hash() {
+    check("quant plan: edited values fail the content hash", 20, |g| {
+        let mut plan = random_plan(g);
+        // ensure at least one entry with a recognizable value to edit
+        plan.entries.push(PlanEntry {
+            module: "k_proj".into(),
+            layer: 999,
+            bits: 4,
+            c_in: 2,
+            mode: Mode::None,
+            alpha: 0.5,
+            predicted_error: 123456.75,
+            difficulty_before: 1.0,
+            difficulty_after: 1.0,
+            smooth: None,
+        });
+        let text = plan.to_json_string();
+        ensure(text.contains("123456.75"), "marker value must serialize verbatim")?;
+        let tampered = text.replacen("123456.75", "123456.875", 1);
+        match QuantPlan::parse(&tampered) {
+            Ok(_) => Err("tampered plan must not parse".into()),
+            Err(e) => {
+                ensure(e.contains("content hash mismatch"), format!("wrong error: {e}"))
+            }
+        }
+    });
+}
