@@ -5,7 +5,12 @@
 //! serving core; compatible requests are coalesced into batches, every
 //! tenant gets a fair share of dispatch slots, and results stream back
 //! with per-request latency.  A second pass with batching disabled
-//! (`max_batch = 1`) quantifies what coalescing buys.
+//! (`max_batch = 1`) quantifies what coalescing buys, and the closing
+//! passes demo "calibrate once, serve many": first plan-driven f32,
+//! then `--exec int8`-style real integer execution (weights
+//! pre-quantized once per layer, per-request work = transform +
+//! quantize activation rows + i32-accumulated integer GEMM) with the
+//! f32-vs-int8 throughput delta printed.
 //!
 //! ```bash
 //! cargo run --release --example serve -- [requests] [workers] [max_batch]
@@ -115,5 +120,35 @@ fn main() -> Result<()> {
         metrics.throughput(),
     );
     assert_eq!(misses, 0, "every request must be covered by the calibrated plan");
+
+    // ...and once more in REAL integer arithmetic: pre-quantize the
+    // planned weights once per layer (GEMM-ready i8 codes + per-channel
+    // scales; seed 1 is the serving stream's fixed weight seed), then
+    // each request only transforms + quantizes its activation rows
+    // before the i32-accumulated integer GEMM.
+    use smoothrot::serve::ExecMode;
+    let loaded = registry
+        .set_weight_provider(Box::new(|module, layer| {
+            smoothrot::synth::layer_weight(module, layer, 1)
+        }))
+        .map_err(anyhow::Error::msg)?;
+    let reg = Arc::clone(&registry);
+    let (_, int8) = serve_all(cfg, synthetic_requests(n_requests, 3, rows, 32, 1), move |_| {
+        Ok(NativeBatchExecutor::with_plan_exec(Arc::clone(&reg), 1, ExecMode::Int8))
+    })
+    .map_err(|e| anyhow!(e.to_string()))?;
+    println!(
+        "int8 plan-driven: {:.1} req/s vs f32 plan-driven {:.1} req/s ({:+.0}% throughput, \
+         {loaded} weights pre-quantized once)",
+        int8.throughput(),
+        planned.throughput(),
+        100.0 * (int8.throughput() / planned.throughput().max(1e-9) - 1.0),
+    );
+    assert!(loaded > 0, "int8 preload must cover the calibrated plan");
+    let (executed, degraded) = registry.int8_stats();
+    assert!(
+        executed > 0 && degraded == 0,
+        "int8 pass degraded to f32: {executed} executed / {degraded} degraded"
+    );
     Ok(())
 }

@@ -5,16 +5,21 @@
 //! * L3 kernel engine: fused vs naive all-modes analyze, FWHT vs dense
 //!   rotation, 1-vs-N-thread parallel matmul,
 //! * L3 coordinator: scheduling overhead at varying worker counts,
+//! * L3 integer execution: i8 / packed-i4 GEMM vs the f32 matmul + qdq
+//!   simulation it replaces, and per-token activation quantization,
 //! * L3 serving core: batched vs unbatched dispatch throughput over the
-//!   multi-tenant scheduler (native executors), and plan-driven serve
+//!   multi-tenant scheduler (native executors), plan-driven serve
 //!   (calibrated transform per request) vs per-request four-mode
-//!   analyze,
+//!   analyze, and int8 plan-driven serve (real integer GEMM over
+//!   pre-quantized weights) vs the f32 qdq plan-driven path,
 //! * runtime: PJRT execute latency for the analyze/transform artifacts
 //!   (the end-to-end request-path unit).
 //!
 //! CI runs this binary with `--smoke` (minimal iterations) so kernel
 //! regressions fail loudly without timing flakiness.  The §Perf section
-//! of EXPERIMENTS.md quotes the full-run numbers.
+//! of EXPERIMENTS.md quotes the full-run numbers.  Every run also
+//! writes a machine-readable `BENCH_4.json` (override the path with
+//! `BENCH_JSON=...`) so the repo accumulates a bench trajectory.
 
 use smoothrot::bench_harness::{black_box, Bench};
 use smoothrot::coordinator::{run_jobs, Executor, Job, NativeExecutor, PoolConfig};
@@ -80,6 +85,31 @@ fn main() {
         let s = transforms::smooth_scales(&x, &w, 0.5);
         black_box(transforms::smooth_apply(&x, &w, &s));
     });
+
+    // ---- integer execution: i8 / packed-i4 GEMM vs the f32 simulation --
+    {
+        use smoothrot::kernels::igemm::igemm_into;
+        use smoothrot::qtensor::{QMatrix, ScaleAxis};
+        let mut iws = Workspace::new();
+        let qx8 = QMatrix::quantize(&x, 8, ScaleAxis::PerRow).unwrap();
+        let qw8 = QMatrix::quantize(&w, 8, ScaleAxis::PerCol).unwrap();
+        let mut out = vec![0.0f32; 128 * 256];
+        b.bench_items("igemm_i8_128x704x256", flops, || {
+            igemm_into(&mut out, &qx8, &qw8, &mut iws, 1).unwrap();
+            black_box(out[0]);
+        });
+        let qx4 = QMatrix::quantize(&x, 4, ScaleAxis::PerRow).unwrap();
+        let qw4 = QMatrix::quantize(&w, 4, ScaleAxis::PerCol).unwrap();
+        b.bench_items("igemm_i4_packed_128x704x256", flops, || {
+            igemm_into(&mut out, &qx4, &qw4, &mut iws, 1).unwrap();
+            black_box(out[0]);
+        });
+        b.bench_items("quantize_rows_i8_128x704", (128 * 704) as f64, || {
+            let q = QMatrix::quantize_i8_with(&x, 8, ScaleAxis::PerRow, &mut iws).unwrap();
+            black_box(q.scales()[0]);
+            q.recycle(&mut iws);
+        });
+    }
 
     // ---- kernel engine: fused vs naive analyze, 1 vs N threads ----------
     let auto_threads = resolve_threads(0);
@@ -245,11 +275,15 @@ fn main() {
         let plan = QuantPlan { provenance: Provenance::default(), entries };
         let registry = Arc::new(PlanRegistry::from_plan(&plan).unwrap());
 
+        // serving weights are the calibration stream's fixed per-layer
+        // weights (seed 400): activations vary per request, the model
+        // does not — which is what lets the int8 registry pre-quantize
+        // each layer's weight once below
         let n = 96usize;
         let base: Vec<(usize, Job)> = (0..n)
             .map(|i| {
                 let layer = i % n_layers;
-                let (mut spec, c_out) =
+                let (mut spec, _) =
                     smoothrot::synth::module_stream("k_proj", 500 + i as u64).unwrap();
                 spec.n_tokens = 32;
                 let job = Job {
@@ -257,7 +291,7 @@ fn main() {
                     layer,
                     module: "k_proj",
                     x: spec.layer(layer),
-                    w: spec.weight(c_out, layer),
+                    w: smoothrot::synth::layer_weight("k_proj", layer, 400).unwrap(),
                     alpha: 0.5,
                     bits: 4,
                 };
@@ -306,6 +340,48 @@ fn main() {
                 a.as_secs_f64() / p.as_secs_f64()
             );
         }
+
+        // int8 plan-driven serve: same scheduler, same requests, same
+        // plan — but covered cells run the REAL integer pipeline
+        // (pre-quantized i8 weights + i32-accumulated GEMM) instead
+        // of f32 quantize-dequantize + f32 matmuls.  ISSUE 4
+        // acceptance: this must beat the f32 qdq scenario above.
+        use smoothrot::serve::ExecMode;
+        let loaded = registry
+            .set_weight_provider(Box::new(|module, layer| {
+                smoothrot::synth::layer_weight(module, layer, 400)
+            }))
+            .unwrap();
+        assert!(loaded > 0, "int8 preload must cover the benched plan");
+        let int_med = {
+            let reqs = base.clone();
+            let reg_outer = Arc::clone(&registry);
+            b.bench_items("serve_plan_int8_96req", n as f64, move || {
+                let reg = Arc::clone(&reg_outer);
+                let (_, m) = serve_all(cfg, reqs.clone(), move |_| {
+                    Ok(NativeBatchExecutor::with_plan_exec(Arc::clone(&reg), 1, ExecMode::Int8))
+                })
+                .unwrap();
+                assert_eq!(m.completed as usize, n);
+                black_box(m.batches);
+            })
+            .map(|m| m.median())
+        };
+        if int_med.is_some() {
+            // the ratio below is only honest if the int8 scenario
+            // actually executed integer GEMMs (no silent f32 fallback)
+            let (executed, degraded) = registry.int8_stats();
+            assert!(
+                executed > 0 && degraded == 0,
+                "int8 bench degraded to f32: {executed} executed / {degraded} degraded"
+            );
+        }
+        if let (Some(f), Some(i)) = (plan_med, int_med) {
+            println!(
+                "    -> int8 plan-driven serve vs f32 qdq plan-driven: {:.2}x",
+                f.as_secs_f64() / i.as_secs_f64()
+            );
+        }
     }
 
     // ---- PJRT request-path latency --------------------------------------
@@ -337,4 +413,10 @@ fn main() {
     }
 
     b.finish();
+
+    // machine-readable trajectory artifact (satellite of ISSUE 4):
+    // scenario name, ns/iter and throughput for every bench above
+    let json_path = std::env::var("BENCH_JSON").unwrap_or_else(|_| "BENCH_4.json".to_string());
+    b.write_json("perf_benches", &json_path).expect("write bench json");
+    println!("wrote {json_path}");
 }

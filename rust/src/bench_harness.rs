@@ -69,6 +69,10 @@ impl Measurement {
 pub struct Bench {
     pub warmup_iters: usize,
     pub sample_count: usize,
+    /// Iteration profile this run used (`full` | `fast` | `smoke`) —
+    /// recorded in the JSON artifact so trajectory numbers are never
+    /// compared across profiles by accident.
+    pub mode: &'static str,
     filter: Option<String>,
     results: Vec<Measurement>,
 }
@@ -107,14 +111,14 @@ impl Bench {
             }
             i += 1;
         }
-        let (warmup_iters, sample_count) = if smoke {
-            (1, 2)
+        let (warmup_iters, sample_count, mode) = if smoke {
+            (1, 2, "smoke")
         } else if fast {
-            (1, 5)
+            (1, 5, "fast")
         } else {
-            (3, 15)
+            (3, 15, "full")
         };
-        Self { warmup_iters, sample_count, filter, results: Vec::new() }
+        Self { warmup_iters, sample_count, mode, filter, results: Vec::new() }
     }
 
     fn enabled(&self, name: &str) -> bool {
@@ -172,6 +176,59 @@ impl Bench {
     pub fn finish(&self) {
         println!("\n{} benchmark(s) completed", self.results.len());
     }
+
+    /// Serialize every measurement as a machine-readable JSON document
+    /// (the repo's `BENCH_<n>.json` trajectory artifacts): per scenario
+    /// the name, ns/iter (median / mean / p95), sample count, and — for
+    /// throughput benches — items per second at the median.
+    pub fn to_json(&self, bench: &str) -> crate::jsonio::Json {
+        use crate::jsonio::{obj, Json};
+        let results: Vec<Json> = self
+            .results
+            .iter()
+            .map(|m| {
+                let mut fields = vec![
+                    ("name", Json::Str(m.name.clone())),
+                    ("median_ns", Json::Num(m.median().as_nanos() as f64)),
+                    ("mean_ns", Json::Num(m.mean().as_nanos() as f64)),
+                    ("p95_ns", Json::Num(m.p95().as_nanos() as f64)),
+                    ("samples", Json::Num(m.samples.len() as f64)),
+                ];
+                // a 0ns median (empty closure on a coarse clock) would
+                // divide to +inf, which is not representable JSON —
+                // emit null instead of corrupting the artifact
+                let med_secs = m.median().as_secs_f64();
+                match m.items_per_iter {
+                    Some(items) if med_secs > 0.0 => {
+                        fields.push(("items_per_sec", Json::Num(items / med_secs)))
+                    }
+                    _ => fields.push(("items_per_sec", Json::Null)),
+                }
+                obj(fields)
+            })
+            .collect();
+        obj(vec![
+            ("bench", Json::Str(bench.to_string())),
+            ("mode", Json::Str(self.mode.to_string())),
+            // a filtered run covers only a subset of scenarios — record
+            // it so a partial artifact can never pass for a full one
+            (
+                "filter",
+                match &self.filter {
+                    Some(f) => Json::Str(f.clone()),
+                    None => Json::Null,
+                },
+            ),
+            ("scenarios", Json::Num(self.results.len() as f64)),
+            ("results", Json::Arr(results)),
+        ])
+    }
+
+    /// [`Bench::to_json`] written to `path` (pretty-printed).
+    pub fn write_json(&self, bench: &str, path: &str) -> Result<(), String> {
+        std::fs::write(path, self.to_json(bench).to_string_pretty())
+            .map_err(|e| format!("write {path}: {e}"))
+    }
 }
 
 /// Prevent the optimizer from discarding a value (ptr::read volatile
@@ -186,7 +243,7 @@ mod tests {
     use super::*;
 
     fn quiet_bench() -> Bench {
-        Bench { warmup_iters: 1, sample_count: 5, filter: None, results: Vec::new() }
+        Bench { warmup_iters: 1, sample_count: 5, mode: "fast", filter: None, results: Vec::new() }
     }
 
     #[test]
@@ -228,5 +285,35 @@ mod tests {
             items_per_iter: Some(1_000_000.0),
         };
         assert!(m.report_line().contains("elem/s"));
+    }
+
+    #[test]
+    fn json_export_round_trips() {
+        let mut b = quiet_bench();
+        // real work in the timed closure so the median cannot round to
+        // 0ns (which would legitimately null out items_per_sec)
+        let mut acc = 0u64;
+        b.bench_items("with_items", 100.0, || {
+            for i in 0..10_000u64 {
+                acc = acc.wrapping_add(black_box(i));
+            }
+        });
+        black_box(acc);
+        b.bench("no_items", || {});
+        let doc = b.to_json("unit_test");
+        assert_eq!(doc.get("bench").and_then(|j| j.as_str()), Some("unit_test"));
+        assert_eq!(doc.get("mode").and_then(|j| j.as_str()), Some("fast"));
+        assert_eq!(doc.get("filter"), Some(&crate::jsonio::Json::Null), "unfiltered run");
+        let results = doc.get("results").and_then(|j| j.as_arr()).unwrap();
+        assert_eq!(results.len(), 2);
+        assert_eq!(results[0].get("name").and_then(|j| j.as_str()), Some("with_items"));
+        assert!(results[0].get("median_ns").and_then(|j| j.as_f64()).is_some());
+        assert!(results[0].get("items_per_sec").and_then(|j| j.as_f64()).is_some());
+        // no-throughput scenarios carry an explicit null
+        assert_eq!(results[1].get("items_per_sec"), Some(&crate::jsonio::Json::Null));
+        // the document re-parses: it is real JSON, not a format string
+        let text = doc.to_string_pretty();
+        let parsed = crate::jsonio::parse(&text).unwrap();
+        assert_eq!(parsed.get("scenarios").and_then(|j| j.as_usize()), Some(2));
     }
 }

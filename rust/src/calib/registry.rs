@@ -15,12 +15,15 @@
 //! server picks up a re-calibrated plan without restarting.
 
 use std::collections::BTreeMap;
+use std::fmt;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, RwLock};
+use std::sync::{Arc, Mutex, RwLock};
 use std::time::SystemTime;
 
 use crate::calib::plan::QuantPlan;
+use crate::qtensor::PlannedWeight;
+use crate::tensor::Matrix;
 use crate::transforms::{Mode, Rotation};
 
 /// One plan entry resolved for the hot path.
@@ -42,6 +45,12 @@ pub struct ResolvedEntry {
     pub smooth_inv: Option<Arc<Vec<f32>>>,
     /// Pre-built rotation, shared across every entry of this width.
     pub rotation: Option<Arc<Rotation>>,
+    /// Pre-quantized transformed weight for the integer execution path
+    /// (`serve --exec int8`): built once per entry when a weight
+    /// provider is installed ([`PlanRegistry::set_weight_provider`]),
+    /// rebuilt automatically after a hot reload.  `None` until then, or
+    /// for entries whose bit width exceeds i8 storage.
+    pub qweight: Option<Arc<PlannedWeight>>,
 }
 
 /// Resolved lookup state (swapped wholesale on reload).  The outer map
@@ -56,15 +65,36 @@ struct Resolved {
     file_stamp: Option<(SystemTime, u64)>,
 }
 
+/// Source of the serving model's per-(module, layer) weights, consulted
+/// when pre-quantizing planned weights for the integer execution path.
+pub type WeightFn = Box<dyn Fn(&str, usize) -> Option<Matrix> + Send + Sync>;
+
+/// Debug-opaque wrapper so the registry stays `derive(Debug)`-able.
+struct WeightProvider(WeightFn);
+
+impl fmt::Debug for WeightProvider {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str("WeightProvider(..)")
+    }
+}
+
 /// Shared, reloadable registry of resolved plan entries.
 #[derive(Debug)]
 pub struct PlanRegistry {
     path: Option<PathBuf>,
     state: RwLock<Resolved>,
+    /// Installed weight source for int8 preload (re-applied on reload).
+    provider: Mutex<Option<WeightProvider>>,
     /// Lookups answered by a plan entry.
     planned: AtomicU64,
     /// Lookups that fell back to the full analyze.
     fallback: AtomicU64,
+    /// Int8-exec jobs that actually ran the integer pipeline.
+    int8_executed: AtomicU64,
+    /// Int8-exec jobs on plan-covered cells that had to degrade to the
+    /// f32 planned path (missing or shape-mismatched pre-quantized
+    /// weight) — the silent-degradation counter.
+    int8_degraded: AtomicU64,
 }
 
 fn resolve(plan: &QuantPlan) -> Result<Resolved, String> {
@@ -119,6 +149,7 @@ fn resolve(plan: &QuantPlan) -> Result<Resolved, String> {
                 smooth,
                 smooth_inv,
                 rotation,
+                qweight: None,
             },
         );
         if prev.is_some() {
@@ -129,6 +160,43 @@ fn resolve(plan: &QuantPlan) -> Result<Resolved, String> {
         }
     }
     Ok(Resolved { map, content_hash: plan.content_hash(), file_stamp: None })
+}
+
+/// Pre-quantize every loadable entry's transformed weight into the
+/// resolved state: fetch each layer's weight once, apply the entry's
+/// Eq. 4 row scaling and Eq. 3 rotation, quantize per-channel at the
+/// entry's bit width (GEMM-ready i8 codes — see [`PlannedWeight`]).
+/// Entries whose bits exceed i8 storage, or for which the provider has
+/// no weight, keep `qweight = None` (the executor falls back to the
+/// f32 planned path for them).  Returns how many entries now carry a
+/// weight.
+fn preload_into(res: &mut Resolved, f: &WeightFn) -> Result<usize, String> {
+    let mut loaded = 0usize;
+    for (module, inner) in res.map.iter_mut() {
+        // one provider call per layer, shared across bit widths
+        let mut weights: BTreeMap<usize, Option<Matrix>> = BTreeMap::new();
+        for (&(layer, bits), entry) in inner.iter_mut() {
+            entry.qweight = None;
+            if !(2..=8).contains(&bits) {
+                continue;
+            }
+            let w = weights.entry(layer).or_insert_with(|| f(module, layer));
+            let Some(w) = w else { continue };
+            if w.rows() != entry.c_in {
+                return Err(format!(
+                    "plan registry: {module} layer {layer}: weight has {} input channels, plan says {}",
+                    w.rows(),
+                    entry.c_in
+                ));
+            }
+            let smooth = entry.smooth.as_ref().map(|s| s.as_slice());
+            let pw = PlannedWeight::from_plan(w, smooth, entry.rotation.as_deref(), bits, 1)
+                .map_err(|e| format!("plan registry: {module} layer {layer}: {e}"))?;
+            entry.qweight = Some(Arc::new(pw));
+            loaded += 1;
+        }
+    }
+    Ok(loaded)
 }
 
 fn stamp(path: &Path) -> Result<(SystemTime, u64), String> {
@@ -144,8 +212,11 @@ impl PlanRegistry {
         Ok(Self {
             path: None,
             state: RwLock::new(resolve(plan)?),
+            provider: Mutex::new(None),
             planned: AtomicU64::new(0),
             fallback: AtomicU64::new(0),
+            int8_executed: AtomicU64::new(0),
+            int8_degraded: AtomicU64::new(0),
         })
     }
 
@@ -159,9 +230,72 @@ impl PlanRegistry {
         Ok(Self {
             path: Some(path),
             state: RwLock::new(resolved),
+            provider: Mutex::new(None),
             planned: AtomicU64::new(0),
             fallback: AtomicU64::new(0),
+            int8_executed: AtomicU64::new(0),
+            int8_degraded: AtomicU64::new(0),
         })
+    }
+
+    /// Install the serving model's weight source and pre-quantize every
+    /// covered entry's transformed weight for the integer execution
+    /// path (`serve --exec int8`) — once per (module, layer, bits), not
+    /// per request.  The provider is remembered, so a successful hot
+    /// reload re-quantizes against the fresh plan automatically.
+    /// Returns the number of entries now carrying a pre-quantized
+    /// weight.
+    ///
+    /// On failure (provider weight mismatching a plan entry) the
+    /// registry is left weightless *and providerless*: every `qweight`
+    /// is stripped (int8 serving falls back to the f32 planned path)
+    /// and any previously installed provider is dropped, so a later hot
+    /// reload cannot resurrect stale weights.
+    pub fn set_weight_provider(&self, f: WeightFn) -> Result<usize, String> {
+        // hold the provider slot across the whole install so a
+        // concurrent reload can neither run with the half-installed
+        // provider nor swap in a weightless state mid-install (lock
+        // order is always provider -> state, never nested the other
+        // way)
+        let mut guard = match self.provider.lock() {
+            Ok(g) => g,
+            Err(p) => p.into_inner(),
+        };
+        let loaded = {
+            let mut state = match self.state.write() {
+                Ok(g) => g,
+                Err(p) => p.into_inner(),
+            };
+            match preload_into(&mut state, &f) {
+                Ok(n) => n,
+                Err(e) => {
+                    // never leave a half-preloaded mix of old and new
+                    // weights live: strip every qweight so int8 serving
+                    // falls back to the (always-correct) f32 planned
+                    // path, and drop any previous provider so a later
+                    // hot reload cannot resurrect the stripped weights
+                    for inner in state.map.values_mut() {
+                        for entry in inner.values_mut() {
+                            entry.qweight = None;
+                        }
+                    }
+                    *guard = None;
+                    return Err(e);
+                }
+            }
+        };
+        *guard = Some(WeightProvider(f));
+        Ok(loaded)
+    }
+
+    /// Entries currently carrying a pre-quantized weight.
+    pub fn preloaded(&self) -> usize {
+        self.read()
+            .map
+            .values()
+            .flat_map(BTreeMap::values)
+            .filter(|e| e.qweight.is_some())
+            .count()
     }
 
     /// The backing plan file, if any.
@@ -233,6 +367,25 @@ impl PlanRegistry {
         (self.planned.load(Ordering::Relaxed), self.fallback.load(Ordering::Relaxed))
     }
 
+    /// Record whether an [`ExecMode::Int8`]-requested job actually ran
+    /// the integer pipeline (`true`) or silently degraded to the f32
+    /// planned path on a covered cell (`false`) — bumped by the serving
+    /// executor so operators can see when int8 is not really executing.
+    ///
+    /// [`ExecMode::Int8`]: crate::serve::ExecMode::Int8
+    pub fn note_int8(&self, executed: bool) {
+        if executed {
+            self.int8_executed.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.int8_degraded.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// `(executed, degraded)` int8-exec counters since creation.
+    pub fn int8_stats(&self) -> (u64, u64) {
+        (self.int8_executed.load(Ordering::Relaxed), self.int8_degraded.load(Ordering::Relaxed))
+    }
+
     /// Poll the backing file's (mtime, length) stamp and atomically
     /// swap in the re-resolved plan when its content hash changed.
     /// Returns `Ok(true)` iff a new plan is now live.  Registries
@@ -249,6 +402,20 @@ impl PlanRegistry {
         let plan = QuantPlan::load(path)?;
         let mut resolved = resolve(&plan)?;
         resolved.file_stamp = Some(now);
+        // re-quantize planned weights against the fresh plan *before*
+        // the swap, so int8 serving never sees a weightless window.
+        // The provider slot stays locked across the swap itself
+        // (provider -> state, same order as set_weight_provider):
+        // otherwise a concurrent set_weight_provider could slip in
+        // between preload and swap and be clobbered by weights from
+        // the provider it just replaced.
+        let guard = match self.provider.lock() {
+            Ok(g) => g,
+            Err(p) => p.into_inner(),
+        };
+        if let Some(p) = guard.as_ref() {
+            preload_into(&mut resolved, &p.0)?;
+        }
         let changed = {
             let mut state = match self.state.write() {
                 Ok(g) => g,
@@ -258,6 +425,7 @@ impl PlanRegistry {
             *state = resolved;
             changed
         };
+        drop(guard);
         Ok(changed)
     }
 }
@@ -358,6 +526,83 @@ mod tests {
         assert_eq!(reg.len(), 2);
         assert_eq!(reg.lookup("k_proj", 0, 4, 16).unwrap().mode, Mode::Rotate);
         assert!(!reg.reload_if_changed().unwrap(), "second poll sees no change");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn weight_provider_prequantizes_once_per_entry() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+
+        let mut e8 = entry("k_proj", 0, Mode::SmoothRotate, 16);
+        e8.bits = 8;
+        let reg = PlanRegistry::from_plan(&plan(vec![
+            entry("k_proj", 0, Mode::SmoothRotate, 16),
+            e8,
+            entry("k_proj", 1, Mode::None, 16),
+            entry("down_proj", 0, Mode::Rotate, 8),
+        ]))
+        .unwrap();
+        assert_eq!(reg.preloaded(), 0, "no weights before a provider is installed");
+        let calls = Arc::new(AtomicUsize::new(0));
+        let calls2 = Arc::clone(&calls);
+        let loaded = reg
+            .set_weight_provider(Box::new(move |module, layer| {
+                calls2.fetch_add(1, Ordering::Relaxed);
+                let c_in = if module == "k_proj" { 16 } else { 8 };
+                Some(crate::tensor::Matrix::from_fn(c_in, 4, |i, j| {
+                    (i * 7 + j * 3 + layer) as f32 * 0.1 - 1.0
+                }))
+            }))
+            .unwrap();
+        assert_eq!(loaded, 4);
+        assert_eq!(reg.preloaded(), 4);
+        // one provider call per distinct (module, layer), shared across
+        // the 4- and 8-bit entries of (k_proj, 0)
+        assert_eq!(calls.load(Ordering::Relaxed), 3);
+        let e = reg.lookup("k_proj", 0, 4, 16).unwrap();
+        let pw = e.qweight.expect("preloaded weight");
+        assert_eq!(pw.qw.shape(), (16, 4));
+        // serving weights stay unpacked i8 (GEMM-ready) even at 4 bits
+        assert!(!pw.qw.is_packed(), "planned weights must be GEMM-ready i8");
+    }
+
+    #[test]
+    fn provider_width_mismatch_is_an_error_and_strips_weights() {
+        let reg = PlanRegistry::from_plan(&plan(vec![
+            entry("k_proj", 0, Mode::None, 8),
+            entry("o_proj", 0, Mode::None, 16),
+        ]))
+        .unwrap();
+        // good provider first: both entries carry weights
+        reg.set_weight_provider(Box::new(|module, _| {
+            let c_in = if module == "k_proj" { 8 } else { 16 };
+            Some(crate::tensor::Matrix::zeros(c_in, 4))
+        }))
+        .unwrap();
+        assert_eq!(reg.preloaded(), 2);
+        // bad provider: named error, and NO half-preloaded mix survives
+        let err = reg
+            .set_weight_provider(Box::new(|_, _| Some(crate::tensor::Matrix::zeros(8, 4))))
+            .unwrap_err();
+        assert!(err.contains("input channels"), "{err}");
+        assert_eq!(reg.preloaded(), 0, "a failed preload must strip every weight");
+    }
+
+    #[test]
+    fn reload_requantizes_planned_weights() {
+        let dir = std::env::temp_dir().join("smoothrot_registry_int8_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("plan.json");
+        plan(vec![entry("k_proj", 0, Mode::None, 8)]).save(&path).unwrap();
+        let reg = PlanRegistry::load(&path).unwrap();
+        reg.set_weight_provider(Box::new(|_, _| Some(crate::tensor::Matrix::zeros(8, 4))))
+            .unwrap();
+        assert_eq!(reg.preloaded(), 1);
+        plan(vec![entry("k_proj", 0, Mode::None, 8), entry("k_proj", 1, Mode::None, 8)])
+            .save(&path)
+            .unwrap();
+        assert!(reg.reload_if_changed().unwrap());
+        assert_eq!(reg.preloaded(), 2, "hot reload must re-quantize against the new plan");
         std::fs::remove_dir_all(&dir).ok();
     }
 

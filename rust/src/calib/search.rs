@@ -37,11 +37,24 @@ pub struct SearchConfig {
     pub sr_margin: f64,
     /// Math threads inside the fused kernels (`0` = all cores).
     pub threads: usize,
+    /// Re-evaluate each chosen entry through the REAL integer kernels
+    /// ([`crate::kernels::fused::analyze_planned_int`]) and record the
+    /// executed error alongside the simulated prediction
+    /// ([`LayerSearch::executed`], `smoothrot calibrate --exec-check`).
+    /// Only entries at ≤ 8 bits can execute in integers; wider grids
+    /// report `NaN`.
+    pub exec_check: bool,
 }
 
 impl Default for SearchConfig {
     fn default() -> Self {
-        Self { alphas: vec![0.5], bits_grid: vec![4], sr_margin: 1.25, threads: 1 }
+        Self {
+            alphas: vec![0.5],
+            bits_grid: vec![4],
+            sr_margin: 1.25,
+            threads: 1,
+            exec_check: false,
+        }
     }
 }
 
@@ -57,8 +70,8 @@ impl SearchConfig {
         if self.bits_grid.is_empty() {
             return Err("plan search: bits grid is empty".into());
         }
-        if self.bits_grid.iter().any(|&b| !(2..=16).contains(&b)) {
-            return Err("plan search: bits must be in [2, 16]".into());
+        for &b in &self.bits_grid {
+            crate::quant::validate_bits(b).map_err(|e| format!("plan search: {e}"))?;
         }
         if self.sr_margin <= 0.0 {
             return Err("plan search: sr_margin must be positive".into());
@@ -98,6 +111,11 @@ pub struct LayerSearch {
     pub entries: Vec<PlanEntry>,
     /// `analyze_all_modes` output at `(alphas[0], bits_grid[0])`.
     pub base: AnalyzeOut,
+    /// Executed integer-path error per entry (same order as
+    /// `entries`), populated when [`SearchConfig::exec_check`] is set;
+    /// `NaN` for entries whose bit width exceeds i8 storage.  Empty
+    /// when the check is off.
+    pub executed: Vec<f64>,
 }
 
 /// Grid-search one (module, layer) cell on its collected stats +
@@ -194,7 +212,46 @@ pub fn search_layer(
             smooth,
         });
     }
-    Ok(LayerSearch { entries, base: base.expect("bits grid validated non-empty") })
+    let mut executed = Vec::new();
+    if cfg.exec_check {
+        // re-run each chosen transform through the real integer path
+        // (pre-quantized transformed weight + i32-accumulated GEMM on
+        // the calibration sample) — the executed error the deployment
+        // will actually produce, not the f32 simulation
+        for e in &entries {
+            if e.bits > 8 {
+                executed.push(f64::NAN);
+                continue;
+            }
+            let smooth_s = e.smooth.as_deref();
+            let inv: Option<Vec<f32>> = smooth_s.map(|s| s.iter().map(|&v| 1.0 / v).collect());
+            let rot: Option<&crate::transforms::Rotation> =
+                if matches!(e.mode, Mode::Rotate | Mode::SmoothRotate) {
+                    Some(cache.get(x.cols())?)
+                } else {
+                    None
+                };
+            let pw =
+                crate::qtensor::PlannedWeight::from_plan(w, smooth_s, rot, e.bits, cfg.threads)?;
+            let smooth_pair = match (smooth_s, inv.as_deref()) {
+                (Some(s), Some(i)) => Some((s, i)),
+                _ => None,
+            };
+            let out = crate::kernels::fused::analyze_planned_int(
+                &x,
+                w,
+                e.bits,
+                e.mode,
+                smooth_pair,
+                rot,
+                &pw,
+                ws,
+                cfg.threads,
+            )?;
+            executed.push(out.errors[e.mode.index()]);
+        }
+    }
+    Ok(LayerSearch { entries, base: base.expect("bits grid validated non-empty"), executed })
 }
 
 #[cfg(test)]
@@ -287,6 +344,42 @@ mod tests {
         assert_eq!((got.entries[0].bits, got.entries[1].bits), (4, 8));
         // 8-bit quantization of the same tensors errs strictly less
         assert!(got.entries[1].predicted_error < got.entries[0].predicted_error);
+    }
+
+    #[test]
+    fn exec_check_reports_executed_errors_near_predictions() {
+        let mut rng = Rng::new(23);
+        let x = Matrix::from_vec(24, 32, rng.normals_f32(24 * 32));
+        let w = Matrix::from_vec(32, 8, rng.normals_f32(32 * 8));
+        let collector = collector_for(&x);
+        let mut cache = RotationCache::new();
+        let mut ws = Workspace::new();
+        let cfg =
+            SearchConfig { bits_grid: vec![4, 8], exec_check: true, ..SearchConfig::default() };
+        let got = search_layer("k_proj", 0, &collector, &w, &cfg, &mut cache, &mut ws).unwrap();
+        assert_eq!(got.executed.len(), got.entries.len());
+        for (e, &exec) in got.entries.iter().zip(&got.executed) {
+            let denom = e.predicted_error.abs().max(1e-12);
+            let rel = (e.predicted_error - exec).abs() / denom;
+            assert!(
+                rel < 1e-2,
+                "bits {}: predicted {} vs executed {exec}",
+                e.bits,
+                e.predicted_error
+            );
+        }
+        // off by default: no integer re-evaluation
+        let quiet = search_layer(
+            "k_proj",
+            0,
+            &collector,
+            &w,
+            &SearchConfig::default(),
+            &mut cache,
+            &mut ws,
+        )
+        .unwrap();
+        assert!(quiet.executed.is_empty());
     }
 
     #[test]

@@ -66,6 +66,27 @@ impl Parsed {
         }
     }
 
+    /// Comma-separated unsigned integer list (e.g. a `--bits-grid`).
+    /// Range validation is the caller's job — this only parses, so the
+    /// error names the command, the flag and the offending token.
+    pub fn get_u32_list(&self, name: &str) -> Result<Option<Vec<u32>>, String> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(v) => v
+                .split(',')
+                .map(|s| {
+                    s.trim().parse::<u32>().map_err(|_| {
+                        format!(
+                            "{}--{name}: expected comma-separated integers, got {s:?}",
+                            self.ctx()
+                        )
+                    })
+                })
+                .collect::<Result<Vec<u32>, String>>()
+                .map(Some),
+        }
+    }
+
     pub fn has_flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
     }
@@ -240,6 +261,19 @@ mod tests {
         let mut anon = Parsed::default();
         anon.values.insert("n".into(), "x".into());
         assert!(anon.get_usize("n").unwrap_err().starts_with("--n:"));
+    }
+
+    #[test]
+    fn u32_lists_parse_and_report_bad_tokens() {
+        let grid = Command::new("sweep", "sweep things").opt("grid", "bit grid", Some("2,4,8"));
+        let p = grid.parse(&args(&[])).unwrap();
+        assert_eq!(p.get_u32_list("grid").unwrap(), Some(vec![2, 4, 8]));
+        let p = grid.parse(&args(&["--grid", " 4 , 8 "])).unwrap();
+        assert_eq!(p.get_u32_list("grid").unwrap(), Some(vec![4, 8]));
+        let p = grid.parse(&args(&["--grid", "4,x,8"])).unwrap();
+        let err = p.get_u32_list("grid").unwrap_err();
+        assert!(err.starts_with("sweep: ") && err.contains("\"x\""), "{err}");
+        assert_eq!(p.get_u32_list("missing").unwrap(), None);
     }
 
     #[test]

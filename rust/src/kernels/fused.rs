@@ -29,12 +29,14 @@
 //! naive per-mode path within 1e-4 relative error across random
 //! shapes, bit widths and migration strengths.
 
+use crate::kernels::igemm;
 use crate::kernels::par;
 use crate::kernels::workspace::Workspace;
 use crate::metrics::{self, Channels};
+use crate::qtensor::{PlannedWeight, QMatrix, ScaleAxis};
 use crate::quant;
 use crate::runtime::AnalyzeOut;
-use crate::tensor::Matrix;
+use crate::tensor::{self, Matrix};
 use crate::transforms::{self, Mode, Rotation, RotationCache};
 
 /// One-pass `Q(X)` + residual split over every row (per-token grids),
@@ -212,6 +214,53 @@ pub fn analyze_all_modes(
     Ok(out)
 }
 
+/// Shared input validation for the planned evaluation paths: gate the
+/// smoothing pair / rotation down to what `mode` actually uses, and
+/// reject missing or width-mismatched plan ingredients with an error
+/// prefixed by `what`.  Keeping this in one place guarantees the f32
+/// and integer planned paths can never drift in which plans they
+/// accept.
+#[allow(clippy::type_complexity)]
+fn planned_inputs<'a>(
+    what: &str,
+    c_in: usize,
+    mode: Mode,
+    smooth: Option<(&'a [f32], &'a [f32])>,
+    rot: Option<&'a Rotation>,
+) -> Result<(Option<(&'a [f32], &'a [f32])>, Option<&'a Rotation>), String> {
+    let smooths = matches!(mode, Mode::Smooth | Mode::SmoothRotate);
+    let rotates = matches!(mode, Mode::Rotate | Mode::SmoothRotate);
+    let smooth = if smooths {
+        let (s, inv) = smooth.ok_or_else(|| {
+            format!("{what}: mode {} needs the plan's smoothing vector", mode.name())
+        })?;
+        if s.len() != c_in || inv.len() != c_in {
+            return Err(format!(
+                "{what}: smoothing vectors have {}/{} channels, activations have {c_in}",
+                s.len(),
+                inv.len()
+            ));
+        }
+        Some((s, inv))
+    } else {
+        None
+    };
+    let rot = if rotates {
+        let r = rot
+            .ok_or_else(|| format!("{what}: mode {} needs a pre-resolved rotation", mode.name()))?;
+        if r.dim() != c_in {
+            return Err(format!(
+                "{what}: rotation is {}-wide, activations are {c_in}-wide",
+                r.dim()
+            ));
+        }
+        Some(r)
+    } else {
+        None
+    };
+    Ok((smooth, rot))
+}
+
 /// Analyze one (X, W) pair under a *single, pre-decided* transform —
 /// the plan-driven serving path ("calibrate once, serve many").
 ///
@@ -244,37 +293,7 @@ pub fn analyze_planned(
     if w.rows() != c_in {
         return Err(format!("analyze_planned shape mismatch: {x:?} @ {w:?}"));
     }
-    let smooths = matches!(mode, Mode::Smooth | Mode::SmoothRotate);
-    let rotates = matches!(mode, Mode::Rotate | Mode::SmoothRotate);
-    let s = if smooths {
-        let (s, inv) = smooth.ok_or_else(|| {
-            format!("analyze_planned: mode {} needs the plan's smoothing vector", mode.name())
-        })?;
-        if s.len() != c_in || inv.len() != c_in {
-            return Err(format!(
-                "analyze_planned: smoothing vectors have {}/{} channels, activations have {c_in}",
-                s.len(),
-                inv.len()
-            ));
-        }
-        Some((s, inv))
-    } else {
-        None
-    };
-    let rot = if rotates {
-        let r = rot.ok_or_else(|| {
-            format!("analyze_planned: mode {} needs a pre-resolved rotation", mode.name())
-        })?;
-        if r.dim() != c_in {
-            return Err(format!(
-                "analyze_planned: rotation is {}-wide, activations are {c_in}-wide",
-                r.dim()
-            ));
-        }
-        Some(r)
-    } else {
-        None
-    };
+    let (s, rot) = planned_inputs("analyze_planned", c_in, mode, smooth, rot)?;
 
     let mut out = AnalyzeOut::default();
     for i in 0..4 {
@@ -319,6 +338,96 @@ pub fn analyze_planned(
     out.act_difficulty[i] = v.1;
     out.w_difficulty[i] = v.2;
     out.act_absmax[i] = v.3;
+    Ok(out)
+}
+
+/// [`analyze_planned`]'s integer-execution twin: evaluate the planned
+/// transform by **actually computing in integers** instead of
+/// simulating quantization in f32.
+///
+/// Where the f32 planned path transforms both sides, quantize-
+/// dequantizes them and runs two f32 matmuls per request, this path
+/// assumes the weight side was transformed and quantized **once** at
+/// plan load ([`PlannedWeight`], built by the plan registry) and per
+/// request only:
+///
+/// 1. transforms the activation rows (plan smoothing vector / rotation,
+///    exactly as [`analyze_planned`]),
+/// 2. quantizes them onto per-token i8 grids (pooled code buffer, only
+///    the O(rows) scale vector allocates),
+/// 3. runs the `i32`-accumulated integer GEMM
+///    ([`crate::kernels::igemm`]) against the pre-quantized weight,
+/// 4. reports the **executed** Eq. 2 error `‖XW − dequant(Q(X̂)·Q(Ŵ))‖²`
+///    — the untransformed product is the reference because the Eq. 3–4
+///    transforms preserve it (`diag(s)·diag(1/s)` cancels, `R Rᵀ = I`).
+///
+/// The returned [`AnalyzeOut`] has the same planned-mode shape as
+/// [`analyze_planned`] (every other mode's error is `+∞`, so an argmin
+/// recovers the plan); the weight-difficulty slot carries the metric
+/// captured when the planned weight was prepared.
+#[allow(clippy::too_many_arguments)]
+pub fn analyze_planned_int(
+    x: &Matrix,
+    w: &Matrix,
+    bits: u32,
+    mode: Mode,
+    smooth: Option<(&[f32], &[f32])>,
+    rot: Option<&Rotation>,
+    pw: &PlannedWeight,
+    ws: &mut Workspace,
+    threads: usize,
+) -> Result<AnalyzeOut, String> {
+    let (n, c_in) = x.shape();
+    if w.rows() != c_in {
+        return Err(format!("analyze_planned_int shape mismatch: {x:?} @ {w:?}"));
+    }
+    let c_out = w.cols();
+    if pw.qw.shape() != (c_in, c_out) {
+        return Err(format!(
+            "analyze_planned_int: pre-quantized weight is {:?}, request needs ({c_in}, {c_out})",
+            pw.qw.shape()
+        ));
+    }
+    let (smooth, rot) = planned_inputs("analyze_planned_int", c_in, mode, smooth, rot)?;
+    let inv = smooth.map(|(_, inv)| inv);
+
+    // activation side only: the weight was transformed + quantized at
+    // plan load
+    let mut xh = ws.take_matrix_copy(x);
+    if let Some(inv) = inv {
+        xh.scale_cols_mut(inv);
+    }
+    if let Some(rot) = rot {
+        rot.apply_rows(&mut xh, threads);
+    }
+
+    // the only per-request quantization work on this path
+    let qx = QMatrix::quantize_i8_with(&xh, bits, ScaleAxis::PerRow, ws)?;
+    let mut yq = ws.take(n * c_out);
+    igemm::igemm_into(&mut yq, &qx, &pw.qw, ws, threads)?;
+
+    // f32 reference product (transform-invariant, so no weight
+    // transform per request)
+    let mut y = ws.take(n * c_out);
+    par::matmul_acc_into(&mut y, x, w, threads);
+    let err = tensor::frob_dist_sq(&y, &yq);
+
+    let act_diff = metrics::quant_difficulty(&xh, Channels::Columns);
+    let absmax = xh.abs_max() as f64;
+    ws.give(y);
+    ws.give(yq);
+    qx.recycle(ws);
+    ws.give_matrix(xh);
+
+    let mut out = AnalyzeOut::default();
+    for i in 0..4 {
+        out.errors[i] = f64::INFINITY;
+    }
+    let i = mode.index();
+    out.errors[i] = err;
+    out.act_difficulty[i] = act_diff;
+    out.w_difficulty[i] = pw.w_difficulty;
+    out.act_absmax[i] = absmax;
     Ok(out)
 }
 
@@ -458,6 +567,79 @@ mod tests {
         assert!(
             analyze_planned(&x, &w, 4, Mode::Rotate, None, Some(&rot), &mut ws, 1).is_err()
         );
+    }
+
+    #[test]
+    fn planned_int_tracks_the_simulated_planned_error() {
+        let x = rand_matrix(12, 64, 31);
+        let w = rand_matrix(64, 8, 32);
+        let alpha = 0.5f32;
+        let mut cache = RotationCache::new();
+        let mut ws = Workspace::new();
+        let s = transforms::smooth_scales(&x, &w, alpha);
+        let inv: Vec<f32> = s.iter().map(|&v| 1.0 / v).collect();
+        for mode in Mode::ALL {
+            let smooth =
+                matches!(mode, Mode::Smooth | Mode::SmoothRotate).then_some((&s[..], &inv[..]));
+            let rot = if matches!(mode, Mode::Rotate | Mode::SmoothRotate) {
+                Some(cache.get(64).unwrap().clone())
+            } else {
+                None
+            };
+            let sim =
+                analyze_planned(&x, &w, 8, mode, smooth, rot.as_ref(), &mut ws, 1).unwrap();
+            let pw = PlannedWeight::from_plan(
+                &w,
+                smooth.map(|(s, _)| s),
+                rot.as_ref(),
+                8,
+                1,
+            )
+            .unwrap();
+            let exec =
+                analyze_planned_int(&x, &w, 8, mode, smooth, rot.as_ref(), &pw, &mut ws, 1)
+                    .unwrap();
+            let i = mode.index();
+            // executed (integer) error vs simulated (f32 qdq) error:
+            // identical math, different accumulation order + reference
+            // association — tight but not bit-equal
+            let denom = sim.errors[i].abs().max(1e-12);
+            let rel = (sim.errors[i] - exec.errors[i]).abs() / denom;
+            assert!(
+                rel < 1e-2,
+                "{mode:?}: simulated {} vs executed {}",
+                sim.errors[i],
+                exec.errors[i]
+            );
+            assert_eq!(exec.act_difficulty[i], sim.act_difficulty[i], "{mode:?} difficulty");
+            assert_eq!(exec.act_absmax[i], sim.act_absmax[i], "{mode:?} absmax");
+            for j in 0..4 {
+                if j != i {
+                    assert!(exec.errors[j].is_infinite(), "{mode:?} slot {j}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn planned_int_validates_its_inputs() {
+        let x = rand_matrix(4, 16, 33);
+        let w = rand_matrix(16, 4, 34);
+        let mut ws = Workspace::new();
+        let pw = PlannedWeight::from_plan(&w, None, None, 8, 1).unwrap();
+        // smoothing mode without the plan vector
+        assert!(
+            analyze_planned_int(&x, &w, 8, Mode::Smooth, None, None, &pw, &mut ws, 1).is_err()
+        );
+        // rotating mode without a rotation
+        assert!(
+            analyze_planned_int(&x, &w, 8, Mode::Rotate, None, None, &pw, &mut ws, 1).is_err()
+        );
+        // pre-quantized weight of the wrong shape
+        let pw_bad = PlannedWeight::from_plan(&rand_matrix(16, 6, 35), None, None, 8, 1).unwrap();
+        let err = analyze_planned_int(&x, &w, 8, Mode::None, None, None, &pw_bad, &mut ws, 1)
+            .unwrap_err();
+        assert!(err.contains("pre-quantized weight"), "{err}");
     }
 
     #[test]

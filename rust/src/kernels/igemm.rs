@@ -1,0 +1,290 @@
+//! Integer GEMM — the arithmetic side of real integer execution.
+//!
+//! `i8 × i8 → i32`-accumulated matrix product over [`QMatrix`] codes,
+//! with the scale product `Δx_i · Δw_j` applied exactly once per output
+//! element.  This is the operation the paper's premise promises
+//! ("quantizing activations *and* weights enables faster operations via
+//! integer arithmetic") and that the rest of the repo only simulated
+//! with f32 quantize-dequantize followed by f32 matmuls.
+//!
+//! Design mirrors [`super::par`]'s f32 kernels:
+//!
+//! * cache-blocked i-k-j loop (`KB = 64` k-panel), contiguous
+//!   branch-free inner j loop over the weight row and the accumulator
+//!   row, so it auto-vectorizes,
+//! * output rows split into contiguous chunks across up to `threads`
+//!   scoped threads (`0` = all cores, `1` = fully inline) — and because
+//!   integer addition is associative, results are **exactly** identical
+//!   at every thread count, not just bit-stable per row,
+//! * the `i32` accumulator plane and any i4-unpack scratch come from
+//!   the caller's [`Workspace`] typed pools, so steady-state serving
+//!   allocates nothing on this path,
+//! * a k-bound guard rejects shapes whose worst-case `Σ |q_x·q_w|`
+//!   could overflow `i32` (unreachable below ~131k inner channels at
+//!   8 bits).
+//!
+//! `rust/tests/proptest_igemm.rs` pins the output against the f32
+//! `qdq`-then-`matmul` reference to ≤ 1e-4 relative Frobenius error
+//! across shapes, bit widths, granularities and thread counts.
+
+use crate::kernels::par::resolve_threads;
+use crate::kernels::workspace::Workspace;
+use crate::qtensor::{QMatrix, ScaleAxis};
+use crate::tensor::Matrix;
+
+/// Largest code magnitude of a symmetric b-bit grid, as u64.
+fn max_level(bits: u32) -> u64 {
+    (1u64 << (bits - 1)) - 1
+}
+
+/// `out = dequant(xq @ wq)`: integer product of the codes accumulated
+/// in `i32`, scaled once per output element by `Δx_i · Δw_j`.
+///
+/// `xq` must carry per-row (per-token) scales, `wq` per-column
+/// (per-channel) scales — the paper's activation × weight setting.
+/// `out` is fully overwritten (shape `xq.rows() × wq.cols()`,
+/// row-major).
+pub fn igemm_into(
+    out: &mut [f32],
+    xq: &QMatrix,
+    wq: &QMatrix,
+    ws: &mut Workspace,
+    threads: usize,
+) -> Result<(), String> {
+    let (m, k) = xq.shape();
+    let (k2, n) = wq.shape();
+    if k != k2 {
+        return Err(format!("igemm inner dims: {m}x{k} @ {k2}x{n}"));
+    }
+    if xq.axis() != ScaleAxis::PerRow {
+        return Err("igemm: activations need per-row (per-token) scales".to_string());
+    }
+    if wq.axis() != ScaleAxis::PerCol {
+        return Err("igemm: weights need per-column (per-channel) scales".to_string());
+    }
+    if out.len() != m * n {
+        return Err(format!("igemm output buffer: {} elements, want {m}x{n}", out.len()));
+    }
+    // worst-case |Σ q_x q_w| must fit an i32 accumulator
+    if (k as u64) * max_level(xq.bits()) * max_level(wq.bits()) > i32::MAX as u64 {
+        return Err(format!(
+            "igemm: {k} inner channels at {}x{} bits can overflow the i32 accumulator",
+            xq.bits(),
+            wq.bits()
+        ));
+    }
+    if m == 0 || n == 0 {
+        return Ok(());
+    }
+
+    // i8 code views: borrow plain storage, unpack i4 nibbles into
+    // pooled scratch
+    let x_unpacked: Option<Vec<i8>> = if xq.is_packed() {
+        let mut b = ws.take_i8(m * k);
+        xq.unpack_into(&mut b);
+        Some(b)
+    } else {
+        None
+    };
+    let w_unpacked: Option<Vec<i8>> = if wq.is_packed() {
+        let mut b = ws.take_i8(k * n);
+        wq.unpack_into(&mut b);
+        Some(b)
+    } else {
+        None
+    };
+    let xcodes: &[i8] = x_unpacked.as_deref().unwrap_or_else(|| xq.i8_codes().expect("i8 codes"));
+    let wcodes: &[i8] = w_unpacked.as_deref().unwrap_or_else(|| wq.i8_codes().expect("i8 codes"));
+
+    let mut acc = ws.take_i32(m * n);
+    let t = resolve_threads(threads).min(m);
+    if t <= 1 {
+        chunk_kernel(0, out, &mut acc, xcodes, wcodes, xq.scales(), wq.scales(), k, n);
+    } else {
+        let per = (m + t - 1) / t;
+        let (sx, sw) = (xq.scales(), wq.scales());
+        std::thread::scope(|s| {
+            for (ci, (oc, ac)) in out.chunks_mut(per * n).zip(acc.chunks_mut(per * n)).enumerate()
+            {
+                s.spawn(move || chunk_kernel(ci * per, oc, ac, xcodes, wcodes, sx, sw, k, n));
+            }
+        });
+    }
+
+    ws.give_i32(acc);
+    if let Some(b) = x_unpacked {
+        ws.give_i8(b);
+    }
+    if let Some(b) = w_unpacked {
+        ws.give_i8(b);
+    }
+    Ok(())
+}
+
+/// [`igemm_into`] into a fresh matrix.
+pub fn igemm(
+    xq: &QMatrix,
+    wq: &QMatrix,
+    ws: &mut Workspace,
+    threads: usize,
+) -> Result<Matrix, String> {
+    let mut out = Matrix::zeros(xq.rows(), wq.cols());
+    igemm_into(out.as_mut_slice(), xq, wq, ws, threads)?;
+    Ok(out)
+}
+
+/// One contiguous row chunk: k-blocked `i32` accumulation, then a
+/// single scale pass writing `acc * Δx_i * Δw_j` into the f32 output.
+#[allow(clippy::too_many_arguments)]
+fn chunk_kernel(
+    row0: usize,
+    out: &mut [f32],
+    acc: &mut [i32],
+    xcodes: &[i8],
+    wcodes: &[i8],
+    sx: &[f32],
+    sw: &[f32],
+    k: usize,
+    n: usize,
+) {
+    const KB: usize = 64;
+    debug_assert_eq!(out.len(), acc.len());
+    let rows = out.len() / n;
+    for kb in (0..k).step_by(KB) {
+        let kend = (kb + KB).min(k);
+        for i in 0..rows {
+            let arow = &xcodes[(row0 + i) * k..(row0 + i) * k + k];
+            let orow = &mut acc[i * n..(i + 1) * n];
+            for kk in kb..kend {
+                let av = arow[kk] as i32;
+                let brow = &wcodes[kk * n..(kk + 1) * n];
+                for (o, &b) in orow.iter_mut().zip(brow) {
+                    *o += av * b as i32;
+                }
+            }
+        }
+    }
+    for i in 0..rows {
+        let s = sx[row0 + i];
+        let arow = &acc[i * n..(i + 1) * n];
+        let orow = &mut out[i * n..(i + 1) * n];
+        for ((o, &a), &cw) in orow.iter_mut().zip(arow).zip(sw) {
+            *o = a as f32 * (s * cw);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{self, Granularity};
+    use crate::rng::Rng;
+
+    fn rand_matrix(rows: usize, cols: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        Matrix::from_vec(rows, cols, rng.normals_f32(rows * cols))
+    }
+
+    /// Relative Frobenius distance of two equally-shaped matrices.
+    fn rel_frob(a: &Matrix, b: &Matrix) -> f64 {
+        let dist = crate::tensor::frob_dist_sq(a.as_slice(), b.as_slice()).sqrt();
+        dist / a.frob().max(1e-12)
+    }
+
+    #[test]
+    fn igemm_matches_qdq_matmul_reference() {
+        for (m, k, n, bits, seed) in
+            [(8usize, 32usize, 6usize, 8u32, 1u64), (5, 17, 9, 4, 2), (12, 64, 16, 5, 3)]
+        {
+            let x = rand_matrix(m, k, seed);
+            let w = rand_matrix(k, n, seed + 50);
+            let qx = QMatrix::quantize(&x, bits, ScaleAxis::PerRow).unwrap();
+            let qw = QMatrix::quantize(&w, bits, ScaleAxis::PerCol).unwrap();
+            let mut ws = Workspace::new();
+            let got = igemm(&qx, &qw, &mut ws, 1).unwrap();
+            let want = quant::qdq(&x, bits, Granularity::PerToken)
+                .matmul(&quant::qdq(&w, bits, Granularity::PerChannel));
+            let rel = rel_frob(&want, &got);
+            assert!(rel < 1e-4, "bits {bits}: rel frobenius {rel}");
+        }
+    }
+
+    #[test]
+    fn thread_counts_are_exactly_identical() {
+        let x = rand_matrix(13, 40, 4);
+        let w = rand_matrix(40, 11, 5);
+        let qx = QMatrix::quantize(&x, 8, ScaleAxis::PerRow).unwrap();
+        let qw = QMatrix::quantize(&w, 4, ScaleAxis::PerCol).unwrap();
+        let mut ws = Workspace::new();
+        let serial = igemm(&qx, &qw, &mut ws, 1).unwrap();
+        for threads in [2usize, 3, 8, 64] {
+            let par = igemm(&qx, &qw, &mut ws, threads).unwrap();
+            // integer accumulation is associative: bit-identical, not
+            // merely close
+            assert_eq!(par.as_slice(), serial.as_slice(), "threads {threads}");
+        }
+    }
+
+    #[test]
+    fn packed_i4_operands_match_i8_storage() {
+        let x = rand_matrix(7, 24, 6);
+        let w = rand_matrix(24, 5, 7);
+        let mut ws = Workspace::new();
+        // force i8 storage at the same 4-bit grid via the workspace path
+        let qx8 = QMatrix::quantize_i8_with(&x, 4, ScaleAxis::PerRow, &mut ws).unwrap();
+        let qx4 = QMatrix::quantize(&x, 4, ScaleAxis::PerRow).unwrap();
+        assert!(qx4.is_packed() && !qx8.is_packed());
+        let qw4 = QMatrix::quantize(&w, 4, ScaleAxis::PerCol).unwrap();
+        let a = igemm(&qx8, &qw4, &mut ws, 1).unwrap();
+        let b = igemm(&qx4, &qw4, &mut ws, 2).unwrap();
+        assert_eq!(a.as_slice(), b.as_slice());
+    }
+
+    #[test]
+    fn steady_state_allocates_nothing() {
+        let x = rand_matrix(6, 16, 8);
+        let w = rand_matrix(16, 4, 9);
+        let qx = QMatrix::quantize(&x, 4, ScaleAxis::PerRow).unwrap();
+        let qw = QMatrix::quantize(&w, 4, ScaleAxis::PerCol).unwrap();
+        let mut ws = Workspace::new();
+        let mut out = vec![0.0f32; 6 * 4];
+        igemm_into(&mut out, &qx, &qw, &mut ws, 1).unwrap();
+        let (_, warm) = ws.stats();
+        for _ in 0..5 {
+            igemm_into(&mut out, &qx, &qw, &mut ws, 1).unwrap();
+        }
+        let (reuses, allocs) = ws.stats();
+        assert_eq!(allocs, warm, "steady-state igemm must not allocate");
+        assert!(reuses > 0);
+    }
+
+    #[test]
+    fn mismatched_inputs_are_named_errors() {
+        let x = rand_matrix(4, 8, 10);
+        let w = rand_matrix(8, 4, 11);
+        let qx = QMatrix::quantize(&x, 8, ScaleAxis::PerRow).unwrap();
+        let qw = QMatrix::quantize(&w, 8, ScaleAxis::PerCol).unwrap();
+        let mut ws = Workspace::new();
+        // wrong granularities
+        let qx_col = QMatrix::quantize(&x, 8, ScaleAxis::PerCol).unwrap();
+        assert!(igemm(&qx_col, &qw, &mut ws, 1).unwrap_err().contains("per-row"));
+        let qw_row = QMatrix::quantize(&w, 8, ScaleAxis::PerRow).unwrap();
+        assert!(igemm(&qx, &qw_row, &mut ws, 1).unwrap_err().contains("per-column"));
+        // wrong inner dims
+        let w_bad = QMatrix::quantize(&rand_matrix(6, 4, 12), 8, ScaleAxis::PerCol).unwrap();
+        assert!(igemm(&qx, &w_bad, &mut ws, 1).unwrap_err().contains("inner dims"));
+        // wrong output length
+        let mut short = vec![0.0f32; 3];
+        assert!(igemm_into(&mut short, &qx, &qw, &mut ws, 1).unwrap_err().contains("output"));
+    }
+
+    #[test]
+    fn zero_sized_shapes_are_fine() {
+        let x = Matrix::zeros(0, 8);
+        let w = rand_matrix(8, 4, 13);
+        let qx = QMatrix::quantize(&x, 8, ScaleAxis::PerRow).unwrap();
+        let qw = QMatrix::quantize(&w, 8, ScaleAxis::PerCol).unwrap();
+        let mut ws = Workspace::new();
+        assert_eq!(igemm(&qx, &qw, &mut ws, 2).unwrap().shape(), (0, 4));
+    }
+}

@@ -12,8 +12,9 @@
 //! |---|---|
 //! | [`par`] | scoped-thread row-parallel matmul / transpose / apply primitives |
 //! | [`fwht`] | in-place fast Walsh–Hadamard rotation, O(d log d) per row |
+//! | [`igemm`] | `i8 × i8 → i32`-accumulated integer GEMM over [`crate::qtensor::QMatrix`] codes |
 //! | [`fused`] | single-pass analyze computing all four mode errors with shared intermediates |
-//! | [`workspace`] | reusable per-worker scratch buffers (matrix-sized scratch fully pooled in steady state) |
+//! | [`workspace`] | reusable per-worker scratch buffers (f32 + typed i8/i32 pools, fully pooled in steady state) |
 //!
 //! Layering: `par` and `workspace` sit directly on `tensor`; `fwht`
 //! reuses the Sylvester ⊗ Paley factorization of
@@ -26,5 +27,6 @@
 
 pub mod fused;
 pub mod fwht;
+pub mod igemm;
 pub mod par;
 pub mod workspace;

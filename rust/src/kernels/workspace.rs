@@ -13,17 +13,26 @@
 //! one-off giant request cannot pin unbounded memory.  The counters
 //! ([`Workspace::stats`]) let tests pin the "no allocation in steady
 //! state" claim.
+//!
+//! Besides the f32 pool, the workspace keeps typed side pools for the
+//! integer execution path ([`crate::kernels::igemm`]): `i8` code
+//! buffers (quantized activation rows, unpacked i4 weights) and `i32`
+//! GEMM accumulators, with the same best-fit/bounded semantics and the
+//! shared byte ceiling.
 
 use crate::tensor::Matrix;
 
-/// Most buffers retained for reuse; extra checkins are simply dropped.
+/// Most buffers retained for reuse (per typed pool); extra checkins are
+/// simply dropped.
 const MAX_POOLED: usize = 32;
 
-/// Byte ceiling on retained capacity: a one-off giant request must not
-/// pin hundreds of MB in a long-lived worker once traffic shrinks.
+/// Byte ceiling on retained capacity across all typed pools: a one-off
+/// giant request must not pin hundreds of MB in a long-lived worker
+/// once traffic shrinks.
 const MAX_POOLED_BYTES: usize = 64 << 20;
 
-/// Checkout/checkin pool of reusable `f32` buffers.
+/// Checkout/checkin pool of reusable `f32` buffers (plus typed `i8` /
+/// `i32` side pools for the integer kernels).
 ///
 /// ```
 /// use smoothrot::kernels::workspace::Workspace;
@@ -38,10 +47,59 @@ const MAX_POOLED_BYTES: usize = 64 << 20;
 #[derive(Debug, Default)]
 pub struct Workspace {
     pool: Vec<Vec<f32>>,
-    /// Total capacity currently parked in `pool`, in bytes.
+    pool_i8: Vec<Vec<i8>>,
+    pool_i32: Vec<Vec<i32>>,
+    /// Total capacity currently parked across all pools, in bytes.
     pooled_bytes: usize,
     reuses: u64,
     allocs: u64,
+}
+
+/// Best-fit checkout shared by every typed pool: pop the
+/// smallest-capacity pooled buffer that fits, allocating only when none
+/// does.  Returned buffers are zero-filled to exactly `len`.
+fn take_pooled<T: Clone + Default>(
+    pool: &mut Vec<Vec<T>>,
+    pooled_bytes: &mut usize,
+    reuses: &mut u64,
+    allocs: &mut u64,
+    len: usize,
+) -> Vec<T> {
+    let mut best: Option<(usize, usize)> = None; // (index, capacity)
+    for (i, b) in pool.iter().enumerate() {
+        let cap = b.capacity();
+        let better = match best {
+            None => true,
+            Some((_, bc)) => cap < bc,
+        };
+        if cap >= len && better {
+            best = Some((i, cap));
+        }
+    }
+    match best {
+        Some((i, cap)) => {
+            *reuses += 1;
+            *pooled_bytes -= cap * std::mem::size_of::<T>();
+            let mut b = pool.swap_remove(i);
+            b.clear();
+            b.resize(len, T::default());
+            b
+        }
+        None => {
+            *allocs += 1;
+            vec![T::default(); len]
+        }
+    }
+}
+
+/// Checkin shared by every typed pool: retain the capacity under the
+/// count and byte ceilings, drop it otherwise.
+fn give_pooled<T>(pool: &mut Vec<Vec<T>>, pooled_bytes: &mut usize, buf: Vec<T>) {
+    let bytes = buf.capacity() * std::mem::size_of::<T>();
+    if bytes > 0 && pool.len() < MAX_POOLED && *pooled_bytes + bytes <= MAX_POOLED_BYTES {
+        *pooled_bytes += bytes;
+        pool.push(buf);
+    }
 }
 
 impl Workspace {
@@ -54,31 +112,7 @@ impl Workspace {
     /// best-fitting pooled buffer when one has enough capacity,
     /// allocating only otherwise.
     pub fn take(&mut self, len: usize) -> Vec<f32> {
-        let mut best: Option<(usize, usize)> = None; // (index, capacity)
-        for (i, b) in self.pool.iter().enumerate() {
-            let cap = b.capacity();
-            let better = match best {
-                None => true,
-                Some((_, bc)) => cap < bc,
-            };
-            if cap >= len && better {
-                best = Some((i, cap));
-            }
-        }
-        match best {
-            Some((i, cap)) => {
-                self.reuses += 1;
-                self.pooled_bytes -= cap * std::mem::size_of::<f32>();
-                let mut b = self.pool.swap_remove(i);
-                b.clear();
-                b.resize(len, 0.0);
-                b
-            }
-            None => {
-                self.allocs += 1;
-                vec![0.0; len]
-            }
-        }
+        take_pooled(&mut self.pool, &mut self.pooled_bytes, &mut self.reuses, &mut self.allocs, len)
     }
 
     /// A buffer pre-filled with a copy of `src`.
@@ -103,14 +137,7 @@ impl Workspace {
     /// beyond the count or byte ceilings are dropped on the floor, so
     /// retained memory is bounded regardless of peak request size.
     pub fn give(&mut self, buf: Vec<f32>) {
-        let bytes = buf.capacity() * std::mem::size_of::<f32>();
-        if bytes > 0
-            && self.pool.len() < MAX_POOLED
-            && self.pooled_bytes + bytes <= MAX_POOLED_BYTES
-        {
-            self.pooled_bytes += bytes;
-            self.pool.push(buf);
-        }
+        give_pooled(&mut self.pool, &mut self.pooled_bytes, buf);
     }
 
     /// [`Workspace::give`] for a matrix checkout.
@@ -118,12 +145,49 @@ impl Workspace {
         self.give(m.into_vec());
     }
 
+    /// A zero-filled `i8` buffer of exactly `len` elements — the
+    /// integer-path twin of [`Workspace::take`] (quantized activation
+    /// codes, unpacked i4 weights).
+    pub fn take_i8(&mut self, len: usize) -> Vec<i8> {
+        take_pooled(
+            &mut self.pool_i8,
+            &mut self.pooled_bytes,
+            &mut self.reuses,
+            &mut self.allocs,
+            len,
+        )
+    }
+
+    /// Return an `i8` buffer's capacity to its pool, under the same
+    /// count and byte ceilings as [`Workspace::give`].
+    pub fn give_i8(&mut self, buf: Vec<i8>) {
+        give_pooled(&mut self.pool_i8, &mut self.pooled_bytes, buf);
+    }
+
+    /// A zero-filled `i32` buffer of exactly `len` elements — the
+    /// integer GEMM's accumulator checkout.
+    pub fn take_i32(&mut self, len: usize) -> Vec<i32> {
+        take_pooled(
+            &mut self.pool_i32,
+            &mut self.pooled_bytes,
+            &mut self.reuses,
+            &mut self.allocs,
+            len,
+        )
+    }
+
+    /// Return an `i32` buffer's capacity to its pool, under the same
+    /// count and byte ceilings as [`Workspace::give`].
+    pub fn give_i32(&mut self, buf: Vec<i32>) {
+        give_pooled(&mut self.pool_i32, &mut self.pooled_bytes, buf);
+    }
+
     /// `(reused, freshly allocated)` checkout counters since creation.
     pub fn stats(&self) -> (u64, u64) {
         (self.reuses, self.allocs)
     }
 
-    /// Buffers currently parked in the pool.
+    /// Buffers currently parked in the f32 pool.
     pub fn pooled(&self) -> usize {
         self.pool.len()
     }
@@ -198,6 +262,26 @@ mod tests {
             ws.give(b);
         }
         assert!(ws.pooled() <= MAX_POOLED);
+    }
+
+    #[test]
+    fn typed_pools_reuse_and_zero_fill() {
+        let mut ws = Workspace::new();
+        let mut a = ws.take_i8(16);
+        a[0] = 7;
+        ws.give_i8(a);
+        let a2 = ws.take_i8(8);
+        assert_eq!(a2.len(), 8);
+        assert!(a2.iter().all(|&v| v == 0), "recycled i8 buffer must come back zeroed");
+        let mut b = ws.take_i32(16);
+        b[3] = -5;
+        ws.give_i32(b);
+        let b2 = ws.take_i32(16);
+        assert!(b2.iter().all(|&v| v == 0), "recycled i32 buffer must come back zeroed");
+        let (reuses, allocs) = ws.stats();
+        assert_eq!((reuses, allocs), (2, 2));
+        // typed pools are independent of the f32 pool count
+        assert_eq!(ws.pooled(), 0);
     }
 
     #[test]

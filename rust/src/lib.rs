@@ -42,7 +42,8 @@
 //! | [`outlier`] | massive-outlier token model and Eq. 6–9 predictions |
 //! | [`metrics`] | channel magnitudes, quantization difficulty, kurtosis, Pearson, percentiles |
 //! | [`synth`] | native activation generator mirroring SynLlama's profiles |
-//! | [`kernels`] | fused multi-threaded kernel engine: row-parallel matmul, FWHT rotation, single-pass analyze, workspace reuse |
+//! | [`qtensor`] | integer tensor substrate: i8 / bit-packed i4 codes + per-token/per-channel scales |
+//! | [`kernels`] | fused multi-threaded kernel engine: row-parallel matmul, FWHT rotation, integer GEMM, single-pass analyze, workspace reuse |
 //! | [`calib`] | calibration subsystem: streaming channel stats, plan search, versioned plan artifacts, serving-side plan registry |
 //! | [`jsonio`] | minimal JSON value model + parser + writer |
 //! | [`config`] | typed experiment configuration + file parser |
@@ -68,6 +69,7 @@ pub mod metrics;
 pub mod outlier;
 pub mod pipeline;
 pub mod policy;
+pub mod qtensor;
 pub mod quant;
 pub mod report;
 pub mod rng;

@@ -77,7 +77,8 @@ fn app() -> App {
                 .opt("bits-grid", "comma-separated bit widths to emit entries for", Some("4"))
                 .opt("sr-margin", "min error ratio before adopting smooth-rotation", Some("1.25"))
                 .opt("threads", "math threads, 0 = all cores", Some("1"))
-                .flag("selfcheck", "pin the plan against policy::recommend on the same workload"),
+                .flag("selfcheck", "pin the plan against policy::recommend on the same workload")
+                .flag("exec-check", "re-run each chosen entry through the real integer kernels and report executed vs predicted error"),
             Command::new("serve", "batched multi-tenant serving demo over the serving core")
                 .opt("backend", "native | pjrt", Some("native"))
                 .opt("artifacts", "artifacts directory (pjrt backend)", Some("artifacts"))
@@ -90,6 +91,7 @@ fn app() -> App {
                 .opt("max-batch", "max jobs coalesced into one executor dispatch", Some("8"))
                 .opt("queue-depth", "per-tenant admission queue capacity", Some("32"))
                 .opt("rows", "token rows per synthetic request (native backend)", Some("32"))
+                .opt("exec", "execution path on plan-covered cells: f32 (simulated qdq) | int8 (real integer GEMM over weights pre-quantized at plan load; needs --plan)", Some("f32"))
                 .flag("reject", "reject instead of block when a tenant queue is full"),
         ],
     }
@@ -308,11 +310,13 @@ fn cmd_sweep_alpha(p: &smoothrot::cli::Parsed) -> Result<()> {
 
 fn cmd_sweep_bits(p: &smoothrot::cli::Parsed) -> Result<()> {
     let rt = Runtime::new(p.get_or("artifacts", "artifacts"))?;
-    let grid: Vec<u32> = p
-        .get_or("grid", "4")
-        .split(',')
-        .map(|s| s.trim().parse::<u32>().map_err(|_| anyhow!("bad bits {s:?}")))
-        .collect::<Result<_>>()?;
+    let grid: Vec<u32> =
+        p.get_u32_list("grid").map_err(|e| anyhow!(e))?.unwrap_or_else(|| vec![4]);
+    for &b in &grid {
+        // validate up front: out-of-range CLI bits (e.g. --grid 1) are
+        // a named error here, not a qmax assert deep in the sweep
+        smoothrot::quant::validate_bits(b).map_err(|e| anyhow!("sweep-bits: --grid: {e}"))?;
+    }
     let threads = p.get_usize("threads").map_err(|e| anyhow!(e))?.unwrap_or(0);
     let workload = pipeline::load_workload(&rt)?;
     let sweep = pipeline::bits_sweep(&rt, &workload, &grid, threads)?;
@@ -414,11 +418,11 @@ fn cmd_calibrate(p: &smoothrot::cli::Parsed) -> Result<()> {
         .split(',')
         .map(|s| s.trim().parse::<f64>().map_err(|_| anyhow!("calibrate: bad alpha {s:?}")))
         .collect::<Result<_>>()?;
-    let bits_grid: Vec<u32> = p
-        .get_or("bits-grid", "4")
-        .split(',')
-        .map(|s| s.trim().parse::<u32>().map_err(|_| anyhow!("calibrate: bad bits {s:?}")))
-        .collect::<Result<_>>()?;
+    let bits_grid: Vec<u32> =
+        p.get_u32_list("bits-grid").map_err(|e| anyhow!(e))?.unwrap_or_else(|| vec![4]);
+    for &b in &bits_grid {
+        smoothrot::quant::validate_bits(b).map_err(|e| anyhow!("calibrate: --bits-grid: {e}"))?;
+    }
     let cfg = CalibrateConfig {
         layers: p.get_usize("layers").map_err(|e| anyhow!(e))?.unwrap_or(8),
         rows_per_batch: p.get_usize("rows").map_err(|e| anyhow!(e))?.unwrap_or(32),
@@ -431,6 +435,7 @@ fn cmd_calibrate(p: &smoothrot::cli::Parsed) -> Result<()> {
             bits_grid,
             sr_margin: p.get_f64("sr-margin").map_err(|e| anyhow!(e))?.unwrap_or(1.25),
             threads: p.get_usize("threads").map_err(|e| anyhow!(e))?.unwrap_or(1),
+            exec_check: p.has_flag("exec-check"),
         },
     };
     let out_path = p.get_or("out", "reports/plan.json");
@@ -451,6 +456,43 @@ fn cmd_calibrate(p: &smoothrot::cli::Parsed) -> Result<()> {
     );
     println!("{}", run.plan.summary());
 
+    if !run.executed.is_empty() {
+        let mut max_rel = 0.0f64;
+        let mut worst = None;
+        let (mut checked, mut skipped) = (0usize, 0usize);
+        for (module, layer, bits, predicted, exec) in &run.executed {
+            if exec.is_nan() {
+                // bits > 8 cannot execute in i8 storage
+                skipped += 1;
+                continue;
+            }
+            checked += 1;
+            let rel = (predicted - exec).abs() / predicted.abs().max(1e-12);
+            if rel >= max_rel {
+                max_rel = rel;
+                worst = Some((module.clone(), *layer, *bits));
+            }
+        }
+        println!(
+            "exec-check: {checked} entries re-executed on the integer path{}; max \
+             |executed - predicted| / predicted = {max_rel:.2e}{}",
+            if skipped > 0 {
+                format!(" ({skipped} skipped: bits > 8 have no integer storage)")
+            } else {
+                String::new()
+            },
+            worst
+                .map(|(m, l, b)| format!(" ({m} layer {l} @ {b} bits)"))
+                .unwrap_or_default()
+        );
+        if checked == 0 {
+            bail!("exec-check: no entry was executable in integers (every bit width > 8)");
+        }
+        if max_rel > 0.05 {
+            bail!("exec-check: executed integer error drifted {max_rel:.2e} from the prediction");
+        }
+    }
+
     if p.has_flag("selfcheck") {
         check_plan_matches_policy(&run).map_err(|e| anyhow!(e))?;
         println!("selfcheck OK: plan matches policy::recommend on the same workload");
@@ -464,8 +506,8 @@ fn cmd_calibrate(p: &smoothrot::cli::Parsed) -> Result<()> {
 fn cmd_serve(p: &smoothrot::cli::Parsed) -> Result<()> {
     use smoothrot::coordinator::Job;
     use smoothrot::serve::{
-        skewed_tenant, synthetic_requests, Admission, BatchExecutor, NativeBatchExecutor,
-        Response, ServeConfig, ServeMetrics, Server, SubmitError, TenantId,
+        skewed_tenant, synthetic_requests, Admission, BatchExecutor, ExecMode,
+        NativeBatchExecutor, Response, ServeConfig, ServeMetrics, Server, SubmitError, TenantId,
     };
 
     /// Start a server, submit the stream (printing the first few
@@ -520,6 +562,7 @@ fn cmd_serve(p: &smoothrot::cli::Parsed) -> Result<()> {
     let layers = p.get_usize("layers").map_err(|e| anyhow!(e))?.unwrap_or(32).max(1);
     let threads = p.get_usize("threads").map_err(|e| anyhow!(e))?.unwrap_or(1);
     let plan_path = p.get("plan").map(str::to_string);
+    let exec = ExecMode::from_name(&p.get_or("exec", "f32")).map_err(|e| anyhow!("serve: {e}"))?;
     let cfg = ServeConfig {
         workers: p.get_usize("workers").map_err(|e| anyhow!(e))?.unwrap_or(2),
         max_batch: p.get_usize("max-batch").map_err(|e| anyhow!(e))?.unwrap_or(8),
@@ -530,14 +573,18 @@ fn cmd_serve(p: &smoothrot::cli::Parsed) -> Result<()> {
     if plan_path.is_some() && backend != Backend::Native {
         bail!("serve: --plan is native-only (the plan pre-resolves native transforms)");
     }
+    if exec == ExecMode::Int8 && plan_path.is_none() {
+        bail!("serve: --exec int8 needs --plan (weights are pre-quantized at plan load)");
+    }
 
     println!(
         "serve: {n_requests} requests, {n_tenants} tenants, {} workers x {threads} math \
-         threads, max-batch {}, queue-depth {}, {:?} admission, backend {backend:?}",
+         threads, max-batch {}, queue-depth {}, {:?} admission, backend {backend:?}, exec {}",
         cfg.workers,
         cfg.max_batch,
         cfg.queue_depth,
         cfg.admission,
+        exec.name(),
     );
 
     let (responses, metrics) = match backend {
@@ -546,7 +593,11 @@ fn cmd_serve(p: &smoothrot::cli::Parsed) -> Result<()> {
             use std::sync::atomic::{AtomicBool, Ordering};
             use std::sync::Arc;
 
-            let requests = synthetic_requests(n_requests, n_tenants, rows, layers, 2025);
+            // the request stream's base seed also fixes the per-layer
+            // serving weights (synth::layer_weight) that int8 preload
+            // quantizes — keep the two in lockstep
+            let stream_seed = 2025u64;
+            let requests = synthetic_requests(n_requests, n_tenants, rows, layers, stream_seed);
             match plan_path {
                 None => run_serve(cfg, requests, move |_| {
                     Ok(NativeBatchExecutor::with_threads(threads))
@@ -559,6 +610,27 @@ fn cmd_serve(p: &smoothrot::cli::Parsed) -> Result<()> {
                         registry.len(),
                         registry.content_hash()
                     );
+                    if exec == ExecMode::Int8 {
+                        // pre-quantize every covered layer's transformed
+                        // weight once, i8/i4 + per-channel scales; the
+                        // reload poller below re-runs this automatically
+                        // after a hot swap
+                        let loaded = registry
+                            .set_weight_provider(Box::new(move |module, layer| {
+                                smoothrot::synth::layer_weight(module, layer, stream_seed)
+                            }))
+                            .map_err(|e| anyhow!(e))?;
+                        println!(
+                            "int8: pre-quantized {loaded} planned weights (i8 codes + \
+                             per-channel scales)"
+                        );
+                        if loaded == 0 {
+                            bail!(
+                                "serve: --exec int8 pre-quantized zero weights — are all plan \
+                                 bit widths wider than 8?"
+                            );
+                        }
+                    }
                     // SIGHUP-free hot reload: poll the plan file's
                     // mtime while the server runs and swap in changed
                     // content atomically.
@@ -582,7 +654,11 @@ fn cmd_serve(p: &smoothrot::cli::Parsed) -> Result<()> {
                     };
                     let exec_registry = Arc::clone(&registry);
                     let out = run_serve(cfg, requests, move |_| {
-                        Ok(NativeBatchExecutor::with_plan(Arc::clone(&exec_registry), threads))
+                        Ok(NativeBatchExecutor::with_plan_exec(
+                            Arc::clone(&exec_registry),
+                            threads,
+                            exec,
+                        ))
                     });
                     stop.store(true, Ordering::Relaxed);
                     let _ = poller.join();
@@ -601,6 +677,19 @@ fn cmd_serve(p: &smoothrot::cli::Parsed) -> Result<()> {
                             "serve: the plan covered zero requests — keep serve's --layers \
                              within the calibrated depth and the bit widths aligned"
                         );
+                    }
+                    if exec == ExecMode::Int8 {
+                        let (executed, degraded) = registry.int8_stats();
+                        println!(
+                            "int8 exec: {executed} requests ran the integer GEMM, {degraded} \
+                             degraded to the f32 planned path"
+                        );
+                        if executed == 0 {
+                            bail!(
+                                "serve: --exec int8 executed zero integer GEMMs — the \
+                                 pre-quantized weights never matched the request shapes"
+                            );
+                        }
                     }
                     out
                 }

@@ -247,6 +247,12 @@ pub struct CalibrationRun {
     /// `analyze_all_modes` output per cell at `(alphas[0],
     /// bits_grid[0])`.
     pub grid: ExperimentGrid,
+    /// `(module, layer, bits, predicted, executed)` rows when
+    /// [`SearchConfig::exec_check`] re-evaluated the chosen entries
+    /// through the real integer kernels (empty otherwise) — calibration
+    /// reporting the error the deployment will *execute*, not just the
+    /// f32 simulation.
+    pub executed: Vec<(String, usize, u32, f64, f64)>,
 }
 
 /// Calibrate over the native synthetic workload: per (module, layer)
@@ -264,6 +270,7 @@ pub fn calibrate_synthetic(cfg: &CalibrateConfig) -> Result<CalibrationRun> {
     let mut cache = RotationCache::new();
     let mut scratch = Workspace::new();
     let mut entries = Vec::new();
+    let mut executed = Vec::new();
     let mut grid: Option<ExperimentGrid> = None;
 
     for module in crate::MODULES {
@@ -329,6 +336,9 @@ pub fn calibrate_synthetic(cfg: &CalibrateConfig) -> Result<CalibrationRun> {
                     }
                 }
             }
+            for (e, &exec) in found.entries.iter().zip(&found.executed) {
+                executed.push((e.module.clone(), e.layer, e.bits, e.predicted_error, exec));
+            }
             entries.extend(found.entries);
         }
     }
@@ -343,7 +353,7 @@ pub fn calibrate_synthetic(cfg: &CalibrateConfig) -> Result<CalibrationRun> {
         },
         entries,
     };
-    Ok(CalibrationRun { plan, grid: grid.unwrap_or_else(|| ExperimentGrid::new(0)) })
+    Ok(CalibrationRun { plan, grid: grid.unwrap_or_else(|| ExperimentGrid::new(0)), executed })
 }
 
 /// The calibrate-vs-analyze equivalence pin: on a single-alpha grid the

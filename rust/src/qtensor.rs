@@ -1,0 +1,440 @@
+//! Integer tensor substrate — the storage side of real integer
+//! execution.
+//!
+//! Everything upstream of this module *simulates* quantization: the
+//! `quant::qdq_*` kernels round onto the Eq. 1 grid and immediately
+//! return to f32, so the hot-path matmuls stay float.  A [`QMatrix`]
+//! instead **keeps** the integer codes: row-major `i8` values (or
+//! bit-packed `i4` nibbles for 4-bit grids) plus the per-token or
+//! per-channel f32 grid steps, exactly the `(q, Δ)` factorization of
+//! Eq. 1.  The companion GEMM ([`crate::kernels::igemm`]) multiplies the
+//! codes in `i32` and applies the scale product `Δx_i · Δw_j` once per
+//! output element.
+//!
+//! The quantizer reuses the RTN symmetric grid of [`crate::quant`]
+//! verbatim — same `round(v / Δ)` rounding, same per-token
+//! ([`crate::quant::token_scales`]) and per-channel
+//! ([`crate::quant::channel_scales`]) steps — so
+//! [`QMatrix::dequantize`] reproduces `quant::qdq` **bit for bit**:
+//! `round(v/Δ)` saturates inside the grid (±qmax) by construction, and
+//! `q as f32 * Δ` is the same multiply `qdq_val` performs.  The
+//! equivalence proptests (`rust/tests/proptest_igemm.rs`) pin both that
+//! identity and the integer-GEMM-vs-fake-quant agreement.
+//!
+//! [`PlannedWeight`] is the serving-side unit: a weight matrix
+//! transformed per its calibration-plan entry (Eq. 4 smoothing rows,
+//! Eq. 3 rotation) and quantized per-channel **once** — the plan
+//! registry builds one per covered entry at load time so requests only
+//! ever quantize their activation rows.
+
+use crate::kernels::workspace::Workspace;
+use crate::metrics::{self, Channels};
+use crate::quant;
+use crate::tensor::Matrix;
+use crate::transforms::Rotation;
+
+/// Which axis the grid steps run along.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScaleAxis {
+    /// One grid step per row — the paper's per-token activation setting.
+    PerRow,
+    /// One grid step per column — the paper's per-channel weight setting.
+    PerCol,
+}
+
+/// Integer value storage of a [`QMatrix`].
+#[derive(Clone, Debug)]
+pub enum QStorage {
+    /// One byte per value.
+    I8(Vec<i8>),
+    /// Two 4-bit two's-complement nibbles per byte, packed in flat
+    /// row-major order (low nibble first); see [`pack_i4`].
+    I4(Vec<u8>),
+}
+
+/// Pack a flat slice of 4-bit values (each in `-8..=7`) into nibbles:
+/// value `2t` lands in the low nibble of byte `t`, value `2t + 1` in
+/// the high nibble.  An odd trailing value leaves the high nibble zero.
+pub fn pack_i4(vals: &[i8]) -> Vec<u8> {
+    let mut out = vec![0u8; (vals.len() + 1) / 2];
+    for (idx, &v) in vals.iter().enumerate() {
+        debug_assert!((-8..=7).contains(&v), "i4 value out of range: {v}");
+        let nib = (v as u8) & 0x0F;
+        if idx % 2 == 0 {
+            out[idx / 2] |= nib;
+        } else {
+            out[idx / 2] |= nib << 4;
+        }
+    }
+    out
+}
+
+/// Inverse of [`pack_i4`]: sign-extend `len` nibbles back to `i8`.
+pub fn unpack_i4(packed: &[u8], len: usize, out: &mut [i8]) {
+    assert!(out.len() >= len, "unpack_i4 output too short");
+    assert!(packed.len() >= (len + 1) / 2, "unpack_i4 input too short");
+    for (idx, o) in out.iter_mut().take(len).enumerate() {
+        let byte = packed[idx / 2];
+        let nib = if idx % 2 == 0 { byte & 0x0F } else { byte >> 4 };
+        // shift the nibble to the top of the byte, then arithmetic
+        // shift back down to sign-extend 4-bit two's complement
+        *o = ((nib << 4) as i8) >> 4;
+    }
+}
+
+/// A quantized matrix: integer codes plus the f32 grid steps that map
+/// them back to values (`value = code * Δ`), i.e. Eq. 1 held in its
+/// factored form instead of collapsed back to f32.
+#[derive(Clone, Debug)]
+pub struct QMatrix {
+    rows: usize,
+    cols: usize,
+    bits: u32,
+    axis: ScaleAxis,
+    /// Grid steps Δ: one per row ([`ScaleAxis::PerRow`]) or per column
+    /// ([`ScaleAxis::PerCol`]).
+    scales: Vec<f32>,
+    data: QStorage,
+}
+
+/// Quantize one row-major matrix into `out` under the given steps.
+fn quantize_flat(x: &Matrix, deltas: &[f32], axis: ScaleAxis, qm: f32, out: &mut [i8]) {
+    let (rows, cols) = x.shape();
+    debug_assert_eq!(out.len(), rows * cols);
+    for i in 0..rows {
+        let row = x.row(i);
+        let orow = &mut out[i * cols..(i + 1) * cols];
+        match axis {
+            ScaleAxis::PerRow => {
+                let d = deltas[i];
+                if d > 0.0 {
+                    for (o, &v) in orow.iter_mut().zip(row) {
+                        *o = (v / d).round().clamp(-qm, qm) as i8;
+                    }
+                } else {
+                    orow.fill(0);
+                }
+            }
+            ScaleAxis::PerCol => {
+                for ((o, &v), &d) in orow.iter_mut().zip(row).zip(deltas) {
+                    *o = if d > 0.0 { (v / d).round().clamp(-qm, qm) as i8 } else { 0 };
+                }
+            }
+        }
+    }
+}
+
+impl QMatrix {
+    /// The RTN symmetric grid steps of `x` along `axis` — identical to
+    /// [`crate::quant::token_scales`] / [`crate::quant::channel_scales`].
+    fn grid(x: &Matrix, bits: u32, axis: ScaleAxis) -> Result<Vec<f32>, String> {
+        quant::validate_bits(bits).map_err(|e| e.to_string())?;
+        if bits > 8 {
+            return Err(format!(
+                "integer execution stores i8/i4 codes: bits {bits} exceeds 8"
+            ));
+        }
+        Ok(match axis {
+            ScaleAxis::PerRow => quant::token_scales(x, bits),
+            ScaleAxis::PerCol => quant::channel_scales(x, bits),
+        })
+    }
+
+    /// One shared quantization body: fill the caller-supplied code
+    /// buffer (owned or workspace-pooled) under the Eq. 1 grid.
+    fn quantize_into(
+        x: &Matrix,
+        bits: u32,
+        axis: ScaleAxis,
+        mut codes: Vec<i8>,
+    ) -> Result<QMatrix, String> {
+        let scales = Self::grid(x, bits, axis)?;
+        let qm = quant::qmax(bits);
+        let (rows, cols) = x.shape();
+        debug_assert_eq!(codes.len(), rows * cols);
+        quantize_flat(x, &scales, axis, qm, &mut codes);
+        Ok(QMatrix { rows, cols, bits, axis, scales, data: QStorage::I8(codes) })
+    }
+
+    /// Quantize `x` onto the symmetric b-bit grid, keeping the codes:
+    /// bit-packed `i4` storage for `bits == 4`, plain `i8` otherwise
+    /// (`bits` must be in `2..=8`).
+    pub fn quantize(x: &Matrix, bits: u32, axis: ScaleAxis) -> Result<QMatrix, String> {
+        let mut q = Self::quantize_i8(x, bits, axis)?;
+        if bits == 4 {
+            if let QStorage::I8(codes) = &q.data {
+                q.data = QStorage::I4(pack_i4(codes));
+            }
+        }
+        Ok(q)
+    }
+
+    /// [`QMatrix::quantize`] forced to plain `i8` storage regardless of
+    /// bit width — for operands that live on the GEMM hot path, where a
+    /// per-call nibble unpack would cost more than the halved memory
+    /// saves (e.g. planned serving weights, multiplied every request).
+    pub fn quantize_i8(x: &Matrix, bits: u32, axis: ScaleAxis) -> Result<QMatrix, String> {
+        let len = x.rows() * x.cols();
+        Self::quantize_into(x, bits, axis, vec![0i8; len])
+    }
+
+    /// [`QMatrix::quantize_i8`] with the code buffer drawn from the
+    /// caller's [`Workspace`] — the per-request activation path, where
+    /// the buffer is pooled and only the O(rows) scale vector
+    /// allocates.  Return the buffer with [`QMatrix::recycle`].
+    pub fn quantize_i8_with(
+        x: &Matrix,
+        bits: u32,
+        axis: ScaleAxis,
+        ws: &mut Workspace,
+    ) -> Result<QMatrix, String> {
+        let codes = ws.take_i8(x.rows() * x.cols());
+        Self::quantize_into(x, bits, axis, codes)
+    }
+
+    /// Return a workspace-backed code buffer to its pool (packed `i4`
+    /// storage is simply dropped).
+    pub fn recycle(self, ws: &mut Workspace) {
+        if let QStorage::I8(codes) = self.data {
+            ws.give_i8(codes);
+        }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    /// Grid bit width.
+    pub fn bits(&self) -> u32 {
+        self.bits
+    }
+
+    /// Which axis the grid steps run along.
+    pub fn axis(&self) -> ScaleAxis {
+        self.axis
+    }
+
+    /// Grid steps Δ (length `rows` or `cols` per [`QMatrix::axis`]).
+    pub fn scales(&self) -> &[f32] {
+        &self.scales
+    }
+
+    /// Whether the codes are bit-packed `i4` nibbles.
+    pub fn is_packed(&self) -> bool {
+        matches!(self.data, QStorage::I4(_))
+    }
+
+    /// Borrow the codes directly when stored as plain `i8`.
+    pub fn i8_codes(&self) -> Option<&[i8]> {
+        match &self.data {
+            QStorage::I8(v) => Some(v),
+            QStorage::I4(_) => None,
+        }
+    }
+
+    /// Write all `rows * cols` codes into `out` as `i8`, unpacking
+    /// nibbles when the storage is `i4`.
+    pub fn unpack_into(&self, out: &mut [i8]) {
+        let len = self.rows * self.cols;
+        assert!(out.len() >= len, "unpack_into output too short");
+        match &self.data {
+            QStorage::I8(v) => out[..len].copy_from_slice(v),
+            QStorage::I4(packed) => unpack_i4(packed, len, out),
+        }
+    }
+
+    /// Map the codes back to f32 — **bit-identical** to
+    /// [`crate::quant::qdq`] at the matching granularity, because the
+    /// codes are the same `round(v/Δ)` and the dequantizing multiply is
+    /// the same `q * Δ` (see the module docs for why saturation never
+    /// fires inside the grid).
+    pub fn dequantize(&self) -> Matrix {
+        let len = self.rows * self.cols;
+        let mut codes = vec![0i8; len];
+        self.unpack_into(&mut codes);
+        let mut data = vec![0.0f32; len];
+        match self.axis {
+            ScaleAxis::PerRow => {
+                for i in 0..self.rows {
+                    let d = self.scales[i];
+                    for j in 0..self.cols {
+                        data[i * self.cols + j] = codes[i * self.cols + j] as f32 * d;
+                    }
+                }
+            }
+            ScaleAxis::PerCol => {
+                for i in 0..self.rows {
+                    for (j, &d) in self.scales.iter().enumerate() {
+                        data[i * self.cols + j] = codes[i * self.cols + j] as f32 * d;
+                    }
+                }
+            }
+        }
+        Matrix::from_vec(self.rows, self.cols, data)
+    }
+}
+
+/// A serving-ready weight: transformed per its calibration-plan entry
+/// and quantized per-channel **once**, plus the transformed weight's
+/// difficulty metric so the integer request path never needs the f32
+/// weight again.  Codes are kept as plain `i8` even for 4-bit grids —
+/// this operand is multiplied on every request, so GEMM-ready beats
+/// half-sized (packed-i4 [`QMatrix::quantize`] remains the at-rest /
+/// artifact form).
+#[derive(Clone, Debug)]
+pub struct PlannedWeight {
+    /// Per-channel quantized transformed weight (always `i8` codes).
+    pub qw: QMatrix,
+    /// `metrics::quant_difficulty` of the transformed f32 weight,
+    /// captured at preparation time (the integer path reports it
+    /// without re-materializing the transformed weight).
+    pub w_difficulty: f64,
+}
+
+impl PlannedWeight {
+    /// Quantize an already-transformed weight per-channel at `bits`.
+    pub fn prepare(wh: &Matrix, bits: u32) -> Result<PlannedWeight, String> {
+        let qw = QMatrix::quantize_i8(wh, bits, ScaleAxis::PerCol)?;
+        let w_difficulty = metrics::quant_difficulty(wh, Channels::Rows);
+        Ok(PlannedWeight { qw, w_difficulty })
+    }
+
+    /// Apply a plan entry's weight-side transform (Eq. 4 row scaling by
+    /// `s`, then Eq. 3 rotation `R^T W`) and quantize the result — what
+    /// the plan registry runs once per covered entry at load time.
+    pub fn from_plan(
+        w: &Matrix,
+        smooth: Option<&[f32]>,
+        rot: Option<&Rotation>,
+        bits: u32,
+        threads: usize,
+    ) -> Result<PlannedWeight, String> {
+        let mut wh = w.clone();
+        if let Some(s) = smooth {
+            if s.len() != wh.rows() {
+                return Err(format!(
+                    "planned weight: smoothing vector has {} channels, weight has {} rows",
+                    s.len(),
+                    wh.rows()
+                ));
+            }
+            wh.scale_rows_mut(s);
+        }
+        let wh = match rot {
+            Some(r) => {
+                if r.dim() != wh.rows() {
+                    return Err(format!(
+                        "planned weight: rotation is {}-wide, weight has {} rows",
+                        r.dim(),
+                        wh.rows()
+                    ));
+                }
+                r.apply_left_t(&wh, threads)
+            }
+            None => wh,
+        };
+        Self::prepare(&wh, bits)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::Granularity;
+    use crate::rng::Rng;
+
+    fn rand_matrix(rows: usize, cols: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        Matrix::from_vec(rows, cols, rng.normals_f32(rows * cols))
+    }
+
+    #[test]
+    fn i4_pack_unpack_roundtrip_identity() {
+        // every representable nibble value, odd length included
+        let vals: Vec<i8> = (-8..=7).chain([-7, 0, 7]).collect();
+        let packed = pack_i4(&vals);
+        assert_eq!(packed.len(), (vals.len() + 1) / 2);
+        let mut got = vec![0i8; vals.len()];
+        unpack_i4(&packed, vals.len(), &mut got);
+        assert_eq!(got, vals);
+    }
+
+    #[test]
+    fn dequantize_is_bit_identical_to_qdq() {
+        let x = rand_matrix(9, 17, 1);
+        for (bits, packed) in [(8u32, false), (5, false), (4, true)] {
+            let qr = QMatrix::quantize(&x, bits, ScaleAxis::PerRow).unwrap();
+            assert_eq!(qr.is_packed(), packed, "bits {bits}");
+            assert_eq!(
+                qr.dequantize().as_slice(),
+                quant::qdq(&x, bits, Granularity::PerToken).as_slice(),
+                "per-row bits {bits}"
+            );
+            let qc = QMatrix::quantize(&x, bits, ScaleAxis::PerCol).unwrap();
+            assert_eq!(
+                qc.dequantize().as_slice(),
+                quant::qdq(&x, bits, Granularity::PerChannel).as_slice(),
+                "per-col bits {bits}"
+            );
+        }
+    }
+
+    #[test]
+    fn workspace_path_matches_owned_quantize() {
+        let x = rand_matrix(6, 10, 2);
+        let mut ws = Workspace::new();
+        let a = QMatrix::quantize_i8_with(&x, 8, ScaleAxis::PerRow, &mut ws).unwrap();
+        let b = QMatrix::quantize(&x, 8, ScaleAxis::PerRow).unwrap();
+        assert_eq!(a.dequantize().as_slice(), b.dequantize().as_slice());
+        assert_eq!(a.scales(), b.scales());
+        a.recycle(&mut ws);
+        // the recycled buffer is reused on the next request
+        let c = QMatrix::quantize_i8_with(&x, 8, ScaleAxis::PerRow, &mut ws).unwrap();
+        let (reuses, _) = ws.stats();
+        assert_eq!(reuses, 1);
+        c.recycle(&mut ws);
+    }
+
+    #[test]
+    fn zero_rows_quantize_to_zero_codes() {
+        let x = Matrix::zeros(3, 4);
+        let q = QMatrix::quantize(&x, 8, ScaleAxis::PerRow).unwrap();
+        assert_eq!(q.dequantize().as_slice(), x.as_slice());
+    }
+
+    #[test]
+    fn out_of_range_bits_are_named_errors() {
+        let x = Matrix::zeros(2, 2);
+        let err = QMatrix::quantize(&x, 1, ScaleAxis::PerRow).unwrap_err();
+        assert!(err.contains("unsupported bit width 1"), "{err}");
+        let err = QMatrix::quantize(&x, 16, ScaleAxis::PerRow).unwrap_err();
+        assert!(err.contains("exceeds 8"), "{err}");
+    }
+
+    #[test]
+    fn planned_weight_transforms_then_quantizes() {
+        let w = rand_matrix(16, 6, 3);
+        let s: Vec<f32> = (0..16).map(|i| 1.0 + 0.1 * i as f32).collect();
+        let rot = Rotation::build(16).unwrap();
+        let pw = PlannedWeight::from_plan(&w, Some(&s), Some(&rot), 4, 1).unwrap();
+        // reference: transform by hand, then quantize
+        let mut wh = w.clone();
+        wh.scale_rows_mut(&s);
+        let wh = rot.apply_left_t(&wh, 1);
+        let want = QMatrix::quantize(&wh, 4, ScaleAxis::PerCol).unwrap();
+        assert_eq!(pw.qw.dequantize().as_slice(), want.dequantize().as_slice());
+        assert_eq!(pw.w_difficulty, metrics::quant_difficulty(&wh, Channels::Rows));
+        // mismatched transform widths are named errors
+        assert!(PlannedWeight::from_plan(&w, Some(&s[..4]), None, 4, 1).is_err());
+        let bad_rot = Rotation::build(8).unwrap();
+        assert!(PlannedWeight::from_plan(&w, None, Some(&bad_rot), 4, 1).is_err());
+    }
+}

@@ -6,6 +6,8 @@
 //! Integration tests pin this module against the PJRT-executed Pallas
 //! kernels.
 
+use std::fmt;
+
 use crate::tensor::Matrix;
 
 /// Quantization granularity.
@@ -19,10 +21,49 @@ pub enum Granularity {
     PerTensor,
 }
 
+/// A bit width outside the supported symmetric-grid range.
+///
+/// Returned (not panicked) by [`try_qmax`] / [`validate_bits`] so CLI
+/// inputs like `--bits 1` surface as named errors instead of asserts.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BitsError {
+    /// The rejected bit width.
+    pub bits: u32,
+}
+
+impl fmt::Display for BitsError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "unsupported bit width {} (supported range: 2..=16)", self.bits)
+    }
+}
+
+impl std::error::Error for BitsError {}
+
+/// Validate a bit width against the supported symmetric-grid range.
+pub fn validate_bits(bits: u32) -> Result<(), BitsError> {
+    if (2..=16).contains(&bits) {
+        Ok(())
+    } else {
+        Err(BitsError { bits })
+    }
+}
+
+/// [`qmax`] that returns a named error instead of panicking — the entry
+/// point for bit widths that arrive from user input.
+pub fn try_qmax(bits: u32) -> Result<f32, BitsError> {
+    validate_bits(bits)?;
+    Ok(((1u32 << (bits - 1)) - 1) as f32)
+}
+
 /// Largest positive level of a symmetric b-bit integer grid (Eq. 1).
+///
+/// Panics on out-of-range widths; validate first with
+/// [`validate_bits`] / [`try_qmax`] when `bits` is user-provided.
 pub fn qmax(bits: u32) -> f32 {
-    assert!((2..=16).contains(&bits), "bits out of supported range: {bits}");
-    ((1u32 << (bits - 1)) - 1) as f32
+    match try_qmax(bits) {
+        Ok(v) => v,
+        Err(e) => panic!("{e}"),
+    }
 }
 
 #[inline]

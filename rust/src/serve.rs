@@ -234,6 +234,41 @@ impl<E: Executor> BatchExecutor for E {
     }
 }
 
+/// Which arithmetic the plan-driven executor runs on plan-covered
+/// cells.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ExecMode {
+    /// Simulated quantization: f32 quantize-dequantize followed by f32
+    /// matmuls (the measurement path).
+    #[default]
+    F32,
+    /// Real integer execution: per-token i8 activation codes through
+    /// the `i32`-accumulated integer GEMM against weights the plan
+    /// registry pre-quantized at load time
+    /// ([`crate::kernels::fused::analyze_planned_int`]).  Cells without
+    /// a pre-quantized weight fall back to [`ExecMode::F32`] behavior.
+    Int8,
+}
+
+impl ExecMode {
+    /// Parse a CLI name.
+    pub fn from_name(s: &str) -> Result<ExecMode, String> {
+        match s {
+            "f32" => Ok(ExecMode::F32),
+            "int8" => Ok(ExecMode::Int8),
+            other => Err(format!("unknown exec mode {other:?} (want f32 | int8)")),
+        }
+    }
+
+    /// Canonical CLI name.
+    pub fn name(self) -> &'static str {
+        match self {
+            ExecMode::F32 => "f32",
+            ExecMode::Int8 => "int8",
+        }
+    }
+}
+
 /// Native analysis executor on the fused kernel engine
 /// ([`crate::kernels::fused::analyze_all_modes`]): one rotation per
 /// distinct activation width (FWHT-planned, hit/miss counted) and one
@@ -250,6 +285,8 @@ pub struct NativeBatchExecutor {
     /// Calibration plan to consult per job (None = always run the full
     /// four-mode analyze).
     plan: Option<Arc<PlanRegistry>>,
+    /// Arithmetic on plan-covered cells.
+    exec: ExecMode,
 }
 
 impl Default for NativeBatchExecutor {
@@ -269,7 +306,13 @@ impl NativeBatchExecutor {
     /// (`0` = all cores) — for deployments with more cores than
     /// workers.
     pub fn with_threads(threads: usize) -> Self {
-        Self { cache: RotationCache::new(), scratch: Workspace::new(), threads, plan: None }
+        Self {
+            cache: RotationCache::new(),
+            scratch: Workspace::new(),
+            threads,
+            plan: None,
+            exec: ExecMode::F32,
+        }
     }
 
     /// Plan-driven executor (`smoothrot serve --plan`): each job is
@@ -286,11 +329,32 @@ impl NativeBatchExecutor {
     /// request's alpha; the registry counts both outcomes
     /// ([`PlanRegistry::stats`]).
     pub fn with_plan(plan: Arc<PlanRegistry>, threads: usize) -> Self {
+        Self::with_plan_exec(plan, threads, ExecMode::F32)
+    }
+
+    /// [`NativeBatchExecutor::with_plan`] with an explicit execution
+    /// path (`smoothrot serve --plan --exec int8`): under
+    /// [`ExecMode::Int8`], plan-covered jobs whose entry carries a
+    /// pre-quantized weight ([`PlanRegistry::set_weight_provider`]) run
+    /// the real integer pipeline — transform + quantize only the
+    /// activation rows, then the `i32`-accumulated integer GEMM — and
+    /// report the *executed* Eq. 2 error.  Covered jobs without a
+    /// usable pre-quantized weight run the f32 planned path; uncovered
+    /// jobs fall back to the full four-mode analyze as before.
+    ///
+    /// **Contract:** the registry's weight provider must serve the same
+    /// model the request stream carries — on int8-covered cells the
+    /// GEMM multiplies the *registry's* pre-quantized weight, and only
+    /// its shape is checked against the request's `job.w` (content
+    /// equality is not verified per request; that is the "the registry
+    /// IS the model" analogue of the calibrated-alpha override above).
+    pub fn with_plan_exec(plan: Arc<PlanRegistry>, threads: usize, exec: ExecMode) -> Self {
         Self {
             cache: RotationCache::new(),
             scratch: Workspace::new(),
             threads,
             plan: Some(plan),
+            exec,
         }
     }
 }
@@ -303,6 +367,30 @@ impl Executor for NativeBatchExecutor {
                     (Some(s), Some(inv)) => Some((s.as_slice(), inv.as_slice())),
                     _ => None,
                 };
+                if self.exec == ExecMode::Int8 {
+                    let usable = e
+                        .qweight
+                        .as_ref()
+                        .filter(|pw| pw.qw.shape() == (job.x.cols(), job.w.cols()));
+                    // count the outcome either way: a missing or
+                    // shape-mismatched pre-quantized weight silently
+                    // degrades to the f32 planned path below, and the
+                    // degradation must be observable (int8_stats)
+                    reg.note_int8(usable.is_some());
+                    if let Some(pw) = usable {
+                        return crate::kernels::fused::analyze_planned_int(
+                            &job.x,
+                            &job.w,
+                            job.bits,
+                            e.mode,
+                            smooth,
+                            e.rotation.as_deref(),
+                            pw.as_ref(),
+                            &mut self.scratch,
+                            self.threads,
+                        );
+                    }
+                }
                 return crate::kernels::fused::analyze_planned(
                     &job.x,
                     &job.w,
@@ -1015,8 +1103,13 @@ pub fn skewed_tenant(rng: &mut crate::rng::Rng, tenants: usize) -> TenantId {
 /// needed): modules drawn uniformly at SynLlama scale, layers drawn
 /// from `0..layers` (clamped to the model depth — pass the calibrated
 /// layer count so every request hits a `--plan` entry), tenants drawn
-/// by [`skewed_tenant`], `rows` token rows per request.  Shared by the
-/// `smoothrot serve` native backend and the serving example.
+/// by [`skewed_tenant`], `rows` token rows per request.  Activations
+/// vary per request (per-request seeds), but every request for a given
+/// (module, layer) shares the **fixed** weight of the stream's base
+/// seed ([`crate::synth::layer_weight`]) — the "model" being served —
+/// so the int8 plan registry can pre-quantize each layer's weight once
+/// and have it match every request.  Shared by the `smoothrot serve`
+/// native backend and the serving example.
 pub fn synthetic_requests(
     n: usize,
     tenants: usize,
@@ -1027,21 +1120,32 @@ pub fn synthetic_requests(
     let model = crate::config::ModelConfig::default();
     let layers = layers.clamp(1, model.n_layers);
     let mut rng = crate::rng::Rng::new(seed);
+    // the fixed per-layer weights are shared by every request of a
+    // (module, layer), so generate each at most once and hand out
+    // clones instead of re-running the O(c_in * c_out) generator per
+    // request
+    let mut weights: BTreeMap<(&'static str, usize), crate::tensor::Matrix> = BTreeMap::new();
     (0..n)
         .map(|i| {
             let tenant = skewed_tenant(&mut rng, tenants);
             let module = crate::MODULES[rng.below(4)];
             let layer = rng.below(layers);
-            let (mut spec, c_out) =
+            let (mut spec, _) =
                 crate::synth::module_stream(module, seed.wrapping_add(7 + i as u64))
                     .expect("known module");
             spec.n_tokens = rows.max(1);
+            let w = weights
+                .entry((module, layer))
+                .or_insert_with(|| {
+                    crate::synth::layer_weight(module, layer, seed).expect("known module")
+                })
+                .clone();
             let job = Job {
                 id: i as u64,
                 layer,
                 module,
                 x: spec.layer(layer),
-                w: spec.weight(c_out, layer),
+                w,
                 alpha: model.alpha as f32,
                 bits: model.bits,
             };
@@ -1364,6 +1468,58 @@ mod tests {
             assert_eq!(best, Mode::Rotate);
             assert!(out.errors[Mode::None.index()].is_infinite());
         }
+    }
+
+    #[test]
+    fn int8_exec_runs_the_integer_path_and_tracks_f32() {
+        use crate::calib::plan::{PlanEntry, Provenance, QuantPlan};
+        use crate::calib::registry::PlanRegistry;
+        use crate::transforms::Mode;
+
+        let c_in = 16usize;
+        let plan = QuantPlan {
+            provenance: Provenance::default(),
+            entries: vec![PlanEntry {
+                module: "k_proj".into(),
+                layer: 0,
+                bits: 4,
+                c_in,
+                mode: Mode::Rotate,
+                alpha: 0.5,
+                predicted_error: 1.0,
+                difficulty_before: 2.0,
+                difficulty_after: 1.0,
+                smooth: None,
+            }],
+        };
+        let reg = Arc::new(PlanRegistry::from_plan(&plan).unwrap());
+        let mut rng = Rng::new(77);
+        let w = Matrix::from_vec(c_in, 8, rng.normals_f32(c_in * 8));
+        let w2 = w.clone();
+        reg.set_weight_provider(Box::new(move |module, layer| {
+            (module == "k_proj" && layer == 0).then(|| w2.clone())
+        }))
+        .unwrap();
+        assert_eq!(reg.preloaded(), 1);
+        let x = Matrix::from_vec(8, c_in, rng.normals_f32(8 * c_in));
+        let j = Job { id: 0, layer: 0, module: "k_proj", x, w, alpha: 0.5, bits: 4 };
+        let mut sim_exec = NativeBatchExecutor::with_plan(Arc::clone(&reg), 1);
+        let sim = sim_exec.run(&j).unwrap();
+        let mut int_exec =
+            NativeBatchExecutor::with_plan_exec(Arc::clone(&reg), 1, ExecMode::Int8);
+        let exec = int_exec.run(&j).unwrap();
+        let i = Mode::Rotate.index();
+        // executed (integer) error tracks the simulated (f32 qdq) error
+        let denom = sim.errors[i].max(1e-12);
+        let rel = (sim.errors[i] - exec.errors[i]).abs() / denom;
+        assert!(rel < 1e-2, "sim {} vs exec {}", sim.errors[i], exec.errors[i]);
+        // the planned-mode shape is preserved: argmin recovers the plan
+        assert!(exec.errors[Mode::None.index()].is_infinite());
+        let (planned, fallback) = reg.stats();
+        assert_eq!((planned, fallback), (2, 0), "both paths must hit the plan");
+        // only the Int8 executor bumps the int8 counters, and it
+        // really ran the integer pipeline (no silent degradation)
+        assert_eq!(reg.int8_stats(), (1, 0));
     }
 
     #[test]

@@ -171,6 +171,18 @@ pub fn module_stream(module: &str, seed: u64) -> Option<(SynthSpec, usize)> {
     }
 }
 
+/// The fixed per-layer weight of the synthetic serving "model": the
+/// weight [`module_stream`]`(module, seed)` pairs with `layer`,
+/// independent of any per-request activation seed.  Serving demos draw
+/// per-request activations from per-request seeds but share these
+/// weights across requests, which is what lets the int8 plan registry
+/// pre-quantize each layer's weight once and serve it to every request
+/// (`None` for an unknown module).
+pub fn layer_weight(module: &str, layer: usize, seed: u64) -> Option<Matrix> {
+    let (spec, c_out) = module_stream(module, seed)?;
+    Some(spec.weight(c_out, layer))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -239,6 +251,18 @@ mod tests {
             assert_eq!(x.cols(), w.rows(), "{module} X/W inner dims");
         }
         assert!(module_stream("nope", 1).is_none());
+    }
+
+    #[test]
+    fn layer_weight_is_the_streams_fixed_weight() {
+        for module in crate::MODULES {
+            let a = layer_weight(module, 3, 42).unwrap();
+            let b = layer_weight(module, 3, 42).unwrap();
+            assert_eq!(a.as_slice(), b.as_slice(), "{module} weight must be deterministic");
+            let (spec, c_out) = module_stream(module, 42).unwrap();
+            assert_eq!(a.as_slice(), spec.weight(c_out, 3).as_slice(), "{module}");
+        }
+        assert!(layer_weight("nope", 0, 1).is_none());
     }
 
     #[test]

@@ -242,6 +242,21 @@ impl Matrix {
     }
 }
 
+/// Squared Frobenius distance `Σ (a_i - b_i)^2` of two equally-shaped
+/// row-major buffers, accumulated in f64 — the residual norm both the
+/// integer execution path and its equivalence tests compute without
+/// materializing a difference matrix.
+pub fn frob_dist_sq(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len(), "frob_dist_sq length mismatch");
+    a.iter()
+        .zip(b)
+        .map(|(&x, &y)| {
+            let d = (x as f64) - (y as f64);
+            d * d
+        })
+        .sum()
+}
+
 /// A stack of `layers` matrices of identical shape, e.g. the captured
 /// `[L, n, c]` activation tensors, stored contiguously.
 #[derive(Clone)]
@@ -365,6 +380,15 @@ mod tests {
     fn transpose_roundtrip() {
         let a = Matrix::from_fn(4, 6, |i, j| (i * 31 + j * 7) as f32);
         assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn frob_dist_matches_sub_then_frob() {
+        let a = Matrix::from_fn(3, 4, |i, j| (i * 4 + j) as f32 * 0.5);
+        let b = Matrix::from_fn(3, 4, |i, j| (i + j) as f32 - 1.0);
+        let want = a.sub(&b).frob_sq();
+        let got = frob_dist_sq(a.as_slice(), b.as_slice());
+        assert!((want - got).abs() < 1e-9, "{want} vs {got}");
     }
 
     #[test]

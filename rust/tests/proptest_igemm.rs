@@ -1,0 +1,151 @@
+//! Property tests over the integer execution path (check =
+//! proptest-lite): integer GEMM vs the f32 `qdq`-then-`matmul`
+//! reference, dequantize-vs-qdq bit identity, i4 pack/unpack identity,
+//! thread-count invariance, and the planned integer eval tracking the
+//! simulated planned eval.
+
+use smoothrot::check::{check, close, ensure};
+use smoothrot::kernels::fused::{analyze_planned, analyze_planned_int};
+use smoothrot::kernels::igemm::igemm;
+use smoothrot::kernels::workspace::Workspace;
+use smoothrot::qtensor::{pack_i4, unpack_i4, PlannedWeight, QMatrix, ScaleAxis};
+use smoothrot::quant::{self, Granularity};
+use smoothrot::tensor::frob_dist_sq;
+use smoothrot::transforms::{self, Mode, RotationCache};
+
+#[test]
+fn prop_igemm_matches_qdq_then_matmul_reference() {
+    check("igemm == qdq(X) @ qdq(W) within 1e-4 rel frobenius", 40, |g| {
+        let m = g.usize_in(1, 24);
+        let k = g.usize_in(1, 96);
+        let n = g.usize_in(1, 24);
+        let bits = *g.choose(&[4u32, 8]);
+        let threads = g.usize_in(1, 4);
+        let x = g.matrix(m, k);
+        let w = g.matrix(k, n);
+        let qx = QMatrix::quantize(&x, bits, ScaleAxis::PerRow)?;
+        let qw = QMatrix::quantize(&w, bits, ScaleAxis::PerCol)?;
+        // 4-bit operands take the packed-i4 storage path
+        ensure(qx.is_packed() == (bits == 4), "storage kind follows bits")?;
+        let mut ws = Workspace::new();
+        let got = igemm(&qx, &qw, &mut ws, threads)?;
+        let want = quant::qdq(&x, bits, Granularity::PerToken)
+            .matmul(&quant::qdq(&w, bits, Granularity::PerChannel));
+        let dist = frob_dist_sq(want.as_slice(), got.as_slice()).sqrt();
+        let rel = dist / want.frob().max(1e-9);
+        ensure(
+            rel <= 1e-4,
+            format!("m={m} k={k} n={n} bits={bits} threads={threads}: rel frobenius {rel}"),
+        )
+    });
+}
+
+#[test]
+fn prop_dequantize_bit_identical_to_qdq_both_granularities() {
+    check("QMatrix::dequantize == quant::qdq bit for bit", 40, |g| {
+        let rows = g.usize_in(1, 20);
+        let cols = g.usize_in(1, 40);
+        let bits = *g.choose(&[2u32, 4, 8]);
+        let x = g.matrix(rows, cols);
+        for (axis, gran) in [
+            (ScaleAxis::PerRow, Granularity::PerToken),
+            (ScaleAxis::PerCol, Granularity::PerChannel),
+        ] {
+            let q = QMatrix::quantize(&x, bits, axis)?;
+            let want = quant::qdq(&x, bits, gran);
+            ensure(
+                q.dequantize().as_slice() == want.as_slice(),
+                format!("bits={bits} axis={axis:?}: dequantize drifted from qdq"),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_i4_pack_unpack_roundtrip_identity() {
+    check("pack_i4 . unpack_i4 == id over random nibble values", 50, |g| {
+        let len = g.usize_in(1, 200);
+        let vals: Vec<i8> = (0..len).map(|_| g.usize_in(0, 15) as i8 - 8).collect();
+        let packed = pack_i4(&vals);
+        ensure(packed.len() == (len + 1) / 2, "packed length")?;
+        let mut got = vec![0i8; len];
+        unpack_i4(&packed, len, &mut got);
+        ensure(got == vals, format!("roundtrip drifted at len {len}"))
+    });
+}
+
+#[test]
+fn prop_igemm_thread_count_is_exactly_invariant() {
+    check("igemm bit-identical at every thread count", 25, |g| {
+        let m = g.usize_in(1, 32);
+        let k = g.usize_in(1, 64);
+        let n = g.usize_in(1, 16);
+        let bits = *g.choose(&[4u32, 8]);
+        let x = g.matrix(m, k);
+        let w = g.matrix(k, n);
+        let qx = QMatrix::quantize(&x, bits, ScaleAxis::PerRow)?;
+        let qw = QMatrix::quantize(&w, bits, ScaleAxis::PerCol)?;
+        let mut ws = Workspace::new();
+        let serial = igemm(&qx, &qw, &mut ws, 1)?;
+        for threads in [2usize, 3, 7, 64] {
+            let par = igemm(&qx, &qw, &mut ws, threads)?;
+            // integer accumulation is associative, so this is exact
+            // equality, not a tolerance
+            ensure(
+                par.as_slice() == serial.as_slice(),
+                format!("threads={threads} diverged from serial"),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_planned_int_tracks_planned_f32_across_modes() {
+    check("analyze_planned_int error ~ analyze_planned error", 20, |g| {
+        let n = g.usize_in(2, 20);
+        let c_in = *g.choose(&[8usize, 16, 32, 64]);
+        let c_out = g.usize_in(2, 12);
+        let bits = *g.choose(&[4u32, 8]);
+        let alpha = g.f32_in(0.2, 0.8);
+        let x = g.matrix(n, c_in);
+        let w = g.matrix(c_in, c_out);
+        let s = transforms::smooth_scales(&x, &w, alpha);
+        let inv: Vec<f32> = s.iter().map(|&v| 1.0 / v).collect();
+        let mut cache = RotationCache::new();
+        let mut ws = Workspace::new();
+        let threads = g.usize_in(1, 3);
+        for mode in Mode::ALL {
+            let smooth =
+                matches!(mode, Mode::Smooth | Mode::SmoothRotate).then_some((&s[..], &inv[..]));
+            let rot = if matches!(mode, Mode::Rotate | Mode::SmoothRotate) {
+                Some(cache.get(c_in)?.clone())
+            } else {
+                None
+            };
+            let sim = analyze_planned(&x, &w, bits, mode, smooth, rot.as_ref(), &mut ws, threads)?;
+            let pw =
+                PlannedWeight::from_plan(&w, smooth.map(|(s, _)| s), rot.as_ref(), bits, threads)?;
+            let exec = analyze_planned_int(
+                &x,
+                &w,
+                bits,
+                mode,
+                smooth,
+                rot.as_ref(),
+                &pw,
+                &mut ws,
+                threads,
+            )?;
+            let i = mode.index();
+            close(sim.errors[i], exec.errors[i], 1e-2, &format!("{mode:?} executed error"))?;
+            for j in 0..4 {
+                if j != i {
+                    ensure(exec.errors[j].is_infinite(), format!("{mode:?} slot {j} finite"))?;
+                }
+            }
+        }
+        Ok(())
+    });
+}
