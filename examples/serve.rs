@@ -139,16 +139,21 @@ fn main() -> Result<()> {
     .map_err(|e| anyhow!(e.to_string()))?;
     println!(
         "int8 plan-driven: {:.1} req/s vs f32 plan-driven {:.1} req/s ({:+.0}% throughput, \
-         {loaded} weights pre-quantized once)",
+         {loaded} weights pre-quantized once, {} requests batch-fused into stacked GEMMs)",
         int8.throughput(),
         planned.throughput(),
         100.0 * (int8.throughput() / planned.throughput().max(1e-9) - 1.0),
+        registry.batch_fused(),
     );
     assert!(loaded > 0, "int8 preload must cover the calibrated plan");
     let (executed, degraded) = registry.int8_stats();
     assert!(
         executed > 0 && degraded == 0,
         "int8 pass degraded to f32: {executed} executed / {degraded} degraded"
+    );
+    assert!(
+        registry.batch_fused() > 0,
+        "int8 pass silently fell back to per-job execution (zero batch-fused requests)"
     );
     Ok(())
 }

@@ -95,6 +95,11 @@ pub struct PlanRegistry {
     /// f32 planned path (missing or shape-mismatched pre-quantized
     /// weight) — the silent-degradation counter.
     int8_degraded: AtomicU64,
+    /// Int8-exec jobs executed through the **stacked batch-fused** GEMM
+    /// path ([`crate::kernels::fused::analyze_planned_int_batch`]) — the
+    /// observability counter for a silent per-job fallback, mirroring
+    /// `int8_executed`.
+    batch_fused: AtomicU64,
 }
 
 fn resolve(plan: &QuantPlan) -> Result<Resolved, String> {
@@ -217,6 +222,7 @@ impl PlanRegistry {
             fallback: AtomicU64::new(0),
             int8_executed: AtomicU64::new(0),
             int8_degraded: AtomicU64::new(0),
+            batch_fused: AtomicU64::new(0),
         })
     }
 
@@ -235,6 +241,7 @@ impl PlanRegistry {
             fallback: AtomicU64::new(0),
             int8_executed: AtomicU64::new(0),
             int8_degraded: AtomicU64::new(0),
+            batch_fused: AtomicU64::new(0),
         })
     }
 
@@ -367,6 +374,21 @@ impl PlanRegistry {
         (self.planned.load(Ordering::Relaxed), self.fallback.load(Ordering::Relaxed))
     }
 
+    /// Credit `n` additional plan-answered requests to the coverage
+    /// stats.  The batch-fused executor resolves a whole same-cell
+    /// group with **one** [`PlanRegistry::lookup`] (which counts one
+    /// request) and then credits the rest of the group here, so the
+    /// coverage numbers keep their per-request meaning regardless of
+    /// how requests were grouped.
+    pub fn note_planned_many(&self, n: u64) {
+        self.planned.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// [`PlanRegistry::note_planned_many`] for the fallback counter.
+    pub fn note_fallback_many(&self, n: u64) {
+        self.fallback.fetch_add(n, Ordering::Relaxed);
+    }
+
     /// Record whether an [`ExecMode::Int8`]-requested job actually ran
     /// the integer pipeline (`true`) or silently degraded to the f32
     /// planned path on a covered cell (`false`) — bumped by the serving
@@ -374,11 +396,32 @@ impl PlanRegistry {
     ///
     /// [`ExecMode::Int8`]: crate::serve::ExecMode::Int8
     pub fn note_int8(&self, executed: bool) {
+        self.note_int8_many(executed, 1);
+    }
+
+    /// [`PlanRegistry::note_int8`] for `n` requests at once (one
+    /// batch-fused group).
+    pub fn note_int8_many(&self, executed: bool, n: u64) {
         if executed {
-            self.int8_executed.fetch_add(1, Ordering::Relaxed);
+            self.int8_executed.fetch_add(n, Ordering::Relaxed);
         } else {
-            self.int8_degraded.fetch_add(1, Ordering::Relaxed);
+            self.int8_degraded.fetch_add(n, Ordering::Relaxed);
         }
+    }
+
+    /// Record `n` requests executed through the stacked batch-fused
+    /// integer path (one fused group = one tall GEMM for `n` requests).
+    /// Zero while int8 requests are executing means the hot path
+    /// silently fell back to per-job dispatch — the serve CLI fails on
+    /// that, mirroring the `int8_executed == 0` gate.
+    pub fn note_batch_fused(&self, n: u64) {
+        self.batch_fused.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Requests executed through the stacked batch-fused integer path
+    /// since creation.
+    pub fn batch_fused(&self) -> u64 {
+        self.batch_fused.load(Ordering::Relaxed)
     }
 
     /// `(executed, degraded)` int8-exec counters since creation.
@@ -561,9 +604,10 @@ mod tests {
         assert_eq!(calls.load(Ordering::Relaxed), 3);
         let e = reg.lookup("k_proj", 0, 4, 16).unwrap();
         let pw = e.qweight.expect("preloaded weight");
-        assert_eq!(pw.qw.shape(), (16, 4));
-        // serving weights stay unpacked i8 (GEMM-ready) even at 4 bits
-        assert!(!pw.qw.is_packed(), "planned weights must be GEMM-ready i8");
+        // serving weights are held in the GEMM-ready tile layout only
+        // (plain i8 codes even at 4 bits — nothing to unpack per request)
+        assert_eq!(pw.packed.shape(), (16, 4));
+        assert_eq!(pw.packed.bits(), 4);
     }
 
     #[test]

@@ -40,39 +40,23 @@ use crate::tensor::{self, Matrix};
 use crate::transforms::{self, Mode, Rotation, RotationCache};
 
 /// One-pass `Q(X)` + residual split over every row (per-token grids),
-/// rows fanned out across `threads`.
+/// rows fanned out across `threads` via the shared two-plane chunker
+/// ([`par::for_each_row_chunk2`]; a serving executor's persistent pool
+/// is picked up automatically).
 fn split_token(src: &Matrix, deltas: &[f32], q: &mut [f32], d: &mut [f32], threads: usize) {
     let (n, c) = src.shape();
     if n == 0 || c == 0 {
         return;
     }
-    let t = par::resolve_threads(threads).min(n);
-    if t <= 1 {
-        for i in 0..n {
+    par::for_each_row_chunk2(q, d, c, threads, |row0, qc, dc| {
+        let rows = qc.len() / c;
+        for i in 0..rows {
             quant::qdq_split_slice(
-                src.row(i),
-                deltas[i],
-                &mut q[i * c..(i + 1) * c],
-                &mut d[i * c..(i + 1) * c],
+                src.row(row0 + i),
+                deltas[row0 + i],
+                &mut qc[i * c..(i + 1) * c],
+                &mut dc[i * c..(i + 1) * c],
             );
-        }
-        return;
-    }
-    let per = (n + t - 1) / t;
-    std::thread::scope(|s| {
-        for (ci, (qc, dc)) in q.chunks_mut(per * c).zip(d.chunks_mut(per * c)).enumerate() {
-            s.spawn(move || {
-                let row0 = ci * per;
-                let rows = qc.len() / c;
-                for i in 0..rows {
-                    quant::qdq_split_slice(
-                        src.row(row0 + i),
-                        deltas[row0 + i],
-                        &mut qc[i * c..(i + 1) * c],
-                        &mut dc[i * c..(i + 1) * c],
-                    );
-                }
-            });
         }
     });
 }
@@ -382,10 +366,10 @@ pub fn analyze_planned_int(
         return Err(format!("analyze_planned_int shape mismatch: {x:?} @ {w:?}"));
     }
     let c_out = w.cols();
-    if pw.qw.shape() != (c_in, c_out) {
+    if pw.packed.shape() != (c_in, c_out) {
         return Err(format!(
             "analyze_planned_int: pre-quantized weight is {:?}, request needs ({c_in}, {c_out})",
-            pw.qw.shape()
+            pw.packed.shape()
         ));
     }
     let (smooth, rot) = planned_inputs("analyze_planned_int", c_in, mode, smooth, rot)?;
@@ -401,10 +385,12 @@ pub fn analyze_planned_int(
         rot.apply_rows(&mut xh, threads);
     }
 
-    // the only per-request quantization work on this path
+    // the only per-request quantization work on this path; the GEMM
+    // streams the weight's packed tiles (register-blocked microkernel,
+    // bit-identical to the row-major kernel)
     let qx = QMatrix::quantize_i8_with(&xh, bits, ScaleAxis::PerRow, ws)?;
     let mut yq = ws.take(n * c_out);
-    igemm::igemm_into(&mut yq, &qx, &pw.qw, ws, threads)?;
+    igemm::igemm_packed_into(&mut yq, &qx, &pw.packed, ws, threads)?;
 
     // f32 reference product (transform-invariant, so no weight
     // transform per request)
@@ -429,6 +415,141 @@ pub fn analyze_planned_int(
     out.w_difficulty[i] = pw.w_difficulty;
     out.act_absmax[i] = absmax;
     Ok(out)
+}
+
+/// [`analyze_planned_int`] over a whole coalesced **batch** in one
+/// fused kernel invocation — the serving core's stacked hot path
+/// ([`crate::serve::NativeBatchExecutor`]'s `run_batch`).
+///
+/// All jobs must share the planned cell's shape (`c_in`, `c_out`) and
+/// transform; their activation row counts may differ.  Instead of
+/// re-running the whole pipeline per job, the batch:
+///
+/// 1. **stacks** every job's activation rows into one tall workspace
+///    matrix,
+/// 2. applies the plan transform **once** — one smoothing-scale sweep
+///    and one FWHT pass over the stacked rows,
+/// 3. per-token-quantizes the stack **once**,
+/// 4. runs **one** tall integer GEMM against the entry's packed
+///    [`PlannedWeight`],
+/// 5. splits the output rows back per job, computing each job's
+///    executed Eq. 2 error from its own slice (against its own `X W`
+///    reference product).
+///
+/// Every step of 2–4 is **row-local** — Eq. 4 column scaling touches
+/// each row independently, the Eq. 3/5 rotation is applied per row,
+/// Eq. 1 per-token grids depend only on their own row, and the GEMM
+/// computes each output row from its own activation row — so the
+/// stacked pass is **bit-identical** to running [`analyze_planned_int`]
+/// per job (pinned in `rust/tests/proptest_batchfused.rs`), while
+/// paying the kernel-dispatch, transform-setup and GEMM-startup costs
+/// once per batch instead of once per request.
+///
+/// Returns one [`AnalyzeOut`] per job, in job order, each with the
+/// planned-mode shape of [`analyze_planned_int`].  An empty batch
+/// returns an empty vector.
+#[allow(clippy::too_many_arguments)]
+pub fn analyze_planned_int_batch(
+    jobs: &[(&Matrix, &Matrix)],
+    bits: u32,
+    mode: Mode,
+    smooth: Option<(&[f32], &[f32])>,
+    rot: Option<&Rotation>,
+    pw: &PlannedWeight,
+    ws: &mut Workspace,
+    threads: usize,
+) -> Result<Vec<AnalyzeOut>, String> {
+    let Some(&(x0, w0)) = jobs.first() else {
+        return Ok(Vec::new());
+    };
+    let c_in = x0.cols();
+    let c_out = w0.cols();
+    for &(x, w) in jobs {
+        if x.cols() != c_in || w.rows() != c_in || w.cols() != c_out {
+            return Err(format!(
+                "analyze_planned_int_batch: mixed shapes in one batch: {x:?} @ {w:?} \
+                 vs ({c_in}, {c_out})"
+            ));
+        }
+    }
+    if pw.packed.shape() != (c_in, c_out) {
+        return Err(format!(
+            "analyze_planned_int_batch: pre-quantized weight is {:?}, batch needs \
+             ({c_in}, {c_out})",
+            pw.packed.shape()
+        ));
+    }
+    let (smooth, rot) = planned_inputs("analyze_planned_int_batch", c_in, mode, smooth, rot)?;
+    let inv = smooth.map(|(_, inv)| inv);
+
+    // 1. stack every job's activation rows into one tall matrix
+    let total: usize = jobs.iter().map(|(x, _)| x.rows()).sum();
+    let mut buf = ws.take(total * c_in);
+    let mut r0 = 0usize;
+    for (x, _) in jobs {
+        buf[r0 * c_in..(r0 + x.rows()) * c_in].copy_from_slice(x.as_slice());
+        r0 += x.rows();
+    }
+    let mut xh = Matrix::from_vec(total, c_in, buf);
+
+    // 2. one shared transform pass (row-local, so exactly per-job)
+    if let Some(inv) = inv {
+        xh.scale_cols_mut(inv);
+    }
+    if let Some(rot) = rot {
+        rot.apply_rows(&mut xh, threads);
+    }
+
+    // 3. one per-token quantize; 4. one tall packed integer GEMM
+    let qx = QMatrix::quantize_i8_with(&xh, bits, ScaleAxis::PerRow, ws)?;
+    let mut yq = ws.take(total * c_out);
+    igemm::igemm_packed_into(&mut yq, &qx, &pw.packed, ws, threads)?;
+
+    // f32 reference products: per job against its *own* weight, so the
+    // executed-vs-reference association stays per request
+    let mut y = ws.take(total * c_out);
+    r0 = 0;
+    for (x, w) in jobs {
+        let rows = x.rows();
+        par::matmul_acc_into(&mut y[r0 * c_out..(r0 + rows) * c_out], x, w, threads);
+        r0 += rows;
+    }
+
+    // 5. split the stacked planes back per job
+    let mut outs = Vec::with_capacity(jobs.len());
+    r0 = 0;
+    for (x, _) in jobs {
+        let rows = x.rows();
+        let err = tensor::frob_dist_sq(
+            &y[r0 * c_out..(r0 + rows) * c_out],
+            &yq[r0 * c_out..(r0 + rows) * c_out],
+        );
+        // per-job difficulty/absmax straight off this job's rows of the
+        // stacked plane — zero copies, and the folds visit the same
+        // elements in the same order as the per-job path's own matrix
+        // (bit-identity, not closeness)
+        let xj = &xh.as_slice()[r0 * c_in..(r0 + rows) * c_in];
+        let act_diff = metrics::quant_difficulty_rows(xj, c_in);
+        let absmax = xj.iter().fold(0.0f32, |m, &v| m.max(v.abs())) as f64;
+
+        let mut out = AnalyzeOut::default();
+        for e in out.errors.iter_mut() {
+            *e = f64::INFINITY;
+        }
+        let i = mode.index();
+        out.errors[i] = err;
+        out.act_difficulty[i] = act_diff;
+        out.w_difficulty[i] = pw.w_difficulty;
+        out.act_absmax[i] = absmax;
+        outs.push(out);
+        r0 += rows;
+    }
+
+    ws.give(y);
+    ws.give(yq);
+    qx.recycle(ws);
+    ws.give_matrix(xh);
+    Ok(outs)
 }
 
 #[cfg(test)]
@@ -619,6 +740,90 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn planned_int_batch_is_bit_identical_to_per_job() {
+        let c_in = 64usize;
+        let c_out = 8usize;
+        let w = rand_matrix(c_in, c_out, 41);
+        let xs: Vec<Matrix> =
+            (0..4).map(|i| rand_matrix(3 + 5 * i, c_in, 42 + i as u64)).collect();
+        let alpha = 0.5f32;
+        let s = transforms::smooth_scales(&xs[0], &w, alpha);
+        let inv: Vec<f32> = s.iter().map(|&v| 1.0 / v).collect();
+        let mut cache = RotationCache::new();
+        let mut ws = Workspace::new();
+        for mode in Mode::ALL {
+            let smooth =
+                matches!(mode, Mode::Smooth | Mode::SmoothRotate).then_some((&s[..], &inv[..]));
+            let rot = if matches!(mode, Mode::Rotate | Mode::SmoothRotate) {
+                Some(cache.get(c_in).unwrap().clone())
+            } else {
+                None
+            };
+            let pw =
+                PlannedWeight::from_plan(&w, smooth.map(|(s, _)| s), rot.as_ref(), 8, 1).unwrap();
+            let per_job: Vec<AnalyzeOut> = xs
+                .iter()
+                .map(|x| {
+                    analyze_planned_int(x, &w, 8, mode, smooth, rot.as_ref(), &pw, &mut ws, 2)
+                        .unwrap()
+                })
+                .collect();
+            let pairs: Vec<(&Matrix, &Matrix)> = xs.iter().map(|x| (x, &w)).collect();
+            let fused =
+                analyze_planned_int_batch(&pairs, 8, mode, smooth, rot.as_ref(), &pw, &mut ws, 2)
+                    .unwrap();
+            assert_eq!(fused.len(), per_job.len());
+            for (a, b) in per_job.iter().zip(&fused) {
+                assert_eq!(a.errors, b.errors, "{mode:?} errors must be bit-identical");
+                assert_eq!(a.act_difficulty, b.act_difficulty, "{mode:?} difficulty");
+                assert_eq!(a.w_difficulty, b.w_difficulty, "{mode:?} w difficulty");
+                assert_eq!(a.act_absmax, b.act_absmax, "{mode:?} absmax");
+            }
+        }
+        // empty batch: empty result
+        assert!(analyze_planned_int_batch(
+            &[],
+            8,
+            Mode::None,
+            None,
+            None,
+            &PlannedWeight::from_plan(&w, None, None, 8, 1).unwrap(),
+            &mut ws,
+            1
+        )
+        .unwrap()
+        .is_empty());
+    }
+
+    #[test]
+    fn planned_int_batch_rejects_mixed_shapes() {
+        let w = rand_matrix(16, 4, 51);
+        let pw = PlannedWeight::from_plan(&w, None, None, 8, 1).unwrap();
+        let a = rand_matrix(3, 16, 52);
+        let b = rand_matrix(3, 8, 53); // wrong width
+        let w8 = rand_matrix(8, 4, 54);
+        let mut ws = Workspace::new();
+        let err = analyze_planned_int_batch(
+            &[(&a, &w), (&b, &w8)],
+            8,
+            Mode::None,
+            None,
+            None,
+            &pw,
+            &mut ws,
+            1,
+        )
+        .unwrap_err();
+        assert!(err.contains("mixed shapes"), "{err}");
+        // pre-quantized weight of the wrong shape
+        let pw_bad = PlannedWeight::from_plan(&rand_matrix(16, 6, 55), None, None, 8, 1).unwrap();
+        let err =
+            analyze_planned_int_batch(&[(&a, &w)], 8, Mode::None, None, None, &pw_bad, &mut ws, 1)
+                .unwrap_err();
+        assert!(err.contains("pre-quantized weight"), "{err}");
     }
 
     #[test]

@@ -7,17 +7,26 @@
 //! integer arithmetic") and that the rest of the repo only simulated
 //! with f32 quantize-dequantize followed by f32 matmuls.
 //!
-//! Design mirrors [`super::par`]'s f32 kernels:
+//! Two kernels share the contract:
 //!
-//! * cache-blocked i-k-j loop (`KB = 64` k-panel), contiguous
-//!   branch-free inner j loop over the weight row and the accumulator
-//!   row, so it auto-vectorizes,
+//! * [`igemm_into`] — the general row-major kernel: cache-blocked i-k-j
+//!   loop (`KB = 64` k-panel), contiguous branch-free inner j loop over
+//!   the weight row and the accumulator row, so it auto-vectorizes,
+//! * [`igemm_packed_into`] — the serving hot path over a
+//!   [`PackedWeight`]: per output row and weight tile, `TILE = 16`
+//!   `i32` accumulators live in registers across the whole `k` loop
+//!   (register blocking), the tile panel is streamed contiguously
+//!   (`TILE` bytes per `k` step instead of an `n`-strided row), and the
+//!   `i32` accumulator *plane* disappears entirely — partial sums never
+//!   round-trip through memory,
 //! * output rows split into contiguous chunks across up to `threads`
-//!   scoped threads (`0` = all cores, `1` = fully inline) — and because
-//!   integer addition is associative, results are **exactly** identical
-//!   at every thread count, not just bit-stable per row,
-//! * the `i32` accumulator plane and any i4-unpack scratch come from
-//!   the caller's [`Workspace`] typed pools, so steady-state serving
+//!   threads via [`super::par`] (`0` = all cores, `1` = fully inline;
+//!   a serving executor's persistent pool is picked up automatically) —
+//!   and because integer addition is associative, results are
+//!   **exactly** identical at every thread count *and* across the two
+//!   kernels, not just bit-stable per row,
+//! * any `i32` accumulator plane and i4-unpack scratch come from the
+//!   caller's [`Workspace`] typed pools, so steady-state serving
 //!   allocates nothing on this path,
 //! * a k-bound guard rejects shapes whose worst-case `Σ |q_x·q_w|`
 //!   could overflow `i32` (unreachable below ~131k inner channels at
@@ -25,11 +34,13 @@
 //!
 //! `rust/tests/proptest_igemm.rs` pins the output against the f32
 //! `qdq`-then-`matmul` reference to ≤ 1e-4 relative Frobenius error
-//! across shapes, bit widths, granularities and thread counts.
+//! across shapes, bit widths, granularities and thread counts, and
+//! `rust/tests/proptest_batchfused.rs` pins packed == row-major
+//! exactly.
 
-use crate::kernels::par::resolve_threads;
+use crate::kernels::par;
 use crate::kernels::workspace::Workspace;
-use crate::qtensor::{QMatrix, ScaleAxis};
+use crate::qtensor::{PackedWeight, QMatrix, ScaleAxis};
 use crate::tensor::Matrix;
 
 /// Largest code magnitude of a symmetric b-bit grid, as u64.
@@ -97,19 +108,10 @@ pub fn igemm_into(
     let wcodes: &[i8] = w_unpacked.as_deref().unwrap_or_else(|| wq.i8_codes().expect("i8 codes"));
 
     let mut acc = ws.take_i32(m * n);
-    let t = resolve_threads(threads).min(m);
-    if t <= 1 {
-        chunk_kernel(0, out, &mut acc, xcodes, wcodes, xq.scales(), wq.scales(), k, n);
-    } else {
-        let per = (m + t - 1) / t;
-        let (sx, sw) = (xq.scales(), wq.scales());
-        std::thread::scope(|s| {
-            for (ci, (oc, ac)) in out.chunks_mut(per * n).zip(acc.chunks_mut(per * n)).enumerate()
-            {
-                s.spawn(move || chunk_kernel(ci * per, oc, ac, xcodes, wcodes, sx, sw, k, n));
-            }
-        });
-    }
+    let (sx, sw) = (xq.scales(), wq.scales());
+    par::for_each_row_chunk2(out, &mut acc, n, threads, |row0, oc, ac| {
+        chunk_kernel(row0, oc, ac, xcodes, wcodes, sx, sw, k, n);
+    });
 
     ws.give_i32(acc);
     if let Some(b) = x_unpacked {
@@ -131,6 +133,101 @@ pub fn igemm(
     let mut out = Matrix::zeros(xq.rows(), wq.cols());
     igemm_into(out.as_mut_slice(), xq, wq, ws, threads)?;
     Ok(out)
+}
+
+/// [`igemm_into`] over a pre-packed weight — the serving hot path.
+///
+/// Per output row and [`PackedWeight`] tile, the microkernel keeps
+/// `TILE = 16` partial sums in `i32` **registers** across the whole
+/// `k` loop and reads exactly `TILE` contiguous weight bytes per `k`
+/// step, so (vs the row-major kernel) the inner loop is unrolled to a
+/// fixed width, the weight traffic is sequential, and no `i32`
+/// accumulator plane is ever written to memory.  The per-element
+/// products and their `k`-ascending summation order are identical to
+/// [`igemm_into`], and integer addition is associative — so the two
+/// kernels (and every thread count) produce **bit-identical** output.
+///
+/// Only the activation side may still be workspace-unpacked (`i4`
+/// request codes); the weight side was unpacked once at pack time.
+pub fn igemm_packed_into(
+    out: &mut [f32],
+    xq: &QMatrix,
+    pw: &PackedWeight,
+    ws: &mut Workspace,
+    threads: usize,
+) -> Result<(), String> {
+    let (m, k) = xq.shape();
+    let (k2, n) = pw.shape();
+    if k != k2 {
+        return Err(format!("igemm inner dims: {m}x{k} @ {k2}x{n}"));
+    }
+    if xq.axis() != ScaleAxis::PerRow {
+        return Err("igemm: activations need per-row (per-token) scales".to_string());
+    }
+    if out.len() != m * n {
+        return Err(format!("igemm output buffer: {} elements, want {m}x{n}", out.len()));
+    }
+    if (k as u64) * max_level(xq.bits()) * max_level(pw.bits()) > i32::MAX as u64 {
+        return Err(format!(
+            "igemm: {k} inner channels at {}x{} bits can overflow the i32 accumulator",
+            xq.bits(),
+            pw.bits()
+        ));
+    }
+    if m == 0 || n == 0 {
+        return Ok(());
+    }
+
+    let x_unpacked: Option<Vec<i8>> = if xq.is_packed() {
+        let mut b = ws.take_i8(m * k);
+        xq.unpack_into(&mut b);
+        Some(b)
+    } else {
+        None
+    };
+    let xcodes: &[i8] = x_unpacked.as_deref().unwrap_or_else(|| xq.i8_codes().expect("i8 codes"));
+    let sx = xq.scales();
+    let sw = pw.scales();
+
+    par::for_each_row_chunk(out, n, threads, |row0, chunk| {
+        let rows = chunk.len() / n;
+        for i in 0..rows {
+            let arow = &xcodes[(row0 + i) * k..(row0 + i + 1) * k];
+            packed_row_kernel(arow, pw, sx[row0 + i], sw, &mut chunk[i * n..(i + 1) * n]);
+        }
+    });
+
+    if let Some(b) = x_unpacked {
+        ws.give_i8(b);
+    }
+    Ok(())
+}
+
+/// One output row of the packed GEMM: per weight tile, `TILE`
+/// register-resident `i32` accumulators over the whole `k` loop, then
+/// one scale pass into the f32 output.
+fn packed_row_kernel(arow: &[i8], pw: &PackedWeight, sxi: f32, sw: &[f32], orow: &mut [f32]) {
+    const JT: usize = PackedWeight::TILE;
+    let n = orow.len();
+    for t in 0..pw.tiles() {
+        let panel = pw.panel(t);
+        let j0 = t * JT;
+        let jw = JT.min(n - j0);
+        // the register block: a fixed-width accumulator array the
+        // compiler keeps out of memory and vectorizes
+        let mut acc = [0i32; JT];
+        for (kk, &a) in arow.iter().enumerate() {
+            let av = a as i32;
+            let p = &panel[kk * JT..kk * JT + JT];
+            for (ac, &pv) in acc.iter_mut().zip(p) {
+                *ac += av * pv as i32;
+            }
+        }
+        let scales = &sw[j0..j0 + jw];
+        for ((o, &a), &cw) in orow[j0..j0 + jw].iter_mut().zip(&acc[..jw]).zip(scales) {
+            *o = a as f32 * (sxi * cw);
+        }
+    }
 }
 
 /// One contiguous row chunk: k-blocked `i32` accumulation, then a
@@ -238,6 +335,78 @@ mod tests {
         let a = igemm(&qx8, &qw4, &mut ws, 1).unwrap();
         let b = igemm(&qx4, &qw4, &mut ws, 2).unwrap();
         assert_eq!(a.as_slice(), b.as_slice());
+    }
+
+    #[test]
+    fn packed_weight_gemm_is_bit_identical_to_row_major() {
+        // ragged n (not a multiple of the tile) exercises the padded tail
+        for (m, k, n, bits) in [(7usize, 40usize, 21usize, 8u32), (12, 64, 16, 8), (5, 33, 3, 4)] {
+            let x = rand_matrix(m, k, 20 + n as u64);
+            let w = rand_matrix(k, n, 30 + n as u64);
+            let qx = QMatrix::quantize(&x, bits, ScaleAxis::PerRow).unwrap();
+            let qw = QMatrix::quantize_i8(&w, bits, ScaleAxis::PerCol).unwrap();
+            let pw = PackedWeight::pack(&qw).unwrap();
+            let mut ws = Workspace::new();
+            let want = igemm(&qx, &qw, &mut ws, 1).unwrap();
+            for threads in [1usize, 2, 8] {
+                let mut got = vec![0.0f32; m * n];
+                igemm_packed_into(&mut got, &qx, &pw, &mut ws, threads).unwrap();
+                assert_eq!(
+                    got.as_slice(),
+                    want.as_slice(),
+                    "m={m} k={k} n={n} bits={bits} threads={threads}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn packed_gemm_validates_and_handles_empty_shapes() {
+        let x = rand_matrix(4, 8, 40);
+        let w = rand_matrix(8, 4, 41);
+        let qx = QMatrix::quantize(&x, 8, ScaleAxis::PerRow).unwrap();
+        let pw = PackedWeight::pack(&QMatrix::quantize_i8(&w, 8, ScaleAxis::PerCol).unwrap())
+            .unwrap();
+        let mut ws = Workspace::new();
+        // wrong activation granularity
+        let qx_col = QMatrix::quantize(&x, 8, ScaleAxis::PerCol).unwrap();
+        let mut out = vec![0.0f32; 4 * 4];
+        assert!(igemm_packed_into(&mut out, &qx_col, &pw, &mut ws, 1)
+            .unwrap_err()
+            .contains("per-row"));
+        // wrong inner dims
+        let qx_bad = QMatrix::quantize(&rand_matrix(4, 6, 42), 8, ScaleAxis::PerRow).unwrap();
+        assert!(igemm_packed_into(&mut out, &qx_bad, &pw, &mut ws, 1)
+            .unwrap_err()
+            .contains("inner dims"));
+        // wrong output length
+        let mut short = vec![0.0f32; 3];
+        assert!(igemm_packed_into(&mut short, &qx, &pw, &mut ws, 1)
+            .unwrap_err()
+            .contains("output"));
+        // zero-row activations are fine
+        let q0 = QMatrix::quantize(&Matrix::zeros(0, 8), 8, ScaleAxis::PerRow).unwrap();
+        let mut empty: Vec<f32> = Vec::new();
+        igemm_packed_into(&mut empty, &q0, &pw, &mut ws, 2).unwrap();
+    }
+
+    #[test]
+    fn packed_gemm_steady_state_allocates_nothing() {
+        let x = rand_matrix(6, 16, 43);
+        let w = rand_matrix(16, 20, 44);
+        // i4 activations force the unpack scratch path
+        let qx = QMatrix::quantize(&x, 4, ScaleAxis::PerRow).unwrap();
+        let pw = PackedWeight::pack(&QMatrix::quantize_i8(&w, 4, ScaleAxis::PerCol).unwrap())
+            .unwrap();
+        let mut ws = Workspace::new();
+        let mut out = vec![0.0f32; 6 * 20];
+        igemm_packed_into(&mut out, &qx, &pw, &mut ws, 1).unwrap();
+        let (_, warm) = ws.stats();
+        for _ in 0..5 {
+            igemm_packed_into(&mut out, &qx, &pw, &mut ws, 1).unwrap();
+        }
+        let (_, allocs) = ws.stats();
+        assert_eq!(allocs, warm, "steady-state packed igemm must not allocate");
     }
 
     #[test]

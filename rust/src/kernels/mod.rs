@@ -10,11 +10,11 @@
 //!
 //! | module | role |
 //! |---|---|
-//! | [`par`] | scoped-thread row-parallel matmul / transpose / apply primitives |
+//! | [`par`] | row-parallel matmul / transpose / apply primitives + the persistent [`par::ThreadPool`] serving executors install around their hot path |
 //! | [`fwht`] | in-place fast Walsh–Hadamard rotation, O(d log d) per row |
-//! | [`igemm`] | `i8 × i8 → i32`-accumulated integer GEMM over [`crate::qtensor::QMatrix`] codes |
-//! | [`fused`] | single-pass analyze computing all four mode errors with shared intermediates |
-//! | [`workspace`] | reusable per-worker scratch buffers (f32 + typed i8/i32 pools, fully pooled in steady state) |
+//! | [`igemm`] | `i8 × i8 → i32`-accumulated integer GEMM over [`crate::qtensor::QMatrix`] codes — row-major and packed-tile register-blocked kernels |
+//! | [`fused`] | single-pass analyze computing all four mode errors with shared intermediates; planned + batch-fused integer execution |
+//! | [`workspace`] | reusable per-worker scratch buffers (f32 + typed i8/i32 pools, fully pooled in steady state, trimmable between batches) |
 //!
 //! Layering: `par` and `workspace` sit directly on `tensor`; `fwht`
 //! reuses the Sylvester ⊗ Paley factorization of

@@ -1,24 +1,35 @@
-//! Row-parallel primitives on scoped threads.
+//! Row-parallel primitives — and the persistent worker pool behind
+//! them.
 //!
 //! All heavy kernels in this crate are embarrassingly parallel over
-//! output rows, so one helper carries the whole subsystem:
+//! output rows, so two helpers carry the whole subsystem:
+//! [`for_each_task`] runs `f(0..tasks)` concurrently, and
 //! [`for_each_row_chunk`] splits a row-major buffer into at most
-//! `threads` contiguous row chunks and runs a closure per chunk on
-//! `std::thread::scope` threads.  Per-row work is identical to the
-//! serial kernels (same cache-blocked i-k-j loop, same accumulation
-//! order), so results are bit-identical at every thread count — the
-//! property tests rely on that.
+//! `threads` contiguous row chunks and dispatches each as a task.
+//! Per-row work is identical to the serial kernels (same cache-blocked
+//! i-k-j loop, same accumulation order), so results are bit-identical
+//! at every thread count — the property tests rely on that.
 //!
 //! The `threads` knob is uniform across the crate: `0` resolves to
 //! `std::thread::available_parallelism()`, `1` stays on the calling
-//! thread (no spawn at all), `n > 1` uses up to `n` scoped threads.
+//! thread (no dispatch at all), `n > 1` splits into up to `n` chunks.
 //!
-//! Scoped threads are spawned per call, not pooled: spawn cost (tens
-//! of microseconds) only pays off on large rows-×-cols work, which is
-//! why the serving default is `threads = 1` — worker-level parallelism
-//! with zero per-kernel spawns — and `--threads N` opts bigger jobs
-//! into intra-kernel fan-out.  A persistent per-executor pool is the
-//! natural next step if profiles show spawn overhead on wide requests.
+//! **Execution backend.**  By default tasks run on `std::thread::scope`
+//! threads spawned per call — fine for one-shot sweeps, but a spawn
+//! costs tens of microseconds, which a serving worker pays on *every*
+//! kernel of every request.  A long-lived executor therefore owns a
+//! persistent [`ThreadPool`] and installs it around its hot path with
+//! [`with_pool`]; every `par`-routed kernel on that thread — f32
+//! matmuls and transposes, the FWHT rotation, the integer GEMMs — then
+//! dispatches chunks to the pool's parked workers instead of spawning.
+//! Chunk boundaries are computed from the `threads` knob alone (never
+//! from the pool size), so pooled and scoped execution are
+//! **bit-identical**: the backend only decides *where* a chunk runs,
+//! never *what* it computes.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
 
 use crate::tensor::Matrix;
 
@@ -31,10 +42,307 @@ pub fn resolve_threads(threads: usize) -> usize {
     }
 }
 
+// ---------------------------------------------------------------------
+// persistent worker pool
+// ---------------------------------------------------------------------
+
+/// Lifetime-erased pointer to the task closure of one [`ThreadPool::run`]
+/// call.  Only dereferenced by tasks claimed before the job's
+/// `remaining` count hits zero, and `run` does not return until then —
+/// so the borrow it was created from outlives every dereference.
+struct TaskFn(*const (dyn Fn(usize) + Sync));
+
+// SAFETY: the pointee is `Sync` (shared-call-safe) and outlives all
+// uses (see `TaskFn` docs); the raw pointer is only a capability token.
+unsafe impl Send for TaskFn {}
+
+/// One in-flight [`ThreadPool::run`] call.
+struct ActiveJob {
+    f: TaskFn,
+    tasks: usize,
+    /// Next unclaimed task index.
+    next: usize,
+    /// Claimed-or-unclaimed tasks not yet finished.
+    remaining: usize,
+    panicked: bool,
+}
+
+#[derive(Default)]
+struct PoolState {
+    job: Option<ActiveJob>,
+    /// Whether the most recently finished job had a panicking task
+    /// (read and reset by the submitter).
+    finished_panicked: bool,
+    shutdown: bool,
+}
+
+struct PoolShared {
+    state: Mutex<PoolState>,
+    /// Wakes parked workers when a job arrives (or on shutdown).
+    work: Condvar,
+    /// Wakes the submitter when the last task of a job finishes.
+    done: Condvar,
+}
+
+fn plock(m: &Mutex<PoolState>) -> std::sync::MutexGuard<'_, PoolState> {
+    match m.lock() {
+        Ok(g) => g,
+        Err(p) => p.into_inner(),
+    }
+}
+
+fn pwait<'a>(
+    cv: &Condvar,
+    g: std::sync::MutexGuard<'a, PoolState>,
+) -> std::sync::MutexGuard<'a, PoolState> {
+    match cv.wait(g) {
+        Ok(g) => g,
+        Err(p) => p.into_inner(),
+    }
+}
+
+/// A persistent pool of kernel worker threads — the serving executor's
+/// replacement for per-call scoped-thread spawning.
+///
+/// `ThreadPool::new(t)` parks `t - 1` workers; [`ThreadPool::run`]
+/// executes `f(0..tasks)` across those workers **and the submitting
+/// thread**, so total concurrency matches the `threads` knob the pool
+/// was sized from.  One job runs at a time (single submitter — each
+/// serving worker owns its own pool); a panicking task is caught on the
+/// worker, recorded, and re-raised on the submitter after the job
+/// drains, mirroring scoped-thread semantics without killing the pool.
+///
+/// Determinism: the pool never decides how work is *split* — callers
+/// (e.g. [`for_each_row_chunk`]) compute chunk boundaries from the
+/// `threads` knob and the pool only executes them, so results are
+/// bit-identical to the scoped-thread backend at every pool size.
+pub struct ThreadPool {
+    shared: Arc<PoolShared>,
+    handles: Vec<JoinHandle<()>>,
+    size: usize,
+}
+
+impl std::fmt::Debug for ThreadPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "ThreadPool {{ size: {} }}", self.size)
+    }
+}
+
+impl ThreadPool {
+    /// A pool sized for `threads` total executors: the submitting
+    /// thread plus `threads - 1` parked workers (`0` resolves to all
+    /// cores, like every other `threads` knob in the crate).
+    pub fn new(threads: usize) -> ThreadPool {
+        let size = resolve_threads(threads).max(1);
+        let shared = Arc::new(PoolShared {
+            state: Mutex::new(PoolState::default()),
+            work: Condvar::new(),
+            done: Condvar::new(),
+        });
+        let handles = (1..size)
+            .map(|_| {
+                let shared = Arc::clone(&shared);
+                std::thread::spawn(move || worker_loop(shared))
+            })
+            .collect();
+        ThreadPool { shared, handles, size }
+    }
+
+    /// Total executors (submitter + parked workers) this pool was sized
+    /// for.
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// Execute `f(i)` for every `i in 0..tasks`, on the parked workers
+    /// and the calling thread; returns when all tasks finished.
+    /// Panics (on the caller) if any task panicked.
+    pub fn run(&self, tasks: usize, f: &(dyn Fn(usize) + Sync)) {
+        if tasks == 0 {
+            return;
+        }
+        // While driving tasks on the submitting thread, uninstall the
+        // thread-local pool: a task that (unexpectedly) re-enters
+        // `for_each_task` then falls back to scoped threads instead of
+        // deadlocking on the single job slot.
+        let _nested_guard = PoolInstall::new(None);
+        // SAFETY: erases the borrow's lifetime (a plain cast cannot,
+        // because the raw-pointer type defaults the trait-object bound
+        // to 'static).  Sound per the `TaskFn` contract: `run` does not
+        // return until `remaining == 0`, so the borrow outlives every
+        // dereference.
+        let erased = TaskFn(unsafe {
+            std::mem::transmute::<&(dyn Fn(usize) + Sync), *const (dyn Fn(usize) + Sync)>(f)
+        });
+        {
+            let mut st = plock(&self.shared.state);
+            assert!(st.job.is_none(), "ThreadPool::run is single-submitter");
+            st.job =
+                Some(ActiveJob { f: erased, tasks, next: 0, remaining: tasks, panicked: false });
+        }
+        self.shared.work.notify_all();
+        // claim phase: the submitter works through tasks like a worker
+        loop {
+            let claimed = {
+                let mut st = plock(&self.shared.state);
+                match st.job.as_mut() {
+                    Some(job) if job.next < job.tasks => {
+                        let idx = job.next;
+                        job.next += 1;
+                        Some((job.f.0, idx))
+                    }
+                    _ => None,
+                }
+            };
+            match claimed {
+                Some((fp, idx)) => execute_claimed(&self.shared, fp, idx),
+                None => break,
+            }
+        }
+        // drain phase: wait for straggler tasks claimed by workers
+        let mut st = plock(&self.shared.state);
+        while st.job.is_some() {
+            st = pwait(&self.shared.done, st);
+        }
+        let panicked = std::mem::take(&mut st.finished_panicked);
+        drop(st);
+        if panicked {
+            panic!("ThreadPool: a task panicked");
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        {
+            let mut st = plock(&self.shared.state);
+            st.shutdown = true;
+        }
+        self.shared.work.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Run one claimed task and retire it, completing the job when it was
+/// the last.
+fn execute_claimed(shared: &PoolShared, f: *const (dyn Fn(usize) + Sync), idx: usize) {
+    // SAFETY: `f` outlives the job (see `TaskFn`); `AssertUnwindSafe`
+    // is sound because a panicking task poisons nothing — the job is
+    // marked panicked and the submitter re-raises.
+    let ok = catch_unwind(AssertUnwindSafe(|| unsafe { (*f)(idx) })).is_ok();
+    let mut st = plock(&shared.state);
+    let job = st.job.as_mut().expect("job outlives its last task");
+    job.remaining -= 1;
+    if !ok {
+        job.panicked = true;
+    }
+    if job.remaining == 0 {
+        let job = st.job.take().expect("checked above");
+        st.finished_panicked = job.panicked;
+        shared.done.notify_all();
+    }
+}
+
+fn worker_loop(shared: Arc<PoolShared>) {
+    loop {
+        let claimed = {
+            let mut st = plock(&shared.state);
+            loop {
+                if let Some(job) = st.job.as_mut() {
+                    if job.next < job.tasks {
+                        let idx = job.next;
+                        job.next += 1;
+                        break (job.f.0, idx);
+                    }
+                }
+                if st.shutdown {
+                    return;
+                }
+                st = pwait(&shared.work, st);
+            }
+        };
+        execute_claimed(&shared, claimed.0, claimed.1);
+    }
+}
+
+thread_local! {
+    static CURRENT_POOL: std::cell::RefCell<Option<Arc<ThreadPool>>> =
+        const { std::cell::RefCell::new(None) };
+}
+
+/// RAII install/restore of the calling thread's dispatch pool.
+struct PoolInstall {
+    prev: Option<Arc<ThreadPool>>,
+}
+
+impl PoolInstall {
+    fn new(pool: Option<Arc<ThreadPool>>) -> PoolInstall {
+        PoolInstall {
+            prev: CURRENT_POOL.with(|c| std::mem::replace(&mut *c.borrow_mut(), pool)),
+        }
+    }
+}
+
+impl Drop for PoolInstall {
+    fn drop(&mut self) {
+        CURRENT_POOL.with(|c| *c.borrow_mut() = self.prev.take());
+    }
+}
+
+/// Install `pool` as the calling thread's kernel-dispatch backend for
+/// the duration of `f`: every `par`-routed kernel invoked inside — f32
+/// matmul/transpose, FWHT rotation, quantize splits, integer GEMMs —
+/// executes its chunks on the pool's persistent workers instead of
+/// spawning scoped threads.  `None` is a no-op wrapper (scoped-thread
+/// behavior), so call sites can wire an *optional* pool unconditionally.
+/// The previous install is restored on exit, panic included.
+pub fn with_pool<R>(pool: Option<Arc<ThreadPool>>, f: impl FnOnce() -> R) -> R {
+    let _guard = PoolInstall::new(pool);
+    f()
+}
+
+/// Run `f(i)` for every `i in 0..tasks`, concurrently: on the calling
+/// thread's installed [`ThreadPool`] when one is live ([`with_pool`]),
+/// else on per-call scoped threads.  `tasks <= 1` runs inline.  This is
+/// the single dispatch point every parallel kernel in the crate funnels
+/// through, so installing a pool accelerates all of them at once.
+pub fn for_each_task(tasks: usize, f: impl Fn(usize) + Sync) {
+    match tasks {
+        0 => {}
+        1 => f(0),
+        _ => {
+            let pool = CURRENT_POOL.with(|c| c.borrow().clone());
+            match pool {
+                Some(p) => p.run(tasks, &f),
+                None => std::thread::scope(|s| {
+                    for i in 1..tasks {
+                        let f = &f;
+                        s.spawn(move || f(i));
+                    }
+                    f(0);
+                }),
+            }
+        }
+    }
+}
+
+/// A raw pointer that may cross task boundaries.  Every user hands each
+/// task a *disjoint* region derived from the pointer, so the aliasing
+/// rules hold even though the compiler can no longer see it.
+#[derive(Clone, Copy)]
+pub(crate) struct SendPtr<T>(pub(crate) *mut T);
+
+// SAFETY: see the type docs — regions handed out per task are disjoint.
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
 /// Split the row-major buffer `data` (rows of `cols` elements) into at
 /// most `threads` contiguous row chunks and run `f(first_row, chunk)`
-/// for each, in parallel on scoped threads.  With one effective thread
-/// (or one row) `f` runs inline on the caller's thread.
+/// for each, in parallel via [`for_each_task`].  With one effective
+/// thread (or one row) `f` runs inline on the caller's thread.  Chunk
+/// boundaries depend only on `threads`, never on the execution backend.
 pub fn for_each_row_chunk(
     data: &mut [f32],
     cols: usize,
@@ -48,11 +356,63 @@ pub fn for_each_row_chunk(
         return;
     }
     let per = (rows + t - 1) / t;
-    std::thread::scope(|s| {
-        for (ci, chunk) in data.chunks_mut(per * cols).enumerate() {
-            let f = &f;
-            s.spawn(move || f(ci * per, chunk));
-        }
+    let chunks = (rows + per - 1) / per;
+    let len = data.len();
+    let base = SendPtr(data.as_mut_ptr());
+    for_each_task(chunks, |ci| {
+        let start = ci * per * cols;
+        let end = (start + per * cols).min(len);
+        // SAFETY: tasks receive disjoint row ranges of one exclusively
+        // borrowed buffer, so the &mut subslices never alias.
+        let chunk = unsafe { std::slice::from_raw_parts_mut(base.0.add(start), end - start) };
+        f(ci * per, chunk);
+    });
+}
+
+/// Two-plane variant of [`for_each_row_chunk`]: split two equally-sized
+/// row-major buffers into the *same* contiguous row chunks and run
+/// `f(first_row, chunk_a, chunk_b)` per chunk in parallel.  One
+/// chunk-boundary computation — and one disjointness argument — shared
+/// by every two-plane kernel (the fused Q/residual split, the integer
+/// GEMM's output + accumulator planes), so the crate's thread-count
+/// bit-identity guarantee has a single source of truth for how rows
+/// are partitioned.
+pub fn for_each_row_chunk2<A: Send, B: Send>(
+    a: &mut [A],
+    b: &mut [B],
+    cols: usize,
+    threads: usize,
+    f: impl Fn(usize, &mut [A], &mut [B]) + Sync,
+) {
+    // hard assert: chunk boundaries are computed from `a` alone and
+    // materialized as raw-pointer subslices of BOTH planes, so a
+    // shorter `b` would be out-of-bounds UB — never let a safe caller
+    // reach that (same spirit as matmul_acc_into's shape asserts)
+    assert_eq!(a.len(), b.len(), "two-plane chunking needs equal lengths");
+    let rows = if cols == 0 { 0 } else { a.len() / cols };
+    let t = resolve_threads(threads).min(rows.max(1));
+    if t <= 1 {
+        f(0, a, b);
+        return;
+    }
+    let per = (rows + t - 1) / t;
+    let chunks = (rows + per - 1) / per;
+    let len = a.len();
+    let a_base = SendPtr(a.as_mut_ptr());
+    let b_base = SendPtr(b.as_mut_ptr());
+    for_each_task(chunks, |ci| {
+        let start = ci * per * cols;
+        let end = (start + per * cols).min(len);
+        // SAFETY: tasks receive disjoint row ranges of the two
+        // exclusively borrowed buffers, so the &mut subslices never
+        // alias.
+        let (ca, cb) = unsafe {
+            (
+                std::slice::from_raw_parts_mut(a_base.0.add(start), end - start),
+                std::slice::from_raw_parts_mut(b_base.0.add(start), end - start),
+            )
+        };
+        f(ci * per, ca, cb);
     });
 }
 
@@ -153,6 +513,7 @@ pub fn transpose(src: &Matrix, threads: usize) -> Matrix {
 mod tests {
     use super::*;
     use crate::rng::Rng;
+    use std::sync::atomic::{AtomicUsize, Ordering};
 
     fn rand_matrix(rows: usize, cols: usize, seed: u64) -> Matrix {
         let mut rng = Rng::new(seed);
@@ -181,6 +542,33 @@ mod tests {
             });
             for (idx, &v) in data.iter().enumerate() {
                 assert_eq!(v, (idx / cols) as f32 + 1.0, "threads={threads} idx={idx}");
+            }
+        }
+    }
+
+    #[test]
+    fn two_plane_chunks_cover_every_row_once_in_lockstep() {
+        let cols = 3;
+        let mut a = vec![0.0f32; 11 * cols];
+        let mut b = vec![0i32; 11 * cols];
+        for threads in [1usize, 2, 4, 32] {
+            a.iter_mut().for_each(|v| *v = 0.0);
+            b.iter_mut().for_each(|v| *v = 0);
+            for_each_row_chunk2(&mut a, &mut b, cols, threads, |row0, ca, cb| {
+                assert_eq!(ca.len(), cb.len(), "planes chunked in lockstep");
+                let rows = ca.len() / cols;
+                for i in 0..rows {
+                    for v in &mut ca[i * cols..(i + 1) * cols] {
+                        *v += (row0 + i) as f32 + 1.0;
+                    }
+                    for v in &mut cb[i * cols..(i + 1) * cols] {
+                        *v += (row0 + i) as i32 + 1;
+                    }
+                }
+            });
+            for (idx, (&va, &vb)) in a.iter().zip(&b).enumerate() {
+                assert_eq!(va, (idx / cols) as f32 + 1.0, "threads={threads} idx={idx}");
+                assert_eq!(vb, (idx / cols) as i32 + 1, "threads={threads} idx={idx}");
             }
         }
     }
@@ -229,5 +617,82 @@ mod tests {
         for threads in [1usize, 3, 16] {
             assert_eq!(transpose(&a, threads).as_slice(), serial.as_slice());
         }
+    }
+
+    #[test]
+    fn pool_runs_every_task_exactly_once() {
+        let pool = ThreadPool::new(3);
+        assert_eq!(pool.size(), 3);
+        let hits: Vec<AtomicUsize> = (0..50).map(|_| AtomicUsize::new(0)).collect();
+        pool.run(50, &|i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        for (i, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::Relaxed), 1, "task {i}");
+        }
+        // the pool is reusable: a second job runs on the same workers
+        pool.run(50, &|i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 2));
+    }
+
+    #[test]
+    fn pool_backed_kernels_bit_identical_to_scoped() {
+        let a = rand_matrix(13, 37, 6);
+        let b = rand_matrix(37, 11, 7);
+        let serial = a.matmul(&b);
+        let pool = Arc::new(ThreadPool::new(4));
+        for threads in [2usize, 3, 8] {
+            let pooled = with_pool(Some(Arc::clone(&pool)), || matmul(&a, &b, threads));
+            assert_eq!(pooled.as_slice(), serial.as_slice(), "threads={threads}");
+            let tp = with_pool(Some(Arc::clone(&pool)), || transpose(&a, threads));
+            assert_eq!(tp.as_slice(), a.transpose().as_slice(), "transpose threads={threads}");
+        }
+        // the install is scoped: outside with_pool, no pool is live
+        assert!(CURRENT_POOL.with(|c| c.borrow().is_none()));
+    }
+
+    #[test]
+    fn pool_install_restores_on_exit() {
+        let pool = Arc::new(ThreadPool::new(2));
+        with_pool(Some(Arc::clone(&pool)), || {
+            assert!(CURRENT_POOL.with(|c| c.borrow().is_some()));
+            // nested installs shadow and restore
+            with_pool(None, || {
+                assert!(CURRENT_POOL.with(|c| c.borrow().is_none()));
+            });
+            assert!(CURRENT_POOL.with(|c| c.borrow().is_some()));
+        });
+        assert!(CURRENT_POOL.with(|c| c.borrow().is_none()));
+    }
+
+    #[test]
+    fn pool_task_panic_propagates_and_pool_survives() {
+        let pool = ThreadPool::new(3);
+        let caught = catch_unwind(AssertUnwindSafe(|| {
+            pool.run(8, &|i| {
+                if i == 5 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(caught.is_err(), "submitter must re-raise the task panic");
+        // the pool is still usable afterwards
+        let hits: Vec<AtomicUsize> = (0..4).map(|_| AtomicUsize::new(0)).collect();
+        pool.run(4, &|i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn more_tasks_than_workers_complete() {
+        let pool = ThreadPool::new(2);
+        let counter = AtomicUsize::new(0);
+        pool.run(123, &|_| {
+            counter.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(counter.load(Ordering::Relaxed), 123);
     }
 }

@@ -10,7 +10,10 @@
 //! per-request allocations are the O(rows + cols) scale vectors).
 //!
 //! Checkout is best-fit by capacity; checkin caps the pool size so a
-//! one-off giant request cannot pin unbounded memory.  The counters
+//! one-off giant request cannot pin unbounded memory, and
+//! [`Workspace::trim`] lets a long-lived owner (the serving batch
+//! executor, between batches) shrink retained capacity back below a
+//! steady-state budget after a burst.  The counters
 //! ([`Workspace::stats`]) let tests pin the "no allocation in steady
 //! state" claim.
 //!
@@ -182,6 +185,55 @@ impl Workspace {
         give_pooled(&mut self.pool_i32, &mut self.pooled_bytes, buf);
     }
 
+    /// Release parked capacity until at most `max_bytes` remain across
+    /// all typed pools, dropping the **largest** buffers first so the
+    /// small steady-state buffers survive.
+    ///
+    /// Without this, the pools converge to the *high-water* request
+    /// size: one giant request leaves giant buffers parked for the
+    /// worker's lifetime.  The serving batch executor calls `trim`
+    /// between batches with its steady-state budget
+    /// ([`crate::serve::NativeBatchExecutor::TRIM_BYTES`]), so a burst
+    /// is released while ordinary traffic stays allocation-free (the
+    /// buffers it needs fit under the budget and are never dropped).
+    pub fn trim(&mut self, max_bytes: usize) {
+        while self.pooled_bytes > max_bytes {
+            let cands = [
+                Self::largest_bytes(&self.pool),
+                Self::largest_bytes(&self.pool_i8),
+                Self::largest_bytes(&self.pool_i32),
+            ];
+            let best = cands
+                .into_iter()
+                .enumerate()
+                .filter_map(|(which, c)| c.map(|(idx, bytes)| (which, idx, bytes)))
+                .max_by_key(|&(_, _, bytes)| bytes);
+            let Some((which, idx, bytes)) = best else { break };
+            if bytes == 0 {
+                break;
+            }
+            match which {
+                0 => drop(self.pool.swap_remove(idx)),
+                1 => drop(self.pool_i8.swap_remove(idx)),
+                _ => drop(self.pool_i32.swap_remove(idx)),
+            }
+            self.pooled_bytes -= bytes;
+        }
+    }
+
+    /// `(index, capacity bytes)` of the largest buffer parked in `pool`.
+    fn largest_bytes<T>(pool: &[Vec<T>]) -> Option<(usize, usize)> {
+        pool.iter()
+            .enumerate()
+            .map(|(i, b)| (i, b.capacity() * std::mem::size_of::<T>()))
+            .max_by_key(|&(_, bytes)| bytes)
+    }
+
+    /// Total capacity currently parked across all typed pools, in bytes.
+    pub fn pooled_bytes(&self) -> usize {
+        self.pooled_bytes
+    }
+
     /// `(reused, freshly allocated)` checkout counters since creation.
     pub fn stats(&self) -> (u64, u64) {
         (self.reuses, self.allocs)
@@ -282,6 +334,64 @@ mod tests {
         assert_eq!((reuses, allocs), (2, 2));
         // typed pools are independent of the f32 pool count
         assert_eq!(ws.pooled(), 0);
+    }
+
+    #[test]
+    fn trim_drops_largest_first_and_respects_the_budget() {
+        let mut ws = Workspace::new();
+        // park a mix of sizes across the typed pools
+        ws.give(vec![0.0f32; 1 << 16]); // 256 KiB — the burst buffer
+        ws.give(vec![0.0f32; 64]);
+        ws.give_i8(vec![0i8; 128]);
+        ws.give_i32(vec![0i32; 64]);
+        let small_bytes = 64 * 4 + 128 + 64 * 4;
+        ws.trim(small_bytes);
+        // the giant f32 buffer is gone, every small buffer survived
+        assert_eq!(ws.pooled_bytes(), small_bytes);
+        assert_eq!(ws.pooled(), 1, "small f32 buffer retained");
+        // a take at the small size still reuses (no allocation)
+        let (_, allocs_before) = ws.stats();
+        let b = ws.take(64);
+        let (_, allocs_after) = ws.stats();
+        assert_eq!(allocs_after, allocs_before, "trim must not evict steady-state sizes");
+        ws.give(b);
+        // trimming to zero empties everything
+        ws.trim(0);
+        assert_eq!(ws.pooled_bytes(), 0);
+        assert_eq!(ws.pooled(), 0);
+        // idempotent on an empty pool
+        ws.trim(0);
+        assert_eq!(ws.pooled_bytes(), 0);
+    }
+
+    #[test]
+    fn steady_state_with_trim_between_batches_allocates_nothing() {
+        // the serving pattern: one giant burst, then ordinary batches
+        // with a trim after each — the burst is released, the ordinary
+        // sizes keep reusing
+        let mut ws = Workspace::new();
+        let budget = 64 * 1024usize; // bytes
+        let giant = ws.take(1 << 20);
+        ws.give(giant);
+        ws.trim(budget);
+        assert!(ws.pooled_bytes() <= budget, "burst released");
+        let sizes = [512usize, 256, 1024];
+        for &s in &sizes {
+            let b = ws.take(s);
+            ws.give(b);
+        }
+        ws.trim(budget);
+        let (_, warm) = ws.stats();
+        for _ in 0..5 {
+            for &s in &sizes {
+                let b = ws.take(s);
+                ws.give(b);
+            }
+            ws.trim(budget);
+        }
+        let (reuses, allocs) = ws.stats();
+        assert_eq!(allocs, warm, "steady state with per-batch trim must not allocate");
+        assert!(reuses > 0);
     }
 
     #[test]

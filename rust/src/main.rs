@@ -680,14 +680,26 @@ fn cmd_serve(p: &smoothrot::cli::Parsed) -> Result<()> {
                     }
                     if exec == ExecMode::Int8 {
                         let (executed, degraded) = registry.int8_stats();
+                        let batch_fused = registry.batch_fused();
                         println!(
-                            "int8 exec: {executed} requests ran the integer GEMM, {degraded} \
+                            "int8 exec: {executed} requests ran the integer GEMM \
+                             ({batch_fused} batch-fused into stacked GEMMs), {degraded} \
                              degraded to the f32 planned path"
                         );
                         if executed == 0 {
                             bail!(
                                 "serve: --exec int8 executed zero integer GEMMs — the \
                                  pre-quantized weights never matched the request shapes"
+                            );
+                        }
+                        // mirror of the int8_executed gate one level up:
+                        // integer GEMMs ran, but none through the stacked
+                        // batch-fused path — the hot path silently fell
+                        // back to per-job dispatch
+                        if batch_fused == 0 {
+                            bail!(
+                                "serve: --exec int8 executed zero batch-fused GEMMs — the \
+                                 stacked hot path silently fell back to per-job execution"
                             );
                         }
                     }

@@ -44,6 +44,18 @@ pub fn quant_difficulty(t: &Matrix, ch: Channels) -> f64 {
     std_dev(&channel_magnitudes(t, ch))
 }
 
+/// [`quant_difficulty`] with [`Channels::Columns`] over a contiguous
+/// run of row-major rows (`flat.len()` must be a multiple of `cols`) —
+/// the zero-copy equivalent of slicing those rows into their own
+/// matrix.  Both forms run the SAME column-magnitude fold
+/// ([`crate::tensor::col_norms_flat`], which [`Matrix::col_norms`]
+/// delegates to), so the result is **bit-identical** by construction;
+/// the batch-fused serving path relies on that to report per-job
+/// difficulty straight off its stacked activation plane.
+pub fn quant_difficulty_rows(flat: &[f32], cols: usize) -> f64 {
+    std_dev(&crate::tensor::col_norms_flat(flat, cols))
+}
+
 /// Excess kurtosis of the flattened tensor.
 pub fn kurtosis(t: &Matrix) -> f64 {
     let n = t.as_slice().len() as f64;
@@ -283,6 +295,26 @@ mod tests {
     fn difficulty_zero_for_flat_tensor() {
         let t = Matrix::from_fn(4, 8, |_, _| 1.5);
         assert!(quant_difficulty(&t, Channels::Columns) < 1e-12);
+    }
+
+    #[test]
+    fn difficulty_rows_bit_identical_to_matrix_form() {
+        // the zero-copy row-range fold must equal slicing the rows into
+        // their own matrix EXACTLY (the batch-fused path relies on it)
+        let t = Matrix::from_fn(7, 5, |i, j| ((i * 31 + j * 17) as f32).sin() * (j as f32 + 0.3));
+        let flat = t.as_slice();
+        for (r0, r1) in [(0usize, 7usize), (0, 3), (2, 6), (4, 5), (3, 3)] {
+            let rows = r1 - r0;
+            let sub = Matrix::from_vec(rows, 5, flat[r0 * 5..r1 * 5].to_vec());
+            assert_eq!(
+                quant_difficulty_rows(&flat[r0 * 5..r1 * 5], 5),
+                quant_difficulty(&sub, Channels::Columns),
+                "rows {r0}..{r1}"
+            );
+        }
+        // degenerate shapes
+        assert_eq!(quant_difficulty_rows(&[], 5), 0.0);
+        assert_eq!(quant_difficulty_rows(&[], 0), 0.0);
     }
 
     #[test]

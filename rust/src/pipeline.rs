@@ -162,8 +162,12 @@ pub fn run_full_experiment(
         // cache + workspace, kernels fanned out over pool.threads
         Backend::Native => {
             let threads = pool.threads;
-            run_jobs(jobs, pool, move |_| Ok(crate::serve::NativeBatchExecutor::with_threads(threads)))
-                .map_err(|e| anyhow!(e))?
+            run_jobs(jobs, pool, move |_| {
+                Ok(crate::serve::NativeJobExecutor(
+                    crate::serve::NativeBatchExecutor::with_threads(threads),
+                ))
+            })
+            .map_err(|e| anyhow!(e))?
         }
         Backend::Pjrt => {
             let dir = artifacts_dir.to_string();

@@ -25,7 +25,11 @@
 //! transformed per its calibration-plan entry (Eq. 4 smoothing rows,
 //! Eq. 3 rotation) and quantized per-channel **once** — the plan
 //! registry builds one per covered entry at load time so requests only
-//! ever quantize their activation rows.
+//! ever quantize their activation rows.  Alongside the row-major codes
+//! it carries a [`PackedWeight`]: the same codes rearranged into
+//! GEMM-ready output-channel tiles (i4 pre-unpacked to `i8` at pack
+//! time), which the register-blocked integer microkernel
+//! ([`crate::kernels::igemm::igemm_packed_into`]) streams contiguously.
 
 use crate::kernels::workspace::Workspace;
 use crate::metrics::{self, Channels};
@@ -282,17 +286,110 @@ impl QMatrix {
     }
 }
 
+/// A [`QMatrix`] weight rearranged into the integer GEMM's preferred
+/// memory layout: output-channel **tiles** of [`PackedWeight::TILE`]
+/// columns, each tile storing its `k` rows contiguously
+/// (`tile-major, k-contiguous` — panel element `(kk, jr)` of tile `t`
+/// lives at `t·k·TILE + kk·TILE + jr`).
+///
+/// Row-major weight codes make the microkernel's inner loop read a full
+/// `n`-wide row per `k` step — a strided, cache-hostile access once `n`
+/// outgrows a few cache lines.  Packed tiles let the register-blocked
+/// kernel ([`crate::kernels::igemm::igemm_packed_into`]) hold one tile's
+/// `TILE` partial sums in `i32` registers and stream exactly
+/// `TILE` contiguous bytes per `k` step.  Ragged trailing tiles are
+/// zero-padded (zero codes contribute nothing to the integer product),
+/// and `i4` storage is unpacked to plain `i8` **at pack time** — the
+/// plan registry packs once per entry at plan load, so the per-request
+/// hot loop never touches a nibble.
+///
+/// Packing reorders *storage only*: the per-element products and their
+/// `k`-ascending accumulation order are untouched, and integer addition
+/// is associative, so the packed GEMM is **bit-identical** to the
+/// row-major one (pinned in `rust/tests/proptest_batchfused.rs`).
+#[derive(Clone, Debug)]
+pub struct PackedWeight {
+    k: usize,
+    n: usize,
+    bits: u32,
+    /// Per-output-channel grid steps (length `n`).
+    scales: Vec<f32>,
+    /// `ceil(n / TILE)` panels of `k · TILE` codes each.
+    data: Vec<i8>,
+}
+
+impl PackedWeight {
+    /// Output channels per packed tile.  16 `i32` accumulators fit the
+    /// register budget of every target the crate cares about while
+    /// keeping ragged-edge waste under one tile.
+    pub const TILE: usize = 16;
+
+    /// Rearrange a per-channel-quantized weight into packed tiles,
+    /// unpacking `i4` nibble storage to plain `i8` on the way.
+    pub fn pack(qw: &QMatrix) -> Result<PackedWeight, String> {
+        if qw.axis() != ScaleAxis::PerCol {
+            return Err("packed weight needs per-column (per-channel) scales".to_string());
+        }
+        let (k, n) = qw.shape();
+        let tiles = n.div_ceil(Self::TILE);
+        let mut codes = vec![0i8; k * n];
+        qw.unpack_into(&mut codes);
+        let mut data = vec![0i8; tiles * k * Self::TILE];
+        for t in 0..tiles {
+            let j0 = t * Self::TILE;
+            let jw = Self::TILE.min(n - j0);
+            let panel = &mut data[t * k * Self::TILE..(t + 1) * k * Self::TILE];
+            for kk in 0..k {
+                for jr in 0..jw {
+                    panel[kk * Self::TILE + jr] = codes[kk * n + j0 + jr];
+                }
+            }
+        }
+        Ok(PackedWeight { k, n, bits: qw.bits(), scales: qw.scales().to_vec(), data })
+    }
+
+    /// Logical (unpadded) shape `(k, n)`.
+    pub fn shape(&self) -> (usize, usize) {
+        (self.k, self.n)
+    }
+
+    /// Grid bit width of the packed codes.
+    pub fn bits(&self) -> u32 {
+        self.bits
+    }
+
+    /// Per-output-channel grid steps Δw (length `n`).
+    pub fn scales(&self) -> &[f32] {
+        &self.scales
+    }
+
+    /// Number of packed tiles (`ceil(n / TILE)`).
+    pub fn tiles(&self) -> usize {
+        self.n.div_ceil(Self::TILE)
+    }
+
+    /// Tile `t`'s panel: `k · TILE` codes, `k`-contiguous rows of
+    /// `TILE` columns (trailing tile zero-padded).
+    pub fn panel(&self, t: usize) -> &[i8] {
+        &self.data[t * self.k * Self::TILE..(t + 1) * self.k * Self::TILE]
+    }
+}
+
 /// A serving-ready weight: transformed per its calibration-plan entry
 /// and quantized per-channel **once**, plus the transformed weight's
 /// difficulty metric so the integer request path never needs the f32
-/// weight again.  Codes are kept as plain `i8` even for 4-bit grids —
-/// this operand is multiplied on every request, so GEMM-ready beats
-/// half-sized (packed-i4 [`QMatrix::quantize`] remains the at-rest /
-/// artifact form).
+/// weight again.  Only the GEMM-ready tile layout is retained
+/// ([`PackedWeight`]: plain `i8` codes even for 4-bit grids, packed-i4
+/// [`QMatrix::quantize`] remains the at-rest / artifact form) — the
+/// row-major [`QMatrix`] built during preparation is transient, so a
+/// long-lived registry pins one copy of every covered weight's codes,
+/// not two.
 #[derive(Clone, Debug)]
 pub struct PlannedWeight {
-    /// Per-channel quantized transformed weight (always `i8` codes).
-    pub qw: QMatrix,
+    /// The transformed, per-channel-quantized weight in the
+    /// microkernel's tile layout — the only form the serving GEMM
+    /// reads (shape checks go through [`PackedWeight::shape`]).
+    pub packed: PackedWeight,
     /// `metrics::quant_difficulty` of the transformed f32 weight,
     /// captured at preparation time (the integer path reports it
     /// without re-materializing the transformed weight).
@@ -303,8 +400,9 @@ impl PlannedWeight {
     /// Quantize an already-transformed weight per-channel at `bits`.
     pub fn prepare(wh: &Matrix, bits: u32) -> Result<PlannedWeight, String> {
         let qw = QMatrix::quantize_i8(wh, bits, ScaleAxis::PerCol)?;
+        let packed = PackedWeight::pack(&qw)?;
         let w_difficulty = metrics::quant_difficulty(wh, Channels::Rows);
-        Ok(PlannedWeight { qw, w_difficulty })
+        Ok(PlannedWeight { packed, w_difficulty })
     }
 
     /// Apply a plan entry's weight-side transform (Eq. 4 row scaling by
@@ -420,6 +518,43 @@ mod tests {
     }
 
     #[test]
+    fn packed_weight_reorders_codes_without_changing_them() {
+        let w = rand_matrix(13, 21, 9); // ragged: 21 = 16 + 5
+        for bits in [4u32, 8] {
+            // pack from both storage kinds: plain i8 and nibble-packed i4
+            for qw in [
+                QMatrix::quantize_i8(&w, bits, ScaleAxis::PerCol).unwrap(),
+                QMatrix::quantize(&w, bits, ScaleAxis::PerCol).unwrap(),
+            ] {
+                let pw = PackedWeight::pack(&qw).unwrap();
+                assert_eq!(pw.shape(), qw.shape());
+                assert_eq!(pw.bits(), bits);
+                assert_eq!(pw.scales(), qw.scales());
+                assert_eq!(pw.tiles(), 2);
+                let mut codes = vec![0i8; 13 * 21];
+                qw.unpack_into(&mut codes);
+                for t in 0..pw.tiles() {
+                    let panel = pw.panel(t);
+                    let j0 = t * PackedWeight::TILE;
+                    for kk in 0..13 {
+                        for jr in 0..PackedWeight::TILE {
+                            let want = if j0 + jr < 21 { codes[kk * 21 + j0 + jr] } else { 0 };
+                            assert_eq!(
+                                panel[kk * PackedWeight::TILE + jr],
+                                want,
+                                "bits {bits} tile {t} k {kk} jr {jr}"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+        // per-row scales are rejected
+        let qr = QMatrix::quantize(&w, 8, ScaleAxis::PerRow).unwrap();
+        assert!(PackedWeight::pack(&qr).unwrap_err().contains("per-column"));
+    }
+
+    #[test]
     fn planned_weight_transforms_then_quantizes() {
         let w = rand_matrix(16, 6, 3);
         let s: Vec<f32> = (0..16).map(|i| 1.0 + 0.1 * i as f32).collect();
@@ -430,7 +565,12 @@ mod tests {
         wh.scale_rows_mut(&s);
         let wh = rot.apply_left_t(&wh, 1);
         let want = QMatrix::quantize(&wh, 4, ScaleAxis::PerCol).unwrap();
-        assert_eq!(pw.qw.dequantize().as_slice(), want.dequantize().as_slice());
+        let want_packed = PackedWeight::pack(&want).unwrap();
+        assert_eq!(pw.packed.shape(), want_packed.shape());
+        assert_eq!(pw.packed.scales(), want_packed.scales());
+        for t in 0..want_packed.tiles() {
+            assert_eq!(pw.packed.panel(t), want_packed.panel(t), "tile {t}");
+        }
         assert_eq!(pw.w_difficulty, metrics::quant_difficulty(&wh, Channels::Rows));
         // mismatched transform widths are named errors
         assert!(PlannedWeight::from_plan(&w, Some(&s[..4]), None, 4, 1).is_err());

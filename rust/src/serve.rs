@@ -31,11 +31,16 @@
 //!   `tenants x queue_depth + 2 x workers x max_batch`.
 //! * **Batching** — the scheduler coalesces requests whose [`BatchKey`]
 //!   (module, bits, alpha, shape) matches into one dispatch of at most
-//!   [`ServeConfig::max_batch`] jobs, lingering briefly for stragglers.
-//!   Within a batch the executor amortizes per-dispatch scheduling cost
-//!   and shared preparation (e.g. [`NativeBatchExecutor`] builds each
-//!   Hadamard rotation once per width).  Requests of the same tenant and
-//!   key stay FIFO relative to each other.
+//!   [`ServeConfig::max_batch`] jobs, lingering briefly for stragglers;
+//!   tenant queues are indexed by key, so forming a batch never rescans
+//!   a backlog.  A batch is not just a queueing unit: on plan-covered
+//!   int8 cells [`NativeBatchExecutor`]'s `run_batch` executes the whole
+//!   same-cell group as ONE fused kernel invocation — activation rows
+//!   stacked into one tall matrix, one shared transform + quantize
+//!   pass, one tall integer GEMM against the pre-quantized weight —
+//!   with bit-identical per-job results
+//!   ([`crate::kernels::fused::analyze_planned_int_batch`]).  Requests
+//!   of the same tenant and key stay FIFO relative to each other.
 //! * **Fair share** — the batch *seed* rotates round-robin over tenants,
 //!   and batch *filling* takes at most one request per tenant per pass,
 //!   so a tenant submitting 10x the load gets batches, not the machine.
@@ -93,11 +98,14 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use crate::calib::registry::PlanRegistry;
+use crate::calib::registry::{PlanRegistry, ResolvedEntry};
 use crate::coordinator::{Executor, Job};
+use crate::kernels::par::{self, ThreadPool};
 use crate::kernels::workspace::Workspace;
 use crate::metrics::{CacheStats, Percentiles};
+use crate::qtensor::PlannedWeight;
 use crate::runtime::AnalyzeOut;
+use crate::tensor::Matrix;
 use crate::transforms::RotationCache;
 
 /// Identifier of one tenant (caller) of the serving core.
@@ -273,20 +281,41 @@ impl ExecMode {
 /// ([`crate::kernels::fused::analyze_all_modes`]): one rotation per
 /// distinct activation width (FWHT-planned, hit/miss counted) and one
 /// reusable [`Workspace`], both shared by every job the executor ever
-/// sees — so a warm worker's matrix-sized scratch is fully pooled.  It
-/// implements [`Executor`], so the blanket adapter makes it a
-/// [`BatchExecutor`] whose shared prep is amortized across each batch.
+/// sees — so a warm worker's matrix-sized scratch is fully pooled.
+///
+/// It implements [`BatchExecutor`] **directly** (not via the blanket
+/// per-job adapter): on plan-covered int8 cells, `run_batch` stacks a
+/// whole same-cell group into ONE fused kernel invocation — one shared
+/// transform pass, one per-token quantize, one tall integer GEMM
+/// against the entry's packed weight
+/// ([`crate::kernels::fused::analyze_planned_int_batch`]) — and splits
+/// the rows back per job, bit-identically to per-job execution.  All
+/// other cells (f32, uncovered, weightless) keep the per-job path.
+/// When `threads > 1` the executor also owns a persistent
+/// [`ThreadPool`], installed around every run so the kernels dispatch
+/// to parked workers instead of spawning scoped threads per call.
 #[derive(Debug)]
 pub struct NativeBatchExecutor {
     cache: RotationCache,
     scratch: Workspace,
     /// Math threads inside the kernels (`0` = all cores).
     threads: usize,
+    /// Persistent kernel worker pool (only when the resolved thread
+    /// count exceeds one); see [`crate::kernels::par::with_pool`].
+    pool: Option<Arc<ThreadPool>>,
     /// Calibration plan to consult per job (None = always run the full
     /// four-mode analyze).
     plan: Option<Arc<PlanRegistry>>,
     /// Arithmetic on plan-covered cells.
     exec: ExecMode,
+    /// Whether `run_batch` may stack plan-covered int8 groups into
+    /// fused GEMMs (default on; benches disable it to measure the
+    /// per-job baseline).
+    fuse: bool,
+    /// Between-batches workspace retention budget in bytes (default
+    /// [`NativeBatchExecutor::TRIM_BYTES`]; see
+    /// [`NativeBatchExecutor::with_trim_budget`]).
+    trim_bytes: usize,
 }
 
 impl Default for NativeBatchExecutor {
@@ -296,6 +325,18 @@ impl Default for NativeBatchExecutor {
 }
 
 impl NativeBatchExecutor {
+    /// Default steady-state scratch budget: after each batch the
+    /// executor trims its [`Workspace`] back under this many retained
+    /// bytes ([`Workspace::trim`]), so one giant request releases its
+    /// burst scratch instead of pinning the high-water mark for the
+    /// worker's lifetime.  Ordinary serving traffic fits comfortably
+    /// underneath, so the steady state stays allocation-free (pinned by
+    /// a test below).  Deployments whose *legitimate* per-batch scratch
+    /// exceeds this (very large shapes) should raise the budget with
+    /// [`NativeBatchExecutor::with_trim_budget`] — otherwise every
+    /// batch would evict and re-allocate its working set.
+    pub const TRIM_BYTES: usize = 16 << 20;
+
     /// Single-threaded kernels (parallelism comes from the worker
     /// pool); empty rotation cache and workspace.
     pub fn new() -> Self {
@@ -304,15 +345,40 @@ impl NativeBatchExecutor {
 
     /// Executor whose kernels fan out over `threads` math threads
     /// (`0` = all cores) — for deployments with more cores than
-    /// workers.
+    /// workers.  With more than one resolved thread the executor spawns
+    /// its persistent kernel pool up front, so no serving request ever
+    /// pays a thread-spawn.
     pub fn with_threads(threads: usize) -> Self {
+        let resolved = par::resolve_threads(threads);
         Self {
             cache: RotationCache::new(),
             scratch: Workspace::new(),
             threads,
+            pool: (resolved > 1).then(|| Arc::new(ThreadPool::new(resolved))),
             plan: None,
             exec: ExecMode::F32,
+            fuse: true,
+            trim_bytes: Self::TRIM_BYTES,
         }
+    }
+
+    /// Override the between-batches workspace retention budget
+    /// ([`NativeBatchExecutor::TRIM_BYTES`] by default).  Size it above
+    /// the steady-state per-batch scratch of your largest legitimate
+    /// shapes — a budget *below* the working set makes every batch
+    /// evict and re-allocate; `usize::MAX` disables trimming entirely.
+    pub fn with_trim_budget(mut self, bytes: usize) -> Self {
+        self.trim_bytes = bytes;
+        self
+    }
+
+    /// Disable (or re-enable) stacked batch fusion — the per-job
+    /// baseline knob the `serve_plan_int8_96req` bench scenario uses to
+    /// quantify the fused path's win.  Production serving keeps the
+    /// default (enabled).
+    pub fn with_batch_fusion(mut self, fuse: bool) -> Self {
+        self.fuse = fuse;
+        self
     }
 
     /// Plan-driven executor (`smoothrot serve --plan`): each job is
@@ -349,60 +415,90 @@ impl NativeBatchExecutor {
     /// equality is not verified per request; that is the "the registry
     /// IS the model" analogue of the calibrated-alpha override above).
     pub fn with_plan_exec(plan: Arc<PlanRegistry>, threads: usize, exec: ExecMode) -> Self {
-        Self {
-            cache: RotationCache::new(),
-            scratch: Workspace::new(),
-            threads,
-            plan: Some(plan),
-            exec,
-        }
+        let mut e = Self::with_threads(threads);
+        e.plan = Some(plan);
+        e.exec = exec;
+        e
     }
-}
 
-impl Executor for NativeBatchExecutor {
-    fn run(&mut self, job: &Job) -> Result<AnalyzeOut, String> {
-        if let Some(reg) = &self.plan {
+    /// Process one job through the plan-driven / full-analyze dispatch
+    /// (the per-job path; the serving core reaches the same logic — or
+    /// its stacked batch fusion — through [`BatchExecutor::run_batch`]).
+    pub fn run(&mut self, job: &Job) -> Result<AnalyzeOut, String> {
+        let pool = self.pool.clone();
+        par::with_pool(pool, || self.run_one(job))
+    }
+
+    /// The per-job dispatch body (callers have the kernel pool
+    /// installed).
+    fn run_one(&mut self, job: &Job) -> Result<AnalyzeOut, String> {
+        if let Some(reg) = self.plan.clone() {
             if let Some(e) = reg.lookup(job.module, job.layer, job.bits, job.x.cols()) {
-                let smooth = match (&e.smooth, &e.smooth_inv) {
-                    (Some(s), Some(inv)) => Some((s.as_slice(), inv.as_slice())),
-                    _ => None,
-                };
                 if self.exec == ExecMode::Int8 {
                     let usable = e
                         .qweight
-                        .as_ref()
-                        .filter(|pw| pw.qw.shape() == (job.x.cols(), job.w.cols()));
+                        .clone()
+                        .filter(|pw| pw.packed.shape() == (job.x.cols(), job.w.cols()));
                     // count the outcome either way: a missing or
                     // shape-mismatched pre-quantized weight silently
                     // degrades to the f32 planned path below, and the
                     // degradation must be observable (int8_stats)
                     reg.note_int8(usable.is_some());
                     if let Some(pw) = usable {
-                        return crate::kernels::fused::analyze_planned_int(
-                            &job.x,
-                            &job.w,
-                            job.bits,
-                            e.mode,
-                            smooth,
-                            e.rotation.as_deref(),
-                            pw.as_ref(),
-                            &mut self.scratch,
-                            self.threads,
-                        );
+                        return self.run_planned_int(job, &e, &pw);
                     }
                 }
-                return crate::kernels::fused::analyze_planned(
-                    &job.x,
-                    &job.w,
-                    job.bits,
-                    e.mode,
-                    smooth,
-                    e.rotation.as_deref(),
-                    &mut self.scratch,
-                    self.threads,
-                );
+                return self.run_planned_f32(job, &e);
             }
         }
+        self.run_full(job)
+    }
+
+    /// The resolved entry's smoothing pair, gated to what its mode uses.
+    fn smooth_pair(e: &ResolvedEntry) -> Option<(&[f32], &[f32])> {
+        match (&e.smooth, &e.smooth_inv) {
+            (Some(s), Some(inv)) => Some((s.as_slice(), inv.as_slice())),
+            _ => None,
+        }
+    }
+
+    /// Planned integer evaluation of one job (covered cell with a
+    /// usable pre-quantized weight).
+    fn run_planned_int(
+        &mut self,
+        job: &Job,
+        e: &ResolvedEntry,
+        pw: &PlannedWeight,
+    ) -> Result<AnalyzeOut, String> {
+        crate::kernels::fused::analyze_planned_int(
+            &job.x,
+            &job.w,
+            job.bits,
+            e.mode,
+            Self::smooth_pair(e),
+            e.rotation.as_deref(),
+            pw,
+            &mut self.scratch,
+            self.threads,
+        )
+    }
+
+    /// Planned f32 (simulated-quantization) evaluation of one job.
+    fn run_planned_f32(&mut self, job: &Job, e: &ResolvedEntry) -> Result<AnalyzeOut, String> {
+        crate::kernels::fused::analyze_planned(
+            &job.x,
+            &job.w,
+            job.bits,
+            e.mode,
+            Self::smooth_pair(e),
+            e.rotation.as_deref(),
+            &mut self.scratch,
+            self.threads,
+        )
+    }
+
+    /// Full four-mode analyze of one uncovered job.
+    fn run_full(&mut self, job: &Job) -> Result<AnalyzeOut, String> {
         crate::kernels::fused::analyze_all_modes(
             &job.x,
             &job.w,
@@ -414,8 +510,120 @@ impl Executor for NativeBatchExecutor {
         )
     }
 
+    /// The batch body (callers have the kernel pool installed): stack
+    /// each plan-covered int8 group into one fused kernel invocation,
+    /// run everything else per job.
+    fn run_batch_inner(&mut self, jobs: &[Job]) -> Vec<Result<AnalyzeOut, String>> {
+        let fused_eligible = self.fuse && self.exec == ExecMode::Int8 && self.plan.is_some();
+        if !fused_eligible {
+            return jobs.iter().map(|j| self.run_one(j)).collect();
+        }
+        let reg = self.plan.clone().expect("checked above");
+        let mut results: Vec<Option<Result<AnalyzeOut, String>>> =
+            (0..jobs.len()).map(|_| None).collect();
+        // Group by the full execution identity.  The scheduler's
+        // BatchKey deliberately omits the layer (layers coalesce fine
+        // for dispatch), but the planned weight is per (module, layer),
+        // so fusion splits on it; shapes are re-derived defensively
+        // because run_batch accepts arbitrary job mixes.
+        let mut groups: BTreeMap<(&'static str, usize, u32, usize, usize, usize), Vec<usize>> =
+            BTreeMap::new();
+        for (i, j) in jobs.iter().enumerate() {
+            groups
+                .entry((j.module, j.layer, j.bits, j.x.cols(), j.w.rows(), j.w.cols()))
+                .or_default()
+                .push(i);
+        }
+        for ((module, layer, bits, c_in, _w_rows, c_out), idxs) in groups {
+            let n = idxs.len() as u64;
+            // one lookup resolves the whole group; the extra requests
+            // are credited so the coverage counters keep their
+            // per-request meaning
+            let Some(e) = reg.lookup(module, layer, bits, c_in) else {
+                reg.note_fallback_many(n - 1);
+                for &i in &idxs {
+                    results[i] = Some(self.run_full(&jobs[i]));
+                }
+                continue;
+            };
+            reg.note_planned_many(n - 1);
+            let usable = e.qweight.clone().filter(|pw| pw.packed.shape() == (c_in, c_out));
+            reg.note_int8_many(usable.is_some(), n);
+            let Some(pw) = usable else {
+                for &i in &idxs {
+                    results[i] = Some(self.run_planned_f32(&jobs[i], &e));
+                }
+                continue;
+            };
+            let pairs: Vec<(&Matrix, &Matrix)> =
+                idxs.iter().map(|&i| (&jobs[i].x, &jobs[i].w)).collect();
+            match crate::kernels::fused::analyze_planned_int_batch(
+                &pairs,
+                bits,
+                e.mode,
+                Self::smooth_pair(&e),
+                e.rotation.as_deref(),
+                &pw,
+                &mut self.scratch,
+                self.threads,
+            ) {
+                Ok(outs) => {
+                    reg.note_batch_fused(n);
+                    for (&i, out) in idxs.iter().zip(outs) {
+                        results[i] = Some(Ok(out));
+                    }
+                }
+                Err(msg) => {
+                    for &i in &idxs {
+                        results[i] = Some(Err(msg.clone()));
+                    }
+                }
+            }
+        }
+        results.into_iter().map(|r| r.expect("every job assigned")).collect()
+    }
+}
+
+impl BatchExecutor for NativeBatchExecutor {
+    /// One coalesced batch as (at most a handful of) fused kernel
+    /// invocations: plan-covered int8 groups are stacked — one shared
+    /// transform pass, one per-token quantize, ONE tall integer GEMM
+    /// against the pre-quantized weight — and split back per job,
+    /// bit-identical to per-job execution (the transform, Eq. 1 grids
+    /// and GEMM rows are all row-local; pinned by
+    /// `rust/tests/proptest_batchfused.rs`).  Uncovered / f32 /
+    /// weightless cells fall back to the per-job path inside the same
+    /// call.  Between batches the executor trims burst scratch back
+    /// under [`NativeBatchExecutor::TRIM_BYTES`].
+    fn run_batch(&mut self, jobs: &[Job]) -> Vec<Result<AnalyzeOut, String>> {
+        let pool = self.pool.clone();
+        let out = par::with_pool(pool, || self.run_batch_inner(jobs));
+        self.scratch.trim(self.trim_bytes);
+        out
+    }
+
     fn rotation_stats(&self) -> Option<CacheStats> {
         Some(self.cache.stats())
+    }
+}
+
+/// Per-job [`Executor`] view of [`NativeBatchExecutor`] for the
+/// experiment coordinator's pool ([`crate::coordinator::run_jobs`]),
+/// which dispatches one job at a time.  The serving core uses
+/// [`NativeBatchExecutor`] directly as a [`BatchExecutor`] (whose
+/// `run_batch` stacks plan-covered int8 groups into fused GEMMs); this
+/// thin adapter exists because the blanket `Executor → BatchExecutor`
+/// impl would otherwise conflict with that dedicated batch impl.
+#[derive(Debug, Default)]
+pub struct NativeJobExecutor(pub NativeBatchExecutor);
+
+impl Executor for NativeJobExecutor {
+    fn run(&mut self, job: &Job) -> Result<AnalyzeOut, String> {
+        self.0.run(job)
+    }
+
+    fn rotation_stats(&self) -> Option<CacheStats> {
+        Some(self.0.cache.stats())
     }
 }
 
@@ -545,6 +753,71 @@ struct Pending {
     admitted: Instant,
 }
 
+/// One tenant's admission queue, indexed by [`BatchKey`] so batch
+/// formation never rescans it.
+///
+/// The naive `VecDeque` + `iter().position(key)` fill made
+/// [`form_batch`] O(batch × queue-depth) — quadratic under deep
+/// same-key queues, exactly the backlog shape a hot key produces.  Here
+/// every request gets an ascending admission sequence number; `items`
+/// keeps FIFO order (a `BTreeMap` keyed by sequence) and `by_key` maps
+/// each [`BatchKey`] to its requests' sequence numbers in admission
+/// order.  Seeding pops the overall front, filling pops a key's front —
+/// both O(log n) — so forming a batch is O(batch · log depth), and
+/// same-key requests of a tenant still complete FIFO relative to each
+/// other (each key deque ascends in admission order).
+#[derive(Default)]
+struct TenantQueue {
+    /// Admission-ordered requests (key = per-tenant sequence number).
+    items: BTreeMap<u64, Pending>,
+    /// Per-key index into `items`; every deque ascends in sequence.
+    by_key: BTreeMap<BatchKey, VecDeque<u64>>,
+    next_seq: u64,
+}
+
+impl TenantQueue {
+    fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    fn push_back(&mut self, p: Pending) {
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.by_key.entry(BatchKey::of(&p.job)).or_default().push_back(seq);
+        self.items.insert(seq, p);
+    }
+
+    /// Pop the oldest request of any key.
+    fn pop_front(&mut self) -> Option<Pending> {
+        let (&seq, _) = self.items.iter().next()?;
+        let p = self.items.remove(&seq).expect("peeked above");
+        let key = BatchKey::of(&p.job);
+        let q = self.by_key.get_mut(&key).expect("indexed at push");
+        // the overall-oldest request is necessarily its key's oldest
+        debug_assert_eq!(q.front(), Some(&seq));
+        q.pop_front();
+        if q.is_empty() {
+            self.by_key.remove(&key);
+        }
+        Some(p)
+    }
+
+    /// Pop the oldest request of `key`, if any — the O(log) replacement
+    /// for the linear rescan.
+    fn pop_key(&mut self, key: &BatchKey) -> Option<Pending> {
+        let q = self.by_key.get_mut(key)?;
+        let seq = q.pop_front().expect("index never holds empty deques");
+        if q.is_empty() {
+            self.by_key.remove(key);
+        }
+        Some(self.items.remove(&seq).expect("index points into items"))
+    }
+}
+
 /// Response-side metadata of one batched request (everything small the
 /// worker needs after execution, so the jobs — whose matrices dominate
 /// request memory — go to the executor without being cloned).
@@ -584,7 +857,7 @@ struct CenterStats {
 
 /// Admission + scheduling state (one lock).
 struct Center {
-    queues: BTreeMap<TenantId, VecDeque<Pending>>,
+    queues: BTreeMap<TenantId, TenantQueue>,
     /// Tenant ids in first-seen order; the scheduler's round-robin ring.
     ring: Vec<TenantId>,
     /// Next ring position to seed a batch from.
@@ -653,9 +926,10 @@ fn form_batch(c: &mut Center, max_batch: usize) -> Batch {
     let mut items = vec![first];
     // Fill: round-robin passes over the ring starting after the seed,
     // taking at most one matching request per tenant per pass (fair
-    // share).  Matching requests may sit behind other keys, so each
-    // tenant queue is scanned in order — same-key requests of a tenant
-    // therefore stay FIFO relative to each other.
+    // share).  Each take pops the key's oldest request straight off the
+    // tenant's [`BatchKey`] index (O(log) instead of a linear queue
+    // rescan), so same-key requests of a tenant stay FIFO relative to
+    // each other and batch formation is O(batch · log depth).
     'fill: loop {
         let mut progressed = false;
         for k in 0..n {
@@ -663,9 +937,8 @@ fn form_batch(c: &mut Center, max_batch: usize) -> Batch {
                 break 'fill;
             }
             let t = c.ring[(seed_pos + 1 + k) % n];
-            let q = c.queues.get_mut(&t).unwrap();
-            if let Some(i) = q.iter().position(|p| BatchKey::of(&p.job) == key) {
-                items.push(q.remove(i).unwrap());
+            if let Some(p) = c.queues.get_mut(&t).unwrap().pop_key(&key) {
+                items.push(p);
                 progressed = true;
             }
         }
@@ -780,7 +1053,7 @@ impl Server {
                 return Err(SubmitError::Closed);
             }
             if !center.queues.contains_key(&tenant) {
-                center.queues.insert(tenant, VecDeque::new());
+                center.queues.insert(tenant, TenantQueue::default());
                 center.ring.push(tenant);
             }
             if center.queues[&tenant].len() < self.shared.cfg.queue_depth {
@@ -1520,6 +1793,212 @@ mod tests {
         // only the Int8 executor bumps the int8 counters, and it
         // really ran the integer pipeline (no silent degradation)
         assert_eq!(reg.int8_stats(), (1, 0));
+    }
+
+    #[test]
+    fn mixed_key_deep_queue_keeps_per_key_fifo() {
+        // one tenant interleaves two keys deeply; the key-indexed queue
+        // must form key-pure batches that preserve admission order per
+        // key (the O(batch) form_batch satellite)
+        let cfg = ServeConfig {
+            workers: 1,
+            max_batch: 4,
+            queue_depth: 64,
+            paused: true,
+            ..Default::default()
+        };
+        let reqs: Vec<(TenantId, Job)> = (0..24)
+            .map(|i| (0, job(i, if i % 2 == 0 { "k_proj" } else { "o_proj" }, 8, 8)))
+            .collect();
+        let (responses, m) = serve_all(cfg, reqs, |_| Ok(SleepExec { micros: 0 })).unwrap();
+        assert_eq!(m.completed, 24);
+        assert_eq!(m.batches, 6, "12 jobs per key at max_batch 4");
+        let mut by_batch: BTreeMap<u64, Vec<u64>> = BTreeMap::new();
+        for r in &responses {
+            by_batch.entry(r.batch_id).or_default().push(r.id);
+        }
+        for (id, members) in &by_batch {
+            assert_eq!(members.len(), 4, "batch {id} not full");
+            assert!(
+                members.windows(2).all(|w| w[0] % 2 == w[1] % 2),
+                "batch {id} mixes keys: {members:?}"
+            );
+            assert!(
+                members.windows(2).all(|w| w[0] < w[1]),
+                "batch {id} violates per-key FIFO: {members:?}"
+            );
+        }
+    }
+
+    /// Shared fixture for the batch-fusion tests: a 2-layer int8 plan
+    /// with per-layer weights installed, plus a same-key request mix
+    /// across both layers and varying row counts.
+    fn int8_fixture(c_in: usize, n_jobs: usize) -> (Arc<PlanRegistry>, Vec<(TenantId, Job)>) {
+        use crate::calib::plan::{PlanEntry, Provenance, QuantPlan};
+        use crate::transforms::Mode;
+
+        let plan = QuantPlan {
+            provenance: Provenance::default(),
+            entries: (0..2)
+                .map(|layer| PlanEntry {
+                    module: "k_proj".into(),
+                    layer,
+                    bits: 4,
+                    c_in,
+                    mode: Mode::Rotate,
+                    alpha: 0.5,
+                    predicted_error: 1.0,
+                    difficulty_before: 2.0,
+                    difficulty_after: 1.0,
+                    smooth: None,
+                })
+                .collect(),
+        };
+        let reg = Arc::new(PlanRegistry::from_plan(&plan).unwrap());
+        reg.set_weight_provider(Box::new(move |module, layer| {
+            (module == "k_proj" && layer < 2).then(|| {
+                let mut rng = Rng::new(900 + layer as u64);
+                Matrix::from_vec(c_in, 8, rng.normals_f32(c_in * 8))
+            })
+        }))
+        .unwrap();
+        let mut rng = Rng::new(901);
+        let reqs = (0..n_jobs)
+            .map(|i| {
+                let layer = i % 2;
+                let rows = 2 + (i % 5);
+                let x = Matrix::from_vec(rows, c_in, rng.normals_f32(rows * c_in));
+                let w = {
+                    let mut wr = Rng::new(900 + layer as u64);
+                    Matrix::from_vec(c_in, 8, wr.normals_f32(c_in * 8))
+                };
+                let j = Job {
+                    id: i as u64,
+                    layer,
+                    module: "k_proj",
+                    x,
+                    w,
+                    alpha: 0.5,
+                    bits: 4,
+                };
+                (0, j)
+            })
+            .collect();
+        (reg, reqs)
+    }
+
+    #[test]
+    fn batch_fused_int8_is_bit_identical_to_per_job() {
+        // the tentpole pin at the executor level: run_batch's stacked
+        // path must reproduce per-job execution exactly, across mixed
+        // layers and row counts within one dispatch
+        let (reg_fused, reqs) = int8_fixture(16, 10);
+        let jobs: Vec<Job> = reqs.iter().map(|(_, j)| j.clone()).collect();
+        let mut fused_exec =
+            NativeBatchExecutor::with_plan_exec(Arc::clone(&reg_fused), 1, ExecMode::Int8);
+        let fused = fused_exec.run_batch(&jobs);
+
+        let (reg_pj, _) = int8_fixture(16, 10);
+        let mut per_job_exec =
+            NativeBatchExecutor::with_plan_exec(Arc::clone(&reg_pj), 1, ExecMode::Int8)
+                .with_batch_fusion(false);
+        let per_job = per_job_exec.run_batch(&jobs);
+
+        assert_eq!(fused.len(), per_job.len());
+        for (i, (a, b)) in fused.iter().zip(&per_job).enumerate() {
+            let (a, b) = (a.as_ref().unwrap(), b.as_ref().unwrap());
+            assert_eq!(a.errors, b.errors, "job {i} errors must be bit-identical");
+            assert_eq!(a.act_difficulty, b.act_difficulty, "job {i} difficulty");
+            assert_eq!(a.w_difficulty, b.w_difficulty, "job {i} w difficulty");
+            assert_eq!(a.act_absmax, b.act_absmax, "job {i} absmax");
+        }
+        // the fused run really stacked: 10 jobs in 2 fused groups, all
+        // counted (and observable — this is the batch_fused counter the
+        // serve CLI gates on)
+        assert_eq!(reg_fused.batch_fused(), 10);
+        assert_eq!(reg_fused.int8_stats(), (10, 0));
+        assert_eq!(reg_fused.stats(), (10, 0), "coverage keeps per-request meaning");
+        // the per-job baseline never touches the fused counter
+        assert_eq!(reg_pj.batch_fused(), 0);
+        assert_eq!(reg_pj.int8_stats(), (10, 0));
+    }
+
+    #[test]
+    fn batch_fused_serving_end_to_end_matches_per_job_serving() {
+        let (reg_fused, reqs) = int8_fixture(16, 12);
+        let cfg = ServeConfig {
+            workers: 1,
+            max_batch: 6,
+            queue_depth: 64,
+            paused: true,
+            ..Default::default()
+        };
+        let rf = Arc::clone(&reg_fused);
+        let (responses_fused, m1) = serve_all(cfg, reqs.clone(), move |_| {
+            Ok(NativeBatchExecutor::with_plan_exec(Arc::clone(&rf), 1, ExecMode::Int8))
+        })
+        .unwrap();
+        assert_eq!(m1.completed, 12);
+        assert!(reg_fused.batch_fused() > 0, "scheduler batches must reach the fused path");
+
+        let (reg_pj, _) = int8_fixture(16, 12);
+        let rp = Arc::clone(&reg_pj);
+        let (responses_pj, m2) = serve_all(cfg, reqs, move |_| {
+            Ok(NativeBatchExecutor::with_plan_exec(Arc::clone(&rp), 1, ExecMode::Int8)
+                .with_batch_fusion(false))
+        })
+        .unwrap();
+        assert_eq!(m2.completed, 12);
+        assert_eq!(reg_pj.batch_fused(), 0);
+
+        let by_id = |rs: &[Response]| -> BTreeMap<u64, AnalyzeOut> {
+            rs.iter().map(|r| (r.id, r.out.as_ref().unwrap().clone())).collect()
+        };
+        let (fused, pj) = (by_id(&responses_fused), by_id(&responses_pj));
+        assert_eq!(fused.len(), 12);
+        for (id, a) in &fused {
+            let b = &pj[id];
+            assert_eq!(a.errors, b.errors, "request {id} diverged between paths");
+            assert_eq!(a.act_difficulty, b.act_difficulty, "request {id} difficulty");
+            assert_eq!(a.act_absmax, b.act_absmax, "request {id} absmax");
+        }
+    }
+
+    #[test]
+    fn run_batch_trims_burst_scratch_between_batches() {
+        // simulate the aftermath of a giant request by parking burst
+        // buffers in the executor's scratch; the next run_batch must
+        // shrink retained capacity back under the steady budget
+        let mut exec = NativeBatchExecutor::new();
+        exec.scratch.give(vec![0.0f32; (NativeBatchExecutor::TRIM_BYTES * 2) / 4]);
+        assert!(exec.scratch.pooled_bytes() > NativeBatchExecutor::TRIM_BYTES);
+        let small = job(1, "k_proj", 8, 8);
+        let out = exec.run_batch(std::slice::from_ref(&small));
+        assert!(out[0].is_ok());
+        assert!(
+            exec.scratch.pooled_bytes() <= NativeBatchExecutor::TRIM_BYTES,
+            "burst scratch must be trimmed between batches ({} bytes retained)",
+            exec.scratch.pooled_bytes()
+        );
+        // ordinary traffic afterwards reaches an allocation-free steady
+        // state despite the per-batch trim
+        for _ in 0..3 {
+            exec.run_batch(std::slice::from_ref(&small));
+        }
+        let (_, warm) = exec.scratch.stats();
+        for _ in 0..4 {
+            exec.run_batch(std::slice::from_ref(&small));
+        }
+        let (_, allocs) = exec.scratch.stats();
+        assert_eq!(allocs, warm, "steady state with per-batch trim must not allocate");
+        // a raised budget retains the burst (big-shape deployments)
+        let mut lax = NativeBatchExecutor::new().with_trim_budget(usize::MAX);
+        lax.scratch.give(vec![0.0f32; (NativeBatchExecutor::TRIM_BYTES * 2) / 4]);
+        lax.run_batch(std::slice::from_ref(&small));
+        assert!(
+            lax.scratch.pooled_bytes() > NativeBatchExecutor::TRIM_BYTES,
+            "with_trim_budget(usize::MAX) must disable trimming"
+        );
     }
 
     #[test]

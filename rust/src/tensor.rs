@@ -192,14 +192,7 @@ impl Matrix {
 
     /// Per-column Euclidean norm (the paper's activation channel magnitude).
     pub fn col_norms(&self) -> Vec<f64> {
-        let mut out = vec![0.0f64; self.cols];
-        for i in 0..self.rows {
-            for (j, &v) in self.row(i).iter().enumerate() {
-                out[j] += (v as f64) * (v as f64);
-            }
-        }
-        out.iter_mut().for_each(|v| *v = v.sqrt());
-        out
+        col_norms_flat(self.as_slice(), self.cols)
     }
 
     /// Per-row Euclidean norm (the weight channel magnitude along c_in).
@@ -246,6 +239,27 @@ impl Matrix {
 /// row-major buffers, accumulated in f64 — the residual norm both the
 /// integer execution path and its equivalence tests compute without
 /// materializing a difference matrix.
+/// Per-column Euclidean norms of a row-major buffer holding whole rows
+/// — the single fold behind [`Matrix::col_norms`] AND
+/// [`crate::metrics::quant_difficulty_rows`], so the copying and
+/// zero-copy difficulty paths can never drift in accumulation order
+/// (the batch-fused serving path's bit-identity pin depends on that
+/// being structural, not coincidental).
+pub fn col_norms_flat(flat: &[f32], cols: usize) -> Vec<f64> {
+    let mut out = vec![0.0f64; cols];
+    if cols == 0 {
+        return out;
+    }
+    debug_assert_eq!(flat.len() % cols, 0, "flat buffer must hold whole rows");
+    for row in flat.chunks_exact(cols) {
+        for (o, &v) in out.iter_mut().zip(row) {
+            *o += (v as f64) * (v as f64);
+        }
+    }
+    out.iter_mut().for_each(|v| *v = v.sqrt());
+    out
+}
+
 pub fn frob_dist_sq(a: &[f32], b: &[f32]) -> f64 {
     assert_eq!(a.len(), b.len(), "frob_dist_sq length mismatch");
     a.iter()

@@ -12,7 +12,7 @@ use std::sync::Arc;
 use smoothrot::calib::registry::PlanRegistry;
 use smoothrot::calib::search::{search_layer, SearchConfig};
 use smoothrot::calib::stats::LayerCollector;
-use smoothrot::coordinator::{Executor, Job};
+use smoothrot::coordinator::Job;
 use smoothrot::kernels::fused::analyze_all_modes;
 use smoothrot::kernels::workspace::Workspace;
 use smoothrot::pipeline::{calibrate_synthetic, check_plan_matches_policy, CalibrateConfig};

@@ -1,0 +1,198 @@
+//! Property tests over the batch-fused integer hot path (check =
+//! proptest-lite).
+//!
+//! The tentpole claim of the stacked execution path is **bit
+//! identity**, not closeness: every step between a coalesced batch and
+//! its per-job results — Eq. 4 column scaling, the Eq. 3/5 rotation,
+//! Eq. 1 per-token grids, the integer GEMM rows, the Eq. 2 error fold —
+//! is row-local, so stacking activation rows must change *nothing*.
+//! These tests pin that across job counts, row counts, bit widths,
+//! transform modes and thread counts, and pin the packed-tile GEMM
+//! against the row-major kernel exactly (integer accumulation is
+//! associative, so equality is `==`, never a tolerance).
+
+use smoothrot::check::{check, ensure};
+use smoothrot::kernels::fused::{analyze_planned_int, analyze_planned_int_batch};
+use smoothrot::kernels::igemm::{igemm, igemm_packed_into};
+use smoothrot::kernels::par::{self, ThreadPool};
+use smoothrot::kernels::workspace::Workspace;
+use smoothrot::qtensor::{PackedWeight, PlannedWeight, QMatrix, ScaleAxis};
+use smoothrot::tensor::Matrix;
+use smoothrot::transforms::{self, Mode, RotationCache};
+use std::sync::Arc;
+
+#[test]
+fn prop_batch_fused_bit_identical_to_per_job() {
+    check("analyze_planned_int_batch == per-job analyze_planned_int, bit for bit", 15, |g| {
+        let jobs_n = g.usize_in(1, 6);
+        let c_in = *g.choose(&[8usize, 16, 32, 64]);
+        let c_out = g.usize_in(2, 12);
+        let bits = *g.choose(&[4u32, 8]);
+        let threads = g.usize_in(1, 4);
+        let alpha = g.f32_in(0.2, 0.8);
+        let w = g.matrix(c_in, c_out);
+        let rows: Vec<usize> = (0..jobs_n).map(|_| g.usize_in(1, 16)).collect();
+        let xs: Vec<Matrix> = rows.iter().map(|&r| g.matrix(r, c_in)).collect();
+        let s = transforms::smooth_scales(&xs[0], &w, alpha);
+        let inv: Vec<f32> = s.iter().map(|&v| 1.0 / v).collect();
+        let mut cache = RotationCache::new();
+        for mode in Mode::ALL {
+            let smooth =
+                matches!(mode, Mode::Smooth | Mode::SmoothRotate).then_some((&s[..], &inv[..]));
+            let rot = if matches!(mode, Mode::Rotate | Mode::SmoothRotate) {
+                Some(cache.get(c_in)?.clone())
+            } else {
+                None
+            };
+            let pw = PlannedWeight::from_plan(&w, smooth.map(|(s, _)| s), rot.as_ref(), bits, 1)?;
+            let mut ws_a = Workspace::new();
+            let per_job: Vec<_> = xs
+                .iter()
+                .map(|x| {
+                    analyze_planned_int(
+                        x,
+                        &w,
+                        bits,
+                        mode,
+                        smooth,
+                        rot.as_ref(),
+                        &pw,
+                        &mut ws_a,
+                        threads,
+                    )
+                })
+                .collect::<Result<_, _>>()?;
+            let pairs: Vec<(&Matrix, &Matrix)> = xs.iter().map(|x| (x, &w)).collect();
+            let mut ws_b = Workspace::new();
+            let fused = analyze_planned_int_batch(
+                &pairs,
+                bits,
+                mode,
+                smooth,
+                rot.as_ref(),
+                &pw,
+                &mut ws_b,
+                threads,
+            )?;
+            ensure(fused.len() == per_job.len(), "result count mismatch")?;
+            for (i, (a, b)) in per_job.iter().zip(&fused).enumerate() {
+                ensure(
+                    a.errors == b.errors,
+                    format!("{mode:?} job {i}: errors diverged ({:?} vs {:?})", a.errors, b.errors),
+                )?;
+                ensure(
+                    a.act_difficulty == b.act_difficulty,
+                    format!("{mode:?} job {i}: act_difficulty diverged"),
+                )?;
+                ensure(
+                    a.w_difficulty == b.w_difficulty,
+                    format!("{mode:?} job {i}: w_difficulty diverged"),
+                )?;
+                ensure(
+                    a.act_absmax == b.act_absmax,
+                    format!("{mode:?} job {i}: act_absmax diverged"),
+                )?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_batch_fused_thread_count_and_pool_invariant() {
+    check("batch-fused results identical at every thread count and backend", 10, |g| {
+        let jobs_n = g.usize_in(2, 5);
+        let c_in = *g.choose(&[16usize, 32]);
+        let c_out = g.usize_in(2, 8);
+        let bits = *g.choose(&[4u32, 8]);
+        let w = g.matrix(c_in, c_out);
+        let rows: Vec<usize> = (0..jobs_n).map(|_| g.usize_in(1, 12)).collect();
+        let xs: Vec<Matrix> = rows.iter().map(|&r| g.matrix(r, c_in)).collect();
+        let mut cache = RotationCache::new();
+        let rot = cache.get(c_in)?.clone();
+        let pw = PlannedWeight::from_plan(&w, None, Some(&rot), bits, 1)?;
+        let pairs: Vec<(&Matrix, &Matrix)> = xs.iter().map(|x| (x, &w)).collect();
+        let mut ws = Workspace::new();
+        let serial = analyze_planned_int_batch(
+            &pairs,
+            bits,
+            Mode::Rotate,
+            None,
+            Some(&rot),
+            &pw,
+            &mut ws,
+            1,
+        )?;
+        for threads in [2usize, 3, 8] {
+            // scoped-thread backend
+            let scoped = analyze_planned_int_batch(
+                &pairs,
+                bits,
+                Mode::Rotate,
+                None,
+                Some(&rot),
+                &pw,
+                &mut ws,
+                threads,
+            )?;
+            // persistent-pool backend (what a serving executor installs)
+            let pool = Arc::new(ThreadPool::new(threads));
+            let pooled = par::with_pool(Some(pool), || {
+                analyze_planned_int_batch(
+                    &pairs,
+                    bits,
+                    Mode::Rotate,
+                    None,
+                    Some(&rot),
+                    &pw,
+                    &mut ws,
+                    threads,
+                )
+            })?;
+            for ((a, b), c) in serial.iter().zip(&scoped).zip(&pooled) {
+                ensure(
+                    a.errors == b.errors && a.errors == c.errors,
+                    format!("threads={threads}: errors diverged across backends"),
+                )?;
+                ensure(
+                    a.act_difficulty == b.act_difficulty && a.act_difficulty == c.act_difficulty,
+                    format!("threads={threads}: difficulty diverged across backends"),
+                )?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_packed_igemm_equals_row_major_exactly() {
+    check("igemm over PackedWeight == row-major igemm, exactly", 30, |g| {
+        let m = g.usize_in(1, 24);
+        let k = g.usize_in(1, 96);
+        let n = g.usize_in(1, 40);
+        let bits = *g.choose(&[4u32, 8]);
+        let threads = g.usize_in(1, 4);
+        let x = g.matrix(m, k);
+        let w = g.matrix(k, n);
+        // i4 activations at 4 bits exercise the nibble-unpack path;
+        // the weight is packed from both storage kinds
+        let qx = QMatrix::quantize(&x, bits, ScaleAxis::PerRow)?;
+        let qw_i8 = QMatrix::quantize_i8(&w, bits, ScaleAxis::PerCol)?;
+        let qw_at_rest = QMatrix::quantize(&w, bits, ScaleAxis::PerCol)?;
+        let mut ws = Workspace::new();
+        let want = igemm(&qx, &qw_i8, &mut ws, 1)?;
+        for qw in [&qw_i8, &qw_at_rest] {
+            let pw = PackedWeight::pack(qw)?;
+            let mut got = vec![0.0f32; m * n];
+            igemm_packed_into(&mut got, &qx, &pw, &mut ws, threads)?;
+            ensure(
+                got.as_slice() == want.as_slice(),
+                format!(
+                    "m={m} k={k} n={n} bits={bits} threads={threads} packed_src={}: diverged",
+                    if qw.is_packed() { "i4" } else { "i8" }
+                ),
+            )?;
+        }
+        Ok(())
+    });
+}
