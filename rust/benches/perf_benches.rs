@@ -7,7 +7,9 @@
 //! * L3 coordinator: scheduling overhead at varying worker counts,
 //! * L3 integer execution: i8 / packed-i4 GEMM vs the f32 matmul + qdq
 //!   simulation it replaces, the packed-tile register-blocked GEMM vs
-//!   the row-major kernel, and per-token activation quantization,
+//!   the row-major kernel, the runtime-dispatched SIMD microkernel vs
+//!   the scalar reference over the same packed tiles, and per-token
+//!   activation quantization,
 //! * L3 serving core: batched vs unbatched dispatch throughput over the
 //!   multi-tenant scheduler (native executors), plan-driven serve
 //!   (calibrated transform per request) vs per-request four-mode
@@ -21,7 +23,7 @@
 //! CI runs this binary with `--smoke` (minimal iterations) so kernel
 //! regressions fail loudly without timing flakiness.  The §Perf section
 //! of EXPERIMENTS.md quotes the full-run numbers.  Every run also
-//! writes a machine-readable `BENCH_5.json` **at the repo root** (the
+//! writes a machine-readable `BENCH_6.json` **at the repo root** (the
 //! committed bench-trajectory artifact; override the path with
 //! `BENCH_JSON=...`).
 
@@ -118,6 +120,33 @@ fn main() {
             println!(
                 "    -> packed-tile igemm vs row-major igemm: {:.2}x",
                 r.as_secs_f64() / p.as_secs_f64()
+            );
+        }
+        // runtime-dispatched SIMD microkernel vs a scalar-pinned run
+        // over the SAME packed tiles.  Outputs are bit-identical
+        // (pinned by tests/differential_kernels.rs), so the ratio is
+        // pure kernel throughput.  On a host without AVX2/NEON both
+        // scenarios run scalar and the ratio prints ~1.00x.
+        use smoothrot::kernels::igemm::igemm_packed_into_with;
+        use smoothrot::kernels::simd::KernelBackend;
+        let simd_be = KernelBackend::detect();
+        let scalar_med = b
+            .bench_items("igemm_i8_packed_scalar_128x704x256", flops, || {
+                igemm_packed_into_with(&mut out, &qx8, &pw8, &mut iws, 1, KernelBackend::Scalar)
+                    .unwrap();
+                black_box(out[0]);
+            })
+            .map(|m| m.median());
+        let simd_med = b
+            .bench_items("igemm_i8_simd_vs_scalar", flops, || {
+                igemm_packed_into_with(&mut out, &qx8, &pw8, &mut iws, 1, simd_be).unwrap();
+                black_box(out[0]);
+            })
+            .map(|m| m.median());
+        if let (Some(s), Some(v)) = (scalar_med, simd_med) {
+            println!(
+                "    -> packed igemm, {simd_be} kernels vs scalar: {:.2}x",
+                s.as_secs_f64() / v.as_secs_f64()
             );
         }
         let qx4 = QMatrix::quantize(&x, 4, ScaleAxis::PerRow).unwrap();
@@ -448,6 +477,36 @@ fn main() {
                 pj.as_secs_f64() / fu.as_secs_f64()
             );
         }
+
+        // the same batch-fused int8 scenario with the kernel backend
+        // explicitly pinned to the best SIMD path this host detects.
+        // The default scenario above follows the session resolution
+        // (SMOOTHROT_KERNEL or auto-detect), so under a scalar-pinned
+        // session (the CI scalar leg sets SMOOTHROT_KERNEL=scalar) the
+        // ratio below is a true end-to-end SIMD-vs-scalar serve delta;
+        // under auto both run the same backend and it prints ~1.00x.
+        let simd_be = smoothrot::kernels::simd::KernelBackend::detect();
+        let simd_serve_med = {
+            let reqs = base.clone();
+            let reg_outer = Arc::clone(&registry);
+            b.bench_items("serve_plan_int8_simd_96req", n as f64, move || {
+                let reg = Arc::clone(&reg_outer);
+                let (_, m) = serve_all(cfg, reqs.clone(), move |_| {
+                    Ok(NativeBatchExecutor::with_plan_exec(Arc::clone(&reg), 1, ExecMode::Int8)
+                        .with_kernel_backend(simd_be))
+                })
+                .unwrap();
+                assert_eq!(m.completed as usize, n);
+                black_box(m.batches);
+            })
+            .map(|m| m.median())
+        };
+        if let (Some(fu), Some(sv)) = (fused_med, simd_serve_med) {
+            println!(
+                "    -> batch-fused int8 serve, {simd_be} kernels vs session default: {:.2}x",
+                fu.as_secs_f64() / sv.as_secs_f64()
+            );
+        }
     }
 
     // ---- PJRT request-path latency --------------------------------------
@@ -484,7 +543,7 @@ fn main() {
     // throughput for every bench above.  The default path resolves to
     // the repo root AT RUNTIME (a compile-time env! path would dangle
     // if the checkout moves or a cached bench binary runs elsewhere),
-    // so `cargo bench` refreshes the committed BENCH_5.json trajectory
+    // so `cargo bench` refreshes the committed BENCH_6.json trajectory
     // file from any working directory inside the repo; BENCH_JSON
     // overrides (CI points it at a scratch path to exercise the writer
     // without dirtying the tree).
@@ -500,10 +559,10 @@ fn default_bench_json() -> String {
     let mut dir = std::env::current_dir().unwrap_or_else(|_| std::path::PathBuf::from("."));
     loop {
         if dir.join("Cargo.toml").exists() && dir.join("rust").is_dir() {
-            return dir.join("BENCH_5.json").to_string_lossy().into_owned();
+            return dir.join("BENCH_6.json").to_string_lossy().into_owned();
         }
         if !dir.pop() {
-            return "BENCH_5.json".to_string();
+            return "BENCH_6.json".to_string();
         }
     }
 }

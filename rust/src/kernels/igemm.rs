@@ -18,7 +18,10 @@
 //!   (register blocking), the tile panel is streamed contiguously
 //!   (`TILE` bytes per `k` step instead of an `n`-strided row), and the
 //!   `i32` accumulator *plane* disappears entirely — partial sums never
-//!   round-trip through memory,
+//!   round-trip through memory; the per-tile dot product dispatches to
+//!   the active [`crate::kernels::simd`] backend (AVX2/NEON when
+//!   detected), which is pinned **bit-identical** to the scalar
+//!   reference by `rust/tests/differential_kernels.rs`,
 //! * output rows split into contiguous chunks across up to `threads`
 //!   threads via [`super::par`] (`0` = all cores, `1` = fully inline;
 //!   a serving executor's persistent pool is picked up automatically) —
@@ -39,6 +42,7 @@
 //! exactly.
 
 use crate::kernels::par;
+use crate::kernels::simd::{self, KernelBackend};
 use crate::kernels::workspace::Workspace;
 use crate::qtensor::{PackedWeight, QMatrix, ScaleAxis};
 use crate::tensor::Matrix;
@@ -149,12 +153,31 @@ pub fn igemm(
 ///
 /// Only the activation side may still be workspace-unpacked (`i4`
 /// request codes); the weight side was unpacked once at pack time.
+///
+/// The tile microkernel dispatches through the active
+/// [`KernelBackend`] ([`simd::current`] — i.e. the executor's pinned
+/// choice or the `SMOOTHROT_KERNEL` default), resolved here on the
+/// calling thread *before* the row fan-out so pool workers inherit it.
 pub fn igemm_packed_into(
     out: &mut [f32],
     xq: &QMatrix,
     pw: &PackedWeight,
     ws: &mut Workspace,
     threads: usize,
+) -> Result<(), String> {
+    igemm_packed_into_with(out, xq, pw, ws, threads, simd::current())
+}
+
+/// [`igemm_packed_into`] with an explicit [`KernelBackend`] — the
+/// entry point the differential test harness uses to pin every SIMD
+/// backend against [`KernelBackend::Scalar`] on identical inputs.
+pub fn igemm_packed_into_with(
+    out: &mut [f32],
+    xq: &QMatrix,
+    pw: &PackedWeight,
+    ws: &mut Workspace,
+    threads: usize,
+    backend: KernelBackend,
 ) -> Result<(), String> {
     let (m, k) = xq.shape();
     let (k2, n) = pw.shape();
@@ -193,7 +216,7 @@ pub fn igemm_packed_into(
         let rows = chunk.len() / n;
         for i in 0..rows {
             let arow = &xcodes[(row0 + i) * k..(row0 + i + 1) * k];
-            packed_row_kernel(arow, pw, sx[row0 + i], sw, &mut chunk[i * n..(i + 1) * n]);
+            packed_row_kernel(backend, arow, pw, sx[row0 + i], sw, &mut chunk[i * n..(i + 1) * n]);
         }
     });
 
@@ -204,9 +227,17 @@ pub fn igemm_packed_into(
 }
 
 /// One output row of the packed GEMM: per weight tile, `TILE`
-/// register-resident `i32` accumulators over the whole `k` loop, then
+/// register-resident `i32` accumulators over the whole `k` loop
+/// (dispatched to the backend's [`simd::tile_dot`] microkernel), then
 /// one scale pass into the f32 output.
-fn packed_row_kernel(arow: &[i8], pw: &PackedWeight, sxi: f32, sw: &[f32], orow: &mut [f32]) {
+fn packed_row_kernel(
+    backend: KernelBackend,
+    arow: &[i8],
+    pw: &PackedWeight,
+    sxi: f32,
+    sw: &[f32],
+    orow: &mut [f32],
+) {
     const JT: usize = PackedWeight::TILE;
     let n = orow.len();
     for t in 0..pw.tiles() {
@@ -214,15 +245,9 @@ fn packed_row_kernel(arow: &[i8], pw: &PackedWeight, sxi: f32, sw: &[f32], orow:
         let j0 = t * JT;
         let jw = JT.min(n - j0);
         // the register block: a fixed-width accumulator array the
-        // compiler keeps out of memory and vectorizes
+        // microkernel keeps out of memory
         let mut acc = [0i32; JT];
-        for (kk, &a) in arow.iter().enumerate() {
-            let av = a as i32;
-            let p = &panel[kk * JT..kk * JT + JT];
-            for (ac, &pv) in acc.iter_mut().zip(p) {
-                *ac += av * pv as i32;
-            }
-        }
+        simd::tile_dot(backend, arow, panel, &mut acc);
         let scales = &sw[j0..j0 + jw];
         for ((o, &a), &cw) in orow[j0..j0 + jw].iter_mut().zip(&acc[..jw]).zip(scales) {
             *o = a as f32 * (sxi * cw);

@@ -13,6 +13,7 @@
 //! | [`par`] | row-parallel matmul / transpose / apply primitives + the persistent [`par::ThreadPool`] serving executors install around their hot path |
 //! | [`fwht`] | in-place fast Walsh–Hadamard rotation, O(d log d) per row |
 //! | [`igemm`] | `i8 × i8 → i32`-accumulated integer GEMM over [`crate::qtensor::QMatrix`] codes — row-major and packed-tile register-blocked kernels |
+//! | [`simd`] | runtime-dispatched AVX2/NEON microkernels (tile dot product, per-token quantize/abs-max) pinned bit-identical to the scalar reference; [`simd::KernelBackend`] + the `SMOOTHROT_KERNEL` knob |
 //! | [`fused`] | single-pass analyze computing all four mode errors with shared intermediates; planned + batch-fused integer execution |
 //! | [`workspace`] | reusable per-worker scratch buffers (f32 + typed i8/i32 pools, fully pooled in steady state, trimmable between batches) |
 //!
@@ -29,4 +30,5 @@ pub mod fused;
 pub mod fwht;
 pub mod igemm;
 pub mod par;
+pub mod simd;
 pub mod workspace;

@@ -1,0 +1,475 @@
+//! Runtime-dispatched SIMD integer microkernels — the hardware side of
+//! real integer execution.
+//!
+//! Every int8 serving request flows through the packed-tile GEMM
+//! ([`crate::kernels::igemm::igemm_packed_into`]) and the per-token
+//! quantizer ([`crate::qtensor::QMatrix::quantize_i8_with`]); until
+//! this module both ran scalar loops.  Here the two inner primitives
+//! get hardware implementations behind one [`KernelBackend`] dispatch:
+//!
+//! * [`tile_dot`] — the 16-column-tile `i8 × i8 → i32` dot product the
+//!   packed microkernel runs per (output row, weight tile),
+//! * [`row_absmax`] / [`quantize_row`] — the per-token grid-step
+//!   reduction and the `round(v/Δ)` code conversion on the same path.
+//!
+//! **The contract is bit identity, not closeness.**  The integer side
+//! is easy: the overflow guard in `igemm` proves no intermediate sum
+//! can leave `i32`, and exact integer addition is associative, so any
+//! lane layout or horizontal reduction reproduces the scalar result
+//! *exactly* — provided no saturating instruction sneaks in (this is
+//! why the AVX2 kernel widens `i8 → i16` and multiplies with
+//! `_mm256_mullo_epi16` + `i32` widening adds instead of using
+//! `_mm256_maddubs_epi16`, whose `u8 × i8` pair sums saturate at
+//! `i16`).  The float side needs care in exactly two places: `max` is
+//! order-free over finite values (so the abs-max reduction is exact),
+//! and `f32::round` rounds ties *away from zero* while the x86 vector
+//! rounding instruction rounds ties to even — the AVX2 quantizer
+//! detects exact-tie lanes and steps them outward to match the scalar
+//! semantics (NEON's `FRINTA` rounds ties away natively).
+//! `rust/tests/differential_kernels.rs` pins every available backend
+//! against [`KernelBackend::Scalar`] across randomized shapes, bits,
+//! thread counts and adversarial inputs.
+//!
+//! Dispatch is decided **once** per executor or call site, not per
+//! tile: [`KernelBackend::resolve`] picks the backend from an explicit
+//! request (`--kernel-backend`), the `SMOOTHROT_KERNEL` env var, or
+//! hardware detection (`is_x86_feature_detected!` / target arch), and
+//! [`with_backend`] installs it around a closure the way
+//! [`crate::kernels::par::with_pool`] installs a thread pool.  Kernels
+//! read [`current`] on the *calling* thread before fanning work out to
+//! pool workers, so the choice is immune to which thread runs a chunk.
+//! The scalar kernel is the always-available reference; backends never
+//! silently fall back (an unavailable explicit request is an error,
+//! and `SMOOTHROT_REQUIRE_BACKEND` lets CI turn "not detected" into a
+//! hard test failure).
+
+use std::cell::Cell;
+use std::sync::OnceLock;
+
+#[cfg(target_arch = "aarch64")]
+mod neon;
+#[cfg(target_arch = "x86_64")]
+mod x86;
+
+/// Output channels per packed weight tile — the panel ABI shared with
+/// [`crate::qtensor::PackedWeight`]: one `k` step of a tile is `TILE`
+/// contiguous `i8` codes, i.e. exactly one 128-bit vector load.
+pub const TILE: usize = 16;
+
+/// Env var naming the kernel backend (`scalar` | `avx2` | `neon` |
+/// `auto`) — the CI matrix knob; `--kernel-backend` overrides it.
+pub const ENV_KERNEL: &str = "SMOOTHROT_KERNEL";
+
+/// Env var naming a backend that MUST be available: the differential
+/// test harness hard-fails when it is not detected, so a CI host
+/// quietly lacking AVX2/NEON cannot vacuously pass the SIMD suite.
+pub const ENV_REQUIRE: &str = "SMOOTHROT_REQUIRE_BACKEND";
+
+/// Which microkernel implementation the integer hot path dispatches to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelBackend {
+    /// Portable scalar loops — always available, the bit-exact
+    /// reference every SIMD backend is pinned against.
+    Scalar,
+    /// x86_64 AVX2: widened `i8 → i16` products, `i32` lane
+    /// accumulators (two 256-bit registers cover one 16-lane tile).
+    Avx2,
+    /// aarch64 NEON: `vmull_s8` widened multiply + `i32` widening adds
+    /// (four 128-bit accumulators per tile).
+    Neon,
+}
+
+#[cfg(target_arch = "x86_64")]
+fn avx2_available() -> bool {
+    std::arch::is_x86_feature_detected!("avx2")
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn avx2_available() -> bool {
+    false
+}
+
+impl KernelBackend {
+    /// All variants, scalar first.
+    pub const ALL: [KernelBackend; 3] =
+        [KernelBackend::Scalar, KernelBackend::Avx2, KernelBackend::Neon];
+
+    /// Stable lowercase name (the `--kernel-backend` vocabulary).
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelBackend::Scalar => "scalar",
+            KernelBackend::Avx2 => "avx2",
+            KernelBackend::Neon => "neon",
+        }
+    }
+
+    /// Whether this backend can run on the current host (runtime CPU
+    /// feature detection for AVX2, target arch for NEON).
+    pub fn available(self) -> bool {
+        match self {
+            KernelBackend::Scalar => true,
+            KernelBackend::Avx2 => avx2_available(),
+            KernelBackend::Neon => cfg!(target_arch = "aarch64"),
+        }
+    }
+
+    /// Best backend the host supports (`Scalar` when no SIMD path is).
+    pub fn detect() -> KernelBackend {
+        if KernelBackend::Avx2.available() {
+            KernelBackend::Avx2
+        } else if KernelBackend::Neon.available() {
+            KernelBackend::Neon
+        } else {
+            KernelBackend::Scalar
+        }
+    }
+
+    /// Parse a backend name; `auto` resolves to [`KernelBackend::detect`].
+    pub fn from_name(name: &str) -> Result<KernelBackend, String> {
+        match name {
+            "scalar" => Ok(KernelBackend::Scalar),
+            "avx2" => Ok(KernelBackend::Avx2),
+            "neon" => Ok(KernelBackend::Neon),
+            "auto" => Ok(KernelBackend::detect()),
+            other => Err(format!(
+                "unknown kernel backend {other:?} (choices: auto, scalar, avx2, neon)"
+            )),
+        }
+    }
+
+    /// Resolve the backend an executor should pin: an explicit
+    /// non-`auto` request wins, else the `SMOOTHROT_KERNEL` env var,
+    /// else hardware detection.  A named backend the host cannot run is
+    /// a hard error, never a silent scalar fallback.
+    pub fn resolve(explicit: Option<&str>) -> Result<KernelBackend, String> {
+        match explicit {
+            Some(name) if name != "auto" => Self::named("--kernel-backend", name),
+            _ => match std::env::var(ENV_KERNEL) {
+                Ok(name) if !name.is_empty() && name != "auto" => {
+                    Self::named(ENV_KERNEL, name.as_str())
+                }
+                _ => Ok(Self::detect()),
+            },
+        }
+    }
+
+    /// [`KernelBackend::from_name`] + availability check, with the
+    /// requesting knob named in errors.
+    fn named(origin: &str, name: &str) -> Result<KernelBackend, String> {
+        let backend = Self::from_name(name).map_err(|e| format!("{origin}: {e}"))?;
+        if !backend.available() {
+            return Err(format!(
+                "{origin}: kernel backend {} is not available on this host (best detected: {})",
+                backend.name(),
+                Self::detect().name()
+            ));
+        }
+        Ok(backend)
+    }
+}
+
+impl std::fmt::Display for KernelBackend {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Backend the host requires tests to exercise
+/// ([`ENV_REQUIRE`]; `None` when unset/empty).  The value must name a
+/// concrete SIMD backend — requiring `scalar` or `auto` is an error,
+/// since both would make the requirement vacuous.
+pub fn required_backend() -> Result<Option<KernelBackend>, String> {
+    match std::env::var(ENV_REQUIRE) {
+        Ok(name) if !name.is_empty() => parse_required(&name).map(Some),
+        _ => Ok(None),
+    }
+}
+
+fn parse_required(name: &str) -> Result<KernelBackend, String> {
+    match KernelBackend::from_name(name) {
+        Ok(KernelBackend::Scalar) => Err(format!(
+            "{ENV_REQUIRE}={name}: requiring the always-available scalar/auto backend is vacuous \
+             — name avx2 or neon"
+        )),
+        Ok(backend) => Ok(backend),
+        Err(e) => Err(format!("{ENV_REQUIRE}: {e}")),
+    }
+}
+
+/// Process-default backend: `SMOOTHROT_KERNEL` when set (resolved once
+/// and cached; an invalid or unavailable value panics loudly rather
+/// than silently degrading a CI matrix leg), else hardware detection.
+pub fn default_backend() -> KernelBackend {
+    static DEFAULT: OnceLock<KernelBackend> = OnceLock::new();
+    *DEFAULT.get_or_init(|| match KernelBackend::resolve(None) {
+        Ok(backend) => backend,
+        Err(e) => panic!("{e}"),
+    })
+}
+
+thread_local! {
+    static OVERRIDE: Cell<Option<KernelBackend>> = const { Cell::new(None) };
+}
+
+/// The backend kernels on this thread dispatch to: the innermost
+/// [`with_backend`] override, else [`default_backend`].  Kernels read
+/// this once per call *before* fanning out to pool workers, so an
+/// executor's choice survives the hop onto its persistent thread pool.
+pub fn current() -> KernelBackend {
+    OVERRIDE.with(|o| o.get()).unwrap_or_else(default_backend)
+}
+
+/// Run `f` with `backend` installed as this thread's kernel backend
+/// (restored on exit, even across panics) — how
+/// [`crate::serve::NativeBatchExecutor`] pins its construction-time
+/// choice around every run, and how the differential tests drive the
+/// same code path through different backends.
+pub fn with_backend<R>(backend: KernelBackend, f: impl FnOnce() -> R) -> R {
+    struct Restore(Option<KernelBackend>);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            OVERRIDE.with(|o| o.set(self.0));
+        }
+    }
+    let prev = OVERRIDE.with(|o| o.replace(Some(backend)));
+    let _restore = Restore(prev);
+    f()
+}
+
+/// `acc[j] += Σ_k arow[k] · panel[k·TILE + j]` — one weight tile of
+/// one output row, the innermost loop of the packed integer GEMM.
+/// `panel` is a [`crate::qtensor::PackedWeight`] panel
+/// (`arow.len() · TILE` codes, `k`-contiguous rows of `TILE` columns).
+///
+/// Bit-identical across backends: products are exact at every width
+/// (`|i8 · i8| ≤ 16129` fits `i16`), the igemm overflow guard keeps
+/// every partial sum inside `i32`, and integer addition is
+/// associative.
+pub fn tile_dot(backend: KernelBackend, arow: &[i8], panel: &[i8], acc: &mut [i32; TILE]) {
+    debug_assert_eq!(panel.len(), arow.len() * TILE, "panel ABI: k x TILE codes");
+    debug_assert!(backend.available(), "unavailable backend reached tile_dot");
+    match backend {
+        KernelBackend::Scalar => tile_dot_scalar(arow, panel, acc),
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: `available()` gated dispatch — AVX2 is present.
+        KernelBackend::Avx2 => unsafe { x86::tile_dot(arow, panel, acc) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is baseline on aarch64.
+        KernelBackend::Neon => unsafe { neon::tile_dot(arow, panel, acc) },
+        #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+        _ => tile_dot_scalar(arow, panel, acc),
+        #[cfg(all(target_arch = "x86_64", not(target_arch = "aarch64")))]
+        KernelBackend::Neon => tile_dot_scalar(arow, panel, acc),
+        #[cfg(all(target_arch = "aarch64", not(target_arch = "x86_64")))]
+        KernelBackend::Avx2 => tile_dot_scalar(arow, panel, acc),
+    }
+}
+
+fn tile_dot_scalar(arow: &[i8], panel: &[i8], acc: &mut [i32; TILE]) {
+    for (&a, p) in arow.iter().zip(panel.chunks_exact(TILE)) {
+        let av = a as i32;
+        for (ac, &pv) in acc.iter_mut().zip(p) {
+            *ac += av * pv as i32;
+        }
+    }
+}
+
+/// Largest |v| of a row — the per-token grid-step reduction
+/// ([`crate::quant::token_scales`] numerator).  Exact under any
+/// association over finite values, so SIMD == scalar bit for bit.
+pub fn row_absmax(backend: KernelBackend, row: &[f32]) -> f32 {
+    debug_assert!(backend.available(), "unavailable backend reached row_absmax");
+    match backend {
+        KernelBackend::Scalar => row_absmax_scalar(row),
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: `available()` gated dispatch — AVX2 is present.
+        KernelBackend::Avx2 => unsafe { x86::row_absmax(row) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is baseline on aarch64.
+        KernelBackend::Neon => unsafe { neon::row_absmax(row) },
+        #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+        _ => row_absmax_scalar(row),
+        #[cfg(all(target_arch = "x86_64", not(target_arch = "aarch64")))]
+        KernelBackend::Neon => row_absmax_scalar(row),
+        #[cfg(all(target_arch = "aarch64", not(target_arch = "x86_64")))]
+        KernelBackend::Avx2 => row_absmax_scalar(row),
+    }
+}
+
+fn row_absmax_scalar(row: &[f32]) -> f32 {
+    row.iter().fold(0.0f32, |m, &v| m.max(v.abs()))
+}
+
+/// `out[j] = round(row[j] / delta).clamp(-qm, qm) as i8` — one token
+/// row onto its Eq. 1 grid (`delta > 0`; finite inputs).  The scalar
+/// loop is the semantics; SIMD backends must reproduce its
+/// round-half-away-from-zero ties exactly (see the module docs).
+pub fn quantize_row(backend: KernelBackend, row: &[f32], delta: f32, qm: f32, out: &mut [i8]) {
+    debug_assert_eq!(row.len(), out.len());
+    debug_assert!(delta > 0.0, "quantize_row needs a positive grid step");
+    debug_assert!(backend.available(), "unavailable backend reached quantize_row");
+    match backend {
+        KernelBackend::Scalar => quantize_row_scalar(row, delta, qm, out),
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: `available()` gated dispatch — AVX2 is present.
+        KernelBackend::Avx2 => unsafe { x86::quantize_row(row, delta, qm, out) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is baseline on aarch64.
+        KernelBackend::Neon => unsafe { neon::quantize_row(row, delta, qm, out) },
+        #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+        _ => quantize_row_scalar(row, delta, qm, out),
+        #[cfg(all(target_arch = "x86_64", not(target_arch = "aarch64")))]
+        KernelBackend::Neon => quantize_row_scalar(row, delta, qm, out),
+        #[cfg(all(target_arch = "aarch64", not(target_arch = "x86_64")))]
+        KernelBackend::Avx2 => quantize_row_scalar(row, delta, qm, out),
+    }
+}
+
+fn quantize_row_scalar(row: &[f32], delta: f32, qm: f32, out: &mut [i8]) {
+    for (o, &v) in out.iter_mut().zip(row) {
+        *o = (v / delta).round().clamp(-qm, qm) as i8;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn simd_backends() -> Vec<KernelBackend> {
+        [KernelBackend::Avx2, KernelBackend::Neon]
+            .into_iter()
+            .filter(|b| b.available())
+            .collect()
+    }
+
+    fn rand_codes(rng: &mut Rng, n: usize) -> Vec<i8> {
+        (0..n).map(|_| (rng.below(255) as i64 - 127) as i8).collect()
+    }
+
+    #[test]
+    fn names_round_trip_and_auto_detects() {
+        for be in KernelBackend::ALL {
+            assert_eq!(KernelBackend::from_name(be.name()).unwrap(), be);
+            assert_eq!(format!("{be}"), be.name());
+        }
+        assert_eq!(KernelBackend::from_name("auto").unwrap(), KernelBackend::detect());
+        assert!(KernelBackend::from_name("sse9").unwrap_err().contains("choices"));
+        assert!(KernelBackend::Scalar.available());
+        assert!(KernelBackend::detect().available());
+    }
+
+    #[test]
+    fn resolve_rejects_unavailable_named_backends() {
+        // at most one of avx2/neon can be available on one host
+        let missing = [KernelBackend::Avx2, KernelBackend::Neon]
+            .into_iter()
+            .find(|b| !b.available())
+            .expect("no host has both AVX2 and NEON");
+        let err = KernelBackend::resolve(Some(missing.name())).unwrap_err();
+        assert!(err.contains("--kernel-backend") && err.contains("not available"), "{err}");
+        // explicit scalar always resolves; auto defers to env/detection
+        assert_eq!(KernelBackend::resolve(Some("scalar")).unwrap(), KernelBackend::Scalar);
+    }
+
+    #[test]
+    fn required_backend_rejects_vacuous_names() {
+        assert!(parse_required("scalar").unwrap_err().contains("vacuous"));
+        assert!(parse_required("auto").unwrap_err().contains("vacuous"));
+        assert!(parse_required("sse9").unwrap_err().contains(ENV_REQUIRE));
+        assert_eq!(parse_required("avx2").unwrap(), KernelBackend::Avx2);
+        assert_eq!(parse_required("neon").unwrap(), KernelBackend::Neon);
+    }
+
+    #[test]
+    fn with_backend_scopes_and_restores() {
+        let outer = current();
+        let inner = with_backend(KernelBackend::Scalar, || {
+            assert_eq!(current(), KernelBackend::Scalar);
+            with_backend(KernelBackend::detect(), current)
+        });
+        assert_eq!(inner, KernelBackend::detect());
+        assert_eq!(current(), outer);
+    }
+
+    #[test]
+    fn scalar_tile_dot_matches_plain_reference() {
+        let mut rng = Rng::new(11);
+        for k in [0usize, 1, 2, 7, 16, 33] {
+            let arow = rand_codes(&mut rng, k);
+            let panel = rand_codes(&mut rng, k * TILE);
+            let mut acc = [3i32; TILE];
+            tile_dot_scalar(&arow, &panel, &mut acc);
+            for (j, &got) in acc.iter().enumerate() {
+                let want: i32 =
+                    3 + (0..k).map(|kk| arow[kk] as i32 * panel[kk * TILE + j] as i32).sum::<i32>();
+                assert_eq!(got, want, "k={k} j={j}");
+            }
+        }
+    }
+
+    #[test]
+    fn simd_tile_dot_bit_identical_to_scalar() {
+        let mut rng = Rng::new(12);
+        for be in simd_backends() {
+            for k in [1usize, 2, 5, 16, 63, 256] {
+                let arow = rand_codes(&mut rng, k);
+                let panel = rand_codes(&mut rng, k * TILE);
+                let mut want = [0i32; TILE];
+                tile_dot_scalar(&arow, &panel, &mut want);
+                let mut got = [0i32; TILE];
+                tile_dot(be, &arow, &panel, &mut got);
+                assert_eq!(got, want, "{be} k={k}");
+            }
+            // worst-case magnitudes: all codes at +/-127
+            let k = 1024usize;
+            let arow = vec![127i8; k];
+            let panel: Vec<i8> =
+                (0..k * TILE).map(|i| if i % 2 == 0 { 127 } else { -127 }).collect();
+            let mut want = [0i32; TILE];
+            tile_dot_scalar(&arow, &panel, &mut want);
+            let mut got = [0i32; TILE];
+            tile_dot(be, &arow, &panel, &mut got);
+            assert_eq!(got, want, "{be} all-qmax");
+        }
+    }
+
+    #[test]
+    fn simd_row_absmax_bit_identical_to_scalar() {
+        let mut rng = Rng::new(13);
+        for be in simd_backends() {
+            for n in [0usize, 1, 7, 8, 9, 64, 127] {
+                let mut row = rng.normals_f32(n);
+                if n > 3 {
+                    row[n / 2] = -1e30; // the max hides mid-vector, negative
+                }
+                assert_eq!(row_absmax(be, &row), row_absmax_scalar(&row), "{be} n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn simd_quantize_row_bit_identical_including_ties() {
+        // exact grid-tie values are where round-to-even (the x86 vector
+        // rounding mode) and f32::round (ties away from zero) disagree;
+        // delta = 1 makes v/delta exact so every tie actually fires
+        let planted = [
+            -3.5f32, -2.5, -1.5, -0.5, 0.5, 1.5, 2.5, 3.5, 126.5, -126.5, 127.5, -127.5, 1e30,
+            -1e30, 0.0, -0.0,
+        ];
+        let mut rng = Rng::new(14);
+        for be in simd_backends() {
+            for delta in [1.0f32, 0.5, 0.37, 2.25] {
+                for extra in [0usize, 1, 3, 17] {
+                    let mut row = planted.to_vec();
+                    row.extend(rng.normals_f32(extra));
+                    let mut want = vec![0i8; row.len()];
+                    quantize_row_scalar(&row, delta, 127.0, &mut want);
+                    let mut got = vec![0i8; row.len()];
+                    quantize_row(be, &row, delta, 127.0, &mut got);
+                    assert_eq!(got, want, "{be} delta={delta} extra={extra}");
+                }
+            }
+        }
+    }
+}

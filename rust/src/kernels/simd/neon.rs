@@ -1,0 +1,94 @@
+//! NEON implementations of the integer-path primitives (aarch64 only).
+//!
+//! Same bit-identity contract as the AVX2 module, with less ceremony:
+//!
+//! * `tile_dot` uses `vmull_s8` (widening `i8 × i8 → i16`, exact) and
+//!   `vaddw_s16` widening adds into four `i32` quad-accumulators — a
+//!   plain widened multiply-add with no saturating step anywhere.
+//! * `quantize_row` gets the tie handling for free: `vrndaq_f32` is
+//!   `FRINTA`, round-to-nearest with ties **away from zero**, which is
+//!   exactly `f32::round`'s semantics — no even/away fixup is needed,
+//!   unlike x86.
+//! * `row_absmax` is `vabsq_f32` + lanewise max + `vmaxvq_f32`; max is
+//!   exact under any association over finite values.
+
+use super::TILE;
+#[allow(clippy::wildcard_imports)]
+use std::arch::aarch64::*;
+
+/// `acc[j] += Σ_k arow[k] · panel[k·TILE + j]`, bit-identical to
+/// [`super::tile_dot`]'s scalar arm.
+///
+/// # Safety
+/// NEON must be available (baseline on aarch64); `panel.len()` must
+/// equal `arow.len() * TILE`.
+#[target_feature(enable = "neon")]
+pub unsafe fn tile_dot(arow: &[i8], panel: &[i8], acc: &mut [i32; TILE]) {
+    debug_assert_eq!(panel.len(), arow.len() * TILE);
+    let mut acc0 = vld1q_s32(acc.as_ptr());
+    let mut acc1 = vld1q_s32(acc.as_ptr().add(4));
+    let mut acc2 = vld1q_s32(acc.as_ptr().add(8));
+    let mut acc3 = vld1q_s32(acc.as_ptr().add(12));
+    for (&a, p) in arow.iter().zip(panel.chunks_exact(TILE)) {
+        let av = vdup_n_s8(a);
+        // one k step of the panel = 16 contiguous i8 codes (the
+        // PackedWeight ABI)
+        let pv = vld1q_s8(p.as_ptr());
+        let prod_lo = vmull_s8(vget_low_s8(pv), av); // exact i16 products
+        let prod_hi = vmull_s8(vget_high_s8(pv), av);
+        acc0 = vaddw_s16(acc0, vget_low_s16(prod_lo));
+        acc1 = vaddw_s16(acc1, vget_high_s16(prod_lo));
+        acc2 = vaddw_s16(acc2, vget_low_s16(prod_hi));
+        acc3 = vaddw_s16(acc3, vget_high_s16(prod_hi));
+    }
+    vst1q_s32(acc.as_mut_ptr(), acc0);
+    vst1q_s32(acc.as_mut_ptr().add(4), acc1);
+    vst1q_s32(acc.as_mut_ptr().add(8), acc2);
+    vst1q_s32(acc.as_mut_ptr().add(12), acc3);
+}
+
+/// Largest |v| of `row`, bit-identical to the scalar fold.
+///
+/// # Safety
+/// NEON must be available (baseline on aarch64).
+#[target_feature(enable = "neon")]
+pub unsafe fn row_absmax(row: &[f32]) -> f32 {
+    let mut m = vdupq_n_f32(0.0);
+    let mut it = row.chunks_exact(4);
+    for chunk in &mut it {
+        m = vmaxq_f32(m, vabsq_f32(vld1q_f32(chunk.as_ptr())));
+    }
+    let head = vmaxvq_f32(m);
+    it.remainder().iter().fold(head, |a, &v| a.max(v.abs()))
+}
+
+/// `out[j] = round(row[j] / delta).clamp(-qm, qm) as i8`, bit-identical
+/// to the scalar loop including tie rounding (`FRINTA` rounds ties
+/// away from zero, matching `f32::round` directly).
+///
+/// # Safety
+/// NEON must be available (baseline on aarch64); `out.len()` must
+/// equal `row.len()`; `delta > 0` and `qm > 0` (the
+/// [`super::quantize_row`] contract).
+#[target_feature(enable = "neon")]
+pub unsafe fn quantize_row(row: &[f32], delta: f32, qm: f32, out: &mut [i8]) {
+    debug_assert_eq!(row.len(), out.len());
+    let vd = vdupq_n_f32(delta);
+    let vqm = vdupq_n_f32(qm);
+    let vnqm = vdupq_n_f32(-qm);
+    let mut lanes = [0.0f32; 4];
+    let mut rows_it = row.chunks_exact(4);
+    let mut out_it = out.chunks_exact_mut(4);
+    for (chunk, ochunk) in (&mut rows_it).zip(&mut out_it) {
+        let q = vdivq_f32(vld1q_f32(chunk.as_ptr()), vd);
+        let r = vrndaq_f32(q);
+        let clamped = vminq_f32(vmaxq_f32(r, vnqm), vqm);
+        vst1q_f32(lanes.as_mut_ptr(), clamped);
+        for (o, &v) in ochunk.iter_mut().zip(&lanes) {
+            *o = v as i8;
+        }
+    }
+    for (o, &v) in out_it.into_remainder().iter_mut().zip(rows_it.remainder()) {
+        *o = (v / delta).round().clamp(-qm, qm) as i8;
+    }
+}

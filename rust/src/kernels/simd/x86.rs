@@ -1,0 +1,122 @@
+//! AVX2 implementations of the integer-path primitives (x86_64 only).
+//!
+//! Every routine here is pinned bit-identical to its scalar reference
+//! in [`super`], so instruction choice is driven by exactness first:
+//!
+//! * `tile_dot` widens `i8 → i16`, multiplies with
+//!   `_mm256_mullo_epi16` (exact: `|i8 · i8| ≤ 16129` fits `i16`), and
+//!   widens each product to `i32` before adding.  The obvious faster
+//!   choice, `_mm256_maddubs_epi16`, is *rejected*: it takes a
+//!   `u8 × i8` operand pair and its horizontal pair-add saturates at
+//!   `i16`, both of which break bit identity.  Wrapping `i32` adds are
+//!   safe because the igemm overflow guard bounds every partial sum.
+//! * `quantize_row` divides (IEEE division is exactly rounded, so it
+//!   matches the scalar `v / delta` lane for lane), then emulates
+//!   `f32::round`'s ties-away-from-zero semantics on top of the
+//!   hardware round-to-nearest-even: a lane is adjusted outward by
+//!   `copysign(1.0, q)` exactly when `|q - round_even(q)| == 0.5`
+//!   *and* the remainder points in `q`'s own direction (i.e. the even
+//!   choice landed on the toward-zero side).  The subtraction
+//!   `q - round_even(q)` is exact by Sterbenz's lemma (`|diff| ≤ 0.5`
+//!   forces the operands within a factor of two whenever a tie can
+//!   occur), so the tie test never misfires.  Sign agreement is tested
+//!   on the raw sign bits (`xor` then integer compare) because a float
+//!   compare cannot distinguish `+0.0` from `-0.0`.
+
+use super::TILE;
+#[allow(clippy::wildcard_imports)]
+use std::arch::x86_64::*;
+
+/// `acc[j] += Σ_k arow[k] · panel[k·TILE + j]`, bit-identical to
+/// [`super::tile_dot`]'s scalar arm.
+///
+/// # Safety
+/// The host must support AVX2 (`is_x86_feature_detected!("avx2")`);
+/// `panel.len()` must equal `arow.len() * TILE`.
+#[target_feature(enable = "avx2")]
+pub unsafe fn tile_dot(arow: &[i8], panel: &[i8], acc: &mut [i32; TILE]) {
+    debug_assert_eq!(panel.len(), arow.len() * TILE);
+    let mut acc_lo = _mm256_loadu_si256(acc.as_ptr() as *const __m256i);
+    let mut acc_hi = _mm256_loadu_si256(acc.as_ptr().add(8) as *const __m256i);
+    for (&a, p) in arow.iter().zip(panel.chunks_exact(TILE)) {
+        let av = _mm256_set1_epi16(a as i16);
+        // one k step of the panel = 16 contiguous i8 codes (the
+        // PackedWeight ABI), sign-extended to 16 i16 lanes
+        let pv = _mm256_cvtepi8_epi16(_mm_loadu_si128(p.as_ptr() as *const __m128i));
+        let prod = _mm256_mullo_epi16(av, pv); // exact: |i8 * i8| fits i16
+        let lo = _mm256_cvtepi16_epi32(_mm256_castsi256_si128(prod));
+        let hi = _mm256_cvtepi16_epi32(_mm256_extracti128_si256::<1>(prod));
+        acc_lo = _mm256_add_epi32(acc_lo, lo);
+        acc_hi = _mm256_add_epi32(acc_hi, hi);
+    }
+    _mm256_storeu_si256(acc.as_mut_ptr() as *mut __m256i, acc_lo);
+    _mm256_storeu_si256(acc.as_mut_ptr().add(8) as *mut __m256i, acc_hi);
+}
+
+/// Largest |v| of `row`, bit-identical to the scalar fold.
+///
+/// # Safety
+/// The host must support AVX2.
+#[target_feature(enable = "avx2")]
+pub unsafe fn row_absmax(row: &[f32]) -> f32 {
+    let absmask = _mm256_castsi256_ps(_mm256_set1_epi32(0x7FFF_FFFF));
+    let mut m = _mm256_setzero_ps();
+    let mut it = row.chunks_exact(8);
+    for chunk in &mut it {
+        let v = _mm256_loadu_ps(chunk.as_ptr());
+        m = _mm256_max_ps(m, _mm256_and_ps(v, absmask));
+    }
+    let mut lanes = [0.0f32; 8];
+    _mm256_storeu_ps(lanes.as_mut_ptr(), m);
+    let head = lanes.iter().fold(0.0f32, |a, &b| a.max(b));
+    it.remainder().iter().fold(head, |a, &v| a.max(v.abs()))
+}
+
+/// `out[j] = round(row[j] / delta).clamp(-qm, qm) as i8`, bit-identical
+/// to the scalar loop including tie rounding.
+///
+/// # Safety
+/// The host must support AVX2; `out.len()` must equal `row.len()`;
+/// `delta > 0` and `qm > 0` (the [`super::quantize_row`] contract).
+#[target_feature(enable = "avx2")]
+pub unsafe fn quantize_row(row: &[f32], delta: f32, qm: f32, out: &mut [i8]) {
+    debug_assert_eq!(row.len(), out.len());
+    let vd = _mm256_set1_ps(delta);
+    let vqm = _mm256_set1_ps(qm);
+    let vnqm = _mm256_set1_ps(-qm);
+    let half = _mm256_set1_ps(0.5);
+    let one = _mm256_set1_ps(1.0);
+    let signmask = _mm256_set1_ps(-0.0);
+    let absmask = _mm256_castsi256_ps(_mm256_set1_epi32(0x7FFF_FFFF));
+    let mut lanes = [0.0f32; 8];
+    let mut rows_it = row.chunks_exact(8);
+    let mut out_it = out.chunks_exact_mut(8);
+    for (chunk, ochunk) in (&mut rows_it).zip(&mut out_it) {
+        let q = _mm256_div_ps(_mm256_loadu_ps(chunk.as_ptr()), vd);
+        let re = _mm256_round_ps::<{ _MM_FROUND_TO_NEAREST_INT | _MM_FROUND_NO_EXC }>(q);
+        let diff = _mm256_sub_ps(q, re); // exact (Sterbenz) whenever a tie is possible
+        // tie lanes where round-to-even chose the toward-zero side:
+        // |diff| == 0.5 and diff's sign bit agrees with q's
+        let tie = _mm256_castps_si256(_mm256_cmp_ps::<_CMP_EQ_OQ>(
+            _mm256_and_ps(diff, absmask),
+            half,
+        ));
+        let toward_zero = _mm256_cmpeq_epi32(
+            _mm256_castps_si256(_mm256_and_ps(_mm256_xor_ps(diff, q), signmask)),
+            _mm256_setzero_si256(),
+        );
+        let step = _mm256_or_ps(one, _mm256_and_ps(q, signmask)); // copysign(1.0, q)
+        let adj = _mm256_and_ps(_mm256_castsi256_ps(_mm256_and_si256(tie, toward_zero)), step);
+        let r = _mm256_add_ps(re, adj);
+        let clamped = _mm256_min_ps(_mm256_max_ps(r, vnqm), vqm);
+        _mm256_storeu_ps(lanes.as_mut_ptr(), clamped);
+        // the f32 -> i8 conversion itself stays scalar: the values are
+        // already clamped integers, so `as` is exact and cheap
+        for (o, &v) in ochunk.iter_mut().zip(&lanes) {
+            *o = v as i8;
+        }
+    }
+    for (o, &v) in out_it.into_remainder().iter_mut().zip(rows_it.remainder()) {
+        *o = (v / delta).round().clamp(-qm, qm) as i8;
+    }
+}

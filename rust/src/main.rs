@@ -92,6 +92,7 @@ fn app() -> App {
                 .opt("queue-depth", "per-tenant admission queue capacity", Some("32"))
                 .opt("rows", "token rows per synthetic request (native backend)", Some("32"))
                 .opt("exec", "execution path on plan-covered cells: f32 (simulated qdq) | int8 (real integer GEMM over weights pre-quantized at plan load; needs --plan)", Some("f32"))
+                .opt("kernel-backend", "integer microkernel backend: auto | scalar | avx2 | neon (auto honors SMOOTHROT_KERNEL, else detects; results are bit-identical across backends)", Some("auto"))
                 .flag("reject", "reject instead of block when a tenant queue is full"),
         ],
     }
@@ -563,6 +564,8 @@ fn cmd_serve(p: &smoothrot::cli::Parsed) -> Result<()> {
     let threads = p.get_usize("threads").map_err(|e| anyhow!(e))?.unwrap_or(1);
     let plan_path = p.get("plan").map(str::to_string);
     let exec = ExecMode::from_name(&p.get_or("exec", "f32")).map_err(|e| anyhow!("serve: {e}"))?;
+    let kernel = smoothrot::kernels::simd::KernelBackend::resolve(p.get("kernel-backend"))
+        .map_err(|e| anyhow!("serve: {e}"))?;
     let cfg = ServeConfig {
         workers: p.get_usize("workers").map_err(|e| anyhow!(e))?.unwrap_or(2),
         max_batch: p.get_usize("max-batch").map_err(|e| anyhow!(e))?.unwrap_or(8),
@@ -586,6 +589,13 @@ fn cmd_serve(p: &smoothrot::cli::Parsed) -> Result<()> {
         cfg.admission,
         exec.name(),
     );
+    if backend == Backend::Native {
+        // the active integer-microkernel dispatch (bit-identical across
+        // choices; CI greps this line on the avx2 matrix leg)
+        println!(
+            "kernel backend: {kernel} (packed i8 tile GEMM + per-token quantize dispatch)"
+        );
+    }
 
     let (responses, metrics) = match backend {
         Backend::Native => {
@@ -600,7 +610,7 @@ fn cmd_serve(p: &smoothrot::cli::Parsed) -> Result<()> {
             let requests = synthetic_requests(n_requests, n_tenants, rows, layers, stream_seed);
             match plan_path {
                 None => run_serve(cfg, requests, move |_| {
-                    Ok(NativeBatchExecutor::with_threads(threads))
+                    Ok(NativeBatchExecutor::with_threads(threads).with_kernel_backend(kernel))
                 })?,
                 Some(path) => {
                     let registry =
@@ -658,7 +668,8 @@ fn cmd_serve(p: &smoothrot::cli::Parsed) -> Result<()> {
                             Arc::clone(&exec_registry),
                             threads,
                             exec,
-                        ))
+                        )
+                        .with_kernel_backend(kernel))
                     });
                     stop.store(true, Ordering::Relaxed);
                     let _ = poller.join();

@@ -31,6 +31,7 @@
 //! time), which the register-blocked integer microkernel
 //! ([`crate::kernels::igemm::igemm_packed_into`]) streams contiguously.
 
+use crate::kernels::simd;
 use crate::kernels::workspace::Workspace;
 use crate::metrics::{self, Channels};
 use crate::quant;
@@ -105,6 +106,10 @@ pub struct QMatrix {
 fn quantize_flat(x: &Matrix, deltas: &[f32], axis: ScaleAxis, qm: f32, out: &mut [i8]) {
     let (rows, cols) = x.shape();
     debug_assert_eq!(out.len(), rows * cols);
+    // per-token rows ride the serving hot path: dispatch the code
+    // conversion to the active SIMD backend, resolved once on the
+    // calling thread (bit-identical to the scalar loop by contract)
+    let backend = simd::current();
     for i in 0..rows {
         let row = x.row(i);
         let orow = &mut out[i * cols..(i + 1) * cols];
@@ -112,9 +117,7 @@ fn quantize_flat(x: &Matrix, deltas: &[f32], axis: ScaleAxis, qm: f32, out: &mut
             ScaleAxis::PerRow => {
                 let d = deltas[i];
                 if d > 0.0 {
-                    for (o, &v) in orow.iter_mut().zip(row) {
-                        *o = (v / d).round().clamp(-qm, qm) as i8;
-                    }
+                    simd::quantize_row(backend, row, d, qm, orow);
                 } else {
                     orow.fill(0);
                 }
@@ -139,7 +142,14 @@ impl QMatrix {
             ));
         }
         Ok(match axis {
-            ScaleAxis::PerRow => quant::token_scales(x, bits),
+            ScaleAxis::PerRow => {
+                // same grid as quant::token_scales, with the per-row
+                // abs-max reduction dispatched to the active SIMD
+                // backend (exact: max is order-free over finite f32)
+                let backend = simd::current();
+                let qm = quant::qmax(bits);
+                (0..x.rows()).map(|i| simd::row_absmax(backend, x.row(i)) / qm).collect()
+            }
             ScaleAxis::PerCol => quant::channel_scales(x, bits),
         })
     }
@@ -292,6 +302,25 @@ impl QMatrix {
 /// (`tile-major, k-contiguous` — panel element `(kk, jr)` of tile `t`
 /// lives at `t·k·TILE + kk·TILE + jr`).
 ///
+/// This layout is not merely a cache optimization — it is the **ABI
+/// the SIMD microkernels assume** ([`crate::kernels::simd::tile_dot`]):
+///
+/// * one `k` step of a panel is exactly `TILE = 16` contiguous `i8`
+///   codes, i.e. one unaligned 128-bit vector load (`TILE` is
+///   re-exported from [`crate::kernels::simd::TILE`] so the two sides
+///   cannot drift apart),
+/// * codes are plain `i8` — `i4` storage is unpacked at pack time, so
+///   the microkernel never sees a nibble,
+/// * the ragged trailing tile is zero-padded to full width: the SIMD
+///   kernel always multiply-accumulates all 16 lanes, and the padding
+///   lanes contribute exactly zero to the integer product, so no lane
+///   masking is needed,
+/// * panel addresses carry no alignment guarantee (`Vec<i8>` storage);
+///   the kernels use unaligned loads by contract.
+///
+/// The `packed_panel_layout_is_the_simd_abi` self-test pins the flat
+/// index formula element by element.
+///
 /// Row-major weight codes make the microkernel's inner loop read a full
 /// `n`-wide row per `k` step — a strided, cache-hostile access once `n`
 /// outgrows a few cache lines.  Packed tiles let the register-blocked
@@ -321,8 +350,10 @@ pub struct PackedWeight {
 impl PackedWeight {
     /// Output channels per packed tile.  16 `i32` accumulators fit the
     /// register budget of every target the crate cares about while
-    /// keeping ragged-edge waste under one tile.
-    pub const TILE: usize = 16;
+    /// keeping ragged-edge waste under one tile.  Shared with the SIMD
+    /// microkernels as [`crate::kernels::simd::TILE`] — one `k` step of
+    /// a panel is one 128-bit load there.
+    pub const TILE: usize = simd::TILE;
 
     /// Rearrange a per-channel-quantized weight into packed tiles,
     /// unpacking `i4` nibble storage to plain `i8` on the way.
@@ -552,6 +583,38 @@ mod tests {
         // per-row scales are rejected
         let qr = QMatrix::quantize(&w, 8, ScaleAxis::PerRow).unwrap();
         assert!(PackedWeight::pack(&qr).unwrap_err().contains("per-column"));
+    }
+
+    #[test]
+    fn packed_panel_layout_is_the_simd_abi() {
+        // the flat-index formula the SIMD microkernel assumes: panel
+        // element (kk, jr) of tile t at t*k*TILE + kk*TILE + jr, plain
+        // i8 codes, ragged tail zero-padded to full tile width
+        assert_eq!(PackedWeight::TILE, simd::TILE);
+        assert_eq!(PackedWeight::TILE, 16, "the SIMD kernels hardcode 128-bit panel steps");
+        const T: usize = PackedWeight::TILE;
+        let (k, n) = (5usize, 2 * T + 3); // two full tiles + a ragged one
+        let w = rand_matrix(k, n, 77);
+        let qw = QMatrix::quantize_i8(&w, 8, ScaleAxis::PerCol).unwrap();
+        let codes = qw.i8_codes().unwrap().to_vec();
+        let pw = PackedWeight::pack(&qw).unwrap();
+        assert_eq!(pw.tiles(), 3);
+        assert_eq!(pw.data.len(), pw.tiles() * k * T);
+        for t in 0..pw.tiles() {
+            // panel(t) is a view into the flat buffer at t*k*TILE
+            assert_eq!(pw.panel(t).as_ptr(), pw.data[t * k * T..].as_ptr());
+            for kk in 0..k {
+                for jr in 0..T {
+                    let j = t * T + jr;
+                    let want = if j < n { codes[kk * n + j] } else { 0 };
+                    assert_eq!(
+                        pw.data[t * k * T + kk * T + jr],
+                        want,
+                        "tile {t} k-step {kk} lane {jr}"
+                    );
+                }
+            }
+        }
     }
 
     #[test]

@@ -101,6 +101,7 @@ use std::time::{Duration, Instant};
 use crate::calib::registry::{PlanRegistry, ResolvedEntry};
 use crate::coordinator::{Executor, Job};
 use crate::kernels::par::{self, ThreadPool};
+use crate::kernels::simd::{self, KernelBackend};
 use crate::kernels::workspace::Workspace;
 use crate::metrics::{CacheStats, Percentiles};
 use crate::qtensor::PlannedWeight;
@@ -316,6 +317,12 @@ pub struct NativeBatchExecutor {
     /// [`NativeBatchExecutor::TRIM_BYTES`]; see
     /// [`NativeBatchExecutor::with_trim_budget`]).
     trim_bytes: usize,
+    /// Integer microkernel backend, pinned at construction
+    /// ([`simd::default_backend`] unless overridden by
+    /// [`NativeBatchExecutor::with_kernel_backend`]) and installed
+    /// around every run — bit-identical across choices by the
+    /// [`crate::kernels::simd`] contract.
+    backend: KernelBackend,
 }
 
 impl Default for NativeBatchExecutor {
@@ -359,7 +366,24 @@ impl NativeBatchExecutor {
             exec: ExecMode::F32,
             fuse: true,
             trim_bytes: Self::TRIM_BYTES,
+            backend: simd::default_backend(),
         }
+    }
+
+    /// Pin the integer microkernel backend (`--kernel-backend`); the
+    /// default is [`simd::default_backend`] — `SMOOTHROT_KERNEL` when
+    /// set, else the best the host supports.  Results are bit-identical
+    /// across backends, so this is a performance/debugging knob, never
+    /// a correctness one.
+    pub fn with_kernel_backend(mut self, backend: KernelBackend) -> Self {
+        self.backend = backend;
+        self
+    }
+
+    /// The integer microkernel backend this executor pins around every
+    /// run (the serve summary reports it).
+    pub fn kernel_backend(&self) -> KernelBackend {
+        self.backend
     }
 
     /// Override the between-batches workspace retention budget
@@ -426,7 +450,8 @@ impl NativeBatchExecutor {
     /// its stacked batch fusion — through [`BatchExecutor::run_batch`]).
     pub fn run(&mut self, job: &Job) -> Result<AnalyzeOut, String> {
         let pool = self.pool.clone();
-        par::with_pool(pool, || self.run_one(job))
+        let backend = self.backend;
+        simd::with_backend(backend, || par::with_pool(pool, || self.run_one(job)))
     }
 
     /// The per-job dispatch body (callers have the kernel pool
@@ -597,7 +622,9 @@ impl BatchExecutor for NativeBatchExecutor {
     /// under [`NativeBatchExecutor::TRIM_BYTES`].
     fn run_batch(&mut self, jobs: &[Job]) -> Vec<Result<AnalyzeOut, String>> {
         let pool = self.pool.clone();
-        let out = par::with_pool(pool, || self.run_batch_inner(jobs));
+        let backend = self.backend;
+        let out =
+            simd::with_backend(backend, || par::with_pool(pool, || self.run_batch_inner(jobs)));
         self.scratch.trim(self.trim_bytes);
         out
     }
@@ -1921,6 +1948,42 @@ mod tests {
         // the per-job baseline never touches the fused counter
         assert_eq!(reg_pj.batch_fused(), 0);
         assert_eq!(reg_pj.int8_stats(), (10, 0));
+    }
+
+    #[test]
+    fn kernel_backend_is_pinned_reported_and_bit_identical() {
+        // every SIMD backend the host detects must reproduce the
+        // scalar executor's results exactly, through the full
+        // plan-driven int8 batch path (transform, per-token quantize,
+        // fused GEMM) — and the pinned choice must be observable
+        let (reg, reqs) = int8_fixture(16, 8);
+        let jobs: Vec<Job> = reqs.iter().map(|(_, j)| j.clone()).collect();
+        let mut scalar_exec =
+            NativeBatchExecutor::with_plan_exec(Arc::clone(&reg), 1, ExecMode::Int8)
+                .with_kernel_backend(KernelBackend::Scalar);
+        assert_eq!(scalar_exec.kernel_backend(), KernelBackend::Scalar);
+        let want = scalar_exec.run_batch(&jobs);
+        for backend in [KernelBackend::Avx2, KernelBackend::Neon] {
+            if !backend.available() {
+                continue;
+            }
+            let (reg_b, _) = int8_fixture(16, 8);
+            let mut exec =
+                NativeBatchExecutor::with_plan_exec(Arc::clone(&reg_b), 1, ExecMode::Int8)
+                    .with_kernel_backend(backend);
+            assert_eq!(exec.kernel_backend(), backend);
+            let got = exec.run_batch(&jobs);
+            assert!(reg_b.batch_fused() > 0, "{backend}: the batch-fused gate must stay green");
+            for (i, (a, b)) in want.iter().zip(&got).enumerate() {
+                let (a, b) = (a.as_ref().unwrap(), b.as_ref().unwrap());
+                assert_eq!(a.errors, b.errors, "{backend} job {i}: errors must be bit-identical");
+                assert_eq!(a.act_difficulty, b.act_difficulty, "{backend} job {i}: difficulty");
+                assert_eq!(a.act_absmax, b.act_absmax, "{backend} job {i}: absmax");
+            }
+        }
+        // construction defaults to the process default (SMOOTHROT_KERNEL
+        // when set — the CI matrix knob — else hardware detection)
+        assert_eq!(NativeBatchExecutor::new().kernel_backend(), simd::default_backend());
     }
 
     #[test]

@@ -1,0 +1,331 @@
+//! Cross-kernel differential harness: every SIMD backend the host
+//! detects is pinned **bit-identical** to the scalar reference — `==`
+//! on every output, never a tolerance.
+//!
+//! Why exact pinning is even possible: the integer microkernel
+//! accumulates `i8 × i8` products in `i32`, the igemm overflow guard
+//! proves no partial sum can leave `i32`, and exact integer addition
+//! is associative — so any lane layout produces the same bits.  On the
+//! float side, the per-token abs-max is an order-free `max` fold and
+//! IEEE division/rounding are exactly specified, so the quantize path
+//! pins exactly too (the AVX2 kernel emulates `f32::round`'s
+//! ties-away-from-zero on top of hardware round-to-even; see
+//! `kernels/simd`).
+//!
+//! The silent-skip hazard is handled head-on: a host without AVX2/NEON
+//! runs only the scalar arm of every test here, which would let a
+//! mis-provisioned CI runner vacuously pass — so the x86_64 CI leg
+//! sets `SMOOTHROT_REQUIRE_BACKEND=avx2`, and
+//! `required_backend_must_be_detected` turns "backend unavailable"
+//! into a hard failure.
+
+use smoothrot::check::{check, ensure};
+use smoothrot::kernels::fused::analyze_planned_int;
+use smoothrot::kernels::igemm::{igemm, igemm_packed_into_with};
+use smoothrot::kernels::simd::{self, KernelBackend};
+use smoothrot::kernels::workspace::Workspace;
+use smoothrot::qtensor::{PackedWeight, PlannedWeight, QMatrix, ScaleAxis};
+use smoothrot::tensor::Matrix;
+use smoothrot::transforms::{self, Mode, RotationCache};
+
+/// SIMD backends this host can actually run (the scalar reference is
+/// implicit — it is what everything is compared against).
+fn simd_backends() -> Vec<KernelBackend> {
+    [KernelBackend::Avx2, KernelBackend::Neon]
+        .into_iter()
+        .filter(|b| b.available())
+        .collect()
+}
+
+/// The anti-vacuity gate: when `SMOOTHROT_REQUIRE_BACKEND` names a
+/// backend, it must be detected — otherwise every differential test in
+/// this file would silently degenerate to scalar-vs-scalar and a
+/// mis-provisioned CI host would pass the whole suite without running
+/// a single SIMD instruction.
+#[test]
+fn required_backend_must_be_detected() {
+    match simd::required_backend() {
+        Ok(None) => {}
+        Ok(Some(required)) => {
+            assert!(
+                required.available(),
+                "{}={} but this host only detects {:?} — the SIMD differential suite would \
+                 vacuously pass",
+                simd::ENV_REQUIRE,
+                required.name(),
+                KernelBackend::detect().name()
+            );
+            assert!(
+                simd_backends().contains(&required),
+                "required backend {} missing from the differential matrix",
+                required.name()
+            );
+        }
+        Err(e) => panic!("{e}"),
+    }
+}
+
+#[test]
+fn prop_packed_igemm_bit_identical_across_backends() {
+    let backends = simd_backends();
+    check("SIMD packed igemm == scalar packed igemm, bit for bit", 40, |g| {
+        let m = g.usize_in(1, 16);
+        let k = g.usize_in(1, 200);
+        let n = g.usize_in(1, 48); // crosses tile boundaries incl. ragged tails
+        let bits = *g.choose(&[4u32, 8]);
+        let threads = *g.choose(&[1usize, 2, 3, 8]);
+        let x = g.matrix(m, k);
+        let w = g.matrix(k, n);
+        // i4 activations at 4 bits exercise the nibble-unpack path in
+        // front of the SIMD tile loop
+        let qx = QMatrix::quantize(&x, bits, ScaleAxis::PerRow)?;
+        let pw = PackedWeight::pack(&QMatrix::quantize(&w, bits, ScaleAxis::PerCol)?)?;
+        let mut ws = Workspace::new();
+        let mut want = vec![0.0f32; m * n];
+        igemm_packed_into_with(&mut want, &qx, &pw, &mut ws, threads, KernelBackend::Scalar)?;
+        for &be in &backends {
+            let mut got = vec![f32::NAN; m * n];
+            igemm_packed_into_with(&mut got, &qx, &pw, &mut ws, threads, be)?;
+            ensure(
+                got == want,
+                format!("{be}: m={m} k={k} n={n} bits={bits} threads={threads} diverged"),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn adversarial_igemm_edges_are_bit_identical() {
+    // worst-case magnitudes at the overflow-guard boundary: all-qmax
+    // activation codes against a weight whose even lanes accumulate to
+    // within 4103 of i32::MAX and whose odd lanes alternate sign
+    let qm = 127u64;
+    let k_max = (i32::MAX as u64 / (qm * qm)) as usize; // 133_144
+    let c = 3.0f32;
+    let x = Matrix::from_vec(1, k_max, vec![c; k_max]);
+    let wdata: Vec<f32> = (0..k_max * 16)
+        .map(|i| {
+            let (kk, j) = (i / 16, i % 16);
+            if j % 2 == 0 {
+                c // constant lane: partial sums climb monotonically
+            } else if kk % 2 == 0 {
+                c // alternating lane: cancels every other step
+            } else {
+                -c
+            }
+        })
+        .collect();
+    let w = Matrix::from_vec(k_max, 16, wdata);
+    let qx = QMatrix::quantize_i8(&x, 8, ScaleAxis::PerRow).unwrap();
+    assert!(
+        qx.i8_codes().unwrap().iter().all(|&v| v == 127),
+        "fixture must hit the qmax code on every element"
+    );
+    let qw = QMatrix::quantize_i8(&w, 8, ScaleAxis::PerCol).unwrap();
+    assert!(qw.i8_codes().unwrap().iter().all(|&v| v.unsigned_abs() as u64 == qm));
+    let pw = PackedWeight::pack(&qw).unwrap();
+
+    let mut ws = Workspace::new();
+    // independent third computation: the row-major integer kernel
+    let reference = igemm(&qx, &qw, &mut ws, 1).unwrap();
+    let mut want = vec![0.0f32; 16];
+    igemm_packed_into_with(&mut want, &qx, &pw, &mut ws, 1, KernelBackend::Scalar).unwrap();
+    assert_eq!(want.as_slice(), reference.as_slice(), "scalar packed vs row-major");
+    for be in simd_backends() {
+        let mut got = vec![f32::NAN; 16];
+        igemm_packed_into_with(&mut got, &qx, &pw, &mut ws, 1, be).unwrap();
+        assert_eq!(got, want, "{be} at k = overflow-guard boundary ({k_max})");
+    }
+
+    // one past the guard: every backend must reject identically, not
+    // silently wrap
+    let x_over = Matrix::from_vec(1, k_max + 1, vec![c; k_max + 1]);
+    let w_over = Matrix::from_vec(k_max + 1, 16, vec![c; (k_max + 1) * 16]);
+    let qx_over = QMatrix::quantize_i8(&x_over, 8, ScaleAxis::PerRow).unwrap();
+    let pw_over =
+        PackedWeight::pack(&QMatrix::quantize_i8(&w_over, 8, ScaleAxis::PerCol).unwrap()).unwrap();
+    let mut out = vec![0.0f32; 16];
+    let scalar_err =
+        igemm_packed_into_with(&mut out, &qx_over, &pw_over, &mut ws, 1, KernelBackend::Scalar)
+            .unwrap_err();
+    assert!(scalar_err.contains("overflow"), "{scalar_err}");
+    for be in simd_backends() {
+        let err = igemm_packed_into_with(&mut out, &qx_over, &pw_over, &mut ws, 1, be).unwrap_err();
+        assert_eq!(err, scalar_err, "{be}: guard must fire identically");
+    }
+}
+
+#[test]
+fn prop_quantize_and_grid_bit_identical_across_backends() {
+    let backends = simd_backends();
+    check("per-token quantize + grid identical under every backend", 40, |g| {
+        let rows = g.usize_in(1, 12);
+        let cols = g.usize_in(1, 70); // crosses vector widths + tails
+        let bits = *g.choose(&[2u32, 4, 8]);
+        let x = g.matrix(rows, cols);
+        for axis in [ScaleAxis::PerRow, ScaleAxis::PerCol] {
+            let want = simd::with_backend(KernelBackend::Scalar, || {
+                QMatrix::quantize_i8(&x, bits, axis)
+            })?;
+            for &be in &backends {
+                let got = simd::with_backend(be, || QMatrix::quantize_i8(&x, bits, axis))?;
+                ensure(
+                    got.scales() == want.scales(),
+                    format!("{be}: bits={bits} {axis:?} grid steps diverged"),
+                )?;
+                ensure(
+                    got.i8_codes() == want.i8_codes(),
+                    format!("{be}: bits={bits} {axis:?} codes diverged"),
+                )?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn adversarial_quantize_ties_are_bit_identical() {
+    // exact grid ties are the one place x86 vector rounding
+    // (ties-to-even) disagrees with f32::round (ties-away-from-zero);
+    // delta = 1 makes v / delta exact so the ties genuinely fire, and
+    // the vector is longer than any SIMD width to cover lanes + tail
+    let mut row: Vec<f32> = Vec::new();
+    for q in [-4.0f32, -3.0, -2.0, -1.0, 0.0, 1.0, 2.0, 3.0] {
+        row.push(q + 0.5);
+        row.push(q - 0.5);
+        row.push(q + 0.49999997); // just below a tie: must NOT step out
+        row.push(q);
+    }
+    row.extend([126.5, 127.5, -126.5, -127.5, 1e30, -1e30, -0.0]);
+    for delta in [1.0f32, 0.5, 0.25] {
+        let mut want = vec![0i8; row.len()];
+        simd::quantize_row(KernelBackend::Scalar, &row, delta, 127.0, &mut want);
+        for be in simd_backends() {
+            let mut got = vec![0i8; row.len()];
+            simd::quantize_row(be, &row, delta, 127.0, &mut got);
+            assert_eq!(got, want, "{be} delta={delta}");
+        }
+    }
+}
+
+#[test]
+fn prop_planned_int_errors_bit_identical_across_backends() {
+    let backends = simd_backends();
+    if backends.is_empty() {
+        // nothing to compare; required_backend_must_be_detected keeps
+        // this from masking a mis-provisioned CI host
+        return;
+    }
+    check("planned-int Eq.2 errors identical under every backend", 10, |g| {
+        let rows = g.usize_in(2, 16);
+        let c_in = *g.choose(&[8usize, 16, 32]);
+        let c_out = g.usize_in(2, 10);
+        let bits = *g.choose(&[4u32, 8]);
+        let threads = g.usize_in(1, 3);
+        let alpha = g.f32_in(0.2, 0.8);
+        let x = g.matrix(rows, c_in);
+        let w = g.matrix(c_in, c_out);
+        let s = transforms::smooth_scales(&x, &w, alpha);
+        let inv: Vec<f32> = s.iter().map(|&v| 1.0 / v).collect();
+        let mut cache = RotationCache::new();
+        for mode in Mode::ALL {
+            let smooth =
+                matches!(mode, Mode::Smooth | Mode::SmoothRotate).then_some((&s[..], &inv[..]));
+            let rot = if matches!(mode, Mode::Rotate | Mode::SmoothRotate) {
+                Some(cache.get(c_in)?.clone())
+            } else {
+                None
+            };
+            let pw = PlannedWeight::from_plan(&w, smooth.map(|(s, _)| s), rot.as_ref(), bits, 1)?;
+            let mut ws = Workspace::new();
+            let want = simd::with_backend(KernelBackend::Scalar, || {
+                analyze_planned_int(&x, &w, bits, mode, smooth, rot.as_ref(), &pw, &mut ws, threads)
+            })?;
+            for &be in &backends {
+                let got = simd::with_backend(be, || {
+                    analyze_planned_int(
+                        &x,
+                        &w,
+                        bits,
+                        mode,
+                        smooth,
+                        rot.as_ref(),
+                        &pw,
+                        &mut ws,
+                        threads,
+                    )
+                })?;
+                ensure(
+                    got.errors == want.errors,
+                    format!("{be} {mode:?}: Eq.2 errors diverged ({:?} vs {:?})",
+                        got.errors, want.errors),
+                )?;
+                ensure(
+                    got.act_difficulty == want.act_difficulty,
+                    format!("{be} {mode:?}: act_difficulty diverged"),
+                )?;
+                ensure(
+                    got.act_absmax == want.act_absmax,
+                    format!("{be} {mode:?}: act_absmax diverged"),
+                )?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_trim_between_batches_is_invisible_to_packed_simd_igemm() {
+    // Workspace::trim drops pooled scratch; PackedWeight panels are
+    // owned by the weight, not the workspace, so a trim between
+    // batches must never perturb a packed GEMM — under any backend
+    let mut all = vec![KernelBackend::Scalar];
+    all.extend(simd_backends());
+    check("trim between batches never invalidates a packed panel", 15, |g| {
+        let m = g.usize_in(1, 10);
+        let k = *g.choose(&[16usize, 33, 64]);
+        let n = g.usize_in(1, 40);
+        let x = g.matrix(m, k);
+        let w = g.matrix(k, n);
+        // i4 activations force the unpack scratch that trim reclaims
+        let qx = QMatrix::quantize(&x, 4, ScaleAxis::PerRow)?;
+        let pw = PackedWeight::pack(&QMatrix::quantize(&w, 4, ScaleAxis::PerCol)?)?;
+        for &be in &all {
+            let mut ws = Workspace::new();
+            let mut want = vec![0.0f32; m * n];
+            igemm_packed_into_with(&mut want, &qx, &pw, &mut ws, 2, be)?;
+            ws.trim(0); // drop every pooled buffer between batches
+            let mut got = vec![f32::NAN; m * n];
+            igemm_packed_into_with(&mut got, &qx, &pw, &mut ws, 2, be)?;
+            ensure(got == want, format!("{be}: trim(0) between batches changed the output"))?;
+            ensure(ws.pooled_bytes() > 0, "second run must have repooled its scratch")?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn steady_state_packed_simd_igemm_is_allocation_free_with_trim() {
+    // the serving pattern: warm workspace, generous trim budget between
+    // batches — the SIMD path must stay allocation-free like scalar
+    let mut rng = smoothrot::rng::Rng::new(55);
+    let x = Matrix::from_vec(6, 32, rng.normals_f32(6 * 32));
+    let w = Matrix::from_vec(32, 24, rng.normals_f32(32 * 24));
+    let qx = QMatrix::quantize(&x, 4, ScaleAxis::PerRow).unwrap();
+    let pw = PackedWeight::pack(&QMatrix::quantize(&w, 4, ScaleAxis::PerCol).unwrap()).unwrap();
+    let mut backends = vec![KernelBackend::Scalar];
+    backends.extend(simd_backends());
+    for be in backends {
+        let mut ws = Workspace::new();
+        let mut out = vec![0.0f32; 6 * 24];
+        igemm_packed_into_with(&mut out, &qx, &pw, &mut ws, 1, be).unwrap();
+        let (_, warm) = ws.stats();
+        for _ in 0..5 {
+            ws.trim(16 << 20); // the executor's between-batches budget
+            igemm_packed_into_with(&mut out, &qx, &pw, &mut ws, 1, be).unwrap();
+        }
+        let (_, allocs) = ws.stats();
+        assert_eq!(allocs, warm, "{be}: steady-state SIMD igemm must not allocate");
+    }
+}

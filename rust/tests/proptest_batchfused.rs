@@ -7,19 +7,28 @@
 //! Eq. 1 per-token grids, the integer GEMM rows, the Eq. 2 error fold —
 //! is row-local, so stacking activation rows must change *nothing*.
 //! These tests pin that across job counts, row counts, bit widths,
-//! transform modes and thread counts, and pin the packed-tile GEMM
+//! transform modes, thread counts and **kernel backends** (scalar plus
+//! whatever SIMD the host detects), and pin the packed-tile GEMM
 //! against the row-major kernel exactly (integer accumulation is
 //! associative, so equality is `==`, never a tolerance).
 
 use smoothrot::check::{check, ensure};
 use smoothrot::kernels::fused::{analyze_planned_int, analyze_planned_int_batch};
-use smoothrot::kernels::igemm::{igemm, igemm_packed_into};
+use smoothrot::kernels::igemm::{igemm, igemm_packed_into_with};
 use smoothrot::kernels::par::{self, ThreadPool};
+use smoothrot::kernels::simd::{self, KernelBackend};
 use smoothrot::kernels::workspace::Workspace;
 use smoothrot::qtensor::{PackedWeight, PlannedWeight, QMatrix, ScaleAxis};
 use smoothrot::tensor::Matrix;
 use smoothrot::transforms::{self, Mode, RotationCache};
 use std::sync::Arc;
+
+/// Scalar plus every SIMD backend this host detects.
+fn kernel_backends() -> Vec<KernelBackend> {
+    let mut v = vec![KernelBackend::Scalar];
+    v.extend([KernelBackend::Avx2, KernelBackend::Neon].into_iter().filter(|b| b.available()));
+    v
+}
 
 #[test]
 fn prop_batch_fused_bit_identical_to_per_job() {
@@ -113,51 +122,54 @@ fn prop_batch_fused_thread_count_and_pool_invariant() {
         let pw = PlannedWeight::from_plan(&w, None, Some(&rot), bits, 1)?;
         let pairs: Vec<(&Matrix, &Matrix)> = xs.iter().map(|x| (x, &w)).collect();
         let mut ws = Workspace::new();
-        let serial = analyze_planned_int_batch(
-            &pairs,
-            bits,
-            Mode::Rotate,
-            None,
-            Some(&rot),
-            &pw,
-            &mut ws,
-            1,
-        )?;
-        for threads in [2usize, 3, 8] {
-            // scoped-thread backend
-            let scoped = analyze_planned_int_batch(
-                &pairs,
-                bits,
-                Mode::Rotate,
-                None,
-                Some(&rot),
-                &pw,
-                &mut ws,
-                threads,
-            )?;
-            // persistent-pool backend (what a serving executor installs)
-            let pool = Arc::new(ThreadPool::new(threads));
-            let pooled = par::with_pool(Some(pool), || {
-                analyze_planned_int_batch(
-                    &pairs,
-                    bits,
-                    Mode::Rotate,
-                    None,
-                    Some(&rot),
-                    &pw,
-                    &mut ws,
-                    threads,
-                )
-            })?;
-            for ((a, b), c) in serial.iter().zip(&scoped).zip(&pooled) {
-                ensure(
-                    a.errors == b.errors && a.errors == c.errors,
-                    format!("threads={threads}: errors diverged across backends"),
-                )?;
-                ensure(
-                    a.act_difficulty == b.act_difficulty && a.act_difficulty == c.act_difficulty,
-                    format!("threads={threads}: difficulty diverged across backends"),
-                )?;
+        // the anchor: serial, scalar kernels — every (threads, pool,
+        // kernel backend) combination must reproduce it bit for bit
+        let serial = simd::with_backend(KernelBackend::Scalar, || {
+            analyze_planned_int_batch(&pairs, bits, Mode::Rotate, None, Some(&rot), &pw, &mut ws, 1)
+        })?;
+        for be in kernel_backends() {
+            for threads in [2usize, 3, 8] {
+                // scoped-thread backend
+                let scoped = simd::with_backend(be, || {
+                    analyze_planned_int_batch(
+                        &pairs,
+                        bits,
+                        Mode::Rotate,
+                        None,
+                        Some(&rot),
+                        &pw,
+                        &mut ws,
+                        threads,
+                    )
+                })?;
+                // persistent-pool backend (what a serving executor
+                // installs, with its kernel backend pinned around it)
+                let pool = Arc::new(ThreadPool::new(threads));
+                let pooled = simd::with_backend(be, || {
+                    par::with_pool(Some(pool), || {
+                        analyze_planned_int_batch(
+                            &pairs,
+                            bits,
+                            Mode::Rotate,
+                            None,
+                            Some(&rot),
+                            &pw,
+                            &mut ws,
+                            threads,
+                        )
+                    })
+                })?;
+                for ((a, b), c) in serial.iter().zip(&scoped).zip(&pooled) {
+                    ensure(
+                        a.errors == b.errors && a.errors == c.errors,
+                        format!("{be} threads={threads}: errors diverged across backends"),
+                    )?;
+                    ensure(
+                        a.act_difficulty == b.act_difficulty
+                            && a.act_difficulty == c.act_difficulty,
+                        format!("{be} threads={threads}: difficulty diverged across backends"),
+                    )?;
+                }
             }
         }
         Ok(())
@@ -183,15 +195,18 @@ fn prop_packed_igemm_equals_row_major_exactly() {
         let want = igemm(&qx, &qw_i8, &mut ws, 1)?;
         for qw in [&qw_i8, &qw_at_rest] {
             let pw = PackedWeight::pack(qw)?;
-            let mut got = vec![0.0f32; m * n];
-            igemm_packed_into(&mut got, &qx, &pw, &mut ws, threads)?;
-            ensure(
-                got.as_slice() == want.as_slice(),
-                format!(
-                    "m={m} k={k} n={n} bits={bits} threads={threads} packed_src={}: diverged",
-                    if qw.is_packed() { "i4" } else { "i8" }
-                ),
-            )?;
+            for be in kernel_backends() {
+                let mut got = vec![0.0f32; m * n];
+                igemm_packed_into_with(&mut got, &qx, &pw, &mut ws, threads, be)?;
+                ensure(
+                    got.as_slice() == want.as_slice(),
+                    format!(
+                        "be={be} m={m} k={k} n={n} bits={bits} threads={threads} \
+                         packed_src={}: diverged",
+                        if qw.is_packed() { "i4" } else { "i8" }
+                    ),
+                )?;
+            }
         }
         Ok(())
     });

@@ -2,16 +2,28 @@
 //! proptest-lite): integer GEMM vs the f32 `qdq`-then-`matmul`
 //! reference, dequantize-vs-qdq bit identity, i4 pack/unpack identity,
 //! thread-count invariance, and the planned integer eval tracking the
-//! simulated planned eval.
+//! simulated planned eval.  Backend-sensitive properties run under
+//! every kernel backend the host detects (scalar plus AVX2/NEON), so
+//! the SIMD quantize and tile kernels are held to the same references
+//! as the scalar code — see `tests/differential_kernels.rs` for the
+//! dedicated scalar-vs-SIMD equality matrix.
 
 use smoothrot::check::{check, close, ensure};
 use smoothrot::kernels::fused::{analyze_planned, analyze_planned_int};
 use smoothrot::kernels::igemm::igemm;
+use smoothrot::kernels::simd::{self, KernelBackend};
 use smoothrot::kernels::workspace::Workspace;
 use smoothrot::qtensor::{pack_i4, unpack_i4, PlannedWeight, QMatrix, ScaleAxis};
 use smoothrot::quant::{self, Granularity};
 use smoothrot::tensor::frob_dist_sq;
 use smoothrot::transforms::{self, Mode, RotationCache};
+
+/// Scalar plus every SIMD backend this host detects.
+fn kernel_backends() -> Vec<KernelBackend> {
+    let mut v = vec![KernelBackend::Scalar];
+    v.extend([KernelBackend::Avx2, KernelBackend::Neon].into_iter().filter(|b| b.available()));
+    v
+}
 
 #[test]
 fn prop_igemm_matches_qdq_then_matmul_reference() {
@@ -23,20 +35,28 @@ fn prop_igemm_matches_qdq_then_matmul_reference() {
         let threads = g.usize_in(1, 4);
         let x = g.matrix(m, k);
         let w = g.matrix(k, n);
-        let qx = QMatrix::quantize(&x, bits, ScaleAxis::PerRow)?;
-        let qw = QMatrix::quantize(&w, bits, ScaleAxis::PerCol)?;
-        // 4-bit operands take the packed-i4 storage path
-        ensure(qx.is_packed() == (bits == 4), "storage kind follows bits")?;
-        let mut ws = Workspace::new();
-        let got = igemm(&qx, &qw, &mut ws, threads)?;
         let want = quant::qdq(&x, bits, Granularity::PerToken)
             .matmul(&quant::qdq(&w, bits, Granularity::PerChannel));
-        let dist = frob_dist_sq(want.as_slice(), got.as_slice()).sqrt();
-        let rel = dist / want.frob().max(1e-9);
-        ensure(
-            rel <= 1e-4,
-            format!("m={m} k={k} n={n} bits={bits} threads={threads}: rel frobenius {rel}"),
-        )
+        let mut ws = Workspace::new();
+        // the f32 reference is backend-free, so every kernel backend's
+        // quantize must land on the same grid
+        for be in kernel_backends() {
+            let (qx, got) = simd::with_backend(be, || {
+                let qx = QMatrix::quantize(&x, bits, ScaleAxis::PerRow)?;
+                let qw = QMatrix::quantize(&w, bits, ScaleAxis::PerCol)?;
+                let got = igemm(&qx, &qw, &mut ws, threads)?;
+                Ok::<_, String>((qx, got))
+            })?;
+            // 4-bit operands take the packed-i4 storage path
+            ensure(qx.is_packed() == (bits == 4), "storage kind follows bits")?;
+            let dist = frob_dist_sq(want.as_slice(), got.as_slice()).sqrt();
+            let rel = dist / want.frob().max(1e-9);
+            ensure(
+                rel <= 1e-4,
+                format!("be={be} m={m} k={k} n={n} bits={bits} threads={threads}: rel {rel}"),
+            )?;
+        }
+        Ok(())
     });
 }
 
@@ -51,12 +71,16 @@ fn prop_dequantize_bit_identical_to_qdq_both_granularities() {
             (ScaleAxis::PerRow, Granularity::PerToken),
             (ScaleAxis::PerCol, Granularity::PerChannel),
         ] {
-            let q = QMatrix::quantize(&x, bits, axis)?;
             let want = quant::qdq(&x, bits, gran);
-            ensure(
-                q.dequantize().as_slice() == want.as_slice(),
-                format!("bits={bits} axis={axis:?}: dequantize drifted from qdq"),
-            )?;
+            // qdq is the scalar f32 reference: a SIMD quantize that
+            // rounds even one tie differently fails this bit-for-bit
+            for be in kernel_backends() {
+                let q = simd::with_backend(be, || QMatrix::quantize(&x, bits, axis))?;
+                ensure(
+                    q.dequantize().as_slice() == want.as_slice(),
+                    format!("be={be} bits={bits} axis={axis:?}: dequantize drifted from qdq"),
+                )?;
+            }
         }
         Ok(())
     });
@@ -127,22 +151,29 @@ fn prop_planned_int_tracks_planned_f32_across_modes() {
             let sim = analyze_planned(&x, &w, bits, mode, smooth, rot.as_ref(), &mut ws, threads)?;
             let pw =
                 PlannedWeight::from_plan(&w, smooth.map(|(s, _)| s), rot.as_ref(), bits, threads)?;
-            let exec = analyze_planned_int(
-                &x,
-                &w,
-                bits,
-                mode,
-                smooth,
-                rot.as_ref(),
-                &pw,
-                &mut ws,
-                threads,
-            )?;
-            let i = mode.index();
-            close(sim.errors[i], exec.errors[i], 1e-2, &format!("{mode:?} executed error"))?;
-            for j in 0..4 {
-                if j != i {
-                    ensure(exec.errors[j].is_infinite(), format!("{mode:?} slot {j} finite"))?;
+            for be in kernel_backends() {
+                let exec = simd::with_backend(be, || {
+                    analyze_planned_int(
+                        &x,
+                        &w,
+                        bits,
+                        mode,
+                        smooth,
+                        rot.as_ref(),
+                        &pw,
+                        &mut ws,
+                        threads,
+                    )
+                })?;
+                let i = mode.index();
+                close(sim.errors[i], exec.errors[i], 1e-2, &format!("{mode:?} {be} exec error"))?;
+                for j in 0..4 {
+                    if j != i {
+                        ensure(
+                            exec.errors[j].is_infinite(),
+                            format!("{mode:?} {be} slot {j} finite"),
+                        )?;
+                    }
                 }
             }
         }
