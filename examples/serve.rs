@@ -10,7 +10,10 @@
 //! then `--exec int8`-style real integer execution (weights
 //! pre-quantized once per layer, per-request work = transform +
 //! quantize activation rows + i32-accumulated integer GEMM) with the
-//! f32-vs-int8 throughput delta printed.
+//! f32-vs-int8 throughput delta printed.  A final pass re-serves the
+//! int8 stream across 2 layer-sharded runners (shared registry, work
+//! stealing) and asserts the per-job outputs are bit-identical to the
+//! single-server pass.
 //!
 //! ```bash
 //! cargo run --release --example serve -- [requests] [workers] [max_batch]
@@ -133,10 +136,11 @@ fn main() -> Result<()> {
         }))
         .map_err(anyhow::Error::msg)?;
     let reg = Arc::clone(&registry);
-    let (_, int8) = serve_all(cfg, synthetic_requests(n_requests, 3, rows, 32, 1), move |_| {
-        Ok(NativeBatchExecutor::with_plan_exec(Arc::clone(&reg), 1, ExecMode::Int8))
-    })
-    .map_err(|e| anyhow!(e.to_string()))?;
+    let (int8_responses, int8) =
+        serve_all(cfg, synthetic_requests(n_requests, 3, rows, 32, 1), move |_| {
+            Ok(NativeBatchExecutor::with_plan_exec(Arc::clone(&reg), 1, ExecMode::Int8))
+        })
+        .map_err(|e| anyhow!(e.to_string()))?;
     println!(
         "int8 plan-driven: {:.1} req/s vs f32 plan-driven {:.1} req/s ({:+.0}% throughput, \
          {loaded} weights pre-quantized once, {} requests batch-fused into stacked GEMMs)",
@@ -154,6 +158,41 @@ fn main() -> Result<()> {
     assert!(
         registry.batch_fused() > 0,
         "int8 pass silently fell back to per-job execution (zero batch-fused requests)"
+    );
+
+    // Finally, sharded: the same int8 stream split across 2 runners
+    // that each OWN their layers (runner = layer % 2), sharing the one
+    // plan registry, with idle runners stealing a busy peer's surplus.
+    // Sharding changes placement, never math — every per-job output
+    // must match the single-server int8 pass bit for bit.
+    use smoothrot::serve::shard::{serve_all_sharded, ShardBy, ShardConfig};
+    let reg = Arc::clone(&registry);
+    let scfg = ShardConfig { runners: 2, shard_by: ShardBy::Layer, stealing: true, base: cfg };
+    let (sharded_responses, sharded) =
+        serve_all_sharded(scfg, synthetic_requests(n_requests, 3, rows, 32, 1), move |_| {
+            Ok(NativeBatchExecutor::with_plan_exec(Arc::clone(&reg), 1, ExecMode::Int8))
+        })
+        .map_err(|e| anyhow!(e.to_string()))?;
+    println!(
+        "sharded int8 (2 runners by layer): {:.1} req/s vs single-server {:.1} req/s",
+        sharded.throughput(),
+        int8.throughput(),
+    );
+    for (i, &b) in sharded.per_worker_batches.iter().enumerate() {
+        println!(
+            "  runner {i}: routed {} batches {b} steals {}",
+            sharded.per_worker_routed[i], sharded.per_worker_steals[i]
+        );
+    }
+    let by_id = |rs: &[Response]| {
+        rs.iter()
+            .map(|r| (r.id, r.out.clone().expect("request errored")))
+            .collect::<std::collections::BTreeMap<_, _>>()
+    };
+    assert_eq!(
+        by_id(&sharded_responses),
+        by_id(&int8_responses),
+        "sharded per-job outputs diverged from the single-server int8 pass"
     );
     Ok(())
 }

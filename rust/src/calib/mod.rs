@@ -43,7 +43,7 @@
 //!   ready-to-apply transforms (pre-built [`crate::transforms::Rotation`]
 //!   entries, pre-scaled smoothing vectors) that
 //!   [`crate::serve::NativeBatchExecutor`] consults per request, with a
-//!   SIGHUP-free mtime-poll hot reload.
+//!   SIGHUP-free content-hash-poll hot reload.
 //!
 //! The CLI entry points are `smoothrot calibrate` (stream → stats →
 //! search → plan file) and `smoothrot serve --plan <path>`; the

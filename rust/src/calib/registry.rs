@@ -10,18 +10,22 @@
 //! the four-mode analyze — zero per-request transform search.
 //!
 //! Hot reload is SIGHUP-free: [`PlanRegistry::reload_if_changed`] polls
-//! the plan file's (mtime, length) stamp and atomically swaps the
-//! resolved state when the content hash actually changed, so a running
-//! server picks up a re-calibrated plan without restarting.
+//! the plan file's *content* — a raw-byte FNV-1a hash short-circuits
+//! the untouched-file case, the plan's canonical content hash decides
+//! whether anything semantically changed — and atomically swaps the
+//! resolved state only on a real change.  No mtime/length stamps: a
+//! same-second same-size rewrite is detected, and a formatting-only
+//! rewrite is skipped (and counted) instead of re-resolved.  All
+//! runners of a sharded server share one registry, so the swap is
+//! observed atomically across the fleet.
 
 use std::collections::BTreeMap;
 use std::fmt;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
-use std::time::SystemTime;
 
-use crate::calib::plan::QuantPlan;
+use crate::calib::plan::{fnv1a64, QuantPlan};
 use crate::qtensor::PlannedWeight;
 use crate::tensor::Matrix;
 use crate::transforms::{Mode, Rotation};
@@ -61,8 +65,11 @@ pub struct ResolvedEntry {
 struct Resolved {
     map: BTreeMap<String, BTreeMap<(usize, u32), ResolvedEntry>>,
     content_hash: String,
-    /// (mtime, byte length) of the backing file at load time.
-    file_stamp: Option<(SystemTime, u64)>,
+    /// FNV-1a hash of the backing file's raw bytes as last read —
+    /// the cheap poll short-circuit (no parse when the file is
+    /// byte-identical).  Unlike an (mtime, length) stamp it cannot
+    /// miss a same-second same-size rewrite.
+    file_hash: Option<u64>,
 }
 
 /// Source of the serving model's per-(module, layer) weights, consulted
@@ -100,6 +107,13 @@ pub struct PlanRegistry {
     /// observability counter for a silent per-job fallback, mirroring
     /// `int8_executed`.
     batch_fused: AtomicU64,
+    /// Polls that found a rewritten file whose *canonical* plan content
+    /// was identical (formatting-only rewrite): no resolve, no swap.
+    reload_skipped: AtomicU64,
+    /// Bumped once per real hot swap, inside the state write lock — a
+    /// fleet-wide plan version counter for "which plan generation am I
+    /// serving" assertions.
+    generation: AtomicU64,
 }
 
 fn resolve(plan: &QuantPlan) -> Result<Resolved, String> {
@@ -164,7 +178,7 @@ fn resolve(plan: &QuantPlan) -> Result<Resolved, String> {
             ));
         }
     }
-    Ok(Resolved { map, content_hash: plan.content_hash(), file_stamp: None })
+    Ok(Resolved { map, content_hash: plan.content_hash(), file_hash: None })
 }
 
 /// Pre-quantize every loadable entry's transformed weight into the
@@ -204,11 +218,9 @@ fn preload_into(res: &mut Resolved, f: &WeightFn) -> Result<usize, String> {
     Ok(loaded)
 }
 
-fn stamp(path: &Path) -> Result<(SystemTime, u64), String> {
-    let meta = std::fs::metadata(path)
-        .map_err(|e| format!("plan registry: stat {}: {e}", path.display()))?;
-    let mtime = meta.modified().unwrap_or(SystemTime::UNIX_EPOCH);
-    Ok((mtime, meta.len()))
+fn read_plan_text(path: &Path) -> Result<String, String> {
+    std::fs::read_to_string(path)
+        .map_err(|e| format!("plan registry: read {}: {e}", path.display()))
 }
 
 impl PlanRegistry {
@@ -223,16 +235,19 @@ impl PlanRegistry {
             int8_executed: AtomicU64::new(0),
             int8_degraded: AtomicU64::new(0),
             batch_fused: AtomicU64::new(0),
+            reload_skipped: AtomicU64::new(0),
+            generation: AtomicU64::new(0),
         })
     }
 
-    /// Load, parse and resolve a plan file, remembering its stamp for
-    /// [`PlanRegistry::reload_if_changed`].
+    /// Load, parse and resolve a plan file, remembering its raw-byte
+    /// hash for [`PlanRegistry::reload_if_changed`].
     pub fn load(path: impl Into<PathBuf>) -> Result<Self, String> {
         let path = path.into();
-        let plan = QuantPlan::load(&path)?;
+        let text = read_plan_text(&path)?;
+        let plan = QuantPlan::parse(&text).map_err(|e| format!("{}: {e}", path.display()))?;
         let mut resolved = resolve(&plan)?;
-        resolved.file_stamp = Some(stamp(&path)?);
+        resolved.file_hash = Some(fnv1a64(text.as_bytes()));
         Ok(Self {
             path: Some(path),
             state: RwLock::new(resolved),
@@ -242,6 +257,8 @@ impl PlanRegistry {
             int8_executed: AtomicU64::new(0),
             int8_degraded: AtomicU64::new(0),
             batch_fused: AtomicU64::new(0),
+            reload_skipped: AtomicU64::new(0),
+            generation: AtomicU64::new(0),
         })
     }
 
@@ -429,22 +446,61 @@ impl PlanRegistry {
         (self.int8_executed.load(Ordering::Relaxed), self.int8_degraded.load(Ordering::Relaxed))
     }
 
-    /// Poll the backing file's (mtime, length) stamp and atomically
-    /// swap in the re-resolved plan when its content hash changed.
-    /// Returns `Ok(true)` iff a new plan is now live.  Registries
-    /// without a backing file always return `Ok(false)`.
+    /// Polls that skipped a formatting-only plan-file rewrite (raw
+    /// bytes changed, canonical content identical) since creation.
+    pub fn reload_skipped_identical(&self) -> u64 {
+        self.reload_skipped.load(Ordering::Relaxed)
+    }
+
+    /// Hot swaps performed since creation.  Bumped inside the state
+    /// write lock, so a reader that observes generation `g` is
+    /// guaranteed to resolve lookups against plan generation `>= g`.
+    pub fn generation(&self) -> u64 {
+        self.generation.load(Ordering::Relaxed)
+    }
+
+    /// Poll the backing file's *content* and atomically swap in the
+    /// re-resolved plan when it semantically changed.  Returns
+    /// `Ok(true)` iff a new plan is now live.  Registries without a
+    /// backing file always return `Ok(false)`.
+    ///
+    /// Two-level change detection, cheapest first:
+    /// 1. FNV-1a over the raw file bytes — byte-identical file, no
+    ///    parse, no swap.  Content-addressed, so a same-second
+    ///    same-size rewrite (which an mtime+length stamp misses) is
+    ///    still caught.
+    /// 2. The parsed plan's canonical [`QuantPlan::content_hash`] — a
+    ///    rewrite that only changes formatting is remembered (its raw
+    ///    hash becomes the new short-circuit) and counted via
+    ///    [`PlanRegistry::reload_skipped_identical`], but never
+    ///    re-resolved or swapped.
     pub fn reload_if_changed(&self) -> Result<bool, String> {
         let Some(path) = &self.path else { return Ok(false) };
-        let now = stamp(path)?;
+        let text = read_plan_text(path)?;
+        let raw_hash = fnv1a64(text.as_bytes());
         {
             let state = self.read();
-            if state.file_stamp == Some(now) {
+            if state.file_hash == Some(raw_hash) {
                 return Ok(false);
             }
         }
-        let plan = QuantPlan::load(path)?;
+        let plan = QuantPlan::parse(&text).map_err(|e| format!("{}: {e}", path.display()))?;
+        {
+            let mut state = match self.state.write() {
+                Ok(g) => g,
+                Err(p) => p.into_inner(),
+            };
+            if state.content_hash == plan.content_hash() {
+                // formatting-only rewrite: adopt the new raw hash so
+                // the next poll short-circuits, count the skip, keep
+                // the live state untouched
+                state.file_hash = Some(raw_hash);
+                self.reload_skipped.fetch_add(1, Ordering::Relaxed);
+                return Ok(false);
+            }
+        }
         let mut resolved = resolve(&plan)?;
-        resolved.file_stamp = Some(now);
+        resolved.file_hash = Some(raw_hash);
         // re-quantize planned weights against the fresh plan *before*
         // the swap, so int8 serving never sees a weightless window.
         // The provider slot stays locked across the swap itself
@@ -466,6 +522,11 @@ impl PlanRegistry {
             };
             let changed = state.content_hash != resolved.content_hash;
             *state = resolved;
+            if changed {
+                // inside the write lock: a reader can never observe the
+                // new generation number with the old plan still live
+                self.generation.fetch_add(1, Ordering::Relaxed);
+            }
             changed
         };
         drop(guard);
@@ -558,7 +619,7 @@ mod tests {
         assert_eq!(reg.len(), 1);
         // untouched file: no reload
         assert!(!reg.reload_if_changed().unwrap());
-        // rewrite with a different plan (different length => stamp change)
+        // rewrite with a different plan
         plan(vec![
             entry("k_proj", 0, Mode::Rotate, 16),
             entry("o_proj", 3, Mode::SmoothRotate, 16),
@@ -569,6 +630,56 @@ mod tests {
         assert_eq!(reg.len(), 2);
         assert_eq!(reg.lookup("k_proj", 0, 4, 16).unwrap().mode, Mode::Rotate);
         assert!(!reg.reload_if_changed().unwrap(), "second poll sees no change");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn reload_catches_a_same_size_rewrite() {
+        // an mtime+length stamp misses a rewrite that lands in the same
+        // second with the same byte length; raw-byte hashing must not.
+        // The two plans serialize to the same length (only a layer
+        // index differs) and are written back to back.
+        let dir = std::env::temp_dir().join("smoothrot_registry_samesize_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("plan.json");
+        let a = plan(vec![entry("k_proj", 0, Mode::None, 8)]);
+        let b = plan(vec![entry("k_proj", 1, Mode::None, 8)]);
+        assert_eq!(
+            a.to_json_string().len(),
+            b.to_json_string().len(),
+            "fixture must be a same-size rewrite"
+        );
+        a.save(&path).unwrap();
+        let reg = PlanRegistry::load(&path).unwrap();
+        assert_eq!(reg.generation(), 0);
+        b.save(&path).unwrap();
+        assert!(reg.reload_if_changed().unwrap(), "same-size rewrite must swap in");
+        assert!(reg.lookup("k_proj", 1, 4, 8).is_some());
+        assert!(reg.lookup("k_proj", 0, 4, 8).is_none());
+        assert_eq!(reg.generation(), 1, "a real swap bumps the generation");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn formatting_only_rewrite_is_skipped_and_counted() {
+        let dir = std::env::temp_dir().join("smoothrot_registry_fmt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("plan.json");
+        let p = plan(vec![entry("k_proj", 0, Mode::None, 8)]);
+        p.save(&path).unwrap();
+        let reg = PlanRegistry::load(&path).unwrap();
+        // rewrite the same plan with different raw bytes but identical
+        // canonical content (trailing whitespace is formatting)
+        let text = std::fs::read_to_string(&path).unwrap();
+        std::fs::write(&path, format!("{text}\n\n")).unwrap();
+        assert_eq!(reg.reload_skipped_identical(), 0);
+        assert!(!reg.reload_if_changed().unwrap(), "identical content must not swap");
+        assert_eq!(reg.reload_skipped_identical(), 1);
+        assert_eq!(reg.generation(), 0, "a skipped reload is not a new generation");
+        // the rewritten bytes became the new short-circuit: the next
+        // poll is a cheap raw-hash hit, not another parse-and-skip
+        assert!(!reg.reload_if_changed().unwrap());
+        assert_eq!(reg.reload_skipped_identical(), 1);
         std::fs::remove_dir_all(&dir).ok();
     }
 

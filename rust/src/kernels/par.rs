@@ -42,6 +42,14 @@ pub fn resolve_threads(threads: usize) -> usize {
     }
 }
 
+/// Default per-runner thread budget when `runners` runner instances
+/// share the machine: an even split of all cores, floored at one.
+/// Keeps `--runners N` from oversubscribing N× (each runner owns its
+/// own persistent pool); an explicit `--threads` overrides this.
+pub fn threads_per_runner(runners: usize) -> usize {
+    (resolve_threads(0) / runners.max(1)).max(1)
+}
+
 // ---------------------------------------------------------------------
 // persistent worker pool
 // ---------------------------------------------------------------------
@@ -524,6 +532,16 @@ mod tests {
     fn resolve_threads_zero_is_auto() {
         assert!(resolve_threads(0) >= 1);
         assert_eq!(resolve_threads(3), 3);
+    }
+
+    #[test]
+    fn threads_per_runner_splits_cores_evenly() {
+        let all = resolve_threads(0);
+        assert_eq!(threads_per_runner(1), all);
+        assert_eq!(threads_per_runner(2), (all / 2).max(1));
+        // more runners than cores still leaves every runner one thread
+        assert_eq!(threads_per_runner(all * 4), 1);
+        assert_eq!(threads_per_runner(0), all, "0 runners treated as 1");
     }
 
     #[test]

@@ -10,8 +10,9 @@
 //! smoothrot calibrate   stream -> channel stats -> plan search -> plan file
 //! smoothrot serve       batched multi-tenant serving core demo
 //!                       (--plan <file> serves a calibration plan with
-//!                       zero per-request transform search + mtime-poll
-//!                       hot reload)
+//!                       zero per-request transform search +
+//!                       content-hash-poll hot reload; --runners N
+//!                       shards the fleet into N work-stealing runners)
 //! ```
 
 use std::io::Write as _;
@@ -82,17 +83,22 @@ fn app() -> App {
             Command::new("serve", "batched multi-tenant serving demo over the serving core")
                 .opt("backend", "native | pjrt", Some("native"))
                 .opt("artifacts", "artifacts directory (pjrt backend)", Some("artifacts"))
-                .opt("plan", "calibration plan file: serve plan-driven (the calibrated transform and alpha override the request's) with mtime-poll hot reload (native backend)", None)
+                .opt("plan", "calibration plan file: serve plan-driven (the calibrated transform and alpha override the request's) with content-hash-poll hot reload (native backend)", None)
                 .opt("requests", "number of synthetic requests", Some("64"))
                 .opt("tenants", "synthetic tenants (tenant 0 is the noisy neighbor)", Some("4"))
                 .opt("layers", "layer range of synthetic requests (match the calibrated depth)", Some("32"))
                 .opt("workers", "worker threads", Some("2"))
-                .opt("threads", "math threads per worker, 0 = all cores (native backend)", Some("1"))
+                .opt("threads", "math threads per worker, 0 = all cores (an even per-runner share under --runners) (native backend)", Some("1"))
                 .opt("max-batch", "max jobs coalesced into one executor dispatch", Some("8"))
                 .opt("queue-depth", "per-tenant admission queue capacity", Some("32"))
                 .opt("rows", "token rows per synthetic request (native backend)", Some("32"))
                 .opt("exec", "execution path on plan-covered cells: f32 (simulated qdq) | int8 (real integer GEMM over weights pre-quantized at plan load; needs --plan)", Some("f32"))
                 .opt("kernel-backend", "integer microkernel backend: auto | scalar | avx2 | neon (auto honors SMOOTHROT_KERNEL, else detects; results are bit-identical across backends)", Some("auto"))
+                .opt("runners", "sharded runner instances, each owning its executor, thread pool and workspace; 0 = one per core; replaces --workers (native backend)", None)
+                .opt("shard-by", "shard key routing each batch to its owning runner: layer | tenant (--runners)", Some("layer"))
+                .opt("trim-bytes", "workspace bytes retained across batches before trimming, 0 = never trim; overrides env SMOOTHROT_TRIM_BYTES (native backend)", None)
+                .flag("no-steal", "disable idle runners stealing surplus batches from the heaviest peer (--runners)")
+                .flag("skew-layers", "skew the synthetic stream so ~half of all requests hit layer 0 (the sharding stress case; native backend)")
                 .flag("reject", "reject instead of block when a tenant queue is full"),
         ],
     }
@@ -506,15 +512,45 @@ fn cmd_calibrate(p: &smoothrot::cli::Parsed) -> Result<()> {
 
 fn cmd_serve(p: &smoothrot::cli::Parsed) -> Result<()> {
     use smoothrot::coordinator::Job;
+    use smoothrot::serve::shard::{ShardBy, ShardConfig, ShardedServer};
     use smoothrot::serve::{
-        skewed_tenant, synthetic_requests, Admission, BatchExecutor, ExecMode,
-        NativeBatchExecutor, Response, ServeConfig, ServeMetrics, Server, SubmitError, TenantId,
+        skewed_tenant, synthetic_requests, synthetic_requests_skewed, Admission, BatchExecutor,
+        ExecMode, NativeBatchExecutor, Response, ServeConfig, ServeMetrics, Server, SubmitError,
+        TenantId,
     };
 
-    /// Start a server, submit the stream (printing the first few
-    /// responses as they arrive), drain and summarize.
+    /// Classic single-pool server or sharded multi-runner server behind
+    /// one submit/finish surface.
+    enum AnyServer {
+        Classic(Server),
+        Sharded(ShardedServer),
+    }
+
+    impl AnyServer {
+        fn submit(&self, tenant: TenantId, job: Job) -> std::result::Result<(), SubmitError> {
+            match self {
+                AnyServer::Classic(s) => s.submit(tenant, job),
+                AnyServer::Sharded(s) => s.submit(tenant, job),
+            }
+        }
+
+        fn finish(self) -> ServeMetrics {
+            match self {
+                AnyServer::Classic(s) => s.finish(),
+                AnyServer::Sharded(s) => s.finish(),
+            }
+        }
+    }
+
+    /// `(runners, shard_by, stealing)` when serving sharded.
+    type ShardTopo = Option<(usize, ShardBy, bool)>;
+
+    /// Start a server (sharded when a runner topology is given), submit
+    /// the stream (printing the first few responses as they arrive),
+    /// drain and summarize.
     fn run_serve<E, F>(
         cfg: ServeConfig,
+        shard: ShardTopo,
         requests: Vec<(TenantId, Job)>,
         make_executor: F,
     ) -> Result<(Vec<Response>, ServeMetrics)>
@@ -523,7 +559,23 @@ fn cmd_serve(p: &smoothrot::cli::Parsed) -> Result<()> {
         F: Fn(usize) -> Result<E, String> + Send + Sync + 'static,
     {
         let total = requests.len();
-        let (server, rx) = Server::start(cfg, make_executor);
+        let (server, rx) = match shard {
+            Some((runners, shard_by, stealing)) => {
+                let scfg = ShardConfig { runners, shard_by, stealing, base: cfg };
+                let (s, rx) = ShardedServer::start(scfg, make_executor);
+                println!(
+                    "sharding: {} runners by {}, stealing {}",
+                    s.runners(),
+                    shard_by.name(),
+                    if stealing { "on" } else { "off" }
+                );
+                (AnyServer::Sharded(s), rx)
+            }
+            None => {
+                let (s, rx) = Server::start(cfg, make_executor);
+                (AnyServer::Classic(s), rx)
+            }
+        };
         let mut rejected = 0usize;
         for (tenant, job) in requests {
             match server.submit(tenant, job) {
@@ -566,6 +618,23 @@ fn cmd_serve(p: &smoothrot::cli::Parsed) -> Result<()> {
     let exec = ExecMode::from_name(&p.get_or("exec", "f32")).map_err(|e| anyhow!("serve: {e}"))?;
     let kernel = smoothrot::kernels::simd::KernelBackend::resolve(p.get("kernel-backend"))
         .map_err(|e| anyhow!("serve: {e}"))?;
+    let runners = p.get_usize("runners").map_err(|e| anyhow!(e))?;
+    let shard_by = ShardBy::from_name(&p.get_or("shard-by", "layer"))
+        .map_err(|e| anyhow!("serve: {e}"))?;
+    let stealing = !p.has_flag("no-steal");
+    let skew_layers = p.has_flag("skew-layers");
+    let trim_bytes =
+        smoothrot::serve::resolve_trim_bytes(p.get_usize("trim-bytes").map_err(|e| anyhow!(e))?)
+            .map_err(|e| anyhow!("serve: {e}"))?;
+    let shard_topo: ShardTopo = runners.map(|r| (r, shard_by, stealing));
+    // under sharding, "0 = all cores" becomes an even per-runner share
+    // so N runner pools never oversubscribe the machine N-fold
+    let threads = match (runners, threads) {
+        (Some(r), 0) => smoothrot::kernels::par::threads_per_runner(
+            smoothrot::serve::shard::resolve_runners(r),
+        ),
+        _ => threads,
+    };
     let cfg = ServeConfig {
         workers: p.get_usize("workers").map_err(|e| anyhow!(e))?.unwrap_or(2),
         max_batch: p.get_usize("max-batch").map_err(|e| anyhow!(e))?.unwrap_or(8),
@@ -578,6 +647,9 @@ fn cmd_serve(p: &smoothrot::cli::Parsed) -> Result<()> {
     }
     if exec == ExecMode::Int8 && plan_path.is_none() {
         bail!("serve: --exec int8 needs --plan (weights are pre-quantized at plan load)");
+    }
+    if backend != Backend::Native && (runners.is_some() || skew_layers) {
+        bail!("serve: --runners/--skew-layers are native-only");
     }
 
     println!(
@@ -607,10 +679,16 @@ fn cmd_serve(p: &smoothrot::cli::Parsed) -> Result<()> {
             // serving weights (synth::layer_weight) that int8 preload
             // quantizes — keep the two in lockstep
             let stream_seed = 2025u64;
-            let requests = synthetic_requests(n_requests, n_tenants, rows, layers, stream_seed);
+            let requests = if skew_layers {
+                synthetic_requests_skewed(n_requests, n_tenants, rows, layers, stream_seed)
+            } else {
+                synthetic_requests(n_requests, n_tenants, rows, layers, stream_seed)
+            };
             match plan_path {
-                None => run_serve(cfg, requests, move |_| {
-                    Ok(NativeBatchExecutor::with_threads(threads).with_kernel_backend(kernel))
+                None => run_serve(cfg, shard_topo, requests, move |_| {
+                    Ok(NativeBatchExecutor::with_threads(threads)
+                        .with_kernel_backend(kernel)
+                        .with_trim_budget(trim_bytes))
                 })?,
                 Some(path) => {
                     let registry =
@@ -642,8 +720,9 @@ fn cmd_serve(p: &smoothrot::cli::Parsed) -> Result<()> {
                         }
                     }
                     // SIGHUP-free hot reload: poll the plan file's
-                    // mtime while the server runs and swap in changed
-                    // content atomically.
+                    // content hash while the server runs and swap in
+                    // changed content atomically (shared registry —
+                    // every runner observes the swap at once).
                     let stop = Arc::new(AtomicBool::new(false));
                     let poller = {
                         let registry = Arc::clone(&registry);
@@ -663,13 +742,14 @@ fn cmd_serve(p: &smoothrot::cli::Parsed) -> Result<()> {
                         })
                     };
                     let exec_registry = Arc::clone(&registry);
-                    let out = run_serve(cfg, requests, move |_| {
+                    let out = run_serve(cfg, shard_topo, requests, move |_| {
                         Ok(NativeBatchExecutor::with_plan_exec(
                             Arc::clone(&exec_registry),
                             threads,
                             exec,
                         )
-                        .with_kernel_backend(kernel))
+                        .with_kernel_backend(kernel)
+                        .with_trim_budget(trim_bytes))
                     });
                     stop.store(true, Ordering::Relaxed);
                     let _ = poller.join();
@@ -742,7 +822,7 @@ fn cmd_serve(p: &smoothrot::cli::Parsed) -> Result<()> {
                 })
                 .collect();
             let dir = artifacts.clone();
-            run_serve(cfg, requests, move |_| pipeline::PjrtExecutor::new(dir.clone()))?
+            run_serve(cfg, None, requests, move |_| pipeline::PjrtExecutor::new(dir.clone()))?
         }
     };
 

@@ -225,6 +225,35 @@ impl Percentiles {
         }
         Percentiles::of_sorted(&v)
     }
+
+    /// Per-shard summaries of *pre-sorted* sample vectors (e.g. the
+    /// per-runner latency shards of a sharded server) — one
+    /// [`Percentiles`] per shard, empty shards yielding zeros.  The
+    /// complement of [`Percentiles::merge`]: merge answers "what does
+    /// the fleet look like", this answers "what does each runner look
+    /// like".
+    ///
+    /// ```
+    /// use smoothrot::metrics::Percentiles;
+    /// let shards = vec![vec![1.0, 2.0, 3.0], vec![], vec![5.0]];
+    /// let per = Percentiles::of_each_sorted(&shards);
+    /// assert_eq!(per.len(), 3);
+    /// assert_eq!(per[0], Percentiles::of(&[1.0, 2.0, 3.0]));
+    /// assert_eq!(per[1], Percentiles::default());
+    /// assert_eq!(per[2].p50, 5.0);
+    /// ```
+    pub fn of_each_sorted(shards: &[Vec<f64>]) -> Vec<Percentiles> {
+        shards
+            .iter()
+            .map(|s| {
+                if s.is_empty() {
+                    Percentiles::default()
+                } else {
+                    Percentiles::of_sorted(s)
+                }
+            })
+            .collect()
+    }
 }
 
 /// Hit/miss counters of a keyed cache, e.g. the per-width

@@ -47,6 +47,16 @@
 //! * **Work stealing** — batches land on the least-loaded worker's
 //!   deque; an idle worker steals from the back of the longest peer
 //!   deque, keeping the pool busy under skewed batch costs.
+//! * **Sharded runners** — [`shard::ShardedServer`] runs the same
+//!   scheduler with *owner routing*: every worker is a full runner
+//!   (its own executor, thread pool, workspace, kernel-backend pin and
+//!   pre-quantized weight view), batches are routed to the runner that
+//!   owns their deterministic shard key (layer or tenant), and idle
+//!   runners steal only from peers holding **more than one** batch, so
+//!   a runner that was routed work always executes some of it.
+//!   Placement never changes per-job math, so results stay
+//!   bit-identical to the single-runner path at any runner count
+//!   (pinned by `rust/tests/proptest_serve_sharded.rs`).
 //! * **Streaming delivery** — every completed request is sent on an
 //!   unbounded channel as its batch finishes, with per-request queue /
 //!   execution / total latency; each worker keeps its own sorted
@@ -90,6 +100,8 @@
 //! assert_eq!(metrics.completed, 6);
 //! assert_eq!(metrics.per_tenant.len(), 2);
 //! ```
+
+pub mod shard;
 
 use std::collections::{BTreeMap, VecDeque};
 use std::fmt;
@@ -724,6 +736,18 @@ pub struct ServeMetrics {
     pub per_tenant: BTreeMap<TenantId, TenantStats>,
     /// Batches executed by each worker.
     pub per_worker_batches: Vec<u64>,
+    /// Batches initially *placed* on each worker's deque by the
+    /// scheduler (before any stealing).  Under owner routing this is
+    /// the shard-key distribution; under classic least-loaded dispatch
+    /// it tracks the load balancer's placements.
+    pub per_worker_routed: Vec<u64>,
+    /// Batches each worker stole from a peer's deque
+    /// (`steals == per_worker_steals.iter().sum()`).
+    pub per_worker_steals: Vec<u64>,
+    /// Per-worker end-to-end latency percentiles over each worker's own
+    /// reservoir shard; [`ServeMetrics::latency`] merges the same
+    /// shards into the run-wide summary.
+    pub per_worker_latency: Vec<Percentiles>,
 }
 
 impl ServeMetrics {
@@ -763,6 +787,19 @@ impl ServeMetrics {
             self.rotation.misses,
             100.0 * self.rotation.hit_rate(),
         );
+        // per-runner placement/execution/steal counters (the sharded
+        // serve CI leg greps these lines to prove no runner starved)
+        for (i, &b) in self.per_worker_batches.iter().enumerate() {
+            let routed = self.per_worker_routed.get(i).copied().unwrap_or(0);
+            let stolen = self.per_worker_steals.get(i).copied().unwrap_or(0);
+            let lat = self.per_worker_latency.get(i).copied().unwrap_or_default();
+            s.push_str(&format!(
+                "  runner {i}: routed {routed} batches {b} steals {stolen} | p50 {:.2} ms \
+                 p95 {:.2} ms\n",
+                lat.p50 / 1e3,
+                lat.p95 / 1e3,
+            ));
+        }
         for (tenant, t) in &self.per_tenant {
             s.push_str(&format!(
                 "  tenant {tenant}: submitted {} completed {} rejected {}\n",
@@ -778,6 +815,11 @@ struct Pending {
     job: Job,
     tenant: TenantId,
     admitted: Instant,
+    /// Owning worker index, computed at submit time from the server's
+    /// [`Route`] (always `0` under [`Route::LeastLoaded`], so classic
+    /// serving coalesces exactly as before).  Requests only share a
+    /// batch when their routes match — a batch has one owner.
+    route: usize,
 }
 
 /// One tenant's admission queue, indexed by [`BatchKey`] so batch
@@ -797,8 +839,14 @@ struct Pending {
 struct TenantQueue {
     /// Admission-ordered requests (key = per-tenant sequence number).
     items: BTreeMap<u64, Pending>,
-    /// Per-key index into `items`; every deque ascends in sequence.
-    by_key: BTreeMap<BatchKey, VecDeque<u64>>,
+    /// Per-(key, route) index into `items`; every deque ascends in
+    /// sequence.  The route is part of the index because a batch must
+    /// have ONE owning worker: two same-key jobs with different shard
+    /// keys (e.g. different layers under layer sharding) may not share
+    /// a dispatch.  Under [`Route::LeastLoaded`] every route is `0`, so
+    /// the index degenerates to the pure per-key map and coalescing is
+    /// unchanged.
+    by_key: BTreeMap<(BatchKey, usize), VecDeque<u64>>,
     next_seq: u64,
 }
 
@@ -814,7 +862,7 @@ impl TenantQueue {
     fn push_back(&mut self, p: Pending) {
         let seq = self.next_seq;
         self.next_seq += 1;
-        self.by_key.entry(BatchKey::of(&p.job)).or_default().push_back(seq);
+        self.by_key.entry((BatchKey::of(&p.job), p.route)).or_default().push_back(seq);
         self.items.insert(seq, p);
     }
 
@@ -822,7 +870,7 @@ impl TenantQueue {
     fn pop_front(&mut self) -> Option<Pending> {
         let (&seq, _) = self.items.iter().next()?;
         let p = self.items.remove(&seq).expect("peeked above");
-        let key = BatchKey::of(&p.job);
+        let key = (BatchKey::of(&p.job), p.route);
         let q = self.by_key.get_mut(&key).expect("indexed at push");
         // the overall-oldest request is necessarily its key's oldest
         debug_assert_eq!(q.front(), Some(&seq));
@@ -835,7 +883,7 @@ impl TenantQueue {
 
     /// Pop the oldest request of `key`, if any — the O(log) replacement
     /// for the linear rescan.
-    fn pop_key(&mut self, key: &BatchKey) -> Option<Pending> {
+    fn pop_key(&mut self, key: &(BatchKey, usize)) -> Option<Pending> {
         let q = self.by_key.get_mut(key)?;
         let seq = q.pop_front().expect("index never holds empty deques");
         if q.is_empty() {
@@ -861,6 +909,10 @@ struct Batch {
     id: u64,
     jobs: Vec<Job>,
     meta: Vec<BatchMeta>,
+    /// Worker index this batch was routed to (the shard owner under
+    /// [`Route::Owner`]; the seed request's route — always `0` — under
+    /// [`Route::LeastLoaded`], where dispatch ignores it).
+    owner: usize,
 }
 
 /// Counters accumulated under the center lock.
@@ -873,9 +925,11 @@ struct CenterStats {
     batches: u64,
     max_batch_observed: usize,
     exec_micros_total: u64,
-    /// One ascending-sorted latency shard per exited worker; combined
-    /// at [`Server::finish`] via [`Percentiles::merge`] (no global
-    /// concatenation is ever re-sorted).
+    /// One ascending-sorted latency shard per worker, indexed by worker
+    /// and assigned at worker exit (pre-sized at start, so per-runner
+    /// percentiles keep their index even when a worker saw no work);
+    /// combined at [`Server::finish`] via [`Percentiles::merge`] (no
+    /// global concatenation is ever re-sorted).
     worker_latencies: Vec<Vec<f64>>,
     rotation: CacheStats,
     per_tenant: BTreeMap<TenantId, TenantStats>,
@@ -902,7 +956,32 @@ struct Center {
 struct Pool {
     queues: Vec<VecDeque<Batch>>,
     done: bool,
-    steals: u64,
+    /// Batches initially placed on each worker's deque by the
+    /// scheduler.
+    routed: Vec<u64>,
+    /// Batches each worker stole from a peer's deque.
+    steals: Vec<u64>,
+    /// Whether idle workers may steal at all (the sharded proptests
+    /// force it off to pin placement).
+    stealing: bool,
+    /// Minimum victim deque length for a steal.  Classic serving uses
+    /// `1` (any queued batch is fair game); owner routing uses `2`, so
+    /// a runner that was routed at least one batch always executes at
+    /// least one — peers may only skim a victim's *surplus*.  That
+    /// guarantee is what makes the CI "no runner served zero batches"
+    /// gate deterministic under a skewed stream.
+    steal_min: usize,
+}
+
+/// How the scheduler picks a worker deque for each batch.
+enum Route {
+    /// Classic load balancing: push to the shortest deque.
+    LeastLoaded,
+    /// Sharded ownership: `f(job, tenant) % workers` names the owning
+    /// runner; computed at submit time so coalescing never mixes
+    /// owners.  The function must be deterministic — same job, same
+    /// owner — or batches of one shard would scatter.
+    Owner(Arc<dyn Fn(&Job, TenantId) -> usize + Send + Sync>),
 }
 
 struct Shared {
@@ -915,6 +994,8 @@ struct Shared {
     pool: Mutex<Pool>,
     /// Wakes idle workers on new batches / shutdown.
     pool_cv: Condvar,
+    /// Batch-to-worker placement policy.
+    route: Route,
 }
 
 /// Cap on retained latency samples across all workers: percentile
@@ -949,7 +1030,8 @@ fn form_batch(c: &mut Center, max_batch: usize) -> Batch {
     c.cursor = (seed_pos + 1) % n;
     let seed_tenant = c.ring[seed_pos];
     let first = c.queues.get_mut(&seed_tenant).unwrap().pop_front().unwrap();
-    let key = BatchKey::of(&first.job);
+    let owner = first.route;
+    let key = (BatchKey::of(&first.job), owner);
     let mut items = vec![first];
     // Fill: round-robin passes over the ring starting after the seed,
     // taking at most one matching request per tenant per pass (fair
@@ -991,7 +1073,7 @@ fn form_batch(c: &mut Center, max_batch: usize) -> Batch {
         });
         jobs.push(p.job);
     }
-    Batch { id, jobs, meta }
+    Batch { id, jobs, meta, owner }
 }
 
 /// Handle to a running serving core.
@@ -1019,10 +1101,31 @@ impl Server {
         E: BatchExecutor,
         F: Fn(usize) -> Result<E, String> + Send + Sync + 'static,
     {
+        Self::start_routed(cfg, Route::LeastLoaded, true, make_executor)
+    }
+
+    /// [`Server::start`] with an explicit batch-placement policy and
+    /// steal switch — the engine under [`shard::ShardedServer`].  Under
+    /// [`Route::Owner`] the steal threshold rises to 2 (only a victim's
+    /// surplus may be stolen; see [`Pool::steal_min`]).
+    fn start_routed<E, F>(
+        cfg: ServeConfig,
+        route: Route,
+        stealing: bool,
+        make_executor: F,
+    ) -> (Server, Receiver<Response>)
+    where
+        E: BatchExecutor,
+        F: Fn(usize) -> Result<E, String> + Send + Sync + 'static,
+    {
         assert!(cfg.workers >= 1, "need at least one worker");
         assert!(cfg.max_batch >= 1, "max_batch must be >= 1");
         assert!(cfg.queue_depth >= 1, "queue_depth must be >= 1");
 
+        let steal_min = match route {
+            Route::LeastLoaded => 1,
+            Route::Owner(_) => 2,
+        };
         let shared = Arc::new(Shared {
             cfg,
             center: Mutex::new(Center {
@@ -1035,6 +1138,7 @@ impl Server {
                 next_batch_id: 0,
                 stats: CenterStats {
                     per_worker_batches: vec![0; cfg.workers],
+                    worker_latencies: vec![Vec::new(); cfg.workers],
                     ..CenterStats::default()
                 },
             }),
@@ -1043,9 +1147,13 @@ impl Server {
             pool: Mutex::new(Pool {
                 queues: (0..cfg.workers).map(|_| VecDeque::new()).collect(),
                 done: false,
-                steals: 0,
+                routed: vec![0; cfg.workers],
+                steals: vec![0; cfg.workers],
+                stealing,
+                steal_min,
             }),
             pool_cv: Condvar::new(),
+            route,
         });
         let (res_tx, res_rx) = mpsc::channel::<Response>();
         let make_executor = Arc::new(make_executor);
@@ -1074,6 +1182,13 @@ impl Server {
     /// until the scheduler frees space; with [`Admission::Reject`] it
     /// returns [`SubmitError::Full`] immediately.
     pub fn submit(&self, tenant: TenantId, job: Job) -> Result<(), SubmitError> {
+        // the shard owner is a pure function of (job, tenant), so it is
+        // pinned here at admission — batch formation then only ever
+        // coalesces same-owner requests
+        let route = match &self.shared.route {
+            Route::LeastLoaded => 0,
+            Route::Owner(f) => f(&job, tenant) % self.shared.cfg.workers,
+        };
         let mut center = lock(&self.shared.center);
         loop {
             if center.closed {
@@ -1084,7 +1199,7 @@ impl Server {
                 center.ring.push(tenant);
             }
             if center.queues[&tenant].len() < self.shared.cfg.queue_depth {
-                let pending = Pending { job, tenant, admitted: Instant::now() };
+                let pending = Pending { job, tenant, admitted: Instant::now(), route };
                 center.queues.get_mut(&tenant).unwrap().push_back(pending);
                 center.queued += 1;
                 center.stats.submitted += 1;
@@ -1130,7 +1245,7 @@ impl Server {
             rejected: s.rejected,
             errors: s.errors,
             batches: s.batches,
-            steals: pool.steals,
+            steals: pool.steals.iter().sum(),
             max_batch_observed: s.max_batch_observed,
             wall_micros: wall,
             exec_micros_total: s.exec_micros_total,
@@ -1138,6 +1253,9 @@ impl Server {
             rotation: s.rotation,
             per_tenant: s.per_tenant.clone(),
             per_worker_batches: s.per_worker_batches.clone(),
+            per_worker_routed: pool.routed.clone(),
+            per_worker_steals: pool.steals.clone(),
+            per_worker_latency: Percentiles::of_each_sorted(&s.worker_latencies),
         }
     }
 
@@ -1238,9 +1356,24 @@ fn scheduler_loop(shared: Arc<Shared>) {
         drop(center);
         {
             let mut pool = lock(&shared.pool);
-            let idx = (0..pool.queues.len()).min_by_key(|&i| pool.queues[i].len()).unwrap();
+            let idx = match &shared.route {
+                Route::LeastLoaded => {
+                    (0..pool.queues.len()).min_by_key(|&i| pool.queues[i].len()).unwrap()
+                }
+                Route::Owner(_) => batch.owner,
+            };
             pool.queues[idx].push_back(batch);
-            shared.pool_cv.notify_one();
+            pool.routed[idx] += 1;
+            match &shared.route {
+                // least-loaded placement: any single idle worker may
+                // take it, so one wakeup suffices
+                Route::LeastLoaded => shared.pool_cv.notify_one(),
+                // owner placement: notify_one could wake a non-owner
+                // that (with stealing off, or below the steal
+                // threshold) cannot take the batch and parks again —
+                // a lost wakeup.  Wake everyone; non-owners re-park.
+                Route::Owner(_) => shared.pool_cv.notify_all(),
+            }
         }
         center = lock(&shared.center);
     }
@@ -1272,19 +1405,26 @@ where
     let mut lat_seen: u64 = 0;
     loop {
         // Pop from the own deque front; steal from the back of the
-        // longest peer deque when empty.
+        // longest peer deque when empty (if stealing is enabled and the
+        // victim holds at least `steal_min` batches — owner routing
+        // only lets peers skim a victim's surplus).
         let batch = {
             let mut pool = lock(&shared.pool);
             loop {
                 if let Some(b) = pool.queues[idx].pop_front() {
                     break Some(b);
                 }
-                let victim = (0..pool.queues.len())
-                    .filter(|&i| i != idx && !pool.queues[i].is_empty())
-                    .max_by_key(|&i| pool.queues[i].len());
+                let victim = pool
+                    .stealing
+                    .then(|| {
+                        (0..pool.queues.len())
+                            .filter(|&i| i != idx && pool.queues[i].len() >= pool.steal_min)
+                            .max_by_key(|&i| pool.queues[i].len())
+                    })
+                    .flatten();
                 if let Some(v) = victim {
                     let b = pool.queues[v].pop_back().unwrap();
-                    pool.steals += 1;
+                    pool.steals[idx] += 1;
                     break Some(b);
                 }
                 if pool.done {
@@ -1379,9 +1519,7 @@ where
     let rotation = exec.as_ref().and_then(|e| e.rotation_stats());
     {
         let mut center = lock(&shared.center);
-        if !shard.is_empty() {
-            center.stats.worker_latencies.push(shard);
-        }
+        center.stats.worker_latencies[idx] = shard;
         if let Some(stats) = rotation {
             center.stats.rotation.merge(stats);
         }
@@ -1417,6 +1555,33 @@ pub fn synthetic_requests(
     layers: usize,
     seed: u64,
 ) -> Vec<(TenantId, Job)> {
+    synthetic_requests_with(n, tenants, rows, layers, seed, |rng, layers| rng.below(layers))
+}
+
+/// [`synthetic_requests`] with a layer-skewed draw
+/// ([`crate::synth::skewed_layer`]): ~half the stream lands on layer 0.
+/// Under layer sharding that concentrates load on one runner — the
+/// workload the `--runners` CI smoke uses to prove work stealing keeps
+/// every runner busy while the steal threshold still guarantees the
+/// hot shard's owner executes work of its own.
+pub fn synthetic_requests_skewed(
+    n: usize,
+    tenants: usize,
+    rows: usize,
+    layers: usize,
+    seed: u64,
+) -> Vec<(TenantId, Job)> {
+    synthetic_requests_with(n, tenants, rows, layers, seed, crate::synth::skewed_layer)
+}
+
+fn synthetic_requests_with(
+    n: usize,
+    tenants: usize,
+    rows: usize,
+    layers: usize,
+    seed: u64,
+    mut layer_of: impl FnMut(&mut crate::rng::Rng, usize) -> usize,
+) -> Vec<(TenantId, Job)> {
     let model = crate::config::ModelConfig::default();
     let layers = layers.clamp(1, model.n_layers);
     let mut rng = crate::rng::Rng::new(seed);
@@ -1429,7 +1594,7 @@ pub fn synthetic_requests(
         .map(|i| {
             let tenant = skewed_tenant(&mut rng, tenants);
             let module = crate::MODULES[rng.below(4)];
-            let layer = rng.below(layers);
+            let layer = layer_of(&mut rng, layers);
             let (mut spec, _) =
                 crate::synth::module_stream(module, seed.wrapping_add(7 + i as u64))
                     .expect("known module");
@@ -1452,6 +1617,32 @@ pub fn synthetic_requests(
             (tenant, job)
         })
         .collect()
+}
+
+/// Resolve the between-batches [`Workspace`] trim budget from the CLI
+/// value and the `SMOOTHROT_TRIM_BYTES` environment variable
+/// ([`trim_bytes_from`] is the pure, testable core).  Precedence: CLI >
+/// env > [`NativeBatchExecutor::TRIM_BYTES`]; `0` disables trimming
+/// entirely (resolves to `usize::MAX`).  With N sharded runners each
+/// holding its own workspace, total steady-state retention is
+/// `runners x trim_bytes` — size the budget with that product in mind.
+pub fn resolve_trim_bytes(cli: Option<usize>) -> Result<usize, String> {
+    let env = std::env::var("SMOOTHROT_TRIM_BYTES").ok();
+    trim_bytes_from(cli, env.as_deref())
+}
+
+/// [`resolve_trim_bytes`] with the environment value passed in
+/// explicitly.  An empty (or whitespace) env value counts as unset; a
+/// non-numeric one is a named error, never a silent default.
+pub fn trim_bytes_from(cli: Option<usize>, env: Option<&str>) -> Result<usize, String> {
+    let raw = match (cli, env.map(str::trim).filter(|s| !s.is_empty())) {
+        (Some(v), _) => v,
+        (None, Some(s)) => s
+            .parse::<usize>()
+            .map_err(|e| format!("SMOOTHROT_TRIM_BYTES={s:?}: {e}"))?,
+        (None, None) => NativeBatchExecutor::TRIM_BYTES,
+    };
+    Ok(if raw == 0 { usize::MAX } else { raw })
 }
 
 /// Convenience driver: start a server, submit every request, drain and
@@ -2062,6 +2253,25 @@ mod tests {
             lax.scratch.pooled_bytes() > NativeBatchExecutor::TRIM_BYTES,
             "with_trim_budget(usize::MAX) must disable trimming"
         );
+    }
+
+    #[test]
+    fn trim_budget_resolution_precedence_and_zero() {
+        // CLI > env > built-in default
+        assert_eq!(trim_bytes_from(Some(1024), Some("2048")), Ok(1024));
+        assert_eq!(trim_bytes_from(None, Some("2048")), Ok(2048));
+        assert_eq!(trim_bytes_from(None, None), Ok(NativeBatchExecutor::TRIM_BYTES));
+        // 0 = never trim, from either source
+        assert_eq!(trim_bytes_from(Some(0), None), Ok(usize::MAX));
+        assert_eq!(trim_bytes_from(None, Some("0")), Ok(usize::MAX));
+        // empty / whitespace env counts as unset; a CLI value masks a
+        // bad env value (it is never parsed)
+        assert_eq!(trim_bytes_from(None, Some("")), Ok(NativeBatchExecutor::TRIM_BYTES));
+        assert_eq!(trim_bytes_from(None, Some("  ")), Ok(NativeBatchExecutor::TRIM_BYTES));
+        assert_eq!(trim_bytes_from(None, Some(" 4096 ")), Ok(4096));
+        assert_eq!(trim_bytes_from(Some(512), Some("not-a-number")), Ok(512));
+        let err = trim_bytes_from(None, Some("16MiB")).unwrap_err();
+        assert!(err.contains("SMOOTHROT_TRIM_BYTES"), "error must name the env var: {err}");
     }
 
     #[test]

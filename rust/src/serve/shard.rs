@@ -1,0 +1,482 @@
+//! Sharded multi-runner serving: N runner instances behind one
+//! admission front door and one shared [`PlanRegistry`].
+//!
+//! The `num_runners` model applied to the plan-driven serving core:
+//! each runner is one worker of the parent [`Server`], owning its own
+//! executor — and therefore its own persistent `par::ThreadPool`,
+//! `Workspace` scratch, kernel-backend pin, and pre-quantized weight
+//! view — while coalesced batches are routed to the runner that *owns*
+//! their shard key instead of to the least-loaded deque.
+//!
+//! **Shard key.** The key is a pure function of the request:
+//! [`ShardBy::Layer`] routes `job.layer % runners` (the default — layer
+//! weights are what runners keep hot), [`ShardBy::Tenant`] routes
+//! `tenant % runners` (cache-friendly per-tenant isolation).  Because
+//! the key is computed at admission and carried through batch
+//! formation, a batch only ever contains jobs of one owner.
+//!
+//! **Work stealing.** A skewed stream (half of all traffic on layer 0,
+//! say) would strand every other runner's cores.  Idle runners
+//! therefore steal whole batches from the heaviest peer deque — but
+//! only a victim's *surplus* (deque length ≥ 2), so a runner that was
+//! routed at least one batch always executes at least one.  Stealing
+//! moves a batch between runners wholesale; it never re-forms or splits
+//! one.
+//!
+//! **Bit-invariance.** Sharding changes *placement*, never math.  Every
+//! runner executes a batch with the same executor construction (same
+//! plan entry resolution, same threads knob, same kernel backend), and
+//! batch composition itself cannot change per-job results (pinned at
+//! the executor level by the batch-fusion proptests).  So per-job
+//! outputs are identical at any runner count, stealing on or off —
+//! pinned end to end by `tests/proptest_serve_sharded.rs`.
+//!
+//! **Hot reload.** All runners share one [`PlanRegistry`] behind an
+//! `Arc`; [`PlanRegistry::reload_if_changed`] swaps the resolved plan
+//! inside a write lock, so a mid-serve reload is observed atomically —
+//! no runner serves the old plan while another serves the new (see the
+//! atomicity test below).
+
+use std::sync::mpsc::Receiver;
+use std::sync::Arc;
+
+#[allow(unused_imports)] // doc links
+use crate::calib::registry::PlanRegistry;
+use crate::coordinator::Job;
+use crate::kernels::par;
+
+use super::{
+    BatchExecutor, Response, Route, ServeConfig, ServeMetrics, Server, SubmitError, TenantId,
+};
+
+/// Which request attribute names the owning runner.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ShardBy {
+    /// Route by `job.layer % runners` (default): runners keep disjoint
+    /// layer shards of the pre-quantized weights hot.
+    #[default]
+    Layer,
+    /// Route by `tenant % runners`: per-tenant runner affinity.
+    Tenant,
+}
+
+impl ShardBy {
+    /// Parse a CLI name.
+    ///
+    /// ```
+    /// use smoothrot::serve::shard::ShardBy;
+    /// assert_eq!(ShardBy::from_name("layer").unwrap(), ShardBy::Layer);
+    /// assert_eq!(ShardBy::from_name("tenant").unwrap(), ShardBy::Tenant);
+    /// assert!(ShardBy::from_name("module").is_err());
+    /// ```
+    pub fn from_name(name: &str) -> Result<ShardBy, String> {
+        match name {
+            "layer" => Ok(ShardBy::Layer),
+            "tenant" => Ok(ShardBy::Tenant),
+            other => Err(format!("unknown shard key {other:?} (expected layer|tenant)")),
+        }
+    }
+
+    /// The CLI name.
+    pub fn name(self) -> &'static str {
+        match self {
+            ShardBy::Layer => "layer",
+            ShardBy::Tenant => "tenant",
+        }
+    }
+
+    /// The raw shard key of a request (reduced `% runners` at routing).
+    fn key(self, job: &Job, tenant: TenantId) -> usize {
+        match self {
+            ShardBy::Layer => job.layer,
+            ShardBy::Tenant => tenant,
+        }
+    }
+}
+
+/// Configuration of a sharded server: runner topology on top of the
+/// base [`ServeConfig`] (whose `workers` field is overridden by the
+/// resolved runner count).
+#[derive(Clone, Copy, Debug)]
+pub struct ShardConfig {
+    /// Runner count; `0` = one per hardware thread
+    /// ([`resolve_runners`]).
+    pub runners: usize,
+    /// Shard-key choice.
+    pub shard_by: ShardBy,
+    /// Whether idle runners may steal surplus batches from the
+    /// heaviest peer.  On by default; the invariance proptests force it
+    /// off to pin placement.
+    pub stealing: bool,
+    /// Admission / batching knobs shared with classic serving.
+    pub base: ServeConfig,
+}
+
+impl Default for ShardConfig {
+    fn default() -> Self {
+        ShardConfig {
+            runners: 0,
+            shard_by: ShardBy::default(),
+            stealing: true,
+            base: ServeConfig::default(),
+        }
+    }
+}
+
+/// Resolve a `--runners` request: `0` means one runner per hardware
+/// thread (the same auto rule as the threads knob), anything else is
+/// taken literally.
+pub fn resolve_runners(runners: usize) -> usize {
+    if runners == 0 {
+        par::resolve_threads(0)
+    } else {
+        runners
+    }
+}
+
+/// A serving core whose workers are shard-owning runners.
+///
+/// Thin wrapper over [`Server`]: construction installs an owner-routed
+/// batch placement policy derived from
+/// [`ShardConfig::shard_by`], everything else (admission, coalescing,
+/// fair share, drain semantics) is the classic core.  Per-runner
+/// routed/steal counters and latency percentiles surface through
+/// [`ServeMetrics`].
+pub struct ShardedServer {
+    inner: Server,
+    runners: usize,
+}
+
+impl ShardedServer {
+    /// Spawn `resolve_runners(cfg.runners)` runners.
+    /// `make_executor(runner_idx)` runs inside each runner thread, as
+    /// with [`Server::start`].
+    pub fn start<E, F>(cfg: ShardConfig, make_executor: F) -> (ShardedServer, Receiver<Response>)
+    where
+        E: BatchExecutor,
+        F: Fn(usize) -> Result<E, String> + Send + Sync + 'static,
+    {
+        let runners = resolve_runners(cfg.runners);
+        let shard_by = cfg.shard_by;
+        let route = Route::Owner(Arc::new(move |job: &Job, tenant: TenantId| {
+            shard_by.key(job, tenant)
+        }));
+        let base = ServeConfig { workers: runners, ..cfg.base };
+        let (inner, rx) = Server::start_routed(base, route, cfg.stealing, make_executor);
+        (ShardedServer { inner, runners }, rx)
+    }
+
+    /// Resolved runner count.
+    pub fn runners(&self) -> usize {
+        self.runners
+    }
+
+    /// Admit one request for `tenant` (see [`Server::submit`]).
+    pub fn submit(&self, tenant: TenantId, job: Job) -> Result<(), SubmitError> {
+        self.inner.submit(tenant, job)
+    }
+
+    /// Drain, join all runners and return the merged summary (see
+    /// [`Server::finish`]).
+    pub fn finish(self) -> ServeMetrics {
+        self.inner.finish()
+    }
+}
+
+/// Submit a fixed request list to a fresh sharded server, drain it and
+/// return `(responses, metrics)` — the sharded twin of
+/// [`super::serve_all`].  [`SubmitError::Full`] rejections are counted
+/// in the metrics, not returned as errors.
+pub fn serve_all_sharded<E, F>(
+    cfg: ShardConfig,
+    requests: Vec<(TenantId, Job)>,
+    make_executor: F,
+) -> Result<(Vec<Response>, ServeMetrics), SubmitError>
+where
+    E: BatchExecutor,
+    F: Fn(usize) -> Result<E, String> + Send + Sync + 'static,
+{
+    let (server, responses) = ShardedServer::start(cfg, make_executor);
+    for (tenant, job) in requests {
+        match server.submit(tenant, job) {
+            Ok(()) | Err(SubmitError::Full { .. }) => {}
+            Err(e) => return Err(e),
+        }
+    }
+    let metrics = server.finish();
+    Ok((responses.into_iter().collect(), metrics))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::calib::plan::{PlanEntry, Provenance, QuantPlan};
+    use crate::calib::registry::PlanRegistry;
+    use crate::coordinator::Executor;
+    use crate::runtime::AnalyzeOut;
+    use crate::serve::{serve_all, Admission, NativeBatchExecutor};
+    use crate::tensor::Matrix;
+    use crate::transforms::Mode;
+    use std::collections::BTreeMap;
+    use std::time::Duration;
+
+    fn job(id: u64, layer: usize, c_in: usize) -> Job {
+        Job {
+            id,
+            layer,
+            module: "k_proj",
+            x: Matrix::zeros(4, c_in),
+            w: Matrix::zeros(c_in, 8),
+            alpha: 0.5,
+            bits: 4,
+        }
+    }
+
+    /// Cheap executor keying its output to the job id.
+    struct EchoExec {
+        micros: u64,
+    }
+
+    impl Executor for EchoExec {
+        fn run(&mut self, job: &Job) -> Result<AnalyzeOut, String> {
+            if self.micros > 0 {
+                std::thread::sleep(Duration::from_micros(self.micros));
+            }
+            let mut out = AnalyzeOut::default();
+            out.errors[0] = job.id as f64;
+            Ok(out)
+        }
+    }
+
+    fn cfg(runners: usize, shard_by: ShardBy, stealing: bool) -> ShardConfig {
+        ShardConfig {
+            runners,
+            shard_by,
+            stealing,
+            base: ServeConfig {
+                workers: 1, // overridden by the runner count
+                max_batch: 4,
+                queue_depth: 64,
+                paused: true,
+                ..Default::default()
+            },
+        }
+    }
+
+    #[test]
+    fn layer_sharding_pins_every_batch_to_its_owner() {
+        // stealing off: placement is exactly the shard key
+        let reqs: Vec<(TenantId, Job)> =
+            (0..32).map(|i| ((i % 3) as TenantId, job(i, (i as usize) % 4, 8))).collect();
+        let (responses, m) =
+            serve_all_sharded(cfg(4, ShardBy::Layer, false), reqs, |_| Ok(EchoExec { micros: 0 }))
+                .unwrap();
+        assert_eq!(m.completed, 32);
+        assert_eq!(m.steals, 0);
+        for r in &responses {
+            assert_eq!(r.out.as_ref().unwrap().errors[0] as u64, r.id);
+            // layer < 4 and runners == 4, so owner == layer
+            assert_eq!(r.worker, (r.id as usize) % 4, "job {} misplaced", r.id);
+        }
+        // every runner owned some traffic, and the counters reconcile
+        assert_eq!(m.per_worker_routed.len(), 4);
+        assert!(m.per_worker_routed.iter().all(|&r| r > 0));
+        assert_eq!(m.per_worker_routed.iter().sum::<u64>(), m.batches);
+        assert_eq!(m.per_worker_batches.iter().sum::<u64>(), m.batches);
+        assert_eq!(m.per_worker_steals.iter().sum::<u64>(), 0);
+        assert_eq!(m.per_worker_latency.len(), 4);
+    }
+
+    #[test]
+    fn tenant_sharding_routes_by_tenant() {
+        let reqs: Vec<(TenantId, Job)> =
+            (0..24).map(|i| ((i % 3) as TenantId, job(i, 0, 8))).collect();
+        let (responses, m) =
+            serve_all_sharded(cfg(2, ShardBy::Tenant, false), reqs, |_| Ok(EchoExec { micros: 0 }))
+                .unwrap();
+        assert_eq!(m.completed, 24);
+        for r in &responses {
+            assert_eq!(r.worker, r.tenant % 2, "tenant {} misplaced", r.tenant);
+        }
+    }
+
+    #[test]
+    fn idle_runners_steal_a_skewed_stream_surplus() {
+        // every request owned by runner 0; runner 1 has nothing routed
+        // and must steal surplus batches for the drain to use it at all
+        let reqs: Vec<(TenantId, Job)> = (0..48).map(|i| (0, job(i, 0, 8))).collect();
+        let (responses, m) =
+            serve_all_sharded(cfg(2, ShardBy::Layer, true), reqs, |_| Ok(EchoExec { micros: 800 }))
+                .unwrap();
+        assert_eq!(m.completed, 48);
+        assert_eq!(m.per_worker_routed, vec![12, 0], "48 jobs / max_batch 4, all owned by 0");
+        assert!(m.steals > 0, "idle runner never stole: {m:?}");
+        assert_eq!(m.per_worker_steals[0], 0, "the owner has nothing to steal");
+        // every job still completed exactly once, results intact
+        let mut ids: Vec<u64> = responses.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), 48);
+        // surplus-only policy: the owner always executes at least one
+        // of its own batches
+        assert!(m.per_worker_batches[0] > 0);
+    }
+
+    #[test]
+    fn sharded_results_match_single_runner_serving() {
+        // quick end-to-end pin of the invariance argument (the proptest
+        // sweeps the config space): 4-runner sharded serving returns
+        // exactly what a single classic worker returns, per job id
+        let reqs: Vec<(TenantId, Job)> = (0..16)
+            .map(|i| {
+                let mut rng = crate::rng::Rng::new(3000 + i);
+                let x = Matrix::from_vec(4, 8, rng.normals_f32(32));
+                let w = Matrix::from_vec(8, 8, rng.normals_f32(64));
+                let j = Job {
+                    id: i,
+                    layer: (i as usize) % 4,
+                    module: "k_proj",
+                    x,
+                    w,
+                    alpha: 0.5,
+                    bits: 4,
+                };
+                (0, j)
+            })
+            .collect();
+        let base = ServeConfig { workers: 1, max_batch: 4, queue_depth: 64, paused: true, ..Default::default() };
+        let (single, _) =
+            serve_all(base, reqs.clone(), |_| Ok(NativeBatchExecutor::with_threads(1))).unwrap();
+        let (sharded, m) = serve_all_sharded(
+            ShardConfig { runners: 4, shard_by: ShardBy::Layer, stealing: true, base },
+            reqs,
+            |_| Ok(NativeBatchExecutor::with_threads(1)),
+        )
+        .unwrap();
+        assert_eq!(m.completed, 16);
+        let by_id = |rs: &[Response]| -> BTreeMap<u64, AnalyzeOut> {
+            rs.iter().map(|r| (r.id, r.out.as_ref().unwrap().clone())).collect()
+        };
+        let (a, b) = (by_id(&single), by_id(&sharded));
+        assert_eq!(a.len(), 16);
+        for (id, want) in &a {
+            assert_eq!(&b[id], want, "job {id} diverged under sharding");
+        }
+    }
+
+    #[test]
+    fn summary_reports_per_runner_lines() {
+        let reqs: Vec<(TenantId, Job)> =
+            (0..16).map(|i| (0, job(i, (i as usize) % 4, 8))).collect();
+        let (_, m) =
+            serve_all_sharded(cfg(4, ShardBy::Layer, false), reqs, |_| Ok(EchoExec { micros: 0 }))
+                .unwrap();
+        let s = m.summary();
+        for i in 0..4 {
+            assert!(s.contains(&format!("runner {i}: routed")), "missing runner {i} line:\n{s}");
+        }
+    }
+
+    #[test]
+    fn resolve_runners_auto_matches_thread_auto() {
+        assert_eq!(resolve_runners(0), par::resolve_threads(0));
+        assert!(resolve_runners(0) >= 1);
+        assert_eq!(resolve_runners(3), 3);
+    }
+
+    fn plan_with_mode(mode: Mode) -> QuantPlan {
+        QuantPlan {
+            provenance: Provenance::default(),
+            entries: (0..4)
+                .map(|layer| PlanEntry {
+                    module: "k_proj".into(),
+                    layer,
+                    bits: 4,
+                    c_in: 8,
+                    mode,
+                    alpha: 0.5,
+                    predicted_error: 1.0,
+                    difficulty_before: 2.0,
+                    difficulty_after: 1.0,
+                    smooth: None,
+                })
+                .collect(),
+        }
+    }
+
+    /// Which plan generation served a response: plan-driven execution
+    /// evaluates only the planned mode (all other error slots are
+    /// infinite), so the argmin mode identifies the plan version.
+    fn served_mode(out: &AnalyzeOut) -> Mode {
+        Mode::ALL
+            .into_iter()
+            .min_by(|a, b| out.errors[a.index()].partial_cmp(&out.errors[b.index()]).unwrap())
+            .unwrap()
+    }
+
+    #[test]
+    fn hot_reload_lands_atomically_across_all_runners() {
+        let dir = std::env::temp_dir().join("smoothrot_shard_reload_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("plan.json");
+        plan_with_mode(Mode::Rotate).save(&path).unwrap();
+        let reg = std::sync::Arc::new(PlanRegistry::load(&path).unwrap());
+
+        let reg2 = std::sync::Arc::clone(&reg);
+        let live = ShardConfig {
+            runners: 4,
+            shard_by: ShardBy::Layer,
+            stealing: false,
+            base: ServeConfig {
+                workers: 1,
+                max_batch: 4,
+                queue_depth: 64,
+                admission: Admission::Block,
+                ..Default::default()
+            },
+        };
+        let (server, rx) = ShardedServer::start(live, move |_| {
+            Ok(NativeBatchExecutor::with_plan(std::sync::Arc::clone(&reg2), 1))
+        });
+        assert_eq!(server.runners(), 4);
+
+        // wave 1: all four runners serve plan v1 (Rotate)
+        for i in 0..16u64 {
+            server.submit(0, job(i, (i as usize) % 4, 8)).unwrap();
+        }
+        let wave1: Vec<Response> = rx.iter().take(16).collect();
+        for r in &wave1 {
+            assert_eq!(served_mode(r.out.as_ref().unwrap()), Mode::Rotate);
+        }
+
+        // hot swap to plan v2 (None) through the shared registry; once
+        // reload_if_changed returns, the swap is complete — no runner
+        // may serve v1 afterwards
+        plan_with_mode(Mode::None).save(&path).unwrap();
+        assert!(reg.reload_if_changed().unwrap());
+
+        // wave 2: every runner observes v2, none straddles
+        for i in 100..116u64 {
+            server.submit(0, job(i, (i as usize) % 4, 8)).unwrap();
+        }
+        let wave2: Vec<Response> = rx.iter().take(16).collect();
+        let mut runners_seen = std::collections::BTreeSet::new();
+        for r in &wave2 {
+            assert_eq!(
+                served_mode(r.out.as_ref().unwrap()),
+                Mode::None,
+                "runner {} served the old plan after reload",
+                r.worker
+            );
+            runners_seen.insert(r.worker);
+        }
+        // stealing is off, wave 2 covers all four layers — the v2
+        // observation really was made by every runner
+        assert_eq!(runners_seen.len(), 4, "not all runners served wave 2: {runners_seen:?}");
+
+        let m = server.finish();
+        assert_eq!(m.completed, 32);
+        assert_eq!(m.errors, 0);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

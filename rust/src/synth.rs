@@ -183,6 +183,21 @@ pub fn layer_weight(module: &str, layer: usize, seed: u64) -> Option<Matrix> {
     Some(spec.weight(c_out, layer))
 }
 
+/// Draw a layer index with a deliberately skewed distribution: ~half of
+/// all requests hit layer 0, the rest spread uniformly over the other
+/// layers.  This is the adversarial stream for sharded serving — under
+/// layer sharding it overloads one runner, so any aggregate-throughput
+/// scaling (and the CI gate that every runner serves at least one
+/// batch) can only come from cross-runner work stealing, not from a
+/// conveniently uniform load.
+pub fn skewed_layer(rng: &mut Rng, layers: usize) -> usize {
+    if layers <= 1 || rng.below(2) == 0 {
+        0
+    } else {
+        1 + rng.below(layers - 1)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -209,6 +224,24 @@ mod tests {
         let d_late = metrics::quant_difficulty(&spec.layer(31), Channels::Columns);
         assert!(d_mid > 3.0 * d_early, "mid {d_mid} early {d_early}");
         assert!(d_mid > 3.0 * d_late, "mid {d_mid} late {d_late}");
+    }
+
+    #[test]
+    fn skewed_layer_concentrates_on_layer_zero() {
+        let mut rng = crate::rng::Rng::new(42);
+        let layers = 8;
+        let mut counts = vec![0usize; layers];
+        for _ in 0..4000 {
+            let l = skewed_layer(&mut rng, layers);
+            assert!(l < layers);
+            counts[l] += 1;
+        }
+        // ~50% of draws land on layer 0; every other layer still shows up
+        assert!(counts[0] > 1600 && counts[0] < 2400, "layer-0 share: {counts:?}");
+        assert!(counts[1..].iter().all(|&c| c > 0), "tail layer starved: {counts:?}");
+        // degenerate cases pin to layer 0
+        assert_eq!(skewed_layer(&mut rng, 1), 0);
+        assert_eq!(skewed_layer(&mut rng, 0), 0);
     }
 
     #[test]

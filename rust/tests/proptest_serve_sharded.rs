@@ -1,0 +1,161 @@
+//! Property test for the sharded-serving invariance contract
+//! (check = proptest-lite): per-job responses are **identical** across
+//! runner counts {1, 2, 4}, with work stealing forced on and off, and
+//! across both shard keys.  Sharding only changes *placement* — which
+//! runner executes a batch — never kernel math, so the full per-job
+//! [`AnalyzeOut`] (Eq. 2 errors, difficulty, absmax) must match the
+//! single-runner baseline bit for bit.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use smoothrot::calib::plan::{PlanEntry, Provenance, QuantPlan};
+use smoothrot::calib::registry::PlanRegistry;
+use smoothrot::check::{check, ensure, Gen};
+use smoothrot::coordinator::Job;
+use smoothrot::rng::Rng;
+use smoothrot::runtime::AnalyzeOut;
+use smoothrot::serve::shard::{serve_all_sharded, ShardBy, ShardConfig};
+use smoothrot::serve::{ExecMode, NativeBatchExecutor, Response, ServeConfig};
+use smoothrot::tensor::Matrix;
+use smoothrot::transforms::Mode;
+
+const C_IN: usize = 16;
+const C_OUT: usize = 8;
+const LAYERS: usize = 4;
+
+/// Deterministic per-layer serving weight (shared by the plan preload
+/// and the jobs, like the CLI's `synth::layer_weight` contract).
+fn weight(layer: usize) -> Matrix {
+    let mut rng = Rng::new(7000 + layer as u64);
+    Matrix::from_vec(C_IN, C_OUT, rng.normals_f32(C_IN * C_OUT))
+}
+
+/// A fresh int8-preloaded registry over k_proj layers 0..LAYERS.
+/// Each serving config gets its own registry so counters and caches
+/// never leak between the baseline and the sharded runs.
+fn registry() -> Arc<PlanRegistry> {
+    let plan = QuantPlan {
+        provenance: Provenance::default(),
+        entries: (0..LAYERS)
+            .map(|layer| PlanEntry {
+                module: "k_proj".into(),
+                layer,
+                bits: 4,
+                c_in: C_IN,
+                mode: Mode::Rotate,
+                alpha: 0.5,
+                predicted_error: 1.0,
+                difficulty_before: 2.0,
+                difficulty_after: 1.0,
+                smooth: None,
+            })
+            .collect(),
+    };
+    let reg = Arc::new(PlanRegistry::from_plan(&plan).unwrap());
+    reg.set_weight_provider(Box::new(|module, layer| {
+        (module == "k_proj" && layer < LAYERS).then(|| weight(layer))
+    }))
+    .unwrap();
+    reg
+}
+
+fn make_requests(g: &mut Gen, n: usize, tenants: usize) -> Vec<(usize, Job)> {
+    (0..n)
+        .map(|i| {
+            let layer = g.usize_in(0, LAYERS - 1);
+            let rows = g.usize_in(1, 5);
+            let mut rng = Rng::new(8000 + i as u64);
+            let job = Job {
+                id: i as u64,
+                layer,
+                module: "k_proj",
+                x: Matrix::from_vec(rows, C_IN, rng.normals_f32(rows * C_IN)),
+                w: weight(layer),
+                alpha: 0.5,
+                bits: 4,
+            };
+            (g.usize_in(0, tenants - 1), job)
+        })
+        .collect()
+}
+
+fn by_id(responses: &[Response]) -> Result<BTreeMap<u64, AnalyzeOut>, String> {
+    responses
+        .iter()
+        .map(|r| match &r.out {
+            Ok(out) => Ok((r.id, out.clone())),
+            Err(e) => Err(format!("request {} errored: {e}", r.id)),
+        })
+        .collect()
+}
+
+#[test]
+fn prop_runner_count_and_stealing_never_change_results() {
+    check("sharded serving: per-job outputs invariant in runner count x stealing", 12, |g| {
+        let n = g.usize_in(4, 40);
+        let tenants = g.usize_in(1, 3);
+        let max_batch = g.usize_in(1, 6);
+        let shard_by = *g.choose(&[ShardBy::Layer, ShardBy::Tenant]);
+        let exec = *g.choose(&[ExecMode::F32, ExecMode::Int8]);
+        let requests = make_requests(g, n, tenants);
+        let base = ServeConfig {
+            workers: 1,
+            max_batch,
+            queue_depth: 64, // >= n: Block admission never stalls a paused run
+            paused: true,
+            ..ServeConfig::default()
+        };
+
+        // 1-runner, stealing off: the reference placement-free run
+        let baseline = {
+            let reg = registry();
+            let cfg = ShardConfig { runners: 1, shard_by, stealing: false, base };
+            let (responses, m) = serve_all_sharded(cfg, requests.clone(), move |_| {
+                Ok(NativeBatchExecutor::with_plan_exec(Arc::clone(&reg), 1, exec))
+            })
+            .map_err(|e| e.to_string())?;
+            ensure(m.completed as usize == n, "baseline lost requests")?;
+            by_id(&responses)?
+        };
+        ensure(baseline.len() == n, "baseline response ids not unique")?;
+
+        for runners in [2usize, 4] {
+            for stealing in [false, true] {
+                let reg = registry();
+                let r2 = Arc::clone(&reg);
+                let cfg = ShardConfig { runners, shard_by, stealing, base };
+                let (responses, m) = serve_all_sharded(cfg, requests.clone(), move |_| {
+                    Ok(NativeBatchExecutor::with_plan_exec(Arc::clone(&r2), 1, exec))
+                })
+                .map_err(|e| e.to_string())?;
+                let label = format!("runners {runners} stealing {stealing}");
+                ensure(m.completed as usize == n, format!("{label}: lost requests"))?;
+                ensure(
+                    m.per_worker_routed.iter().sum::<u64>() == m.batches,
+                    format!("{label}: routed counters don't cover every batch"),
+                )?;
+                if !stealing {
+                    ensure(m.steals == 0, format!("{label}: stole with stealing off"))?;
+                }
+                if exec == ExecMode::Int8 {
+                    let (executed, degraded) = reg.int8_stats();
+                    ensure(
+                        executed as usize == n && degraded == 0,
+                        format!("{label}: int8 path degraded ({executed}/{degraded})"),
+                    )?;
+                }
+                let got = by_id(&responses)?;
+                ensure(got.len() == n, format!("{label}: response ids not unique"))?;
+                for (id, want) in &baseline {
+                    let out = &got[id];
+                    ensure(
+                        out == want,
+                        format!("{label}: job {id} diverged from the 1-runner baseline"),
+                    )?;
+                }
+            }
+        }
+        Ok(())
+    });
+}
