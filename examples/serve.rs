@@ -135,12 +135,22 @@ fn main() -> Result<()> {
             smoothrot::synth::layer_weight(module, layer, 1)
         }))
         .map_err(anyhow::Error::msg)?;
+    // The int8 pass runs under telemetry: workers install stage-timer
+    // and difficulty sinks around every dispatch, so the pass comes
+    // back with per-stage latency histograms and live per-(module,
+    // layer) difficulty — the observability the `smoothrot serve
+    // --metrics-file` flag exports as JSON + Prometheus.
+    use smoothrot::telemetry::{self, Telemetry};
+    let tele = Telemetry::new();
+    tele.add_collector(telemetry::plan_registry_collector(&registry));
     let reg = Arc::clone(&registry);
-    let (int8_responses, int8) =
-        serve_all(cfg, synthetic_requests(n_requests, 3, rows, 32, 1), move |_| {
-            Ok(NativeBatchExecutor::with_plan_exec(Arc::clone(&reg), 1, ExecMode::Int8))
-        })
-        .map_err(|e| anyhow!(e.to_string()))?;
+    let (int8_responses, int8) = smoothrot::serve::serve_all_with_telemetry(
+        cfg,
+        Some(Arc::clone(&tele)),
+        synthetic_requests(n_requests, 3, rows, 32, 1),
+        move |_| Ok(NativeBatchExecutor::with_plan_exec(Arc::clone(&reg), 1, ExecMode::Int8)),
+    )
+    .map_err(|e| anyhow!(e.to_string()))?;
     println!(
         "int8 plan-driven: {:.1} req/s vs f32 plan-driven {:.1} req/s ({:+.0}% throughput, \
          {loaded} weights pre-quantized once, {} requests batch-fused into stacked GEMMs)",
@@ -159,6 +169,52 @@ fn main() -> Result<()> {
         registry.batch_fused() > 0,
         "int8 pass silently fell back to per-job execution (zero batch-fused requests)"
     );
+
+    // What telemetry saw: fill the end-of-run summary into the same
+    // registry, snapshot ONCE, and read everything off that snapshot —
+    // per-stage timings, live difficulty vs the calibration plan, and
+    // the Prometheus text a scraper would ingest.
+    int8.fill(&tele);
+    let snap = tele.snapshot();
+    println!("\ntelemetry (int8 pass):");
+    for stage in telemetry::Stage::ALL {
+        let h = snap.histogram(stage.metric_name()).expect("stage histogram");
+        println!(
+            "  {:>35}: {:>4} obs, {:>9.3} ms total",
+            stage.metric_name(),
+            h.count,
+            h.sum * 1e3
+        );
+    }
+    for row in snap.difficulty.iter().take(3) {
+        println!(
+            "  difficulty {}/{}: live mean {:.3} vs plan {:.3} (drift {:+.3}, exec err mean \
+             {:.3e}, {} samples)",
+            row.module,
+            row.layer,
+            row.cell.mean,
+            row.cell.plan,
+            row.cell.drift(),
+            row.cell.err_mean,
+            row.cell.count
+        );
+    }
+    assert!(!snap.difficulty.is_empty(), "int8 serving must feed the difficulty tracker");
+    assert!(
+        snap.histogram("smoothrot_igemm_seconds").expect("igemm histogram").count > 0,
+        "integer GEMMs ran but the igemm stage timer saw none"
+    );
+    assert_eq!(
+        snap.counter("smoothrot_int8_executed_total", &[]),
+        Some(executed),
+        "snapshot and registry disagree on int8 executions"
+    );
+    let prom = snap.to_prometheus();
+    let igemm_line = prom
+        .lines()
+        .find(|l| l.starts_with("smoothrot_igemm_seconds_count"))
+        .expect("igemm count in Prometheus text");
+    println!("  prometheus: {} samples, e.g. `{igemm_line}`", prom.lines().count());
 
     // Finally, sharded: the same int8 stream split across 2 runners
     // that each OWN their layers (runner = layer % 2), sharing the one

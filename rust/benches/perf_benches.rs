@@ -25,7 +25,7 @@
 //! CI runs this binary with `--smoke` (minimal iterations) so kernel
 //! regressions fail loudly without timing flakiness.  The §Perf section
 //! of EXPERIMENTS.md quotes the full-run numbers.  Every run also
-//! writes a machine-readable `BENCH_7.json` **at the repo root** (the
+//! writes a machine-readable `BENCH_8.json` **at the repo root** (the
 //! committed bench-trajectory artifact; override the path with
 //! `BENCH_JSON=...`).
 
@@ -510,6 +510,61 @@ fn main() {
             );
         }
 
+        // telemetry on vs off over the SAME batch-fused int8 scenario:
+        // the observability acceptance gate is that live telemetry
+        // (stage spans in the kernels, the difficulty sink per job,
+        // admission-wait / batch-form timers in the scheduler) costs
+        // < 2% end-to-end.  The telemetry-off baseline is the
+        // batch-fused scenario above — identical config, requests and
+        // plan; the only delta is the installed sinks.
+        let tele_med = {
+            use smoothrot::telemetry::{plan_registry_collector, Telemetry};
+            let tele = Telemetry::new();
+            tele.add_collector(plan_registry_collector(&registry));
+            let tele_outer = Arc::clone(&tele);
+            let reqs = base.clone();
+            let reg_outer = Arc::clone(&registry);
+            let med = b
+                .bench_items("serve_plan_int8_telemetry_on_vs_off_96req", n as f64, move || {
+                    let reg = Arc::clone(&reg_outer);
+                    let (_, m) = smoothrot::serve::serve_all_with_telemetry(
+                        cfg,
+                        Some(Arc::clone(&tele)),
+                        reqs.clone(),
+                        move |_| {
+                            Ok(NativeBatchExecutor::with_plan_exec(
+                                Arc::clone(&reg),
+                                1,
+                                ExecMode::Int8,
+                            ))
+                        },
+                    )
+                    .unwrap();
+                    assert_eq!(m.completed as usize, n);
+                    black_box(m.batches);
+                })
+                .map(|m| m.median());
+            if med.is_some() {
+                // the overhead number is only honest if the sinks were
+                // actually live: the igemm stage histogram must have
+                // seen every timed iteration's integer GEMMs
+                let snap = tele_outer.snapshot();
+                assert!(
+                    snap.histogram("smoothrot_igemm_seconds").is_some_and(|h| h.count > 0),
+                    "telemetry-on bench ran with dead sinks"
+                );
+            }
+            med
+        };
+        if let (Some(off), Some(on)) = (fused_med, tele_med) {
+            println!(
+                "    -> telemetry-on batch-fused int8 serve vs telemetry-off: {:.3}x \
+                 ({:+.2}% overhead; acceptance gate < 2%)",
+                on.as_secs_f64() / off.as_secs_f64(),
+                100.0 * (on.as_secs_f64() / off.as_secs_f64() - 1.0)
+            );
+        }
+
         // ---- sharded multi-runner scaling (ISSUE 7) ------------------
         // The same batch-fused int8 workload, 192 requests over the
         // 8-layer plan, served by 1 / 2 / 4 shard-owning runners (layer
@@ -629,7 +684,7 @@ fn main() {
     // throughput for every bench above.  The default path resolves to
     // the repo root AT RUNTIME (a compile-time env! path would dangle
     // if the checkout moves or a cached bench binary runs elsewhere),
-    // so `cargo bench` refreshes the committed BENCH_7.json trajectory
+    // so `cargo bench` refreshes the committed BENCH_8.json trajectory
     // file from any working directory inside the repo; BENCH_JSON
     // overrides (CI points it at a scratch path to exercise the writer
     // without dirtying the tree).
@@ -645,10 +700,10 @@ fn default_bench_json() -> String {
     let mut dir = std::env::current_dir().unwrap_or_else(|_| std::path::PathBuf::from("."));
     loop {
         if dir.join("Cargo.toml").exists() && dir.join("rust").is_dir() {
-            return dir.join("BENCH_7.json").to_string_lossy().into_owned();
+            return dir.join("BENCH_8.json").to_string_lossy().into_owned();
         }
         if !dir.pop() {
-            return "BENCH_7.json".to_string();
+            return "BENCH_8.json".to_string();
         }
     }
 }

@@ -42,6 +42,11 @@ pub struct ResolvedEntry {
     pub c_in: usize,
     /// Calibration-predicted Eq. 2 error.
     pub predicted_error: f64,
+    /// The plan's recorded post-transform quantization difficulty
+    /// (`PlanEntry::difficulty_after`) — the baseline live serving
+    /// telemetry compares against to expose activation drift
+    /// ([`crate::telemetry::difficulty`]).
+    pub calib_difficulty: f64,
     /// Eq. 4 vector from the plan (smoothing modes only).
     pub smooth: Option<Arc<Vec<f32>>>,
     /// Reciprocals `1/s` for the activation side, computed once at
@@ -165,6 +170,7 @@ fn resolve(plan: &QuantPlan) -> Result<Resolved, String> {
                 alpha: e.alpha,
                 c_in: e.c_in,
                 predicted_error: e.predicted_error,
+                calib_difficulty: e.difficulty_after,
                 smooth,
                 smooth_inv,
                 rotation,

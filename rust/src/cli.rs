@@ -56,6 +56,16 @@ impl Parsed {
         }
     }
 
+    pub fn get_u64(&self, name: &str) -> Result<Option<u64>, String> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(v) => v
+                .parse()
+                .map(Some)
+                .map_err(|_| format!("{}--{name}: expected integer, got {v:?}", self.ctx())),
+        }
+    }
+
     pub fn get_f64(&self, name: &str) -> Result<Option<f64>, String> {
         match self.get(name) {
             None => Ok(None),
@@ -220,8 +230,17 @@ mod tests {
     fn key_value_styles() {
         let p = cmd().parse(&args(&["--layers", "16", "--alpha=0.7", "--verbose"])).unwrap();
         assert_eq!(p.get_usize("layers").unwrap(), Some(16));
+        assert_eq!(p.get_u64("layers").unwrap(), Some(16));
         assert_eq!(p.get_f64("alpha").unwrap(), Some(0.7));
         assert!(p.has_flag("verbose"));
+    }
+
+    #[test]
+    fn u64_values_parse_and_name_the_subcommand() {
+        let p = cmd().parse(&args(&["--layers", "abc"])).unwrap();
+        let err = p.get_u64("layers").unwrap_err();
+        assert!(err.starts_with("analyze: ") && err.contains("expected integer"), "{err}");
+        assert_eq!(cmd().parse(&args(&[])).unwrap().get_u64("missing").unwrap(), None);
     }
 
     #[test]

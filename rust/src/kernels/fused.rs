@@ -36,6 +36,7 @@ use crate::metrics::{self, Channels};
 use crate::qtensor::{PlannedWeight, QMatrix, ScaleAxis};
 use crate::quant;
 use crate::runtime::AnalyzeOut;
+use crate::telemetry::timers;
 use crate::tensor::{self, Matrix};
 use crate::transforms::{self, Mode, Rotation, RotationCache};
 
@@ -378,28 +379,39 @@ pub fn analyze_planned_int(
     // activation side only: the weight was transformed + quantized at
     // plan load
     let mut xh = ws.take_matrix_copy(x);
-    if let Some(inv) = inv {
-        xh.scale_cols_mut(inv);
-    }
-    if let Some(rot) = rot {
-        rot.apply_rows(&mut xh, threads);
+    {
+        let _span = timers::span(timers::Stage::Transform);
+        if let Some(inv) = inv {
+            xh.scale_cols_mut(inv);
+        }
+        if let Some(rot) = rot {
+            rot.apply_rows(&mut xh, threads);
+        }
     }
 
     // the only per-request quantization work on this path; the GEMM
     // streams the weight's packed tiles (register-blocked microkernel,
     // bit-identical to the row-major kernel)
-    let qx = QMatrix::quantize_i8_with(&xh, bits, ScaleAxis::PerRow, ws)?;
+    let qx = {
+        let _span = timers::span(timers::Stage::Quantize);
+        QMatrix::quantize_i8_with(&xh, bits, ScaleAxis::PerRow, ws)?
+    };
     let mut yq = ws.take(n * c_out);
-    igemm::igemm_packed_into(&mut yq, &qx, &pw.packed, ws, threads)?;
+    {
+        let _span = timers::span(timers::Stage::Igemm);
+        igemm::igemm_packed_into(&mut yq, &qx, &pw.packed, ws, threads)?;
+    }
 
     // f32 reference product (transform-invariant, so no weight
     // transform per request)
+    let _span = timers::span(timers::Stage::Postprocess);
     let mut y = ws.take(n * c_out);
     par::matmul_acc_into(&mut y, x, w, threads);
     let err = tensor::frob_dist_sq(&y, &yq);
 
     let act_diff = metrics::quant_difficulty(&xh, Channels::Columns);
     let absmax = xh.abs_max() as f64;
+    drop(_span);
     ws.give(y);
     ws.give(yq);
     qx.recycle(ws);
@@ -493,20 +505,30 @@ pub fn analyze_planned_int_batch(
     let mut xh = Matrix::from_vec(total, c_in, buf);
 
     // 2. one shared transform pass (row-local, so exactly per-job)
-    if let Some(inv) = inv {
-        xh.scale_cols_mut(inv);
-    }
-    if let Some(rot) = rot {
-        rot.apply_rows(&mut xh, threads);
+    {
+        let _span = timers::span(timers::Stage::Transform);
+        if let Some(inv) = inv {
+            xh.scale_cols_mut(inv);
+        }
+        if let Some(rot) = rot {
+            rot.apply_rows(&mut xh, threads);
+        }
     }
 
     // 3. one per-token quantize; 4. one tall packed integer GEMM
-    let qx = QMatrix::quantize_i8_with(&xh, bits, ScaleAxis::PerRow, ws)?;
+    let qx = {
+        let _span = timers::span(timers::Stage::Quantize);
+        QMatrix::quantize_i8_with(&xh, bits, ScaleAxis::PerRow, ws)?
+    };
     let mut yq = ws.take(total * c_out);
-    igemm::igemm_packed_into(&mut yq, &qx, &pw.packed, ws, threads)?;
+    {
+        let _span = timers::span(timers::Stage::Igemm);
+        igemm::igemm_packed_into(&mut yq, &qx, &pw.packed, ws, threads)?;
+    }
 
     // f32 reference products: per job against its *own* weight, so the
     // executed-vs-reference association stays per request
+    let _span = timers::span(timers::Stage::Postprocess);
     let mut y = ws.take(total * c_out);
     r0 = 0;
     for (x, w) in jobs {

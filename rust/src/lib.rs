@@ -55,6 +55,7 @@
 //! | [`pipeline`] | high-level experiment drivers tying runtime + coordinator |
 //! | [`policy`] | per-layer transform deployment recommendations (paper Sec. V) |
 //! | [`report`] | figure/table emitters (CSV, ASCII charts, markdown) |
+//! | [`telemetry`] | serving observability: typed metric registry, per-stage timers, live difficulty tracking, Prometheus/JSON exporters |
 //! | [`bench_harness`] | criterion-lite timing harness used by `cargo bench` |
 
 pub mod bench_harness;
@@ -76,6 +77,7 @@ pub mod rng;
 pub mod runtime;
 pub mod serve;
 pub mod synth;
+pub mod telemetry;
 pub mod tensor;
 pub mod transforms;
 

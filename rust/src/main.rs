@@ -17,13 +17,20 @@
 
 use std::io::Write as _;
 
+use std::sync::Arc;
+
 use anyhow::{anyhow, bail, Context, Result};
 use smoothrot::cli::{App, Command};
 use smoothrot::coordinator::PoolConfig;
 use smoothrot::pipeline::{self, Backend};
 use smoothrot::report;
 use smoothrot::runtime::Runtime;
+use smoothrot::telemetry::{self, Telemetry};
 use smoothrot::transforms::Mode;
+
+/// Shared `--metrics-file` help text (every subcommand takes it).
+const METRICS_FILE_HELP: &str = "write a telemetry snapshot at exit: schema-versioned JSON at \
+     this path plus Prometheus text at the .prom sibling";
 
 fn app() -> App {
     App {
@@ -31,7 +38,8 @@ fn app() -> App {
         about: "quantization-difficulty analysis & smooth-rotation transforms (paper reproduction)",
         commands: vec![
             Command::new("capture", "run the SynLlama capture artifact and print per-layer stats")
-                .opt("artifacts", "artifacts directory", Some("artifacts")),
+                .opt("artifacts", "artifacts directory", Some("artifacts"))
+                .opt("metrics-file", METRICS_FILE_HELP, None),
             Command::new("analyze", "full layer x module sweep; writes figure reports")
                 .opt("artifacts", "artifacts directory", Some("artifacts"))
                 .opt("backend", "pjrt | native", Some("pjrt"))
@@ -43,29 +51,35 @@ fn app() -> App {
                     Some("1"),
                 )
                 .opt("queue-cap", "bounded queue capacity", Some("64"))
-                .opt("out", "report output directory", Some("reports")),
+                .opt("out", "report output directory", Some("reports"))
+                .opt("metrics-file", METRICS_FILE_HELP, None),
             Command::new("figures", "regenerate one paper figure (1, 2, 3, 4 or 5)")
                 .opt("artifacts", "artifacts directory", Some("artifacts"))
                 .opt("fig", "figure number", Some("3"))
                 .opt("layer", "layer override for figs 1/2/5", None)
-                .opt("out", "report output directory", Some("reports")),
+                .opt("out", "report output directory", Some("reports"))
+                .opt("metrics-file", METRICS_FILE_HELP, None),
             Command::new("sweep-alpha", "Sec. IV-C migration-strength sweep (native backend)")
                 .opt("artifacts", "artifacts directory", Some("artifacts"))
                 .opt("module", "module kind", Some("o_proj"))
                 .opt("threads", "math threads, 0 = all cores", Some("0"))
-                .opt("grid", "comma-separated alphas", Some("0.3,0.4,0.5,0.6,0.65,0.7,0.8,0.9")),
+                .opt("grid", "comma-separated alphas", Some("0.3,0.4,0.5,0.6,0.65,0.7,0.8,0.9"))
+                .opt("metrics-file", METRICS_FILE_HELP, None),
             Command::new("sweep-bits", "bit-width ablation 2..8 (native backend)")
                 .opt("artifacts", "artifacts directory", Some("artifacts"))
                 .opt("threads", "math threads, 0 = all cores", Some("0"))
-                .opt("grid", "comma-separated bit widths", Some("2,3,4,6,8")),
+                .opt("grid", "comma-separated bit widths", Some("2,3,4,6,8"))
+                .opt("metrics-file", METRICS_FILE_HELP, None),
             Command::new("selfcheck", "verify PJRT outputs against golden.json and the native mirror")
                 .opt("artifacts", "artifacts directory", Some("artifacts"))
-                .opt("rtol", "relative tolerance (golden was built by a newer XLA)", Some("5e-2")),
+                .opt("rtol", "relative tolerance (golden was built by a newer XLA)", Some("5e-2"))
+                .opt("metrics-file", METRICS_FILE_HELP, None),
             Command::new("recommend", "emit a per-layer transform deployment policy (paper Sec. V)")
                 .opt("artifacts", "artifacts directory", Some("artifacts"))
                 .opt("backend", "pjrt | native", Some("pjrt"))
                 .opt("sr-margin", "min error ratio before adopting smooth-rotation", Some("1.25"))
-                .opt("out", "policy JSON output path", Some("reports/policy.json")),
+                .opt("out", "policy JSON output path", Some("reports/policy.json"))
+                .opt("metrics-file", METRICS_FILE_HELP, None),
             Command::new("calibrate", "stream synth activations -> channel stats -> plan search -> versioned plan file")
                 .opt("out", "plan artifact output path", Some("reports/plan.json"))
                 .opt("layers", "layers to calibrate per module", Some("8"))
@@ -79,7 +93,8 @@ fn app() -> App {
                 .opt("sr-margin", "min error ratio before adopting smooth-rotation", Some("1.25"))
                 .opt("threads", "math threads, 0 = all cores", Some("1"))
                 .flag("selfcheck", "pin the plan against policy::recommend on the same workload")
-                .flag("exec-check", "re-run each chosen entry through the real integer kernels and report executed vs predicted error"),
+                .flag("exec-check", "re-run each chosen entry through the real integer kernels and report executed vs predicted error")
+                .opt("metrics-file", METRICS_FILE_HELP, None),
             Command::new("serve", "batched multi-tenant serving demo over the serving core")
                 .opt("backend", "native | pjrt", Some("native"))
                 .opt("artifacts", "artifacts directory (pjrt backend)", Some("artifacts"))
@@ -97,6 +112,8 @@ fn app() -> App {
                 .opt("runners", "sharded runner instances, each owning its executor, thread pool and workspace; 0 = one per core; replaces --workers (native backend)", None)
                 .opt("shard-by", "shard key routing each batch to its owning runner: layer | tenant (--runners)", Some("layer"))
                 .opt("trim-bytes", "workspace bytes retained across batches before trimming, 0 = never trim; overrides env SMOOTHROT_TRIM_BYTES (native backend)", None)
+                .opt("metrics-file", METRICS_FILE_HELP, None)
+                .opt("metrics-interval", "seconds between metrics-file rewrites while serving (0 = write only at exit; needs --metrics-file)", Some("0"))
                 .flag("no-steal", "disable idle runners stealing surplus batches from the heaviest peer (--runners)")
                 .flag("skew-layers", "skew the synthetic stream so ~half of all requests hit layer 0 (the sharding stress case; native backend)")
                 .flag("reject", "reject instead of block when a tenant queue is full"),
@@ -127,7 +144,15 @@ fn main() {
             std::process::exit(2);
         }
     };
-    let result = match cmd_name.as_str() {
+    // Every subcommand under --metrics-file gets one Telemetry
+    // instance whose snapshot is dumped at exit; the command dispatch
+    // runs under its sinks, so stage spans and difficulty observations
+    // made on this thread are captured even outside `serve` (serving
+    // worker threads install the sinks themselves via
+    // Server::start_with_telemetry).
+    let metrics_file = parsed.get("metrics-file").map(std::path::PathBuf::from);
+    let telemetry = metrics_file.as_ref().map(|_| Telemetry::new());
+    let result = telemetry::scoped(telemetry.as_ref(), || match cmd_name.as_str() {
         "capture" => cmd_capture(&parsed),
         "analyze" => cmd_analyze(&parsed),
         "figures" => cmd_figures(&parsed),
@@ -136,9 +161,19 @@ fn main() {
         "selfcheck" => cmd_selfcheck(&parsed),
         "recommend" => cmd_recommend(&parsed),
         "calibrate" => cmd_calibrate(&parsed),
-        "serve" => cmd_serve(&parsed),
+        "serve" => cmd_serve(&parsed, telemetry.as_ref()),
         _ => unreachable!(),
-    };
+    });
+    // exit dump happens even when the command failed — a failed run's
+    // partial counters are exactly what one wants to look at
+    if let (Some(t), Some(path)) = (&telemetry, &metrics_file) {
+        match smoothrot::telemetry::export::write_files(&t.snapshot(), path) {
+            Ok(prom) => {
+                eprintln!("telemetry: wrote {} and {}", path.display(), prom.display())
+            }
+            Err(e) => eprintln!("telemetry: writing {} failed: {e}", path.display()),
+        }
+    }
     if let Err(e) = result {
         eprintln!("error: {e:#}");
         std::process::exit(1);
@@ -510,7 +545,7 @@ fn cmd_calibrate(p: &smoothrot::cli::Parsed) -> Result<()> {
     Ok(())
 }
 
-fn cmd_serve(p: &smoothrot::cli::Parsed) -> Result<()> {
+fn cmd_serve(p: &smoothrot::cli::Parsed, telemetry: Option<&Arc<Telemetry>>) -> Result<()> {
     use smoothrot::coordinator::Job;
     use smoothrot::serve::shard::{ShardBy, ShardConfig, ShardedServer};
     use smoothrot::serve::{
@@ -551,6 +586,7 @@ fn cmd_serve(p: &smoothrot::cli::Parsed) -> Result<()> {
     fn run_serve<E, F>(
         cfg: ServeConfig,
         shard: ShardTopo,
+        telemetry: Option<Arc<Telemetry>>,
         requests: Vec<(TenantId, Job)>,
         make_executor: F,
     ) -> Result<(Vec<Response>, ServeMetrics)>
@@ -562,7 +598,7 @@ fn cmd_serve(p: &smoothrot::cli::Parsed) -> Result<()> {
         let (server, rx) = match shard {
             Some((runners, shard_by, stealing)) => {
                 let scfg = ShardConfig { runners, shard_by, stealing, base: cfg };
-                let (s, rx) = ShardedServer::start(scfg, make_executor);
+                let (s, rx) = ShardedServer::start_with_telemetry(scfg, telemetry, make_executor);
                 println!(
                     "sharding: {} runners by {}, stealing {}",
                     s.runners(),
@@ -572,7 +608,7 @@ fn cmd_serve(p: &smoothrot::cli::Parsed) -> Result<()> {
                 (AnyServer::Sharded(s), rx)
             }
             None => {
-                let (s, rx) = Server::start(cfg, make_executor);
+                let (s, rx) = Server::start_with_telemetry(cfg, telemetry, make_executor);
                 (AnyServer::Classic(s), rx)
             }
         };
@@ -626,6 +662,11 @@ fn cmd_serve(p: &smoothrot::cli::Parsed) -> Result<()> {
     let trim_bytes =
         smoothrot::serve::resolve_trim_bytes(p.get_usize("trim-bytes").map_err(|e| anyhow!(e))?)
             .map_err(|e| anyhow!("serve: {e}"))?;
+    let metrics_interval = p.get_u64("metrics-interval").map_err(|e| anyhow!(e))?.unwrap_or(0);
+    let metrics_file = p.get("metrics-file").map(std::path::PathBuf::from);
+    if metrics_interval > 0 && metrics_file.is_none() {
+        bail!("serve: --metrics-interval needs --metrics-file");
+    }
     let shard_topo: ShardTopo = runners.map(|r| (r, shard_by, stealing));
     // under sharding, "0 = all cores" becomes an even per-runner share
     // so N runner pools never oversubscribe the machine N-fold
@@ -669,6 +710,34 @@ fn cmd_serve(p: &smoothrot::cli::Parsed) -> Result<()> {
         );
     }
 
+    // Periodic exporter: rewrite the metrics files every interval while
+    // the server runs (atomic tmp + rename, so a scraper never reads a
+    // torn file); the exit dump in main() writes the final snapshot.
+    let metrics_writer = match (telemetry, &metrics_file) {
+        (Some(t), Some(path)) if metrics_interval > 0 => {
+            let t = Arc::clone(t);
+            let path = path.clone();
+            let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+            let stop2 = Arc::clone(&stop);
+            let handle = std::thread::spawn(move || {
+                while !stop2.load(std::sync::atomic::Ordering::Relaxed) {
+                    if let Err(e) = telemetry::export::write_files(&t.snapshot(), &path) {
+                        eprintln!("telemetry: periodic write failed: {e}");
+                    }
+                    // sleep in slices so shutdown stays prompt
+                    for _ in 0..metrics_interval * 10 {
+                        if stop2.load(std::sync::atomic::Ordering::Relaxed) {
+                            break;
+                        }
+                        std::thread::sleep(std::time::Duration::from_millis(100));
+                    }
+                }
+            });
+            Some((stop, handle))
+        }
+        _ => None,
+    };
+
     let (responses, metrics) = match backend {
         Backend::Native => {
             use smoothrot::calib::registry::PlanRegistry;
@@ -685,7 +754,7 @@ fn cmd_serve(p: &smoothrot::cli::Parsed) -> Result<()> {
                 synthetic_requests(n_requests, n_tenants, rows, layers, stream_seed)
             };
             match plan_path {
-                None => run_serve(cfg, shard_topo, requests, move |_| {
+                None => run_serve(cfg, shard_topo, telemetry.cloned(), requests, move |_| {
                     Ok(NativeBatchExecutor::with_threads(threads)
                         .with_kernel_backend(kernel)
                         .with_trim_budget(trim_bytes))
@@ -698,6 +767,11 @@ fn cmd_serve(p: &smoothrot::cli::Parsed) -> Result<()> {
                         registry.len(),
                         registry.content_hash()
                     );
+                    // every snapshot (periodic and exit) reads the plan
+                    // registry's live coverage / int8 / fusion counters
+                    if let Some(t) = telemetry {
+                        t.add_collector(telemetry::plan_registry_collector(&registry));
+                    }
                     if exec == ExecMode::Int8 {
                         // pre-quantize every covered layer's transformed
                         // weight once, i8/i4 + per-channel scales; the
@@ -742,7 +816,7 @@ fn cmd_serve(p: &smoothrot::cli::Parsed) -> Result<()> {
                         })
                     };
                     let exec_registry = Arc::clone(&registry);
-                    let out = run_serve(cfg, shard_topo, requests, move |_| {
+                    let out = run_serve(cfg, shard_topo, telemetry.cloned(), requests, move |_| {
                         Ok(NativeBatchExecutor::with_plan_exec(
                             Arc::clone(&exec_registry),
                             threads,
@@ -822,11 +896,28 @@ fn cmd_serve(p: &smoothrot::cli::Parsed) -> Result<()> {
                 })
                 .collect();
             let dir = artifacts.clone();
-            run_serve(cfg, None, requests, move |_| pipeline::PjrtExecutor::new(dir.clone()))?
+            run_serve(cfg, None, telemetry.cloned(), requests, move |_| {
+                pipeline::PjrtExecutor::new(dir.clone())
+            })?
         }
     };
 
-    println!("\n{}", metrics.summary());
+    if let Some((stop, handle)) = metrics_writer {
+        stop.store(true, std::sync::atomic::Ordering::Relaxed);
+        let _ = handle.join();
+    }
+    // With telemetry on, register the end-of-run summary in the shared
+    // registry and render the console lines FROM its snapshot — the
+    // exact rows the exit dump writes to the JSON/Prometheus files, so
+    // the printed numbers and the exported ones cannot diverge.
+    let summary = match telemetry {
+        Some(t) => {
+            metrics.fill(t);
+            telemetry::render_summary(&t.snapshot())
+        }
+        None => metrics.summary(),
+    };
+    println!("\n{summary}");
     if metrics.completed > 0 && metrics.errors == metrics.completed {
         let first = responses
             .iter()

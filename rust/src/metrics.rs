@@ -123,8 +123,8 @@ impl Summary {
     }
 }
 
-/// p50/p95/p99 summary of a latency (or any) sample set, computed by
-/// nearest-rank on a sorted copy.
+/// p50/p95/p99/p99.9 summary of a latency (or any) sample set, computed
+/// by nearest-rank on a sorted copy.
 ///
 /// ```
 /// use smoothrot::metrics::Percentiles;
@@ -133,7 +133,8 @@ impl Summary {
 /// assert_eq!(p.p50, 50.0);
 /// assert_eq!(p.p95, 95.0);
 /// assert_eq!(p.p99, 99.0);
-/// assert!(p.p50 <= p.p95 && p.p95 <= p.p99);
+/// assert_eq!(p.p999, 100.0);
+/// assert!(p.p50 <= p.p95 && p.p95 <= p.p99 && p.p99 <= p.p999);
 /// ```
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct Percentiles {
@@ -143,6 +144,9 @@ pub struct Percentiles {
     pub p95: f64,
     /// 99th percentile.
     pub p99: f64,
+    /// 99.9th percentile (the tail the per-stage timers exist to
+    /// explain).
+    pub p999: f64,
 }
 
 impl Percentiles {
@@ -154,7 +158,7 @@ impl Percentiles {
             let rank = ((v.len() as f64) * p).ceil() as usize;
             v[rank.saturating_sub(1).min(v.len() - 1)]
         };
-        Percentiles { p50: pick(0.50), p95: pick(0.95), p99: pick(0.99) }
+        Percentiles { p50: pick(0.50), p95: pick(0.95), p99: pick(0.99), p999: pick(0.999) }
     }
 
     /// Summarize `samples` (empty or all-non-finite input yields zeros).
@@ -175,11 +179,12 @@ impl Percentiles {
     }
 
     /// Combine several *pre-sorted* per-shard sample vectors (e.g. one
-    /// per serving worker) with one O(total) multi-way merge — no
-    /// global concatenation is ever re-sorted.  Equals
-    /// [`Percentiles::of`] on the concatenation of the shards; pinned
-    /// by the unit test below.  Non-finite values are skipped, like
-    /// [`Percentiles::of`].
+    /// per serving worker) with a [`std::collections::BinaryHeap`]
+    /// k-way merge — O(total · log shards) comparisons, no global
+    /// concatenation is ever re-sorted.  Equals [`Percentiles::of`] on
+    /// the concatenation of the shards; pinned by the
+    /// `merge_matches_naive_concatenation` test.  Non-finite values are
+    /// skipped, like [`Percentiles::of`].
     ///
     /// ```
     /// use smoothrot::metrics::Percentiles;
@@ -189,35 +194,50 @@ impl Percentiles {
     /// assert_eq!(merged, Percentiles::of(&[1.0, 2.0, 3.0, 4.0, 5.0]));
     /// ```
     pub fn merge(shards: &[&[f64]]) -> Percentiles {
-        let total: usize = shards.iter().map(|s| s.len()).sum();
-        let mut v = Vec::with_capacity(total);
-        let mut idx = vec![0usize; shards.len()];
-        loop {
-            let mut best: Option<(usize, f64)> = None;
-            for (k, s) in shards.iter().enumerate() {
-                if idx[k] < s.len() {
-                    let val = s[idx[k]];
-                    // NaN never wins a `<` comparison, so a non-finite
-                    // head only gets consumed (and dropped) once no
-                    // finite head precedes it — shard order of the
-                    // finite values is preserved.
-                    let better = match best {
-                        None => true,
-                        Some((_, b)) => val < b,
-                    };
-                    if better {
-                        best = Some((k, val));
-                    }
-                }
+        use std::cmp::Reverse;
+        use std::collections::BinaryHeap;
+
+        // finite-only total order (every heap key is finite, so
+        // total_cmp is plain numeric order)
+        #[derive(PartialEq)]
+        struct Key(f64);
+        impl Eq for Key {}
+        impl PartialOrd for Key {
+            fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+                Some(self.cmp(other))
             }
-            match best {
-                Some((k, val)) => {
-                    idx[k] += 1;
-                    if val.is_finite() {
-                        v.push(val);
-                    }
-                }
-                None => break,
+        }
+        impl Ord for Key {
+            fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+                self.0.total_cmp(&other.0)
+            }
+        }
+
+        // cursors skip non-finite samples up front, so the heap only
+        // ever holds one finite head per non-exhausted shard
+        fn next_finite(s: &[f64], mut i: usize) -> usize {
+            while i < s.len() && !s[i].is_finite() {
+                i += 1;
+            }
+            i
+        }
+
+        let total: usize = shards.iter().map(|s| s.len()).sum();
+        let mut heap: BinaryHeap<Reverse<(Key, usize, usize)>> =
+            BinaryHeap::with_capacity(shards.len());
+        for (k, s) in shards.iter().enumerate() {
+            let i = next_finite(s, 0);
+            if i < s.len() {
+                heap.push(Reverse((Key(s[i]), k, i)));
+            }
+        }
+        let mut v = Vec::with_capacity(total);
+        while let Some(Reverse((Key(val), k, i))) = heap.pop() {
+            v.push(val);
+            let s = shards[k];
+            let j = next_finite(s, i + 1);
+            if j < s.len() {
+                heap.push(Reverse((Key(s[j]), k, j)));
             }
         }
         if v.is_empty() {
@@ -298,9 +318,13 @@ impl CacheStats {
     }
 }
 
-/// Fixed-width histogram over [lo, hi].
+/// Fixed-width histogram over [lo, hi].  Degenerate parameters
+/// (`bins == 0` or `hi <= lo`) yield an empty vector instead of
+/// panicking — a report helper must never take the process down.
 pub fn histogram(xs: &[f64], lo: f64, hi: f64, bins: usize) -> Vec<usize> {
-    assert!(bins > 0 && hi > lo);
+    if bins == 0 || hi <= lo {
+        return Vec::new();
+    }
     let mut counts = vec![0usize; bins];
     let width = (hi - lo) / bins as f64;
     for &x in xs {
@@ -407,7 +431,16 @@ mod tests {
     fn percentiles_empty_and_singleton() {
         assert_eq!(Percentiles::of(&[]), Percentiles::default());
         let p = Percentiles::of(&[7.0]);
-        assert_eq!((p.p50, p.p95, p.p99), (7.0, 7.0, 7.0));
+        assert_eq!((p.p50, p.p95, p.p99, p.p999), (7.0, 7.0, 7.0, 7.0));
+    }
+
+    #[test]
+    fn p999_needs_a_thousand_samples_to_leave_the_max() {
+        // nearest-rank: below 1000 samples p999 is the max
+        let v: Vec<f64> = (1..=999).map(|x| x as f64).collect();
+        assert_eq!(Percentiles::of(&v).p999, 999.0);
+        let v: Vec<f64> = (1..=2000).map(|x| x as f64).collect();
+        assert_eq!(Percentiles::of(&v).p999, 1998.0);
     }
 
     #[test]
@@ -470,5 +503,12 @@ mod tests {
     fn histogram_counts() {
         let h = histogram(&[0.1, 0.2, 0.5, 0.9, 2.0], 0.0, 1.0, 2);
         assert_eq!(h, vec![2, 2]); // 0.5 lands in the second bin; 2.0 is out of range
+    }
+
+    #[test]
+    fn histogram_degenerate_params_yield_empty_not_panic() {
+        assert!(histogram(&[1.0], 0.0, 1.0, 0).is_empty());
+        assert!(histogram(&[1.0], 1.0, 1.0, 4).is_empty());
+        assert!(histogram(&[1.0], 2.0, 1.0, 4).is_empty());
     }
 }

@@ -118,6 +118,7 @@ use crate::kernels::workspace::Workspace;
 use crate::metrics::{CacheStats, Percentiles};
 use crate::qtensor::PlannedWeight;
 use crate::runtime::AnalyzeOut;
+use crate::telemetry::{self, Telemetry};
 use crate::tensor::Matrix;
 use crate::transforms::RotationCache;
 
@@ -507,7 +508,7 @@ impl NativeBatchExecutor {
         e: &ResolvedEntry,
         pw: &PlannedWeight,
     ) -> Result<AnalyzeOut, String> {
-        crate::kernels::fused::analyze_planned_int(
+        let out = crate::kernels::fused::analyze_planned_int(
             &job.x,
             &job.w,
             job.bits,
@@ -517,7 +518,16 @@ impl NativeBatchExecutor {
             pw,
             &mut self.scratch,
             self.threads,
-        )
+        )?;
+        let m = e.mode.index();
+        telemetry::difficulty::observe(
+            job.module,
+            job.layer,
+            out.act_difficulty[m],
+            out.errors[m],
+            e.calib_difficulty,
+        );
+        Ok(out)
     }
 
     /// Planned f32 (simulated-quantization) evaluation of one job.
@@ -606,7 +616,15 @@ impl NativeBatchExecutor {
             ) {
                 Ok(outs) => {
                     reg.note_batch_fused(n);
+                    let m = e.mode.index();
                     for (&i, out) in idxs.iter().zip(outs) {
+                        telemetry::difficulty::observe(
+                            module,
+                            layer,
+                            out.act_difficulty[m],
+                            out.errors[m],
+                            e.calib_difficulty,
+                        );
                         results[i] = Some(Ok(out));
                     }
                 }
@@ -767,46 +785,82 @@ impl ServeMetrics {
         self.completed as f64 / self.batches as f64
     }
 
-    /// Human-readable multi-line summary (used by the CLI and examples).
-    pub fn summary(&self) -> String {
-        let mut s = format!(
-            "throughput {:.1} req/s | latency ms p50 {:.2} p95 {:.2} p99 {:.2}\n\
-             batches {} (mean size {:.2}, max {}) | steals {} | rejected {} | errors {} | \
-             rot-cache {} hit / {} miss ({:.0}%)\n",
-            self.throughput(),
-            self.latency.p50 / 1e3,
-            self.latency.p95 / 1e3,
-            self.latency.p99 / 1e3,
-            self.batches,
-            self.mean_batch(),
-            self.max_batch_observed,
-            self.steals,
-            self.rejected,
-            self.errors,
-            self.rotation.hits,
-            self.rotation.misses,
-            100.0 * self.rotation.hit_rate(),
-        );
-        // per-runner placement/execution/steal counters (the sharded
-        // serve CI leg greps these lines to prove no runner starved)
+    /// Register every field of this summary in `t`'s metric registry
+    /// under the canonical `smoothrot_*` names — the rows
+    /// [`crate::telemetry::export::render_summary`] and the exporters
+    /// consume — so the console summary, the JSON file and the
+    /// Prometheus text all come from ONE snapshot.  Counters are set by
+    /// delta against their current value, so filling the same
+    /// [`Telemetry`] twice with the same metrics is idempotent.
+    pub fn fill(&self, t: &Telemetry) {
+        let reg = t.registry();
+        let bump = |name: &str, labels: &[(&str, &str)], v: u64| {
+            let c = reg.counter(name, labels);
+            c.add(v.saturating_sub(c.value()));
+        };
+        let counters = [
+            ("smoothrot_requests_submitted_total", self.submitted),
+            ("smoothrot_requests_completed_total", self.completed),
+            ("smoothrot_requests_rejected_total", self.rejected),
+            ("smoothrot_request_errors_total", self.errors),
+            ("smoothrot_batches_total", self.batches),
+            ("smoothrot_steals_total", self.steals),
+            ("smoothrot_exec_microseconds_total", self.exec_micros_total),
+            ("smoothrot_rotation_cache_hits_total", self.rotation.hits),
+            ("smoothrot_rotation_cache_misses_total", self.rotation.misses),
+        ];
+        for (name, v) in counters {
+            bump(name, &[], v);
+        }
+        reg.gauge("smoothrot_wall_microseconds", &[]).set(self.wall_micros as f64);
+        reg.gauge("smoothrot_batch_size_max", &[]).set(self.max_batch_observed as f64);
+        let quants = |p: &Percentiles| {
+            [("p50", p.p50), ("p95", p.p95), ("p99", p.p99), ("p999", p.p999)]
+        };
+        for (q, v) in quants(&self.latency) {
+            reg.gauge("smoothrot_latency_microseconds", &[("quantile", q)]).set(v);
+        }
         for (i, &b) in self.per_worker_batches.iter().enumerate() {
-            let routed = self.per_worker_routed.get(i).copied().unwrap_or(0);
-            let stolen = self.per_worker_steals.get(i).copied().unwrap_or(0);
+            let id = i.to_string();
+            let l: [(&str, &str); 1] = [("runner", &id)];
+            bump("smoothrot_runner_batches_total", &l, b);
+            bump(
+                "smoothrot_runner_routed_total",
+                &l,
+                self.per_worker_routed.get(i).copied().unwrap_or(0),
+            );
+            bump(
+                "smoothrot_runner_steals_total",
+                &l,
+                self.per_worker_steals.get(i).copied().unwrap_or(0),
+            );
             let lat = self.per_worker_latency.get(i).copied().unwrap_or_default();
-            s.push_str(&format!(
-                "  runner {i}: routed {routed} batches {b} steals {stolen} | p50 {:.2} ms \
-                 p95 {:.2} ms\n",
-                lat.p50 / 1e3,
-                lat.p95 / 1e3,
-            ));
+            for (q, v) in quants(&lat) {
+                reg.gauge(
+                    "smoothrot_runner_latency_microseconds",
+                    &[("quantile", q), ("runner", &id)],
+                )
+                .set(v);
+            }
         }
-        for (tenant, t) in &self.per_tenant {
-            s.push_str(&format!(
-                "  tenant {tenant}: submitted {} completed {} rejected {}\n",
-                t.submitted, t.completed, t.rejected
-            ));
+        for (tenant, ts) in &self.per_tenant {
+            let id = tenant.to_string();
+            let l: [(&str, &str); 1] = [("tenant", &id)];
+            bump("smoothrot_tenant_submitted_total", &l, ts.submitted);
+            bump("smoothrot_tenant_completed_total", &l, ts.completed);
+            bump("smoothrot_tenant_rejected_total", &l, ts.rejected);
         }
-        s
+    }
+
+    /// Human-readable multi-line summary (used by the CLI and
+    /// examples).  Rendered by filling a snapshot and formatting *it*
+    /// ([`crate::telemetry::export::render_summary`]) — the same rows
+    /// the metric exporters write, so the console and the exported
+    /// files cannot disagree.
+    pub fn summary(&self) -> String {
+        let t = Telemetry::new();
+        self.fill(&t);
+        telemetry::render_summary(&t.snapshot())
     }
 }
 
@@ -996,6 +1050,10 @@ struct Shared {
     pool_cv: Condvar,
     /// Batch-to-worker placement policy.
     route: Route,
+    /// Telemetry sinks installed around every executor dispatch plus
+    /// the scheduler/worker stage timers (`None` = telemetry off; the
+    /// disabled path pays one `Option` check per batch).
+    telemetry: Option<Arc<Telemetry>>,
 }
 
 /// Cap on retained latency samples across all workers: percentile
@@ -1101,7 +1159,25 @@ impl Server {
         E: BatchExecutor,
         F: Fn(usize) -> Result<E, String> + Send + Sync + 'static,
     {
-        Self::start_routed(cfg, Route::LeastLoaded, true, make_executor)
+        Self::start_routed(cfg, Route::LeastLoaded, true, None, make_executor)
+    }
+
+    /// [`Server::start`] with a [`Telemetry`] subsystem attached
+    /// (`smoothrot serve --metrics-file`): workers install its
+    /// stage-timer and difficulty sinks around every executor dispatch,
+    /// the scheduler times batch formation, and admission-to-dispatch
+    /// wait lands in the `admission_wait` stage histogram.  `None`
+    /// behaves exactly like [`Server::start`].
+    pub fn start_with_telemetry<E, F>(
+        cfg: ServeConfig,
+        telemetry: Option<Arc<Telemetry>>,
+        make_executor: F,
+    ) -> (Server, Receiver<Response>)
+    where
+        E: BatchExecutor,
+        F: Fn(usize) -> Result<E, String> + Send + Sync + 'static,
+    {
+        Self::start_routed(cfg, Route::LeastLoaded, true, telemetry, make_executor)
     }
 
     /// [`Server::start`] with an explicit batch-placement policy and
@@ -1112,6 +1188,7 @@ impl Server {
         cfg: ServeConfig,
         route: Route,
         stealing: bool,
+        telemetry: Option<Arc<Telemetry>>,
         make_executor: F,
     ) -> (Server, Receiver<Response>)
     where
@@ -1154,6 +1231,7 @@ impl Server {
             }),
             pool_cv: Condvar::new(),
             route,
+            telemetry,
         });
         let (res_tx, res_rx) = mpsc::channel::<Response>();
         let make_executor = Arc::new(make_executor);
@@ -1351,7 +1429,16 @@ fn scheduler_loop(shared: Arc<Shared>) {
                 continue;
             }
         }
-        let batch = form_batch(&mut center, cfg.max_batch);
+        let batch = match &shared.telemetry {
+            Some(t) => {
+                let t0 = Instant::now();
+                let b = form_batch(&mut center, cfg.max_batch);
+                t.timers()
+                    .record_ns(telemetry::Stage::BatchForm, t0.elapsed().as_nanos() as u64);
+                b
+            }
+            None => form_batch(&mut center, cfg.max_batch),
+        };
         shared.admit_cv.notify_all();
         drop(center);
         {
@@ -1440,7 +1527,10 @@ where
 
         let t0 = Instant::now();
         let mut results: Vec<Result<AnalyzeOut, String>> = match exec.as_mut() {
-            Some(e) => e.run_batch(&batch.jobs),
+            // the telemetry scope installs the stage-timer and
+            // difficulty sinks on this thread for the duration of the
+            // dispatch; with telemetry off this is a plain call
+            Some(e) => telemetry::scoped(shared.telemetry.as_ref(), || e.run_batch(&batch.jobs)),
             None => batch
                 .jobs
                 .iter()
@@ -1466,6 +1556,12 @@ where
             let mut center = lock(&shared.center);
             for (m, out) in batch.meta.into_iter().zip(results) {
                 let queue_micros = t0.saturating_duration_since(m.admitted).as_micros() as u64;
+                if let Some(t) = &shared.telemetry {
+                    t.timers().record_ns(
+                        telemetry::Stage::AdmissionWait,
+                        queue_micros.saturating_mul(1000),
+                    );
+                }
                 let total_micros = m.admitted.elapsed().as_micros() as u64;
                 center.stats.completed += 1;
                 if out.is_err() {
@@ -1660,7 +1756,24 @@ where
     E: BatchExecutor,
     F: Fn(usize) -> Result<E, String> + Send + Sync + 'static,
 {
-    let (server, responses) = Server::start(cfg, make_executor);
+    serve_all_with_telemetry(cfg, None, requests, make_executor)
+}
+
+/// [`serve_all`] with a [`Telemetry`] subsystem attached (see
+/// [`Server::start_with_telemetry`]) — the driver behind
+/// `smoothrot serve --metrics-file` and the telemetry-overhead bench
+/// scenario.
+pub fn serve_all_with_telemetry<E, F>(
+    cfg: ServeConfig,
+    telemetry: Option<Arc<Telemetry>>,
+    requests: Vec<(TenantId, Job)>,
+    make_executor: F,
+) -> Result<(Vec<Response>, ServeMetrics), SubmitError>
+where
+    E: BatchExecutor,
+    F: Fn(usize) -> Result<E, String> + Send + Sync + 'static,
+{
+    let (server, responses) = Server::start_with_telemetry(cfg, telemetry, make_executor);
     for (tenant, job) in requests {
         match server.submit(tenant, job) {
             Ok(()) | Err(SubmitError::Full { .. }) => {}

@@ -44,6 +44,7 @@ use std::sync::Arc;
 use crate::calib::registry::PlanRegistry;
 use crate::coordinator::Job;
 use crate::kernels::par;
+use crate::telemetry::Telemetry;
 
 use super::{
     BatchExecutor, Response, Route, ServeConfig, ServeMetrics, Server, SubmitError, TenantId,
@@ -156,13 +157,29 @@ impl ShardedServer {
         E: BatchExecutor,
         F: Fn(usize) -> Result<E, String> + Send + Sync + 'static,
     {
+        Self::start_with_telemetry(cfg, None, make_executor)
+    }
+
+    /// [`ShardedServer::start`] with a [`Telemetry`] subsystem attached
+    /// (see [`Server::start_with_telemetry`]); all runners share the
+    /// one instance — their stage timers merge into the same
+    /// histograms, worker-count-invariantly.
+    pub fn start_with_telemetry<E, F>(
+        cfg: ShardConfig,
+        telemetry: Option<Arc<Telemetry>>,
+        make_executor: F,
+    ) -> (ShardedServer, Receiver<Response>)
+    where
+        E: BatchExecutor,
+        F: Fn(usize) -> Result<E, String> + Send + Sync + 'static,
+    {
         let runners = resolve_runners(cfg.runners);
         let shard_by = cfg.shard_by;
         let route = Route::Owner(Arc::new(move |job: &Job, tenant: TenantId| {
             shard_by.key(job, tenant)
         }));
         let base = ServeConfig { workers: runners, ..cfg.base };
-        let (inner, rx) = Server::start_routed(base, route, cfg.stealing, make_executor);
+        let (inner, rx) = Server::start_routed(base, route, cfg.stealing, telemetry, make_executor);
         (ShardedServer { inner, runners }, rx)
     }
 
@@ -196,7 +213,22 @@ where
     E: BatchExecutor,
     F: Fn(usize) -> Result<E, String> + Send + Sync + 'static,
 {
-    let (server, responses) = ShardedServer::start(cfg, make_executor);
+    serve_all_sharded_with_telemetry(cfg, None, requests, make_executor)
+}
+
+/// [`serve_all_sharded`] with a [`Telemetry`] subsystem attached (see
+/// [`ShardedServer::start_with_telemetry`]).
+pub fn serve_all_sharded_with_telemetry<E, F>(
+    cfg: ShardConfig,
+    telemetry: Option<Arc<Telemetry>>,
+    requests: Vec<(TenantId, Job)>,
+    make_executor: F,
+) -> Result<(Vec<Response>, ServeMetrics), SubmitError>
+where
+    E: BatchExecutor,
+    F: Fn(usize) -> Result<E, String> + Send + Sync + 'static,
+{
+    let (server, responses) = ShardedServer::start_with_telemetry(cfg, telemetry, make_executor);
     for (tenant, job) in requests {
         match server.submit(tenant, job) {
             Ok(()) | Err(SubmitError::Full { .. }) => {}

@@ -1,0 +1,231 @@
+//! Live per-(module, layer) quantization-difficulty tracking — the
+//! paper's Sec. II-B metric observed on *served* traffic, not just at
+//! calibration time.
+//!
+//! Every integer-path dispatch ([`crate::kernels::fused::analyze_planned_int`]
+//! and its batch twin) already computes the served rows' activation
+//! difficulty (std of channel magnitudes) and the **executed** Eq. 2
+//! error; the serving executor feeds those values here per job.  Each
+//! cell keeps streaming aggregates:
+//!
+//! * Welford running mean (numerically stable, no sample retention),
+//! * running max,
+//! * an EWMA (`EWMA_ALPHA`-weighted) that tracks the *recent* stream —
+//!   the early-warning signal for activation drift,
+//! * the same three for the executed Eq. 2 error,
+//! * the plan's recorded calibration difficulty
+//!   (`PlanEntry::difficulty_after`, surfaced through
+//!   [`crate::calib::registry::ResolvedEntry::calib_difficulty`]),
+//!
+//! so every snapshot row carries a ready-made **drift column**
+//! (`live mean − calibration difficulty`) — the sensor layer ROADMAP
+//! item 5's auto-recalibration will trigger on.
+//!
+//! Like the stage timers, observation goes through a thread-local sink
+//! ([`with_sink`] / [`observe`]) so the executor hot path needs no
+//! telemetry handle and pays one thread-local read when disabled.
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+
+/// EWMA weight of the newest observation (≈ the last ~40 observations
+/// dominate the value).
+pub const EWMA_ALPHA: f64 = 0.05;
+
+/// Streaming aggregates of one (module, layer) cell.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Cell {
+    /// Observations folded in.
+    pub count: u64,
+    /// Welford running mean of the live difficulty.
+    pub mean: f64,
+    /// Max live difficulty seen.
+    pub max: f64,
+    /// EWMA of the live difficulty (seeded by the first observation).
+    pub ewma: f64,
+    /// Welford running mean of the executed Eq. 2 error.
+    pub err_mean: f64,
+    /// Max executed Eq. 2 error seen.
+    pub err_max: f64,
+    /// The plan's calibration difficulty for this cell (last observed;
+    /// follows plan hot reloads).
+    pub plan: f64,
+}
+
+impl Cell {
+    fn observe(&mut self, difficulty: f64, err: f64, plan: f64) {
+        self.count += 1;
+        let n = self.count as f64;
+        self.mean += (difficulty - self.mean) / n;
+        self.err_mean += (err - self.err_mean) / n;
+        if self.count == 1 {
+            self.max = difficulty;
+            self.err_max = err;
+            self.ewma = difficulty;
+        } else {
+            self.max = self.max.max(difficulty);
+            self.err_max = self.err_max.max(err);
+            self.ewma += EWMA_ALPHA * (difficulty - self.ewma);
+        }
+        self.plan = plan;
+    }
+
+    /// Live-vs-calibration drift: `mean − plan`.  Positive = the served
+    /// stream is *harder* to quantize than the plan was calibrated for.
+    pub fn drift(&self) -> f64 {
+        self.mean - self.plan
+    }
+}
+
+/// One snapshot row: a cell plus its identity.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DifficultyRow {
+    /// Module kind (e.g. `"k_proj"`).
+    pub module: String,
+    /// Layer index.
+    pub layer: usize,
+    /// The streaming aggregates.
+    pub cell: Cell,
+}
+
+/// Shared tracker of every observed (module, layer) cell.
+#[derive(Debug, Default)]
+pub struct DifficultyTracker {
+    cells: Mutex<BTreeMap<(String, usize), Cell>>,
+}
+
+impl DifficultyTracker {
+    /// An empty tracker.
+    pub fn new() -> Arc<DifficultyTracker> {
+        Arc::new(DifficultyTracker::default())
+    }
+
+    /// Fold one served job's live difficulty, executed Eq. 2 error and
+    /// plan calibration difficulty into its cell.
+    pub fn observe(&self, module: &str, layer: usize, difficulty: f64, err: f64, plan: f64) {
+        let mut map = match self.cells.lock() {
+            Ok(g) => g,
+            Err(p) => p.into_inner(),
+        };
+        // allocate the key only on a cell's first observation
+        if let Some(cell) = map.get_mut(&(module.to_string(), layer)) {
+            cell.observe(difficulty, err, plan);
+        } else {
+            let mut cell = Cell::default();
+            cell.observe(difficulty, err, plan);
+            map.insert((module.to_string(), layer), cell);
+        }
+    }
+
+    /// Every observed cell, in (module, layer) order — deterministic
+    /// because observation *order* only permutes commutative folds
+    /// within a cell when jobs race, and the per-cell totals are what
+    /// the snapshot tests compare.
+    pub fn rows(&self) -> Vec<DifficultyRow> {
+        let map = match self.cells.lock() {
+            Ok(g) => g,
+            Err(p) => p.into_inner(),
+        };
+        map.iter()
+            .map(|((module, layer), cell)| DifficultyRow {
+                module: module.clone(),
+                layer: *layer,
+                cell: *cell,
+            })
+            .collect()
+    }
+}
+
+thread_local! {
+    static SINK: RefCell<Option<Arc<DifficultyTracker>>> = const { RefCell::new(None) };
+}
+
+/// Run `f` with `sink` installed as this thread's difficulty
+/// destination (restores the previous sink afterwards, panic-safe).
+pub fn with_sink<R>(sink: Option<Arc<DifficultyTracker>>, f: impl FnOnce() -> R) -> R {
+    struct Restore(Option<Arc<DifficultyTracker>>);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            SINK.with(|s| *s.borrow_mut() = self.0.take());
+        }
+    }
+    let prev = SINK.with(|s| s.replace(sink));
+    let _restore = Restore(prev);
+    f()
+}
+
+/// Observe into the thread's installed tracker; a no-op (one
+/// thread-local read) when none is installed.
+pub fn observe(module: &str, layer: usize, difficulty: f64, err: f64, plan: f64) {
+    let sink = SINK.with(|s| s.borrow().clone());
+    if let Some(t) = sink {
+        t.observe(module, layer, difficulty, err, plan);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn welford_mean_max_and_ewma() {
+        let t = DifficultyTracker::new();
+        t.observe("k_proj", 0, 2.0, 0.5, 1.5);
+        t.observe("k_proj", 0, 4.0, 1.5, 1.5);
+        let rows = t.rows();
+        assert_eq!(rows.len(), 1);
+        let c = rows[0].cell;
+        assert_eq!(c.count, 2);
+        assert_eq!(c.mean, 3.0);
+        assert_eq!(c.max, 4.0);
+        assert_eq!(c.err_mean, 1.0);
+        assert_eq!(c.err_max, 1.5);
+        // ewma seeded at 2.0, then pulled toward 4.0 by EWMA_ALPHA
+        assert_eq!(c.ewma, 2.0 + EWMA_ALPHA * 2.0);
+        assert_eq!(c.plan, 1.5);
+        assert_eq!(c.drift(), 1.5);
+    }
+
+    #[test]
+    fn cells_are_keyed_and_ordered() {
+        let t = DifficultyTracker::new();
+        t.observe("o_proj", 3, 1.0, 0.0, 1.0);
+        t.observe("k_proj", 1, 1.0, 0.0, 1.0);
+        t.observe("k_proj", 0, 1.0, 0.0, 1.0);
+        let rows = t.rows();
+        let keys: Vec<(&str, usize)> =
+            rows.iter().map(|r| (r.module.as_str(), r.layer)).collect();
+        assert_eq!(keys, vec![("k_proj", 0), ("k_proj", 1), ("o_proj", 3)]);
+    }
+
+    #[test]
+    fn thread_local_observe_is_inert_without_a_sink() {
+        let t = DifficultyTracker::new();
+        observe("k_proj", 0, 9.0, 9.0, 9.0);
+        assert!(t.rows().is_empty());
+        with_sink(Some(Arc::clone(&t)), || observe("k_proj", 0, 9.0, 1.0, 8.0));
+        assert_eq!(t.rows().len(), 1);
+        observe("k_proj", 0, 9.0, 9.0, 9.0);
+        assert_eq!(t.rows()[0].cell.count, 1, "sink must be restored after the scope");
+    }
+
+    #[test]
+    fn mean_is_order_invariant_enough_for_snapshots() {
+        // commutative-enough: the same multiset of observations from
+        // different interleavings lands within float-fold tolerance
+        let a = DifficultyTracker::new();
+        let b = DifficultyTracker::new();
+        let vals = [1.0, 2.5, 3.25, 0.5];
+        for &v in &vals {
+            a.observe("k_proj", 0, v, v, 1.0);
+        }
+        for &v in vals.iter().rev() {
+            b.observe("k_proj", 0, v, v, 1.0);
+        }
+        let (ca, cb) = (a.rows()[0].cell, b.rows()[0].cell);
+        assert!((ca.mean - cb.mean).abs() < 1e-12);
+        assert_eq!(ca.max, cb.max);
+        assert_eq!(ca.count, cb.count);
+    }
+}

@@ -1,0 +1,753 @@
+//! Snapshot model and exporters: one [`Snapshot`] struct, two
+//! renderings.
+//!
+//! A snapshot is pure data — every registered counter / gauge /
+//! histogram row plus the live difficulty cells — captured in
+//! deterministic `(name, labels)` order.  Off that one struct:
+//!
+//! * [`Snapshot::to_json_string`] — a schema-versioned JSON artifact
+//!   (same version-ceiling discipline as the calibration plan:
+//!   [`Snapshot::parse`] rejects snapshots written by a newer schema),
+//! * [`Snapshot::to_prometheus`] — Prometheus text exposition with
+//!   `# TYPE` lines, stable label ordering and cumulative histogram
+//!   buckets (`_bucket{le=...}` / `_sum` / `_count`),
+//! * [`render_summary`] — the human serve summary, rendered *from* the
+//!   snapshot rows so the printed lines and the exported files can
+//!   never disagree,
+//! * [`write_files`] — atomic tmp+rename persistence of both renderings
+//!   (the JSON at the given path, the Prometheus text next to it with a
+//!   `.prom` extension), the same write discipline as plan artifacts.
+
+use std::path::{Path, PathBuf};
+
+use crate::jsonio::{self, Json};
+use crate::telemetry::difficulty::{Cell, DifficultyRow};
+use crate::telemetry::registry::Labels;
+
+/// Schema version written into every JSON snapshot.  Parsing rejects
+/// snapshots from a *newer* schema (forward compatibility is explicit,
+/// like `PLAN_SCHEMA_VERSION`).
+pub const TELEMETRY_SCHEMA_VERSION: u32 = 1;
+
+/// Artifact kind marker in the JSON snapshot.
+pub const TELEMETRY_KIND: &str = "smoothrot-telemetry";
+
+/// One counter's snapshot value.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CounterRow {
+    pub name: String,
+    pub labels: Labels,
+    pub value: u64,
+}
+
+/// One gauge's snapshot value.
+#[derive(Clone, Debug, PartialEq)]
+pub struct GaugeRow {
+    pub name: String,
+    pub labels: Labels,
+    pub value: f64,
+}
+
+/// One histogram's snapshot state: upper bounds `le`, per-bucket
+/// (non-cumulative) counts with the `+Inf` overflow last, and the
+/// exact totals.
+#[derive(Clone, Debug, PartialEq)]
+pub struct HistogramRow {
+    pub name: String,
+    pub labels: Labels,
+    pub le: Vec<f64>,
+    pub counts: Vec<u64>,
+    /// Sum of observations in seconds (exact integer nanoseconds under
+    /// the hood).
+    pub sum: f64,
+    pub count: u64,
+}
+
+/// A deterministic point-in-time capture of every metric.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Snapshot {
+    pub version: u32,
+    pub counters: Vec<CounterRow>,
+    pub gauges: Vec<GaugeRow>,
+    pub histograms: Vec<HistogramRow>,
+    pub difficulty: Vec<DifficultyRow>,
+}
+
+fn canon(labels: &[(&str, &str)]) -> Labels {
+    let mut v: Labels = labels.iter().map(|(k, val)| (k.to_string(), val.to_string())).collect();
+    v.sort();
+    v
+}
+
+impl Snapshot {
+    /// An empty snapshot at the current schema version.
+    pub fn new() -> Snapshot {
+        Snapshot {
+            version: TELEMETRY_SCHEMA_VERSION,
+            counters: Vec::new(),
+            gauges: Vec::new(),
+            histograms: Vec::new(),
+            difficulty: Vec::new(),
+        }
+    }
+
+    /// The counter value registered under `(name, labels)`.
+    pub fn counter(&self, name: &str, labels: &[(&str, &str)]) -> Option<u64> {
+        let labels = canon(labels);
+        self.counters.iter().find(|r| r.name == name && r.labels == labels).map(|r| r.value)
+    }
+
+    /// The gauge value registered under `(name, labels)`.
+    pub fn gauge(&self, name: &str, labels: &[(&str, &str)]) -> Option<f64> {
+        let labels = canon(labels);
+        self.gauges.iter().find(|r| r.name == name && r.labels == labels).map(|r| r.value)
+    }
+
+    /// The first histogram row named `name`.
+    pub fn histogram(&self, name: &str) -> Option<&HistogramRow> {
+        self.histograms.iter().find(|r| r.name == name)
+    }
+
+    /// JSON value of the snapshot (schema-versioned, deterministic).
+    pub fn to_json(&self) -> Json {
+        fn labels_json(labels: &Labels) -> Json {
+            Json::Obj(labels.iter().map(|(k, v)| (k.clone(), Json::Str(v.clone()))).collect())
+        }
+        let counters: Vec<Json> = self
+            .counters
+            .iter()
+            .map(|r| {
+                jsonio::obj(vec![
+                    ("name", Json::Str(r.name.clone())),
+                    ("labels", labels_json(&r.labels)),
+                    ("value", Json::Num(r.value as f64)),
+                ])
+            })
+            .collect();
+        let gauges: Vec<Json> = self
+            .gauges
+            .iter()
+            .map(|r| {
+                jsonio::obj(vec![
+                    ("name", Json::Str(r.name.clone())),
+                    ("labels", labels_json(&r.labels)),
+                    ("value", Json::Num(r.value)),
+                ])
+            })
+            .collect();
+        let histograms: Vec<Json> = self
+            .histograms
+            .iter()
+            .map(|r| {
+                jsonio::obj(vec![
+                    ("name", Json::Str(r.name.clone())),
+                    ("labels", labels_json(&r.labels)),
+                    ("le", jsonio::num_arr(&r.le)),
+                    (
+                        "counts",
+                        Json::Arr(r.counts.iter().map(|&c| Json::Num(c as f64)).collect()),
+                    ),
+                    ("sum", Json::Num(r.sum)),
+                    ("count", Json::Num(r.count as f64)),
+                ])
+            })
+            .collect();
+        let difficulty: Vec<Json> = self
+            .difficulty
+            .iter()
+            .map(|r| {
+                jsonio::obj(vec![
+                    ("module", Json::Str(r.module.clone())),
+                    ("layer", Json::Num(r.layer as f64)),
+                    ("count", Json::Num(r.cell.count as f64)),
+                    ("mean", Json::Num(r.cell.mean)),
+                    ("max", Json::Num(r.cell.max)),
+                    ("ewma", Json::Num(r.cell.ewma)),
+                    ("err_mean", Json::Num(r.cell.err_mean)),
+                    ("err_max", Json::Num(r.cell.err_max)),
+                    ("plan", Json::Num(r.cell.plan)),
+                    ("drift", Json::Num(r.cell.drift())),
+                ])
+            })
+            .collect();
+        jsonio::obj(vec![
+            ("version", Json::Num(self.version as f64)),
+            ("kind", Json::Str(TELEMETRY_KIND.into())),
+            ("counters", Json::Arr(counters)),
+            ("gauges", Json::Arr(gauges)),
+            ("histograms", Json::Arr(histograms)),
+            ("difficulty", Json::Arr(difficulty)),
+        ])
+    }
+
+    /// Pretty JSON text of [`Snapshot::to_json`].
+    pub fn to_json_string(&self) -> String {
+        self.to_json().to_string_pretty()
+    }
+
+    /// Parse a JSON snapshot, enforcing the schema-version ceiling: a
+    /// snapshot written by a newer schema is an error, not a silent
+    /// partial read (mirroring the calibration-plan artifact).
+    pub fn parse(text: &str) -> Result<Snapshot, String> {
+        let j = jsonio::parse(text).map_err(|e| format!("telemetry snapshot: {e}"))?;
+        let version = j
+            .get("version")
+            .and_then(Json::as_u64)
+            .ok_or("telemetry snapshot: missing or invalid version")?;
+        if version == 0 {
+            return Err("telemetry snapshot: version 0 is invalid".into());
+        }
+        if version > TELEMETRY_SCHEMA_VERSION as u64 {
+            return Err(format!(
+                "telemetry snapshot: version {version} is newer than supported \
+                 {TELEMETRY_SCHEMA_VERSION}"
+            ));
+        }
+        fn labels_of(j: &Json) -> Result<Labels, String> {
+            match j.get("labels") {
+                None => Ok(Vec::new()),
+                Some(Json::Obj(fields)) => {
+                    let mut out: Labels = fields
+                        .iter()
+                        .map(|(k, v)| {
+                            v.as_str()
+                                .map(|s| (k.clone(), s.to_string()))
+                                .ok_or_else(|| format!("label {k}: expected string"))
+                        })
+                        .collect::<Result<_, String>>()?;
+                    out.sort();
+                    Ok(out)
+                }
+                Some(_) => Err("labels: expected object".into()),
+            }
+        }
+        fn name_of(j: &Json) -> Result<String, String> {
+            j.get("name")
+                .and_then(Json::as_str)
+                .map(str::to_string)
+                .ok_or_else(|| "metric row: missing name".to_string())
+        }
+        let mut snap = Snapshot { version: version as u32, ..Snapshot::new() };
+        for row in j.get("counters").and_then(Json::as_arr).unwrap_or(&[]) {
+            snap.counters.push(CounterRow {
+                name: name_of(row)?,
+                labels: labels_of(row)?,
+                value: row
+                    .get("value")
+                    .and_then(Json::as_u64)
+                    .ok_or("counter row: missing value")?,
+            });
+        }
+        for row in j.get("gauges").and_then(Json::as_arr).unwrap_or(&[]) {
+            snap.gauges.push(GaugeRow {
+                name: name_of(row)?,
+                labels: labels_of(row)?,
+                value: row.get("value").and_then(Json::as_f64).ok_or("gauge row: missing value")?,
+            });
+        }
+        for row in j.get("histograms").and_then(Json::as_arr).unwrap_or(&[]) {
+            let counts = row
+                .get("counts")
+                .and_then(Json::as_arr)
+                .ok_or("histogram row: missing counts")?
+                .iter()
+                .map(|c| c.as_u64().ok_or("histogram count: expected integer".to_string()))
+                .collect::<Result<Vec<u64>, String>>()?;
+            snap.histograms.push(HistogramRow {
+                name: name_of(row)?,
+                labels: labels_of(row)?,
+                le: row.get("le").and_then(Json::as_f64_vec).ok_or("histogram row: missing le")?,
+                counts,
+                sum: row.get("sum").and_then(Json::as_f64).ok_or("histogram row: missing sum")?,
+                count: row
+                    .get("count")
+                    .and_then(Json::as_u64)
+                    .ok_or("histogram row: missing count")?,
+            });
+        }
+        for row in j.get("difficulty").and_then(Json::as_arr).unwrap_or(&[]) {
+            let f = |key: &str| -> Result<f64, String> {
+                row.get(key)
+                    .and_then(Json::as_f64)
+                    .ok_or_else(|| format!("difficulty row: missing {key}"))
+            };
+            snap.difficulty.push(DifficultyRow {
+                module: row
+                    .get("module")
+                    .and_then(Json::as_str)
+                    .ok_or("difficulty row: missing module")?
+                    .to_string(),
+                layer: row
+                    .get("layer")
+                    .and_then(Json::as_usize)
+                    .ok_or("difficulty row: missing layer")?,
+                cell: Cell {
+                    count: row
+                        .get("count")
+                        .and_then(Json::as_u64)
+                        .ok_or("difficulty row: missing count")?,
+                    mean: f("mean")?,
+                    max: f("max")?,
+                    ewma: f("ewma")?,
+                    err_mean: f("err_mean")?,
+                    err_max: f("err_max")?,
+                    plan: f("plan")?,
+                },
+            });
+        }
+        Ok(snap)
+    }
+
+    /// Prometheus text exposition: one `# TYPE` line per metric family,
+    /// rows in snapshot (= sorted) order, histogram buckets cumulative
+    /// with the `+Inf` bucket, label order stable.
+    pub fn to_prometheus(&self) -> String {
+        let mut out = String::new();
+        let mut last = String::new();
+        for r in &self.counters {
+            type_line(&mut out, &mut last, &r.name, "counter");
+            out.push_str(&format!("{}{} {}\n", r.name, fmt_labels(&r.labels, None), r.value));
+        }
+        last.clear();
+        for r in &self.gauges {
+            type_line(&mut out, &mut last, &r.name, "gauge");
+            out.push_str(&format!(
+                "{}{} {}\n",
+                r.name,
+                fmt_labels(&r.labels, None),
+                fmt_value(r.value)
+            ));
+        }
+        last.clear();
+        for r in &self.histograms {
+            type_line(&mut out, &mut last, &r.name, "histogram");
+            let mut cum = 0u64;
+            for (i, &c) in r.counts.iter().enumerate() {
+                cum += c;
+                let le = match r.le.get(i) {
+                    Some(b) => fmt_value(*b),
+                    None => "+Inf".to_string(),
+                };
+                out.push_str(&format!(
+                    "{}_bucket{} {cum}\n",
+                    r.name,
+                    fmt_labels(&r.labels, Some(("le", &le))),
+                ));
+            }
+            out.push_str(&format!(
+                "{}_sum{} {}\n",
+                r.name,
+                fmt_labels(&r.labels, None),
+                fmt_value(r.sum)
+            ));
+            out.push_str(&format!("{}_count{} {}\n", r.name, fmt_labels(&r.labels, None), r.count));
+        }
+        // the live difficulty cells, flattened into gauge families
+        let fams: [(&str, &str, fn(&Cell) -> f64); 7] = [
+            ("smoothrot_live_difficulty", "gauge", |c| c.mean),
+            ("smoothrot_live_difficulty_max", "gauge", |c| c.max),
+            ("smoothrot_live_difficulty_ewma", "gauge", |c| c.ewma),
+            ("smoothrot_plan_difficulty", "gauge", |c| c.plan),
+            ("smoothrot_difficulty_drift", "gauge", |c| c.drift()),
+            ("smoothrot_executed_error_mean", "gauge", |c| c.err_mean),
+            ("smoothrot_executed_error_max", "gauge", |c| c.err_max),
+        ];
+        for (name, kind, pick) in fams {
+            if self.difficulty.is_empty() {
+                continue;
+            }
+            out.push_str(&format!("# TYPE {name} {kind}\n"));
+            for r in &self.difficulty {
+                let labels = vec![
+                    ("layer".to_string(), r.layer.to_string()),
+                    ("module".to_string(), r.module.clone()),
+                ];
+                out.push_str(&format!(
+                    "{name}{} {}\n",
+                    fmt_labels(&labels, None),
+                    fmt_value(pick(&r.cell))
+                ));
+            }
+        }
+        if !self.difficulty.is_empty() {
+            out.push_str("# TYPE smoothrot_difficulty_samples_total counter\n");
+            for r in &self.difficulty {
+                let labels = vec![
+                    ("layer".to_string(), r.layer.to_string()),
+                    ("module".to_string(), r.module.clone()),
+                ];
+                out.push_str(&format!(
+                    "smoothrot_difficulty_samples_total{} {}\n",
+                    fmt_labels(&labels, None),
+                    r.cell.count
+                ));
+            }
+        }
+        out
+    }
+}
+
+impl Default for Snapshot {
+    fn default() -> Self {
+        Snapshot::new()
+    }
+}
+
+fn type_line(out: &mut String, last: &mut String, name: &str, kind: &str) {
+    if last != name {
+        out.push_str(&format!("# TYPE {name} {kind}\n"));
+        *last = name.to_string();
+    }
+}
+
+fn escape_label(v: &str) -> String {
+    v.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+}
+
+fn fmt_labels(labels: &Labels, extra: Option<(&str, &str)>) -> String {
+    if labels.is_empty() && extra.is_none() {
+        return String::new();
+    }
+    let mut parts: Vec<String> =
+        labels.iter().map(|(k, v)| format!("{k}=\"{}\"", escape_label(v))).collect();
+    if let Some((k, v)) = extra {
+        parts.push(format!("{k}=\"{}\"", escape_label(v)));
+    }
+    format!("{{{}}}", parts.join(","))
+}
+
+/// Prometheus sample value formatting: Rust's shortest-roundtrip
+/// `Display` for finite values, the exposition-format spellings for the
+/// rest.
+fn fmt_value(v: f64) -> String {
+    if v.is_nan() {
+        "NaN".into()
+    } else if v == f64::INFINITY {
+        "+Inf".into()
+    } else if v == f64::NEG_INFINITY {
+        "-Inf".into()
+    } else {
+        v.to_string()
+    }
+}
+
+/// One parsed Prometheus sample line.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PromSample {
+    pub name: String,
+    pub labels: Labels,
+    pub value: f64,
+}
+
+/// Minimal Prometheus text-format parser: enough to round-trip
+/// [`Snapshot::to_prometheus`] output (comment lines skipped, labels
+/// returned sorted).  Used by the telemetry proptests to pin that the
+/// exposition is machine-readable, not just greppable.
+pub fn parse_prometheus(text: &str) -> Result<Vec<PromSample>, String> {
+    let mut out = Vec::new();
+    for (ln, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let err = |what: &str| format!("prometheus line {}: {what}: {line}", ln + 1);
+        let (name, rest) = match line.find(['{', ' ']) {
+            Some(i) => (line[..i].to_string(), &line[i..]),
+            None => return Err(err("missing value")),
+        };
+        if name.is_empty() || !name.chars().all(|c| c.is_ascii_alphanumeric() || c == '_') {
+            return Err(err("invalid metric name"));
+        }
+        let (labels, value_str) = if let Some(rest) = rest.strip_prefix('{') {
+            let close = rest.find('}').ok_or_else(|| err("unterminated labels"))?;
+            let mut labels: Labels = Vec::new();
+            let body = &rest[..close];
+            if !body.is_empty() {
+                for pair in body.split(',') {
+                    let (k, v) = pair.split_once('=').ok_or_else(|| err("bad label pair"))?;
+                    let v = v
+                        .strip_prefix('"')
+                        .and_then(|v| v.strip_suffix('"'))
+                        .ok_or_else(|| err("unquoted label value"))?;
+                    let v = v.replace("\\n", "\n").replace("\\\"", "\"").replace("\\\\", "\\");
+                    labels.push((k.trim().to_string(), v));
+                }
+            }
+            labels.sort();
+            (labels, rest[close + 1..].trim())
+        } else {
+            (Vec::new(), rest.trim())
+        };
+        let value = match value_str {
+            "NaN" => f64::NAN,
+            "+Inf" => f64::INFINITY,
+            "-Inf" => f64::NEG_INFINITY,
+            s => s.parse::<f64>().map_err(|_| err("bad sample value"))?,
+        };
+        out.push(PromSample { name, labels, value });
+    }
+    Ok(out)
+}
+
+/// The Prometheus sibling of a JSON snapshot path (`m.json` →
+/// `m.prom`).
+pub fn prom_path(path: &Path) -> PathBuf {
+    path.with_extension("prom")
+}
+
+fn write_atomic(path: &Path, text: &str) -> Result<(), String> {
+    let tmp = path.with_extension("tmp");
+    std::fs::write(&tmp, text).map_err(|e| format!("write {}: {e}", tmp.display()))?;
+    std::fs::rename(&tmp, path)
+        .map_err(|e| format!("rename {} -> {}: {e}", tmp.display(), path.display()))
+}
+
+/// Persist both renderings atomically (tmp + rename, the plan-artifact
+/// discipline): the JSON snapshot at `path`, the Prometheus text at
+/// [`prom_path`].  Returns the Prometheus path.
+pub fn write_files(snap: &Snapshot, path: &Path) -> Result<PathBuf, String> {
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir).map_err(|e| format!("mkdir {}: {e}", dir.display()))?;
+        }
+    }
+    write_atomic(path, &snap.to_json_string())?;
+    let pp = prom_path(path);
+    write_atomic(&pp, &snap.to_prometheus())?;
+    Ok(pp)
+}
+
+fn parse_num_label(labels: &Labels, key: &str) -> Option<usize> {
+    labels.iter().find(|(k, _)| k == key).and_then(|(_, v)| v.parse().ok())
+}
+
+/// Render the human serve summary **from** a snapshot — the exact
+/// lines [`crate::serve::ServeMetrics::summary`] prints, sourced from
+/// the same rows the exporters write, so the console and the exported
+/// files cannot disagree.
+pub fn render_summary(s: &Snapshot) -> String {
+    let c = |name: &str| s.counter(name, &[]).unwrap_or(0);
+    let completed = c("smoothrot_requests_completed_total");
+    let wall_us = s.gauge("smoothrot_wall_microseconds", &[]).unwrap_or(0.0);
+    let throughput =
+        if wall_us <= 0.0 { 0.0 } else { completed as f64 / (wall_us / 1e6) };
+    let batches = c("smoothrot_batches_total");
+    let mean_batch = if batches == 0 { 0.0 } else { completed as f64 / batches as f64 };
+    let hits = c("smoothrot_rotation_cache_hits_total");
+    let misses = c("smoothrot_rotation_cache_misses_total");
+    let hit_rate =
+        if hits + misses == 0 { 0.0 } else { hits as f64 / (hits + misses) as f64 };
+    let lat = |q: &str| {
+        s.gauge("smoothrot_latency_microseconds", &[("quantile", q)]).unwrap_or(0.0)
+    };
+    let mut out = format!(
+        "throughput {:.1} req/s | latency ms p50 {:.2} p95 {:.2} p99 {:.2} p999 {:.2}\n\
+         batches {} (mean size {:.2}, max {}) | steals {} | rejected {} | errors {} | \
+         rot-cache {} hit / {} miss ({:.0}%)\n",
+        throughput,
+        lat("p50") / 1e3,
+        lat("p95") / 1e3,
+        lat("p99") / 1e3,
+        lat("p999") / 1e3,
+        batches,
+        mean_batch,
+        s.gauge("smoothrot_batch_size_max", &[]).unwrap_or(0.0) as u64,
+        c("smoothrot_steals_total"),
+        c("smoothrot_requests_rejected_total"),
+        c("smoothrot_request_errors_total"),
+        hits,
+        misses,
+        100.0 * hit_rate,
+    );
+    // per-runner lines, in numeric runner order (label values are
+    // strings, so "10" would sort before "2" lexically)
+    let mut runners: Vec<usize> = s
+        .counters
+        .iter()
+        .filter(|r| r.name == "smoothrot_runner_batches_total")
+        .filter_map(|r| parse_num_label(&r.labels, "runner"))
+        .collect();
+    runners.sort_unstable();
+    for i in runners {
+        let id = i.to_string();
+        let l: [(&str, &str); 1] = [("runner", &id)];
+        let rc = |name: &str| s.counter(name, &l).unwrap_or(0);
+        let rq = |q: &str| {
+            s.gauge("smoothrot_runner_latency_microseconds", &[("quantile", q), ("runner", &id)])
+                .unwrap_or(0.0)
+        };
+        out.push_str(&format!(
+            "  runner {i}: routed {} batches {} steals {} | p50 {:.2} ms p95 {:.2} ms\n",
+            rc("smoothrot_runner_routed_total"),
+            rc("smoothrot_runner_batches_total"),
+            rc("smoothrot_runner_steals_total"),
+            rq("p50") / 1e3,
+            rq("p95") / 1e3,
+        ));
+    }
+    let mut tenants: Vec<usize> = s
+        .counters
+        .iter()
+        .filter(|r| r.name == "smoothrot_tenant_submitted_total")
+        .filter_map(|r| parse_num_label(&r.labels, "tenant"))
+        .collect();
+    tenants.sort_unstable();
+    for t in tenants {
+        let id = t.to_string();
+        let l: [(&str, &str); 1] = [("tenant", &id)];
+        out.push_str(&format!(
+            "  tenant {t}: submitted {} completed {} rejected {}\n",
+            s.counter("smoothrot_tenant_submitted_total", &l).unwrap_or(0),
+            s.counter("smoothrot_tenant_completed_total", &l).unwrap_or(0),
+            s.counter("smoothrot_tenant_rejected_total", &l).unwrap_or(0),
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_snapshot() -> Snapshot {
+        let mut s = Snapshot::new();
+        s.counters.push(CounterRow { name: "a_total".into(), labels: vec![], value: 3 });
+        s.counters.push(CounterRow {
+            name: "b_total".into(),
+            labels: vec![("tenant".into(), "1".into())],
+            value: 7,
+        });
+        s.gauges.push(GaugeRow { name: "g".into(), labels: vec![], value: 1.25 });
+        s.histograms.push(HistogramRow {
+            name: "h_seconds".into(),
+            labels: vec![],
+            le: vec![0.001, 0.01],
+            counts: vec![2, 1, 1],
+            sum: 0.0155,
+            count: 4,
+        });
+        s.difficulty.push(DifficultyRow {
+            module: "k_proj".into(),
+            layer: 0,
+            cell: Cell {
+                count: 5,
+                mean: 2.0,
+                max: 3.0,
+                ewma: 2.1,
+                err_mean: 0.5,
+                err_max: 0.9,
+                plan: 1.5,
+            },
+        });
+        s
+    }
+
+    #[test]
+    fn json_round_trips() {
+        let s = sample_snapshot();
+        let text = s.to_json_string();
+        let back = Snapshot::parse(&text).unwrap();
+        assert_eq!(back, s);
+    }
+
+    #[test]
+    fn newer_schema_versions_are_rejected() {
+        let s = sample_snapshot();
+        let text = s.to_json_string();
+        let bumped = text.replacen(
+            &format!("\"version\": {TELEMETRY_SCHEMA_VERSION}"),
+            &format!("\"version\": {}", TELEMETRY_SCHEMA_VERSION + 1),
+            1,
+        );
+        assert_ne!(text, bumped, "fixture must actually bump the version");
+        let err = Snapshot::parse(&bumped).unwrap_err();
+        assert!(err.contains("newer than supported"), "{err}");
+        let zeroed = text.replacen(
+            &format!("\"version\": {TELEMETRY_SCHEMA_VERSION}"),
+            "\"version\": 0",
+            1,
+        );
+        assert!(Snapshot::parse(&zeroed).is_err());
+    }
+
+    #[test]
+    fn prometheus_has_type_lines_and_cumulative_buckets() {
+        let text = sample_snapshot().to_prometheus();
+        assert!(text.contains("# TYPE a_total counter"));
+        assert!(text.contains("# TYPE h_seconds histogram"));
+        assert!(text.contains("h_seconds_bucket{le=\"0.001\"} 2"));
+        assert!(text.contains("h_seconds_bucket{le=\"0.01\"} 3"));
+        assert!(text.contains("h_seconds_bucket{le=\"+Inf\"} 4"));
+        assert!(text.contains("h_seconds_sum 0.0155"));
+        assert!(text.contains("h_seconds_count 4"));
+        assert!(text.contains("b_total{tenant=\"1\"} 7"));
+        assert!(text.contains("smoothrot_live_difficulty{layer=\"0\",module=\"k_proj\"} 2"));
+        assert!(text.contains("smoothrot_difficulty_drift{layer=\"0\",module=\"k_proj\"} 0.5"));
+    }
+
+    #[test]
+    fn prometheus_parses_back() {
+        let s = sample_snapshot();
+        let samples = parse_prometheus(&s.to_prometheus()).unwrap();
+        let find = |name: &str| samples.iter().find(|p| p.name == name).unwrap();
+        assert_eq!(find("a_total").value, 3.0);
+        assert_eq!(find("h_seconds_count").value, 4.0);
+        let bucket_inf = samples
+            .iter()
+            .find(|p| {
+                p.name == "h_seconds_bucket"
+                    && p.labels.iter().any(|(k, v)| k == "le" && v == "+Inf")
+            })
+            .unwrap();
+        assert_eq!(bucket_inf.value, 4.0);
+        assert!(parse_prometheus("not a metric line !").is_err());
+    }
+
+    #[test]
+    fn write_files_is_atomic_and_paired() {
+        let dir = std::env::temp_dir().join("smoothrot_telemetry_export_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("m.json");
+        let s = sample_snapshot();
+        let pp = write_files(&s, &path).unwrap();
+        assert_eq!(pp, dir.join("m.prom"));
+        let back = Snapshot::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(back, s);
+        assert!(std::fs::read_to_string(&pp).unwrap().contains("# TYPE a_total counter"));
+        assert!(!dir.join("m.tmp").exists(), "tmp file must be renamed away");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn render_summary_reads_the_snapshot_rows() {
+        let mut s = Snapshot::new();
+        let mut c = |name: &str, labels: Labels, v: u64| {
+            s.counters.push(CounterRow { name: name.into(), labels, value: v })
+        };
+        c("smoothrot_requests_completed_total", vec![], 100);
+        c("smoothrot_batches_total", vec![], 25);
+        c("smoothrot_rotation_cache_hits_total", vec![], 9);
+        c("smoothrot_rotation_cache_misses_total", vec![], 1);
+        c("smoothrot_runner_batches_total", vec![("runner".into(), "0".into())], 25);
+        c("smoothrot_runner_routed_total", vec![("runner".into(), "0".into())], 25);
+        c("smoothrot_runner_steals_total", vec![("runner".into(), "0".into())], 0);
+        c("smoothrot_tenant_submitted_total", vec![("tenant".into(), "2".into())], 100);
+        c("smoothrot_tenant_completed_total", vec![("tenant".into(), "2".into())], 100);
+        s.gauges.push(GaugeRow {
+            name: "smoothrot_wall_microseconds".into(),
+            labels: vec![],
+            value: 2_000_000.0,
+        });
+        s.gauges.push(GaugeRow {
+            name: "smoothrot_latency_microseconds".into(),
+            labels: vec![("quantile".into(), "p50".into())],
+            value: 1500.0,
+        });
+        let text = render_summary(&s);
+        assert!(text.starts_with("throughput 50.0 req/s | latency ms p50 1.50"), "{text}");
+        assert!(text.contains("batches 25 (mean size 4.00, max 0)"), "{text}");
+        assert!(text.contains("rot-cache 9 hit / 1 miss (90%)"), "{text}");
+        assert!(text.contains("  runner 0: routed 25 batches 25 steals 0"), "{text}");
+        assert!(text.contains("  tenant 2: submitted 100 completed 100 rejected 0"), "{text}");
+    }
+}

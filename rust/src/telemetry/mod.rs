@@ -1,0 +1,261 @@
+//! Serving telemetry: typed metric registry, per-stage hot-path timers,
+//! live quantization-difficulty tracking, and snapshot exporters.
+//!
+//! The subsystem has one composition point, [`Telemetry`]:
+//!
+//! * a [`registry::Registry`] of counters / gauges / histograms,
+//! * the six per-stage latency histograms ([`timers::StageTimers`]),
+//! * the live per-(module, layer) difficulty tracker
+//!   ([`difficulty::DifficultyTracker`]),
+//! * **collectors** — closures that read externally-owned counters
+//!   (e.g. [`crate::calib::registry::PlanRegistry`]'s atomics) into the
+//!   snapshot at capture time, so existing subsystems keep their own
+//!   state and the snapshot still sees everything.
+//!
+//! [`Telemetry::snapshot`] captures all of it into one
+//! [`export::Snapshot`], off which every rendering hangs: Prometheus
+//! text, schema-versioned JSON, and the human serve summary
+//! ([`export::render_summary`]) — one source, three views, no drift
+//! between them.
+//!
+//! Hot-path instrumentation stays out of band: kernels open stage spans
+//! and the executor reports difficulty through thread-local sinks that
+//! [`Telemetry::scope`] installs around a dispatch, so code that never
+//! runs under telemetry pays one thread-local read per site.
+
+pub mod difficulty;
+pub mod export;
+pub mod registry;
+pub mod timers;
+
+use std::sync::{Arc, Mutex};
+
+pub use difficulty::DifficultyTracker;
+pub use export::{render_summary, Snapshot, TELEMETRY_SCHEMA_VERSION};
+pub use registry::Registry;
+pub use timers::{Stage, StageTimers};
+
+type Collector = Box<dyn Fn(&mut Snapshot) + Send + Sync>;
+
+/// The composed telemetry subsystem: registry + stage timers +
+/// difficulty tracker + snapshot collectors.
+pub struct Telemetry {
+    registry: Registry,
+    timers: Arc<StageTimers>,
+    difficulty: Arc<DifficultyTracker>,
+    collectors: Mutex<Vec<Collector>>,
+}
+
+impl Telemetry {
+    /// A fresh telemetry instance with the six stage histograms already
+    /// registered.
+    pub fn new() -> Arc<Telemetry> {
+        let registry = Registry::new();
+        let timers = StageTimers::new(&registry);
+        Arc::new(Telemetry {
+            registry,
+            timers,
+            difficulty: DifficultyTracker::new(),
+            collectors: Mutex::new(Vec::new()),
+        })
+    }
+
+    /// The metric registry (register serving counters/gauges here).
+    pub fn registry(&self) -> &Registry {
+        &self.registry
+    }
+
+    /// The per-stage timers (installed as a thread-local sink by
+    /// [`Telemetry::scope`]).
+    pub fn timers(&self) -> &Arc<StageTimers> {
+        &self.timers
+    }
+
+    /// The live difficulty tracker.
+    pub fn difficulty(&self) -> &Arc<DifficultyTracker> {
+        &self.difficulty
+    }
+
+    /// Register a snapshot collector: a closure run at every
+    /// [`Telemetry::snapshot`] that appends rows read from
+    /// externally-owned state.  Rows are re-sorted after collection, so
+    /// collector registration order never shows in a snapshot.
+    pub fn add_collector(&self, f: impl Fn(&mut Snapshot) + Send + Sync + 'static) {
+        let mut guard = match self.collectors.lock() {
+            Ok(g) => g,
+            Err(p) => p.into_inner(),
+        };
+        guard.push(Box::new(f));
+    }
+
+    /// Capture everything into one deterministic [`Snapshot`]: registry
+    /// rows, collector rows, difficulty cells — sorted by
+    /// `(name, labels)` regardless of where a row came from.
+    pub fn snapshot(&self) -> Snapshot {
+        let mut snap = Snapshot::new();
+        self.registry.snapshot_into(&mut snap);
+        {
+            let guard = match self.collectors.lock() {
+                Ok(g) => g,
+                Err(p) => p.into_inner(),
+            };
+            for c in guard.iter() {
+                c(&mut snap);
+            }
+        }
+        snap.counters.sort_by(|a, b| (&a.name, &a.labels).cmp(&(&b.name, &b.labels)));
+        snap.gauges.sort_by(|a, b| (&a.name, &a.labels).cmp(&(&b.name, &b.labels)));
+        snap.histograms.sort_by(|a, b| (&a.name, &a.labels).cmp(&(&b.name, &b.labels)));
+        snap.difficulty = self.difficulty.rows();
+        snap
+    }
+
+    /// Run `f` with this telemetry's stage-timer and difficulty sinks
+    /// installed on the current thread (the serving worker wraps each
+    /// executor dispatch in this).
+    pub fn scope<R>(self: &Arc<Self>, f: impl FnOnce() -> R) -> R {
+        timers::with_sink(Some(Arc::clone(&self.timers)), || {
+            difficulty::with_sink(Some(Arc::clone(&self.difficulty)), f)
+        })
+    }
+}
+
+impl std::fmt::Debug for Telemetry {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Telemetry").field("registry", &self.registry).finish_non_exhaustive()
+    }
+}
+
+/// Run `f` under `t`'s sinks when telemetry is on, plainly when off —
+/// the one-liner call sites use so the disabled path stays branchless
+/// beyond this check.
+pub fn scoped<R>(t: Option<&Arc<Telemetry>>, f: impl FnOnce() -> R) -> R {
+    match t {
+        Some(t) => t.scope(f),
+        None => f(),
+    }
+}
+
+/// A snapshot collector reading [`PlanRegistry`]'s scattered atomic
+/// counters (plan coverage, int8 execution, batch fusion, hot-reload
+/// bookkeeping) into every snapshot, without moving their ownership.
+///
+/// [`PlanRegistry`]: crate::calib::registry::PlanRegistry
+pub fn plan_registry_collector(
+    reg: &Arc<crate::calib::registry::PlanRegistry>,
+) -> impl Fn(&mut Snapshot) + Send + Sync + 'static {
+    use export::{CounterRow, GaugeRow};
+    let reg = Arc::clone(reg);
+    move |snap: &mut Snapshot| {
+        let (planned, fallback) = reg.stats();
+        let (executed, degraded) = reg.int8_stats();
+        let counters = [
+            ("smoothrot_plan_planned_total", planned),
+            ("smoothrot_plan_fallback_total", fallback),
+            ("smoothrot_int8_executed_total", executed),
+            ("smoothrot_int8_degraded_total", degraded),
+            ("smoothrot_batch_fused_total", reg.batch_fused()),
+            ("smoothrot_plan_reload_skipped_total", reg.reload_skipped_identical()),
+        ];
+        for (name, value) in counters {
+            snap.counters.push(CounterRow { name: name.into(), labels: Vec::new(), value });
+        }
+        snap.gauges.push(GaugeRow {
+            name: "smoothrot_plan_generation".into(),
+            labels: Vec::new(),
+            value: reg.generation() as f64,
+        });
+        snap.gauges.push(GaugeRow {
+            name: "smoothrot_plan_entries".into(),
+            labels: Vec::new(),
+            value: reg.len() as f64,
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_composes_registry_collectors_and_difficulty() {
+        let t = Telemetry::new();
+        t.registry().counter("zz_total", &[]).add(3);
+        t.add_collector(|snap| {
+            snap.counters.push(export::CounterRow {
+                name: "aa_total".into(),
+                labels: Vec::new(),
+                value: 7,
+            });
+        });
+        t.difficulty().observe("k_proj", 2, 1.5, 0.25, 1.0);
+        let s = t.snapshot();
+        assert_eq!(s.counter("zz_total", &[]), Some(3));
+        assert_eq!(s.counter("aa_total", &[]), Some(7));
+        // collector rows are merged into sorted order, not appended
+        assert_eq!(s.counters[0].name, "aa_total");
+        assert_eq!(s.difficulty.len(), 1);
+        assert_eq!(s.difficulty[0].layer, 2);
+        // the six stage histograms exist from birth
+        for stage in Stage::ALL {
+            assert!(s.histogram(stage.metric_name()).is_some(), "{}", stage.metric_name());
+        }
+    }
+
+    #[test]
+    fn scope_installs_both_sinks() {
+        let t = Telemetry::new();
+        t.scope(|| {
+            drop(timers::span(Stage::Igemm));
+            difficulty::observe("k_proj", 0, 2.0, 0.5, 1.5);
+        });
+        let s = t.snapshot();
+        assert_eq!(s.histogram(Stage::Igemm.metric_name()).unwrap().count, 1);
+        assert_eq!(s.difficulty.len(), 1);
+        // outside the scope both sinks are gone
+        drop(timers::span(Stage::Igemm));
+        difficulty::observe("k_proj", 0, 9.0, 9.0, 9.0);
+        let s2 = t.snapshot();
+        assert_eq!(s2.histogram(Stage::Igemm.metric_name()).unwrap().count, 1);
+        assert_eq!(s2.difficulty[0].cell.count, 1);
+    }
+
+    #[test]
+    fn scoped_runs_plainly_without_telemetry() {
+        assert_eq!(scoped(None, || 42), 42);
+        let t = Telemetry::new();
+        assert_eq!(scoped(Some(&t), || 42), 42);
+    }
+
+    #[test]
+    fn plan_registry_counters_appear_in_snapshots() {
+        use crate::calib::plan::{PlanEntry, Provenance, QuantPlan};
+        use crate::transforms::Mode;
+        let plan = QuantPlan {
+            provenance: Provenance::default(),
+            entries: vec![PlanEntry {
+                module: "k_proj".into(),
+                layer: 0,
+                bits: 4,
+                c_in: 8,
+                mode: Mode::None,
+                alpha: 0.5,
+                predicted_error: 1.0,
+                difficulty_before: 2.0,
+                difficulty_after: 1.0,
+                smooth: None,
+            }],
+        };
+        let reg = Arc::new(crate::calib::registry::PlanRegistry::from_plan(&plan).unwrap());
+        let t = Telemetry::new();
+        t.add_collector(plan_registry_collector(&reg));
+        reg.lookup("k_proj", 0, 4, 8).unwrap();
+        reg.lookup("o_proj", 0, 4, 8);
+        reg.note_int8(true);
+        let s = t.snapshot();
+        assert_eq!(s.counter("smoothrot_plan_planned_total", &[]), Some(1));
+        assert_eq!(s.counter("smoothrot_plan_fallback_total", &[]), Some(1));
+        assert_eq!(s.counter("smoothrot_int8_executed_total", &[]), Some(1));
+        assert_eq!(s.gauge("smoothrot_plan_entries", &[]), Some(1.0));
+    }
+}

@@ -1,0 +1,377 @@
+//! Typed metric registry: counters, gauges and fixed-boundary
+//! histograms behind stable `(name, labels)` keys.
+//!
+//! Three metric kinds, chosen to mirror the Prometheus data model so
+//! the exporters ([`crate::telemetry::export`]) are a direct rendering:
+//!
+//! * [`Counter`] — monotonic `u64`, sharded across a fixed number of
+//!   atomic cells so concurrent writers from different serving workers
+//!   rarely contend on one cache line.  Reading sums the shards, so the
+//!   value is **exact** and independent of how many threads wrote it —
+//!   the worker-count-invariance property the snapshot tests pin.
+//! * [`Gauge`] — a last-write-wins `f64` (stored as atomic bits).
+//! * [`Histogram`] — fixed upper-bound buckets (log-scaled latency
+//!   buckets by default, [`latency_buckets`]), per-shard atomic bucket
+//!   counts, and a **sum kept in integer nanoseconds** so the total is
+//!   an exact integer sum regardless of observation order or thread
+//!   count — no float-accumulation nondeterminism in snapshots.
+//!
+//! Registration is get-or-create: asking for the same `(name, labels)`
+//! twice returns the same `Arc`, so call sites never coordinate.  The
+//! hot path touches only its own shard's atomics; the registry map lock
+//! is taken at registration and snapshot time only.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::telemetry::export::{CounterRow, GaugeRow, HistogramRow, Snapshot};
+
+/// Number of atomic shards per counter / histogram.  A small power of
+/// two: enough that a handful of serving workers land on distinct
+/// cells, cheap enough that snapshot sums stay trivial.
+pub const SHARDS: usize = 16;
+
+static NEXT_SHARD: AtomicUsize = AtomicUsize::new(0);
+
+thread_local! {
+    /// Each thread picks one shard index round-robin at first use and
+    /// keeps it for life — writers spread out, reads stay exact sums.
+    static MY_SHARD: usize = NEXT_SHARD.fetch_add(1, Ordering::Relaxed) % SHARDS;
+}
+
+fn my_shard() -> usize {
+    MY_SHARD.with(|s| *s)
+}
+
+/// Monotonic counter, sharded across [`SHARDS`] atomic cells.
+#[derive(Debug)]
+pub struct Counter {
+    shards: [AtomicU64; SHARDS],
+}
+
+impl Counter {
+    /// A fresh zero counter (usually obtained via
+    /// [`Registry::counter`]).
+    pub fn new() -> Counter {
+        Counter { shards: std::array::from_fn(|_| AtomicU64::new(0)) }
+    }
+
+    /// Add 1.
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    /// Add `n`.
+    pub fn add(&self, n: u64) {
+        self.shards[my_shard()].fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Exact total across all shards.  Integer addition commutes, so
+    /// the result does not depend on which thread incremented what.
+    pub fn value(&self) -> u64 {
+        self.shards.iter().map(|s| s.load(Ordering::Relaxed)).sum()
+    }
+}
+
+impl Default for Counter {
+    fn default() -> Self {
+        Counter::new()
+    }
+}
+
+/// Last-write-wins `f64` gauge (atomic bit store).
+#[derive(Debug, Default)]
+pub struct Gauge {
+    bits: AtomicU64,
+}
+
+impl Gauge {
+    /// A fresh zero gauge (usually obtained via [`Registry::gauge`]).
+    pub fn new() -> Gauge {
+        Gauge { bits: AtomicU64::new(0f64.to_bits()) }
+    }
+
+    /// Set the gauge.
+    pub fn set(&self, v: f64) {
+        self.bits.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    /// Current value.
+    pub fn value(&self) -> f64 {
+        f64::from_bits(self.bits.load(Ordering::Relaxed))
+    }
+}
+
+/// Fixed-boundary histogram of durations in seconds.
+///
+/// `bounds` are strictly increasing finite upper bounds; every
+/// observation lands in the first bucket whose bound it does not
+/// exceed, or the implicit `+Inf` overflow bucket.  Counts are sharded
+/// like [`Counter`]; the sum is accumulated in integer **nanoseconds**
+/// (one atomic add per observation), so bucket counts and the sum are
+/// exact integer totals — deterministic at any worker count.
+#[derive(Debug)]
+pub struct Histogram {
+    bounds: Vec<f64>,
+    /// `SHARDS` rows of `bounds.len() + 1` bucket cells (last = +Inf).
+    counts: Vec<AtomicU64>,
+    sum_ns: AtomicU64,
+}
+
+impl Histogram {
+    /// A fresh histogram over `bounds` (usually obtained via
+    /// [`Registry::histogram`]).  Non-increasing or non-finite bounds
+    /// are rejected.
+    pub fn new(bounds: &[f64]) -> Result<Histogram, String> {
+        for w in bounds.windows(2) {
+            if !(w[0] < w[1]) {
+                return Err(format!("histogram bounds not increasing: {} then {}", w[0], w[1]));
+            }
+        }
+        if bounds.iter().any(|b| !b.is_finite()) {
+            return Err("histogram bounds must be finite (the +Inf bucket is implicit)".into());
+        }
+        let cells = SHARDS * (bounds.len() + 1);
+        Ok(Histogram {
+            bounds: bounds.to_vec(),
+            counts: (0..cells).map(|_| AtomicU64::new(0)).collect(),
+            sum_ns: AtomicU64::new(0),
+        })
+    }
+
+    /// Upper bucket bounds (without the implicit `+Inf`).
+    pub fn bounds(&self) -> &[f64] {
+        &self.bounds
+    }
+
+    /// Record a duration given in integer nanoseconds.
+    pub fn observe_ns(&self, ns: u64) {
+        let secs = ns as f64 / 1e9;
+        let bucket = self.bounds.partition_point(|&b| b < secs);
+        let row = my_shard() * (self.bounds.len() + 1);
+        self.counts[row + bucket].fetch_add(1, Ordering::Relaxed);
+        self.sum_ns.fetch_add(ns, Ordering::Relaxed);
+    }
+
+    /// Record a duration in seconds (converted to whole nanoseconds;
+    /// negative or non-finite observations count as zero time).
+    pub fn observe_secs(&self, secs: f64) {
+        let ns = if secs.is_finite() && secs > 0.0 { (secs * 1e9).round() as u64 } else { 0 };
+        self.observe_ns(ns);
+    }
+
+    /// Per-bucket counts (length `bounds.len() + 1`; last = +Inf), the
+    /// exact shard-summed totals.
+    pub fn bucket_counts(&self) -> Vec<u64> {
+        let width = self.bounds.len() + 1;
+        let mut out = vec![0u64; width];
+        for (i, c) in self.counts.iter().enumerate() {
+            out[i % width] += c.load(Ordering::Relaxed);
+        }
+        out
+    }
+
+    /// Total observations.
+    pub fn count(&self) -> u64 {
+        self.bucket_counts().iter().sum()
+    }
+
+    /// Exact nanosecond total of all observations.
+    pub fn sum_ns(&self) -> u64 {
+        self.sum_ns.load(Ordering::Relaxed)
+    }
+
+    /// Sum in seconds (`sum_ns / 1e9`).
+    pub fn sum_secs(&self) -> f64 {
+        self.sum_ns() as f64 / 1e9
+    }
+}
+
+/// Log-scaled latency bucket bounds: powers of two from 1 µs to ~8 s
+/// (24 buckets plus the implicit `+Inf` overflow).
+pub fn latency_buckets() -> Vec<f64> {
+    (0..24).map(|k| 1e-6 * (1u64 << k) as f64).collect()
+}
+
+/// Sorted label pairs — the canonical half of a metric key.
+pub type Labels = Vec<(String, String)>;
+
+fn canon_labels(labels: &[(&str, &str)]) -> Labels {
+    let mut v: Labels =
+        labels.iter().map(|(k, val)| (k.to_string(), val.to_string())).collect();
+    v.sort();
+    v
+}
+
+type Key = (String, Labels);
+
+fn lock<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    match m.lock() {
+        Ok(g) => g,
+        Err(p) => p.into_inner(),
+    }
+}
+
+/// Typed metric registry: get-or-create handles keyed by
+/// `(name, sorted labels)`, snapshotted in deterministic order.
+#[derive(Debug, Default)]
+pub struct Registry {
+    counters: Mutex<std::collections::BTreeMap<Key, Arc<Counter>>>,
+    gauges: Mutex<std::collections::BTreeMap<Key, Arc<Gauge>>>,
+    hists: Mutex<std::collections::BTreeMap<Key, Arc<Histogram>>>,
+}
+
+impl Registry {
+    /// An empty registry.
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    /// The counter registered under `(name, labels)` (created on first
+    /// use).
+    pub fn counter(&self, name: &str, labels: &[(&str, &str)]) -> Arc<Counter> {
+        let key = (name.to_string(), canon_labels(labels));
+        Arc::clone(lock(&self.counters).entry(key).or_insert_with(|| Arc::new(Counter::new())))
+    }
+
+    /// The gauge registered under `(name, labels)`.
+    pub fn gauge(&self, name: &str, labels: &[(&str, &str)]) -> Arc<Gauge> {
+        let key = (name.to_string(), canon_labels(labels));
+        Arc::clone(lock(&self.gauges).entry(key).or_insert_with(|| Arc::new(Gauge::new())))
+    }
+
+    /// The histogram registered under `(name, labels)`.  The first
+    /// registration fixes the bucket bounds; later calls return the
+    /// existing histogram regardless of the bounds they pass (one
+    /// metric name = one bucket layout, as in Prometheus).
+    pub fn histogram(
+        &self,
+        name: &str,
+        labels: &[(&str, &str)],
+        bounds: &[f64],
+    ) -> Result<Arc<Histogram>, String> {
+        let key = (name.to_string(), canon_labels(labels));
+        let mut map = lock(&self.hists);
+        if let Some(h) = map.get(&key) {
+            return Ok(Arc::clone(h));
+        }
+        let h = Arc::new(Histogram::new(bounds)?);
+        map.insert(key, Arc::clone(&h));
+        Ok(h)
+    }
+
+    /// Append every registered metric's current value to `snap`, in
+    /// `(name, labels)` order.  Deterministic: the map is ordered and
+    /// every value is an exact shard sum (or a single gauge cell).
+    pub fn snapshot_into(&self, snap: &mut Snapshot) {
+        for ((name, labels), c) in lock(&self.counters).iter() {
+            snap.counters.push(CounterRow {
+                name: name.clone(),
+                labels: labels.clone(),
+                value: c.value(),
+            });
+        }
+        for ((name, labels), g) in lock(&self.gauges).iter() {
+            snap.gauges.push(GaugeRow {
+                name: name.clone(),
+                labels: labels.clone(),
+                value: g.value(),
+            });
+        }
+        for ((name, labels), h) in lock(&self.hists).iter() {
+            snap.histograms.push(HistogramRow {
+                name: name.clone(),
+                labels: labels.clone(),
+                le: h.bounds().to_vec(),
+                counts: h.bucket_counts(),
+                sum: h.sum_secs(),
+                count: h.count(),
+            });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_sums_exactly_across_threads() {
+        let reg = Registry::new();
+        let c = reg.counter("reqs_total", &[]);
+        let threads: Vec<_> = (0..4)
+            .map(|_| {
+                let c = Arc::clone(&c);
+                std::thread::spawn(move || {
+                    for _ in 0..1000 {
+                        c.inc();
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        assert_eq!(c.value(), 4000);
+        // get-or-create: same key, same cell
+        reg.counter("reqs_total", &[]).add(5);
+        assert_eq!(c.value(), 4005);
+    }
+
+    #[test]
+    fn labels_are_canonicalized() {
+        let reg = Registry::new();
+        let a = reg.counter("x", &[("b", "2"), ("a", "1")]);
+        let b = reg.counter("x", &[("a", "1"), ("b", "2")]);
+        a.inc();
+        assert_eq!(b.value(), 1, "label order must not split the key");
+    }
+
+    #[test]
+    fn histogram_buckets_and_sum_are_exact() {
+        let h = Histogram::new(&[0.001, 0.01, 0.1]).unwrap();
+        h.observe_secs(0.0005); // bucket 0
+        h.observe_secs(0.005); // bucket 1
+        h.observe_secs(0.05); // bucket 2
+        h.observe_secs(5.0); // +Inf
+        h.observe_ns(1_000_000); // exactly 1ms -> bucket 0 (le is inclusive)
+        assert_eq!(h.bucket_counts(), vec![2, 1, 1, 1]);
+        assert_eq!(h.count(), 5);
+        assert_eq!(h.sum_ns(), 500_000 + 5_000_000 + 50_000_000 + 5_000_000_000 + 1_000_000);
+    }
+
+    #[test]
+    fn histogram_rejects_bad_bounds() {
+        assert!(Histogram::new(&[1.0, 1.0]).is_err());
+        assert!(Histogram::new(&[2.0, 1.0]).is_err());
+        assert!(Histogram::new(&[f64::INFINITY]).is_err());
+        assert!(Histogram::new(&[]).is_ok(), "a single +Inf bucket is legal");
+    }
+
+    #[test]
+    fn latency_buckets_are_log_scaled_and_increasing() {
+        let b = latency_buckets();
+        assert_eq!(b.len(), 24);
+        assert_eq!(b[0], 1e-6);
+        for w in b.windows(2) {
+            assert_eq!(w[1], w[0] * 2.0);
+        }
+    }
+
+    #[test]
+    fn snapshot_order_is_deterministic() {
+        let reg = Registry::new();
+        reg.counter("z", &[]).inc();
+        reg.counter("a", &[("t", "1")]).add(2);
+        reg.gauge("g", &[]).set(1.5);
+        reg.histogram("h", &[], &[0.1]).unwrap().observe_secs(0.05);
+        let mut s1 = Snapshot::new();
+        reg.snapshot_into(&mut s1);
+        let mut s2 = Snapshot::new();
+        reg.snapshot_into(&mut s2);
+        assert_eq!(s1, s2);
+        assert_eq!(s1.counters[0].name, "a");
+        assert_eq!(s1.counters[1].name, "z");
+        assert_eq!(s1.histograms[0].counts, vec![1, 0]);
+    }
+}

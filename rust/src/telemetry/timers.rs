@@ -1,0 +1,210 @@
+//! Per-stage hot-path timers: split batch execution into admission-wait
+//! / batch-form / transform / quantize / igemm / postprocess spans.
+//!
+//! The kernel code ([`crate::kernels::fused`]) never sees a telemetry
+//! handle — it opens spans through a **thread-local sink** that the
+//! serving worker installs around each executor dispatch
+//! ([`with_sink`], mirroring the `simd::with_backend` /
+//! `par::with_pool` scoping idiom).  When no sink is installed,
+//! [`span`] returns an inert guard without ever calling
+//! `Instant::now()` — the disabled cost is one thread-local read and a
+//! branch, which is what lets telemetry-off serving stay within the
+//! <2% overhead budget pinned by the
+//! `serve_plan_int8_telemetry_on_vs_off_96req` bench scenario.
+//!
+//! Spans are recorded on the thread that opened them (the batch
+//! orchestration thread); row-parallel pool workers only execute row
+//! chunks *inside* a span, so each stage's wall time is attributed
+//! exactly once per dispatch.
+
+use std::cell::RefCell;
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::telemetry::registry::{latency_buckets, Histogram, Registry};
+
+/// The six execution stages a served batch passes through.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Stage {
+    /// Admission to dispatch: how long a job waited in its tenant queue
+    /// and the scheduler ring before a worker picked its batch up.
+    AdmissionWait,
+    /// Forming one coalesced batch inside the scheduler.
+    BatchForm,
+    /// Plan transform of the activation rows (Eq. 4 scaling + Eq. 3/5
+    /// rotation).
+    Transform,
+    /// Per-token quantization onto integer grids (Eq. 1).
+    Quantize,
+    /// The integer GEMM itself.
+    Igemm,
+    /// Reference product, executed-error and difficulty folds after the
+    /// GEMM.
+    Postprocess,
+}
+
+impl Stage {
+    /// All stages, in pipeline order.
+    pub const ALL: [Stage; 6] = [
+        Stage::AdmissionWait,
+        Stage::BatchForm,
+        Stage::Transform,
+        Stage::Quantize,
+        Stage::Igemm,
+        Stage::Postprocess,
+    ];
+
+    /// Index into [`StageTimers`]'s histogram array.
+    fn index(self) -> usize {
+        match self {
+            Stage::AdmissionWait => 0,
+            Stage::BatchForm => 1,
+            Stage::Transform => 2,
+            Stage::Quantize => 3,
+            Stage::Igemm => 4,
+            Stage::Postprocess => 5,
+        }
+    }
+
+    /// The exported metric name of this stage's histogram.
+    pub fn metric_name(self) -> &'static str {
+        match self {
+            Stage::AdmissionWait => "smoothrot_admission_wait_seconds",
+            Stage::BatchForm => "smoothrot_batch_form_seconds",
+            Stage::Transform => "smoothrot_transform_seconds",
+            Stage::Quantize => "smoothrot_quantize_seconds",
+            Stage::Igemm => "smoothrot_igemm_seconds",
+            Stage::Postprocess => "smoothrot_postprocess_seconds",
+        }
+    }
+}
+
+/// One latency histogram per [`Stage`], registered into the owning
+/// [`Registry`] so snapshots and exporters see them like any other
+/// metric.
+#[derive(Debug)]
+pub struct StageTimers {
+    hists: [Arc<Histogram>; 6],
+}
+
+impl StageTimers {
+    /// Register the six stage histograms (log-scaled latency buckets)
+    /// into `reg`.
+    pub fn new(reg: &Registry) -> Arc<StageTimers> {
+        let bounds = latency_buckets();
+        let hists = Stage::ALL.map(|s| {
+            reg.histogram(s.metric_name(), &[], &bounds)
+                .expect("latency_buckets are valid histogram bounds")
+        });
+        Arc::new(StageTimers { hists })
+    }
+
+    /// Record one `stage` span of `ns` nanoseconds.
+    pub fn record_ns(&self, stage: Stage, ns: u64) {
+        self.hists[stage.index()].observe_ns(ns);
+    }
+
+    /// The histogram backing `stage` (snapshot assertions in tests).
+    pub fn histogram(&self, stage: Stage) -> &Histogram {
+        &self.hists[stage.index()]
+    }
+}
+
+thread_local! {
+    static SINK: RefCell<Option<Arc<StageTimers>>> = const { RefCell::new(None) };
+}
+
+/// Run `f` with `sink` installed as this thread's span destination,
+/// restoring the previous sink afterwards (panic-safe via the guard's
+/// `Drop`).  `None` explicitly disables span recording for the scope.
+pub fn with_sink<R>(sink: Option<Arc<StageTimers>>, f: impl FnOnce() -> R) -> R {
+    struct Restore(Option<Arc<StageTimers>>);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            SINK.with(|s| *s.borrow_mut() = self.0.take());
+        }
+    }
+    let prev = SINK.with(|s| s.replace(sink));
+    let _restore = Restore(prev);
+    f()
+}
+
+/// An open stage span; records its wall time into the installed sink on
+/// drop.  Inert (no clock read at open *or* close) when no sink was
+/// installed at open time.
+pub struct Span {
+    open: Option<(Stage, Arc<StageTimers>, Instant)>,
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        if let Some((stage, sink, t0)) = self.open.take() {
+            let ns = u64::try_from(t0.elapsed().as_nanos()).unwrap_or(u64::MAX);
+            sink.record_ns(stage, ns);
+        }
+    }
+}
+
+/// Open a span for `stage` against the thread's installed sink.  The
+/// disabled path is one thread-local read — no `Instant::now()`.
+pub fn span(stage: Stage) -> Span {
+    let open = SINK.with(|s| {
+        s.borrow().as_ref().map(|sink| (stage, Arc::clone(sink), Instant::now()))
+    });
+    Span { open }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spans_record_only_under_a_sink() {
+        let reg = Registry::new();
+        let timers = StageTimers::new(&reg);
+        // no sink installed: inert guard
+        drop(span(Stage::Igemm));
+        assert_eq!(timers.histogram(Stage::Igemm).count(), 0);
+        with_sink(Some(Arc::clone(&timers)), || {
+            drop(span(Stage::Igemm));
+            drop(span(Stage::Transform));
+        });
+        assert_eq!(timers.histogram(Stage::Igemm).count(), 1);
+        assert_eq!(timers.histogram(Stage::Transform).count(), 1);
+        // the scope restored the previous (absent) sink
+        drop(span(Stage::Igemm));
+        assert_eq!(timers.histogram(Stage::Igemm).count(), 1);
+    }
+
+    #[test]
+    fn sinks_nest_and_restore() {
+        let reg = Registry::new();
+        let outer = StageTimers::new(&reg);
+        let reg2 = Registry::new();
+        let inner = StageTimers::new(&reg2);
+        with_sink(Some(Arc::clone(&outer)), || {
+            with_sink(Some(Arc::clone(&inner)), || drop(span(Stage::Quantize)));
+            drop(span(Stage::Quantize));
+        });
+        assert_eq!(inner.histogram(Stage::Quantize).count(), 1);
+        assert_eq!(outer.histogram(Stage::Quantize).count(), 1);
+    }
+
+    #[test]
+    fn every_stage_has_a_distinct_metric_name() {
+        let names: std::collections::BTreeSet<_> =
+            Stage::ALL.iter().map(|s| s.metric_name()).collect();
+        assert_eq!(names.len(), 6);
+        assert!(names.iter().all(|n| n.starts_with("smoothrot_") && n.ends_with("_seconds")));
+    }
+
+    #[test]
+    fn recorded_time_lands_in_sum() {
+        let reg = Registry::new();
+        let timers = StageTimers::new(&reg);
+        timers.record_ns(Stage::BatchForm, 2_500_000);
+        timers.record_ns(Stage::BatchForm, 500_000);
+        assert_eq!(timers.histogram(Stage::BatchForm).sum_ns(), 3_000_000);
+        assert_eq!(timers.histogram(Stage::BatchForm).count(), 2);
+    }
+}

@@ -1,0 +1,276 @@
+//! Property tests over the telemetry subsystem (check = proptest-lite).
+//!
+//! Over random observation streams and random snapshots: registry
+//! snapshots are identical no matter how many worker threads produced
+//! the observations, counter totals are exact under any split of the
+//! adds, histogram bucket counts conserve the observation count, the
+//! Prometheus exposition round-trips through the minimal parser, and
+//! the JSON artifact enforces the same schema-version ceiling as the
+//! calibration plan.
+
+use smoothrot::check::{check, ensure, Gen};
+use smoothrot::telemetry::difficulty::{Cell, DifficultyRow};
+use smoothrot::telemetry::export::{CounterRow, GaugeRow, HistogramRow};
+use smoothrot::telemetry::registry::Labels;
+use smoothrot::telemetry::{Registry, Snapshot, TELEMETRY_SCHEMA_VERSION};
+
+const COUNTERS: [&str; 3] = ["reqs_total", "batches_total", "steals_total"];
+const HISTS: [&str; 2] = ["transform_seconds", "igemm_seconds"];
+const BOUNDS: &[f64] = &[1e-6, 1e-4, 1e-2, 1.0];
+
+/// One registry observation, replayable across any thread split.
+#[derive(Clone, Copy)]
+enum Op {
+    Count(usize, u64),
+    Observe(usize, u64),
+}
+
+/// Replay `ops` round-robin across `threads` worker threads and
+/// snapshot the resulting registry.
+fn apply(ops: &[Op], threads: usize) -> Snapshot {
+    let reg = Registry::new();
+    std::thread::scope(|s| {
+        for t in 0..threads {
+            let reg = &reg;
+            s.spawn(move || {
+                for (i, op) in ops.iter().enumerate() {
+                    if i % threads != t {
+                        continue;
+                    }
+                    match *op {
+                        Op::Count(k, n) => reg.counter(COUNTERS[k], &[]).add(n),
+                        Op::Observe(k, ns) => {
+                            reg.histogram(HISTS[k], &[], BOUNDS)
+                                .expect("fixed valid bounds")
+                                .observe_ns(ns);
+                        }
+                    }
+                }
+            });
+        }
+    });
+    let mut snap = Snapshot::new();
+    reg.snapshot_into(&mut snap);
+    snap
+}
+
+#[test]
+fn prop_snapshots_are_worker_count_invariant() {
+    check("telemetry: snapshots do not depend on the worker count", 25, |g| {
+        let n = g.usize_in(1, 120);
+        let ops: Vec<Op> = (0..n)
+            .map(|_| {
+                if g.usize_in(0, 1) == 0 {
+                    Op::Count(g.usize_in(0, COUNTERS.len() - 1), g.usize_in(0, 1_000_000) as u64)
+                } else {
+                    Op::Observe(
+                        g.usize_in(0, HISTS.len() - 1),
+                        g.usize_in(0, 5_000_000_000) as u64,
+                    )
+                }
+            })
+            .collect();
+        let base = apply(&ops, 1);
+        for workers in [2usize, 4] {
+            ensure(
+                apply(&ops, workers) == base,
+                format!("snapshot diverged at {workers} workers"),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_counter_totals_are_exact_under_any_split() {
+    check("telemetry: counter adds sum exactly under any thread split", 25, |g| {
+        let parts: Vec<u64> =
+            (0..g.usize_in(1, 64)).map(|_| g.usize_in(0, 1_000_000) as u64).collect();
+        let total: u64 = parts.iter().sum();
+        let threads = *g.choose(&[1usize, 2, 3, 4, 8]);
+        let reg = Registry::new();
+        let c = reg.counter("ops_total", &[]);
+        std::thread::scope(|s| {
+            for t in 0..threads {
+                let c = &c;
+                let parts = &parts;
+                s.spawn(move || {
+                    for (i, &n) in parts.iter().enumerate() {
+                        if i % threads == t {
+                            c.add(n);
+                        }
+                    }
+                });
+            }
+        });
+        ensure(c.value() == total, format!("counter read {} != exact total {total}", c.value()))
+    });
+}
+
+#[test]
+fn prop_histogram_buckets_conserve_the_count() {
+    check("telemetry: bucket counts conserve the observation count", 25, |g| {
+        let mut bounds: Vec<f64> =
+            (0..g.usize_in(1, 6)).map(|_| g.f32_in(1e-6, 2.0) as f64).collect();
+        bounds.sort_by(f64::total_cmp);
+        bounds.dedup();
+        let reg = Registry::new();
+        let h = reg.histogram("h_seconds", &[], &bounds)?;
+        let n = g.usize_in(0, 200) as u64;
+        let mut sum_ns = 0u64;
+        for _ in 0..n {
+            let ns = g.usize_in(0, 4_000_000_000) as u64;
+            sum_ns += ns;
+            h.observe_ns(ns);
+        }
+        ensure(
+            h.bucket_counts().iter().sum::<u64>() == n,
+            "bucket counts must sum to the observation count",
+        )?;
+        ensure(h.count() == n, "count() disagrees with the bucket sum")?;
+        ensure(h.sum_ns() == sum_ns, "nanosecond sum must be the exact integer total")?;
+        // ...and the cumulative +Inf bucket in the exposition equals it
+        let mut snap = Snapshot::new();
+        reg.snapshot_into(&mut snap);
+        let samples = smoothrot::telemetry::export::parse_prometheus(&snap.to_prometheus())
+            .map_err(|e| format!("exposition must parse: {e}"))?;
+        let inf = samples
+            .iter()
+            .find(|p| {
+                p.name == "h_seconds_bucket"
+                    && p.labels.iter().any(|(k, v)| k == "le" && v == "+Inf")
+            })
+            .ok_or("missing +Inf bucket")?;
+        ensure(inf.value == n as f64, "cumulative +Inf bucket must equal the count")
+    });
+}
+
+/// A label-safe random token (the minimal parser does not handle
+/// commas or braces inside label values; real metric labels here are
+/// tenant/runner/layer numbers and module names, which never need them).
+fn token(g: &mut Gen) -> String {
+    const ALPHABET: [char; 12] = ['a', 'b', 'c', 'k', 'q', 'v', 'x', '0', '1', '7', '_', '.'];
+    (0..g.usize_in(1, 8)).map(|_| *g.choose(&ALPHABET)).collect()
+}
+
+fn random_labels(g: &mut Gen) -> Labels {
+    (0..g.usize_in(0, 2)).map(|i| (format!("k{i}"), token(g))).collect()
+}
+
+fn random_snapshot(g: &mut Gen) -> Snapshot {
+    let mut s = Snapshot::new();
+    for i in 0..g.usize_in(0, 4) {
+        s.counters.push(CounterRow {
+            name: format!("c{i}_total"),
+            labels: random_labels(g),
+            value: g.usize_in(0, 4_000_000_000) as u64,
+        });
+    }
+    for i in 0..g.usize_in(0, 4) {
+        s.gauges.push(GaugeRow {
+            name: format!("g{i}"),
+            labels: random_labels(g),
+            value: g.f32_in(-1e6, 1e6) as f64,
+        });
+    }
+    for i in 0..g.usize_in(0, 2) {
+        let mut le: Vec<f64> = (0..g.usize_in(1, 4)).map(|_| g.f32_in(1e-6, 4.0) as f64).collect();
+        le.sort_by(f64::total_cmp);
+        le.dedup();
+        let counts: Vec<u64> = (0..le.len() + 1).map(|_| g.usize_in(0, 1000) as u64).collect();
+        let count = counts.iter().sum();
+        s.histograms.push(HistogramRow {
+            name: format!("h{i}_seconds"),
+            labels: random_labels(g),
+            le,
+            counts,
+            sum: g.f32_in(0.0, 1e3) as f64,
+            count,
+        });
+    }
+    for i in 0..g.usize_in(0, 2) {
+        s.difficulty.push(DifficultyRow {
+            module: format!("m{i}"),
+            layer: g.usize_in(0, 31),
+            cell: Cell {
+                count: g.usize_in(1, 1000) as u64,
+                mean: g.f32_in(0.0, 10.0) as f64,
+                max: g.f32_in(0.0, 10.0) as f64,
+                ewma: g.f32_in(0.0, 10.0) as f64,
+                err_mean: g.f32_in(0.0, 1.0) as f64,
+                err_max: g.f32_in(0.0, 1.0) as f64,
+                plan: g.f32_in(0.0, 10.0) as f64,
+            },
+        });
+    }
+    s
+}
+
+#[test]
+fn prop_prometheus_round_trips_through_the_parser() {
+    check("telemetry: exposition -> parse recovers every sample", 30, |g| {
+        let s = random_snapshot(g);
+        let samples = smoothrot::telemetry::export::parse_prometheus(&s.to_prometheus())
+            .map_err(|e| format!("exposition must parse: {e}"))?;
+        let find = |name: &str, labels: &Labels| {
+            samples.iter().find(|p| p.name == name && p.labels == *labels).map(|p| p.value)
+        };
+        for r in &s.counters {
+            ensure(
+                find(&r.name, &r.labels) == Some(r.value as f64),
+                format!("counter {} did not round-trip", r.name),
+            )?;
+        }
+        for r in &s.gauges {
+            // fmt_value is shortest-roundtrip Display, so parsing the
+            // sample back recovers the gauge bit-exactly
+            ensure(
+                find(&r.name, &r.labels) == Some(r.value),
+                format!("gauge {} did not round-trip", r.name),
+            )?;
+        }
+        for r in &s.histograms {
+            ensure(
+                find(&format!("{}_count", r.name), &r.labels) == Some(r.count as f64),
+                format!("histogram {} lost its count", r.name),
+            )?;
+            ensure(
+                find(&format!("{}_sum", r.name), &r.labels) == Some(r.sum),
+                format!("histogram {} lost its sum", r.name),
+            )?;
+            let mut with_inf = r.labels.clone();
+            with_inf.push(("le".to_string(), "+Inf".to_string()));
+            with_inf.sort();
+            ensure(
+                find(&format!("{}_bucket", r.name), &with_inf) == Some(r.count as f64),
+                format!("histogram {} +Inf bucket must be cumulative to the count", r.name),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_json_round_trips_and_rejects_newer_schemas() {
+    check("telemetry: JSON round-trip identity + version ceiling", 30, |g| {
+        let s = random_snapshot(g);
+        let text = s.to_json_string();
+        let back = Snapshot::parse(&text).map_err(|e| format!("parse: {e}"))?;
+        ensure(back == s, "JSON round-trip changed the snapshot")?;
+        let needle = format!("\"version\": {TELEMETRY_SCHEMA_VERSION}");
+        ensure(text.contains(&needle), "version field must serialize")?;
+        let bumped = g.usize_in(TELEMETRY_SCHEMA_VERSION as usize + 1, 2_000_000);
+        let newer = text.replacen(&needle, &format!("\"version\": {bumped}"), 1);
+        match Snapshot::parse(&newer) {
+            Ok(_) => return Err(format!("version {bumped} must be rejected")),
+            Err(e) => {
+                ensure(e.contains("newer than supported"), format!("wrong rejection: {e}"))?
+            }
+        }
+        let zeroed = text.replacen(&needle, "\"version\": 0", 1);
+        match Snapshot::parse(&zeroed) {
+            Ok(_) => Err("version 0 must be rejected".into()),
+            Err(e) => ensure(e.contains("version 0 is invalid"), format!("wrong rejection: {e}")),
+        }
+    });
+}
