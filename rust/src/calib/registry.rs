@@ -24,6 +24,7 @@ use std::fmt;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
+use std::time::{Duration, Instant};
 
 use crate::calib::plan::{fnv1a64, QuantPlan};
 use crate::qtensor::PlannedWeight;
@@ -119,7 +120,36 @@ pub struct PlanRegistry {
     /// fleet-wide plan version counter for "which plan generation am I
     /// serving" assertions.
     generation: AtomicU64,
+    /// Reload attempts that failed (unreadable / corrupt / torn /
+    /// version-rejected rewrite).  The old resolved plan stays live on
+    /// every failure.
+    reload_failed: AtomicU64,
+    /// Plan entries whose int8 weight preload failed and were degraded
+    /// to the f32 planned path instead of stripping the whole plan.
+    preload_degraded_count: AtomicU64,
+    /// Bounded exponential backoff after a failed reload: polls
+    /// short-circuit until the deadline passes, so a persistently
+    /// corrupt rewrite cannot burn a parse + resolve per poll.
+    backoff: Mutex<ReloadBackoff>,
 }
+
+/// Backoff state for [`PlanRegistry::reload_if_changed`] failures.
+#[derive(Debug, Default)]
+struct ReloadBackoff {
+    /// Polls before this instant return `Ok(false)` without touching
+    /// the file.
+    until: Option<Instant>,
+    /// Delay applied by the *next* failure (doubles per consecutive
+    /// failure, [`RELOAD_BACKOFF_INITIAL`] up to [`RELOAD_BACKOFF_MAX`];
+    /// any success resets it).
+    delay: Duration,
+}
+
+/// First-failure reload backoff delay.
+pub const RELOAD_BACKOFF_INITIAL: Duration = Duration::from_millis(100);
+
+/// Ceiling on the doubled reload backoff delay.
+pub const RELOAD_BACKOFF_MAX: Duration = Duration::from_secs(5);
 
 fn resolve(plan: &QuantPlan) -> Result<Resolved, String> {
     // one rotation per distinct width that any rotating entry needs
@@ -187,16 +217,32 @@ fn resolve(plan: &QuantPlan) -> Result<Resolved, String> {
     Ok(Resolved { map, content_hash: plan.content_hash(), file_hash: None })
 }
 
+/// Outcome of one preload pass over a resolved state.
+struct PreloadOutcome {
+    /// Entries now carrying a pre-quantized weight.
+    loaded: usize,
+    /// Entries whose preload *failed* and were degraded to the f32
+    /// planned path (`qweight = None`) instead of failing the pass.
+    degraded: usize,
+    /// First degradation error, for the caller's log line.
+    first_error: Option<String>,
+}
+
 /// Pre-quantize every loadable entry's transformed weight into the
 /// resolved state: fetch each layer's weight once, apply the entry's
 /// Eq. 4 row scaling and Eq. 3 rotation, quantize per-channel at the
 /// entry's bit width (GEMM-ready i8 codes — see [`PlannedWeight`]).
 /// Entries whose bits exceed i8 storage, or for which the provider has
 /// no weight, keep `qweight = None` (the executor falls back to the
-/// f32 planned path for them).  Returns how many entries now carry a
-/// weight.
-fn preload_into(res: &mut Resolved, f: &WeightFn) -> Result<usize, String> {
-    let mut loaded = 0usize;
+/// f32 planned path for them).
+///
+/// A *failing* entry — provider weight mismatching the plan's width,
+/// quantization rejecting the weight, or the `plan.preload_fail`
+/// failpoint — degrades that one entry to f32-planned and is counted,
+/// rather than stripping the whole plan: the blast radius of one bad
+/// weight is one cell, and the rest of the plan keeps serving int8.
+fn preload_into(res: &mut Resolved, f: &WeightFn) -> PreloadOutcome {
+    let mut out = PreloadOutcome { loaded: 0, degraded: 0, first_error: None };
     for (module, inner) in res.map.iter_mut() {
         // one provider call per layer, shared across bit widths
         let mut weights: BTreeMap<usize, Option<Matrix>> = BTreeMap::new();
@@ -207,21 +253,33 @@ fn preload_into(res: &mut Resolved, f: &WeightFn) -> Result<usize, String> {
             }
             let w = weights.entry(layer).or_insert_with(|| f(module, layer));
             let Some(w) = w else { continue };
-            if w.rows() != entry.c_in {
-                return Err(format!(
-                    "plan registry: {module} layer {layer}: weight has {} input channels, plan says {}",
+            let attempt = if crate::faults::fire_key("plan.preload_fail", layer as u64) {
+                Err("fault injected: plan.preload_fail".to_string())
+            } else if w.rows() != entry.c_in {
+                Err(format!(
+                    "weight has {} input channels, plan says {}",
                     w.rows(),
                     entry.c_in
-                ));
+                ))
+            } else {
+                let smooth = entry.smooth.as_ref().map(|s| s.as_slice());
+                PlannedWeight::from_plan(w, smooth, entry.rotation.as_deref(), bits, 1)
+            };
+            match attempt {
+                Ok(pw) => {
+                    entry.qweight = Some(Arc::new(pw));
+                    out.loaded += 1;
+                }
+                Err(e) => {
+                    // degrade just this cell to the f32 planned path
+                    out.degraded += 1;
+                    out.first_error
+                        .get_or_insert(format!("plan registry: {module} layer {layer}: {e}"));
+                }
             }
-            let smooth = entry.smooth.as_ref().map(|s| s.as_slice());
-            let pw = PlannedWeight::from_plan(w, smooth, entry.rotation.as_deref(), bits, 1)
-                .map_err(|e| format!("plan registry: {module} layer {layer}: {e}"))?;
-            entry.qweight = Some(Arc::new(pw));
-            loaded += 1;
         }
     }
-    Ok(loaded)
+    out
 }
 
 fn read_plan_text(path: &Path) -> Result<String, String> {
@@ -243,6 +301,9 @@ impl PlanRegistry {
             batch_fused: AtomicU64::new(0),
             reload_skipped: AtomicU64::new(0),
             generation: AtomicU64::new(0),
+            reload_failed: AtomicU64::new(0),
+            preload_degraded_count: AtomicU64::new(0),
+            backoff: Mutex::new(ReloadBackoff::default()),
         })
     }
 
@@ -265,6 +326,9 @@ impl PlanRegistry {
             batch_fused: AtomicU64::new(0),
             reload_skipped: AtomicU64::new(0),
             generation: AtomicU64::new(0),
+            reload_failed: AtomicU64::new(0),
+            preload_degraded_count: AtomicU64::new(0),
+            backoff: Mutex::new(ReloadBackoff::default()),
         })
     }
 
@@ -276,11 +340,14 @@ impl PlanRegistry {
     /// Returns the number of entries now carrying a pre-quantized
     /// weight.
     ///
-    /// On failure (provider weight mismatching a plan entry) the
-    /// registry is left weightless *and providerless*: every `qweight`
-    /// is stripped (int8 serving falls back to the f32 planned path)
-    /// and any previously installed provider is dropped, so a later hot
-    /// reload cannot resurrect stale weights.
+    /// An entry whose preload fails (provider weight mismatching the
+    /// plan's width, quantization rejecting it) is degraded to the f32
+    /// planned path — `qweight = None` for that one cell — and counted
+    /// via [`PlanRegistry::preload_degraded`]; the rest of the plan
+    /// keeps its int8 weights and the provider stays installed for the
+    /// next hot reload.  That is the middle rung of the degradation
+    /// ladder (int8 → f32-planned → full-analyze): one bad weight must
+    /// not strip a whole fleet's integer path.
     pub fn set_weight_provider(&self, f: WeightFn) -> Result<usize, String> {
         // hold the provider slot across the whole install so a
         // concurrent reload can neither run with the half-installed
@@ -291,31 +358,25 @@ impl PlanRegistry {
             Ok(g) => g,
             Err(p) => p.into_inner(),
         };
-        let loaded = {
+        let outcome = {
             let mut state = match self.state.write() {
                 Ok(g) => g,
                 Err(p) => p.into_inner(),
             };
-            match preload_into(&mut state, &f) {
-                Ok(n) => n,
-                Err(e) => {
-                    // never leave a half-preloaded mix of old and new
-                    // weights live: strip every qweight so int8 serving
-                    // falls back to the (always-correct) f32 planned
-                    // path, and drop any previous provider so a later
-                    // hot reload cannot resurrect the stripped weights
-                    for inner in state.map.values_mut() {
-                        for entry in inner.values_mut() {
-                            entry.qweight = None;
-                        }
-                    }
-                    *guard = None;
-                    return Err(e);
-                }
-            }
+            preload_into(&mut state, &f)
         };
+        if outcome.degraded > 0 {
+            self.preload_degraded_count.fetch_add(outcome.degraded as u64, Ordering::Relaxed);
+            if let Some(e) = &outcome.first_error {
+                eprintln!(
+                    "plan registry: {} entr{} degraded to f32-planned (first: {e})",
+                    outcome.degraded,
+                    if outcome.degraded == 1 { "y" } else { "ies" }
+                );
+            }
+        }
         *guard = Some(WeightProvider(f));
-        Ok(loaded)
+        Ok(outcome.loaded)
     }
 
     /// Entries currently carrying a pre-quantized weight.
@@ -458,6 +519,18 @@ impl PlanRegistry {
         self.reload_skipped.load(Ordering::Relaxed)
     }
 
+    /// Reload attempts that failed since creation (the old plan stayed
+    /// live each time).
+    pub fn reload_failed(&self) -> u64 {
+        self.reload_failed.load(Ordering::Relaxed)
+    }
+
+    /// Plan entries degraded to the f32 planned path by a failed int8
+    /// weight preload since creation.
+    pub fn preload_degraded(&self) -> u64 {
+        self.preload_degraded_count.load(Ordering::Relaxed)
+    }
+
     /// Hot swaps performed since creation.  Bumped inside the state
     /// write lock, so a reader that observes generation `g` is
     /// guaranteed to resolve lookups against plan generation `>= g`.
@@ -480,8 +553,69 @@ impl PlanRegistry {
     ///    hash becomes the new short-circuit) and counted via
     ///    [`PlanRegistry::reload_skipped_identical`], but never
     ///    re-resolved or swapped.
+    ///
+    /// **Never serves a torn artifact.**  Any failure — unreadable
+    /// file, corrupt/partial JSON, schema/version rejection, resolve
+    /// error — leaves the previously resolved plan live and untouched,
+    /// bumps [`PlanRegistry::reload_failed`], and arms a bounded
+    /// exponential backoff ([`RELOAD_BACKOFF_INITIAL`] doubling up to
+    /// [`RELOAD_BACKOFF_MAX`]): polls inside the backoff window return
+    /// `Ok(false)` without touching the file, so a persistently corrupt
+    /// rewrite costs one parse per backoff step, not one per poll.  Any
+    /// successful poll (including a no-change short-circuit) resets the
+    /// backoff.
     pub fn reload_if_changed(&self) -> Result<bool, String> {
+        if self.path.is_none() {
+            return Ok(false);
+        }
+        {
+            let b = match self.backoff.lock() {
+                Ok(g) => g,
+                Err(p) => p.into_inner(),
+            };
+            if let Some(until) = b.until {
+                if Instant::now() < until {
+                    return Ok(false);
+                }
+            }
+        }
+        let result = self.try_reload();
+        let mut b = match self.backoff.lock() {
+            Ok(g) => g,
+            Err(p) => p.into_inner(),
+        };
+        match &result {
+            Ok(_) => {
+                b.until = None;
+                b.delay = Duration::ZERO;
+            }
+            Err(_) => {
+                self.reload_failed.fetch_add(1, Ordering::Relaxed);
+                b.delay = if b.delay.is_zero() {
+                    RELOAD_BACKOFF_INITIAL
+                } else {
+                    (b.delay * 2).min(RELOAD_BACKOFF_MAX)
+                };
+                b.until = Some(Instant::now() + b.delay);
+            }
+        }
+        result
+    }
+
+    /// One reload attempt (no backoff bookkeeping).
+    fn try_reload(&self) -> Result<bool, String> {
         let Some(path) = &self.path else { return Ok(false) };
+        // `plan.reload_corrupt` failpoint: force this reload attempt to
+        // be treated as a torn read, for chaos coverage of the
+        // keep-old-plan path without racing real partial writes.  Fires
+        // before the raw-hash short-circuit so an unchanged file still
+        // exercises the failure path deterministically.
+        if crate::faults::fire("plan.reload_corrupt") {
+            return Err(format!(
+                "plan registry: {}: fault injected: plan.reload_corrupt",
+                path.display()
+            ));
+        }
         let text = read_plan_text(path)?;
         let raw_hash = fnv1a64(text.as_bytes());
         {
@@ -519,7 +653,22 @@ impl PlanRegistry {
             Err(p) => p.into_inner(),
         };
         if let Some(p) = guard.as_ref() {
-            preload_into(&mut resolved, &p.0)?;
+            // entry-level preload failures degrade those cells to the
+            // f32 planned path; they never abort the reload (the fresh
+            // plan with a few weightless cells still beats the stale
+            // plan)
+            let outcome = preload_into(&mut resolved, &p.0);
+            if outcome.degraded > 0 {
+                self.preload_degraded_count
+                    .fetch_add(outcome.degraded as u64, Ordering::Relaxed);
+                if let Some(e) = &outcome.first_error {
+                    eprintln!(
+                        "plan registry: reload degraded {} entr{} to f32-planned (first: {e})",
+                        outcome.degraded,
+                        if outcome.degraded == 1 { "y" } else { "ies" }
+                    );
+                }
+            }
         }
         let changed = {
             let mut state = match self.state.write() {
@@ -728,7 +877,7 @@ mod tests {
     }
 
     #[test]
-    fn provider_width_mismatch_is_an_error_and_strips_weights() {
+    fn provider_width_mismatch_degrades_only_that_entry() {
         let reg = PlanRegistry::from_plan(&plan(vec![
             entry("k_proj", 0, Mode::None, 8),
             entry("o_proj", 0, Mode::None, 16),
@@ -741,12 +890,18 @@ mod tests {
         }))
         .unwrap();
         assert_eq!(reg.preloaded(), 2);
-        // bad provider: named error, and NO half-preloaded mix survives
-        let err = reg
+        assert_eq!(reg.preload_degraded(), 0);
+        // a provider whose weight width only fits k_proj: the o_proj
+        // entry degrades to f32-planned, k_proj keeps its int8 weight —
+        // blast radius of one bad weight is one cell, not the plan
+        let loaded = reg
             .set_weight_provider(Box::new(|_, _| Some(crate::tensor::Matrix::zeros(8, 4))))
-            .unwrap_err();
-        assert!(err.contains("input channels"), "{err}");
-        assert_eq!(reg.preloaded(), 0, "a failed preload must strip every weight");
+            .unwrap();
+        assert_eq!(loaded, 1);
+        assert_eq!(reg.preloaded(), 1, "the matching entry must keep its weight");
+        assert_eq!(reg.preload_degraded(), 1, "the mismatching entry is counted as degraded");
+        assert!(reg.lookup("k_proj", 0, 4, 8).unwrap().qweight.is_some());
+        assert!(reg.lookup("o_proj", 0, 4, 16).unwrap().qweight.is_none());
     }
 
     #[test]

@@ -252,7 +252,15 @@ where
             };
             loop {
                 let job = {
-                    let guard = rx.lock().expect("job queue poisoned");
+                    // recover a poisoned lock: a peer that panicked
+                    // while holding it was only *receiving* (the queue
+                    // itself cannot be left half-mutated), so the
+                    // remaining workers keep draining instead of
+                    // wedging the producer forever
+                    let guard = match rx.lock() {
+                        Ok(g) => g,
+                        Err(poisoned) => poisoned.into_inner(),
+                    };
                     guard.recv()
                 };
                 let job = match job {

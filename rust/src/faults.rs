@@ -1,0 +1,359 @@
+//! Deterministic fault injection: named failpoints for chaos testing.
+//!
+//! The serving stack's fault-tolerance claims (panic isolation, torn-plan
+//! rejection, deadline eviction) are only testable if faults can be made
+//! to happen *on demand and reproducibly*.  This module provides named
+//! failpoints — call sites like `serve.exec_panic` or
+//! `plan.reload_corrupt` ask [`fire`] / [`fire_key`] whether to misbehave
+//! — armed from a spec string via [`arm`], the `SMOOTHROT_FAULTS`
+//! environment variable ([`arm_from_env`]), or the `--faults` CLI knob.
+//!
+//! ## Spec grammar
+//!
+//! `site=trigger[,site=trigger...]` (`,` or `;` separate entries):
+//!
+//! | trigger | fires |
+//! |---|---|
+//! | `always` | every evaluation |
+//! | `once` | first evaluation only |
+//! | `hit:N` | the Nth evaluation only (1-based) |
+//! | `every:N` | every Nth evaluation |
+//! | `prob:P:SEED` | deterministically pseudo-random with probability `P`: hashes `SEED` with the caller key (or the hit counter when unkeyed), so the same seed always yields the same fault schedule |
+//! | `mod:K:R` | caller key `% K == R` (hit counter when unkeyed) — a stable "poisoned subset" of jobs |
+//!
+//! ## Cost when unarmed
+//!
+//! A single relaxed atomic load: [`fire`] checks a global `ARMED` flag
+//! before touching any state, so production serving with no faults armed
+//! pays one predictable branch per failpoint.
+//!
+//! Arming is process-global, so tests that arm faults must serialize via
+//! [`exclusive`] and disarm before releasing the guard.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
+
+/// Fast-path flag: true iff a fault plan is installed.
+static ARMED: AtomicBool = AtomicBool::new(false);
+
+/// The installed plan (None when disarmed).  `fire` clones the `Arc`
+/// and drops the lock before evaluating, so failpoint evaluation never
+/// holds this mutex across trigger logic.
+static PLAN: Mutex<Option<Arc<FaultPlan>>> = Mutex::new(None);
+
+/// Serializes tests that arm global fault state.
+static EXCLUSIVE: Mutex<()> = Mutex::new(());
+
+/// How a single failpoint decides to fire.
+#[derive(Clone, Debug, PartialEq)]
+enum Trigger {
+    Always,
+    /// Fires on the Nth evaluation only (1-based; `once` == `Hit(1)`).
+    Hit(u64),
+    /// Fires on every Nth evaluation.
+    Every(u64),
+    /// Fires with probability `p`, deterministically keyed on
+    /// `hash(seed, key-or-hit)`.
+    Prob(f64, u64),
+    /// Fires when `key % k == r` (hit counter when unkeyed).
+    Mod(u64, u64),
+}
+
+#[derive(Debug)]
+struct FaultSite {
+    trigger: Trigger,
+    hits: AtomicU64,
+}
+
+/// A parsed, armed set of failpoints.
+#[derive(Debug, Default)]
+struct FaultPlan {
+    sites: BTreeMap<String, FaultSite>,
+}
+
+/// SplitMix64 finalizer — decorrelates seed/key pairs for `prob`.
+fn mix(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+fn parse_trigger(s: &str) -> Result<Trigger, String> {
+    let parts: Vec<&str> = s.split(':').collect();
+    let nat = |tok: &str| -> Result<u64, String> {
+        tok.parse::<u64>().map_err(|_| format!("faults: expected integer, got {tok:?} in {s:?}"))
+    };
+    match parts.as_slice() {
+        ["always"] => Ok(Trigger::Always),
+        ["once"] => Ok(Trigger::Hit(1)),
+        ["hit", n] => {
+            let n = nat(n)?;
+            if n == 0 {
+                return Err(format!("faults: hit:N is 1-based, got 0 in {s:?}"));
+            }
+            Ok(Trigger::Hit(n))
+        }
+        ["every", n] => {
+            let n = nat(n)?;
+            if n == 0 {
+                return Err(format!("faults: every:N needs N >= 1 in {s:?}"));
+            }
+            Ok(Trigger::Every(n))
+        }
+        ["prob", p, seed] => {
+            let p: f64 = p
+                .parse()
+                .map_err(|_| format!("faults: expected probability, got {p:?} in {s:?}"))?;
+            if !(0.0..=1.0).contains(&p) {
+                return Err(format!("faults: probability out of [0,1] in {s:?}"));
+            }
+            Ok(Trigger::Prob(p, nat(seed)?))
+        }
+        ["mod", k, r] => {
+            let k = nat(k)?;
+            let r = nat(r)?;
+            if k == 0 || r >= k {
+                return Err(format!("faults: mod:K:R needs K >= 1 and R < K in {s:?}"));
+            }
+            Ok(Trigger::Mod(k, r))
+        }
+        _ => Err(format!(
+            "faults: unknown trigger {s:?} (expected always | once | hit:N | every:N | prob:P:SEED | mod:K:R)"
+        )),
+    }
+}
+
+fn parse_spec(spec: &str) -> Result<FaultPlan, String> {
+    let mut plan = FaultPlan::default();
+    for entry in spec.split([',', ';']) {
+        let entry = entry.trim();
+        if entry.is_empty() {
+            continue;
+        }
+        let (site, trig) = entry
+            .split_once('=')
+            .ok_or_else(|| format!("faults: expected site=trigger, got {entry:?}"))?;
+        let site = site.trim();
+        if site.is_empty() {
+            return Err(format!("faults: empty site name in {entry:?}"));
+        }
+        let trigger = parse_trigger(trig.trim())?;
+        plan.sites
+            .insert(site.to_string(), FaultSite { trigger, hits: AtomicU64::new(0) });
+    }
+    Ok(plan)
+}
+
+fn plan_lock() -> MutexGuard<'static, Option<Arc<FaultPlan>>> {
+    match PLAN.lock() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
+
+/// Arm a fault plan from a spec string, replacing any previous plan.
+/// Returns the number of failpoints armed (0 for an empty spec, which
+/// disarms).
+pub fn arm(spec: &str) -> Result<usize, String> {
+    let plan = parse_spec(spec)?;
+    let n = plan.sites.len();
+    let mut guard = plan_lock();
+    if n == 0 {
+        *guard = None;
+        ARMED.store(false, Ordering::Release);
+    } else {
+        *guard = Some(Arc::new(plan));
+        ARMED.store(true, Ordering::Release);
+    }
+    Ok(n)
+}
+
+/// Arm from the `SMOOTHROT_FAULTS` environment variable.  Unset or
+/// empty means no faults; a malformed spec is an error (silent typos in
+/// a chaos run would fake a green result).
+pub fn arm_from_env() -> Result<usize, String> {
+    match std::env::var("SMOOTHROT_FAULTS") {
+        Ok(spec) if !spec.trim().is_empty() => arm(&spec),
+        _ => Ok(0),
+    }
+}
+
+/// Remove the fault plan; all failpoints revert to the no-op branch.
+pub fn disarm() {
+    let mut guard = plan_lock();
+    *guard = None;
+    ARMED.store(false, Ordering::Release);
+}
+
+/// True iff any fault plan is armed (single relaxed atomic load).
+#[inline]
+pub fn armed() -> bool {
+    ARMED.load(Ordering::Relaxed)
+}
+
+fn evaluate(site: &FaultSite, key: Option<u64>) -> bool {
+    let hit = site.hits.fetch_add(1, Ordering::Relaxed) + 1;
+    match site.trigger {
+        Trigger::Always => true,
+        Trigger::Hit(n) => hit == n,
+        Trigger::Every(n) => hit % n == 0,
+        Trigger::Prob(p, seed) => {
+            let x = mix(seed ^ mix(key.unwrap_or(hit)));
+            // top 53 bits -> uniform in [0, 1)
+            let u = (x >> 11) as f64 / (1u64 << 53) as f64;
+            u < p
+        }
+        Trigger::Mod(k, r) => key.unwrap_or(hit) % k == r,
+    }
+}
+
+fn fire_impl(site: &str, key: Option<u64>) -> bool {
+    if !armed() {
+        return false;
+    }
+    let plan = match plan_lock().as_ref() {
+        Some(p) => Arc::clone(p),
+        None => return false,
+    };
+    match plan.sites.get(site) {
+        Some(s) => evaluate(s, key),
+        None => false,
+    }
+}
+
+/// Should the named failpoint fire?  No-op (false) when unarmed.
+#[inline]
+pub fn fire(site: &str) -> bool {
+    if !armed() {
+        return false;
+    }
+    fire_impl(site, None)
+}
+
+/// Keyed variant: `mod` / `prob` triggers evaluate against `key`
+/// (e.g. a job id), yielding a deterministic poisoned subset that is
+/// stable across retries and across runs.
+#[inline]
+pub fn fire_key(site: &str, key: u64) -> bool {
+    if !armed() {
+        return false;
+    }
+    fire_impl(site, Some(key))
+}
+
+/// How many times the named failpoint has been evaluated since arming
+/// (0 when unarmed or never hit) — observability for chaos tests.
+pub fn hits(site: &str) -> u64 {
+    let guard = plan_lock();
+    match guard.as_ref().and_then(|p| p.sites.get(site)) {
+        Some(s) => s.hits.load(Ordering::Relaxed),
+        None => 0,
+    }
+}
+
+/// Serialize tests (and any other callers) that arm process-global
+/// fault state.  Hold the guard for the whole armed region and
+/// [`disarm`] before dropping it.
+pub fn exclusive() -> MutexGuard<'static, ()> {
+    match EXCLUSIVE.lock() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unarmed_failpoints_never_fire() {
+        let _g = exclusive();
+        disarm();
+        assert!(!armed());
+        assert!(!fire("serve.exec_panic"));
+        assert!(!fire_key("serve.exec_panic", 7));
+        assert_eq!(hits("serve.exec_panic"), 0);
+    }
+
+    #[test]
+    fn hit_and_every_triggers_count_evaluations() {
+        let _g = exclusive();
+        arm("a=hit:3,b=every:2").unwrap();
+        let a: Vec<bool> = (0..5).map(|_| fire("a")).collect();
+        assert_eq!(a, vec![false, false, true, false, false]);
+        let b: Vec<bool> = (0..6).map(|_| fire("b")).collect();
+        assert_eq!(b, vec![false, true, false, true, false, true]);
+        assert_eq!(hits("a"), 5);
+        disarm();
+        assert!(!fire("a"));
+    }
+
+    #[test]
+    fn once_fires_exactly_once() {
+        let _g = exclusive();
+        arm("x=once").unwrap();
+        assert!(fire("x"));
+        assert!(!fire("x"));
+        assert!(!fire("x"));
+        disarm();
+    }
+
+    #[test]
+    fn mod_trigger_selects_a_stable_key_subset() {
+        let _g = exclusive();
+        arm("p=mod:4:1").unwrap();
+        // retries of the same key give the same answer: no hidden state
+        for _ in 0..3 {
+            assert!(fire_key("p", 1));
+            assert!(fire_key("p", 5));
+            assert!(!fire_key("p", 0));
+            assert!(!fire_key("p", 7));
+        }
+        disarm();
+    }
+
+    #[test]
+    fn prob_trigger_is_deterministic_per_key_and_seed() {
+        let _g = exclusive();
+        arm("q=prob:0.5:42").unwrap();
+        let first: Vec<bool> = (0..64).map(|k| fire_key("q", k)).collect();
+        let second: Vec<bool> = (0..64).map(|k| fire_key("q", k)).collect();
+        assert_eq!(first, second, "same seed + key must give the same schedule");
+        let fired = first.iter().filter(|&&f| f).count();
+        assert!(fired > 8 && fired < 56, "p=0.5 over 64 keys fired {fired} times");
+        // a different seed gives a different schedule
+        arm("q=prob:0.5:43").unwrap();
+        let third: Vec<bool> = (0..64).map(|k| fire_key("q", k)).collect();
+        assert_ne!(first, third);
+        disarm();
+    }
+
+    #[test]
+    fn unknown_sites_do_not_fire_and_specs_validate() {
+        let _g = exclusive();
+        arm("known=always").unwrap();
+        assert!(!fire("unknown"));
+        assert!(fire("known"));
+        disarm();
+        assert!(arm("bad").is_err());
+        assert!(arm("s=banana").is_err());
+        assert!(arm("s=hit:0").is_err());
+        assert!(arm("s=prob:1.5:1").is_err());
+        assert!(arm("s=mod:0:0").is_err());
+        assert!(arm("s=mod:4:4").is_err());
+        assert!(!armed(), "failed arm must not leave a plan installed");
+        assert_eq!(arm("").unwrap(), 0);
+        assert!(!armed());
+    }
+
+    #[test]
+    fn spec_allows_both_separators_and_whitespace() {
+        let _g = exclusive();
+        let n = arm(" a=always ; b=every:3 , c=mod:2:0 ").unwrap();
+        assert_eq!(n, 3);
+        assert!(fire("a"));
+        disarm();
+    }
+}

@@ -471,6 +471,14 @@ pub fn analyze_planned_int_batch(
     ws: &mut Workspace,
     threads: usize,
 ) -> Result<Vec<AnalyzeOut>, String> {
+    // `fused.batch_panic` failpoint: a panic originating *inside* the
+    // fused kernel (under the worker's thread pool) — distinct from
+    // `serve.exec_panic`, which fires at dispatch — so chaos tests
+    // prove the serving worker's panic isolation holds for kernel-level
+    // failures too.  No-op branch when unarmed.
+    if crate::faults::fire("fused.batch_panic") {
+        panic!("fault injected: fused.batch_panic");
+    }
     let Some(&(x0, w0)) = jobs.first() else {
         return Ok(Vec::new());
     };

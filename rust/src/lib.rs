@@ -49,6 +49,7 @@
 //! | [`config`] | typed experiment configuration + file parser |
 //! | [`cli`] | dependency-free argument parser |
 //! | [`check`] | proptest-lite property-testing harness |
+//! | [`faults`] | deterministic fault injection: named failpoints for chaos testing |
 //! | [`runtime`] | PJRT client wrapper, artifact manifest, executable cache |
 //! | [`coordinator`] | experiment scheduler: worker pool, bounded queue, backpressure |
 //! | [`serve`] | batched multi-tenant serving core (admission, fair share, work stealing) |
@@ -64,6 +65,7 @@ pub mod check;
 pub mod cli;
 pub mod config;
 pub mod coordinator;
+pub mod faults;
 pub mod jsonio;
 pub mod kernels;
 pub mod metrics;

@@ -114,6 +114,10 @@ fn app() -> App {
                 .opt("trim-bytes", "workspace bytes retained across batches before trimming, 0 = never trim; overrides env SMOOTHROT_TRIM_BYTES (native backend)", None)
                 .opt("metrics-file", METRICS_FILE_HELP, None)
                 .opt("metrics-interval", "seconds between metrics-file rewrites while serving (0 = write only at exit; needs --metrics-file)", Some("0"))
+                .opt("deadline-ms", "per-request queue deadline in milliseconds; requests still queued past it get an errored response at batch formation (0 = no deadline)", Some("0"))
+                .opt("shed-queued", "shed new admissions with a retry-after hint once this many requests are queued (0 = never shed)", Some("0"))
+                .opt("faults", "arm deterministic failpoints for chaos testing, e.g. 'serve.exec_panic=prob:0.05:42,plan.reload_corrupt=hit:2'; also honored from env SMOOTHROT_FAULTS", None)
+                .flag("drain", "gracefully drain after the last submission: stop admission, finish every in-flight batch, then collect")
                 .flag("no-steal", "disable idle runners stealing surplus batches from the heaviest peer (--runners)")
                 .flag("skew-layers", "skew the synthetic stream so ~half of all requests hit layer 0 (the sharding stress case; native backend)")
                 .flag("reject", "reject instead of block when a tenant queue is full"),
@@ -144,6 +148,24 @@ fn main() {
             std::process::exit(2);
         }
     };
+    // Deterministic fault injection: arm failpoints before any work
+    // runs, from the environment (works for every subcommand) and from
+    // `serve --faults`.  A malformed spec is a named error and a
+    // nonzero exit, never a silent no-op — a typo'd chaos run must not
+    // fake a green result.
+    if let Err(e) = smoothrot::faults::arm_from_env() {
+        eprintln!("error: SMOOTHROT_FAULTS: {e}");
+        std::process::exit(1);
+    }
+    if let Some(spec) = parsed.get("faults") {
+        match smoothrot::faults::arm(spec) {
+            Ok(n) => eprintln!("faults: armed {n} failpoint(s)"),
+            Err(e) => {
+                eprintln!("error: --faults: {e}");
+                std::process::exit(1);
+            }
+        }
+    }
     // Every subcommand under --metrics-file gets one Telemetry
     // instance whose snapshot is dumped at exit; the command dispatch
     // runs under its sinks, so stage spans and difficulty observations
@@ -151,6 +173,24 @@ fn main() {
     // worker threads install the sinks themselves via
     // Server::start_with_telemetry).
     let metrics_file = parsed.get("metrics-file").map(std::path::PathBuf::from);
+    // Fail fast on an unwritable metrics target: discovering it only at
+    // the exit dump would throw away the whole run's snapshot.
+    if let Some(path) = &metrics_file {
+        if path.is_dir() {
+            eprintln!("error: --metrics-file {}: is a directory, need a file path", path.display());
+            std::process::exit(1);
+        }
+        if let Some(dir) = path.parent().filter(|d| !d.as_os_str().is_empty()) {
+            if !dir.is_dir() {
+                eprintln!(
+                    "error: --metrics-file {}: parent directory {} does not exist",
+                    path.display(),
+                    dir.display()
+                );
+                std::process::exit(1);
+            }
+        }
+    }
     let telemetry = metrics_file.as_ref().map(|_| Telemetry::new());
     let result = telemetry::scoped(telemetry.as_ref(), || match cmd_name.as_str() {
         "capture" => cmd_capture(&parsed),
@@ -569,6 +609,13 @@ fn cmd_serve(p: &smoothrot::cli::Parsed, telemetry: Option<&Arc<Telemetry>>) -> 
             }
         }
 
+        fn drain(&self) {
+            match self {
+                AnyServer::Classic(s) => s.drain(),
+                AnyServer::Sharded(s) => s.drain(),
+            }
+        }
+
         fn finish(self) -> ServeMetrics {
             match self {
                 AnyServer::Classic(s) => s.finish(),
@@ -582,12 +629,13 @@ fn cmd_serve(p: &smoothrot::cli::Parsed, telemetry: Option<&Arc<Telemetry>>) -> 
 
     /// Start a server (sharded when a runner topology is given), submit
     /// the stream (printing the first few responses as they arrive),
-    /// drain and summarize.
+    /// optionally drain gracefully, and summarize.
     fn run_serve<E, F>(
         cfg: ServeConfig,
         shard: ShardTopo,
         telemetry: Option<Arc<Telemetry>>,
         requests: Vec<(TenantId, Job)>,
+        drain: bool,
         make_executor: F,
     ) -> Result<(Vec<Response>, ServeMetrics)>
     where
@@ -613,14 +661,25 @@ fn cmd_serve(p: &smoothrot::cli::Parsed, telemetry: Option<&Arc<Telemetry>>) -> 
             }
         };
         let mut rejected = 0usize;
+        let mut shed = 0usize;
         for (tenant, job) in requests {
             match server.submit(tenant, job) {
                 Ok(()) => {}
                 Err(SubmitError::Full { .. }) => rejected += 1,
+                Err(SubmitError::Shed { .. }) => shed += 1,
                 Err(e) => return Err(anyhow!(e.to_string())),
             }
         }
-        let admitted = total - rejected;
+        if shed > 0 {
+            println!("  shed {shed} requests under queue pressure (retry-after hints issued)");
+        }
+        if drain {
+            // stop admission, let every in-flight batch complete, then
+            // collect the already-streamed responses below
+            server.drain();
+            println!("  drained: admission stopped, in-flight work complete");
+        }
+        let admitted = total - rejected - shed;
         let mut responses = Vec::with_capacity(admitted);
         for r in rx.iter().take(admitted) {
             if responses.len() < 5 {
@@ -659,6 +718,9 @@ fn cmd_serve(p: &smoothrot::cli::Parsed, telemetry: Option<&Arc<Telemetry>>) -> 
         .map_err(|e| anyhow!("serve: {e}"))?;
     let stealing = !p.has_flag("no-steal");
     let skew_layers = p.has_flag("skew-layers");
+    let drain = p.has_flag("drain");
+    let deadline_ms = p.get_u64("deadline-ms").map_err(|e| anyhow!(e))?.unwrap_or(0);
+    let shed_queued = p.get_usize("shed-queued").map_err(|e| anyhow!(e))?.unwrap_or(0);
     let trim_bytes =
         smoothrot::serve::resolve_trim_bytes(p.get_usize("trim-bytes").map_err(|e| anyhow!(e))?)
             .map_err(|e| anyhow!("serve: {e}"))?;
@@ -681,6 +743,8 @@ fn cmd_serve(p: &smoothrot::cli::Parsed, telemetry: Option<&Arc<Telemetry>>) -> 
         max_batch: p.get_usize("max-batch").map_err(|e| anyhow!(e))?.unwrap_or(8),
         queue_depth: p.get_usize("queue-depth").map_err(|e| anyhow!(e))?.unwrap_or(32),
         admission: if p.has_flag("reject") { Admission::Reject } else { Admission::Block },
+        deadline_micros: deadline_ms.saturating_mul(1000),
+        shed_queued,
         ..ServeConfig::default()
     };
     if plan_path.is_some() && backend != Backend::Native {
@@ -754,7 +818,7 @@ fn cmd_serve(p: &smoothrot::cli::Parsed, telemetry: Option<&Arc<Telemetry>>) -> 
                 synthetic_requests(n_requests, n_tenants, rows, layers, stream_seed)
             };
             match plan_path {
-                None => run_serve(cfg, shard_topo, telemetry.cloned(), requests, move |_| {
+                None => run_serve(cfg, shard_topo, telemetry.cloned(), requests, drain, move |_| {
                     Ok(NativeBatchExecutor::with_threads(threads)
                         .with_kernel_backend(kernel)
                         .with_trim_budget(trim_bytes))
@@ -816,15 +880,16 @@ fn cmd_serve(p: &smoothrot::cli::Parsed, telemetry: Option<&Arc<Telemetry>>) -> 
                         })
                     };
                     let exec_registry = Arc::clone(&registry);
-                    let out = run_serve(cfg, shard_topo, telemetry.cloned(), requests, move |_| {
-                        Ok(NativeBatchExecutor::with_plan_exec(
-                            Arc::clone(&exec_registry),
-                            threads,
-                            exec,
-                        )
-                        .with_kernel_backend(kernel)
-                        .with_trim_budget(trim_bytes))
-                    });
+                    let out =
+                        run_serve(cfg, shard_topo, telemetry.cloned(), requests, drain, move |_| {
+                            Ok(NativeBatchExecutor::with_plan_exec(
+                                Arc::clone(&exec_registry),
+                                threads,
+                                exec,
+                            )
+                            .with_kernel_backend(kernel)
+                            .with_trim_budget(trim_bytes))
+                        });
                     stop.store(true, Ordering::Relaxed);
                     let _ = poller.join();
                     let out = out?;
@@ -896,7 +961,7 @@ fn cmd_serve(p: &smoothrot::cli::Parsed, telemetry: Option<&Arc<Telemetry>>) -> 
                 })
                 .collect();
             let dir = artifacts.clone();
-            run_serve(cfg, None, telemetry.cloned(), requests, move |_| {
+            run_serve(cfg, None, telemetry.cloned(), requests, drain, move |_| {
                 pipeline::PjrtExecutor::new(dir.clone())
             })?
         }

@@ -105,6 +105,7 @@ pub mod shard;
 
 use std::collections::{BTreeMap, VecDeque};
 use std::fmt;
+use std::panic::{self, AssertUnwindSafe};
 use std::sync::mpsc::{self, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
@@ -155,6 +156,18 @@ pub struct ServeConfig {
     /// this makes batch formation deterministic, which the scheduler
     /// tests and the batching benchmarks rely on.
     pub paused: bool,
+    /// Per-request deadline, measured from admission.  A queued job
+    /// whose deadline has passed is evicted at batch formation with a
+    /// named error `Response` instead of wasting executor time on an
+    /// answer nobody is waiting for.  `0` disables deadlines.
+    pub deadline_micros: u64,
+    /// SLO-aware admission shedding: when the total queued backlog
+    /// reaches this many jobs, `submit` fails fast with
+    /// [`SubmitError::Shed`] (carrying a retry-after hint) regardless of
+    /// the per-tenant [`Admission`] policy — under overload, rejecting
+    /// *now* beats admitting work that will blow its deadline anyway.
+    /// `0` disables shedding.
+    pub shed_queued: usize,
 }
 
 impl Default for ServeConfig {
@@ -166,6 +179,8 @@ impl Default for ServeConfig {
             admission: Admission::Block,
             linger_micros: 200,
             paused: false,
+            deadline_micros: 0,
+            shed_queued: 0,
         }
     }
 }
@@ -178,7 +193,16 @@ pub enum SubmitError {
         /// The tenant whose queue was full.
         tenant: TenantId,
     },
-    /// The server has been shut down.
+    /// The server shed the request under queue pressure
+    /// ([`ServeConfig::shed_queued`]).
+    Shed {
+        /// The tenant whose request was shed.
+        tenant: TenantId,
+        /// Hint: retry after roughly this long, estimated from the
+        /// backlog and the observed mean per-request execution time.
+        retry_after_micros: u64,
+    },
+    /// The server has been shut down (or is draining).
     Closed,
 }
 
@@ -186,6 +210,10 @@ impl fmt::Display for SubmitError {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         match self {
             SubmitError::Full { tenant } => write!(f, "tenant {tenant}: admission queue full"),
+            SubmitError::Shed { tenant, retry_after_micros } => write!(
+                f,
+                "tenant {tenant}: shed under queue pressure (retry after ~{retry_after_micros}µs)"
+            ),
             SubmitError::Closed => write!(f, "server is shut down"),
         }
     }
@@ -561,6 +589,17 @@ impl NativeBatchExecutor {
     /// each plan-covered int8 group into one fused kernel invocation,
     /// run everything else per job.
     fn run_batch_inner(&mut self, jobs: &[Job]) -> Vec<Result<AnalyzeOut, String>> {
+        // `serve.exec_panic` failpoint: a poisoned job (keyed trigger on
+        // its id) panics whenever it is dispatched — including on the
+        // worker's per-job retry after a batch split, so the chaos tests
+        // can prove quarantine end to end.  No-op branch when unarmed.
+        if crate::faults::armed() {
+            for j in jobs {
+                if crate::faults::fire_key("serve.exec_panic", j.id) {
+                    panic!("fault injected: serve.exec_panic (job {})", j.id);
+                }
+            }
+        }
         let fused_eligible = self.fuse && self.exec == ExecMode::Int8 && self.plan.is_some();
         if !fused_eligible {
             return jobs.iter().map(|j| self.run_one(j)).collect();
@@ -696,11 +735,13 @@ pub struct Response {
     pub module: &'static str,
     /// Layer index of the job.
     pub layer: usize,
-    /// Worker that executed the batch.
+    /// Worker that executed the batch (`usize::MAX` for a request the
+    /// scheduler evicted before dispatch, e.g. on deadline expiry).
     pub worker: usize,
-    /// Batch this request was coalesced into.
+    /// Batch this request was coalesced into (`u64::MAX` when evicted
+    /// before dispatch).
     pub batch_id: u64,
-    /// Number of jobs in that batch.
+    /// Number of jobs in that batch (`0` when evicted before dispatch).
     pub batch_size: usize,
     /// Analysis output, or the executor's error.
     pub out: Result<AnalyzeOut, String>,
@@ -732,8 +773,22 @@ pub struct ServeMetrics {
     pub completed: u64,
     /// Requests rejected at admission.
     pub rejected: u64,
+    /// Requests shed at admission under queue pressure
+    /// ([`ServeConfig::shed_queued`]); disjoint from `rejected`.
+    pub shed: u64,
     /// Completed requests whose executor returned an error.
     pub errors: u64,
+    /// Jobs quarantined after a panicking dispatch: the batch was split
+    /// and retried per job, and this job panicked again alone.  Each
+    /// quarantined job also counts in `completed` and `errors` (it gets
+    /// a terminal errored [`Response`]).
+    pub quarantined: u64,
+    /// Jobs evicted at batch formation because their
+    /// [`ServeConfig::deadline_micros`] deadline had passed (each also
+    /// counts in `completed` and `errors`).
+    pub deadline_expired: u64,
+    /// Graceful drains completed ([`Server::drain`]).
+    pub drains: u64,
     /// Batches dispatched.
     pub batches: u64,
     /// Batches a worker stole from a peer's deque.
@@ -803,6 +858,10 @@ impl ServeMetrics {
             ("smoothrot_requests_completed_total", self.completed),
             ("smoothrot_requests_rejected_total", self.rejected),
             ("smoothrot_request_errors_total", self.errors),
+            ("smoothrot_jobs_quarantined", self.quarantined),
+            ("smoothrot_deadline_expired", self.deadline_expired),
+            ("smoothrot_shed_total", self.shed),
+            ("smoothrot_drain_total", self.drains),
             ("smoothrot_batches_total", self.batches),
             ("smoothrot_steals_total", self.steals),
             ("smoothrot_exec_microseconds_total", self.exec_micros_total),
@@ -945,6 +1004,23 @@ impl TenantQueue {
         }
         Some(self.items.remove(&seq).expect("index points into items"))
     }
+
+    /// Remove one request by sequence number (deadline eviction; unlike
+    /// the pops, the seq may sit anywhere in its key deque when a fault
+    /// forces an out-of-order expiry).
+    fn remove_seq(&mut self, seq: u64) -> Option<Pending> {
+        let p = self.items.remove(&seq)?;
+        let key = (BatchKey::of(&p.job), p.route);
+        if let Some(q) = self.by_key.get_mut(&key) {
+            if let Some(pos) = q.iter().position(|&s| s == seq) {
+                q.remove(pos);
+            }
+            if q.is_empty() {
+                self.by_key.remove(&key);
+            }
+        }
+        Some(p)
+    }
 }
 
 /// Response-side metadata of one batched request (everything small the
@@ -975,7 +1051,11 @@ struct CenterStats {
     submitted: u64,
     completed: u64,
     rejected: u64,
+    shed: u64,
     errors: u64,
+    quarantined: u64,
+    deadline_expired: u64,
+    drains: u64,
     batches: u64,
     max_batch_observed: usize,
     exec_micros_total: u64,
@@ -1002,6 +1082,10 @@ struct Center {
     /// Requests popped into batches but not yet completed.
     in_flight: usize,
     closed: bool,
+    /// Graceful drain in progress: admission stops (submit fails
+    /// [`SubmitError::Closed`]) but queued and in-flight work completes
+    /// normally; see [`Server::drain`].
+    draining: bool,
     next_batch_id: u64,
     stats: CenterStats,
 }
@@ -1048,6 +1132,8 @@ struct Shared {
     pool: Mutex<Pool>,
     /// Wakes idle workers on new batches / shutdown.
     pool_cv: Condvar,
+    /// Wakes a [`Server::drain`] waiter as work completes.
+    drain_cv: Condvar,
     /// Batch-to-worker placement policy.
     route: Route,
     /// Telemetry sinks installed around every executor dispatch plus
@@ -1212,6 +1298,7 @@ impl Server {
                 queued: 0,
                 in_flight: 0,
                 closed: false,
+                draining: false,
                 next_batch_id: 0,
                 stats: CenterStats {
                     per_worker_batches: vec![0; cfg.workers],
@@ -1230,6 +1317,7 @@ impl Server {
                 steal_min,
             }),
             pool_cv: Condvar::new(),
+            drain_cv: Condvar::new(),
             route,
             telemetry,
         });
@@ -1243,10 +1331,12 @@ impl Server {
             let mk = Arc::clone(&make_executor);
             workers.push(std::thread::spawn(move || worker_loop(idx, shared, tx, mk)));
         }
-        drop(res_tx);
-
         let sched_shared = Arc::clone(&shared);
-        let scheduler = std::thread::spawn(move || scheduler_loop(sched_shared));
+        // the scheduler keeps the original sender: it sends terminal
+        // Responses itself for jobs it evicts at batch formation
+        // (deadline expiry); the receiver disconnects once the
+        // scheduler and every worker have exited
+        let scheduler = std::thread::spawn(move || scheduler_loop(sched_shared, res_tx));
 
         (
             Server { shared, scheduler: Some(scheduler), workers, started: Instant::now() },
@@ -1269,8 +1359,18 @@ impl Server {
         };
         let mut center = lock(&self.shared.center);
         loop {
-            if center.closed {
+            if center.closed || center.draining {
                 return Err(SubmitError::Closed);
+            }
+            // SLO-aware shedding: a backlog at/over the threshold fails
+            // fast regardless of the per-tenant Admission policy —
+            // blocking or queueing more work under overload only turns
+            // would-be rejections into deadline misses.
+            if self.shared.cfg.shed_queued > 0 && center.queued >= self.shared.cfg.shed_queued {
+                let retry_after_micros = retry_after_hint(&center, &self.shared.cfg);
+                center.stats.shed += 1;
+                center.stats.per_tenant.entry(tenant).or_default().rejected += 1;
+                return Err(SubmitError::Shed { tenant, retry_after_micros });
             }
             if !center.queues.contains_key(&tenant) {
                 center.queues.insert(tenant, TenantQueue::default());
@@ -1321,7 +1421,11 @@ impl Server {
             submitted: s.submitted,
             completed: s.completed,
             rejected: s.rejected,
+            shed: s.shed,
             errors: s.errors,
+            quarantined: s.quarantined,
+            deadline_expired: s.deadline_expired,
+            drains: s.drains,
             batches: s.batches,
             steals: pool.steals.iter().sum(),
             max_batch_observed: s.max_batch_observed,
@@ -1337,6 +1441,48 @@ impl Server {
         }
     }
 
+    /// Graceful drain: stop admitting new requests, let the scheduler
+    /// dispatch every queued request (deadline eviction still applies)
+    /// and block until the workers have completed all in-flight
+    /// batches.  Responses keep streaming on the receiver throughout.
+    ///
+    /// Draining is safe to run concurrently with a plan hot-swap
+    /// ([`PlanRegistry::reload_if_changed`]): executors resolve the
+    /// registry per batch, so in-flight work finishes on whichever plan
+    /// generation it started with and nothing is torn.  A drained
+    /// server still needs [`Server::finish`] (or drop) to join its
+    /// threads; further [`Server::submit`] calls fail with
+    /// [`SubmitError::Closed`].
+    ///
+    /// When telemetry is attached the drain is flushed into the metric
+    /// registry immediately (`smoothrot_drain_total`), so a final
+    /// snapshot taken after `drain` — even if the process never reaches
+    /// `finish` — records that the drain completed.
+    pub fn drain(&self) {
+        let mut center = lock(&self.shared.center);
+        if !center.draining {
+            center.draining = true;
+        }
+        // a paused scheduler yields to a drain (see scheduler_loop);
+        // blocked submitters must observe the drain and fail out
+        self.shared.sched_cv.notify_all();
+        self.shared.admit_cv.notify_all();
+        while center.queued > 0 || center.in_flight > 0 {
+            center = match self.shared.drain_cv.wait(center) {
+                Ok(g) => g,
+                Err(p) => p.into_inner(),
+            };
+        }
+        center.stats.drains += 1;
+        drop(center);
+        if let Some(t) = &self.shared.telemetry {
+            // ServeMetrics::fill bumps counters by delta, so this early
+            // flush and a later finish() reconcile instead of
+            // double-counting
+            t.registry().counter("smoothrot_drain_total", &[]).add(1);
+        }
+    }
+
     fn shutdown(&mut self) {
         {
             let mut center = lock(&self.shared.center);
@@ -1344,6 +1490,7 @@ impl Server {
         }
         self.shared.sched_cv.notify_all();
         self.shared.admit_cv.notify_all();
+        self.shared.drain_cv.notify_all();
         if let Some(h) = self.scheduler.take() {
             let _ = h.join();
         }
@@ -1365,16 +1512,82 @@ fn saturated(c: &Center, depth: usize) -> bool {
     c.queues.values().any(|q| q.len() >= depth)
 }
 
-fn scheduler_loop(shared: Arc<Shared>) {
+/// Retry-after hint for a shed request: the backlog's expected service
+/// time (queued jobs × observed mean per-request executor time, spread
+/// over the workers), floored so the hint never tells a client to
+/// hammer straight back.
+fn retry_after_hint(c: &Center, cfg: &ServeConfig) -> u64 {
+    let mean_exec = if c.stats.completed > 0 {
+        c.stats.exec_micros_total / c.stats.completed
+    } else {
+        // nothing observed yet: assume a batch-formation linger is the
+        // dominant cost
+        cfg.linger_micros.max(100)
+    };
+    (c.queued as u64)
+        .saturating_mul(mean_exec.max(1))
+        .div_ceil(cfg.workers.max(1) as u64)
+        .max(100)
+}
+
+/// Evict queued jobs whose deadline has passed (or that the
+/// `serve.deadline_expire` failpoint forces to expire), producing their
+/// terminal errored [`Response`]s.  Caller holds the center lock; the
+/// returned responses must be sent after the bookkeeping here.
+fn evict_expired(c: &mut Center, deadline_micros: u64) -> Vec<Response> {
+    let now = Instant::now();
+    let deadline = Duration::from_micros(deadline_micros);
+    let mut out = Vec::new();
+    for (&tenant, q) in c.queues.iter_mut() {
+        let expired: Vec<u64> = q
+            .items
+            .iter()
+            .filter(|(_, p)| {
+                (deadline_micros > 0 && now.duration_since(p.admitted) >= deadline)
+                    || crate::faults::fire_key("serve.deadline_expire", p.job.id)
+            })
+            .map(|(&seq, _)| seq)
+            .collect();
+        for seq in expired {
+            let p = q.remove_seq(seq).expect("seq collected above");
+            let waited = now.duration_since(p.admitted).as_micros() as u64;
+            c.queued -= 1;
+            c.stats.completed += 1;
+            c.stats.errors += 1;
+            c.stats.deadline_expired += 1;
+            c.stats.per_tenant.entry(tenant).or_default().completed += 1;
+            out.push(Response {
+                id: p.job.id,
+                tenant,
+                module: p.job.module,
+                layer: p.job.layer,
+                worker: usize::MAX,
+                batch_id: u64::MAX,
+                batch_size: 0,
+                out: Err(format!(
+                    "deadline expired after {waited}µs in queue (deadline {deadline_micros}µs)"
+                )),
+                queue_micros: waited,
+                exec_micros: 0,
+                total_micros: waited,
+            });
+        }
+    }
+    out
+}
+
+fn scheduler_loop(shared: Arc<Shared>, tx: Sender<Response>) {
     let cfg = shared.cfg;
     // Under Reject admission nobody ever blocks on a full queue, so the
     // pause may hold through saturation (tests rely on that); under
-    // Block it must yield or a submitter would deadlock.
+    // Block it must yield or a submitter would deadlock.  A drain
+    // always overrides the pause: queued work must complete.
     let unblock_on_full = cfg.admission == Admission::Block;
     let mut center = lock(&shared.center);
     loop {
         if cfg.paused
             && !center.closed
+            && !center.draining
             && !(unblock_on_full && saturated(&center, cfg.queue_depth))
         {
             center = match shared.sched_cv.wait(center) {
@@ -1429,6 +1642,26 @@ fn scheduler_loop(shared: Arc<Shared>) {
                 continue;
             }
         }
+        // Deadline eviction at batch formation: expired jobs get a
+        // named terminal Response without ever reaching an executor.
+        // The faults::armed() arm exists so the `serve.deadline_expire`
+        // failpoint can force expiries with no deadline configured.
+        if cfg.deadline_micros > 0 || crate::faults::armed() {
+            let expired = evict_expired(&mut center, cfg.deadline_micros);
+            if !expired.is_empty() {
+                // queue space freed — and possibly the whole backlog
+                shared.admit_cv.notify_all();
+                if center.queued == 0 && center.in_flight == 0 {
+                    shared.drain_cv.notify_all();
+                }
+                for r in expired {
+                    let _ = tx.send(r);
+                }
+                if center.queued == 0 {
+                    continue;
+                }
+            }
+        }
         let batch = match &shared.telemetry {
             Some(t) => {
                 let t0 = Instant::now();
@@ -1468,6 +1701,18 @@ fn scheduler_loop(shared: Arc<Shared>) {
     let mut pool = lock(&shared.pool);
     pool.done = true;
     shared.pool_cv.notify_all();
+}
+
+/// Best-effort text of a caught panic payload (the standard `&str` /
+/// `String` payloads; anything else keeps a stable placeholder).
+fn panic_message(p: &(dyn std::any::Any + Send)) -> &str {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        s
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s
+    } else {
+        "non-string panic payload"
+    }
 }
 
 fn worker_loop<E, F>(idx: usize, shared: Arc<Shared>, tx: Sender<Response>, mk: Arc<F>)
@@ -1526,11 +1771,56 @@ where
         let Some(batch) = batch else { break };
 
         let t0 = Instant::now();
+        let mut quarantined_now: u64 = 0;
         let mut results: Vec<Result<AnalyzeOut, String>> = match exec.as_mut() {
             // the telemetry scope installs the stage-timer and
             // difficulty sinks on this thread for the duration of the
             // dispatch; with telemetry off this is a plain call
-            Some(e) => telemetry::scoped(shared.telemetry.as_ref(), || e.run_batch(&batch.jobs)),
+            Some(e) => {
+                let jobs = &batch.jobs;
+                match panic::catch_unwind(AssertUnwindSafe(|| {
+                    telemetry::scoped(shared.telemetry.as_ref(), || e.run_batch(jobs))
+                })) {
+                    Ok(r) => r,
+                    // A poisoned batch: one job's panic must not take
+                    // its batchmates down.  Split and retry each job as
+                    // its own single-job batch under its own
+                    // catch_unwind — exact, because the fused batch
+                    // path is row-local (docs/EQUATIONS.md) — and
+                    // quarantine only the job(s) that panic alone.
+                    // The executor survives the unwind: the kernel
+                    // ThreadPool catches task panics internally and
+                    // re-raises them on this thread with the pool
+                    // intact, the Workspace re-allocates any buffer
+                    // dropped mid-flight, and the RotationCache only
+                    // ever gains fully-built entries.
+                    Err(_) => jobs
+                        .iter()
+                        .map(|j| {
+                            let one = panic::catch_unwind(AssertUnwindSafe(|| {
+                                telemetry::scoped(shared.telemetry.as_ref(), || {
+                                    e.run_batch(std::slice::from_ref(j))
+                                })
+                            }));
+                            match one {
+                                Ok(mut v) if v.len() == 1 => v.pop().expect("len checked"),
+                                Ok(_) => Err(format!(
+                                    "worker {idx}: job {} retry returned a wrong result count",
+                                    j.id
+                                )),
+                                Err(p) => {
+                                    quarantined_now += 1;
+                                    Err(format!(
+                                        "worker {idx}: job {} quarantined after panic: {}",
+                                        j.id,
+                                        panic_message(p.as_ref())
+                                    ))
+                                }
+                            }
+                        })
+                        .collect(),
+                }
+            }
             None => batch
                 .jobs
                 .iter()
@@ -1596,11 +1886,14 @@ where
                 });
             }
             center.in_flight -= batch_size;
+            center.stats.quarantined += quarantined_now;
             center.stats.exec_micros_total += exec_micros;
             center.stats.per_worker_batches[idx] += 1;
         }
         // Wake the scheduler: completed work frees in-flight budget.
+        // A drain waiter watches the same completions.
         shared.sched_cv.notify_one();
+        shared.drain_cv.notify_all();
         for r in responses {
             // The receiver may have been dropped; completion is still
             // recorded in the metrics above.
@@ -1776,7 +2069,7 @@ where
     let (server, responses) = Server::start_with_telemetry(cfg, telemetry, make_executor);
     for (tenant, job) in requests {
         match server.submit(tenant, job) {
-            Ok(()) | Err(SubmitError::Full { .. }) => {}
+            Ok(()) | Err(SubmitError::Full { .. } | SubmitError::Shed { .. }) => {}
             Err(e) => return Err(e),
         }
     }
@@ -2462,5 +2755,145 @@ mod tests {
             center.closed = true;
         }
         assert_eq!(server2.submit(0, job(1, "k_proj", 8, 8)), Err(SubmitError::Closed));
+    }
+
+    /// Executor that panics whenever it sees the poison job id.
+    struct PanicExec {
+        poison: u64,
+    }
+
+    impl Executor for PanicExec {
+        fn run(&mut self, job: &Job) -> Result<AnalyzeOut, String> {
+            if job.id == self.poison {
+                panic!("poison job {}", job.id);
+            }
+            let mut out = AnalyzeOut::default();
+            out.errors[0] = job.id as f64;
+            Ok(out)
+        }
+    }
+
+    #[test]
+    fn panicking_job_is_quarantined_and_batchmates_survive() {
+        // paused server, one worker: eight same-key jobs form two
+        // batches of four; job 2 panics its batch, the worker splits
+        // and retries per job, quarantines only job 2, and survives to
+        // run the second batch
+        let cfg = ServeConfig {
+            workers: 1,
+            max_batch: 4,
+            queue_depth: 64,
+            paused: true,
+            ..Default::default()
+        };
+        let reqs = (0..8).map(|i| (0, job(i, "k_proj", 8, 8))).collect();
+        let (responses, m) = serve_all(cfg, reqs, |_| Ok(PanicExec { poison: 2 })).unwrap();
+        assert_eq!(responses.len(), 8, "every job gets exactly one terminal response");
+        assert_eq!(m.completed, 8);
+        assert_eq!(m.errors, 1);
+        assert_eq!(m.quarantined, 1);
+        assert_eq!(m.batches, 2, "the worker survived its poisoned batch");
+        for r in &responses {
+            if r.id == 2 {
+                let e = r.out.as_ref().unwrap_err();
+                assert!(e.contains("quarantined after panic"), "{e}");
+                assert!(e.contains("poison job 2"), "panic payload surfaced: {e}");
+            } else {
+                assert_eq!(
+                    r.out.as_ref().unwrap().errors[0] as u64,
+                    r.id,
+                    "batchmates of the poison job still get their own results"
+                );
+            }
+        }
+    }
+
+    // NOTE: failpoint-armed serving scenarios (serve.exec_panic,
+    // serve.deadline_expire, plan.reload_corrupt) live in
+    // tests/chaos_serve.rs, where every test serializes on
+    // `faults::exclusive()`.  Arming the process-global fault plan from
+    // this module would race the rest of this (parallel) unit suite.
+
+    #[test]
+    fn expired_deadline_evicts_queued_requests_with_named_error() {
+        let _g = crate::faults::exclusive();
+        crate::faults::disarm();
+        // paused server: jobs sit in the tenant queues while we age
+        // them past a 1ms deadline; the close-triggered dispatch then
+        // evicts all of them at batch formation
+        let cfg = ServeConfig {
+            workers: 1,
+            max_batch: 4,
+            queue_depth: 64,
+            paused: true,
+            deadline_micros: 1_000,
+            ..Default::default()
+        };
+        let (server, rx) = Server::start(cfg, |_| Ok(SleepExec { micros: 0 }));
+        for i in 0..6 {
+            server.submit(0, job(i, "k_proj", 8, 8)).unwrap();
+        }
+        std::thread::sleep(Duration::from_millis(20));
+        let m = server.finish();
+        let responses: Vec<Response> = rx.iter().collect();
+        assert_eq!(responses.len(), 6);
+        assert_eq!(m.completed, 6);
+        assert_eq!(m.deadline_expired, 6);
+        assert_eq!(m.errors, 6);
+        for r in &responses {
+            let e = r.out.as_ref().unwrap_err();
+            assert!(e.contains("deadline expired"), "{e}");
+            assert_eq!(r.worker, usize::MAX, "evicted by the scheduler, not a worker");
+            assert_eq!(r.batch_size, 0);
+        }
+    }
+
+    #[test]
+    fn shed_kicks_in_at_the_queue_pressure_bound_with_a_retry_hint() {
+        let cfg = ServeConfig {
+            workers: 1,
+            max_batch: 4,
+            queue_depth: 64,
+            shed_queued: 4,
+            paused: true,
+            ..Default::default()
+        };
+        let (server, rx) = Server::start(cfg, |_| Ok(SleepExec { micros: 0 }));
+        for i in 0..4 {
+            server.submit(0, job(i, "k_proj", 8, 8)).unwrap();
+        }
+        match server.submit(1, job(4, "k_proj", 8, 8)) {
+            Err(SubmitError::Shed { tenant, retry_after_micros }) => {
+                assert_eq!(tenant, 1);
+                assert!(retry_after_micros >= 100, "hint floored: {retry_after_micros}");
+            }
+            other => panic!("expected Shed, got {other:?}"),
+        }
+        let m = server.finish();
+        assert_eq!(m.shed, 1);
+        assert_eq!(m.completed, 4);
+        assert_eq!(rx.iter().count(), 4);
+    }
+
+    #[test]
+    fn drain_completes_inflight_work_and_stops_admission() {
+        let cfg = ServeConfig { workers: 2, max_batch: 4, queue_depth: 64, ..Default::default() };
+        let (server, rx) = Server::start(cfg, |_| Ok(SleepExec { micros: 500 }));
+        for i in 0..12 {
+            server.submit((i % 2) as TenantId, job(i, "k_proj", 8, 8)).unwrap();
+        }
+        server.drain();
+        // post-drain the backlog is fully executed and admission is off
+        assert_eq!(server.submit(0, job(99, "k_proj", 8, 8)), Err(SubmitError::Closed));
+        let m = server.finish();
+        assert_eq!(m.completed, 12);
+        assert_eq!(m.errors, 0);
+        assert_eq!(m.drains, 1);
+        let mut ids: BTreeMap<u64, usize> = BTreeMap::new();
+        for r in rx.iter() {
+            *ids.entry(r.id).or_default() += 1;
+        }
+        assert_eq!(ids.len(), 12, "every drained job answered exactly once");
+        assert!(ids.values().all(|&n| n == 1));
     }
 }

@@ -193,6 +193,15 @@ impl ShardedServer {
         self.inner.submit(tenant, job)
     }
 
+    /// Graceful drain across every runner: stop admission, complete all
+    /// queued and in-flight batches (safe concurrently with a plan
+    /// hot-swap — all runners share one registry and resolve it per
+    /// batch), and flush the drain into telemetry (see
+    /// [`Server::drain`]).
+    pub fn drain(&self) {
+        self.inner.drain()
+    }
+
     /// Drain, join all runners and return the merged summary (see
     /// [`Server::finish`]).
     pub fn finish(self) -> ServeMetrics {
@@ -202,8 +211,9 @@ impl ShardedServer {
 
 /// Submit a fixed request list to a fresh sharded server, drain it and
 /// return `(responses, metrics)` — the sharded twin of
-/// [`super::serve_all`].  [`SubmitError::Full`] rejections are counted
-/// in the metrics, not returned as errors.
+/// [`super::serve_all`].  [`SubmitError::Full`] rejections and
+/// [`SubmitError::Shed`] sheds are counted in the metrics, not
+/// returned as errors.
 pub fn serve_all_sharded<E, F>(
     cfg: ShardConfig,
     requests: Vec<(TenantId, Job)>,
@@ -231,7 +241,7 @@ where
     let (server, responses) = ShardedServer::start_with_telemetry(cfg, telemetry, make_executor);
     for (tenant, job) in requests {
         match server.submit(tenant, job) {
-            Ok(()) | Err(SubmitError::Full { .. }) => {}
+            Ok(()) | Err(SubmitError::Full { .. } | SubmitError::Shed { .. }) => {}
             Err(e) => return Err(e),
         }
     }
@@ -510,5 +520,74 @@ mod tests {
         assert_eq!(m.completed, 32);
         assert_eq!(m.errors, 0);
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// Executor that panics on one poison job id (sharded twin of the
+    /// classic quarantine test).
+    struct PoisonExec {
+        poison: u64,
+    }
+
+    impl Executor for PoisonExec {
+        fn run(&mut self, job: &Job) -> Result<AnalyzeOut, String> {
+            if job.id == self.poison {
+                panic!("poison job {}", job.id);
+            }
+            let mut out = AnalyzeOut::default();
+            out.errors[0] = job.id as f64;
+            Ok(out)
+        }
+    }
+
+    #[test]
+    fn sharded_quarantine_keeps_the_owning_runner_alive() {
+        // the poison job (id 5, layer 1) panics its batch inside runner
+        // 1; that runner must split, quarantine only job 5, and keep
+        // serving its layer — no runner dies, no response is lost
+        let reqs: Vec<(TenantId, Job)> =
+            (0..16).map(|i| (0, job(i, (i as usize) % 4, 8))).collect();
+        let (responses, m) =
+            serve_all_sharded(cfg(4, ShardBy::Layer, false), reqs, |_| Ok(PoisonExec { poison: 5 }))
+                .unwrap();
+        assert_eq!(responses.len(), 16);
+        assert_eq!(m.completed, 16);
+        assert_eq!(m.quarantined, 1);
+        assert_eq!(m.errors, 1);
+        for r in &responses {
+            if r.id == 5 {
+                assert!(r.out.as_ref().unwrap_err().contains("quarantined after panic"));
+            } else {
+                assert_eq!(r.out.as_ref().unwrap().errors[0] as u64, r.id);
+            }
+        }
+        // layer 1's other jobs (1, 9, 13) were still served by a live
+        // runner after the poisoned batch
+        let layer1_ok = responses.iter().filter(|r| r.layer == 1 && r.out.is_ok()).count();
+        assert_eq!(layer1_ok, 3, "the poisoned runner kept serving its shard");
+    }
+
+    #[test]
+    fn sharded_drain_finishes_every_runner() {
+        let scfg = ShardConfig {
+            runners: 3,
+            shard_by: ShardBy::Layer,
+            stealing: true,
+            base: ServeConfig { workers: 1, max_batch: 4, queue_depth: 64, ..Default::default() },
+        };
+        let (server, rx) = ShardedServer::start(scfg, |_| Ok(EchoExec { micros: 300 }));
+        for i in 0..18u64 {
+            server.submit((i % 2) as TenantId, job(i, (i as usize) % 3, 8)).unwrap();
+        }
+        server.drain();
+        assert_eq!(
+            server.submit(0, job(99, 0, 8)),
+            Err(SubmitError::Closed),
+            "a drained sharded server admits nothing"
+        );
+        let m = server.finish();
+        assert_eq!(m.completed, 18);
+        assert_eq!(m.drains, 1);
+        let ids: std::collections::BTreeSet<u64> = rx.iter().map(|r| r.id).collect();
+        assert_eq!(ids.len(), 18, "every job answered exactly once across runners");
     }
 }

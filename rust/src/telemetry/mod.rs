@@ -156,6 +156,8 @@ pub fn plan_registry_collector(
             ("smoothrot_int8_degraded_total", degraded),
             ("smoothrot_batch_fused_total", reg.batch_fused()),
             ("smoothrot_plan_reload_skipped_total", reg.reload_skipped_identical()),
+            ("smoothrot_reload_failed", reg.reload_failed()),
+            ("smoothrot_preload_degraded", reg.preload_degraded()),
         ];
         for (name, value) in counters {
             snap.counters.push(CounterRow { name: name.into(), labels: Vec::new(), value });

@@ -1,0 +1,361 @@
+//! Chaos suite: the serving stack under deterministic fault injection
+//! (check = proptest-lite, [`smoothrot::faults`] = failpoints).
+//!
+//! Over seeded fault schedules — executor panics, forced deadline
+//! expiries, plan-reload corruption — crossed with runner topologies
+//! and stealing modes, the stack must keep its contract: every
+//! submitted job gets **exactly one** terminal response, no runner
+//! dies permanently, the plan registry never serves a torn artifact
+//! (generation moves monotonically, only on successful swaps), and
+//! every *unfaulted* job's output is bit-identical to a fault-free
+//! run.  The CLI tests at the bottom pin that operator-facing failures
+//! (missing plan, unwritable metrics target, malformed fault spec) are
+//! named errors with a nonzero exit, never a panic backtrace.
+//!
+//! Every test that arms the process-global fault plan holds
+//! [`faults::exclusive`] for its whole body and disarms on drop, so
+//! this suite is safe under cargo's parallel test runner.
+
+use smoothrot::calib::plan::{PlanEntry, Provenance, QuantPlan};
+use smoothrot::calib::registry::{PlanRegistry, RELOAD_BACKOFF_INITIAL};
+use smoothrot::check::{check, ensure};
+use smoothrot::coordinator::Job;
+use smoothrot::faults;
+use smoothrot::rng::Rng;
+use smoothrot::serve::shard::{serve_all_sharded, ShardBy, ShardConfig};
+use smoothrot::serve::{
+    serve_all, NativeBatchExecutor, Response, ServeConfig, Server, SubmitError,
+};
+use smoothrot::telemetry::{self, Telemetry};
+use smoothrot::tensor::Matrix;
+use smoothrot::transforms::Mode;
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+/// Disarm the global fault plan when dropped — keeps a failed
+/// assertion from leaking an armed plan into the next test.
+struct Disarm;
+
+impl Drop for Disarm {
+    fn drop(&mut self) {
+        faults::disarm();
+    }
+}
+
+/// Deterministic request stream: real (seeded) activations and weights
+/// so outputs are meaningful and bit-comparable across runs.
+fn requests(n: usize, layers: usize, seed: u64) -> Vec<(usize, Job)> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|i| {
+            let rows = 2 + (i % 3);
+            let x = Matrix::from_vec(rows, 8, rng.normals_f32(rows * 8));
+            let w = Matrix::from_vec(8, 4, rng.normals_f32(32));
+            let job = Job {
+                id: i as u64,
+                layer: i % layers,
+                module: "k_proj",
+                x,
+                w,
+                alpha: 0.5,
+                bits: 4,
+            };
+            (i % 3, job)
+        })
+        .collect()
+}
+
+fn by_id(rs: &[Response]) -> BTreeMap<u64, &Response> {
+    rs.iter().map(|r| (r.id, r)).collect()
+}
+
+#[test]
+fn prop_panic_schedules_keep_exactly_once_and_bit_identity() {
+    let _x = faults::exclusive();
+    let _d = Disarm;
+    check("chaos: panic schedule x topology -> exactly-once + bit identity", 9, |g| {
+        let runners = *g.choose(&[1usize, 2, 4]);
+        let stealing = g.usize_in(0, 1) == 1;
+        let modulus = g.usize_in(2, 5) as u64;
+        let residue = g.usize_in(0, modulus as usize - 1) as u64;
+        let n = g.usize_in(8, 24);
+        let seed = 7000 + g.usize_in(0, 999) as u64;
+        let reqs = requests(n, 4, seed);
+        let cfg = ShardConfig {
+            runners,
+            shard_by: ShardBy::Layer,
+            stealing,
+            base: ServeConfig { workers: 1, max_batch: 4, queue_depth: 64, ..Default::default() },
+        };
+
+        // fault-free baseline
+        faults::disarm();
+        let (base, base_m) =
+            serve_all_sharded(cfg, reqs.clone(), |_| Ok(NativeBatchExecutor::with_threads(1)))
+                .map_err(|e| e.to_string())?;
+        ensure(base_m.errors == 0, "the fault-free baseline must be clean")?;
+
+        // same stream under a seeded panic schedule: jobs with
+        // id % modulus == residue panic on every dispatch
+        faults::arm(&format!("serve.exec_panic=mod:{modulus}:{residue}"))?;
+        let (chaos, m) = serve_all_sharded(cfg, reqs, |_| Ok(NativeBatchExecutor::with_threads(1)))
+            .map_err(|e| e.to_string())?;
+        faults::disarm();
+
+        let poisoned = (0..n as u64).filter(|id| id % modulus == residue).count() as u64;
+        ensure(chaos.len() == n, format!("lost responses: {} of {n}", chaos.len()))?;
+        ensure(m.completed as usize == n, "metrics.completed mismatch")?;
+        ensure(m.quarantined == poisoned, format!("quarantined {} != {poisoned}", m.quarantined))?;
+        ensure(m.errors == poisoned, "only poisoned jobs may error")?;
+
+        let base_by_id = by_id(&base);
+        let mut seen = vec![false; n];
+        for r in &chaos {
+            let idx = r.id as usize;
+            ensure(idx < n && !seen[idx], format!("job {idx} duplicated or unknown"))?;
+            seen[idx] = true;
+            if r.id % modulus == residue {
+                let e = r.out.as_ref().err().ok_or("poisoned job did not error")?;
+                ensure(e.contains("quarantined after panic"), format!("wrong error: {e}"))?;
+            } else {
+                let got = r.out.as_ref().map_err(|e| format!("unfaulted job {idx}: {e}"))?;
+                let want = base_by_id[&r.id].out.as_ref().map_err(|e| e.clone())?;
+                ensure(got == want, format!("job {idx} diverged from the fault-free run"))?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_forced_deadline_expiry_evicts_exactly_the_scheduled_subset() {
+    let _x = faults::exclusive();
+    let _d = Disarm;
+    check("chaos: deadline schedule -> exact eviction set, exactly-once", 8, |g| {
+        let modulus = g.usize_in(2, 4) as u64;
+        let residue = g.usize_in(0, modulus as usize - 1) as u64;
+        let n = g.usize_in(6, 18);
+        let reqs = requests(n, 4, 8800 + g.usize_in(0, 99) as u64);
+        // paused server: the whole stream is queued before the
+        // close-triggered dispatch, so the eviction scan sees every job
+        faults::arm(&format!("serve.deadline_expire=mod:{modulus}:{residue}"))?;
+        let cfg = ServeConfig {
+            workers: g.usize_in(1, 2),
+            max_batch: 4,
+            queue_depth: 64,
+            paused: true,
+            ..Default::default()
+        };
+        let (responses, m) = serve_all(cfg, reqs, |_| Ok(NativeBatchExecutor::with_threads(1)))
+            .map_err(|e| e.to_string())?;
+        faults::disarm();
+
+        let forced = (0..n as u64).filter(|id| id % modulus == residue).count() as u64;
+        ensure(responses.len() == n, "every job needs a terminal response")?;
+        ensure(m.deadline_expired == forced, "eviction count mismatch")?;
+        ensure(m.completed as usize == n, "evictions count as completions")?;
+        let mut seen = vec![false; n];
+        for r in &responses {
+            let idx = r.id as usize;
+            ensure(idx < n && !seen[idx], format!("job {idx} duplicated or unknown"))?;
+            seen[idx] = true;
+            if r.id % modulus == residue {
+                let e = r.out.as_ref().err().ok_or("forced-expired job did not error")?;
+                ensure(e.contains("deadline expired"), format!("wrong error: {e}"))?;
+                ensure(r.worker == usize::MAX, "evicted jobs never reach a worker")?;
+            } else {
+                ensure(r.out.is_ok(), format!("unfaulted job {idx} must succeed"))?;
+            }
+        }
+        Ok(())
+    });
+}
+
+fn plan_with_mode(mode: Mode) -> QuantPlan {
+    QuantPlan {
+        provenance: Provenance::default(),
+        entries: (0..4)
+            .map(|layer| PlanEntry {
+                module: "k_proj".into(),
+                layer,
+                bits: 4,
+                c_in: 8,
+                mode,
+                alpha: 0.5,
+                predicted_error: 1.0,
+                difficulty_before: 2.0,
+                difficulty_after: 1.0,
+                smooth: None,
+            })
+            .collect(),
+    }
+}
+
+#[test]
+fn reload_corruption_keeps_the_old_plan_live_and_recovers_after_backoff() {
+    let _x = faults::exclusive();
+    let _d = Disarm;
+    faults::disarm();
+    let dir = std::env::temp_dir().join("smoothrot_chaos_reload_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("plan.json");
+    plan_with_mode(Mode::Rotate).save(&path).unwrap();
+    let reg = Arc::new(PlanRegistry::load(&path).unwrap());
+    let t = Telemetry::new();
+    t.add_collector(telemetry::plan_registry_collector(&reg));
+    let gen0 = reg.generation();
+    let hash0 = reg.content_hash();
+
+    // a genuinely torn artifact on disk: truncated JSON
+    std::fs::write(&path, "{\"version\": 1, \"entries\": [").unwrap();
+    assert!(reg.reload_if_changed().is_err(), "torn plan must fail the reload");
+    assert_eq!(reg.content_hash(), hash0, "the old plan stays live");
+    assert_eq!(reg.generation(), gen0, "generation only moves on successful swaps");
+    assert_eq!(reg.reload_failed(), 1);
+    // inside the backoff window the (still corrupt) file is not even read
+    assert_eq!(reg.reload_if_changed(), Ok(false));
+    assert_eq!(reg.reload_failed(), 1, "backoff window suppresses re-parsing");
+    assert_eq!(
+        t.snapshot().counter("smoothrot_reload_failed", &[]),
+        Some(1),
+        "reload_failed surfaces through the registry collector"
+    );
+
+    // a good rewrite that the failpoint forces to be treated as torn
+    std::thread::sleep(RELOAD_BACKOFF_INITIAL + std::time::Duration::from_millis(50));
+    plan_with_mode(Mode::None).save(&path).unwrap();
+    faults::arm("plan.reload_corrupt=hit:1").unwrap();
+    assert!(reg.reload_if_changed().is_err(), "failpoint-forced corruption");
+    assert_eq!(reg.generation(), gen0);
+    assert_eq!(reg.content_hash(), hash0);
+    assert_eq!(reg.reload_failed(), 2);
+    faults::disarm();
+
+    // after the (doubled) backoff expires the same file loads cleanly
+    std::thread::sleep(2 * RELOAD_BACKOFF_INITIAL + std::time::Duration::from_millis(100));
+    assert_eq!(reg.reload_if_changed(), Ok(true), "recovery after disarm + backoff");
+    assert!(reg.generation() > gen0, "successful swap bumps the generation");
+    assert_ne!(reg.content_hash(), hash0, "the new content is live");
+    assert_eq!(reg.reload_failed(), 2, "recovery adds no failures");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn fault_shed_drain_counters_round_trip_through_json_and_prometheus() {
+    let _x = faults::exclusive();
+    let _d = Disarm;
+    // one run exercising every new counter: a panic fault, a forced
+    // deadline expiry, shedding under queue pressure and a drain
+    faults::arm("serve.exec_panic=mod:5:1;serve.deadline_expire=mod:5:2").unwrap();
+    let t = Telemetry::new();
+    let cfg = ServeConfig {
+        workers: 1,
+        max_batch: 4,
+        queue_depth: 64,
+        shed_queued: 6,
+        paused: true,
+        ..Default::default()
+    };
+    let (server, rx) = Server::start_with_telemetry(cfg, Some(Arc::clone(&t)), |_| {
+        Ok(NativeBatchExecutor::with_threads(1))
+    });
+    let mut shed = 0u64;
+    for (tenant, job) in requests(10, 4, 41) {
+        match server.submit(tenant, job) {
+            Ok(()) => {}
+            Err(SubmitError::Shed { retry_after_micros, .. }) => {
+                assert!(retry_after_micros >= 100);
+                shed += 1;
+            }
+            Err(e) => panic!("unexpected submit error: {e}"),
+        }
+    }
+    assert_eq!(shed, 4, "jobs 6..10 shed at the queue-pressure bound");
+    server.drain();
+    let m = server.finish();
+    drop(rx);
+    assert_eq!(m.shed, 4);
+    assert_eq!(m.quarantined, 1, "job 1 (of the six admitted) is poisoned");
+    assert_eq!(m.deadline_expired, 1, "job 2 is forced to expire");
+    assert_eq!(m.drains, 1);
+    m.fill(&t);
+
+    let snap = t.snapshot();
+    for (name, want) in [
+        ("smoothrot_jobs_quarantined", m.quarantined),
+        ("smoothrot_deadline_expired", m.deadline_expired),
+        ("smoothrot_shed_total", m.shed),
+        ("smoothrot_drain_total", m.drains),
+    ] {
+        assert_eq!(snap.counter(name, &[]), Some(want), "{name} in the live snapshot");
+    }
+    // JSON round trip preserves the counters bit for bit
+    let back = smoothrot::telemetry::export::Snapshot::parse(&snap.to_json_string()).unwrap();
+    for name in [
+        "smoothrot_jobs_quarantined",
+        "smoothrot_deadline_expired",
+        "smoothrot_shed_total",
+        "smoothrot_drain_total",
+    ] {
+        assert_eq!(back.counter(name, &[]), snap.counter(name, &[]), "{name} via JSON");
+    }
+    // Prometheus exposition carries all four with the right values
+    let samples = smoothrot::telemetry::export::parse_prometheus(&snap.to_prometheus()).unwrap();
+    for (name, want) in [
+        ("smoothrot_jobs_quarantined", m.quarantined),
+        ("smoothrot_deadline_expired", m.deadline_expired),
+        ("smoothrot_shed_total", m.shed),
+        ("smoothrot_drain_total", m.drains),
+    ] {
+        let got = samples.iter().find(|s| s.name == name && s.labels.is_empty());
+        assert_eq!(got.map(|s| s.value), Some(want as f64), "{name} via Prometheus");
+    }
+}
+
+/// Run the CLI binary and return `(status_ok, stderr)`.
+fn run_cli(args: &[&str], env: &[(&str, &str)]) -> (bool, String) {
+    let mut cmd = std::process::Command::new(env!("CARGO_BIN_EXE_smoothrot"));
+    cmd.args(args);
+    for (k, v) in env {
+        cmd.env(k, v);
+    }
+    let out = cmd.output().expect("spawn smoothrot CLI");
+    (out.status.success(), String::from_utf8_lossy(&out.stderr).into_owned())
+}
+
+#[test]
+fn cli_failures_are_named_errors_not_panics() {
+    // missing --plan file
+    let (ok, err) =
+        run_cli(&["serve", "--backend", "native", "--plan", "/nonexistent/plan.json"], &[]);
+    assert!(!ok, "missing plan must exit nonzero");
+    assert!(err.contains("error:"), "named error expected, got:\n{err}");
+    assert!(!err.contains("panicked"), "must not panic:\n{err}");
+
+    // metrics target under a nonexistent directory
+    let (ok, err) =
+        run_cli(&["serve", "--requests", "1", "--metrics-file", "/nonexistent/dir/m.json"], &[]);
+    assert!(!ok);
+    assert!(err.contains("parent directory"), "named error expected, got:\n{err}");
+    assert!(!err.contains("panicked"), "must not panic:\n{err}");
+
+    // metrics target that is a directory
+    let dir = std::env::temp_dir().join("smoothrot_chaos_cli_dir");
+    std::fs::create_dir_all(&dir).unwrap();
+    let (ok, err) =
+        run_cli(&["serve", "--requests", "1", "--metrics-file", dir.to_str().unwrap()], &[]);
+    assert!(!ok);
+    assert!(err.contains("is a directory"), "named error expected, got:\n{err}");
+    std::fs::remove_dir_all(&dir).ok();
+
+    // malformed --faults spec
+    let (ok, err) =
+        run_cli(&["serve", "--requests", "1", "--faults", "serve.exec_panic=bogus"], &[]);
+    assert!(!ok);
+    assert!(err.contains("error: --faults"), "named error expected, got:\n{err}");
+
+    // malformed SMOOTHROT_FAULTS env spec
+    let (ok, err) = run_cli(&["serve", "--requests", "1"], &[("SMOOTHROT_FAULTS", "=always")]);
+    assert!(!ok);
+    assert!(err.contains("error: SMOOTHROT_FAULTS"), "named error expected, got:\n{err}");
+}
