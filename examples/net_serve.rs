@@ -1,0 +1,131 @@
+//! Network serving demo: the HTTP/1.1 front-end plus the open-loop
+//! load generator, end to end over loopback, artifact-free.
+//!
+//! Starts the serving core behind [`smoothrot::serve::net::NetServer`]
+//! on an ephemeral port, drives it with [`smoothrot::loadgen`] through
+//! a warm → steady → burst phase schedule (Poisson arrivals, skewed
+//! tenants), prints the client-side latency percentiles and error
+//! taxonomy, then proves the wire tier's two contracts:
+//!
+//! * **bit identity** — every OK response's `errors_bits` replayed
+//!   through an in-process executor over the same job builder matches
+//!   exactly (the network adds transport, not arithmetic);
+//! * **graceful drain** — `POST /admin/drain` semantics via
+//!   [`NetServer::drain`]: zero in-flight responses lost, and the
+//!   core's end-of-run metrics account for every admitted job.
+//!
+//! ```bash
+//! cargo run --release --example net_serve -- [steady_rps] [burst_rps]
+//! ```
+
+use anyhow::{bail, Result};
+use smoothrot::loadgen::{self, LoadgenConfig, Phase};
+use smoothrot::serve::net::{synth_job_builder, CoreServer, NetConfig, NetServer};
+use smoothrot::serve::{NativeBatchExecutor, ServeConfig};
+use smoothrot::telemetry::Telemetry;
+use std::time::Duration;
+
+const STREAM_SEED: u64 = 2025;
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let steady_rps: f64 = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(40.0);
+    let burst_rps: f64 = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(4.0 * 40.0);
+
+    // the serving core: bounded queue + load shedding, so the burst
+    // phase degrades to fast 429s instead of unbounded queue growth
+    let cfg = ServeConfig {
+        workers: 2,
+        max_batch: 8,
+        queue_depth: 64,
+        shed_queued: 48,
+        ..ServeConfig::default()
+    };
+    let telemetry = Telemetry::new();
+    let (core, rx) = CoreServer::start_with_telemetry(
+        cfg,
+        None,
+        Some(std::sync::Arc::clone(&telemetry)),
+        |_| Ok(NativeBatchExecutor::new()),
+    );
+    let builder = synth_job_builder(STREAM_SEED);
+    let server = NetServer::start(
+        NetConfig::default(),
+        core,
+        rx,
+        Some(telemetry),
+        builder.clone(),
+    )
+    .map_err(anyhow::Error::msg)?;
+    println!("serving on http://{} (stream seed {STREAM_SEED})\n", server.addr());
+
+    // open-loop load: Poisson arrivals, tenant skew, a 2s profile that
+    // ends in a deliberate overload burst
+    let lg = LoadgenConfig {
+        target: server.addr().to_string(),
+        phases: vec![
+            Phase { name: "warm".into(), duration_ms: 400, rps: steady_rps / 2.0 },
+            Phase { name: "steady".into(), duration_ms: 1_200, rps: steady_rps },
+            Phase { name: "burst".into(), duration_ms: 400, rps: burst_rps },
+        ],
+        tenants: 4,
+        layers: 4,
+        rows: 8,
+        seed: 1,
+        concurrency: 8,
+        timeout: Duration::from_secs(10),
+    };
+    println!(
+        "loadgen: warm {:.0} rps / steady {:.0} rps / burst {:.0} rps ...",
+        steady_rps / 2.0,
+        steady_rps,
+        burst_rps
+    );
+    let mut report = loadgen::run(&lg).map_err(anyhow::Error::msg)?;
+
+    println!("\nclient-side latency (all OK responses):");
+    println!(
+        "  p50 {:>8.2} ms   p95 {:>8.2} ms   p99 {:>8.2} ms",
+        report.percentiles.p50 / 1e3,
+        report.percentiles.p95 / 1e3,
+        report.percentiles.p99 / 1e3,
+    );
+    println!("taxonomy ({} sent):", report.sent);
+    for (name, count) in &report.taxonomy {
+        if *count > 0 {
+            println!("  {name:<12} {count}");
+        }
+    }
+    if let Some(secs) = report.min_retry_after_secs {
+        println!("  (shed responses carried Retry-After >= {secs}s)");
+    }
+
+    // wire-tier bit identity: replay every OK sample in process
+    let mut exec = NativeBatchExecutor::new();
+    let mismatches = report.verify(&builder, |job| exec.run(job));
+    println!(
+        "\nbit-identity verify: {} samples, {mismatches} mismatches",
+        report.ok_samples.len()
+    );
+    if mismatches > 0 {
+        bail!("wire responses diverged from the in-process executor");
+    }
+
+    // graceful drain: in-flight connections finish, then the core's
+    // metrics must balance the client-side ledger
+    server.drain();
+    let m = server.wait().map_err(anyhow::Error::msg)?;
+    let ok = report.taxonomy.get("ok").copied().unwrap_or(0);
+    println!(
+        "\ndrained: core completed {} (errors {}, shed {}, drains {}); client ok {}",
+        m.completed, m.errors, m.shed, m.drains, ok
+    );
+    if m.errors != 0 {
+        bail!("core reported {} executor errors", m.errors);
+    }
+    if m.completed < ok {
+        bail!("core completed {} < client-observed ok {}", m.completed, ok);
+    }
+    println!("net_serve demo passed");
+    Ok(())
+}

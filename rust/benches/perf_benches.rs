@@ -19,13 +19,16 @@
 //!   coalesced batch) vs per-job int8 serve, and sharded multi-runner
 //!   scaling (the same fused int8 stream at 1 / 2 / 4 shard-owning
 //!   runners),
+//! * wire tier: the same int8 stream through the HTTP/1.1 loopback
+//!   front-end (accept, parse, submit, chunked NDJSON, drain) vs the
+//!   in-process batch-fused path — the delta is pure wire machinery,
 //! * runtime: PJRT execute latency for the analyze/transform artifacts
 //!   (the end-to-end request-path unit).
 //!
 //! CI runs this binary with `--smoke` (minimal iterations) so kernel
 //! regressions fail loudly without timing flakiness.  The §Perf section
 //! of EXPERIMENTS.md quotes the full-run numbers.  Every run also
-//! writes a machine-readable `BENCH_8.json` **at the repo root** (the
+//! writes a machine-readable `BENCH_10.json` **at the repo root** (the
 //! committed bench-trajectory artifact; override the path with
 //! `BENCH_JSON=...`).
 
@@ -648,6 +651,85 @@ fn main() {
                 );
             }
         }
+
+        // ---- wire tier: HTTP loopback serve vs in-process (ISSUE 10) --
+        // The same int8 stream pushed through the HTTP/1.1 front-end
+        // over loopback: thread-per-connection accept, request parse,
+        // job build, submit, chunked NDJSON response, graceful drain.
+        // Outputs are bit-identical to the in-process path (pinned by
+        // chaos_net.rs and `loadgen --verify`), so the ratio vs
+        // serve_plan_int8_batchfused_96req is pure wire + connection
+        // machinery overhead — the PR 10 headline.
+        let net_med = {
+            use smoothrot::serve::net::{synth_job_builder, CoreServer, NetConfig, NetServer};
+            use smoothrot::serve::proto;
+            use std::io::{BufReader, BufWriter, Write};
+            use std::net::TcpStream;
+
+            let reg_outer = Arc::clone(&registry);
+            b.bench_items("serve_net_loopback_int8_96req", n as f64, move || {
+                let reg = Arc::clone(&reg_outer);
+                let (core, rx) = CoreServer::start_with_telemetry(
+                    ServeConfig {
+                        workers: 2,
+                        max_batch: 8,
+                        queue_depth: n,
+                        ..ServeConfig::default()
+                    },
+                    None,
+                    None,
+                    move |_| {
+                        Ok(NativeBatchExecutor::with_plan_exec(
+                            Arc::clone(&reg),
+                            1,
+                            ExecMode::Int8,
+                        ))
+                    },
+                );
+                let server =
+                    NetServer::start(NetConfig::default(), core, rx, None, synth_job_builder(400))
+                        .unwrap();
+                let addr = server.addr();
+                let clients = 4usize;
+                let handles: Vec<_> = (0..clients)
+                    .map(|c| {
+                        std::thread::spawn(move || {
+                            for i in (c..n).step_by(clients) {
+                                let layer = (i * n_layers) / n;
+                                let body = format!(
+                                    r#"{{"module":"k_proj","layer":{layer},"rows":32,"seed":{}}}"#,
+                                    500 + i
+                                );
+                                let stream = TcpStream::connect(addr).unwrap();
+                                let mut w = BufWriter::new(stream.try_clone().unwrap());
+                                proto::write_request(&mut w, "POST", "/analyze", body.as_bytes())
+                                    .unwrap();
+                                w.flush().unwrap();
+                                let resp =
+                                    proto::read_response(&mut BufReader::new(stream)).unwrap();
+                                assert_eq!(resp.status, 200);
+                            }
+                        })
+                    })
+                    .collect();
+                for h in handles {
+                    h.join().unwrap();
+                }
+                server.drain();
+                let m = server.wait().unwrap();
+                assert_eq!(m.completed as usize, n);
+                assert_eq!(m.errors, 0);
+                black_box(m.batches);
+            })
+            .map(|m| m.median())
+        };
+        if let (Some(fu), Some(nm)) = (fused_med, net_med) {
+            println!(
+                "    -> HTTP loopback int8 serve vs in-process batch-fused: {:.2}x \
+                 (wire + connection machinery overhead)",
+                nm.as_secs_f64() / fu.as_secs_f64()
+            );
+        }
     }
 
     // ---- PJRT request-path latency --------------------------------------
@@ -684,7 +766,7 @@ fn main() {
     // throughput for every bench above.  The default path resolves to
     // the repo root AT RUNTIME (a compile-time env! path would dangle
     // if the checkout moves or a cached bench binary runs elsewhere),
-    // so `cargo bench` refreshes the committed BENCH_8.json trajectory
+    // so `cargo bench` refreshes the committed BENCH_10.json trajectory
     // file from any working directory inside the repo; BENCH_JSON
     // overrides (CI points it at a scratch path to exercise the writer
     // without dirtying the tree).
@@ -700,10 +782,10 @@ fn default_bench_json() -> String {
     let mut dir = std::env::current_dir().unwrap_or_else(|_| std::path::PathBuf::from("."));
     loop {
         if dir.join("Cargo.toml").exists() && dir.join("rust").is_dir() {
-            return dir.join("BENCH_8.json").to_string_lossy().into_owned();
+            return dir.join("BENCH_10.json").to_string_lossy().into_owned();
         }
         if !dir.pop() {
-            return "BENCH_8.json".to_string();
+            return "BENCH_10.json".to_string();
         }
     }
 }

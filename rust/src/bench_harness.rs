@@ -40,6 +40,31 @@ impl Measurement {
         Duration::from_nanos(v[idx.min(v.len() - 1)] as u64)
     }
 
+    /// One machine-readable scenario row (the element shape of
+    /// `BENCH_<n>.json`'s `results` array, shared with the loadgen
+    /// report so perf-trajectory tooling parses both identically).
+    pub fn to_json_row(&self) -> crate::jsonio::Json {
+        use crate::jsonio::{obj, Json};
+        let mut fields = vec![
+            ("name", Json::Str(self.name.clone())),
+            ("median_ns", Json::Num(self.median().as_nanos() as f64)),
+            ("mean_ns", Json::Num(self.mean().as_nanos() as f64)),
+            ("p95_ns", Json::Num(self.p95().as_nanos() as f64)),
+            ("samples", Json::Num(self.samples.len() as f64)),
+        ];
+        // a 0ns median (empty closure on a coarse clock) would divide
+        // to +inf, which is not representable JSON — emit null instead
+        // of corrupting the artifact
+        let med_secs = self.median().as_secs_f64();
+        match self.items_per_iter {
+            Some(items) if med_secs > 0.0 => {
+                fields.push(("items_per_sec", Json::Num(items / med_secs)))
+            }
+            _ => fields.push(("items_per_sec", Json::Null)),
+        }
+        obj(fields)
+    }
+
     pub fn report_line(&self) -> String {
         let med = self.median();
         let thr = self
@@ -183,30 +208,7 @@ impl Bench {
     /// throughput benches — items per second at the median.
     pub fn to_json(&self, bench: &str) -> crate::jsonio::Json {
         use crate::jsonio::{obj, Json};
-        let results: Vec<Json> = self
-            .results
-            .iter()
-            .map(|m| {
-                let mut fields = vec![
-                    ("name", Json::Str(m.name.clone())),
-                    ("median_ns", Json::Num(m.median().as_nanos() as f64)),
-                    ("mean_ns", Json::Num(m.mean().as_nanos() as f64)),
-                    ("p95_ns", Json::Num(m.p95().as_nanos() as f64)),
-                    ("samples", Json::Num(m.samples.len() as f64)),
-                ];
-                // a 0ns median (empty closure on a coarse clock) would
-                // divide to +inf, which is not representable JSON —
-                // emit null instead of corrupting the artifact
-                let med_secs = m.median().as_secs_f64();
-                match m.items_per_iter {
-                    Some(items) if med_secs > 0.0 => {
-                        fields.push(("items_per_sec", Json::Num(items / med_secs)))
-                    }
-                    _ => fields.push(("items_per_sec", Json::Null)),
-                }
-                obj(fields)
-            })
-            .collect();
+        let results: Vec<Json> = self.results.iter().map(Measurement::to_json_row).collect();
         obj(vec![
             ("bench", Json::Str(bench.to_string())),
             ("mode", Json::Str(self.mode.to_string())),

@@ -21,6 +21,23 @@
 //! | `prob:P:SEED` | deterministically pseudo-random with probability `P`: hashes `SEED` with the caller key (or the hit counter when unkeyed), so the same seed always yields the same fault schedule |
 //! | `mod:K:R` | caller key `% K == R` (hit counter when unkeyed) — a stable "poisoned subset" of jobs |
 //!
+//! ## Wire-level sites
+//!
+//! The network front-end ([`crate::serve::net`]) adds four failpoints
+//! that fire in *connection* threads — never in workers, which is the
+//! isolation the chaos suite asserts (a wire fault must not quarantine
+//! the faulted request's batchmates):
+//!
+//! | site | effect |
+//! |---|---|
+//! | `net.accept_fail` | an accepted connection is dropped before handling (unkeyed) |
+//! | `net.conn_drop` | connection torn down after submit, before any response byte (keyed by wire request id) |
+//! | `net.slow_client` | connection thread stalls before reading, like a byte-trickling client (keyed) |
+//! | `net.partial_write` | half the first result line's bytes, then teardown (keyed) |
+//!
+//! Keyed sites take the wire request counter, so `mod:K:R` poisons a
+//! stable, schedule-independent subset of requests.
+//!
 //! ## Cost when unarmed
 //!
 //! A single relaxed atomic load: [`fire`] checks a global `ARMED` flag

@@ -68,6 +68,7 @@ pub mod coordinator;
 pub mod faults;
 pub mod jsonio;
 pub mod kernels;
+pub mod loadgen;
 pub mod metrics;
 pub mod outlier;
 pub mod pipeline;

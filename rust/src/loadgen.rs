@@ -1,0 +1,564 @@
+//! Open-loop load generator for the network front-end
+//! (`smoothrot loadgen`).
+//!
+//! Open-loop means arrivals are *scheduled*, not paced by responses: a
+//! Poisson process (exponential inter-arrival gaps from the repo's
+//! seeded [`crate::rng::Rng`]) fixes every request's due time up
+//! front, and sender threads fire at those times whether or not
+//! earlier requests have completed.  This is the load shape that
+//! exposes overload behavior — a closed-loop client slows down with
+//! the server and never drives it past saturation, so shedding (429),
+//! queue deadlines (504), and the connection cap (503) would all stay
+//! untested.
+//!
+//! The generated stream mirrors [`crate::serve::synthetic_requests`]:
+//! tenants drawn by [`crate::serve::skewed_tenant`], modules uniform,
+//! layers uniform in `0..layers`, per-request activation seeds — so a
+//! `--verify-plan` replay through the in-process executor must produce
+//! bit-identical `errors_bits` for every request the server answered
+//! 200 (the server's weights come from *its* stream seed; the replay
+//! uses the same builder).
+//!
+//! The report is bench-harness-shaped: each phase (and the overall
+//! run) serializes via [`Measurement::to_json_row`], so the perf
+//! trajectory tooling parses `LOADGEN.json` and `BENCH_<n>.json`
+//! identically, plus a client-side error taxonomy and p50/p95/p99.
+
+use std::collections::BTreeMap;
+use std::io::{BufReader, BufWriter, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::bench_harness::Measurement;
+use crate::jsonio::{self, Json};
+use crate::metrics::Percentiles;
+use crate::rng::Rng;
+use crate::serve::proto::{self, JobSpec};
+use crate::serve::skewed_tenant;
+
+/// One load phase: `rps` Poisson arrivals for `duration_ms`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Phase {
+    pub name: String,
+    pub duration_ms: u64,
+    pub rps: f64,
+}
+
+/// Parse `name:duration_ms:rps[,name:duration_ms:rps...]`, e.g.
+/// `warm:500:20,overload:2000:400`.
+pub fn parse_phases(spec: &str) -> Result<Vec<Phase>, String> {
+    let mut phases = Vec::new();
+    for part in spec.split(',').filter(|s| !s.trim().is_empty()) {
+        let fields: Vec<&str> = part.trim().split(':').collect();
+        if fields.len() != 3 {
+            return Err(format!(
+                "phase {part:?}: want name:duration_ms:rps (e.g. steady:2000:50)"
+            ));
+        }
+        let name = fields[0].to_string();
+        if name.is_empty() {
+            return Err(format!("phase {part:?}: empty name"));
+        }
+        let duration_ms: u64 =
+            fields[1].parse().map_err(|e| format!("phase {part:?}: duration: {e}"))?;
+        let rps: f64 = fields[2].parse().map_err(|e| format!("phase {part:?}: rps: {e}"))?;
+        if duration_ms == 0 || !(rps > 0.0) || !rps.is_finite() {
+            return Err(format!("phase {part:?}: duration and rps must be positive"));
+        }
+        phases.push(Phase { name, duration_ms, rps });
+    }
+    if phases.is_empty() {
+        return Err("no phases (want name:duration_ms:rps[,...])".to_string());
+    }
+    Ok(phases)
+}
+
+/// One scheduled request: fire at `due` (µs from run start).
+#[derive(Clone, Debug)]
+pub struct Arrival {
+    pub due_micros: u64,
+    pub phase: usize,
+    pub spec: JobSpec,
+}
+
+/// Generator knobs.
+#[derive(Clone, Debug)]
+pub struct LoadgenConfig {
+    /// Target `host:port`.
+    pub target: String,
+    pub phases: Vec<Phase>,
+    /// Tenant universe (skewed: tenant 0 gets ~40%).
+    pub tenants: usize,
+    /// Layers drawn uniformly from `0..layers`.
+    pub layers: usize,
+    /// Token rows per request.
+    pub rows: usize,
+    /// Schedule seed (arrival times, tenant/module/layer draws, and the
+    /// per-request activation seeds derived from it).
+    pub seed: u64,
+    /// Sender threads; open-loop fidelity needs enough to cover the
+    /// peak in-flight count (late sends are still sent and counted).
+    pub concurrency: usize,
+    /// Per-request socket timeout.
+    pub timeout: Duration,
+}
+
+impl Default for LoadgenConfig {
+    fn default() -> Self {
+        Self {
+            target: "127.0.0.1:7433".to_string(),
+            phases: vec![Phase { name: "steady".to_string(), duration_ms: 2_000, rps: 50.0 }],
+            tenants: 4,
+            layers: 4,
+            rows: 8,
+            seed: 1,
+            concurrency: 8,
+            timeout: Duration::from_millis(10_000),
+        }
+    }
+}
+
+/// Build the full deterministic arrival schedule.  Exponential gaps
+/// `-ln(1-u)/rps` make each phase a Poisson process; the spec draws
+/// reproduce the [`crate::serve::synthetic_requests`] distribution
+/// with per-request seeds `seed + 1000 + i`.
+pub fn build_schedule(cfg: &LoadgenConfig) -> Vec<Arrival> {
+    let mut rng = Rng::new(cfg.seed);
+    let mut schedule = Vec::new();
+    let mut phase_start = 0u64;
+    let mut i = 0u64;
+    for (p, phase) in cfg.phases.iter().enumerate() {
+        let phase_end = phase_start + phase.duration_ms * 1_000;
+        let mut t = phase_start as f64;
+        loop {
+            let gap_secs = -(1.0 - rng.f64()).ln() / phase.rps;
+            t += gap_secs * 1e6;
+            if t >= phase_end as f64 {
+                break;
+            }
+            let tenant = skewed_tenant(&mut rng, cfg.tenants);
+            let module = crate::MODULES[rng.below(crate::MODULES.len())].to_string();
+            let layer = rng.below(cfg.layers.max(1));
+            let model = crate::config::ModelConfig::default();
+            schedule.push(Arrival {
+                due_micros: t as u64,
+                phase: p,
+                spec: JobSpec {
+                    id: i,
+                    tenant,
+                    module,
+                    layer,
+                    rows: cfg.rows,
+                    seed: cfg.seed.wrapping_add(1_000 + i),
+                    bits: model.bits,
+                    alpha: model.alpha,
+                },
+            });
+            i += 1;
+        }
+        phase_start = phase_end;
+    }
+    schedule
+}
+
+/// Client-side outcome taxonomy.  Stable keys — CI greps these.
+pub const TAXONOMY: [&str; 9] = [
+    "ok",
+    "http_400",
+    "http_429",
+    "http_500",
+    "http_503",
+    "http_504",
+    "http_other",
+    "conn_error",
+    "timeout",
+];
+
+/// A request the server answered 200 with a clean result line —
+/// retained for the bit-identity replay.
+#[derive(Clone, Debug)]
+pub struct OkSample {
+    pub spec: JobSpec,
+    /// `errors_bits` hex strings from the result line (exact IEEE-754).
+    pub errors_bits: Vec<String>,
+}
+
+struct Attempt {
+    phase: usize,
+    outcome: &'static str,
+    latency_micros: u64,
+    ok: Option<OkSample>,
+    /// `Retry-After` seconds when the server answered 429 with one.
+    retry_after_secs: Option<u64>,
+}
+
+/// Aggregated client-side results.
+pub struct LoadReport {
+    pub cfg: LoadgenConfig,
+    pub sent: u64,
+    pub taxonomy: BTreeMap<&'static str, u64>,
+    pub per_phase: Vec<Measurement>,
+    pub overall: Option<Measurement>,
+    pub percentiles: Percentiles,
+    pub ok_samples: Vec<OkSample>,
+    /// Smallest positive `Retry-After` observed on a 429 (None when no
+    /// 429 carried one) — the overload smoke asserts this is ≥ 1.
+    pub min_retry_after_secs: Option<u64>,
+    /// Set by [`LoadReport::verify`].
+    pub verify_mismatches: Option<u64>,
+}
+
+/// Fire one request and classify the outcome.
+fn send_one(cfg: &LoadgenConfig, arrival: &Arrival) -> Attempt {
+    let t0 = Instant::now();
+    let fail = |outcome: &'static str, t0: Instant, phase: usize| Attempt {
+        phase,
+        outcome,
+        latency_micros: t0.elapsed().as_micros() as u64,
+        ok: None,
+        retry_after_secs: None,
+    };
+    let stream = match TcpStream::connect(&cfg.target) {
+        Ok(s) => s,
+        Err(_) => return fail("conn_error", t0, arrival.phase),
+    };
+    let _ = stream.set_read_timeout(Some(cfg.timeout));
+    let _ = stream.set_write_timeout(Some(cfg.timeout));
+    let _ = stream.set_nodelay(true);
+    let body = arrival.spec.to_json().to_string_compact();
+    let mut w = BufWriter::new(match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return fail("conn_error", t0, arrival.phase),
+    });
+    if proto::write_request(&mut w, "POST", "/analyze", body.as_bytes()).is_err()
+        || w.flush().is_err()
+    {
+        return fail("conn_error", t0, arrival.phase);
+    }
+    let resp = match proto::read_response(&mut BufReader::new(stream)) {
+        Ok(r) => r,
+        Err(proto::ProtoError::Timeout) => return fail("timeout", t0, arrival.phase),
+        Err(_) => return fail("conn_error", t0, arrival.phase),
+    };
+    let latency_micros = t0.elapsed().as_micros() as u64;
+    let retry_after_secs = resp.header("retry-after").and_then(|v| v.parse().ok());
+    // a 200 envelope streams one result line whose own status is the
+    // job's fate (200 clean, 504 deadline-evicted, 500 exec error)
+    let (outcome, ok) = match resp.status {
+        200 => match parse_result_line(&resp.body) {
+            Some((200, bits)) => (
+                "ok",
+                Some(OkSample { spec: arrival.spec.clone(), errors_bits: bits }),
+            ),
+            Some((504, _)) => ("http_504", None),
+            Some((500, _)) | None => ("http_500", None),
+            Some((_, _)) => ("http_other", None),
+        },
+        400 | 404 | 405 | 408 | 411 | 413 | 431 => ("http_400", None),
+        429 => ("http_429", None),
+        500 => ("http_500", None),
+        503 => ("http_503", None),
+        504 => ("http_504", None),
+        _ => ("http_other", None),
+    };
+    Attempt { phase: arrival.phase, outcome, latency_micros, ok, retry_after_secs }
+}
+
+/// First NDJSON result line → `(per-job status, errors_bits)`.
+fn parse_result_line(body: &[u8]) -> Option<(u64, Vec<String>)> {
+    let text = std::str::from_utf8(body).ok()?;
+    let line = jsonio::parse(text.lines().next()?).ok()?;
+    let status = line.get("status")?.as_u64()?;
+    let bits = match line.get("errors_bits").and_then(Json::as_arr) {
+        Some(arr) => arr.iter().filter_map(|j| j.as_str().map(str::to_string)).collect(),
+        None => Vec::new(),
+    };
+    Some((status, bits))
+}
+
+/// Run the schedule against the target.  Sender threads pull arrivals
+/// from a shared index, sleep until each one's due time, and fire —
+/// open loop: a slow server makes requests late (never skipped), and
+/// the lateness shows up as client-side latency.
+pub fn run(cfg: &LoadgenConfig) -> Result<LoadReport, String> {
+    let schedule = Arc::new(build_schedule(cfg));
+    if schedule.is_empty() {
+        return Err("schedule is empty (rps too low for the phase durations?)".to_string());
+    }
+    let next = Arc::new(AtomicUsize::new(0));
+    let attempts: Arc<Mutex<Vec<Attempt>>> =
+        Arc::new(Mutex::new(Vec::with_capacity(schedule.len())));
+    let start = Instant::now();
+    let mut senders = Vec::new();
+    for _ in 0..cfg.concurrency.max(1) {
+        let schedule = Arc::clone(&schedule);
+        let next = Arc::clone(&next);
+        let attempts = Arc::clone(&attempts);
+        let cfg = cfg.clone();
+        senders.push(std::thread::spawn(move || {
+            let mut local = Vec::new();
+            loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                let Some(arrival) = schedule.get(i) else { break };
+                let due = Duration::from_micros(arrival.due_micros);
+                let elapsed = start.elapsed();
+                if due > elapsed {
+                    std::thread::sleep(due - elapsed);
+                }
+                local.push(send_one(&cfg, arrival));
+            }
+            attempts.lock().unwrap_or_else(|p| p.into_inner()).extend(local);
+        }));
+    }
+    for h in senders {
+        let _ = h.join();
+    }
+    let attempts = match Arc::try_unwrap(attempts) {
+        Ok(m) => m.into_inner().unwrap_or_else(|p| p.into_inner()),
+        Err(_) => return Err("sender thread leaked its results".to_string()),
+    };
+
+    let mut taxonomy: BTreeMap<&'static str, u64> = TAXONOMY.iter().map(|&k| (k, 0)).collect();
+    let mut latencies: Vec<u64> = Vec::with_capacity(attempts.len());
+    let mut per_phase_samples: Vec<Vec<Duration>> = vec![Vec::new(); cfg.phases.len()];
+    let mut ok_samples = Vec::new();
+    let mut min_retry_after_secs: Option<u64> = None;
+    for a in attempts {
+        *taxonomy.entry(a.outcome).or_insert(0) += 1;
+        latencies.push(a.latency_micros);
+        per_phase_samples[a.phase].push(Duration::from_micros(a.latency_micros));
+        if let Some(s) = a.ok {
+            ok_samples.push(s);
+        }
+        if a.outcome == "http_429" {
+            if let Some(secs) = a.retry_after_secs {
+                min_retry_after_secs =
+                    Some(min_retry_after_secs.map_or(secs, |m: u64| m.min(secs)));
+            }
+        }
+    }
+    let sent = latencies.len() as u64;
+    let per_phase: Vec<Measurement> = cfg
+        .phases
+        .iter()
+        .zip(per_phase_samples)
+        .filter(|(_, samples)| !samples.is_empty())
+        .map(|(phase, samples)| Measurement {
+            name: format!("loadgen/{}", phase.name),
+            samples,
+            items_per_iter: Some(1.0),
+        })
+        .collect();
+    let overall = (!latencies.is_empty()).then(|| Measurement {
+        name: "loadgen/overall".to_string(),
+        samples: latencies.iter().map(|&us| Duration::from_micros(us)).collect(),
+        items_per_iter: Some(1.0),
+    });
+    let percentiles = Percentiles::of_micros(&latencies);
+    Ok(LoadReport {
+        cfg: cfg.clone(),
+        sent,
+        taxonomy,
+        per_phase,
+        overall,
+        percentiles,
+        ok_samples,
+        min_retry_after_secs,
+        verify_mismatches: None,
+    })
+}
+
+impl LoadReport {
+    /// Replay every 200-OK request through `exec` (an in-process
+    /// executor over the same job builder the server uses) and count
+    /// `errors_bits` mismatches.  Zero is the wire-tier bit-identity
+    /// contract: the network front-end adds transport, not arithmetic.
+    pub fn verify(
+        &mut self,
+        builder: &crate::serve::net::JobBuilder,
+        mut exec: impl FnMut(&crate::coordinator::Job) -> Result<crate::serve::AnalyzeOut, String>,
+    ) -> u64 {
+        let mut mismatches = 0u64;
+        for sample in &self.ok_samples {
+            let replayed = builder(&sample.spec, sample.spec.id)
+                .map_err(|e| e.to_string())
+                .and_then(|(_, job)| exec(&job));
+            let bits: Vec<String> = match &replayed {
+                Ok(out) => out.errors.iter().map(|&e| proto::f64_bits_hex(e)).collect(),
+                Err(_) => Vec::new(),
+            };
+            if bits.is_empty() || bits != sample.errors_bits {
+                mismatches += 1;
+            }
+        }
+        self.verify_mismatches = Some(mismatches);
+        mismatches
+    }
+
+    /// The report artifact: bench-harness-shaped rows plus the
+    /// client-side taxonomy and percentiles.
+    pub fn to_json(&self) -> Json {
+        let mut results: Vec<Json> =
+            self.per_phase.iter().map(Measurement::to_json_row).collect();
+        if let Some(overall) = &self.overall {
+            results.push(overall.to_json_row());
+        }
+        let taxonomy: Vec<(&str, Json)> =
+            self.taxonomy.iter().map(|(&k, &v)| (k, Json::Num(v as f64))).collect();
+        jsonio::obj(vec![
+            ("kind", Json::Str("smoothrot-loadgen".to_string())),
+            ("bench", Json::Str("loadgen".to_string())),
+            ("target", Json::Str(self.cfg.target.clone())),
+            ("seed", Json::Num(self.cfg.seed as f64)),
+            ("sent", Json::Num(self.sent as f64)),
+            ("scenarios", Json::Num(results.len() as f64)),
+            ("results", Json::Arr(results)),
+            ("taxonomy", jsonio::obj(taxonomy)),
+            ("p50_us", Json::Num(self.percentiles.p50)),
+            ("p95_us", Json::Num(self.percentiles.p95)),
+            ("p99_us", Json::Num(self.percentiles.p99)),
+            (
+                "min_retry_after_secs",
+                match self.min_retry_after_secs {
+                    Some(s) => Json::Num(s as f64),
+                    None => Json::Null,
+                },
+            ),
+            (
+                "verify_mismatches",
+                match self.verify_mismatches {
+                    Some(n) => Json::Num(n as f64),
+                    None => Json::Null,
+                },
+            ),
+        ])
+    }
+}
+
+/// Ask the target to drain (`POST /admin/drain`) and wait until it
+/// stops answering (bounded by `deadline`).  Returns whether the
+/// server was observed gone.
+pub fn drain_target(target: &str, deadline: Duration) -> bool {
+    if let Ok(stream) = TcpStream::connect(target) {
+        let _ = stream.set_read_timeout(Some(Duration::from_millis(2_000)));
+        let mut w = BufWriter::new(match stream.try_clone() {
+            Ok(s) => s,
+            Err(_) => return false,
+        });
+        if proto::write_request(&mut w, "POST", "/admin/drain", b"").is_ok() {
+            let _ = w.flush();
+            let _ = proto::read_response(&mut BufReader::new(stream));
+        }
+    }
+    let t0 = Instant::now();
+    while t0.elapsed() < deadline {
+        match TcpStream::connect(target) {
+            Ok(_) => std::thread::sleep(Duration::from_millis(50)),
+            Err(_) => return true,
+        }
+    }
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn phase_grammar_round_trip() {
+        let phases = parse_phases("warm:500:20, overload:2000:400").unwrap();
+        assert_eq!(phases.len(), 2);
+        assert_eq!(phases[0], Phase { name: "warm".to_string(), duration_ms: 500, rps: 20.0 });
+        assert_eq!(phases[1].rps, 400.0);
+        assert!(parse_phases("").is_err());
+        assert!(parse_phases("bad:500").is_err());
+        assert!(parse_phases("x:0:10").is_err());
+        assert!(parse_phases("x:10:0").is_err());
+        assert!(parse_phases("x:10:-1").is_err());
+    }
+
+    #[test]
+    fn schedule_is_deterministic_and_poisson_shaped() {
+        let cfg = LoadgenConfig {
+            phases: parse_phases("a:1000:100,b:500:200").unwrap(),
+            seed: 7,
+            ..LoadgenConfig::default()
+        };
+        let s1 = build_schedule(&cfg);
+        let s2 = build_schedule(&cfg);
+        assert_eq!(s1.len(), s2.len());
+        assert!(!s1.is_empty());
+        for (a, b) in s1.iter().zip(&s2) {
+            assert_eq!(a.due_micros, b.due_micros);
+            assert_eq!(a.spec.seed, b.spec.seed);
+            assert_eq!(a.spec.module, b.spec.module);
+        }
+        // ~100 rps for 1s + ~200 rps for 0.5s ≈ 200 arrivals; Poisson
+        // noise stays well inside ±50%
+        assert!(s1.len() > 100 && s1.len() < 300, "got {}", s1.len());
+        // due times are monotone and phase boundaries respected
+        for w in s1.windows(2) {
+            assert!(w[0].due_micros <= w[1].due_micros);
+        }
+        let a_max = s1.iter().filter(|a| a.phase == 0).map(|a| a.due_micros).max().unwrap();
+        let b_min = s1.iter().filter(|a| a.phase == 1).map(|a| a.due_micros).min().unwrap();
+        assert!(a_max < 1_000_000);
+        assert!((1_000_000..1_500_000).contains(&b_min));
+        // per-request seeds are unique
+        let mut seeds: Vec<u64> = s1.iter().map(|a| a.spec.seed).collect();
+        seeds.sort_unstable();
+        seeds.dedup();
+        assert_eq!(seeds.len(), s1.len());
+    }
+
+    #[test]
+    fn tenant_skew_matches_serve_stream() {
+        let cfg = LoadgenConfig {
+            phases: parse_phases("a:2000:500").unwrap(),
+            tenants: 4,
+            seed: 3,
+            ..LoadgenConfig::default()
+        };
+        let s = build_schedule(&cfg);
+        let t0 = s.iter().filter(|a| a.spec.tenant == 0).count();
+        let share = t0 as f64 / s.len() as f64;
+        // skewed_tenant gives tenant 0 a 40% + (60% / 3 × 0) share
+        assert!((0.3..0.55).contains(&share), "tenant-0 share {share}");
+    }
+
+    #[test]
+    fn report_json_has_taxonomy_present_at_zero() {
+        let cfg = LoadgenConfig::default();
+        let report = LoadReport {
+            cfg: cfg.clone(),
+            sent: 1,
+            taxonomy: TAXONOMY.iter().map(|&k| (k, 0)).collect(),
+            per_phase: Vec::new(),
+            overall: Some(Measurement {
+                name: "loadgen/overall".to_string(),
+                samples: vec![Duration::from_micros(250)],
+                items_per_iter: Some(1.0),
+            }),
+            percentiles: Percentiles::of_micros(&[250]),
+            ok_samples: Vec::new(),
+            min_retry_after_secs: None,
+            verify_mismatches: None,
+        };
+        let json = report.to_json();
+        for key in TAXONOMY {
+            assert!(
+                json.get("taxonomy").and_then(|t| t.get(key)).is_some(),
+                "taxonomy key {key} missing"
+            );
+        }
+        assert_eq!(json.get("kind").and_then(Json::as_str), Some("smoothrot-loadgen"));
+        let rows = json.get("results").and_then(Json::as_arr).unwrap();
+        assert_eq!(rows.len(), 1);
+        assert!(rows[0].get("median_ns").is_some());
+        // round-trips through the parser (the artifact is consumed by jq)
+        let text = json.to_string_pretty();
+        jsonio::parse(&text).unwrap();
+    }
+}

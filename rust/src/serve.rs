@@ -101,6 +101,8 @@
 //! assert_eq!(metrics.per_tenant.len(), 2);
 //! ```
 
+pub mod net;
+pub mod proto;
 pub mod shard;
 
 use std::collections::{BTreeMap, VecDeque};

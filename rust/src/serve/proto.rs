@@ -1,0 +1,829 @@
+//! HTTP/1.1 wire protocol for the network serving front-end — no
+//! dependencies, `std::io` only.
+//!
+//! The server side ([`crate::serve::net`]) needs exactly four things
+//! from HTTP: parse a request off a deadline-bearing socket with every
+//! malformed shape mapped to a *named* 4xx (never a panic, never a
+//! silent close), write a response head, stream a chunked body, and
+//! close.  The client side (`smoothrot loadgen`, the chaos tests)
+//! needs the inverse: write a request and decode a possibly-chunked
+//! response.  Both directions live here so the generator and the
+//! server can never disagree about framing.
+//!
+//! ## Status-code taxonomy
+//!
+//! | code | meaning here |
+//! |---|---|
+//! | 200 | analysis result (streamed chunked NDJSON) |
+//! | 202 | drain accepted |
+//! | 400 | malformed request line / header / body (named in the JSON error) |
+//! | 404 | unknown endpoint |
+//! | 405 | known endpoint, wrong method (`Allow` header carried) |
+//! | 408 | read deadline hit while parsing (slow-loris defense) |
+//! | 411 | `POST /analyze` without `Content-Length` |
+//! | 413 | declared body larger than the configured cap |
+//! | 429 | shed/admission-full ([`crate::serve::SubmitError`]); `Retry-After` carried when the core issued a hint |
+//! | 431 | header section too large |
+//! | 500 | executor error |
+//! | 503 | draining / over the connection cap |
+//! | 504 | per-request deadline expired in queue ([`crate::serve::ServeConfig::deadline_micros`]) |
+
+use std::io::{self, BufRead, Read, Write};
+
+use crate::jsonio::{self, Json};
+
+/// Longest accepted request line (method + target + version).
+pub const MAX_REQUEST_LINE: usize = 8 * 1024;
+/// Longest accepted single header line.
+pub const MAX_HEADER_LINE: usize = 8 * 1024;
+/// Most headers accepted per request.
+pub const MAX_HEADERS: usize = 64;
+/// Default request-body cap (overridable via
+/// [`crate::serve::net::NetConfig::max_body_bytes`]).
+pub const DEFAULT_MAX_BODY: usize = 1 << 20;
+/// Most jobs accepted in one `POST /analyze` body.
+pub const MAX_JOBS_PER_REQUEST: usize = 64;
+/// Most token rows accepted per job.
+pub const MAX_ROWS: usize = 4096;
+/// Highest accepted layer index (bounds the server-side weight cache).
+pub const MAX_LAYER: usize = 4096;
+/// Highest accepted tenant id.
+pub const MAX_TENANT: usize = 4096;
+
+/// One parsed request.
+#[derive(Clone, Debug)]
+pub struct HttpRequest {
+    pub method: String,
+    pub target: String,
+    /// Header names are lower-cased at parse time.
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl HttpRequest {
+    /// Case-insensitive header lookup (names were lower-cased at parse).
+    pub fn header(&self, name: &str) -> Option<&str> {
+        let name = name.to_ascii_lowercase();
+        self.headers.iter().find(|(k, _)| *k == name).map(|(_, v)| v.as_str())
+    }
+}
+
+/// Why a request could not be parsed.  Every variant that maps to a
+/// response carries a stable taxonomy `name` the error body quotes, so
+/// tests and dashboards match on names, not prose.
+#[derive(Debug)]
+pub enum ProtoError {
+    /// Clean EOF before the first byte — the peer closed an idle
+    /// connection; not an error response, just close.
+    ConnClosed,
+    /// Read deadline expired mid-request (slow-loris) → 408.
+    Timeout,
+    /// Transport error other than a deadline — close without a response.
+    Io(io::Error),
+    /// Unparseable request line → 400.
+    BadRequestLine(String),
+    /// Not HTTP/1.x → 400.
+    BadVersion(String),
+    /// A header line without `:` or with a non-ASCII name → 400.
+    BadHeader(String),
+    /// Header section over [`MAX_HEADER_LINE`]/[`MAX_REQUEST_LINE`] → 431.
+    HeaderTooLarge,
+    /// More than [`MAX_HEADERS`] headers → 431.
+    TooManyHeaders,
+    /// `Content-Length` present but not a number → 400.
+    BadContentLength(String),
+    /// Declared body over the configured cap → 413.
+    BodyTooLarge { declared: usize, max: usize },
+    /// Connection closed before `Content-Length` bytes arrived → 400.
+    BodyIncomplete { got: usize, want: usize },
+}
+
+impl ProtoError {
+    /// HTTP status to answer with (`None`: close without responding).
+    pub fn status(&self) -> Option<u16> {
+        match self {
+            ProtoError::ConnClosed | ProtoError::Io(_) => None,
+            ProtoError::Timeout => Some(408),
+            ProtoError::BadRequestLine(_)
+            | ProtoError::BadVersion(_)
+            | ProtoError::BadHeader(_)
+            | ProtoError::BadContentLength(_)
+            | ProtoError::BodyIncomplete { .. } => Some(400),
+            ProtoError::HeaderTooLarge | ProtoError::TooManyHeaders => Some(431),
+            ProtoError::BodyTooLarge { .. } => Some(413),
+        }
+    }
+
+    /// Stable taxonomy token for the error body / test assertions.
+    pub fn name(&self) -> &'static str {
+        match self {
+            ProtoError::ConnClosed => "conn_closed",
+            ProtoError::Timeout => "read_timeout",
+            ProtoError::Io(_) => "io_error",
+            ProtoError::BadRequestLine(_) => "bad_request_line",
+            ProtoError::BadVersion(_) => "bad_version",
+            ProtoError::BadHeader(_) => "bad_header",
+            ProtoError::HeaderTooLarge => "header_too_large",
+            ProtoError::TooManyHeaders => "too_many_headers",
+            ProtoError::BadContentLength(_) => "bad_content_length",
+            ProtoError::BodyTooLarge { .. } => "body_too_large",
+            ProtoError::BodyIncomplete { .. } => "body_incomplete",
+        }
+    }
+}
+
+impl std::fmt::Display for ProtoError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ProtoError::ConnClosed => write!(f, "connection closed"),
+            ProtoError::Timeout => write!(f, "read deadline expired"),
+            ProtoError::Io(e) => write!(f, "transport error: {e}"),
+            ProtoError::BadRequestLine(l) => write!(f, "bad request line {l:?}"),
+            ProtoError::BadVersion(v) => write!(f, "unsupported version {v:?}"),
+            ProtoError::BadHeader(h) => write!(f, "bad header {h:?}"),
+            ProtoError::HeaderTooLarge => write!(f, "header line too large"),
+            ProtoError::TooManyHeaders => write!(f, "more than {MAX_HEADERS} headers"),
+            ProtoError::BadContentLength(v) => write!(f, "bad content-length {v:?}"),
+            ProtoError::BodyTooLarge { declared, max } => {
+                write!(f, "declared body {declared} bytes over cap {max}")
+            }
+            ProtoError::BodyIncomplete { got, want } => {
+                write!(f, "connection closed after {got}/{want} body bytes")
+            }
+        }
+    }
+}
+
+/// A timed-out read surfaces as `WouldBlock` (unix non-blocking
+/// semantics) or `TimedOut` depending on platform; both mean the peer
+/// blew the socket deadline.
+fn classify_io(e: io::Error) -> ProtoError {
+    match e.kind() {
+        io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut => ProtoError::Timeout,
+        _ => ProtoError::Io(e),
+    }
+}
+
+/// Read one `\n`-terminated line (CR stripped) with a hard byte cap;
+/// an over-cap line is [`ProtoError::HeaderTooLarge`] — the bytes are
+/// *not* skipped, the caller must drop the connection.
+fn read_line_bounded(r: &mut impl BufRead, cap: usize) -> Result<Option<String>, ProtoError> {
+    let mut line = Vec::new();
+    loop {
+        let mut byte = [0u8; 1];
+        match r.read(&mut byte) {
+            Ok(0) => {
+                if line.is_empty() {
+                    return Ok(None);
+                }
+                return Err(ProtoError::Io(io::Error::new(
+                    io::ErrorKind::UnexpectedEof,
+                    "eof mid-line",
+                )));
+            }
+            Ok(_) => {
+                if byte[0] == b'\n' {
+                    if line.last() == Some(&b'\r') {
+                        line.pop();
+                    }
+                    return String::from_utf8(line)
+                        .map(Some)
+                        .map_err(|e| ProtoError::BadHeader(format!("non-utf8 line: {e}")));
+                }
+                if line.len() >= cap {
+                    return Err(ProtoError::HeaderTooLarge);
+                }
+                line.push(byte[0]);
+            }
+            Err(e) => return Err(classify_io(e)),
+        }
+    }
+}
+
+/// Parse one request off `r` (which should carry a socket read
+/// deadline).  `max_body` caps the *declared* `Content-Length` — the
+/// body is never buffered past it, so a hostile declaration cannot
+/// balloon memory.  A request without `Content-Length` parses with an
+/// empty body (the route layer decides whether that is a 411).
+pub fn read_request(r: &mut impl BufRead, max_body: usize) -> Result<HttpRequest, ProtoError> {
+    let line = match read_line_bounded(r, MAX_REQUEST_LINE)? {
+        None => return Err(ProtoError::ConnClosed),
+        Some(l) => l,
+    };
+    let mut parts = line.split_whitespace();
+    let (method, target, version) = match (parts.next(), parts.next(), parts.next(), parts.next())
+    {
+        (Some(m), Some(t), Some(v), None) => (m.to_string(), t.to_string(), v.to_string()),
+        _ => return Err(ProtoError::BadRequestLine(truncate(&line, 120))),
+    };
+    if !version.starts_with("HTTP/1.") {
+        return Err(ProtoError::BadVersion(truncate(&version, 40)));
+    }
+    if method.is_empty() || !method.chars().all(|c| c.is_ascii_uppercase()) {
+        return Err(ProtoError::BadRequestLine(truncate(&line, 120)));
+    }
+
+    let mut headers = Vec::new();
+    loop {
+        let line = match read_line_bounded(r, MAX_HEADER_LINE)? {
+            None => return Err(ProtoError::Io(io::Error::new(
+                io::ErrorKind::UnexpectedEof,
+                "eof in headers",
+            ))),
+            Some(l) => l,
+        };
+        if line.is_empty() {
+            break;
+        }
+        if headers.len() >= MAX_HEADERS {
+            return Err(ProtoError::TooManyHeaders);
+        }
+        let Some((name, value)) = line.split_once(':') else {
+            return Err(ProtoError::BadHeader(truncate(&line, 120)));
+        };
+        let name = name.trim();
+        if name.is_empty() || !name.chars().all(|c| c.is_ascii_graphic()) {
+            return Err(ProtoError::BadHeader(truncate(&line, 120)));
+        }
+        headers.push((name.to_ascii_lowercase(), value.trim().to_string()));
+    }
+
+    let body = match headers.iter().find(|(k, _)| k == "content-length") {
+        None => Vec::new(),
+        Some((_, v)) => {
+            let declared: usize = v
+                .parse()
+                .map_err(|_| ProtoError::BadContentLength(truncate(v, 40)))?;
+            if declared > max_body {
+                return Err(ProtoError::BodyTooLarge { declared, max: max_body });
+            }
+            let mut body = vec![0u8; declared];
+            let mut got = 0;
+            while got < declared {
+                match r.read(&mut body[got..]) {
+                    Ok(0) => return Err(ProtoError::BodyIncomplete { got, want: declared }),
+                    Ok(n) => got += n,
+                    Err(e) => return Err(classify_io(e)),
+                }
+            }
+            body
+        }
+    };
+    Ok(HttpRequest { method, target, headers, body })
+}
+
+fn truncate(s: &str, cap: usize) -> String {
+    if s.len() <= cap {
+        s.to_string()
+    } else {
+        let mut end = cap;
+        while !s.is_char_boundary(end) {
+            end -= 1;
+        }
+        format!("{}…", &s[..end])
+    }
+}
+
+/// Canonical reason phrase for the taxonomy codes.
+pub fn status_reason(code: u16) -> &'static str {
+    match code {
+        200 => "OK",
+        202 => "Accepted",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        408 => "Request Timeout",
+        411 => "Length Required",
+        413 => "Payload Too Large",
+        429 => "Too Many Requests",
+        431 => "Request Header Fields Too Large",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        504 => "Gateway Timeout",
+        _ => "Unknown",
+    }
+}
+
+/// Write a response head (status line + headers + blank line).  Every
+/// response carries `Connection: close` — one request per connection
+/// keeps the deadline story per-request and the parser stateless.
+pub fn write_head(w: &mut impl Write, code: u16, headers: &[(&str, &str)]) -> io::Result<()> {
+    write!(w, "HTTP/1.1 {} {}\r\n", code, status_reason(code))?;
+    for (k, v) in headers {
+        write!(w, "{k}: {v}\r\n")?;
+    }
+    write!(w, "Connection: close\r\n\r\n")
+}
+
+/// Write one chunk of a `Transfer-Encoding: chunked` body.
+pub fn write_chunk(w: &mut impl Write, data: &[u8]) -> io::Result<()> {
+    if data.is_empty() {
+        return Ok(()); // an empty chunk would terminate the stream
+    }
+    write!(w, "{:x}\r\n", data.len())?;
+    w.write_all(data)?;
+    w.write_all(b"\r\n")
+}
+
+/// Terminate a chunked body.
+pub fn finish_chunks(w: &mut impl Write) -> io::Result<()> {
+    w.write_all(b"0\r\n\r\n")
+}
+
+/// Write a complete JSON error response: `{"error": name, "detail": …}`
+/// with `Content-Length` framing plus any extra headers (`Retry-After`).
+pub fn write_error(
+    w: &mut impl Write,
+    code: u16,
+    name: &str,
+    detail: &str,
+    extra: &[(&str, &str)],
+) -> io::Result<()> {
+    let body = jsonio::obj(vec![
+        ("error", Json::Str(name.to_string())),
+        ("detail", Json::Str(detail.to_string())),
+    ])
+    .to_string_compact();
+    let len = body.len().to_string();
+    let mut headers: Vec<(&str, &str)> =
+        vec![("Content-Type", "application/json"), ("Content-Length", len.as_str())];
+    headers.extend_from_slice(extra);
+    write_head(w, code, &headers)?;
+    w.write_all(body.as_bytes())
+}
+
+// ---------------------------------------------------------------------
+// Job specs: the request body → the serving core's job/tenant model.
+// ---------------------------------------------------------------------
+
+/// One job named by a `POST /analyze` body — the wire analogue of
+/// [`crate::serve::synthetic_requests`]'s per-request draw: the client
+/// names a (module, layer) cell and an activation seed; the server owns
+/// the model (the per-layer weights), exactly as the in-process stream
+/// does.
+#[derive(Clone, Debug, PartialEq)]
+pub struct JobSpec {
+    /// Client-chosen id echoed in the result (assigned from the request
+    /// index when absent).
+    pub id: u64,
+    pub tenant: usize,
+    pub module: String,
+    pub layer: usize,
+    /// Token rows of synthetic activations.
+    pub rows: usize,
+    /// Activation stream seed (the weight seed is the *server's*).
+    pub seed: u64,
+    pub bits: u32,
+    pub alpha: f32,
+}
+
+/// A named 400: `name` is the stable taxonomy token, `detail` the
+/// human-readable rejection.
+#[derive(Clone, Debug)]
+pub struct BodyError {
+    pub name: &'static str,
+    pub detail: String,
+}
+
+impl BodyError {
+    fn new(name: &'static str, detail: impl Into<String>) -> BodyError {
+        BodyError { name, detail: detail.into() }
+    }
+}
+
+/// Parse a `POST /analyze` body: either one job object or
+/// `{"jobs": [...]}`.  Every malformed shape is a *named* rejection —
+/// the route layer answers 400 quoting `name`.
+pub fn parse_job_specs(body: &[u8]) -> Result<Vec<JobSpec>, BodyError> {
+    let text = std::str::from_utf8(body)
+        .map_err(|e| BodyError::new("body_not_utf8", e.to_string()))?;
+    let doc = jsonio::parse(text).map_err(|e| BodyError::new("body_not_json", e.to_string()))?;
+    let items: Vec<&Json> = match doc.get("jobs") {
+        Some(jobs) => {
+            let arr = jobs
+                .as_arr()
+                .ok_or_else(|| BodyError::new("jobs_not_array", "\"jobs\" must be an array"))?;
+            arr.iter().collect()
+        }
+        None => vec![&doc],
+    };
+    if items.is_empty() {
+        return Err(BodyError::new("no_jobs", "empty job list"));
+    }
+    if items.len() > MAX_JOBS_PER_REQUEST {
+        return Err(BodyError::new(
+            "too_many_jobs",
+            format!("{} jobs over the per-request cap {MAX_JOBS_PER_REQUEST}", items.len()),
+        ));
+    }
+    let model = crate::config::ModelConfig::default();
+    items
+        .iter()
+        .enumerate()
+        .map(|(i, j)| parse_one_spec(j, i as u64, &model))
+        .collect()
+}
+
+fn parse_one_spec(
+    j: &Json,
+    index: u64,
+    model: &crate::config::ModelConfig,
+) -> Result<JobSpec, BodyError> {
+    if j.get("module").is_none() {
+        return Err(BodyError::new("missing_module", format!("job {index}: no \"module\"")));
+    }
+    let module = j
+        .get("module")
+        .and_then(Json::as_str)
+        .ok_or_else(|| BodyError::new("bad_module", format!("job {index}: module not a string")))?;
+    if !crate::MODULES.contains(&module) {
+        return Err(BodyError::new(
+            "unknown_module",
+            format!("job {index}: {module:?} (want one of {:?})", crate::MODULES),
+        ));
+    }
+    let layer = j
+        .get("layer")
+        .ok_or_else(|| BodyError::new("missing_layer", format!("job {index}: no \"layer\"")))?
+        .as_u64()
+        .ok_or_else(|| {
+            BodyError::new("bad_layer", format!("job {index}: layer not a non-negative integer"))
+        })? as usize;
+    if layer > MAX_LAYER {
+        return Err(BodyError::new("bad_layer", format!("job {index}: layer {layer} > {MAX_LAYER}")));
+    }
+    let field_u64 = |name: &'static str, default: u64| -> Result<u64, BodyError> {
+        match j.get(name) {
+            None => Ok(default),
+            Some(v) => v.as_u64().ok_or_else(|| {
+                BodyError::new("bad_field", format!("job {index}: {name} not a non-negative integer"))
+            }),
+        }
+    };
+    let tenant = field_u64("tenant", 0)? as usize;
+    if tenant > MAX_TENANT {
+        return Err(BodyError::new("bad_tenant", format!("job {index}: tenant {tenant} > {MAX_TENANT}")));
+    }
+    let rows = field_u64("rows", 8)? as usize;
+    if rows == 0 || rows > MAX_ROWS {
+        return Err(BodyError::new("bad_rows", format!("job {index}: rows {rows} not in 1..={MAX_ROWS}")));
+    }
+    let bits = field_u64("bits", model.bits as u64)? as u32;
+    if !(2..=8).contains(&bits) {
+        return Err(BodyError::new("bad_bits", format!("job {index}: bits {bits} not in 2..=8")));
+    }
+    let alpha = match j.get("alpha") {
+        None => model.alpha as f32,
+        Some(v) => v
+            .as_f64()
+            .ok_or_else(|| BodyError::new("bad_field", format!("job {index}: alpha not a number")))?
+            as f32,
+    };
+    if !(0.0..=1.0).contains(&alpha) {
+        return Err(BodyError::new("bad_alpha", format!("job {index}: alpha {alpha} not in 0..=1")));
+    }
+    Ok(JobSpec {
+        id: field_u64("id", index)?,
+        tenant,
+        module: module.to_string(),
+        layer,
+        rows,
+        seed: field_u64("seed", 1)?,
+        bits,
+        alpha,
+    })
+}
+
+impl JobSpec {
+    /// Serialize for a wire request body (`loadgen` and the tests).
+    pub fn to_json(&self) -> Json {
+        jsonio::obj(vec![
+            ("id", Json::Num(self.id as f64)),
+            ("tenant", Json::Num(self.tenant as f64)),
+            ("module", Json::Str(self.module.clone())),
+            ("layer", Json::Num(self.layer as f64)),
+            ("rows", Json::Num(self.rows as f64)),
+            ("seed", Json::Num(self.seed as f64)),
+            ("bits", Json::Num(self.bits as f64)),
+            ("alpha", Json::Num(self.alpha as f64)),
+        ])
+    }
+}
+
+/// Exact `f64` round-trip for result payloads: JSON number formatting
+/// may drop bits, so results carry the raw IEEE-754 pattern alongside
+/// the readable value.  The bit-identity acceptance gates compare these.
+pub fn f64_bits_hex(x: f64) -> String {
+    format!("{:016x}", x.to_bits())
+}
+
+/// Inverse of [`f64_bits_hex`].
+pub fn f64_from_bits_hex(s: &str) -> Option<f64> {
+    u64::from_str_radix(s, 16).ok().map(f64::from_bits)
+}
+
+// ---------------------------------------------------------------------
+// Client-side response decoding (loadgen + tests).
+// ---------------------------------------------------------------------
+
+/// One decoded response.
+#[derive(Clone, Debug)]
+pub struct HttpResponse {
+    pub status: u16,
+    /// Lower-cased header names.
+    pub headers: Vec<(String, String)>,
+    /// Fully decoded (de-chunked) body.
+    pub body: Vec<u8>,
+}
+
+impl HttpResponse {
+    pub fn header(&self, name: &str) -> Option<&str> {
+        let name = name.to_ascii_lowercase();
+        self.headers.iter().find(|(k, _)| *k == name).map(|(_, v)| v.as_str())
+    }
+}
+
+/// Decode one response off `r`: status line, headers, then a body
+/// framed by `Content-Length`, `Transfer-Encoding: chunked`, or EOF
+/// (the server always closes).
+pub fn read_response(r: &mut impl BufRead) -> Result<HttpResponse, ProtoError> {
+    let line = match read_line_bounded(r, MAX_REQUEST_LINE)? {
+        None => return Err(ProtoError::ConnClosed),
+        Some(l) => l,
+    };
+    let mut parts = line.split_whitespace();
+    let status = match (parts.next(), parts.next()) {
+        (Some(v), Some(code)) if v.starts_with("HTTP/1.") => code
+            .parse::<u16>()
+            .map_err(|_| ProtoError::BadRequestLine(truncate(&line, 120)))?,
+        _ => return Err(ProtoError::BadRequestLine(truncate(&line, 120))),
+    };
+    let mut headers = Vec::new();
+    loop {
+        let line = match read_line_bounded(r, MAX_HEADER_LINE)? {
+            None => return Err(ProtoError::Io(io::Error::new(
+                io::ErrorKind::UnexpectedEof,
+                "eof in headers",
+            ))),
+            Some(l) => l,
+        };
+        if line.is_empty() {
+            break;
+        }
+        if let Some((name, value)) = line.split_once(':') {
+            headers.push((name.trim().to_ascii_lowercase(), value.trim().to_string()));
+        }
+    }
+    let chunked = headers
+        .iter()
+        .any(|(k, v)| k == "transfer-encoding" && v.eq_ignore_ascii_case("chunked"));
+    let body = if chunked {
+        let mut body = Vec::new();
+        loop {
+            let size_line = match read_line_bounded(r, 64)? {
+                None => return Err(ProtoError::BodyIncomplete { got: body.len(), want: 0 }),
+                Some(l) => l,
+            };
+            let size = usize::from_str_radix(size_line.trim(), 16)
+                .map_err(|_| ProtoError::BadContentLength(truncate(&size_line, 40)))?;
+            if size == 0 {
+                let _ = read_line_bounded(r, 8)?; // trailing CRLF
+                break;
+            }
+            if body.len() + size > DEFAULT_MAX_BODY {
+                return Err(ProtoError::BodyTooLarge {
+                    declared: body.len() + size,
+                    max: DEFAULT_MAX_BODY,
+                });
+            }
+            let start = body.len();
+            body.resize(start + size, 0);
+            let mut got = 0;
+            while got < size {
+                match r.read(&mut body[start + got..]) {
+                    Ok(0) => return Err(ProtoError::BodyIncomplete { got, want: size }),
+                    Ok(n) => got += n,
+                    Err(e) => return Err(classify_io(e)),
+                }
+            }
+            let _ = read_line_bounded(r, 8)?; // chunk-terminating CRLF
+        }
+        body
+    } else if let Some((_, v)) = headers.iter().find(|(k, _)| k == "content-length") {
+        let declared: usize =
+            v.parse().map_err(|_| ProtoError::BadContentLength(truncate(v, 40)))?;
+        if declared > DEFAULT_MAX_BODY {
+            return Err(ProtoError::BodyTooLarge { declared, max: DEFAULT_MAX_BODY });
+        }
+        let mut body = vec![0u8; declared];
+        let mut got = 0;
+        while got < declared {
+            match r.read(&mut body[got..]) {
+                Ok(0) => return Err(ProtoError::BodyIncomplete { got, want: declared }),
+                Ok(n) => got += n,
+                Err(e) => return Err(classify_io(e)),
+            }
+        }
+        body
+    } else {
+        let mut body = Vec::new();
+        r.read_to_end(&mut body).map_err(classify_io)?;
+        body
+    };
+    Ok(HttpResponse { status, headers, body })
+}
+
+/// Serialize a request (the client side of [`read_request`]).
+pub fn write_request(
+    w: &mut impl Write,
+    method: &str,
+    target: &str,
+    body: &[u8],
+) -> io::Result<()> {
+    write!(w, "{method} {target} HTTP/1.1\r\nHost: smoothrot\r\n")?;
+    if !body.is_empty() || method == "POST" {
+        write!(w, "Content-Type: application/json\r\nContent-Length: {}\r\n", body.len())?;
+    }
+    write!(w, "Connection: close\r\n\r\n")?;
+    w.write_all(body)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::BufReader;
+
+    fn parse(bytes: &[u8]) -> Result<HttpRequest, ProtoError> {
+        read_request(&mut BufReader::new(bytes), DEFAULT_MAX_BODY)
+    }
+
+    #[test]
+    fn parses_get() {
+        let req = parse(b"GET /healthz HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+        assert_eq!(req.method, "GET");
+        assert_eq!(req.target, "/healthz");
+        assert_eq!(req.header("host"), Some("x"));
+        assert!(req.body.is_empty());
+    }
+
+    #[test]
+    fn parses_post_with_body() {
+        let req =
+            parse(b"POST /analyze HTTP/1.1\r\nContent-Length: 4\r\n\r\nabcd").unwrap();
+        assert_eq!(req.body, b"abcd");
+    }
+
+    #[test]
+    fn named_rejections() {
+        let cases: [(&[u8], &str, u16); 6] = [
+            (b"garbage\r\n\r\n", "bad_request_line", 400),
+            (b"GET /x SPDY/3\r\n\r\n", "bad_version", 400),
+            (b"GET /x HTTP/1.1\r\nnocolon\r\n\r\n", "bad_header", 400),
+            (b"POST /x HTTP/1.1\r\nContent-Length: banana\r\n\r\n", "bad_content_length", 400),
+            (b"POST /x HTTP/1.1\r\nContent-Length: 99999999999\r\n\r\n", "body_too_large", 413),
+            (b"POST /x HTTP/1.1\r\nContent-Length: 5\r\n\r\nab", "body_incomplete", 400),
+        ];
+        for (bytes, name, code) in cases {
+            let err = parse(bytes).unwrap_err();
+            assert_eq!(err.name(), name, "input {:?}", String::from_utf8_lossy(bytes));
+            assert_eq!(err.status(), Some(code));
+        }
+    }
+
+    #[test]
+    fn body_over_cap_is_413_without_buffering() {
+        let err = read_request(
+            &mut BufReader::new(&b"POST /x HTTP/1.1\r\nContent-Length: 1000\r\n\r\n"[..]),
+            100,
+        )
+        .unwrap_err();
+        assert_eq!(err.name(), "body_too_large");
+        assert_eq!(err.status(), Some(413));
+    }
+
+    #[test]
+    fn clean_eof_is_conn_closed_not_a_response() {
+        let err = parse(b"").unwrap_err();
+        assert_eq!(err.name(), "conn_closed");
+        assert_eq!(err.status(), None);
+    }
+
+    #[test]
+    fn header_flood_bounded() {
+        let mut req = b"GET / HTTP/1.1\r\n".to_vec();
+        for i in 0..(MAX_HEADERS + 1) {
+            req.extend_from_slice(format!("h{i}: v\r\n").as_bytes());
+        }
+        req.extend_from_slice(b"\r\n");
+        let err = parse(&req).unwrap_err();
+        assert_eq!(err.name(), "too_many_headers");
+        assert_eq!(err.status(), Some(431));
+    }
+
+    #[test]
+    fn oversized_header_line_bounded() {
+        let mut req = b"GET / HTTP/1.1\r\nbig: ".to_vec();
+        req.extend(vec![b'a'; MAX_HEADER_LINE + 10]);
+        req.extend_from_slice(b"\r\n\r\n");
+        let err = parse(&req).unwrap_err();
+        assert_eq!(err.name(), "header_too_large");
+    }
+
+    #[test]
+    fn job_specs_roundtrip_and_defaults() {
+        let specs =
+            parse_job_specs(br#"{"module":"k_proj","layer":3,"rows":16,"seed":7}"#).unwrap();
+        assert_eq!(specs.len(), 1);
+        let s = &specs[0];
+        assert_eq!((s.module.as_str(), s.layer, s.rows, s.seed), ("k_proj", 3, 16, 7));
+        assert_eq!(s.tenant, 0);
+        assert_eq!(s.bits, crate::config::ModelConfig::default().bits);
+
+        let multi = parse_job_specs(
+            br#"{"jobs":[{"module":"k_proj","layer":0},{"module":"down_proj","layer":1,"tenant":2}]}"#,
+        )
+        .unwrap();
+        assert_eq!(multi.len(), 2);
+        assert_eq!(multi[1].tenant, 2);
+        assert_eq!(multi[0].id, 0);
+        assert_eq!(multi[1].id, 1);
+
+        // serialized spec re-parses to itself
+        let body = multi[1].to_json().to_string_compact();
+        let again = parse_job_specs(body.as_bytes()).unwrap();
+        assert_eq!(again[0], multi[1]);
+    }
+
+    #[test]
+    fn job_spec_named_rejections() {
+        let cases: [(&[u8], &str); 7] = [
+            (b"not json", "body_not_json"),
+            (br#"{"jobs":[]}"#, "no_jobs"),
+            (br#"{"jobs":42}"#, "jobs_not_array"),
+            (br#"{"layer":0}"#, "missing_module"),
+            (br#"{"module":"up_proj","layer":0}"#, "unknown_module"),
+            (br#"{"module":"k_proj"}"#, "missing_layer"),
+            (br#"{"module":"k_proj","layer":0,"rows":0}"#, "bad_rows"),
+        ];
+        for (body, name) in cases {
+            let err = parse_job_specs(body).unwrap_err();
+            assert_eq!(err.name, name, "body {:?}", String::from_utf8_lossy(body));
+        }
+        let mut many = String::from(r#"{"jobs":["#);
+        for i in 0..(MAX_JOBS_PER_REQUEST + 1) {
+            if i > 0 {
+                many.push(',');
+            }
+            many.push_str(r#"{"module":"k_proj","layer":0}"#);
+        }
+        many.push_str("]}");
+        assert_eq!(parse_job_specs(many.as_bytes()).unwrap_err().name, "too_many_jobs");
+    }
+
+    #[test]
+    fn chunked_response_roundtrip() {
+        let mut wire = Vec::new();
+        write_head(
+            &mut wire,
+            200,
+            &[("Transfer-Encoding", "chunked"), ("Content-Type", "application/x-ndjson")],
+        )
+        .unwrap();
+        write_chunk(&mut wire, b"{\"a\":1}\n").unwrap();
+        write_chunk(&mut wire, b"{\"b\":2}\n").unwrap();
+        finish_chunks(&mut wire).unwrap();
+        let resp = read_response(&mut BufReader::new(&wire[..])).unwrap();
+        assert_eq!(resp.status, 200);
+        assert_eq!(resp.body, b"{\"a\":1}\n{\"b\":2}\n");
+    }
+
+    #[test]
+    fn content_length_response_roundtrip() {
+        let mut wire = Vec::new();
+        write_error(&mut wire, 429, "shed", "retry later", &[("Retry-After", "2")]).unwrap();
+        let resp = read_response(&mut BufReader::new(&wire[..])).unwrap();
+        assert_eq!(resp.status, 429);
+        assert_eq!(resp.header("retry-after"), Some("2"));
+        let doc = jsonio::parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
+        assert_eq!(doc.get("error").and_then(Json::as_str), Some("shed"));
+    }
+
+    #[test]
+    fn f64_bits_roundtrip_exact() {
+        for x in [0.0, -0.0, 1.5, f64::INFINITY, f64::MIN_POSITIVE, 0.1 + 0.2] {
+            assert_eq!(f64_from_bits_hex(&f64_bits_hex(x)).unwrap().to_bits(), x.to_bits());
+        }
+        assert!(f64_from_bits_hex(&f64_bits_hex(f64::NAN)).unwrap().is_nan());
+    }
+
+    #[test]
+    fn write_request_parses_back() {
+        let mut wire = Vec::new();
+        write_request(&mut wire, "POST", "/analyze", br#"{"module":"k_proj","layer":0}"#)
+            .unwrap();
+        let req = parse(&wire).unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.target, "/analyze");
+        assert_eq!(parse_job_specs(&req.body).unwrap().len(), 1);
+    }
+}

@@ -602,6 +602,38 @@ pub fn render_summary(s: &Snapshot) -> String {
             s.counter("smoothrot_tenant_rejected_total", &l).unwrap_or(0),
         ));
     }
+    // wire front-end lines, only when the net collector registered
+    // (in-process serving has no connection rows at all)
+    if let Some(conns) = s.counter("smoothrot_net_connections_total", &[]) {
+        out.push_str(&format!(
+            "  net: conns {} (open {}, over-cap {}) | dropped {} partial {} slow {} read-timeout {}\n",
+            conns,
+            s.gauge("smoothrot_net_connections_open", &[]).unwrap_or(0.0) as i64,
+            c("smoothrot_net_conn_rejected_total"),
+            c("smoothrot_net_conn_dropped_total"),
+            c("smoothrot_net_partial_write_total"),
+            c("smoothrot_net_slow_client_total"),
+            c("smoothrot_net_read_timeout_total"),
+        ));
+        // status taxonomy, non-zero rows only, in numeric order
+        let mut statuses: Vec<(String, u64)> = s
+            .counters
+            .iter()
+            .filter(|r| r.name == "smoothrot_net_responses_total" && r.value > 0)
+            .filter_map(|r| {
+                r.labels
+                    .iter()
+                    .find(|(k, _)| k == "status")
+                    .map(|(_, v)| (v.clone(), r.value))
+            })
+            .collect();
+        statuses.sort();
+        if !statuses.is_empty() {
+            let rendered: Vec<String> =
+                statuses.iter().map(|(code, n)| format!("{code}:{n}")).collect();
+            out.push_str(&format!("  net statuses: {}\n", rendered.join(" ")));
+        }
+    }
     out
 }
 
@@ -749,5 +781,33 @@ mod tests {
         assert!(text.contains("rot-cache 9 hit / 1 miss (90%)"), "{text}");
         assert!(text.contains("  runner 0: routed 25 batches 25 steals 0"), "{text}");
         assert!(text.contains("  tenant 2: submitted 100 completed 100 rejected 0"), "{text}");
+        // no net collector registered → no net lines at all
+        assert!(!text.contains("net:"), "{text}");
+    }
+
+    #[test]
+    fn render_summary_adds_net_lines_when_collector_present() {
+        let mut s = Snapshot::new();
+        let mut c = |name: &str, labels: Labels, v: u64| {
+            s.counters.push(CounterRow { name: name.into(), labels, value: v })
+        };
+        c("smoothrot_net_connections_total", vec![], 12);
+        c("smoothrot_net_conn_dropped_total", vec![], 2);
+        c("smoothrot_net_responses_total", vec![("status".into(), "200".into())], 9);
+        c("smoothrot_net_responses_total", vec![("status".into(), "429".into())], 3);
+        // zero rows (present-at-zero taxonomy) must not clutter the line
+        c("smoothrot_net_responses_total", vec![("status".into(), "504".into())], 0);
+        s.gauges.push(GaugeRow {
+            name: "smoothrot_net_connections_open".into(),
+            labels: vec![],
+            value: 1.0,
+        });
+        let text = render_summary(&s);
+        assert!(
+            text.contains("  net: conns 12 (open 1, over-cap 0) | dropped 2"),
+            "{text}"
+        );
+        assert!(text.contains("  net statuses: 200:9 429:3\n"), "{text}");
+        assert!(!text.contains("504"), "{text}");
     }
 }

@@ -1,0 +1,392 @@
+//! Wire-level chaos: the HTTP front-end under deterministic fault
+//! injection ([`smoothrot::faults`] sites `net.*`) and hostile clients.
+//!
+//! The contracts this suite pins, per ISSUE 10:
+//!
+//! * a malformed request gets a **named 4xx** (taxonomy error body),
+//!   never a panic, and the server keeps serving afterwards;
+//! * a connection dropped mid-stream (`net.conn_drop`) loses only its
+//!   own response — its batchmates complete **bit-identically** to a
+//!   fault-free run, and nothing is quarantined;
+//! * under queue pressure the server sheds with **429 + positive
+//!   Retry-After** instead of growing the queue;
+//! * a graceful drain racing a plan hot-swap drops **zero** in-flight
+//!   responses.
+//!
+//! Every test that arms the process-global fault plan holds
+//! [`faults::exclusive`] for its whole body and disarms on drop, so
+//! this suite is safe under cargo's parallel test runner.
+
+use smoothrot::calib::plan::{PlanEntry, Provenance, QuantPlan};
+use smoothrot::calib::registry::PlanRegistry;
+use smoothrot::faults;
+use smoothrot::jsonio::{self, Json};
+use smoothrot::serve::net::{synth_job_builder, CoreServer, NetConfig, NetServer};
+use smoothrot::serve::proto;
+use smoothrot::serve::{ExecMode, NativeBatchExecutor, ServeConfig};
+use smoothrot::transforms::Mode;
+use std::io::{BufReader, BufWriter, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Disarm the global fault plan when dropped — keeps a failed
+/// assertion from leaking an armed plan into the next test.
+struct Disarm;
+
+impl Drop for Disarm {
+    fn drop(&mut self) {
+        faults::disarm();
+    }
+}
+
+const STREAM_SEED: u64 = 2025;
+
+fn tiny_server(cfg: ServeConfig, net: NetConfig) -> NetServer {
+    let (core, rx) =
+        CoreServer::start_with_telemetry(cfg, None, None, |_| Ok(NativeBatchExecutor::new()));
+    NetServer::start(net, core, rx, None, synth_job_builder(STREAM_SEED)).unwrap()
+}
+
+fn post(addr: SocketAddr, target: &str, body: &[u8]) -> proto::HttpResponse {
+    let stream = TcpStream::connect(addr).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    let mut w = BufWriter::new(stream.try_clone().unwrap());
+    proto::write_request(&mut w, "POST", target, body).unwrap();
+    w.flush().unwrap();
+    proto::read_response(&mut BufReader::new(stream)).unwrap()
+}
+
+fn get(addr: SocketAddr, target: &str) -> proto::HttpResponse {
+    let stream = TcpStream::connect(addr).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    let mut w = BufWriter::new(stream.try_clone().unwrap());
+    proto::write_request(&mut w, "GET", target, b"").unwrap();
+    w.flush().unwrap();
+    proto::read_response(&mut BufReader::new(stream)).unwrap()
+}
+
+/// The named error in a taxonomy error body.
+fn error_name(resp: &proto::HttpResponse) -> String {
+    let doc = jsonio::parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
+    doc.get("error").and_then(Json::as_str).unwrap().to_string()
+}
+
+#[test]
+fn malformed_requests_get_named_4xx_and_the_server_keeps_serving() {
+    let server = tiny_server(
+        ServeConfig { workers: 1, ..ServeConfig::default() },
+        NetConfig::default(),
+    );
+    let addr = server.addr();
+
+    // garbage request line → 400 bad_request_line
+    {
+        let stream = TcpStream::connect(addr).unwrap();
+        stream.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+        let mut w = stream.try_clone().unwrap();
+        w.write_all(b"TOTAL GARBAGE\r\n\r\n").unwrap();
+        let resp = proto::read_response(&mut BufReader::new(stream)).unwrap();
+        assert_eq!(resp.status, 400);
+        assert_eq!(error_name(&resp), "bad_request_line");
+    }
+
+    // body that is not JSON → 400 body_not_json
+    let resp = post(addr, "/analyze", b"not json at all");
+    assert_eq!(resp.status, 400);
+    assert_eq!(error_name(&resp), "body_not_json");
+
+    // well-formed JSON, unknown module → 400 unknown_module
+    let resp = post(addr, "/analyze", br#"{"module":"v_proj","layer":0}"#);
+    assert_eq!(resp.status, 400);
+    assert_eq!(error_name(&resp), "unknown_module");
+
+    // declared body larger than the cap → 413 body_too_large
+    {
+        let stream = TcpStream::connect(addr).unwrap();
+        stream.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+        let mut w = stream.try_clone().unwrap();
+        w.write_all(
+            format!(
+                "POST /analyze HTTP/1.1\r\ncontent-length: {}\r\n\r\n",
+                proto::DEFAULT_MAX_BODY + 1
+            )
+            .as_bytes(),
+        )
+        .unwrap();
+        let resp = proto::read_response(&mut BufReader::new(stream)).unwrap();
+        assert_eq!(resp.status, 413);
+        assert_eq!(error_name(&resp), "body_too_large");
+    }
+
+    // after all of that abuse, a clean request still completes
+    assert_eq!(get(addr, "/healthz").status, 200);
+    let ok = post(addr, "/analyze", br#"{"module":"k_proj","layer":0,"rows":4,"seed":7}"#);
+    assert_eq!(ok.status, 200);
+
+    let stats = server.stats();
+    assert_eq!(stats.status(400), 2);
+    assert_eq!(stats.status(413), 1);
+    // healthz + the analyze envelope + the analyze result line
+    assert_eq!(stats.status(200), 3);
+    server.drain();
+    let m = server.wait().unwrap();
+    assert_eq!(m.completed, 1);
+    assert_eq!(m.errors, 0, "malformed requests never reach a worker");
+}
+
+/// Post one spec and collect the per-mode `errors_bits` of its single
+/// result line, or `None` if the connection died mid-stream.
+fn analyze_bits(addr: SocketAddr, spec_json: &str) -> Option<Vec<String>> {
+    let stream = TcpStream::connect(addr).ok()?;
+    stream.set_read_timeout(Some(Duration::from_secs(30))).ok()?;
+    let mut w = BufWriter::new(stream.try_clone().unwrap());
+    proto::write_request(&mut w, "POST", "/analyze", spec_json.as_bytes()).ok()?;
+    w.flush().ok()?;
+    let resp = proto::read_response(&mut BufReader::new(stream)).ok()?;
+    if resp.status != 200 {
+        return None;
+    }
+    let text = String::from_utf8(resp.body).ok()?;
+    let line = jsonio::parse(text.lines().next()?).ok()?;
+    if line.get("status").and_then(Json::as_usize) != Some(200) {
+        return None;
+    }
+    Some(
+        line.get("errors_bits")?
+            .as_arr()?
+            .iter()
+            .filter_map(|j| j.as_str().map(str::to_string))
+            .collect(),
+    )
+}
+
+/// One serving run: `n` concurrent clients against a paused core (so
+/// their jobs batch together), then drain.  Returns each client's
+/// result and the end-of-run (metrics, wire stats).
+fn batched_run(
+    n: usize,
+    specs: &[String],
+) -> (Vec<Option<Vec<String>>>, smoothrot::serve::ServeMetrics, Arc<smoothrot::serve::net::NetStats>)
+{
+    let server = tiny_server(
+        ServeConfig { workers: 1, max_batch: 8, queue_depth: 64, paused: true, ..Default::default() },
+        NetConfig::default(),
+    );
+    let addr = server.addr();
+    let handles: Vec<_> = (0..n)
+        .map(|i| {
+            let spec = specs[i].clone();
+            std::thread::spawn(move || analyze_bits(addr, &spec))
+        })
+        .collect();
+    // all n jobs are in the paused queue once every client has either
+    // submitted (blocked on its response) or been torn down — give the
+    // submissions a moment, then drain to flush the batch
+    std::thread::sleep(Duration::from_millis(500));
+    let stats = server.stats();
+    server.drain();
+    let results: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    let m = server.wait().unwrap();
+    (results, m, stats)
+}
+
+#[test]
+fn conn_drop_loses_only_its_own_response_and_batchmates_stay_bit_identical() {
+    let _x = faults::exclusive();
+    let _d = Disarm;
+    let n = 6;
+    let specs: Vec<String> = (0..n)
+        .map(|i| {
+            format!(
+                r#"{{"module":"k_proj","layer":{},"rows":4,"seed":{}}}"#,
+                i % 4,
+                100 + i
+            )
+        })
+        .collect();
+
+    // fault-free baseline: every client completes
+    faults::disarm();
+    let (base, base_m, _) = batched_run(n, &specs);
+    assert!(base.iter().all(Option::is_some), "baseline must be clean");
+    assert_eq!(base_m.completed as usize, n);
+
+    // same stream with a deterministic subset of connections torn down
+    // after submit, before any response byte
+    faults::arm("net.conn_drop=mod:3:1").unwrap();
+    let (chaos, m, stats) = batched_run(n, &specs);
+    faults::disarm();
+
+    let dropped = chaos.iter().filter(|r| r.is_none()).count();
+    assert_eq!(dropped, 2, "keys 1 and 4 of 0..6 are torn down");
+    assert_eq!(stats.conn_dropped.load(Ordering::Relaxed), 2);
+    // the jobs behind the dropped connections still execute — the core
+    // owes every admitted job a terminal response, wire fate aside
+    assert_eq!(m.completed as usize, n, "dropped conns do not lose jobs");
+    assert_eq!(m.errors, 0, "a wire fault must not fail any job");
+    assert_eq!(m.quarantined, 0, "a wire fault must not quarantine batchmates");
+    for (i, (got, want)) in chaos.iter().zip(&base).enumerate() {
+        if let Some(bits) = got {
+            assert_eq!(
+                bits,
+                want.as_ref().unwrap(),
+                "surviving client {i} diverged from the fault-free run"
+            );
+        }
+    }
+}
+
+#[test]
+fn overload_sheds_with_429_and_positive_retry_after() {
+    let _x = faults::exclusive();
+    let _d = Disarm;
+    faults::disarm();
+    let server = tiny_server(
+        ServeConfig {
+            workers: 1,
+            max_batch: 4,
+            queue_depth: 64,
+            shed_queued: 2,
+            paused: true,
+            ..Default::default()
+        },
+        NetConfig::default(),
+    );
+    let addr = server.addr();
+
+    // fill the admission bound with clients that block on their results
+    let occupants: Vec<_> = (0..2)
+        .map(|i| {
+            let spec =
+                format!(r#"{{"module":"k_proj","layer":{i},"rows":4,"seed":{}}}"#, 40 + i);
+            std::thread::spawn(move || post(addr, "/analyze", spec.as_bytes()))
+        })
+        .collect();
+    std::thread::sleep(Duration::from_millis(400));
+
+    // over the bound: shed, not queue growth
+    let resp = post(addr, "/analyze", br#"{"module":"k_proj","layer":3,"rows":4,"seed":50}"#);
+    assert_eq!(resp.status, 429);
+    assert_eq!(error_name(&resp), "shed");
+    let retry_secs: u64 = resp.header("retry-after").unwrap().parse().unwrap();
+    assert!(retry_secs >= 1, "whole-second Retry-After rounds up");
+    let retry_us: u64 = resp.header("x-retry-after-micros").unwrap().parse().unwrap();
+    assert!(retry_us >= 100, "live hint from the shed controller");
+
+    // drain releases the occupants with full 200 results
+    server.drain();
+    for h in occupants {
+        assert_eq!(h.join().unwrap().status, 200);
+    }
+    let stats = server.stats();
+    assert_eq!(stats.status(429), 1);
+    let m = server.wait().unwrap();
+    assert_eq!(m.shed, 1);
+    assert_eq!(m.completed, 2);
+}
+
+fn synth_plan(mode: Mode) -> QuantPlan {
+    QuantPlan {
+        provenance: Provenance::default(),
+        entries: (0..4)
+            .map(|layer| PlanEntry {
+                module: "k_proj".into(),
+                layer,
+                bits: 4,
+                c_in: 256,
+                mode,
+                alpha: 0.5,
+                predicted_error: 1.0,
+                difficulty_before: 2.0,
+                difficulty_after: 1.0,
+                smooth: None,
+            })
+            .collect(),
+    }
+}
+
+#[test]
+fn drain_racing_plan_hot_swap_drops_zero_in_flight_responses() {
+    let _x = faults::exclusive();
+    let _d = Disarm;
+    faults::disarm();
+    let dir = std::env::temp_dir().join("smoothrot_chaos_net_swap_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("plan.json");
+    synth_plan(Mode::Rotate).save(&path).unwrap();
+    let reg = Arc::new(PlanRegistry::load(&path).unwrap());
+    let gen0 = reg.generation();
+
+    let (core, rx) = {
+        let reg = Arc::clone(&reg);
+        CoreServer::start_with_telemetry(
+            ServeConfig { workers: 1, max_batch: 8, queue_depth: 64, paused: true, ..Default::default() },
+            None,
+            None,
+            move |_| Ok(NativeBatchExecutor::with_plan_exec(Arc::clone(&reg), 1, ExecMode::F32)),
+        )
+    };
+    let server =
+        NetServer::start(NetConfig::default(), core, rx, None, synth_job_builder(STREAM_SEED))
+            .unwrap();
+    let addr = server.addr();
+
+    // six in-flight clients, queued behind the paused scheduler
+    let n = 6;
+    let clients: Vec<_> = (0..n)
+        .map(|i| {
+            let spec =
+                format!(r#"{{"module":"k_proj","layer":{},"rows":4,"seed":{}}}"#, i % 4, 200 + i);
+            std::thread::spawn(move || post(addr, "/analyze", spec.as_bytes()))
+        })
+        .collect();
+    std::thread::sleep(Duration::from_millis(500));
+
+    // hot-swap the plan continuously while the drain runs
+    let stop = Arc::new(AtomicBool::new(false));
+    let swapper = {
+        let reg = Arc::clone(&reg);
+        let stop = Arc::clone(&stop);
+        let path = path.clone();
+        std::thread::spawn(move || {
+            let mut flip = 0u32;
+            while !stop.load(Ordering::SeqCst) {
+                let mode = if flip % 2 == 0 { Mode::None } else { Mode::Rotate };
+                synth_plan(mode).save(&path).unwrap();
+                let _ = reg.reload_if_changed();
+                flip += 1;
+                std::thread::sleep(Duration::from_millis(5));
+            }
+        })
+    };
+
+    server.drain();
+    // zero dropped in-flight responses: every client gets a full 200
+    // with a complete result line, whatever plan generation served it
+    for (i, h) in clients.into_iter().enumerate() {
+        let resp = h.join().unwrap();
+        assert_eq!(resp.status, 200, "in-flight client {i} lost its response");
+        let text = String::from_utf8(resp.body).unwrap();
+        let line = jsonio::parse(text.lines().next().unwrap()).unwrap();
+        assert_eq!(line.get("status").and_then(Json::as_usize), Some(200));
+        assert_eq!(
+            line.get("errors_bits").and_then(Json::as_arr).map(<[Json]>::len),
+            Some(4),
+            "client {i} got a truncated result line"
+        );
+    }
+    let stats = server.stats();
+    let m = server.wait().unwrap();
+    stop.store(true, Ordering::SeqCst);
+    swapper.join().unwrap();
+
+    assert_eq!(m.completed as usize, n);
+    assert_eq!(m.errors, 0);
+    assert_eq!(m.drains, 1);
+    assert_eq!(stats.conn_dropped.load(Ordering::Relaxed), 0);
+    assert_eq!(stats.partial_write.load(Ordering::Relaxed), 0);
+    assert!(reg.generation() > gen0, "at least one hot-swap landed mid-drain");
+    std::fs::remove_dir_all(&dir).ok();
+}
